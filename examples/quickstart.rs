@@ -1,0 +1,44 @@
+//! Quickstart: the three ways to use the library.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ips4o::{Config, Sorter};
+
+fn main() {
+    // 1. One-shot sequential sort (IS⁴o) with the natural order.
+    let mut v: Vec<u64> = (0..1_000_000u64).rev().collect();
+    ips4o::sort(&mut v);
+    assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    println!("sequential IS4o: sorted {} u64s", v.len());
+
+    // 2. One-shot parallel sort (IPS⁴o) with a custom comparator.
+    let mut f: Vec<f64> =
+        ips4o::datagen::gen_f64(ips4o::datagen::Distribution::Uniform, 2_000_000, 1);
+    ips4o::sort_par_by(&mut f, |a, b| a < b);
+    assert!(f.windows(2).all(|w| w[0] <= w[1]));
+    println!("parallel IPS4o: sorted {} f64s", f.len());
+
+    // 3. A reusable Sorter with explicit configuration — the paper's
+    //    tuning parameters are all exposed (§4.7).
+    let cfg = Config::default()
+        .with_threads(4)
+        .with_max_buckets(256)
+        .with_block_bytes(2048)
+        .with_base_case(16);
+    let sorter = Sorter::new(cfg);
+    let mut pairs = ips4o::datagen::gen_pair(ips4o::datagen::Distribution::TwoDup, 500_000, 2);
+    sorter.sort_by(&mut pairs, &ips4o::util::Pair::less);
+    assert!(pairs.windows(2).all(|w| w[0].key <= w[1].key));
+    println!("reusable Sorter: sorted {} Pair records", pairs.len());
+
+    // Strictly in-place variant (§4.6): constant extra space.
+    let mut w: Vec<u64> =
+        ips4o::datagen::gen_u64(ips4o::datagen::Distribution::RootDup, 300_000, 3);
+    ips4o::strictly_inplace::sort_strictly_inplace(&mut w, &Config::default(), &|a, b| a < b);
+    assert!(w.windows(2).all(|x| x[0] <= x[1]));
+    println!("strictly in-place IS4o: sorted {} u64s", w.len());
+
+    println!("quickstart OK");
+}

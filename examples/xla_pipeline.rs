@@ -1,0 +1,101 @@
+//! Three-layer pipeline demo: the Rust coordinator drives the
+//! AOT-compiled JAX/Pallas classification artifact through PJRT on a
+//! real distribution step — proving that L1 (Pallas kernel), L2 (JAX
+//! graph), the AOT path (HLO text), and the L3 runtime all compose.
+//!
+//! The pipeline mirrors s³-sort's oracle-based distribution:
+//!   sample → splitters → [XLA: classify chunks + histograms] →
+//!   prefix sums → scatter → verify bucket order,
+//! and cross-checks every bucket id against the native Rust classifier.
+//!
+//! Requires `make artifacts` (build-time Python; none at runtime).
+//!
+//! ```bash
+//! cargo run --release --example xla_pipeline
+//! ```
+
+use std::time::Instant;
+
+use ips4o::runtime::{classify_reference, default_artifact, Engine, XlaClassifier, CHUNK};
+use ips4o::util::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let path = default_artifact("classify.hlo.txt");
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("artifact {path} missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // Workload: one IS⁴o-style distribution step over 1M floats.
+    let n = 256 * CHUNK;
+    let mut rng = Xoshiro256::new(3);
+    let data: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 1e6).collect();
+
+    // Sampling phase (L3): oversample and pick 255 splitters.
+    let mut sample: Vec<f32> = (0..255 * 8).map(|i| data[i * 577 % n]).collect();
+    sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let splitters: Vec<f32> = (1..256).map(|i| sample[i * 8 - 1]).collect();
+
+    let t0 = Instant::now();
+    let clf = XlaClassifier::new(&engine, &path, &splitters)?;
+    println!("compiled artifact in {:.3}s", t0.elapsed().as_secs_f64());
+
+    // Distribution phase: classify every chunk via XLA, accumulate the
+    // global histogram from the kernel's per-chunk histograms.
+    let t0 = Instant::now();
+    let mut hist = vec![0u64; 256];
+    let mut oracle: Vec<u32> = Vec::with_capacity(n);
+    for chunk in data.chunks(CHUNK) {
+        let (ids, h) = clf.classify_chunk(chunk)?;
+        for (b, c) in h.iter().enumerate() {
+            hist[b] += *c as u64;
+        }
+        oracle.extend_from_slice(&ids);
+    }
+    let t_xla = t0.elapsed();
+    println!(
+        "XLA classification: {:.3}s ({:.1} M elem/s)",
+        t_xla.as_secs_f64(),
+        n as f64 / t_xla.as_secs_f64() / 1e6
+    );
+
+    // Cross-check against the native reference classifier.
+    let t0 = Instant::now();
+    let native = classify_reference(&data, clf.padded_splitters());
+    let t_native = t0.elapsed();
+    assert_eq!(oracle, native, "XLA and native classification disagree");
+    println!(
+        "native classification: {:.3}s ({:.1} M elem/s) — results identical",
+        t_native.as_secs_f64(),
+        n as f64 / t_native.as_secs_f64() / 1e6
+    );
+
+    // Scatter using the oracle (s³-sort-style distribution) and verify
+    // bucket order end to end.
+    let mut offsets = vec![0usize; 257];
+    for b in 0..256 {
+        offsets[b + 1] = offsets[b] + hist[b] as usize;
+    }
+    assert_eq!(offsets[256], n, "histogram does not cover the input");
+    let mut cursor = offsets.clone();
+    let mut out = vec![0f32; n];
+    for (i, &b) in oracle.iter().enumerate() {
+        out[cursor[b as usize]] = data[i];
+        cursor[b as usize] += 1;
+    }
+    for b in 0..255 {
+        let (s, e, e2) = (offsets[b], offsets[b + 1], offsets[b + 2]);
+        if s == e || e == e2 {
+            continue;
+        }
+        let max_here = out[s..e].iter().cloned().fold(f32::MIN, f32::max);
+        let min_next = out[e..e2].iter().cloned().fold(f32::MAX, f32::min);
+        assert!(max_here <= min_next, "bucket {b} out of order");
+    }
+    println!("distribution verified: 256 buckets in order, {n} elements placed");
+    println!("xla_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""Layer 1 — Pallas kernel: branchless search-tree classification.
+
+The compute hot spot of (I)PS⁴o/s³-sort is classifying a stream of
+elements into ``k`` buckets with the implicit splitter tree (paper §3):
+
+    i = 1
+    repeat log2(k) times:  i = 2*i + (e >= tree[i])
+    bucket = i - k
+
+The descent is a fixed-depth loop of predicated gathers — no
+data-dependent branches — which is exactly the structure a TPU wants:
+``log2(k)`` rounds of vectorized ``tree[idx]`` gathers + compares over a
+VMEM-resident splitter tree (k−1 ≤ 255 f32 ≈ 1 KiB), tiled over element
+chunks with ``BlockSpec`` so each grid step streams one chunk HBM→VMEM.
+See DESIGN.md §Hardware-Adaptation.
+
+The kernel runs under ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md), and correctness is what the AOT artifact
+must certify. TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed shapes for the AOT artifact (the rust runtime pads to these —
+# keep in sync with rust/src/runtime.rs).
+CHUNK = 4096
+FANOUT = 256  # leaf buckets; FANOUT−1 splitters
+TILE = 512  # elements per grid step
+
+
+def build_tree(splitters: jnp.ndarray) -> jnp.ndarray:
+    """Lay out sorted splitters (length FANOUT−1) as the implicit BST.
+
+    ``tree[0]`` is unused (the descent starts at index 1); node ``i``'s
+    children are ``2i`` and ``2i+1``. Equivalent to the recursive fill in
+    rust/src/classifier.rs, expressed as a breadth-first middle-picking.
+    """
+    k = splitters.shape[0] + 1  # fanout, must be a power of two
+    assert k & (k - 1) == 0, "fanout must be a power of two"
+    tree = jnp.zeros((k,), splitters.dtype)
+
+    # Node i at depth d covers a contiguous splitter range; its key is the
+    # range's middle. Iterative BFS over the implicit heap layout.
+    def fill(tree, node, lo, hi):
+        if node >= k:
+            return tree
+        mid = (lo + hi) // 2
+        tree = tree.at[node].set(splitters[mid])
+        tree = fill(tree, 2 * node, lo, mid)
+        tree = fill(tree, 2 * node + 1, mid + 1, hi)
+        return tree
+
+    return fill(tree, 1, 0, k - 1)
+
+
+def _classify_kernel(x_ref, tree_ref, o_ref, *, log_k: int, fanout: int):
+    """Pallas kernel body: one TILE of elements, full tree in VMEM."""
+    x = x_ref[...]  # (TILE,) f32 — streamed HBM→VMEM by BlockSpec
+    tree = tree_ref[...]  # (FANOUT,) f32 — tiny, VMEM-resident
+    idx = jnp.ones(x.shape, dtype=jnp.int32)
+    for _ in range(log_k):
+        node = tree[idx]  # vectorized gather
+        idx = 2 * idx + (x >= node).astype(jnp.int32)  # predicated step
+    o_ref[...] = idx - fanout
+
+
+def classify_pallas(x: jnp.ndarray, splitters: jnp.ndarray) -> jnp.ndarray:
+    """Classify ``x`` (CHUNK,) into FANOUT buckets via the Pallas kernel."""
+    assert x.shape == (CHUNK,), x.shape
+    assert splitters.shape == (FANOUT - 1,), splitters.shape
+    tree = build_tree(splitters)
+    log_k = FANOUT.bit_length() - 1
+    kernel = functools.partial(_classify_kernel, log_k=log_k, fanout=FANOUT)
+    grid = (CHUNK // TILE,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),  # stream x tile-by-tile
+            pl.BlockSpec((FANOUT,), lambda i: (0,)),  # tree resident
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((CHUNK,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, tree)
+
+
+def vmem_report() -> dict:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf).
+
+    TPU VMEM is ~16 MiB/core; the kernel uses a tile of elements, the
+    splitter tree, and the output tile — comfortably resident, so the
+    roofline is HBM streaming bandwidth (the kernel is memory-bound:
+    log2(k)=8 compares per 4-byte element).
+    """
+    bytes_in = TILE * 4
+    bytes_tree = FANOUT * 4
+    bytes_out = TILE * 4
+    return {
+        "tile_elems": TILE,
+        "vmem_bytes": bytes_in + bytes_tree + bytes_out,
+        "hbm_bytes_per_elem": 4 + 4,  # stream in + ids out
+        "compares_per_elem": FANOUT.bit_length() - 1,
+    }

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the classification kernel (correctness reference).
+
+``classify_ref`` is the semantic ground truth: bucket of element ``e`` is
+the number of splitters ≤ ``e`` (i.e. ``searchsorted`` with side='right'),
+which matches the paper's bucket definition s_{i-1} ≤ e < s_i. The Pallas
+kernel and the L2 model are both asserted against this in pytest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def classify_ref(x: jnp.ndarray, splitters: jnp.ndarray) -> jnp.ndarray:
+    """Bucket ids in [0, len(splitters)] via searchsorted (side='right')."""
+    return jnp.searchsorted(splitters, x, side="right").astype(jnp.int32)
+
+
+def histogram_ref(bucket_ids: jnp.ndarray, num_buckets: int) -> jnp.ndarray:
+    """Per-bucket counts."""
+    return jnp.bincount(bucket_ids, length=num_buckets).astype(jnp.int32)
+
+
+def distribution_step_ref(x: jnp.ndarray, splitters: jnp.ndarray, num_buckets: int):
+    """Reference for the full L2 graph: (bucket ids, histogram)."""
+    ids = classify_ref(x, splitters)
+    return ids, histogram_ref(ids, num_buckets)

@@ -1,0 +1,58 @@
+"""Layer 2 — the JAX "distribution step" graph.
+
+The analogue of a model forward pass for a sorting-systems paper: the
+per-chunk computation the coordinator offloads. It wraps the L1 Pallas
+classification kernel and adds the histogram (per-bucket counts) the
+coordinator needs for its prefix-sum/delimiter computation (paper §4.2),
+fused into one program so XLA schedules them together.
+
+Lowered once by ``aot.py``; never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.classify import CHUNK, FANOUT, classify_pallas
+
+
+def distribution_step(x: jnp.ndarray, splitters: jnp.ndarray):
+    """Classify one chunk and count bucket occupancy.
+
+    Args:
+        x: (CHUNK,) f32 elements.
+        splitters: (FANOUT−1,) f32 sorted splitters (padded by repetition).
+
+    Returns:
+        (bucket_ids i32[CHUNK], histogram i32[FANOUT]) — exactly the
+        oracle + counts a distribution pass needs.
+    """
+    ids = classify_pallas(x, splitters)
+    hist = jnp.bincount(ids, length=FANOUT).astype(jnp.int32)
+    return ids, hist
+
+
+def sample_sort_splitters(sample: jnp.ndarray):
+    """Splitter selection on-device: sort an oversampled array and pick
+    FANOUT−1 equidistant entries (paper §3). Second AOT artifact so the
+    coordinator can offload the whole sampling phase as well."""
+    s = jnp.sort(sample)
+    n = s.shape[0]
+    idx = ((jnp.arange(1, FANOUT) * n) // FANOUT).astype(jnp.int32)
+    return (s[idx],)
+
+
+def example_args():
+    """Example ShapeDtypeStructs for AOT lowering of distribution_step."""
+    return (
+        jax.ShapeDtypeStruct((CHUNK,), jnp.float32),
+        jax.ShapeDtypeStruct((FANOUT - 1,), jnp.float32),
+    )
+
+
+SAMPLE_SIZE = 4096
+
+
+def sample_example_args():
+    return (jax.ShapeDtypeStruct((SAMPLE_SIZE,), jnp.float32),)

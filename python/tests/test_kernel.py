@@ -1,0 +1,135 @@
+"""Pytest: Pallas classification kernel vs the pure-jnp oracle — the CORE
+correctness signal of the L1 layer, plus hypothesis sweeps over shapes,
+dtypes, and degenerate splitter patterns."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.classify import (
+    CHUNK,
+    FANOUT,
+    TILE,
+    build_tree,
+    classify_pallas,
+    vmem_report,
+)
+from compile.kernels.ref import classify_ref, distribution_step_ref
+
+
+def pad_splitters(spl: np.ndarray) -> np.ndarray:
+    """Sort + pad a splitter set to FANOUT−1 by repeating the maximum."""
+    s = np.sort(spl.astype(np.float32))
+    if len(s) == 0:
+        s = np.array([0.0], dtype=np.float32)
+    out = np.full((FANOUT - 1,), s[-1], dtype=np.float32)
+    out[: len(s)] = s
+    return out
+
+
+def make_chunk(vals) -> np.ndarray:
+    x = np.zeros((CHUNK,), dtype=np.float32)
+    v = np.asarray(vals, dtype=np.float32)
+    x[: len(v)] = v
+    x[len(v) :] = np.float32(np.finfo(np.float32).max)
+    return x
+
+
+class TestBuildTree:
+    def test_root_is_middle_splitter(self):
+        spl = jnp.arange(1, FANOUT, dtype=jnp.float32)
+        tree = build_tree(spl)
+        assert float(tree[1]) == float(spl[(FANOUT - 1) // 2])
+
+    def test_tree_is_search_tree(self):
+        # In-order traversal of the implicit tree must be sorted.
+        spl = np.sort(np.random.RandomState(0).rand(FANOUT - 1)).astype(np.float32)
+        tree = np.array(build_tree(jnp.array(spl)))
+
+        order = []
+
+        def inorder(i):
+            if i >= FANOUT:
+                return
+            inorder(2 * i)
+            order.append(tree[i])
+            inorder(2 * i + 1)
+
+        inorder(1)
+        assert np.allclose(order, spl)
+
+
+class TestClassifyKernel:
+    def test_matches_ref_uniform(self):
+        rng = np.random.RandomState(1)
+        x = rng.rand(CHUNK).astype(np.float32)
+        spl = pad_splitters(np.linspace(0.1, 0.9, FANOUT - 1))
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))
+        want = np.array(classify_ref(jnp.array(x), jnp.array(spl)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_matches_ref_random_splitters(self):
+        rng = np.random.RandomState(2)
+        for trial in range(5):
+            x = (rng.rand(CHUNK) * 100).astype(np.float32)
+            spl = pad_splitters(rng.rand(FANOUT - 1) * 100)
+            got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))
+            want = np.array(classify_ref(jnp.array(x), jnp.array(spl)))
+            np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+
+    def test_boundary_elements_on_splitters(self):
+        # Elements exactly equal to splitters must go right (s_{i-1} ≤ e).
+        spl = pad_splitters(np.array([10.0, 20.0, 30.0]))
+        x = make_chunk([5.0, 10.0, 15.0, 20.0, 25.0, 30.0, 35.0])
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))[:7]
+        want = np.array(classify_ref(jnp.array(x[:7]), jnp.array(spl)))
+        np.testing.assert_array_equal(got, want)
+        assert got[1] >= 1  # 10.0 goes to the bucket right of splitter 10
+
+    def test_all_equal_input(self):
+        spl = pad_splitters(np.array([1.0]))
+        x = make_chunk(np.ones(CHUNK))
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))
+        want = np.array(classify_ref(jnp.array(x), jnp.array(spl)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_duplicate_splitters_padding(self):
+        # Padded (repeated) splitters — the degenerate-sample case.
+        spl = pad_splitters(np.array([5.0, 5.0, 5.0, 9.0]))
+        x = make_chunk([1.0, 5.0, 7.0, 9.0, 11.0])
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))[:5]
+        want = np.array(classify_ref(jnp.array(x[:5]), jnp.array(spl)))
+        np.testing.assert_array_equal(got, want)
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        data=st.lists(
+            st.floats(-1e6, 1e6, allow_nan=False, width=32), min_size=1, max_size=64
+        ),
+        spl=st.lists(
+            st.floats(-1e6, 1e6, allow_nan=False, width=32), min_size=1, max_size=32
+        ),
+    )
+    def test_hypothesis_matches_ref(self, data, spl):
+        x = make_chunk(np.array(data, dtype=np.float32))
+        s = pad_splitters(np.array(spl, dtype=np.float32))
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(s)))[: len(data)]
+        want = np.array(classify_ref(jnp.array(x[: len(data)]), jnp.array(s)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_bucket_monotone_in_value(self):
+        spl = pad_splitters(np.linspace(0, 1, FANOUT - 1))
+        x = make_chunk(np.linspace(-0.5, 1.5, CHUNK))
+        got = np.array(classify_pallas(jnp.array(x), jnp.array(spl)))
+        assert np.all(np.diff(got) >= 0)
+
+
+class TestVmemReport:
+    def test_fits_vmem(self):
+        r = vmem_report()
+        assert r["vmem_bytes"] < 16 << 20  # 16 MiB VMEM
+        assert r["tile_elems"] == TILE
+        assert r["compares_per_elem"] == 8  # log2(256)

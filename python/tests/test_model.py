@@ -1,0 +1,51 @@
+"""Pytest: the L2 distribution-step graph (kernel + histogram) and the
+splitter-selection graph, against pure-jnp references."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.classify import CHUNK, FANOUT
+from compile.kernels.ref import distribution_step_ref
+from compile.model import (
+    SAMPLE_SIZE,
+    distribution_step,
+    example_args,
+    sample_example_args,
+    sample_sort_splitters,
+)
+
+
+def test_distribution_step_matches_ref():
+    rng = np.random.RandomState(3)
+    x = rng.rand(CHUNK).astype(np.float32)
+    spl = np.sort(rng.rand(FANOUT - 1)).astype(np.float32)
+    ids, hist = distribution_step(jnp.array(x), jnp.array(spl))
+    ref_ids, ref_hist = distribution_step_ref(jnp.array(x), jnp.array(spl), FANOUT)
+    np.testing.assert_array_equal(np.array(ids), np.array(ref_ids))
+    np.testing.assert_array_equal(np.array(hist), np.array(ref_hist))
+
+
+def test_histogram_sums_to_chunk():
+    rng = np.random.RandomState(4)
+    x = rng.rand(CHUNK).astype(np.float32)
+    spl = np.sort(rng.rand(FANOUT - 1)).astype(np.float32)
+    _, hist = distribution_step(jnp.array(x), jnp.array(spl))
+    assert int(np.array(hist).sum()) == CHUNK
+
+
+def test_sample_splitters_sorted_and_subset():
+    rng = np.random.RandomState(5)
+    sample = rng.rand(SAMPLE_SIZE).astype(np.float32)
+    (spl,) = sample_sort_splitters(jnp.array(sample))
+    spl = np.array(spl)
+    assert spl.shape == (FANOUT - 1,)
+    assert np.all(np.diff(spl) >= 0)
+    assert set(spl.tolist()) <= set(sample.astype(np.float32).tolist())
+
+
+def test_example_args_shapes():
+    a, b = example_args()
+    assert a.shape == (CHUNK,)
+    assert b.shape == (FANOUT - 1,)
+    (c,) = sample_example_args()
+    assert c.shape == (SAMPLE_SIZE,)

@@ -1,0 +1,53 @@
+//! Appendix B: I/O-volume comparison of IS⁴o vs s³-sort per distribution
+//! level — the paper's analytic 48n vs 86n bytes (k = 256, 8-byte
+//! elements) — measured on the exact-LRU PEM cache simulator, including
+//! the non-temporal-store variant the paper mentions as the non-portable
+//! mitigation.
+
+use ips4o::bench_harness::{print_machine_info, Table};
+use ips4o::pem::{simulate_is4o_level, simulate_s3sort_level, CacheSim};
+use ips4o::util::Xoshiro256;
+
+fn main() {
+    print_machine_info();
+    println!("# Appendix B — I/O volume per element (PEM simulator, 8-byte elements)\n");
+    println!("paper analytic: IS4o = 48n bytes, s3-sort = 86n bytes (k=256) → ratio 1.79\n");
+
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let sizes: Vec<u64> = if full {
+        vec![1 << 19, 1 << 20, 1 << 21]
+    } else {
+        vec![1 << 18, 1 << 19, 1 << 20]
+    };
+    let ks = [64usize, 256];
+
+    let mut table = Table::new(&[
+        "n", "k", "IS4o B/elem", "s3 B/elem", "s3-NT B/elem", "s3/IS4o",
+    ]);
+    for &k in &ks {
+        for &n in &sizes {
+            let mut rng = Xoshiro256::new(1);
+            let buckets: Vec<usize> =
+                (0..n).map(|_| rng.next_below(k as u64) as usize).collect();
+            let b_of = |i: u64| buckets[i as usize];
+
+            let mut c = CacheSim::new(1 << 20, 64);
+            let is4o = simulate_is4o_level(n, 8, k, 256, &mut c, b_of);
+            let mut c = CacheSim::new(1 << 20, 64);
+            let s3 = simulate_s3sort_level(n, 8, k, &mut c, b_of, false);
+            let mut c = CacheSim::new(1 << 20, 64);
+            let s3nt = simulate_s3sort_level(n, 8, k, &mut c, b_of, true);
+
+            table.row(vec![
+                format!("2^{}", (n as f64).log2() as u32),
+                k.to_string(),
+                format!("{:.1}", is4o.bytes_per_elem()),
+                format!("{:.1}", s3.bytes_per_elem()),
+                format!("{:.1}", s3nt.bytes_per_elem()),
+                format!("{:.2}", s3.bytes_per_elem() / is4o.bytes_per_elem()),
+            ]);
+        }
+    }
+    table.print();
+    println!("\npaper shape: IS4o ≈ half of s3-sort's I/O volume; non-temporal stores recover much of s3-sort's overhead (the 'non-portable trick')");
+}

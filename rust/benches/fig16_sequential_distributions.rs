@@ -1,0 +1,53 @@
+//! Figures 16–19: sequential algorithms across all nine input
+//! distributions (the paper shows one panel per machine/distribution;
+//! we collapse the machine axis — DESIGN.md §5 — and show one table of
+//! ns/(n log n) per (algorithm, distribution) plus the ratio of each
+//! competitor to IS⁴o).
+
+use ips4o::baselines::Algo;
+use ips4o::bench_harness::{bench, print_machine_info, Table};
+use ips4o::datagen::{gen_f64, Distribution};
+use ips4o::Config;
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let n = if full { 1 << 22 } else { 1 << 20 };
+    println!(
+        "# Fig. 16–19 — sequential algorithms × distributions, n=2^{}, ns/(n log n)\n",
+        (n as f64).log2() as u32
+    );
+
+    let algos = Algo::SEQUENTIAL;
+    let mut headers = vec!["distribution".to_string()];
+    headers.extend(algos.iter().map(|a| a.name().to_string()));
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let cfg = Config::default();
+    let lt = |a: &f64, b: &f64| a < b;
+    for dist in Distribution::ALL {
+        let mut row = vec![dist.name().to_string()];
+        let mut is4o_time = 0.0f64;
+        for &algo in &algos {
+            let m = bench(
+                n,
+                3,
+                || gen_f64(dist, n, 42),
+                |mut v| {
+                    ips4o::bench_harness::run_algo(algo, &mut v, &cfg, &lt);
+                    v
+                },
+            );
+            let t = m.per_nlogn_ns();
+            if algo == Algo::Is4o {
+                is4o_time = t;
+                row.push(format!("{:.3}", t));
+            } else {
+                row.push(format!("{:.3} ({:.2}x)", t, t / is4o_time));
+            }
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("\npaper shape: IS4o wins everywhere except (Almost)Sorted/Ones; gains grow with duplicate density");
+}

@@ -1,0 +1,50 @@
+//! Figure 6: running times of sequential algorithms on Uniform input,
+//! reported as ns / (n·log₂ n) per element over an n-sweep — the paper's
+//! y-axis. (Paper machine: Intel2S; here: the container host, see
+//! DESIGN.md §5.)
+//!
+//! Set `IPS4O_BENCH_FULL=1` for the larger sweep.
+
+use ips4o::baselines::Algo;
+use ips4o::bench_harness::{bench, print_machine_info, reps_for, Table};
+use ips4o::datagen::{gen_f64, Distribution};
+use ips4o::Config;
+
+fn main() {
+    print_machine_info();
+    println!("# Fig. 6 — sequential algorithms, Uniform f64, ns/(n log n)\n");
+
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let sizes: Vec<usize> = if full {
+        (14..=24).step_by(2).map(|e| 1usize << e).collect()
+    } else {
+        vec![1 << 16, 1 << 18, 1 << 20, 1 << 22]
+    };
+
+    let algos = Algo::SEQUENTIAL; // IS4o, BlockQ, s3-sort, DualPivot, std-sort
+    let mut headers = vec!["n".to_string()];
+    headers.extend(algos.iter().map(|a| a.name().to_string()));
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    let cfg = Config::default();
+    let lt = |a: &f64, b: &f64| a < b;
+    for &n in &sizes {
+        let mut row = vec![format!("2^{}", (n as f64).log2() as u32)];
+        for &algo in &algos {
+            let m = bench(
+                n,
+                reps_for(n).min(5),
+                || gen_f64(Distribution::Uniform, n, 42),
+                |mut v| {
+                    ips4o::bench_harness::run_algo(algo, &mut v, &cfg, &lt);
+                    assert!(v.windows(2).all(|w| w[0] <= w[1]));
+                    v
+                },
+            );
+            row.push(format!("{:.3}", m.per_nlogn_ns()));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("\npaper shape: IS4o fastest for n ≥ 2^16; DualPivot/std-sort ≥1.86x slower at the top end");
+}

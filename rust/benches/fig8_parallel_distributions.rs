@@ -1,0 +1,62 @@
+//! Figure 8 (and the per-machine detail Figures 9–11): parallel
+//! algorithms across input distributions over an n-sweep, ns/(n log n).
+//! The paper's panels (a–c) vary the machine for Uniform; (d–f) vary the
+//! distribution on Intel2S. We collapse the machine axis (DESIGN.md §5)
+//! and sweep the distribution axis.
+
+use ips4o::baselines::Algo;
+use ips4o::bench_harness::{bench, print_machine_info, Table};
+use ips4o::datagen::{gen_f64, Distribution};
+use ips4o::Config;
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1);
+    let sizes: Vec<usize> = if full {
+        vec![1 << 18, 1 << 20, 1 << 22, 1 << 23]
+    } else {
+        vec![1 << 18, 1 << 20, 1 << 22]
+    };
+    println!("# Fig. 8 — parallel algorithms × distributions, t={threads}, ns/(n log n)\n");
+
+    let dists = [
+        Distribution::Uniform,
+        Distribution::TwoDup,
+        Distribution::RootDup,
+        Distribution::AlmostSorted,
+        Distribution::Sorted,
+        Distribution::Ones,
+    ];
+    let algos = Algo::PARALLEL;
+    let cfg = Config::default().with_threads(threads);
+    let lt = |a: &f64, b: &f64| a < b;
+
+    for dist in dists {
+        println!("## {}", dist.name());
+        let mut headers = vec!["n".to_string()];
+        headers.extend(algos.iter().map(|a| a.name().to_string()));
+        let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for &n in &sizes {
+            let mut row = vec![format!("2^{}", (n as f64).log2() as u32)];
+            for &algo in &algos {
+                let m = bench(
+                    n,
+                    3,
+                    || gen_f64(dist, n, 42),
+                    |mut v| {
+                        ips4o::bench_harness::run_algo(algo, &mut v, &cfg, &lt);
+                        v
+                    },
+                );
+                row.push(format!("{:.3}", m.per_nlogn_ns()));
+            }
+            table.row(row);
+        }
+        table.print();
+        println!();
+    }
+    println!("paper shape: IPS4o wins on Uniform/TwoDup/RootDup at large n; PBBS ties on AlmostSorted; TBB wins Sorted/Ones via its presorted early-exit");
+}

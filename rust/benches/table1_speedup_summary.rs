@@ -1,0 +1,90 @@
+//! Table 1: speedups of IS⁴o (sequential) and IPS⁴o (parallel) relative
+//! to the fastest in-place and non-in-place competitor, per input
+//! distribution (paper: n = 2³², three machines; here: container scale,
+//! one host — DESIGN.md §5).
+
+use ips4o::baselines::Algo;
+use ips4o::bench_harness::{bench, print_machine_info, Table};
+use ips4o::datagen::{gen_f64, Distribution};
+use ips4o::Config;
+
+fn mean_secs(algo: Algo, dist: Distribution, n: usize, cfg: &Config) -> f64 {
+    let lt = |a: &f64, b: &f64| a < b;
+    bench(
+        n,
+        3,
+        || gen_f64(dist, n, 42),
+        |mut v| {
+            ips4o::bench_harness::run_algo(algo, &mut v, cfg, &lt);
+            v
+        },
+    )
+    .mean
+    .as_secs_f64()
+}
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let n = if full { 1 << 23 } else { 1 << 21 };
+    let threads = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1);
+    println!(
+        "# Table 1 — speedups vs fastest (non-)in-place competitor, n=2^{}, t={threads}\n",
+        (n as f64).log2() as u32
+    );
+
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Exponential,
+        Distribution::AlmostSorted,
+        Distribution::RootDup,
+        Distribution::TwoDup,
+    ];
+
+    // --- Sequential: IS4o vs best of {BlockQ (in-place), DualPivot
+    // (in-place), std-sort (in-place), s3-sort (non-in-place)} —
+    // paper row "IS4o / both" (its fastest competitors happen to be
+    // in-place except s3-sort).
+    let seq = Config::default();
+    let mut t1 = Table::new(&["input", "IS4o-vs-inplace", "IS4o-vs-noninplace"]);
+    for dist in dists {
+        let t_is4o = mean_secs(Algo::Is4o, dist, n, &seq);
+        let inplace = [Algo::BlockQ, Algo::DualPivot, Algo::Introsort]
+            .iter()
+            .map(|&a| mean_secs(a, dist, n, &seq))
+            .fold(f64::INFINITY, f64::min);
+        let noninplace = mean_secs(Algo::S3Sort, dist, n, &seq);
+        t1.row(vec![
+            dist.name().into(),
+            format!("{:.2}", inplace / t_is4o),
+            format!("{:.2}", noninplace / t_is4o),
+        ]);
+    }
+    println!("## sequential (paper Intel2S row: 1.14 / 1.23 / 0.59 / 0.97 / 1.17 vs both)");
+    t1.print();
+
+    // --- Parallel: IPS4o vs best in-place {TBB, MCSTLubq, MCSTLbq} and
+    // best non-in-place {MCSTLmwm, PBBS}.
+    let par = Config::default().with_threads(threads);
+    let mut t2 = Table::new(&["input", "IPS4o-vs-inplace", "IPS4o-vs-noninplace"]);
+    for dist in dists {
+        let t_ips4o = mean_secs(Algo::Ips4o, dist, n, &par);
+        let inplace = [Algo::TbbLike, Algo::ParQsortUnbalanced, Algo::ParQsortBalanced]
+            .iter()
+            .map(|&a| mean_secs(a, dist, n, &par))
+            .fold(f64::INFINITY, f64::min);
+        let noninplace = [Algo::ParMergesort, Algo::PbbsSampleSort]
+            .iter()
+            .map(|&a| mean_secs(a, dist, n, &par))
+            .fold(f64::INFINITY, f64::min);
+        t2.row(vec![
+            dist.name().into(),
+            format!("{:.2}", inplace / t_ips4o),
+            format!("{:.2}", noninplace / t_ips4o),
+        ]);
+    }
+    println!("\n## parallel (paper Intel2S rows: in-place 2.54/3.43/1.88/2.73/3.02; non-in-place 2.13/1.79/1.29/1.19/1.86)");
+    t2.print();
+}

@@ -1,0 +1,68 @@
+//! Runtime-layer bench (this repo's three-layer addition): throughput of
+//! the AOT-compiled JAX/Pallas classification artifact executed through
+//! PJRT vs the native Rust branchless classifier, on the same chunks.
+//! Requires `make artifacts`.
+
+use std::time::Instant;
+
+use ips4o::bench_harness::{print_machine_info, Table};
+use ips4o::classifier::Classifier;
+use ips4o::runtime::{default_artifact, Engine, XlaClassifier, CHUNK};
+use ips4o::util::Xoshiro256;
+
+fn main() {
+    print_machine_info();
+    let path = default_artifact("classify.hlo.txt");
+    if !std::path::Path::new(&path).exists() {
+        println!("SKIP: {path} missing — run `make artifacts` first");
+        return;
+    }
+    println!("# XLA-offloaded classifier vs native (k=256, f32, per-chunk)\n");
+
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let splitters: Vec<f32> = (1..256).map(|i| i as f32 * 1000.0).collect();
+    let t0 = Instant::now();
+    let clf = XlaClassifier::new(&engine, &path, &splitters).expect("artifact");
+    let compile_s = t0.elapsed().as_secs_f64();
+
+    let mut rng = Xoshiro256::new(9);
+    let chunks = 64usize;
+    let data: Vec<Vec<f32>> = (0..chunks)
+        .map(|_| (0..CHUNK).map(|_| rng.next_f64() as f32 * 260_000.0).collect())
+        .collect();
+
+    // Warmup + measure XLA path.
+    let _ = clf.classify_chunk(&data[0]).unwrap();
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for c in &data {
+        let (ids, _h) = clf.classify_chunk(c).unwrap();
+        sink += ids[0] as u64;
+    }
+    let t_xla = t0.elapsed().as_secs_f64();
+
+    // Native rust classifier (same branchless tree, batched descent).
+    let flt = |a: &f32, b: &f32| a < b;
+    let native = Classifier::new(&splitters, false, &flt);
+    let t0 = Instant::now();
+    for c in &data {
+        native.classify_slice(c, &flt, |_, b| sink += b as u64);
+    }
+    let t_native = t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+
+    let n = (chunks * CHUNK) as f64;
+    let mut t = Table::new(&["path", "M elem/s", "notes"]);
+    t.row(vec![
+        "XLA (PJRT, AOT Pallas)".into(),
+        format!("{:.1}", n / t_xla / 1e6),
+        format!("one-time compile {:.2}s", compile_s),
+    ]);
+    t.row(vec![
+        "native Rust tree".into(),
+        format!("{:.1}", n / t_native / 1e6),
+        "classify_slice, 4-way unroll".into(),
+    ]);
+    t.print();
+    println!("\nnote: interpret=True Pallas lowers to plain HLO, so the XLA path benchmarks XLA's vectorized codegen (a TPU proxy only structurally — see EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,133 @@
+//! Base-case sorting (paper §4.7: insertion sort below `n₀`) plus a
+//! heapsort used as the guaranteed-`O(n log n)` fallback (the same role
+//! introsort's heapsort plays for quicksort).
+
+/// Insertion sort — optimal for the tiny buckets (`n₀ = 16`) left at the
+/// bottom of the recursion.
+pub fn insertion_sort<T, F>(v: &mut [T], is_less: &F)
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    for i in 1..v.len() {
+        let x = v[i];
+        let mut j = i;
+        while j > 0 && is_less(&x, &v[j - 1]) {
+            v[j] = v[j - 1];
+            j -= 1;
+        }
+        v[j] = x;
+    }
+}
+
+/// Bottom-up heapsort. Used as a degenerate-input fallback (e.g. when a
+/// sample yields no usable splitters with equality buckets disabled) so
+/// the overall algorithm keeps its `O(n log n)` worst case.
+pub fn heapsort<T, F>(v: &mut [T], is_less: &F)
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    // Build max-heap.
+    for i in (0..n / 2).rev() {
+        sift_down(v, i, n, is_less);
+    }
+    // Pop max to the end.
+    for end in (1..n).rev() {
+        v.swap(0, end);
+        sift_down(v, 0, end, is_less);
+    }
+}
+
+#[inline]
+fn sift_down<T, F>(v: &mut [T], mut root: usize, end: usize, is_less: &F)
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    loop {
+        let mut child = 2 * root + 1;
+        if child >= end {
+            return;
+        }
+        if child + 1 < end && is_less(&v[child], &v[child + 1]) {
+            child += 1;
+        }
+        if !is_less(&v[root], &v[child]) {
+            return;
+        }
+        v.swap(root, child);
+        root = child;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn insertion_sort_small_cases() {
+        for v0 in [
+            vec![],
+            vec![1u64],
+            vec![2, 1],
+            vec![1, 2],
+            vec![3, 3, 3],
+            vec![5, 4, 3, 2, 1],
+            vec![1, 5, 2, 4, 3],
+        ] {
+            let mut v = v0.clone();
+            insertion_sort(&mut v, &lt);
+            assert!(is_sorted_by(&v, lt), "{v0:?} -> {v:?}");
+        }
+    }
+
+    #[test]
+    fn insertion_sort_random_preserves_multiset() {
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..50 {
+            let n = rng.next_below(64) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(10)).collect();
+            let fp = multiset_fingerprint(&v, |x| *x);
+            insertion_sort(&mut v, &lt);
+            assert!(is_sorted_by(&v, lt));
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn heapsort_random() {
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..20 {
+            let n = rng.next_below(2000) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let fp = multiset_fingerprint(&v, |x| *x);
+            heapsort(&mut v, &lt);
+            assert!(is_sorted_by(&v, lt));
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn heapsort_adversarial_patterns() {
+        for n in [0usize, 1, 2, 3, 100] {
+            // all-equal
+            let mut v = vec![7u64; n];
+            heapsort(&mut v, &lt);
+            assert!(is_sorted_by(&v, lt));
+            // reverse
+            let mut v: Vec<u64> = (0..n as u64).rev().collect();
+            heapsort(&mut v, &lt);
+            assert_eq!(v, (0..n as u64).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Introsort — the GCC libstdc++ `std::sort` stand-in (Musser [23]):
+//! median-of-3 quicksort, falling back to heapsort beyond `2·log₂ n`
+//! depth, finishing with one insertion-sort pass below a fixed threshold.
+//! Deliberately *branching* on every comparison, like the original —
+//! this is the paper's branch-misprediction-suffering baseline.
+
+use crate::base_case::{heapsort, insertion_sort};
+use crate::util::log2_floor;
+
+const INSERTION_THRESHOLD: usize = 16;
+
+/// Sort with an explicit comparator.
+pub fn sort_by<T, F>(v: &mut [T], is_less: &F)
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    if v.len() < 2 {
+        return;
+    }
+    let depth_limit = 2 * log2_floor(v.len()) as usize + 1;
+    introsort_loop(v, depth_limit, is_less);
+    insertion_sort(v, is_less);
+}
+
+fn introsort_loop<T, F>(v: &mut [T], mut depth: usize, is_less: &F)
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    let mut v = v;
+    while v.len() > INSERTION_THRESHOLD {
+        if depth == 0 {
+            heapsort(v, is_less);
+            return;
+        }
+        depth -= 1;
+        let p = partition_median3(v, is_less);
+        // Recurse into the smaller side, loop on the larger (O(log n)
+        // stack, like libstdc++).
+        let (lo, hi) = v.split_at_mut(p);
+        let hi = &mut hi[1..];
+        if lo.len() < hi.len() {
+            introsort_loop(lo, depth, is_less);
+            v = hi;
+        } else {
+            introsort_loop(hi, depth, is_less);
+            v = lo;
+        }
+    }
+}
+
+/// Hoare-style partition around the median of first/middle/last.
+/// Returns the final pivot index.
+fn partition_median3<T, F>(v: &mut [T], is_less: &F) -> usize
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    let mid = n / 2;
+    // Order v[0], v[mid], v[n-1]; use v[mid] as pivot, stash at n-2.
+    if is_less(&v[mid], &v[0]) {
+        v.swap(mid, 0);
+    }
+    if is_less(&v[n - 1], &v[0]) {
+        v.swap(n - 1, 0);
+    }
+    if is_less(&v[n - 1], &v[mid]) {
+        v.swap(n - 1, mid);
+    }
+    v.swap(mid, n - 2);
+    let pivot = v[n - 2];
+
+    let mut i = 0usize;
+    let mut j = n - 2;
+    loop {
+        loop {
+            i += 1;
+            if !is_less(&v[i], &pivot) {
+                break;
+            }
+        }
+        loop {
+            j -= 1;
+            if !is_less(&pivot, &v[j]) {
+                break;
+            }
+        }
+        if i >= j {
+            break;
+        }
+        v.swap(i, j);
+    }
+    v.swap(i, n - 2);
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 2, 16, 17, 1000, 30_000] {
+                let mut v = gen_u64(d, n, 5);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_by(&mut v, &lt);
+                assert!(is_sorted_by(&v, lt), "{} n={n}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_organ_pipe() {
+        let n = 10_000u64;
+        let mut v: Vec<u64> = (0..n / 2).chain((0..n / 2).rev()).collect();
+        sort_by(&mut v, &lt);
+        assert!(is_sorted_by(&v, lt));
+    }
+
+    #[test]
+    fn random_comparator_objects() {
+        let mut rng = Xoshiro256::new(8);
+        let mut v: Vec<u64> = (0..5000).map(|_| rng.next_u64()).collect();
+        // Descending order via inverted comparator.
+        sort_by(&mut v, &|a, b| a > b);
+        assert!(v.windows(2).all(|w| w[0] >= w[1]));
+    }
+}

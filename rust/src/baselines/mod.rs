@@ -1,0 +1,130 @@
+//! The paper's entire comparison field, reimplemented from scratch in
+//! Rust (DESIGN.md §3/§5: reimplementing the *algorithms* in one
+//! language/toolchain removes the compiler confound and satisfies the
+//! no-external-dependency constraint).
+//!
+//! Sequential competitors (§5 "Sequential Algorithms"):
+//! * [`introsort`] — GCC libstdc++ `std::sort` stand-in (median-of-3
+//!   quicksort + heapsort depth fallback + final insertion pass).
+//! * [`dualpivot`] — Yaroslavskiy dual-pivot quicksort (Oracle Java 7+).
+//! * [`blockquicksort`] — Edelkamp & Weiss BlockQuicksort [9].
+//! * [`s3sort`] — non-in-place super scalar samplesort [27], oracle
+//!   array + temporary output, as in the Hübschle-Schneider
+//!   implementation [15].
+//!
+//! Parallel competitors (§5 "Parallel Algorithms"):
+//! * [`par_quicksort`] — MCSTL-style parallel quicksort, *unbalanced*
+//!   (sequential partition, parallel recursion) and *balanced*
+//!   (Tsigas–Zhang cooperative partition) variants.
+//! * [`par_mergesort`] — MCSTL multiway mergesort [29]: parallel local
+//!   sorts + exact splitting + loser-tree k-way merge.
+//! * [`pbbs_samplesort`] — PBBS-style non-in-place parallel
+//!   samplesort [28].
+//! * [`tbb_like`] — TBB `parallel_sort` stand-in: parallel quicksort
+//!   with a pre-sortedness early exit (reproducing TBB's win on
+//!   Sorted/Ones inputs).
+
+pub mod blockquicksort;
+pub mod dualpivot;
+pub mod introsort;
+pub mod par_mergesort;
+pub mod par_quicksort;
+pub mod pbbs_samplesort;
+pub mod s3sort;
+pub mod tbb_like;
+
+/// Registry entry used by the CLI and the bench harness.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Our sequential IS⁴o.
+    Is4o,
+    /// Our strictly in-place IS⁴o (§4.6).
+    Is4oStrict,
+    /// Our parallel IPS⁴o.
+    Ips4o,
+    Introsort,
+    DualPivot,
+    BlockQ,
+    S3Sort,
+    ParQsortUnbalanced,
+    ParQsortBalanced,
+    ParMergesort,
+    PbbsSampleSort,
+    TbbLike,
+}
+
+impl Algo {
+    pub const SEQUENTIAL: [Algo; 5] = [
+        Algo::Is4o,
+        Algo::BlockQ,
+        Algo::S3Sort,
+        Algo::DualPivot,
+        Algo::Introsort,
+    ];
+
+    pub const PARALLEL: [Algo; 6] = [
+        Algo::Ips4o,
+        Algo::TbbLike,
+        Algo::ParQsortUnbalanced,
+        Algo::ParQsortBalanced,
+        Algo::ParMergesort,
+        Algo::PbbsSampleSort,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Is4o => "IS4o",
+            Algo::Is4oStrict => "IS4o-strict",
+            Algo::Ips4o => "IPS4o",
+            Algo::Introsort => "std-sort",
+            Algo::DualPivot => "DualPivot",
+            Algo::BlockQ => "BlockQ",
+            Algo::S3Sort => "s3-sort",
+            Algo::ParQsortUnbalanced => "MCSTLubq",
+            Algo::ParQsortBalanced => "MCSTLbq",
+            Algo::ParMergesort => "MCSTLmwm",
+            Algo::PbbsSampleSort => "PBBS",
+            Algo::TbbLike => "TBB",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algo> {
+        [
+            Algo::Is4o,
+            Algo::Is4oStrict,
+            Algo::Ips4o,
+            Algo::Introsort,
+            Algo::DualPivot,
+            Algo::BlockQ,
+            Algo::S3Sort,
+            Algo::ParQsortUnbalanced,
+            Algo::ParQsortBalanced,
+            Algo::ParMergesort,
+            Algo::PbbsSampleSort,
+            Algo::TbbLike,
+        ]
+        .into_iter()
+        .find(|a| a.name().eq_ignore_ascii_case(s))
+    }
+
+    /// True for algorithms with sub-linear auxiliary space.
+    pub fn in_place(&self) -> bool {
+        !matches!(
+            self,
+            Algo::S3Sort | Algo::ParMergesort | Algo::PbbsSampleSort
+        )
+    }
+
+    /// True for parallel algorithms.
+    pub fn parallel(&self) -> bool {
+        matches!(
+            self,
+            Algo::Ips4o
+                | Algo::ParQsortUnbalanced
+                | Algo::ParQsortBalanced
+                | Algo::ParMergesort
+                | Algo::PbbsSampleSort
+                | Algo::TbbLike
+        )
+    }
+}

@@ -1,0 +1,298 @@
+//! MCSTL-style parallel multiway mergesort [29] (`MCSTLmwm`) — the
+//! paper's strongest *non-in-place* competitor on several inputs, used in
+//! GCC's parallel-mode `std::sort`.
+//!
+//! Structure: `t` runs sorted in parallel → splitter-based multisequence
+//! partition (each output stripe's boundary located by binary search in
+//! every run) → per-stripe k-way merge with a loser tree into a
+//! temporary buffer → parallel copy-back. Output stripes are determined
+//! by an oversampled splitter set, giving near-exact balance (the MCSTL
+//! "exact splitting" is approximated by sampling; see DESIGN.md §5).
+
+use crate::parallel::SharedSlice;
+use crate::util::{Element, Xoshiro256};
+
+/// A loser-tree (tournament) k-way merger over sorted runs.
+struct LoserTree<'a, T, F> {
+    /// Tree of "losers"; index 0 holds the overall winner's run id.
+    tree: Vec<usize>,
+    /// Current head index per run (absolute in `runs[r]`).
+    heads: Vec<usize>,
+    runs: Vec<&'a [T]>,
+    k: usize,
+    is_less: &'a F,
+}
+
+impl<'a, T: Element, F: Fn(&T, &T) -> bool> LoserTree<'a, T, F> {
+    fn new(runs: Vec<&'a [T]>, is_less: &'a F) -> Self {
+        let k = runs.len().next_power_of_two().max(1);
+        let heads = vec![0usize; runs.len()];
+        let mut lt = LoserTree {
+            tree: vec![usize::MAX; 2 * k],
+            heads,
+            runs,
+            k,
+            is_less,
+        };
+        lt.rebuild();
+        lt
+    }
+
+    /// Current key of run `r`, or `None` when exhausted.
+    #[inline]
+    fn head(&self, r: usize) -> Option<&T> {
+        if r < self.runs.len() {
+            self.runs[r].get(self.heads[r])
+        } else {
+            None
+        }
+    }
+
+    /// True if run `a`'s head should win (come first) against run `b`'s.
+    #[inline]
+    fn beats(&self, a: usize, b: usize) -> bool {
+        match (self.head(a), self.head(b)) {
+            (Some(x), Some(y)) => !(self.is_less)(y, x), // ties → lower run id side
+            (Some(_), None) => true,
+            (None, _) => false,
+        }
+    }
+
+    /// Rebuild the whole tree in O(k) matches (used at init): iterative
+    /// pairwise reduction over the leaves, recording losers at each
+    /// internal node.
+    fn rebuild(&mut self) {
+        let mut level: Vec<usize> = (0..self.k).collect();
+        let mut node_base = self.k;
+        while level.len() > 1 {
+            node_base /= 2;
+            let mut next = Vec::with_capacity(level.len() / 2);
+            for (i, pair) in level.chunks(2).enumerate() {
+                let (a, b) = (pair[0], pair[1]);
+                let (win, lose) = if self.beats(a, b) { (a, b) } else { (b, a) };
+                self.tree[node_base + i] = lose;
+                next.push(win);
+            }
+            level = next;
+        }
+        self.tree[0] = level[0];
+    }
+
+    /// Pop the smallest element across all runs; `None` when exhausted.
+    #[inline]
+    fn pop(&mut self) -> Option<T> {
+        let winner = self.tree[0];
+        let value = *self.head(winner)?;
+        self.heads[winner] += 1;
+        // Replay matches from the winner's leaf to the root.
+        let mut node = (self.k + winner) / 2;
+        let mut cur = winner;
+        while node >= 1 {
+            let opp = self.tree[node];
+            if opp != usize::MAX && !self.beats(cur, opp) {
+                self.tree[node] = cur;
+                cur = opp;
+            }
+            if node == 1 {
+                break;
+            }
+            node /= 2;
+        }
+        self.tree[0] = cur;
+        Some(value)
+    }
+}
+
+/// Sort with `threads` worker threads.
+pub fn sort_by<T, F>(v: &mut [T], threads: usize, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    let t = threads.max(1);
+    if t == 1 || n < 1 << 13 {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+
+    // --- Phase 1: sort t runs in parallel ---
+    let bounds = crate::parallel::stripes(n, t, 1);
+    {
+        let arr = SharedSlice::new(&mut *v);
+        std::thread::scope(|scope| {
+            for tid in 0..t {
+                let arr = &arr;
+                let bounds = &bounds;
+                scope.spawn(move || {
+                    let slice = unsafe { arr.slice_mut(bounds[tid], bounds[tid + 1]) };
+                    crate::baselines::introsort::sort_by(slice, is_less);
+                });
+            }
+        });
+    }
+
+    // --- Phase 2: choose output-stripe splitters from a sample ---
+    let mut rng = Xoshiro256::new(0x3333 ^ n as u64);
+    let oversample = 32usize;
+    let mut sample: Vec<T> = (0..t * oversample)
+        .map(|_| v[rng.next_below(n as u64) as usize])
+        .collect();
+    crate::baselines::introsort::sort_by(&mut sample, is_less);
+    let splitters: Vec<T> = (1..t).map(|i| sample[i * oversample]).collect();
+
+    // Per-stripe start offsets in every run: lower_bound(splitter).
+    // offsets[s][r] = start of stripe s within run r.
+    let mut offsets: Vec<Vec<usize>> = Vec::with_capacity(t + 1);
+    offsets.push(vec![0; t]);
+    for sp in &splitters {
+        let row: Vec<usize> = (0..t)
+            .map(|r| lower_bound(&v[bounds[r]..bounds[r + 1]], sp, is_less))
+            .collect();
+        offsets.push(row);
+    }
+    offsets.push((0..t).map(|r| bounds[r + 1] - bounds[r]).collect());
+
+    // Output start position of each stripe.
+    let mut out_start = vec![0usize; t + 1];
+    for s in 0..=t {
+        out_start[s] = offsets[s].iter().sum();
+    }
+    debug_assert_eq!(out_start[t], n);
+
+    // --- Phase 3: per-stripe loser-tree merge into tmp ---
+    let mut tmp: Vec<T> = vec![T::default(); n];
+    {
+        let src = SharedSlice::new(&mut *v);
+        let dst = SharedSlice::new(&mut tmp);
+        std::thread::scope(|scope| {
+            for s in 0..t {
+                let src = &src;
+                let dst = &dst;
+                let bounds = &bounds;
+                let offsets = &offsets;
+                let out_start = &out_start;
+                scope.spawn(move || {
+                    let runs: Vec<&[T]> = (0..t)
+                        .map(|r| unsafe {
+                            src.slice(bounds[r] + offsets[s][r], bounds[r] + offsets[s + 1][r])
+                        })
+                        .collect();
+                    let out =
+                        unsafe { dst.slice_mut(out_start[s], out_start[s + 1]) };
+                    let mut lt = LoserTree::new(runs, is_less);
+                    for slot in out.iter_mut() {
+                        *slot = lt.pop().expect("merge underflow");
+                    }
+                    debug_assert!(lt.pop().is_none(), "merge overflow");
+                });
+            }
+        });
+    }
+
+    // --- Phase 4: parallel copy-back ---
+    {
+        let src = SharedSlice::new(&mut tmp);
+        let dst = SharedSlice::new(v);
+        std::thread::scope(|scope| {
+            for s in 0..t {
+                let src = &src;
+                let dst = &dst;
+                let out_start = &out_start;
+                scope.spawn(move || unsafe {
+                    let from = src.slice(out_start[s], out_start[s + 1]);
+                    let to = dst.slice_mut(out_start[s], out_start[s + 1]);
+                    to.copy_from_slice(from);
+                });
+            }
+        });
+    }
+}
+
+/// First index in sorted `v` whose element is not less than `x`.
+fn lower_bound<T, F>(v: &[T], x: &T, is_less: &F) -> usize
+where
+    F: Fn(&T, &T) -> bool,
+{
+    let mut a = 0usize;
+    let mut b = v.len();
+    while a < b {
+        let m = a + (b - a) / 2;
+        if is_less(&v[m], x) {
+            a = m + 1;
+        } else {
+            b = m;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        for d in Distribution::ALL {
+            let mut v = gen_u64(d, 60_000, 5);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_by(&mut v, 4, &lt);
+            assert!(is_sorted_by(&v, lt), "{}", d.name());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn loser_tree_merges_correctly() {
+        let a: Vec<u64> = vec![1, 4, 7, 10];
+        let b: Vec<u64> = vec![2, 5, 8];
+        let c: Vec<u64> = vec![0, 9, 11, 12];
+        let d: Vec<u64> = vec![];
+        let mut lt_tree = LoserTree::new(vec![&a, &b, &c, &d], &lt);
+        let mut out = vec![];
+        while let Some(x) = lt_tree.pop() {
+            out.push(x);
+        }
+        assert_eq!(out, vec![0, 1, 2, 4, 5, 7, 8, 9, 10, 11, 12]);
+    }
+
+    #[test]
+    fn loser_tree_single_run_and_duplicates() {
+        let a: Vec<u64> = vec![3, 3, 3];
+        let mut t = LoserTree::new(vec![&a], &lt);
+        assert_eq!(t.pop(), Some(3));
+        assert_eq!(t.pop(), Some(3));
+        assert_eq!(t.pop(), Some(3));
+        assert_eq!(t.pop(), None);
+
+        let b: Vec<u64> = vec![1, 1];
+        let c: Vec<u64> = vec![1, 1];
+        let mut t = LoserTree::new(vec![&b, &c], &lt);
+        let all: Vec<u64> = std::iter::from_fn(|| t.pop()).collect();
+        assert_eq!(all, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn odd_sizes_and_thread_counts() {
+        for t in [2usize, 3, 5] {
+            let mut v = gen_u64(Distribution::Exponential, 50_001, 7);
+            sort_by(&mut v, t, &lt);
+            assert!(is_sorted_by(&v, lt), "t={t}");
+        }
+    }
+
+    #[test]
+    fn lower_bound_basics() {
+        let v: Vec<u64> = vec![1, 3, 3, 5, 9];
+        assert_eq!(lower_bound(&v, &0, &lt), 0);
+        assert_eq!(lower_bound(&v, &3, &lt), 1);
+        assert_eq!(lower_bound(&v, &4, &lt), 3);
+        assert_eq!(lower_bound(&v, &10, &lt), 5);
+    }
+}

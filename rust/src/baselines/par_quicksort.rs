@@ -1,0 +1,403 @@
+//! MCSTL-style parallel quicksorts [29, 30] — the paper's *in-place
+//! parallel* competitors.
+//!
+//! * **Unbalanced** (`MCSTLubq`): each partitioning step runs
+//!   sequentially on one thread; the two sub-ranges become independent
+//!   tasks on a shared work queue. Scales only once enough sub-ranges
+//!   exist (the paper's Fig. 7 shows it lagging at high core counts).
+//! * **Balanced** (`MCSTLbq`, after Tsigas & Zhang [30]): the first
+//!   partitioning steps are themselves parallelized — every thread
+//!   partitions a chunk in place, then misplaced segments on either side
+//!   of the global boundary are swapped pairwise in parallel — so the
+//!   algorithm scales from the first level.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::parallel::SharedSlice;
+use crate::util::Element;
+
+const SEQ_THRESHOLD_FACTOR: usize = 8; // tasks below n/(8t) sort sequentially
+
+/// Work-queue fork-join driver shared by the parallel quicksort variants
+/// (and the TBB stand-in): tasks are (start, end) ranges; `partition`
+/// splits a range sequentially; small ranges are sorted with introsort.
+pub(crate) fn quicksort_taskqueue<T, F>(v: &mut [T], threads: usize, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    let t = threads.max(1);
+    if t == 1 || n < 1 << 13 {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+    let seq_below = (n / (SEQ_THRESHOLD_FACTOR * t)).max(1 << 12);
+    let arr = SharedSlice::new(v);
+    let queue: Mutex<Vec<(usize, usize)>> = Mutex::new(vec![(0, n)]);
+    // Number of tasks either queued or being processed; 0 ⇒ done.
+    let outstanding = AtomicUsize::new(1);
+
+    std::thread::scope(|scope| {
+        for _ in 0..t {
+            let arr = &arr;
+            let queue = &queue;
+            let outstanding = &outstanding;
+            scope.spawn(move || loop {
+                let task = queue.lock().unwrap().pop();
+                match task {
+                    Some((s, e)) => {
+                        // SAFETY: ranges in the queue are disjoint.
+                        let slice = unsafe { arr.slice_mut(s, e) };
+                        if e - s <= seq_below {
+                            crate::baselines::introsort::sort_by(slice, is_less);
+                            outstanding.fetch_sub(1, Ordering::AcqRel);
+                        } else {
+                            let p = hoare_partition(slice, is_less);
+                            if p == 0 || p == e - s {
+                                // Degenerate pivot: no progress possible,
+                                // finish sequentially.
+                                crate::baselines::introsort::sort_by(slice, is_less);
+                                outstanding.fetch_sub(1, Ordering::AcqRel);
+                            } else {
+                                let mut q = queue.lock().unwrap();
+                                q.push((s, s + p));
+                                q.push((s + p, e));
+                                outstanding.fetch_add(1, Ordering::AcqRel);
+                            }
+                        }
+                    }
+                    None => {
+                        if outstanding.load(Ordering::Acquire) == 0 {
+                            return;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Median-of-3 Hoare partition; returns the split point `p > 0` such that
+/// `v[..p] ≤ pivot ≤ v[p..]` with both sides non-empty-progress
+/// guaranteed.
+fn hoare_partition<T, F>(v: &mut [T], is_less: &F) -> usize
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    let mid = n / 2;
+    if is_less(&v[mid], &v[0]) {
+        v.swap(mid, 0);
+    }
+    if is_less(&v[n - 1], &v[0]) {
+        v.swap(n - 1, 0);
+    }
+    if is_less(&v[n - 1], &v[mid]) {
+        v.swap(n - 1, mid);
+    }
+    let pivot = v[mid];
+
+    let mut i = 0usize;
+    let mut j = n - 1;
+    loop {
+        while is_less(&v[i], &pivot) {
+            i += 1;
+        }
+        while is_less(&pivot, &v[j]) {
+            j -= 1;
+        }
+        if i >= j {
+            // Hoare guarantee: 0 < i ≤ n−1 after median-of-3 ordering.
+            return j + 1;
+        }
+        v.swap(i, j);
+        i += 1;
+        j -= 1;
+    }
+}
+
+/// Unbalanced MCSTL-style parallel quicksort.
+pub fn sort_unbalanced<T, F>(v: &mut [T], threads: usize, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    quicksort_taskqueue(v, threads, is_less)
+}
+
+/// Balanced (Tsigas–Zhang-style) parallel quicksort: cooperative parallel
+/// partition until enough independent sub-ranges exist, then the work
+/// queue takes over.
+pub fn sort_balanced<T, F>(v: &mut [T], threads: usize, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    let t = threads.max(1);
+    if t == 1 || n < 1 << 14 {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+    // Cooperatively split until we have ≥ t ranges (≈ log₂ t levels).
+    let mut ranges: Vec<(usize, usize)> = vec![(0, n)];
+    while ranges.len() < t {
+        // Partition the largest range with all threads.
+        ranges.sort_unstable_by_key(|&(s, e)| e - s);
+        let (s, e) = match ranges.pop() {
+            Some(r) if r.1 - r.0 > 1 << 14 => r,
+            Some(r) => {
+                ranges.push(r);
+                break;
+            }
+            None => break,
+        };
+        let p = parallel_partition(&mut v[s..e], t, is_less);
+        if p == 0 || p == e - s {
+            // Degenerate pivot (many duplicates): give up on splitting
+            // this range cooperatively.
+            ranges.push((s, e));
+            break;
+        }
+        ranges.push((s, s + p));
+        ranges.push((s + p, e));
+    }
+    // Sort all ranges with the shared task queue (re-seeding it).
+    let arr = SharedSlice::new(v);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let ranges = &ranges;
+        let arr = &arr;
+        let next = &next;
+        for _ in 0..t {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= ranges.len() {
+                    return;
+                }
+                let (s, e) = ranges[i];
+                let slice = unsafe { arr.slice_mut(s, e) };
+                // Inner sort may itself be a (nested) task-queue sort for
+                // big ranges; keep it sequential for simplicity — ranges
+                // are ≈ balanced by construction.
+                crate::baselines::introsort::sort_by(slice, is_less);
+            });
+        }
+    });
+}
+
+/// Cooperative parallel partition around a median-of-medians pivot.
+/// Returns the split point `p` (`v[..p] < pivot ≤ v[p..]`).
+///
+/// Phase 1: `t` threads Hoare-partition disjoint chunks in place.
+/// Phase 2: the misplaced segments relative to the global boundary are
+/// paired and swapped in parallel.
+pub fn parallel_partition<T, F>(v: &mut [T], threads: usize, is_less: &F) -> usize
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    let t = threads.max(1).min(n / 1024).max(1);
+
+    // Pivot: median of per-chunk medians-of-3.
+    let mut cands: Vec<T> = (0..3 * t)
+        .map(|i| v[(i * (n - 1)) / (3 * t).max(1)])
+        .collect();
+    crate::baselines::introsort::sort_by(&mut cands, is_less);
+    let pivot = cands[cands.len() / 2];
+
+    // Phase 1: per-chunk in-place partition by `< pivot`.
+    let bounds = crate::parallel::stripes(n, t, 1);
+    let mids: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(0)).collect();
+    let arr = SharedSlice::new(v);
+    std::thread::scope(|scope| {
+        for tid in 0..t {
+            let arr = &arr;
+            let bounds = &bounds;
+            let mids = &mids;
+            let pivot = &pivot;
+            scope.spawn(move || {
+                let (s, e) = (bounds[tid], bounds[tid + 1]);
+                let slice = unsafe { arr.slice_mut(s, e) };
+                // Lomuto-style stable-side partition: [ < pivot | ≥ pivot ).
+                let mut m = 0usize;
+                for i in 0..slice.len() {
+                    if is_less(&slice[i], pivot) {
+                        slice.swap(i, m);
+                        m += 1;
+                    }
+                }
+                mids[tid].store(s + m, Ordering::Release);
+            });
+        }
+    });
+    let mids: Vec<usize> = mids.iter().map(|m| m.load(Ordering::Acquire)).collect();
+    let total_less: usize = mids
+        .iter()
+        .zip(bounds.iter())
+        .map(|(&m, &s)| m - s)
+        .sum();
+    let boundary = total_less;
+
+    // Phase 2: collect misplaced segments. `less` segments at ≥ boundary,
+    // `geq` segments at < boundary.
+    let mut less_segs: Vec<(usize, usize)> = Vec::new();
+    let mut geq_segs: Vec<(usize, usize)> = Vec::new();
+    for tid in 0..t {
+        let (s, e) = (bounds[tid], bounds[tid + 1]);
+        let m = mids[tid];
+        // less part [s, m): misplaced portion beyond the boundary.
+        let (ls, le) = (s.max(boundary), m);
+        if le > ls {
+            less_segs.push((ls, le));
+        }
+        // geq part [m, e): misplaced portion before the boundary.
+        let (gs, ge) = (m, e.min(boundary));
+        if ge > gs {
+            geq_segs.push((gs, ge));
+        }
+    }
+    let total: usize = less_segs.iter().map(|&(a, b)| b - a).sum();
+    debug_assert_eq!(total, geq_segs.iter().map(|&(a, b)| b - a).sum::<usize>());
+
+    // Flatten pairing into t parallel swap jobs over the virtual
+    // concatenation of the segments.
+    let job_bounds = crate::parallel::stripes(total, t, 1);
+    std::thread::scope(|scope| {
+        for tid in 0..t {
+            let arr = &arr;
+            let less_segs = &less_segs;
+            let geq_segs = &geq_segs;
+            let job_bounds = &job_bounds;
+            scope.spawn(move || {
+                let (js, je) = (job_bounds[tid], job_bounds[tid + 1]);
+                let mut li = locate(less_segs, js);
+                let mut gi = locate(geq_segs, js);
+                for _ in js..je {
+                    // SAFETY: the virtual index pairing is a bijection;
+                    // every position is touched by exactly one thread.
+                    unsafe {
+                        let a = arr.slice_mut(li.0, li.0 + 1);
+                        let b = arr.slice_mut(gi.0, gi.0 + 1);
+                        std::mem::swap(&mut a[0], &mut b[0]);
+                    }
+                    li = advance(less_segs, li);
+                    gi = advance(geq_segs, gi);
+                }
+            });
+        }
+    });
+
+    boundary
+}
+
+/// Map a virtual index into (absolute position, segment index).
+fn locate(segs: &[(usize, usize)], mut virt: usize) -> (usize, usize) {
+    for (i, &(a, b)) in segs.iter().enumerate() {
+        let len = b - a;
+        if virt < len {
+            return (a + virt, i);
+        }
+        virt -= len;
+    }
+    (usize::MAX, segs.len())
+}
+
+/// Advance a (position, segment) cursor by one.
+fn advance(segs: &[(usize, usize)], cur: (usize, usize)) -> (usize, usize) {
+    let (pos, seg) = cur;
+    if seg >= segs.len() {
+        return cur;
+    }
+    if pos + 1 < segs[seg].1 {
+        (pos + 1, seg)
+    } else if seg + 1 < segs.len() {
+        (segs[seg + 1].0, seg + 1)
+    } else {
+        (usize::MAX, segs.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn unbalanced_sorts_all_distributions() {
+        for d in Distribution::ALL {
+            let mut v = gen_u64(d, 60_000, 5);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_unbalanced(&mut v, 4, &lt);
+            assert!(is_sorted_by(&v, lt), "{}", d.name());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn balanced_sorts_all_distributions() {
+        for d in Distribution::ALL {
+            let mut v = gen_u64(d, 60_000, 6);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_balanced(&mut v, 4, &lt);
+            assert!(is_sorted_by(&v, lt), "{}", d.name());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn parallel_partition_correct() {
+        for seed in 0..5 {
+            let mut v = gen_u64(Distribution::Uniform, 50_000, seed);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            let p = parallel_partition(&mut v, 4, &lt);
+            assert!(p > 0 && p <= v.len());
+            let max_left = v[..p].iter().max();
+            let min_right = v[p..].iter().min();
+            if let (Some(a), Some(b)) = (max_left, min_right) {
+                assert!(a <= b || a < b || !(b < a), "partition violated");
+                assert!(!(b < a), "partition violated: {a} vs {b}");
+            }
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn small_and_single_thread_degenerate() {
+        let mut v = gen_u64(Distribution::Uniform, 1000, 1);
+        sort_unbalanced(&mut v, 1, &lt);
+        assert!(is_sorted_by(&v, lt));
+        let mut v = gen_u64(Distribution::Uniform, 100_000, 1);
+        sort_balanced(&mut v, 1, &lt);
+        assert!(is_sorted_by(&v, lt));
+    }
+
+    #[test]
+    fn locate_and_advance_walk_segments() {
+        let segs = vec![(10, 12), (20, 23)];
+        assert_eq!(locate(&segs, 0), (10, 0));
+        assert_eq!(locate(&segs, 1), (11, 0));
+        assert_eq!(locate(&segs, 2), (20, 1));
+        assert_eq!(locate(&segs, 4), (22, 1));
+        let mut c = locate(&segs, 0);
+        let mut seen = vec![c.0];
+        for _ in 0..4 {
+            c = advance(&segs, c);
+            seen.push(c.0);
+        }
+        assert_eq!(seen, vec![10, 11, 20, 21, 22]);
+    }
+}

@@ -1,0 +1,192 @@
+//! PBBS-style parallel samplesort [28] — the paper's fastest
+//! *non-in-place* parallel competitor on several inputs.
+//!
+//! Classic non-in-place parallel distribution:
+//! 1. oversampled splitters (sorted sample, equidistant picks);
+//! 2. count phase: each thread classifies its chunk, producing a `t × k`
+//!    count matrix;
+//! 3. column-major prefix sum of the matrix gives every (thread, bucket)
+//!    pair its exact scatter offset;
+//! 4. scatter phase: each thread re-classifies its chunk and writes
+//!    elements to the temporary array;
+//! 5. buckets are sorted in parallel (dynamic assignment) and the result
+//!    is copied back.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::classifier::Classifier;
+use crate::parallel::SharedSlice;
+use crate::util::{Element, Xoshiro256};
+
+/// Sort with `threads` worker threads.
+pub fn sort_by<T, F>(v: &mut [T], threads: usize, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    let t = threads.max(1);
+    if t == 1 || n < 1 << 13 {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+
+    // --- Splitters ---
+    let k = 256usize.min((n / 256).next_power_of_two()).max(2);
+    let oversample = 8usize;
+    let mut rng = Xoshiro256::new(0xBBB5 ^ n as u64);
+    let mut sample: Vec<T> = (0..k * oversample)
+        .map(|_| v[rng.next_below(n as u64) as usize])
+        .collect();
+    crate::baselines::introsort::sort_by(&mut sample, is_less);
+    let mut unique: Vec<T> = Vec::with_capacity(k - 1);
+    for i in 1..k {
+        let s = sample[i * oversample];
+        match unique.last() {
+            Some(last) if !is_less(last, &s) => {}
+            _ => unique.push(s),
+        }
+    }
+    if unique.is_empty() {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+    let classifier = Classifier::new(&unique, false, is_less);
+    let nb = classifier.num_buckets();
+
+    // --- Count phase ---
+    let bounds = crate::parallel::stripes(n, t, 1);
+    let mut matrix = vec![0usize; t * nb];
+    {
+        let arr = SharedSlice::new(&mut *v);
+        let mat = SharedSlice::new(&mut matrix);
+        std::thread::scope(|scope| {
+            for tid in 0..t {
+                let arr = &arr;
+                let mat = &mat;
+                let bounds = &bounds;
+                let classifier = &classifier;
+                scope.spawn(move || {
+                    let chunk = unsafe { arr.slice(bounds[tid], bounds[tid + 1]) };
+                    let row = unsafe { mat.slice_mut(tid * nb, (tid + 1) * nb) };
+                    classifier.classify_slice(chunk, is_less, |_, b| row[b] += 1);
+                });
+            }
+        });
+    }
+
+    // --- Column-major exclusive prefix sum → scatter offsets ---
+    let mut offsets = vec![0usize; t * nb];
+    let mut acc = 0usize;
+    let mut bucket_starts = vec![0usize; nb + 1];
+    for b in 0..nb {
+        bucket_starts[b] = acc;
+        for tid in 0..t {
+            offsets[tid * nb + b] = acc;
+            acc += matrix[tid * nb + b];
+        }
+    }
+    bucket_starts[nb] = acc;
+    debug_assert_eq!(acc, n);
+
+    // Degenerate split guard.
+    if bucket_starts.windows(2).any(|w| w[1] - w[0] == n) {
+        crate::baselines::introsort::sort_by(v, is_less);
+        return;
+    }
+
+    // --- Scatter phase ---
+    let mut tmp: Vec<T> = vec![T::default(); n];
+    {
+        let src = SharedSlice::new(&mut *v);
+        let dst = SharedSlice::new(&mut tmp);
+        let offs = SharedSlice::new(&mut offsets);
+        std::thread::scope(|scope| {
+            for tid in 0..t {
+                let src = &src;
+                let dst = &dst;
+                let offs = &offs;
+                let bounds = &bounds;
+                let classifier = &classifier;
+                scope.spawn(move || {
+                    let chunk = unsafe { src.slice(bounds[tid], bounds[tid + 1]) };
+                    let my_offs = unsafe { offs.slice_mut(tid * nb, (tid + 1) * nb) };
+                    classifier.classify_slice(chunk, is_less, |i, b| {
+                        // SAFETY: disjoint scatter targets by construction
+                        // of the offset matrix.
+                        unsafe {
+                            let slot = dst.slice_mut(my_offs[b], my_offs[b] + 1);
+                            slot[0] = chunk[i];
+                        }
+                        my_offs[b] += 1;
+                    });
+                });
+            }
+        });
+    }
+
+    // --- Parallel bucket sort (dynamic) + copy-back ---
+    {
+        let dst = SharedSlice::new(&mut tmp);
+        let out = SharedSlice::new(v);
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..t {
+                let dst = &dst;
+                let out = &out;
+                let next = &next;
+                let bucket_starts = &bucket_starts;
+                scope.spawn(move || loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= nb {
+                        return;
+                    }
+                    let (s, e) = (bucket_starts[b], bucket_starts[b + 1]);
+                    let slice = unsafe { dst.slice_mut(s, e) };
+                    crate::baselines::introsort::sort_by(slice, is_less);
+                    unsafe {
+                        out.slice_mut(s, e).copy_from_slice(slice);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        for d in Distribution::ALL {
+            let mut v = gen_u64(d, 60_000, 5);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_by(&mut v, 4, &lt);
+            assert!(is_sorted_by(&v, lt), "{}", d.name());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn matches_sequential_reference() {
+        let mut a = gen_u64(Distribution::TwoDup, 80_000, 3);
+        let mut b = a.clone();
+        sort_by(&mut a, 4, &lt);
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn small_inputs_fall_back() {
+        let mut v = gen_u64(Distribution::Uniform, 1000, 1);
+        sort_by(&mut v, 4, &lt);
+        assert!(is_sorted_by(&v, lt));
+    }
+}

@@ -1,0 +1,200 @@
+//! Super scalar samplesort (Sanders & Winkel, ESA 2004 [27]) — the
+//! *non-in-place* ancestor of IS⁴o and one of its sequential baselines
+//! (implementation structured after Hübschle-Schneider's `ssssort` [15]).
+//!
+//! One distribution step:
+//! 1. sample & sort, pick `k−1` equidistant splitters, build the implicit
+//!    branchless search tree (shared with our core via
+//!    [`crate::classifier::Classifier`]);
+//! 2. first pass: classify every element, storing its bucket id in an
+//!    **oracle** array and counting bucket sizes;
+//! 3. prefix-sum the counts, second pass: scatter elements into a
+//!    **temporary** array using the oracle (no re-classification);
+//! 4. recurse bucket-wise, alternating the roles of the two arrays, with
+//!    a final copy-back if the recursion depth is odd.
+//!
+//! The O(n) oracle + O(n) temporary array are exactly the overheads the
+//! paper's Appendix B charges against s³-sort (86n vs 48n bytes of I/O).
+
+use crate::classifier::Classifier;
+use crate::config::Config;
+use crate::util::{Element, Xoshiro256};
+
+/// Sort with an explicit comparator. `cfg` supplies `k`, α, and the base
+/// case size (defaults match the paper's s³-sort setup).
+pub fn sort_by_with_config<T, F>(v: &mut [T], cfg: &Config, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    let mut tmp: Vec<T> = vec![T::default(); n];
+    let mut oracle: Vec<u8> = vec![0; n];
+    let mut rng = Xoshiro256::new(0x535353 ^ n as u64);
+    let depth = sort_rec(v, &mut tmp, &mut oracle, cfg, &mut rng, is_less, 0);
+    if depth {
+        // Result ended up in tmp; copy back (the 16n-byte copy-back of
+        // Appendix B).
+        v.copy_from_slice(&tmp);
+    }
+}
+
+/// Sort with the default configuration.
+pub fn sort_by<T, F>(v: &mut [T], is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    sort_by_with_config(v, &Config::default(), is_less)
+}
+
+const BASE: usize = 512; // fall back to introsort below this size
+
+/// Recursively sort `src[..]`; returns `true` if the sorted result lives
+/// in `dst` (odd recursion depth), `false` if it lives in `src`.
+fn sort_rec<T, F>(
+    src: &mut [T],
+    dst: &mut [T],
+    oracle: &mut [u8],
+    cfg: &Config,
+    rng: &mut Xoshiro256,
+    is_less: &F,
+    _level: usize,
+) -> bool
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = src.len();
+    if n <= BASE {
+        crate::baselines::introsort::sort_by(src, is_less);
+        return false;
+    }
+
+    // --- Splitter selection (sample stays in src, like the original) ---
+    let k = cfg.buckets_for(n).min(256); // oracle ids are u8
+    let sample_size = cfg.sample_size(n, k);
+    // Sample without displacing elements: copy out.
+    let mut sample: Vec<T> = (0..sample_size)
+        .map(|_| src[rng.next_below(n as u64) as usize])
+        .collect();
+    crate::baselines::introsort::sort_by(&mut sample, is_less);
+    let mut unique: Vec<T> = Vec::with_capacity(k - 1);
+    for i in 1..k {
+        let s = sample[(i * sample_size / k).min(sample_size - 1)];
+        match unique.last() {
+            Some(last) if !is_less(last, &s) => {}
+            _ => unique.push(s),
+        }
+    }
+    if unique.is_empty() {
+        // Degenerate sample — all equal; introsort handles it.
+        crate::baselines::introsort::sort_by(src, is_less);
+        return false;
+    }
+    let classifier = Classifier::new(&unique, false, is_less);
+    let nb = classifier.num_buckets();
+
+    // --- Pass 1: oracle + counts ---
+    let mut counts = vec![0usize; nb];
+    classifier.classify_slice(src, is_less, |i, b| {
+        oracle[i] = b as u8;
+        counts[b] += 1;
+    });
+
+    // Degenerate split (can happen when the sample was unlucky): avoid
+    // infinite recursion.
+    if counts.iter().any(|&c| c == n) {
+        crate::baselines::introsort::sort_by(src, is_less);
+        return false;
+    }
+
+    // --- Pass 2: scatter via oracle ---
+    let mut offsets = vec![0usize; nb + 1];
+    for i in 0..nb {
+        offsets[i + 1] = offsets[i] + counts[i];
+    }
+    let mut cursor = offsets.clone();
+    for i in 0..n {
+        let b = oracle[i] as usize;
+        dst[cursor[b]] = src[i];
+        cursor[b] += 1;
+    }
+
+    // --- Recurse with roles swapped ---
+    let mut any_in_src = false;
+    let mut any_in_dst = false;
+    let mut in_dst_flags = vec![false; nb];
+    for b in 0..nb {
+        let (s, e) = (offsets[b], offsets[b + 1]);
+        if e - s < 2 {
+            in_dst_flags[b] = true; // trivially sorted where it lies (dst)
+            any_in_dst |= e > s;
+            continue;
+        }
+        let sub_in_src =
+            sort_rec(&mut dst[s..e], &mut src[s..e], &mut oracle[s..e], cfg, rng, is_less, 0);
+        // sub_in_src == true → result in `src` slice; else in `dst`.
+        in_dst_flags[b] = !sub_in_src;
+        if sub_in_src {
+            any_in_src = true;
+        } else {
+            any_in_dst = true;
+        }
+    }
+
+    // Normalize: make the whole level's result live in dst.
+    if any_in_src {
+        for b in 0..nb {
+            if !in_dst_flags[b] {
+                let (s, e) = (offsets[b], offsets[b + 1]);
+                dst[s..e].copy_from_slice(&src[s..e]);
+            }
+        }
+    }
+    let _ = any_in_dst;
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn sorts_all_distributions() {
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 2, 511, 512, 513, 5000, 60_000] {
+                let mut v = gen_u64(d, n, 5);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_by(&mut v, &lt);
+                assert!(is_sorted_by(&v, lt), "{} n={n}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn matches_core_is4o() {
+        let mut a = gen_u64(Distribution::TwoDup, 40_000, 8);
+        let mut b = a.clone();
+        sort_by(&mut a, &lt);
+        crate::sequential::sort_by(&mut b, &Config::default(), &lt);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn large_recursion_multiple_levels() {
+        let mut v = gen_u64(Distribution::Uniform, 300_000, 9);
+        sort_by(&mut v, &lt);
+        assert!(is_sorted_by(&v, lt));
+    }
+}

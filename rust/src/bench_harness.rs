@@ -1,0 +1,198 @@
+//! Criterion-free benchmarking harness (criterion is unavailable in this
+//! offline environment; this is deliberately small and deterministic).
+//!
+//! Measures wall-clock time over `reps` repetitions after a warmup run,
+//! reporting mean and min. The paper's figures plot *running time /
+//! (n log₂ n)* per element — [`Measurement::per_nlogn_ns`] reproduces
+//! that unit.
+
+use std::time::{Duration, Instant};
+
+use crate::baselines::Algo;
+use crate::config::Config;
+use crate::util::Element;
+
+/// Execute `algo` on `v` with configuration `cfg` (threads taken from
+/// `cfg.threads`). The single dispatch point shared by the CLI, the
+/// benches, and the e2e driver.
+pub fn run_algo<T, F>(algo: Algo, v: &mut [T], cfg: &Config, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let t = cfg.threads;
+    match algo {
+        Algo::Is4o => crate::sequential::sort_by(v, cfg, is_less),
+        Algo::Is4oStrict => crate::strictly_inplace::sort_strictly_inplace(v, cfg, is_less),
+        Algo::Ips4o => {
+            let sorter = crate::Sorter::new(cfg.clone());
+            sorter.sort_by(v, is_less);
+        }
+        Algo::Introsort => crate::baselines::introsort::sort_by(v, is_less),
+        Algo::DualPivot => crate::baselines::dualpivot::sort_by(v, is_less),
+        Algo::BlockQ => crate::baselines::blockquicksort::sort_by(v, is_less),
+        Algo::S3Sort => crate::baselines::s3sort::sort_by(v, is_less),
+        Algo::ParQsortUnbalanced => {
+            crate::baselines::par_quicksort::sort_unbalanced(v, t, is_less)
+        }
+        Algo::ParQsortBalanced => crate::baselines::par_quicksort::sort_balanced(v, t, is_less),
+        Algo::ParMergesort => crate::baselines::par_mergesort::sort_by(v, t, is_less),
+        Algo::PbbsSampleSort => crate::baselines::pbbs_samplesort::sort_by(v, t, is_less),
+        Algo::TbbLike => crate::baselines::tbb_like::sort_by(v, t, is_less),
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub mean: Duration,
+    pub min: Duration,
+    pub reps: usize,
+    pub n: usize,
+}
+
+impl Measurement {
+    /// Mean nanoseconds divided by n·log₂(n) — the y-axis of Fig. 6 etc.
+    pub fn per_nlogn_ns(&self) -> f64 {
+        let n = self.n.max(2) as f64;
+        self.mean.as_nanos() as f64 / (n * n.log2())
+    }
+
+    /// Elements per second (throughput).
+    pub fn throughput(&self) -> f64 {
+        self.n as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark `run`, which receives a fresh copy of `make_input()` each
+/// repetition (setup time excluded).
+pub fn bench<I: Clone, R>(
+    n: usize,
+    reps: usize,
+    make_input: impl Fn() -> I,
+    mut run: impl FnMut(I) -> R,
+) -> Measurement {
+    let reps = reps.max(1);
+    // Warmup (not measured).
+    let input = make_input();
+    std::hint::black_box(run(input));
+
+    let mut total = Duration::ZERO;
+    let mut min = Duration::MAX;
+    for _ in 0..reps {
+        let input = make_input();
+        let t0 = Instant::now();
+        std::hint::black_box(run(input));
+        let dt = t0.elapsed();
+        total += dt;
+        min = min.min(dt);
+    }
+    Measurement {
+        mean: total / reps as u32,
+        min,
+        reps,
+        n,
+    }
+}
+
+/// Repetition count policy matching the paper's (§5: 15 runs for
+/// n < 2³⁰, 2 for larger) scaled to this testbed.
+pub fn reps_for(n: usize) -> usize {
+    if n >= 1 << 24 {
+        2
+    } else if n >= 1 << 20 {
+        5
+    } else {
+        15.min(10)
+    }
+}
+
+/// Simple fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(10)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        for (i, c) in cells.iter().enumerate() {
+            if i < self.widths.len() {
+                self.widths[i] = self.widths[i].max(c.len());
+            }
+        }
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(10);
+                s.push_str(&format!("{:>w$}  ", c, w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        let total: usize = self.widths.iter().map(|w| w + 2).sum();
+        println!("{}", "-".repeat(total.saturating_sub(2)));
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Machine/environment banner for bench logs.
+pub fn print_machine_info() {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "# machine: {} logical cores | substitution for the paper's Intel2S/Intel4S/AMD1S (DESIGN.md §5)",
+        cores
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench(
+            1000,
+            3,
+            || vec![3u64; 1000],
+            |mut v| {
+                v.sort_unstable();
+                v
+            },
+        );
+        assert_eq!(m.reps, 3);
+        assert!(m.min <= m.mean);
+        assert!(m.per_nlogn_ns() >= 0.0);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn reps_policy() {
+        assert_eq!(reps_for(1 << 25), 2);
+        assert_eq!(reps_for(1 << 21), 5);
+        assert!(reps_for(1000) >= 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["algo", "n", "time"]);
+        t.row(vec!["IPS4o".into(), "1048576".into(), "1.23ms".into()]);
+        t.print();
+    }
+}

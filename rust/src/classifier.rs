@@ -1,0 +1,397 @@
+//! Branchless element classification (paper §3, §4.4).
+//!
+//! The `k−1` sorted splitters are stored in an implicit perfect binary
+//! search tree `a` (`a[1] = s_{k/2}`, left child of `a[i]` is `a[2i]`,
+//! right child `a[2i+1]`). Descending the tree is `log₂ k` iterations of
+//! `i = 2i + (e ≥ a[i])` — the comparison result feeds an index update
+//! instead of a conditional branch, so the compiler emits `cmov`/`setcc`
+//! and the hardware branch predictor is never stressed (the s³-sort
+//! insight).
+//!
+//! Equality buckets (§4.4): when the sample contains duplicate splitters,
+//! each "less-than" bucket `j > 0` gains a twin *equality* bucket holding
+//! elements equal to splitter `s_{j−1}`. After the tree descent has
+//! established `s_{j−1} ≤ e < s_j`, a single additional branchless
+//! comparison `e ≤ s_{j−1}` (i.e. `!(s_{j−1} < e)`) decides between the
+//! twins ([3]-style). Equality buckets need no recursion.
+
+use crate::util::log2_ceil;
+
+/// A built classifier for one partitioning step.
+///
+/// Bucket index layout:
+/// * without equality buckets: `fanout` buckets `0..fanout`;
+/// * with equality buckets: `2·fanout − 1` buckets where even index `2j`
+///   is the "range" bucket (`s_{j−1} < e < s_j`, half-open at the ends)
+///   and odd index `2j−1` is the equality bucket for splitter `s_{j−1}`.
+///
+/// Bucket indices are monotone in element order in both layouts.
+pub struct Classifier<T> {
+    /// Implicit BST, 1-based; `tree[0]` unused. Length = `fanout`.
+    tree: Vec<T>,
+    /// Sorted (padded) splitters, `fanout − 1` entries; `splitters[j]` is
+    /// the right boundary of range-bucket `j`.
+    splitters: Vec<T>,
+    log_fanout: u32,
+    fanout: usize,
+    equality: bool,
+}
+
+impl<T: Copy> Classifier<T> {
+    /// Build a classifier from *sorted, deduplicated* splitters.
+    ///
+    /// `fanout` becomes the smallest power of two `> unique.len()`,
+    /// padding by repeating the largest splitter (padding buckets simply
+    /// stay empty). Panics if `unique` is empty.
+    pub fn new<F>(unique: &[T], equality: bool, is_less: &F) -> Self
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        assert!(!unique.is_empty(), "need at least one splitter");
+        debug_assert!(
+            unique.windows(2).all(|w| is_less(&w[0], &w[1])),
+            "splitters must be sorted and unique"
+        );
+        let fanout = 1usize << log2_ceil(unique.len() + 1);
+        let mut splitters = Vec::with_capacity(fanout - 1);
+        splitters.extend_from_slice(unique);
+        let last = *unique.last().unwrap();
+        splitters.resize(fanout - 1, last);
+
+        // Fill the implicit tree: node `i` covers splitter range [lo, hi);
+        // its key is the middle splitter.
+        let mut tree = vec![splitters[0]; fanout];
+        fn fill<T: Copy>(tree: &mut [T], splitters: &[T], node: usize, lo: usize, hi: usize) {
+            if node >= tree.len() {
+                return;
+            }
+            let mid = (lo + hi) / 2;
+            tree[node] = splitters[mid];
+            fill(tree, splitters, 2 * node, lo, mid);
+            fill(tree, splitters, 2 * node + 1, mid + 1, hi);
+        }
+        fill(&mut tree, &splitters, 1, 0, fanout - 1);
+
+        Classifier {
+            tree,
+            splitters,
+            log_fanout: log2_ceil(fanout),
+            fanout,
+            equality,
+        }
+    }
+
+    /// Number of leaf buckets reachable by the tree descent.
+    #[inline(always)]
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    /// Total number of buckets produced by classification.
+    #[inline(always)]
+    pub fn num_buckets(&self) -> usize {
+        if self.equality {
+            2 * self.fanout - 1
+        } else {
+            self.fanout
+        }
+    }
+
+    /// True if equality buckets are active.
+    #[inline(always)]
+    pub fn has_equality_buckets(&self) -> bool {
+        self.equality
+    }
+
+    /// True if bucket `b` is an equality bucket (all elements equal ⇒ no
+    /// recursion needed).
+    #[inline(always)]
+    pub fn is_equality_bucket(&self, b: usize) -> bool {
+        self.equality && b % 2 == 1
+    }
+
+    /// Tree descent for the range-bucket index in `0..fanout`:
+    /// `s_{b−1} ≤ e < s_b`.
+    #[inline(always)]
+    fn leaf<F>(&self, e: &T, is_less: &F) -> usize
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let mut i = 1usize;
+        for _ in 0..self.log_fanout {
+            // Branchless: step right iff e ≥ tree[i].
+            i = 2 * i + !is_less(e, unsafe { self.tree.get_unchecked(i) }) as usize;
+        }
+        i - self.fanout
+    }
+
+    /// Classify one element into its final bucket index.
+    #[inline(always)]
+    pub fn classify<F>(&self, e: &T, is_less: &F) -> usize
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let b = self.leaf(e, is_less);
+        if !self.equality {
+            return b;
+        }
+        // One extra branchless comparison: after the descent we know
+        // s_{b−1} ≤ e, so e == s_{b−1} ⟺ !(s_{b−1} < e). Bucket 0 has no
+        // left splitter; mask the equality bit there.
+        let j = b.wrapping_sub(1).min(self.fanout - 2); // clamp for b = 0
+        let eq =
+            (!is_less(unsafe { self.splitters.get_unchecked(j) }, e)) as usize & (b != 0) as usize;
+        2 * b - eq
+    }
+
+    /// Classify a slice, calling `out(index_in_slice, bucket)` per element.
+    ///
+    /// Descends the tree for `U = 4` elements simultaneously so the
+    /// independent comparison chains overlap in the pipeline (the
+    /// "super scalar" part of s³-sort).
+    #[inline]
+    pub fn classify_slice<F, O>(&self, v: &[T], is_less: &F, mut out: O)
+    where
+        F: Fn(&T, &T) -> bool,
+        O: FnMut(usize, usize),
+    {
+        const U: usize = 4;
+        let chunks = v.len() / U;
+        for c in 0..chunks {
+            let base = c * U;
+            let mut idx = [1usize; U];
+            for _ in 0..self.log_fanout {
+                for u in 0..U {
+                    let e = unsafe { v.get_unchecked(base + u) };
+                    idx[u] = 2 * idx[u]
+                        + !is_less(e, unsafe { self.tree.get_unchecked(idx[u]) }) as usize;
+                }
+            }
+            for u in 0..U {
+                let mut b = idx[u] - self.fanout;
+                if self.equality {
+                    let e = unsafe { v.get_unchecked(base + u) };
+                    let j = b.wrapping_sub(1).min(self.fanout - 2);
+                    let eq = (!is_less(unsafe { self.splitters.get_unchecked(j) }, e)) as usize
+                        & (b != 0) as usize;
+                    b = 2 * b - eq;
+                }
+                out(base + u, b);
+            }
+        }
+        for i in (chunks * U)..v.len() {
+            out(i, self.classify(&v[i], is_less));
+        }
+    }
+
+    /// Classify four elements at once, interleaving the four independent
+    /// tree descents so their comparison latencies overlap (the
+    /// "super scalar" trick). The elements are passed *by value* (stack
+    /// copies), which keeps the hot loop free of aliasing concerns when
+    /// the source array is being mutated behind a raw pointer.
+    #[inline(always)]
+    pub fn classify4<F>(&self, es: &[T; 4], is_less: &F) -> [usize; 4]
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let mut idx = [1usize; 4];
+        for _ in 0..self.log_fanout {
+            for u in 0..4 {
+                idx[u] = 2 * idx[u]
+                    + !is_less(&es[u], unsafe { self.tree.get_unchecked(idx[u]) }) as usize;
+            }
+        }
+        let mut out = [0usize; 4];
+        for u in 0..4 {
+            let b = idx[u] - self.fanout;
+            out[u] = if self.equality {
+                let j = b.wrapping_sub(1).min(self.fanout - 2);
+                let eq = (!is_less(unsafe { self.splitters.get_unchecked(j) }, &es[u])) as usize
+                    & (b != 0) as usize;
+                2 * b - eq
+            } else {
+                b
+            };
+        }
+        out
+    }
+
+    /// Reference classification by linear scan over the splitters —
+    /// used by tests as an oracle.
+    #[cfg(test)]
+    pub fn classify_naive<F>(&self, e: &T, is_less: &F) -> usize
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        // Range bucket: count of splitters ≤ e.
+        let mut b = 0;
+        while b < self.fanout - 1 && !is_less(e, &self.splitters[b]) {
+            b += 1;
+        }
+        if !self.equality {
+            return b;
+        }
+        if b > 0 && !is_less(&self.splitters[b - 1], e) {
+            2 * b - 1
+        } else {
+            2 * b
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn two_way_classifier() {
+        let c = Classifier::new(&[10u64], false, &lt);
+        assert_eq!(c.fanout(), 2);
+        assert_eq!(c.num_buckets(), 2);
+        assert_eq!(c.classify(&5, &lt), 0);
+        assert_eq!(c.classify(&10, &lt), 1);
+        assert_eq!(c.classify(&11, &lt), 1);
+    }
+
+    #[test]
+    fn equality_buckets_layout() {
+        // Two unique splitters pad to fanout 4 as [10, 20, 20]: elements
+        // equal to the padded maximum descend right through the padded
+        // nodes and land in the *last* twin equality bucket (5) — the
+        // intermediate twins stay empty, which is harmless (all equal
+        // keys still share one bucket, and bucket order stays monotone).
+        let c = Classifier::new(&[10u64, 20], true, &lt);
+        assert_eq!(c.fanout(), 4); // padded to next power of two
+        assert_eq!(c.num_buckets(), 7);
+        assert_eq!(c.classify(&5, &lt), 0); // < 10
+        assert_eq!(c.classify(&10, &lt), 1); // == s0
+        assert_eq!(c.classify(&15, &lt), 2); // (10, 20)
+        assert_eq!(c.classify(&20, &lt), 5); // == 20 → last twin of the padded run
+        assert_eq!(c.classify(&25, &lt), 6); // > 20
+        assert!(c.is_equality_bucket(1));
+        assert!(c.is_equality_bucket(3));
+        assert!(c.is_equality_bucket(5));
+        assert!(!c.is_equality_bucket(0));
+        assert!(!c.is_equality_bucket(2));
+    }
+
+    #[test]
+    fn equality_single_splitter_ones_input() {
+        // The "Ones" distribution: one unique splitter, everything equal.
+        let c = Classifier::new(&[1u64], true, &lt);
+        assert_eq!(c.num_buckets(), 3);
+        assert_eq!(c.classify(&0, &lt), 0);
+        assert_eq!(c.classify(&1, &lt), 1); // equality bucket
+        assert_eq!(c.classify(&2, &lt), 2);
+    }
+
+    #[test]
+    fn buckets_are_monotone_in_element_order() {
+        for equality in [false, true] {
+            let spl: Vec<u64> = vec![3, 7, 11, 20, 50, 90, 100];
+            let c = Classifier::new(&spl, equality, &lt);
+            let mut last = 0usize;
+            for e in 0..120u64 {
+                let b = c.classify(&e, &lt);
+                assert!(b >= last, "bucket not monotone at e={e}");
+                last = b;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_oracle_randomized() {
+        let mut rng = Xoshiro256::new(0xC1A55);
+        for trial in 0..200 {
+            let nspl = 1 + (rng.next_below(40) as usize);
+            let mut spl: Vec<u64> = (0..nspl).map(|_| rng.next_below(1000)).collect();
+            spl.sort_unstable();
+            spl.dedup();
+            let equality = trial % 2 == 0;
+            let c = Classifier::new(&spl, equality, &lt);
+            for _ in 0..100 {
+                let e = rng.next_below(1100);
+                assert_eq!(
+                    c.classify(&e, &lt),
+                    c.classify_naive(&e, &lt),
+                    "spl={spl:?} e={e} equality={equality}"
+                );
+            }
+            // Splitters themselves must land in *an* equality bucket;
+            // all but the padded maximum land in their canonical twin.
+            if equality {
+                let padded = c.fanout() - 1 > spl.len();
+                for (j, s) in spl.iter().enumerate() {
+                    let b = c.classify(s, &lt);
+                    assert!(c.is_equality_bucket(b), "splitter {s} → bucket {b}");
+                    if !(padded && j == spl.len() - 1) {
+                        assert_eq!(b, 2 * (j + 1) - 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn classify_slice_agrees_with_single() {
+        let mut rng = Xoshiro256::new(77);
+        let spl: Vec<u64> = vec![100, 200, 300, 400, 500, 600, 700];
+        for equality in [false, true] {
+            let c = Classifier::new(&spl, equality, &lt);
+            let v: Vec<u64> = (0..1003).map(|_| rng.next_below(800)).collect();
+            let mut got = vec![usize::MAX; v.len()];
+            c.classify_slice(&v, &lt, |i, b| got[i] = b);
+            for (i, e) in v.iter().enumerate() {
+                assert_eq!(got[i], c.classify(e, &lt));
+            }
+        }
+    }
+
+    #[test]
+    fn f64_keys_with_total_order_closure() {
+        // Padded splitters [1.5, 2.5, 2.5]: values ≥ 2.5 pass the padded
+        // node too and land in leaf 3.
+        let fl = |a: &f64, b: &f64| a < b;
+        let c = Classifier::new(&[1.5f64, 2.5], false, &fl);
+        assert_eq!(c.classify(&0.0, &fl), 0);
+        assert_eq!(c.classify(&1.5, &fl), 1);
+        assert_eq!(c.classify(&2.0, &fl), 1);
+        assert_eq!(c.classify(&3.0, &fl), 3);
+    }
+
+    #[test]
+    fn classify4_agrees_with_single() {
+        let mut rng = Xoshiro256::new(123);
+        let spl: Vec<u64> = vec![10, 20, 30, 40, 55];
+        for equality in [false, true] {
+            let c = Classifier::new(&spl, equality, &lt);
+            for _ in 0..200 {
+                let es = [
+                    rng.next_below(70),
+                    rng.next_below(70),
+                    rng.next_below(70),
+                    rng.next_below(70),
+                ];
+                let got = c.classify4(&es, &lt);
+                for u in 0..4 {
+                    assert_eq!(got[u], c.classify(&es[u], &lt));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_fanout_256() {
+        let spl: Vec<u64> = (1..256).map(|i| i * 10).collect();
+        let c = Classifier::new(&spl, false, &lt);
+        assert_eq!(c.fanout(), 256);
+        for e in [0u64, 9, 10, 15, 2549, 2550, 9999] {
+            assert_eq!(c.classify(&e, &lt), ((e / 10).min(255)) as usize);
+        }
+    }
+}

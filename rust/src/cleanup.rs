@@ -1,0 +1,281 @@
+//! Cleanup phase (paper §4.3, Figure 5).
+//!
+//! After block permutation, each bucket's *full* blocks sit at the front
+//! of its block-aligned range, but:
+//!
+//! * the bucket's element range starts at `bucket_starts[i]`, possibly in
+//!   the middle of a block (its **head**, which the permutation never
+//!   filled);
+//! * the last written block may overhang the bucket's element end into
+//!   the next bucket's head;
+//! * each thread still holds a partially-filled buffer per bucket;
+//! * one block may sit in the overflow buffer.
+//!
+//! Cleanup moves every remaining element into the bucket's holes (head +
+//! tail), bucket by bucket, left to right. The only cross-thread hazard —
+//! bucket `i`'s overhang living in the head of bucket `i+1`, which a
+//! *different* thread may fill — is resolved by pre-saving the head of
+//! each thread's first bucket (done by the previous thread) before any
+//! filling starts.
+
+use crate::local_classification::LocalBuffers;
+use crate::parallel::SharedSlice;
+use crate::permutation::{Overflow, Plan};
+use crate::util::Element;
+
+/// Destination hole iterator over the two hole ranges of a bucket.
+struct Holes {
+    a: (usize, usize),
+    b: (usize, usize),
+}
+
+impl Holes {
+    /// Total hole capacity (used by tests and debug assertions).
+    #[allow(dead_code)]
+    fn total(&self) -> usize {
+        (self.a.1 - self.a.0) + (self.b.1 - self.b.0)
+    }
+}
+
+/// Compute the hole ranges (head, tail) of bucket `i`.
+///
+/// `w` is the bucket's final write pointer (blocks); `overflowed` tells
+/// whether this bucket's last written block went to the overflow buffer.
+fn holes(plan: &Plan, i: usize, w: i32, overflowed: bool) -> Holes {
+    let b = plan.block;
+    let start = plan.bucket_starts[i];
+    let end = plan.bucket_starts[i + 1];
+    let db = plan.d[i] as usize * b;
+    // End of in-array correctly-written elements.
+    let w_eff = if overflowed { w - 1 } else { w };
+    let w_end = (w_eff.max(plan.d[i]) as usize) * b;
+
+    let head = (start, db.min(end));
+    let tail = (w_end.clamp(start, end), end);
+    // If the bucket fits inside the head (no block range), tail collapses.
+    let tail = if db >= end { (end, end) } else { tail };
+    Holes { a: head, b: tail }
+}
+
+/// The overhang source range of bucket `i`: elements of bucket `i`
+/// written past its element end (into the next head). Empty unless
+/// `w·b > end`.
+fn overhang(plan: &Plan, i: usize, w: i32, overflowed: bool) -> (usize, usize) {
+    let b = plan.block;
+    let end = plan.bucket_starts[i + 1];
+    let w_eff = if overflowed { w - 1 } else { w };
+    let w_end = (w_eff.max(plan.d[i]) as usize) * b;
+    let db = plan.d[i] as usize * b;
+    if db >= end {
+        // No full blocks were ever written for this bucket.
+        return (end, end);
+    }
+    (end, w_end.max(end).min(plan.n))
+}
+
+/// Fill the holes of buckets `[lo, hi)` (one thread's contiguous bucket
+/// range).
+///
+/// * `ws[i]` — final write pointer of bucket `i`;
+/// * `bufs` — every thread's local buffers (partial fills are drained);
+/// * `saved_head` — pre-saved contents of `[bucket_starts[hi], d[hi]·b)`,
+///   used as the overhang source when processing bucket `hi − 1`;
+/// * `on_bucket_done(start, end)` — eager base-case hook (§4.7).
+///
+/// # Safety contract
+/// Bucket element ranges `[bucket_starts[lo], bucket_starts[hi])` are
+/// owned exclusively by this thread; `saved_head` was copied before any
+/// thread started filling.
+#[allow(clippy::too_many_arguments)]
+pub fn cleanup_buckets<T, F>(
+    arr: &SharedSlice<T>,
+    plan: &Plan,
+    ws: &[i32],
+    bufs: &[&LocalBuffers<T>],
+    overflow: &Overflow<T>,
+    lo: usize,
+    hi: usize,
+    saved_head: &[T],
+    mut on_bucket_done: F,
+) where
+    T: Element,
+    F: FnMut(usize, usize),
+{
+    let b = plan.block;
+    let ovf_bucket = overflow.bucket();
+
+    for i in lo..hi {
+        let overflowed = ovf_bucket == Some(i);
+        let h = holes(plan, i, ws[i], overflowed);
+
+        // Writer cursor over the two hole ranges.
+        let mut cur = h.a.0;
+        let mut cur_end = h.a.1;
+        let mut in_tail = cur >= cur_end;
+        if in_tail {
+            cur = h.b.0;
+            cur_end = h.b.1;
+        }
+
+        let write = |src: &[T], cur: &mut usize, cur_end: &mut usize, in_tail: &mut bool| {
+            let mut off = 0usize;
+            while off < src.len() {
+                if *cur == *cur_end {
+                    debug_assert!(!*in_tail, "ran out of holes in bucket {i}");
+                    *in_tail = true;
+                    *cur = h.b.0;
+                    *cur_end = h.b.1;
+                    continue;
+                }
+                let take = (src.len() - off).min(*cur_end - *cur);
+                // SAFETY: destination holes are exclusively ours; sources
+                // never alias destinations (overhang ≥ end > tail start is
+                // impossible: tail end == end ≤ overhang start; buffers
+                // and overflow are distinct allocations; saved_head is a
+                // private copy).
+                unsafe {
+                    let dst = arr.slice_mut(*cur, *cur + take);
+                    dst.copy_from_slice(&src[off..off + take]);
+                }
+                off += take;
+                *cur += take;
+            }
+        };
+
+        // Source 1: overhang (the head of bucket i+1, or the saved copy
+        // when that head belongs to the next thread).
+        let (o_lo, o_hi) = overhang(plan, i, ws[i], overflowed);
+        if o_hi > o_lo {
+            if i == hi - 1 && !saved_head.is_empty() {
+                // The overhang lives in the pre-saved head: it starts at
+                // bucket_starts[hi] == o_lo by construction.
+                let src = &saved_head[..o_hi - o_lo];
+                write(src, &mut cur, &mut cur_end, &mut in_tail);
+            } else {
+                // SAFETY: reading a region this thread will only overwrite
+                // when processing bucket i+1 (strictly later).
+                let src: &[T] = unsafe { arr.slice(o_lo, o_hi) };
+                // Copy via a stack-local chunk to honor the "no alias"
+                // contract of the writer (overhang never overlaps holes of
+                // the same bucket; direct use is fine).
+                write(src, &mut cur, &mut cur_end, &mut in_tail);
+            }
+        }
+
+        // Source 2: the overflow block.
+        if overflowed {
+            let src = unsafe { overflow.contents(b) };
+            write(src, &mut cur, &mut cur_end, &mut in_tail);
+        }
+
+        // Source 3: every thread's partial buffer for bucket i.
+        for tb in bufs {
+            let src = tb.bucket_slice(i);
+            if !src.is_empty() {
+                write(src, &mut cur, &mut cur_end, &mut in_tail);
+            }
+        }
+
+        debug_assert!(
+            (in_tail && cur == cur_end) || (!in_tail && h.b.0 == h.b.1 && cur == cur_end),
+            "bucket {i}: holes not exactly filled (cur={cur}, end={cur_end}, in_tail={in_tail}, holes={:?}/{:?})",
+            h.a,
+            h.b
+        );
+
+        on_bucket_done(plan.bucket_starts[i], plan.bucket_starts[i + 1]);
+    }
+}
+
+/// Pre-save the head of bucket `hi` (region `[bucket_starts[hi],
+/// d[hi]·b)`) — called by the thread owning buckets `[lo, hi)` *before*
+/// the fill barrier. Returns an empty vec when there is nothing to save.
+pub fn save_next_head<T: Element>(arr: &SharedSlice<T>, plan: &Plan, hi: usize) -> Vec<T> {
+    if hi >= plan.num_buckets() {
+        return Vec::new();
+    }
+    let start = plan.bucket_starts[hi];
+    let db = (plan.d[hi] as usize * plan.block).min(plan.n);
+    if db <= start {
+        return Vec::new();
+    }
+    // SAFETY: called before any hole-filling starts (barrier-separated).
+    unsafe { arr.slice(start, db).to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holes_head_and_tail() {
+        // Two buckets, b = 4: bucket 0 has 6 elements [0,6), bucket 1 has
+        // 10 [6,16). d = [0, 2, 4].
+        let plan = Plan::new(&[6, 10], 16, 4);
+        assert_eq!(plan.d, vec![0, 2, 4]);
+        // Bucket 0: head [0,0)=∅ (d0·b == 0 == start), one full block
+        // written (w=1): filled [0,4); tail holes [4,6).
+        let h = holes(&plan, 0, 1, false);
+        assert_eq!(h.a, (0, 0));
+        assert_eq!(h.b, (4, 6));
+        assert_eq!(h.total(), 2);
+        // Bucket 1: head [6,8), two full blocks (w=4): filled [8,16);
+        // tail [16,16).
+        let h = holes(&plan, 1, 4, false);
+        assert_eq!(h.a, (6, 8));
+        assert_eq!(h.b, (16, 16));
+    }
+
+    #[test]
+    fn holes_with_overhang() {
+        // counts [1,4,11], b=4: starts [0,1,5,16], d=[0,1,2,4].
+        // Bucket 1 (start 1, end 5, d₁·b = 4) with one full block placed
+        // (w = 2): in-array fill [4,8) overhangs end=5 by 3 elements.
+        let plan = Plan::new(&[1, 4, 11], 16, 4);
+        assert_eq!(plan.d, vec![0, 1, 2, 4]);
+        let h = holes(&plan, 1, 2, false);
+        assert_eq!(h.a, (1, 4)); // head holes
+        assert_eq!(h.b, (5, 5)); // no tail holes
+        assert_eq!(h.total(), 3);
+        assert_eq!(overhang(&plan, 1, 2, false), (5, 8));
+        // holes (3) == overhang sources (3): cnt 4 = 1 placed + 3 moved.
+    }
+
+    #[test]
+    fn holes_tiny_bucket_inside_one_block() {
+        // Bucket 1 is entirely inside the head region: start 5, end 7,
+        // b = 8 → d1 = 1, d2 = 1: no block range at all.
+        let plan = Plan::new(&[5, 2, 9], 16, 8);
+        assert_eq!(plan.d, vec![0, 1, 1, 2]);
+        let h = holes(&plan, 1, 1, false);
+        assert_eq!(h.a, (5, 7));
+        assert_eq!(h.b, (7, 7));
+        assert_eq!(overhang(&plan, 1, 1, false), (7, 7));
+    }
+
+    #[test]
+    fn holes_overflowed_bucket() {
+        // counts [5,5], n=10, b=4: starts [0,5,10], d=[0,2,3]. Bucket 1
+        // placing its single full block at slot 2 would cross n=10 → it
+        // went to the overflow buffer; w ended at 3. In-array fill is
+        // empty ([8,8)): holes are head [5,8) + tail [8,10) = 5 = cnt.
+        let plan = Plan::new(&[5, 5], 10, 4);
+        assert_eq!(plan.d, vec![0, 2, 3]);
+        let h = holes(&plan, 1, 3, true);
+        assert_eq!(h.a, (5, 8));
+        assert_eq!(h.b, (8, 10));
+        assert_eq!(h.total(), 5);
+        assert_eq!(overhang(&plan, 1, 3, true), (10, 10));
+    }
+
+    #[test]
+    fn save_next_head_bounds() {
+        let plan = Plan::new(&[6, 10], 16, 4);
+        let mut v: Vec<u64> = (0..16).collect();
+        let arr = SharedSlice::new(v.as_mut_slice());
+        // Head of bucket 1 = [6, 8).
+        assert_eq!(save_next_head(&arr, &plan, 1), vec![6, 7]);
+        // Past the last bucket: nothing.
+        assert_eq!(save_next_head(&arr, &plan, 2), Vec::<u64>::new());
+    }
+}

@@ -1,0 +1,221 @@
+//! Tuning parameters of IPS⁴o (paper §4.7) and their defaults.
+
+use crate::util::{log2_ceil, log2_floor};
+
+/// All tuning knobs of the algorithm. Field names follow the paper:
+/// `k` (buckets), `α` (oversampling), `β` (overpartitioning), `n₀`
+/// (base case), `b` (block size in elements).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Maximum number of buckets per partitioning step (power of two).
+    /// Paper default: 256. The *effective* bucket count of a step is
+    /// chosen adaptively on the last two levels (§4.7), see
+    /// [`Config::buckets_for`].
+    pub max_buckets: usize,
+    /// Oversampling factor multiplier: `α = alpha_factor · log₂ n`,
+    /// clamped to ≥ 1 (paper: α = 0.2·log n).
+    pub alpha_factor: f64,
+    /// Overpartitioning factor β: subproblems with ≥ β·n/t elements are
+    /// partitioned by all threads cooperatively (paper: β = 1).
+    pub beta: f64,
+    /// Base case size n₀ below which insertion sort is used (paper: 16).
+    pub base_case_size: usize,
+    /// Block size in *bytes*; the per-type block size in elements is
+    /// derived as `max(1, 2^(log₂(block_bytes) − ⌈log₂ s⌉))`
+    /// (paper: ≈2 KiB, b = max(1, 2^⌊11 − log₂ s⌋)).
+    pub block_bytes: usize,
+    /// Number of worker threads (1 = sequential IS⁴o).
+    pub threads: usize,
+    /// Enable equality buckets when duplicate splitters are detected
+    /// (§4.4/§4.7). On by default; the ablation bench turns it off.
+    pub equality_buckets: bool,
+    /// Expected bucket size targeted by the adaptive last-two-level
+    /// bucket count (paper example: ~32 elements on the final level).
+    pub single_level_threshold: usize,
+    /// Sort base-case buckets immediately during cleanup on the last
+    /// recursion level (§4.7 cache-friendliness optimization).
+    pub eager_base_case: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            max_buckets: 256,
+            alpha_factor: 0.2,
+            beta: 1.0,
+            base_case_size: 16,
+            block_bytes: 2048,
+            threads: 1,
+            equality_buckets: true,
+            single_level_threshold: 0, // derived: k * base_case_size
+            eager_base_case: true,
+        }
+    }
+}
+
+impl Config {
+    /// Builder-style thread override.
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    /// Builder-style bucket-count override (rounded to a power of two, ≥ 2).
+    pub fn with_max_buckets(mut self, k: usize) -> Self {
+        self.max_buckets = (1usize << log2_ceil(k.max(2))).max(2);
+        self
+    }
+
+    /// Builder-style block size override in bytes.
+    pub fn with_block_bytes(mut self, bytes: usize) -> Self {
+        self.block_bytes = bytes.max(1);
+        self
+    }
+
+    /// Builder-style base-case size override.
+    pub fn with_base_case(mut self, n0: usize) -> Self {
+        self.base_case_size = n0.max(1);
+        self
+    }
+
+    /// Builder-style equality-bucket toggle.
+    pub fn with_equality_buckets(mut self, on: bool) -> Self {
+        self.equality_buckets = on;
+        self
+    }
+
+    /// Block size in elements for an element type of size `elem_size`
+    /// bytes: the largest power of two such that the block is ≤
+    /// `block_bytes` (paper: b = max(1, 2^⌊11 − log₂ s⌋) for 2 KiB).
+    pub fn block_elems(&self, elem_size: usize) -> usize {
+        let log_bytes = log2_floor(self.block_bytes.max(1));
+        let log_elem = log2_ceil(elem_size.max(1));
+        if log_bytes > log_elem {
+            1usize << (log_bytes - log_elem)
+        } else {
+            1
+        }
+    }
+
+    /// Effective threshold below which a single partitioning step should
+    /// finish the job (drives the adaptive bucket count).
+    fn single_level(&self) -> usize {
+        if self.single_level_threshold > 0 {
+            self.single_level_threshold
+        } else {
+            self.max_buckets * self.base_case_size.max(1)
+        }
+    }
+
+    /// Adaptive number of buckets for a (sub)problem of size `n` (§4.7):
+    /// use the full `k` while more than two levels remain; on the last
+    /// two levels balance the two steps (e.g. two 64-way steps instead of
+    /// 256-way + tiny), keeping final buckets around `base_case_size`.
+    pub fn buckets_for(&self, n: usize) -> usize {
+        let k = self.max_buckets;
+        let single = self.single_level();
+        if n <= single {
+            // Last level: enough buckets to reach the base case directly.
+            let need = crate::util::div_ceil(n, self.base_case_size.max(1));
+            let b = 1usize << log2_ceil(need.max(2));
+            return b.min(k).max(2);
+        }
+        let two_level = single.saturating_mul(k);
+        if n <= two_level {
+            // Second-to-last level: split the remaining log evenly.
+            let need = crate::util::div_ceil(n, self.base_case_size.max(1));
+            let log_need = log2_ceil(need.max(4));
+            let half = (log_need + 1) / 2;
+            let b = 1usize << half.min(log2_floor(k));
+            return b.min(k).max(2);
+        }
+        k
+    }
+
+    /// Oversampling factor α for a (sub)problem of size `n`
+    /// (paper: 0.2·log₂ n, at least 1).
+    pub fn oversampling(&self, n: usize) -> usize {
+        let a = self.alpha_factor * (log2_floor(n.max(2)) as f64);
+        a.max(1.0) as usize
+    }
+
+    /// Sample size for a step with `k` buckets on `n` elements:
+    /// `α·k − 1`, capped at `n/2` so sampling stays cheap and in-place.
+    pub fn sample_size(&self, n: usize, k: usize) -> usize {
+        let s = self.oversampling(n) * k - 1;
+        s.min(n / 2).max(1)
+    }
+
+    /// Size threshold: parallel subproblems at least this large are
+    /// partitioned by all `t` threads cooperatively (paper: β·n/t).
+    pub fn parallel_task_min(&self, total_n: usize) -> usize {
+        ((self.beta * total_n as f64) / self.threads.max(1) as f64).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = Config::default();
+        assert_eq!(c.max_buckets, 256);
+        assert_eq!(c.base_case_size, 16);
+        assert_eq!(c.block_bytes, 2048);
+        assert!(c.equality_buckets);
+    }
+
+    #[test]
+    fn block_elems_matches_paper_formula() {
+        let c = Config::default();
+        // paper: b = max(1, 2^⌊11 − log₂ s⌋)
+        assert_eq!(c.block_elems(8), 256); // f64 → 2^8
+        assert_eq!(c.block_elems(16), 128); // Pair
+        assert_eq!(c.block_elems(32), 64); // Quartet
+        assert_eq!(c.block_elems(100), 16); // 100Bytes: ⌈log₂ 100⌉=7 → 2^4
+        assert_eq!(c.block_elems(4096), 1);
+    }
+
+    #[test]
+    fn buckets_adaptive_on_small_inputs() {
+        let c = Config::default();
+        // Tiny: few buckets, enough to reach base case.
+        assert_eq!(c.buckets_for(64), 4); // 64/16 = 4
+        assert_eq!(c.buckets_for(256), 16);
+        // Huge: full k.
+        assert_eq!(c.buckets_for(1 << 30), 256);
+        // In the two-level band (n = 2^16, need = 2^12): ~2^6 each level.
+        let k = c.buckets_for(1 << 16);
+        assert!(k >= 32 && k <= 256, "k = {k}");
+    }
+
+    #[test]
+    fn buckets_never_below_two_or_above_k() {
+        let c = Config::default();
+        for n in [17usize, 100, 1000, 12345, 1 << 20, 1 << 26] {
+            let k = c.buckets_for(n);
+            assert!(k >= 2 && k <= 256 && k.is_power_of_two(), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn oversampling_grows_with_n() {
+        let c = Config::default();
+        assert!(c.oversampling(1 << 10) <= c.oversampling(1 << 30));
+        assert!(c.oversampling(2) >= 1);
+    }
+
+    #[test]
+    fn sample_size_capped_for_tiny_inputs() {
+        let c = Config::default();
+        assert!(c.sample_size(20, 256) <= 10);
+        assert!(c.sample_size(20, 256) >= 1);
+    }
+
+    #[test]
+    fn parallel_task_min_beta() {
+        let c = Config::default().with_threads(8);
+        assert_eq!(c.parallel_task_min(8000), 1000);
+    }
+}

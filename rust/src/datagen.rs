@@ -1,0 +1,262 @@
+//! Workload generators — the nine input distributions of the paper's
+//! evaluation (§5) over the four benchmark data types.
+//!
+//! * `Uniform`, `Exponential`, `AlmostSorted` — from Shun et al. [28]
+//! * `RootDup` (`A[i] = i mod ⌊√n⌋`), `TwoDup` (`A[i] = i² + n/2 mod n`),
+//!   `EightDup` (`A[i] = i⁸ + n/2 mod n`) — from Edelkamp et al. [9]
+//! * `Sorted`, `ReverseSorted`, `Ones`
+
+use crate::util::{Bytes100, Pair, Quartet, Xoshiro256};
+
+/// The paper's input distributions.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Distribution {
+    Uniform,
+    Exponential,
+    AlmostSorted,
+    RootDup,
+    TwoDup,
+    EightDup,
+    Sorted,
+    ReverseSorted,
+    Ones,
+}
+
+impl Distribution {
+    /// All nine, in the paper's order.
+    pub const ALL: [Distribution; 9] = [
+        Distribution::Uniform,
+        Distribution::Exponential,
+        Distribution::AlmostSorted,
+        Distribution::RootDup,
+        Distribution::TwoDup,
+        Distribution::EightDup,
+        Distribution::Sorted,
+        Distribution::ReverseSorted,
+        Distribution::Ones,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "Uniform",
+            Distribution::Exponential => "Exponential",
+            Distribution::AlmostSorted => "AlmostSorted",
+            Distribution::RootDup => "RootDup",
+            Distribution::TwoDup => "TwoDup",
+            Distribution::EightDup => "EightDup",
+            Distribution::Sorted => "Sorted",
+            Distribution::ReverseSorted => "ReverseSorted",
+            Distribution::Ones => "Ones",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Distribution> {
+        Distribution::ALL
+            .iter()
+            .copied()
+            .find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Generate the raw `u64` key stream for distribution `d` of length `n`.
+/// All other element types derive their keys from this stream, so the
+/// *key ordering structure* is identical across data types (as in the
+/// paper, which reuses the distributions for Pair/Quartet/100Bytes).
+pub fn keys_u64(d: Distribution, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Xoshiro256::new(seed);
+    let nn = n as u64;
+    match d {
+        Distribution::Uniform => (0..n).map(|_| rng.next_u64()).collect(),
+        Distribution::Exponential => {
+            // Shun et al.: exponentially distributed keys. We generate
+            // ⌊−ln(u)·scale⌋ with the scale chosen so the range is ~n.
+            let scale = (n.max(2) as f64).ln();
+            (0..n)
+                .map(|_| {
+                    let u = rng.next_f64().max(1e-300);
+                    ((-u.ln()) * (nn as f64) / scale) as u64
+                })
+                .collect()
+        }
+        Distribution::AlmostSorted => {
+            // Sorted, then √n random transpositions (Shun et al.).
+            let mut v: Vec<u64> = (0..nn).collect();
+            let swaps = (n as f64).sqrt() as usize;
+            for _ in 0..swaps {
+                let i = rng.next_below(nn) as usize;
+                let j = rng.next_below(nn) as usize;
+                v.swap(i, j);
+            }
+            v
+        }
+        Distribution::RootDup => {
+            let r = (n as f64).sqrt() as u64;
+            let r = r.max(1);
+            (0..nn).map(|i| i % r).collect()
+        }
+        Distribution::TwoDup => (0..nn)
+            .map(|i| (i.wrapping_mul(i).wrapping_add(nn / 2)) % nn.max(1))
+            .collect(),
+        Distribution::EightDup => (0..nn)
+            .map(|i| {
+                let i2 = i.wrapping_mul(i);
+                let i4 = i2.wrapping_mul(i2);
+                let i8 = i4.wrapping_mul(i4);
+                (i8.wrapping_add(nn / 2)) % nn.max(1)
+            })
+            .collect(),
+        Distribution::Sorted => (0..nn).collect(),
+        Distribution::ReverseSorted => (0..nn).rev().collect(),
+        Distribution::Ones => vec![1; n],
+    }
+}
+
+/// f64 workload: keys cast to `f64` (the paper benchmarks 64-bit floats).
+/// Uniform uses the unit interval to mimic uniformly-random doubles.
+pub fn gen_f64(d: Distribution, n: usize, seed: u64) -> Vec<f64> {
+    match d {
+        Distribution::Uniform => {
+            let mut rng = Xoshiro256::new(seed);
+            (0..n).map(|_| rng.next_f64()).collect()
+        }
+        _ => keys_u64(d, n, seed).into_iter().map(|k| k as f64).collect(),
+    }
+}
+
+/// u64 workload (used by tests and the integer-key examples).
+pub fn gen_u64(d: Distribution, n: usize, seed: u64) -> Vec<u64> {
+    keys_u64(d, n, seed)
+}
+
+/// Pair workload: key from the distribution, payload = original index.
+pub fn gen_pair(d: Distribution, n: usize, seed: u64) -> Vec<Pair> {
+    keys_u64(d, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, k)| Pair::new(k as f64, i as f64))
+        .collect()
+}
+
+/// Quartet workload: the key stream split across three lexicographic keys.
+pub fn gen_quartet(d: Distribution, n: usize, seed: u64) -> Vec<Quartet> {
+    keys_u64(d, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, k)| {
+            Quartet::new(
+                (k >> 42) as f64,
+                ((k >> 21) & 0x1F_FFFF) as f64,
+                (k & 0x1F_FFFF) as f64,
+                i as f64,
+            )
+        })
+        .collect()
+}
+
+/// 100-byte records: 10-byte big-endian key from the distribution.
+pub fn gen_bytes100(d: Distribution, n: usize, seed: u64) -> Vec<Bytes100> {
+    keys_u64(d, n, seed)
+        .into_iter()
+        .map(Bytes100::from_u64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_distributions_have_right_length() {
+        for d in Distribution::ALL {
+            assert_eq!(keys_u64(d, 1000, 1).len(), 1000, "{}", d.name());
+            assert_eq!(keys_u64(d, 0, 1).len(), 0);
+            assert_eq!(keys_u64(d, 1, 1).len(), 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        for d in Distribution::ALL {
+            assert_eq!(keys_u64(d, 500, 42), keys_u64(d, 500, 42));
+        }
+        assert_ne!(
+            keys_u64(Distribution::Uniform, 500, 1),
+            keys_u64(Distribution::Uniform, 500, 2)
+        );
+    }
+
+    #[test]
+    fn sorted_is_sorted_reverse_is_reverse() {
+        let s = keys_u64(Distribution::Sorted, 100, 0);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        let r = keys_u64(Distribution::ReverseSorted, 100, 0);
+        assert!(r.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn ones_is_constant() {
+        assert!(keys_u64(Distribution::Ones, 64, 3).iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn rootdup_key_cardinality() {
+        let n = 10_000;
+        let mut v = keys_u64(Distribution::RootDup, n, 0);
+        v.sort_unstable();
+        v.dedup();
+        let r = (n as f64).sqrt() as usize;
+        assert!(v.len() <= r && v.len() >= r / 2, "got {} keys", v.len());
+    }
+
+    #[test]
+    fn twodup_matches_formula() {
+        let n = 1000u64;
+        let v = keys_u64(Distribution::TwoDup, n as usize, 9);
+        for (i, &x) in v.iter().enumerate().take(50) {
+            let i = i as u64;
+            assert_eq!(x, (i.wrapping_mul(i).wrapping_add(n / 2)) % n);
+        }
+    }
+
+    #[test]
+    fn almost_sorted_is_mostly_sorted() {
+        let n = 10_000;
+        let v = keys_u64(Distribution::AlmostSorted, n, 5);
+        let inversions_adjacent = v.windows(2).filter(|w| w[0] > w[1]).count();
+        // √n swaps disturb at most 2√n adjacent pairs.
+        assert!(inversions_adjacent <= 2 * (n as f64).sqrt() as usize + 2);
+        assert!(inversions_adjacent > 0, "should not be fully sorted");
+    }
+
+    #[test]
+    fn exponential_is_skewed() {
+        let v = keys_u64(Distribution::Exponential, 100_000, 11);
+        let max = *v.iter().max().unwrap();
+        let below_tenth = v.iter().filter(|&&x| x < max / 10).count();
+        // Exponential mass concentrates near zero.
+        assert!(below_tenth > v.len() / 3, "{below_tenth}");
+    }
+
+    #[test]
+    fn typed_generators_consistent_with_keys() {
+        let keys = keys_u64(Distribution::TwoDup, 256, 7);
+        let pairs = gen_pair(Distribution::TwoDup, 256, 7);
+        for (i, p) in pairs.iter().enumerate() {
+            assert_eq!(p.key, keys[i] as f64);
+            assert_eq!(p.value, i as f64);
+        }
+        let b = gen_bytes100(Distribution::TwoDup, 256, 7);
+        for (i, r) in b.iter().enumerate() {
+            assert_eq!(*r, Bytes100::from_u64(keys[i]));
+        }
+    }
+
+    #[test]
+    fn distribution_name_roundtrip() {
+        for d in Distribution::ALL {
+            assert_eq!(Distribution::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Distribution::from_name("uniform"), Some(Distribution::Uniform));
+        assert_eq!(Distribution::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,87 @@
+//! # IPS⁴o — In-place Parallel Super Scalar Samplesort
+//!
+//! A full reproduction of *"In-place Parallel Super Scalar Samplesort
+//! (IPS⁴o)"* by Axtmann, Witt, Ferizovic, and Sanders (2017), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: an in-place,
+//!   cache-efficient, branch-misprediction-free parallel samplesort, plus
+//!   every baseline from the paper's evaluation and the substrates they
+//!   need (data generators, parallel primitives, a PEM cache simulator,
+//!   metrics, a bench harness).
+//! * **Layer 2/1 (python, build time only)** — a JAX "distribution step"
+//!   model whose hot spot (branchless search-tree classification) is a
+//!   Pallas kernel, AOT-lowered to HLO text.
+//! * **Runtime** — [`runtime`] loads the AOT artifacts through PJRT (the
+//!   `xla` crate) so the Rust hot path can offload classification, the
+//!   way s³-sort computes its "oracle".
+//!
+//! ## Quickstart
+//!
+//! ```
+//! let mut v: Vec<u64> = (0..10_000).rev().collect();
+//! ips4o::sort(&mut v);
+//! assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//!
+//! let mut f: Vec<f64> = vec![3.0, 1.0, 2.0];
+//! ips4o::sort_by(&mut f, |a, b| a < b);
+//! ```
+//!
+//! Parallel sorting goes through [`sort_par`] / [`sort_par_by`], or
+//! through a reusable [`Sorter`] built from a [`config::Config`].
+
+pub mod base_case;
+pub mod baselines;
+pub mod classifier;
+pub mod cleanup;
+pub mod config;
+pub mod datagen;
+pub mod local_classification;
+pub mod metrics;
+pub mod parallel;
+pub mod pem;
+pub mod permutation;
+pub mod sampling;
+pub mod sequential;
+pub mod sorter;
+pub mod strictly_inplace;
+pub mod task_scheduler;
+pub mod util;
+
+pub mod bench_harness;
+pub mod runtime;
+
+pub use config::Config;
+pub use sorter::Sorter;
+
+/// Sort `v` in place, sequentially (IS⁴o), using the element's natural order.
+pub fn sort<T: util::Element + Ord>(v: &mut [T]) {
+    sort_by(v, |a, b| a < b)
+}
+
+/// Sort `v` in place, sequentially (IS⁴o), with an explicit `is_less`.
+pub fn sort_by<T, F>(v: &mut [T], is_less: F)
+where
+    T: util::Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    Sorter::new(Config::default()).sort_by(v, &is_less);
+}
+
+/// Sort `v` in place, in parallel (IPS⁴o), using the element's natural order
+/// and all available hardware threads.
+pub fn sort_par<T: util::Element + Ord>(v: &mut [T]) {
+    sort_par_by(v, |a, b| a < b)
+}
+
+/// Sort `v` in place, in parallel (IPS⁴o), with an explicit `is_less`.
+pub fn sort_par_by<T, F>(v: &mut [T], is_less: F)
+where
+    T: util::Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    Sorter::new(Config::default().with_threads(threads)).sort_by(v, &is_less);
+}

@@ -1,0 +1,324 @@
+//! Local classification (paper §4.1, Figures 1–2).
+//!
+//! Each thread owns `k` buffer blocks of `b` elements. It scans its
+//! stripe of the input, classifies every element branchlessly, and
+//! appends it to the matching buffer. A full buffer is flushed back into
+//! the *front* of the thread's own stripe — there is always room, because
+//! at least `b` more elements have been scanned than flushed (otherwise
+//! no buffer could be full). The stripe ends up as a run of full,
+//! bucket-homogeneous blocks followed by empty blocks; leftovers stay in
+//! the buffers for the cleanup phase.
+
+use crate::classifier::Classifier;
+use crate::parallel::SharedSlice;
+use crate::util::Element;
+
+/// Per-thread distribution buffers: `k` blocks of `b` elements, flat.
+pub struct LocalBuffers<T> {
+    data: Vec<T>,
+    fill: Vec<usize>,
+    block: usize,
+    num_buckets: usize,
+}
+
+impl<T: Element> LocalBuffers<T> {
+    /// Allocate buffers for up to `max_buckets` buckets of `block`
+    /// elements each.
+    pub fn new(max_buckets: usize, block: usize) -> Self {
+        LocalBuffers {
+            data: vec![T::default(); max_buckets * block],
+            fill: vec![0; max_buckets],
+            block,
+            num_buckets: max_buckets,
+        }
+    }
+
+    /// Prepare for a partitioning step with `num_buckets` buckets and
+    /// block size `block` (grows the backing store if needed).
+    pub fn reset(&mut self, num_buckets: usize, block: usize) {
+        if num_buckets * block > self.data.len() {
+            self.data.resize(num_buckets * block, T::default());
+        }
+        if num_buckets > self.fill.len() {
+            self.fill.resize(num_buckets, 0);
+        }
+        self.block = block;
+        self.num_buckets = num_buckets;
+        self.fill[..num_buckets].iter_mut().for_each(|f| *f = 0);
+    }
+
+    #[inline(always)]
+    pub fn block_elems(&self) -> usize {
+        self.block
+    }
+
+    #[inline(always)]
+    pub fn num_buckets(&self) -> usize {
+        self.num_buckets
+    }
+
+    /// Current fill of bucket `b`'s buffer.
+    #[inline(always)]
+    pub fn fill_of(&self, b: usize) -> usize {
+        self.fill[b]
+    }
+
+    /// The buffered (partial) contents of bucket `b`.
+    #[inline(always)]
+    pub fn bucket_slice(&self, b: usize) -> &[T] {
+        &self.data[b * self.block..b * self.block + self.fill[b]]
+    }
+
+    /// Append `e` to bucket `b`'s buffer; returns `true` if the buffer is
+    /// now full and must be flushed.
+    ///
+    /// # Safety
+    /// `b < num_buckets` and the bucket's fill `< block` (guaranteed by
+    /// the classify/flush loop: a full buffer is flushed before the next
+    /// push).
+    #[inline(always)]
+    unsafe fn push(&mut self, b: usize, e: T) -> bool {
+        let f = *self.fill.get_unchecked(b);
+        *self.data.get_unchecked_mut(b * self.block + f) = e;
+        *self.fill.get_unchecked_mut(b) = f + 1;
+        f + 1 == self.block
+    }
+
+    /// Raw pointer to bucket `b`'s buffer start (for flushing).
+    #[inline(always)]
+    fn bucket_ptr(&self, b: usize) -> *const T {
+        unsafe { self.data.as_ptr().add(b * self.block) }
+    }
+
+    /// Drop all buffered contents (after cleanup consumed them).
+    pub fn clear(&mut self) {
+        self.fill[..self.num_buckets].iter_mut().for_each(|f| *f = 0);
+    }
+}
+
+/// Outcome of classifying one stripe.
+#[derive(Clone, Debug)]
+pub struct StripeResult {
+    /// Elements classified into each bucket (within this stripe),
+    /// including the ones still sitting in the buffers.
+    pub counts: Vec<usize>,
+    /// Absolute element index one past the last flushed (full) block of
+    /// this stripe. Everything in `[flush_end, stripe_end)` is "empty"
+    /// (stale data, ignored from here on).
+    pub flush_end: usize,
+}
+
+/// Classify the stripe `[begin, end)` of `arr`, filling `bufs` and
+/// flushing full blocks to the stripe front.
+///
+/// # Safety contract
+/// The caller guarantees `[begin, end)` is owned exclusively by this
+/// thread for the duration of the call.
+pub fn classify_stripe<T, F>(
+    arr: &SharedSlice<T>,
+    begin: usize,
+    end: usize,
+    classifier: &Classifier<T>,
+    bufs: &mut LocalBuffers<T>,
+    is_less: &F,
+) -> StripeResult
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let nb = classifier.num_buckets();
+    debug_assert!(bufs.num_buckets() >= nb);
+    let b = bufs.block_elems();
+    let mut counts = vec![0usize; nb];
+    let mut write = begin;
+    let mut i = begin;
+
+    // SAFETY: all accesses below stay within [begin, end); flushes write
+    // to [write, write+b) where write + b ≤ scan position (see module
+    // docs), so reads (ahead) and writes (behind) never overlap. Elements
+    // are copied to the stack before classification, so no reference into
+    // the array is held across a flush.
+    unsafe {
+        // Main loop, 4-way unrolled classification. Elements are copied
+        // to the stack before classification (no live reference spans a
+        // flush).
+        while i + 4 <= end {
+            let p = arr.slice(i, i + 4).as_ptr();
+            let es: [T; 4] = [
+                std::ptr::read(p),
+                std::ptr::read(p.add(1)),
+                std::ptr::read(p.add(2)),
+                std::ptr::read(p.add(3)),
+            ];
+            let bks = classifier.classify4(&es, is_less);
+            for u in 0..4 {
+                let bk = bks[u];
+                *counts.get_unchecked_mut(bk) += 1;
+                if bufs.push(bk, es[u]) {
+                    debug_assert!(write + b <= i + u + 1);
+                    std::ptr::copy_nonoverlapping(
+                        bufs.bucket_ptr(bk),
+                        arr.slice_mut(write, write + b).as_mut_ptr(),
+                        b,
+                    );
+                    *bufs.fill.get_unchecked_mut(bk) = 0;
+                    write += b;
+                }
+            }
+            i += 4;
+        }
+        while i < end {
+            let e = std::ptr::read(arr.slice(i, i + 1).as_ptr());
+            let bk = classifier.classify(&e, is_less);
+            *counts.get_unchecked_mut(bk) += 1;
+            if bufs.push(bk, e) {
+                debug_assert!(write + b <= i + 1);
+                std::ptr::copy_nonoverlapping(
+                    bufs.bucket_ptr(bk),
+                    arr.slice_mut(write, write + b).as_mut_ptr(),
+                    b,
+                );
+                *bufs.fill.get_unchecked_mut(bk) = 0;
+                write += b;
+            }
+            i += 1;
+        }
+    }
+
+    StripeResult {
+        counts,
+        flush_end: write,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{multiset_fingerprint, Xoshiro256};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    fn run_stripe(
+        v: &mut Vec<u64>,
+        splitters: &[u64],
+        equality: bool,
+        block: usize,
+    ) -> (StripeResult, Classifier<u64>, LocalBuffers<u64>) {
+        let c = Classifier::new(splitters, equality, &lt);
+        let mut bufs = LocalBuffers::new(c.num_buckets(), block);
+        bufs.reset(c.num_buckets(), block);
+        let n = v.len();
+        let shared = SharedSlice::new(v.as_mut_slice());
+        let res = classify_stripe(&shared, 0, n, &c, &mut bufs, &lt);
+        (res, c, bufs)
+    }
+
+    #[test]
+    fn counts_are_exact_and_multiset_preserved() {
+        let mut rng = Xoshiro256::new(42);
+        let mut v: Vec<u64> = (0..10_000).map(|_| rng.next_below(1000)).collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let expected: Vec<usize> = {
+            let c = Classifier::new(&[250u64, 500, 750], false, &lt);
+            let mut e = vec![0usize; c.num_buckets()];
+            for x in &v {
+                e[c.classify(x, &lt)] += 1;
+            }
+            e
+        };
+        let (res, c, bufs) = run_stripe(&mut v, &[250, 500, 750], false, 64);
+        assert_eq!(res.counts, expected);
+        // Multiset of (flushed blocks + buffers) equals the original.
+        let mut all: Vec<u64> = v[..res.flush_end].to_vec();
+        for bk in 0..c.num_buckets() {
+            all.extend_from_slice(bufs.bucket_slice(bk));
+        }
+        assert_eq!(fp, multiset_fingerprint(&all, |x| *x));
+    }
+
+    #[test]
+    fn flushed_blocks_are_homogeneous() {
+        let mut rng = Xoshiro256::new(7);
+        let mut v: Vec<u64> = (0..5000).map(|_| rng.next_below(100)).collect();
+        let block = 32;
+        let (res, c, _bufs) = run_stripe(&mut v, &[25, 50, 75], false, block);
+        assert_eq!(res.flush_end % block, 0);
+        for blk in v[..res.flush_end].chunks(block) {
+            let b0 = c.classify(&blk[0], &lt);
+            for e in blk {
+                assert_eq!(c.classify(e, &lt), b0, "block mixes buckets");
+            }
+        }
+    }
+
+    #[test]
+    fn flush_end_matches_full_buffer_count() {
+        let mut rng = Xoshiro256::new(9);
+        let mut v: Vec<u64> = (0..4096).map(|_| rng.next_below(64)).collect();
+        let block = 16;
+        let (res, c, bufs) = run_stripe(&mut v, &[16, 32, 48], false, block);
+        let buffered: usize = (0..c.num_buckets()).map(|b| bufs.fill_of(b)).sum();
+        assert_eq!(res.flush_end + buffered, 4096);
+        assert!(bufs
+            .bucket_slice(0)
+            .iter()
+            .all(|e| c.classify(e, &lt) == 0));
+    }
+
+    #[test]
+    fn empty_and_tiny_stripes() {
+        let mut v: Vec<u64> = vec![];
+        let (res, ..) = run_stripe(&mut v, &[5], false, 8);
+        assert_eq!(res.flush_end, 0);
+        assert!(res.counts.iter().all(|&c| c == 0));
+
+        let mut v = vec![3u64, 9, 1];
+        let (res, _, bufs) = run_stripe(&mut v, &[5], false, 8);
+        assert_eq!(res.flush_end, 0); // nothing fills a block of 8
+        assert_eq!(res.counts, vec![2, 1]);
+        assert_eq!(bufs.bucket_slice(0), &[3, 1]);
+        assert_eq!(bufs.bucket_slice(1), &[9]);
+    }
+
+    #[test]
+    fn equality_buckets_capture_duplicates() {
+        let mut v: Vec<u64> = (0..1024).map(|i| if i % 2 == 0 { 7 } else { i }).collect();
+        let (res, c, _) = run_stripe(&mut v, &[7, 100], true, 16);
+        // bucket 1 is "== 7".
+        assert!(c.is_equality_bucket(1));
+        assert!(res.counts[1] >= 512);
+    }
+
+    #[test]
+    fn buffers_reset_reusable() {
+        let mut bufs = LocalBuffers::<u64>::new(8, 16);
+        bufs.reset(4, 16);
+        assert!(unsafe { bufs.push(2, 42) } == false);
+        assert_eq!(bufs.fill_of(2), 1);
+        bufs.reset(8, 8);
+        assert_eq!(bufs.fill_of(2), 0);
+        assert_eq!(bufs.block_elems(), 8);
+        // grow
+        bufs.reset(16, 32);
+        assert_eq!(bufs.num_buckets(), 16);
+        assert!(unsafe { bufs.push(15, 1) } == false);
+        assert_eq!(bufs.bucket_slice(15), &[1]);
+    }
+
+    #[test]
+    fn partial_stripe_with_odd_length() {
+        // Length not a multiple of 4 exercises the scalar tail.
+        let mut rng = Xoshiro256::new(13);
+        let mut v: Vec<u64> = (0..1003).map(|_| rng.next_below(50)).collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let (res, c, bufs) = run_stripe(&mut v, &[10, 20, 30, 40], false, 8);
+        let mut all: Vec<u64> = v[..res.flush_end].to_vec();
+        for bk in 0..c.num_buckets() {
+            all.extend_from_slice(bufs.bucket_slice(bk));
+        }
+        assert_eq!(fp, multiset_fingerprint(&all, |x| *x));
+        assert_eq!(res.counts.iter().sum::<usize>(), 1003);
+    }
+}

@@ -1,0 +1,267 @@
+//! `ips4o` CLI launcher — sorting driver, workload generator, self-test,
+//! and experiment runner. Hand-rolled argument parsing (clap is
+//! unavailable offline).
+
+use std::time::Instant;
+
+use ips4o::baselines::Algo;
+use ips4o::datagen::{self, Distribution};
+use ips4o::Config;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("sort") => cmd_sort(&args[1..]),
+        Some("selftest") => cmd_selftest(&args[1..]),
+        Some("iovolume") => cmd_iovolume(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        r#"ips4o — In-place Parallel Super Scalar Samplesort (paper reproduction)
+
+USAGE:
+    ips4o <COMMAND> [FLAGS]
+
+COMMANDS:
+    sort      generate a workload, sort it, verify, report throughput
+    selftest  run all algorithms over all distributions and verify
+    iovolume  reproduce Appendix B's I/O-volume comparison (PEM model)
+    info      print machine/config info
+    help      this message
+
+FLAGS (sort):
+    --algo <name>      IPS4o | IS4o | IS4o-strict | BlockQ | s3-sort |
+                       DualPivot | std-sort | MCSTLubq | MCSTLbq |
+                       MCSTLmwm | PBBS | TBB          [default: IPS4o]
+    --dist <name>      Uniform | Exponential | AlmostSorted | RootDup |
+                       TwoDup | EightDup | Sorted | ReverseSorted | Ones
+                                                      [default: Uniform]
+    --n <int>          number of elements (suffix k/m/g ok) [default: 1m]
+    --threads <int>    worker threads                  [default: all cores]
+    --type <name>      f64 | u64 | pair | quartet | bytes100 [default: f64]
+    --buckets <int>    max buckets k                   [default: 256]
+    --block <bytes>    block size in bytes             [default: 2048]
+    --seed <int>       workload seed                   [default: 42]
+    --no-eq            disable equality buckets
+"#
+    );
+}
+
+fn parse_flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn parse_n(s: &str) -> usize {
+    let s = s.to_ascii_lowercase();
+    let (digits, mult) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1usize << 10),
+        Some('m') => (&s[..s.len() - 1], 1usize << 20),
+        Some('g') => (&s[..s.len() - 1], 1usize << 30),
+        _ => (s.as_str(), 1),
+    };
+    digits.parse::<usize>().unwrap_or(1 << 20) * mult
+}
+
+fn build_config(args: &[String]) -> Config {
+    let threads = parse_flag(args, "--threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    let mut cfg = Config::default().with_threads(threads);
+    if let Some(k) = parse_flag(args, "--buckets").and_then(|s| s.parse().ok()) {
+        cfg = cfg.with_max_buckets(k);
+    }
+    if let Some(b) = parse_flag(args, "--block").and_then(|s| s.parse().ok()) {
+        cfg = cfg.with_block_bytes(b);
+    }
+    if args.iter().any(|a| a == "--no-eq") {
+        cfg = cfg.with_equality_buckets(false);
+    }
+    cfg
+}
+
+/// Run one algorithm over an already-generated keyset, generically over
+/// the element type; returns elapsed seconds.
+fn run_algo<T: ips4o::util::Element>(
+    algo: Algo,
+    v: &mut Vec<T>,
+    cfg: &Config,
+    is_less: impl Fn(&T, &T) -> bool + Sync,
+) -> f64 {
+    let t0 = Instant::now();
+    ips4o::bench_harness::run_algo(algo, v, cfg, &is_less);
+    t0.elapsed().as_secs_f64()
+}
+
+fn cmd_sort(args: &[String]) -> i32 {
+    let algo = Algo::from_name(parse_flag(args, "--algo").unwrap_or("IPS4o"))
+        .unwrap_or(Algo::Ips4o);
+    let dist = Distribution::from_name(parse_flag(args, "--dist").unwrap_or("Uniform"))
+        .unwrap_or(Distribution::Uniform);
+    let n = parse_n(parse_flag(args, "--n").unwrap_or("1m"));
+    let seed = parse_flag(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42u64);
+    let ty = parse_flag(args, "--type").unwrap_or("f64");
+    let cfg = build_config(args);
+
+    println!(
+        "# sort: algo={} dist={} n={} type={} threads={}",
+        algo.name(),
+        dist.name(),
+        n,
+        ty,
+        cfg.threads
+    );
+
+    let (secs, ok) = match ty {
+        "u64" => {
+            let mut v = datagen::gen_u64(dist, n, seed);
+            let s = run_algo(algo, &mut v, &cfg, |a, b| a < b);
+            (s, ips4o::util::is_sorted_by(&v, |a, b| a < b))
+        }
+        "pair" => {
+            let mut v = datagen::gen_pair(dist, n, seed);
+            let s = run_algo(algo, &mut v, &cfg, ips4o::util::Pair::less);
+            (s, ips4o::util::is_sorted_by(&v, ips4o::util::Pair::less))
+        }
+        "quartet" => {
+            let mut v = datagen::gen_quartet(dist, n, seed);
+            let s = run_algo(algo, &mut v, &cfg, ips4o::util::Quartet::less);
+            (s, ips4o::util::is_sorted_by(&v, ips4o::util::Quartet::less))
+        }
+        "bytes100" => {
+            let mut v = datagen::gen_bytes100(dist, n, seed);
+            let s = run_algo(algo, &mut v, &cfg, ips4o::util::Bytes100::less);
+            (s, ips4o::util::is_sorted_by(&v, ips4o::util::Bytes100::less))
+        }
+        _ => {
+            let mut v = datagen::gen_f64(dist, n, seed);
+            let s = run_algo(algo, &mut v, &cfg, |a, b| a < b);
+            (s, ips4o::util::is_sorted_by(&v, |a, b| a < b))
+        }
+    };
+
+    println!(
+        "time: {:.3}s | throughput: {:.2} M elem/s | verified: {}",
+        secs,
+        n as f64 / secs / 1e6,
+        if ok { "OK" } else { "FAILED" }
+    );
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_selftest(args: &[String]) -> i32 {
+    let n = parse_n(parse_flag(args, "--n").unwrap_or("200k"));
+    let cfg = build_config(args);
+    let mut failures = 0;
+    let algos = [
+        Algo::Is4o,
+        Algo::Is4oStrict,
+        Algo::Ips4o,
+        Algo::Introsort,
+        Algo::DualPivot,
+        Algo::BlockQ,
+        Algo::S3Sort,
+        Algo::ParQsortUnbalanced,
+        Algo::ParQsortBalanced,
+        Algo::ParMergesort,
+        Algo::PbbsSampleSort,
+        Algo::TbbLike,
+    ];
+    for algo in algos {
+        for dist in Distribution::ALL {
+            let mut v = datagen::gen_u64(dist, n, 42);
+            let fp = ips4o::util::multiset_fingerprint(&v, |x| *x);
+            let secs = run_algo(algo, &mut v, &cfg, |a, b| a < b);
+            let ok = ips4o::util::is_sorted_by(&v, |a, b| a < b)
+                && fp == ips4o::util::multiset_fingerprint(&v, |x| *x);
+            println!(
+                "{:12} {:14} n={} {:.3}s {}",
+                algo.name(),
+                dist.name(),
+                n,
+                secs,
+                if ok { "OK" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        println!("selftest: all OK");
+        0
+    } else {
+        println!("selftest: {failures} FAILURES");
+        1
+    }
+}
+
+fn cmd_iovolume(args: &[String]) -> i32 {
+    let n = parse_n(parse_flag(args, "--n").unwrap_or("1m")) as u64;
+    let k = parse_flag(args, "--buckets")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256usize);
+    let mut rng = ips4o::util::Xoshiro256::new(1);
+    let buckets: Vec<usize> = (0..n).map(|_| rng.next_below(k as u64) as usize).collect();
+
+    let mut c1 = ips4o::pem::CacheSim::new(1 << 20, 64);
+    let is4o = ips4o::pem::simulate_is4o_level(n, 8, k, 256, &mut c1, |i| buckets[i as usize]);
+    let mut c2 = ips4o::pem::CacheSim::new(1 << 20, 64);
+    let s3 = ips4o::pem::simulate_s3sort_level(n, 8, k, &mut c2, |i| buckets[i as usize], false);
+    let mut c3 = ips4o::pem::CacheSim::new(1 << 20, 64);
+    let s3nt = ips4o::pem::simulate_s3sort_level(n, 8, k, &mut c3, |i| buckets[i as usize], true);
+
+    println!("# Appendix B I/O volume (PEM simulator, n={n}, k={k}, 8-byte elements)");
+    println!("paper analytic:  IS4o = 48n bytes, s3-sort = 86n bytes");
+    println!("measured:        IS4o = {:.1}n bytes", is4o.bytes_per_elem());
+    println!("                 s3-sort = {:.1}n bytes", s3.bytes_per_elem());
+    println!(
+        "                 s3-sort (non-temporal stores) = {:.1}n bytes",
+        s3nt.bytes_per_elem()
+    );
+    println!(
+        "ratio s3/IS4o:   measured {:.2} (paper: {:.2})",
+        s3.bytes_per_elem() / is4o.bytes_per_elem(),
+        86.0 / 48.0
+    );
+    0
+}
+
+fn cmd_info() -> i32 {
+    ips4o::bench_harness::print_machine_info();
+    let cfg = Config::default();
+    println!(
+        "defaults: k={} alpha={} beta={} n0={} block={}B",
+        cfg.max_buckets, cfg.alpha_factor, cfg.beta, cfg.base_case_size, cfg.block_bytes
+    );
+    match ips4o::runtime::Engine::cpu() {
+        Ok(e) => println!("PJRT: {} available", e.platform()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    0
+}

@@ -1,0 +1,400 @@
+//! Parallel-execution substrate: a persistent fork-join [`ThreadPool`]
+//! (std-only — neither rayon nor crossbeam is available offline), plus
+//! the small parallel primitives IPS⁴o needs (barrier-synchronized SPMD
+//! regions, striped ranges, shared-slice pointer wrapper).
+//!
+//! The pool is deliberately simple: one SPMD "job" at a time, executed by
+//! `t` threads (the caller participates as thread 0), joined by a
+//! generation-counted barrier. Dispatch latency is a few microseconds,
+//! amortized over partition steps that move megabytes.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct PoolShared {
+    job: Mutex<Option<(u64, Job)>>, // (generation, job)
+    job_cv: Condvar,
+    done: Mutex<(u64, usize)>, // (generation, finished count)
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    /// Set when a worker's job panicked; `run` re-panics on the caller.
+    panicked: AtomicBool,
+}
+
+/// A persistent SPMD thread pool of `t` logical threads (`t − 1` workers
+/// plus the calling thread).
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+    generation: std::cell::Cell<u64>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` logical threads (min 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            job: Mutex::new(None),
+            job_cv: Condvar::new(),
+            done: Mutex::new((0, 0)),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        for tid in 1..threads {
+            let sh = Arc::clone(&shared);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ips4o-worker-{tid}"))
+                    .spawn(move || worker_loop(sh, tid))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            shared,
+            workers,
+            threads,
+            generation: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Number of logical threads (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(tid)` on every thread `tid ∈ 0..threads` and wait for all
+    /// of them. `f` may borrow local state: the call does not return
+    /// until every thread is done, so the borrow is safe even though the
+    /// closure is smuggled past `'static` internally.
+    pub fn run<F>(&self, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        let generation = self.generation.get() + 1;
+        self.generation.set(generation);
+
+        // SAFETY: we erase the lifetime of `f` to hand it to the workers,
+        // but we block below until every worker has finished running it,
+        // so no reference outlives this call.
+        let job: Arc<dyn Fn(usize) + Send + Sync> = Arc::new(f);
+        let job: Job = unsafe { std::mem::transmute(job) };
+
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            *slot = Some((generation, Arc::clone(&job)));
+            self.shared.job_cv.notify_all();
+        }
+
+        // Participate as thread 0 (catching panics so the workers can
+        // still be joined for this generation).
+        let main_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(0)));
+
+        // Wait for the other t−1 threads.
+        let mut done = self.shared.done.lock().unwrap();
+        while !(done.0 == generation && done.1 == self.threads - 1) {
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+        // Clear the job so workers park again.
+        let mut slot = self.shared.job.lock().unwrap();
+        *slot = None;
+        drop(slot);
+        drop(done);
+        // Drop our clone last; workers already dropped theirs.
+        drop(job);
+
+        if let Err(p) = main_result {
+            std::panic::resume_unwind(p);
+        }
+        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("a pool worker panicked during the SPMD region");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.job_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, tid: usize) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                match &*slot {
+                    Some((generation, job)) if *generation > last_gen => {
+                        last_gen = *generation;
+                        break Arc::clone(job);
+                    }
+                    _ => slot = shared.job_cv.wait(slot).unwrap(),
+                }
+            }
+        };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(tid))).is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        drop(job);
+        let mut done = shared.done.lock().unwrap();
+        if done.0 != last_gen {
+            *done = (last_gen, 0);
+        }
+        done.1 += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared mutable slice — the standard raw-pointer escape hatch for SPMD
+// code where threads write disjoint regions of one slice.
+// ---------------------------------------------------------------------------
+
+/// A `Send + Sync` raw view of a mutable slice. Threads must coordinate
+/// (disjoint ranges or atomics) — exactly what the IPS⁴o phases do.
+pub struct SharedSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub fn new(v: &mut [T]) -> Self {
+        SharedSlice {
+            ptr: v.as_mut_ptr(),
+            len: v.len(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow a sub-range as a mutable slice.
+    ///
+    /// # Safety
+    /// The caller must guarantee the range is not aliased by any other
+    /// concurrent access.
+    #[inline(always)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+
+    /// Reborrow a sub-range as a shared slice.
+    ///
+    /// # Safety
+    /// No concurrent mutation of the range is allowed.
+    #[inline(always)]
+    pub unsafe fn slice(&self, start: usize, end: usize) -> &[T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), end - start)
+    }
+}
+
+/// Per-thread mutable slots addressable from SPMD closures. Each logical
+/// thread `tid` may take a mutable reference to *its own* slot; reading
+/// other threads' slots is allowed only across barriers.
+pub struct PerThread<T> {
+    items: Vec<std::cell::UnsafeCell<T>>,
+}
+
+unsafe impl<T: Send> Sync for PerThread<T> {}
+
+impl<T> PerThread<T> {
+    pub fn new(items: Vec<T>) -> Self {
+        PerThread {
+            items: items.into_iter().map(std::cell::UnsafeCell::new).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Mutable access to slot `tid`.
+    ///
+    /// # Safety
+    /// Only thread `tid` may call this while the SPMD region runs, and it
+    /// must not also hold a shared reference from [`PerThread::get`].
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, tid: usize) -> &mut T {
+        &mut *self.items[tid].get()
+    }
+
+    /// Shared access to slot `tid`.
+    ///
+    /// # Safety
+    /// No thread may mutate slot `tid` concurrently (use across barriers).
+    pub unsafe fn get(&self, tid: usize) -> &T {
+        &*self.items[tid].get()
+    }
+
+    /// Consume, returning the inner values.
+    pub fn into_inner(self) -> Vec<T> {
+        self.items
+            .into_iter()
+            .map(|c| c.into_inner())
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Range striping + a dynamic index dispenser
+// ---------------------------------------------------------------------------
+
+/// Split `n` items into `t` contiguous stripes, each a multiple of
+/// `granularity` (except the last). Returns the stripe boundaries
+/// (length `t + 1`).
+pub fn stripes(n: usize, t: usize, granularity: usize) -> Vec<usize> {
+    let g = granularity.max(1);
+    let units = crate::util::div_ceil(n, g);
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0);
+    for i in 1..t {
+        let u = (units * i) / t;
+        bounds.push((u * g).min(n));
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// Atomic work dispenser for dynamic load balancing (used by small-task
+/// distribution).
+pub struct IndexDispenser {
+    next: AtomicUsize,
+    end: usize,
+}
+
+impl IndexDispenser {
+    pub fn new(end: usize) -> Self {
+        IndexDispenser {
+            next: AtomicUsize::new(0),
+            end,
+        }
+    }
+
+    /// Claim the next index, or `None` when exhausted.
+    #[inline]
+    pub fn next(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.end {
+            Some(i)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_threads() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        pool.run(|tid| {
+            hits.fetch_add(1 << (8 * tid), Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0x01010101);
+    }
+
+    #[test]
+    fn pool_sequential_degenerates_gracefully() {
+        let pool = ThreadPool::new(1);
+        let mut x = 0u64;
+        let cell = std::sync::Mutex::new(&mut x);
+        pool.run(|tid| {
+            assert_eq!(tid, 0);
+            **cell.lock().unwrap() += 1;
+        });
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn pool_reusable_many_times() {
+        let pool = ThreadPool::new(3);
+        let counter = AtomicU64::new(0);
+        for _ in 0..100 {
+            pool.run(|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 300);
+    }
+
+    #[test]
+    fn pool_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 4];
+        let shared = SharedSlice::new(&mut data);
+        pool.run(|tid| unsafe {
+            shared.slice_mut(tid, tid + 1)[0] = tid as u64 + 1;
+        });
+        assert_eq!(data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stripes_cover_and_align() {
+        let b = stripes(1000, 4, 16);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&1000));
+        for w in b.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for &x in &b[1..b.len() - 1] {
+            assert_eq!(x % 16, 0, "interior boundary not block-aligned");
+        }
+    }
+
+    #[test]
+    fn stripes_degenerate_cases() {
+        assert_eq!(stripes(0, 4, 16), vec![0, 0, 0, 0, 0]);
+        assert_eq!(stripes(10, 1, 4), vec![0, 10]);
+        let b = stripes(7, 3, 16); // fewer units than threads
+        assert_eq!(b.last(), Some(&7));
+    }
+
+    #[test]
+    fn dispenser_hands_out_each_index_once() {
+        let d = IndexDispenser::new(1000);
+        let pool = ThreadPool::new(4);
+        let seen = (0..1000).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        pool.run(|_| {
+            while let Some(i) = d.next() {
+                seen[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(seen.iter().all(|s| s.load(Ordering::SeqCst) == 1));
+    }
+}

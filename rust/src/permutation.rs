@@ -1,0 +1,679 @@
+//! Block permutation (paper §4.2, Figures 3–4, Appendix A).
+//!
+//! After local classification the array is a sequence of full,
+//! bucket-homogeneous blocks (plus empty blocks at each stripe's end).
+//! This phase permutes the *blocks* into bucket order:
+//!
+//! * bucket delimiters `d_i` = element prefix sums rounded **up** to the
+//!   next block boundary;
+//! * per bucket, a packed atomic `(w_i, r_i)` pointer pair maintains the
+//!   invariant of Fig. 3 (correct blocks < `w_i`; unprocessed in
+//!   `[w_i, r_i]`; empty from `max(w_i, r_i+1)`);
+//! * each thread cycles blocks through two swap buffers (Fig. 4),
+//!   acquiring work from its *primary bucket* and chasing each block to
+//!   its destination;
+//! * writes that would spill past the end of the array (the final
+//!   partial block) go to a single shared overflow block;
+//! * blocks already in their destination bucket are skipped (classify
+//!   before copy).
+//!
+//! The parallel invariant-establishment step (moving empty blocks to
+//! bucket ends across stripe boundaries) implements Appendix A.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::classifier::Classifier;
+use crate::parallel::SharedSlice;
+use crate::util::{div_ceil, BucketPointers, Element};
+
+/// Geometry of one partitioning step, shared by permutation and cleanup.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Block size in elements.
+    pub block: usize,
+    /// Total elements of this (sub)problem.
+    pub n: usize,
+    /// Number of blocks, `⌈n/b⌉` (the last one may be partial).
+    pub num_blocks: usize,
+    /// Element offset of each bucket start; length `num_buckets + 1`,
+    /// `bucket_starts[num_buckets] == n`. Relative to the subproblem.
+    pub bucket_starts: Vec<usize>,
+    /// Block-rounded delimiters `d_i = ⌈bucket_starts[i] / b⌉`;
+    /// length `num_buckets + 1`.
+    pub d: Vec<i32>,
+}
+
+impl Plan {
+    /// Build the plan from per-bucket element counts.
+    pub fn new(counts: &[usize], n: usize, block: usize) -> Plan {
+        let mut bucket_starts = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0usize;
+        bucket_starts.push(0);
+        for &c in counts {
+            acc += c;
+            bucket_starts.push(acc);
+        }
+        debug_assert_eq!(acc, n, "bucket counts must sum to n");
+        let d = bucket_starts
+            .iter()
+            .map(|&s| div_ceil(s, block) as i32)
+            .collect();
+        Plan {
+            block,
+            n,
+            num_blocks: div_ceil(n, block),
+            bucket_starts,
+            d,
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.bucket_starts.len() - 1
+    }
+}
+
+/// The shared overflow block (§4.2): used instead of writing to the final
+/// (partial) block of the array. At most one thread ever claims it per
+/// partitioning step.
+pub struct Overflow<T> {
+    used: AtomicBool,
+    bucket: AtomicUsize,
+    data: UnsafeCell<Vec<T>>,
+}
+
+unsafe impl<T: Send> Sync for Overflow<T> {}
+
+impl<T: Element> Overflow<T> {
+    pub fn new(block: usize) -> Self {
+        Overflow {
+            used: AtomicBool::new(false),
+            bucket: AtomicUsize::new(usize::MAX),
+            data: UnsafeCell::new(vec![T::default(); block]),
+        }
+    }
+
+    pub fn reset(&self, block: usize) {
+        self.used.store(false, Ordering::Relaxed);
+        self.bucket.store(usize::MAX, Ordering::Relaxed);
+        // SAFETY: reset is called while no thread is using the overflow.
+        let data = unsafe { &mut *self.data.get() };
+        if data.len() < block {
+            data.resize(block, T::default());
+        }
+    }
+
+    /// Store a block destined for bucket `bk`.
+    ///
+    /// # Safety
+    /// Only one thread may ever call this per partitioning step (the one
+    /// that writes the final partial block) — guaranteed by the pointer
+    /// protocol.
+    pub unsafe fn store(&self, bk: usize, src: &[T]) {
+        let data = &mut *self.data.get();
+        data[..src.len()].copy_from_slice(src);
+        self.bucket.store(bk, Ordering::Release);
+        self.used.store(true, Ordering::Release);
+    }
+
+    /// The bucket whose block overflowed, if any.
+    pub fn bucket(&self) -> Option<usize> {
+        if self.used.load(Ordering::Acquire) {
+            Some(self.bucket.load(Ordering::Acquire))
+        } else {
+            None
+        }
+    }
+
+    /// The overflowed block contents (valid once `bucket()` is `Some`).
+    ///
+    /// # Safety
+    /// Must not race with `store`/`reset` (cleanup runs after permutation).
+    pub unsafe fn contents(&self, block: usize) -> &[T] {
+        let data: &Vec<T> = &*self.data.get();
+        &data[..block]
+    }
+}
+
+/// Per-stripe classification geometry in *block* units, relative to the
+/// subproblem: stripe `s` covers blocks `[begin[s], begin[s+1])` and its
+/// full blocks are `[begin[s], flush[s])`.
+#[derive(Clone, Debug)]
+pub struct StripeBlocks {
+    pub begin: Vec<i32>, // length t+1
+    pub flush: Vec<i32>, // length t
+}
+
+impl StripeBlocks {
+    /// Number of full (unprocessed) blocks in bucket range `[lo, hi)`.
+    fn fulls_in(&self, lo: i32, hi: i32) -> i32 {
+        let mut total = 0;
+        for s in 0..self.flush.len() {
+            let fs = self.begin[s].max(lo);
+            let fe = self.flush[s].min(hi);
+            total += (fe - fs).max(0);
+        }
+        total
+    }
+
+    /// Iterate the *source* full blocks of bucket `[lo, hi)` located at
+    /// block positions `≥ cut`, in descending position order, calling
+    /// `f(pos)`; stops when `f` returns `false`.
+    fn for_fulls_desc(&self, lo: i32, hi: i32, cut: i32, mut f: impl FnMut(i32) -> bool) {
+        for s in (0..self.flush.len()).rev() {
+            let fs = self.begin[s].max(lo).max(cut);
+            let fe = self.flush[s].min(hi);
+            let mut p = fe - 1;
+            while p >= fs {
+                if !f(p) {
+                    return;
+                }
+                p -= 1;
+            }
+        }
+    }
+}
+
+/// Compute per-bucket full-block counts `F_i` and initialize the pointer
+/// array: `w_i = d_i`, `r_i = d_i + F_i − 1`.
+pub fn init_pointers(plan: &Plan, stripes: &StripeBlocks, pointers: &[BucketPointers]) {
+    for i in 0..plan.num_buckets() {
+        let lo = plan.d[i];
+        let hi = plan.d[i + 1];
+        let f = stripes.fulls_in(lo, hi);
+        pointers[i].set(lo, lo + f - 1);
+    }
+}
+
+/// Appendix A: establish the permutation invariant by compacting each
+/// bucket's full blocks to the front of its block range. Thread `tid`
+/// fills the empty slots *of its own stripe* inside the bucket that
+/// crosses its stripe's end, taking full blocks from the bucket's tail
+/// (skipping those consumed by earlier stripes).
+///
+/// Returns without doing anything for buckets entirely inside one stripe
+/// — classification already leaves those compacted.
+pub fn move_empty_blocks<T: Element>(
+    arr: &SharedSlice<T>,
+    plan: &Plan,
+    stripes: &StripeBlocks,
+    tid: usize,
+) {
+    let b = plan.block;
+    let se = stripes.begin[tid + 1];
+    // The bucket that starts before the end of this stripe and ends after
+    // it. (d is sorted; find i with d[i] < se < d[i+1].)
+    let bk = match plan.d.partition_point(|&x| x < se) {
+        0 => return,
+        p => p - 1,
+    };
+    // plan.d[bk] ≤ se − 1 < se; need d[bk+1] > se to cross.
+    if bk >= plan.num_buckets() || plan.d[bk + 1] <= se {
+        return;
+    }
+    // Several buckets may *start* in this stripe, but only the last one
+    // can cross its end; `bk` is that one by construction.
+    let lo = plan.d[bk];
+    let hi = plan.d[bk + 1];
+    let fulls = stripes.fulls_in(lo, hi);
+    let cut = lo + fulls; // final boundary: fulls occupy [lo, cut)
+
+    // Destinations: empty slots of *this* stripe inside [lo, cut).
+    let dst_lo = stripes.flush[tid].max(lo);
+    let dst_hi = se.min(cut);
+    if dst_lo >= dst_hi {
+        return;
+    }
+
+    // Skip the destinations of earlier stripes within this bucket.
+    let mut skip = 0i32;
+    for s in 0..tid {
+        let e_lo = stripes.flush[s].max(lo);
+        let e_hi = stripes.begin[s + 1].min(cut);
+        skip += (e_hi - e_lo).max(0);
+    }
+
+    // Pair our destinations (ascending) with tail sources (descending),
+    // skipping `skip` sources.
+    let mut dsts = dst_lo..dst_hi;
+    stripes.for_fulls_desc(lo, hi, cut, |src| {
+        if skip > 0 {
+            skip -= 1;
+            return true;
+        }
+        match dsts.next() {
+            Some(dst) => {
+                debug_assert!(src >= cut && dst < cut);
+                // SAFETY: src/dst block ranges are disjoint (src ≥ cut >
+                // dst) and each (src, dst) pair is claimed by exactly one
+                // thread (deterministic skip arithmetic).
+                unsafe {
+                    let src_s = arr.slice(src as usize * b, (src as usize + 1) * b);
+                    let dst_s = arr.slice_mut(dst as usize * b, (dst as usize + 1) * b);
+                    std::ptr::copy_nonoverlapping(src_s.as_ptr(), dst_s.as_mut_ptr(), b);
+                }
+                true
+            }
+            None => false,
+        }
+    });
+}
+
+/// The block permutation main loop for one thread (§4.2, Fig. 4).
+///
+/// `swap` must hold 2·b elements of scratch. `offset` is the element
+/// offset of the subproblem inside the underlying array (all plan/pointer
+/// indices are subproblem-relative; `arr` spans the subproblem only).
+pub fn permute_blocks<T, F>(
+    arr: &SharedSlice<T>,
+    plan: &Plan,
+    pointers: &[BucketPointers],
+    classifier: &Classifier<T>,
+    overflow: &Overflow<T>,
+    swap: &mut [T],
+    tid: usize,
+    threads: usize,
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let b = plan.block;
+    let nb = plan.num_buckets();
+    let n = plan.n;
+    debug_assert!(swap.len() >= 2 * b);
+    let (mut buf_a, mut buf_b) = swap.split_at_mut(b);
+    let mut primary = nb * tid / threads.max(1);
+
+    // SAFETY invariants for all raw accesses below: the pointer protocol
+    // guarantees exclusive ownership of the block being read/written (see
+    // module docs and the paper's §4.2 race discussion).
+    'outer: loop {
+        // Acquire an unprocessed block from the primary bucket (cycling).
+        let mut have = false;
+        for _ in 0..nb {
+            loop {
+                let (w, r) = pointers[primary].load();
+                if r < w {
+                    break; // exhausted; try next bucket
+                }
+                let (w2, r2) = pointers[primary].fetch_dec_read(1);
+                if r2 < w2 {
+                    // Lost the race; undo and move on.
+                    pointers[primary].finish_read();
+                    break;
+                }
+                // We own block r2.
+                unsafe {
+                    let src = arr.slice(r2 as usize * b, (r2 as usize + 1) * b);
+                    buf_a.copy_from_slice(src);
+                }
+                pointers[primary].finish_read();
+                have = true;
+                break;
+            }
+            if have {
+                break;
+            }
+            primary = (primary + 1) % nb;
+        }
+        if !have {
+            break 'outer; // full cycle, no unprocessed blocks anywhere
+        }
+
+        // Chase the block in buf_a to its destination.
+        let mut dest = classifier.classify(&buf_a[0], is_less);
+        loop {
+            let (w, r) = pointers[dest].fetch_inc_write(1);
+            if w <= r {
+                // w points at an unprocessed block of `dest`.
+                let wb = w as usize * b;
+                let db = unsafe {
+                    classifier.classify(&arr.slice(wb, wb + 1)[0], is_less)
+                };
+                if db == dest {
+                    // Block already in place — skip it (w advanced).
+                    continue;
+                }
+                unsafe {
+                    let slot = arr.slice_mut(wb, wb + b);
+                    buf_b.copy_from_slice(slot);
+                    slot.copy_from_slice(buf_a);
+                }
+                std::mem::swap(&mut buf_a, &mut buf_b);
+                dest = db;
+            } else {
+                // w is an empty slot. Wait out any in-flight reads on this
+                // bucket (the crossing point happens at most once per
+                // bucket, §4.2), then write.
+                while pointers[dest].has_pending_reads() {
+                    std::hint::spin_loop();
+                }
+                let wb = w as usize * b;
+                if wb + b > n {
+                    // Final partial block → overflow buffer.
+                    unsafe { overflow.store(dest, buf_a) };
+                } else {
+                    unsafe {
+                        arr.slice_mut(wb, wb + b).copy_from_slice(buf_a);
+                    }
+                }
+                continue 'outer;
+            }
+        }
+    }
+}
+
+/// Sequential block permutation — same protocol without atomics
+/// (paper §4.7: "In the sequential case, we avoid the use of atomic
+/// operations on pointers").
+pub fn permute_blocks_seq<T, F>(
+    arr: &mut [T],
+    plan: &Plan,
+    w: &mut [i32],
+    r: &mut [i32],
+    classifier: &Classifier<T>,
+    overflow: &Overflow<T>,
+    swap: &mut [T],
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let b = plan.block;
+    let nb = plan.num_buckets();
+    let n = plan.n;
+    let (mut buf_a, mut buf_b) = swap.split_at_mut(b);
+    let mut primary = 0usize;
+
+    'outer: loop {
+        let mut have = false;
+        for _ in 0..nb {
+            if r[primary] >= w[primary] {
+                let src = r[primary] as usize * b;
+                buf_a.copy_from_slice(&arr[src..src + b]);
+                r[primary] -= 1;
+                have = true;
+                break;
+            }
+            primary = (primary + 1) % nb;
+        }
+        if !have {
+            break 'outer;
+        }
+
+        let mut dest = classifier.classify(&buf_a[0], is_less);
+        loop {
+            let wd = w[dest];
+            if wd <= r[dest] {
+                w[dest] += 1;
+                let wb = wd as usize * b;
+                let db = classifier.classify(&arr[wb], is_less);
+                if db == dest {
+                    continue; // skip correctly-placed block
+                }
+                // Displace the occupant into the spare buffer, place the
+                // carried block, then *swap buffer roles* (no third copy).
+                buf_b.copy_from_slice(&arr[wb..wb + b]);
+                arr[wb..wb + b].copy_from_slice(buf_a);
+                std::mem::swap(&mut buf_a, &mut buf_b);
+                dest = db;
+            } else {
+                w[dest] += 1;
+                let wb = wd as usize * b;
+                if wb + b > n {
+                    // SAFETY: single-threaded — trivially exclusive.
+                    unsafe { overflow.store(dest, buf_a) };
+                } else {
+                    arr[wb..wb + b].copy_from_slice(buf_a);
+                }
+                continue 'outer;
+            }
+        }
+    }
+}
+
+/// Read back the final write pointers after (parallel) permutation.
+pub fn final_writes(pointers: &[BucketPointers], nb: usize) -> Vec<i32> {
+    (0..nb).map(|i| pointers[i].load().0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::local_classification::{classify_stripe, LocalBuffers};
+    use crate::util::Xoshiro256;
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    /// Classify + permute sequentially; return (plan, final w, classifier,
+    /// buffers, overflow) for invariant checks.
+    fn classify_and_permute(
+        v: &mut Vec<u64>,
+        splitters: &[u64],
+        block: usize,
+    ) -> (Plan, Vec<i32>, Classifier<u64>, LocalBuffers<u64>, Overflow<u64>) {
+        let c = Classifier::new(splitters, false, &lt);
+        let mut bufs = LocalBuffers::new(c.num_buckets(), block);
+        bufs.reset(c.num_buckets(), block);
+        let n = v.len();
+        let res = {
+            let shared = SharedSlice::new(v.as_mut_slice());
+            classify_stripe(&shared, 0, n, &c, &mut bufs, &lt)
+        };
+        let plan = Plan::new(&res.counts, n, block);
+        let stripes = StripeBlocks {
+            begin: vec![0, plan.num_blocks as i32],
+            flush: vec![(res.flush_end / block) as i32],
+        };
+        let mut w = vec![0i32; plan.num_buckets()];
+        let mut r = vec![0i32; plan.num_buckets()];
+        for i in 0..plan.num_buckets() {
+            let f = stripes.fulls_in(plan.d[i], plan.d[i + 1]);
+            w[i] = plan.d[i];
+            r[i] = plan.d[i] + f - 1;
+        }
+        let overflow = Overflow::new(block);
+        overflow.reset(block);
+        let mut swap = vec![0u64; 2 * block];
+        permute_blocks_seq(v, &plan, &mut w, &mut r, &c, &overflow, &mut swap, &lt);
+        (plan, w, c, bufs, overflow)
+    }
+
+    /// Invariant: every full block in [d_i, w_i) contains only bucket-i
+    /// elements.
+    fn check_blocks_in_place(
+        v: &[u64],
+        plan: &Plan,
+        w: &[i32],
+        c: &Classifier<u64>,
+        overflow: &Overflow<u64>,
+    ) {
+        let b = plan.block;
+        for i in 0..plan.num_buckets() {
+            let mut hi = w[i];
+            if overflow.bucket() == Some(i) {
+                hi -= 1; // last block lives in the overflow buffer
+            }
+            for blk in plan.d[i]..hi {
+                let s = blk as usize * b;
+                for e in &v[s..s + b] {
+                    assert_eq!(c.classify(e, &lt), i, "block {blk} has foreign element");
+                }
+            }
+        }
+        if let Some(bk) = overflow.bucket() {
+            let contents = unsafe { overflow.contents(b) };
+            for e in contents {
+                assert_eq!(c.classify(e, &lt), bk);
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_permutation_uniform() {
+        let mut rng = Xoshiro256::new(21);
+        let mut v: Vec<u64> = (0..4096).map(|_| rng.next_below(1000)).collect();
+        let (plan, w, c, _, ovf) = classify_and_permute(&mut v, &[250, 500, 750], 64);
+        check_blocks_in_place(&v, &plan, &w, &c, &ovf);
+    }
+
+    #[test]
+    fn sequential_permutation_with_partial_last_block() {
+        let mut rng = Xoshiro256::new(22);
+        // n not a multiple of block → exercises the overflow path.
+        let mut v: Vec<u64> = (0..4097).map(|_| rng.next_below(1000)).collect();
+        let (plan, w, c, _, ovf) = classify_and_permute(&mut v, &[250, 500, 750], 64);
+        check_blocks_in_place(&v, &plan, &w, &c, &ovf);
+    }
+
+    #[test]
+    fn skewed_buckets_permute_correctly() {
+        let mut rng = Xoshiro256::new(23);
+        // 90% of elements in one bucket.
+        let mut v: Vec<u64> = (0..2048)
+            .map(|_| {
+                if rng.next_below(10) < 9 {
+                    rng.next_below(100)
+                } else {
+                    100 + rng.next_below(900)
+                }
+            })
+            .collect();
+        let (plan, w, c, _, ovf) = classify_and_permute(&mut v, &[100, 500], 32);
+        check_blocks_in_place(&v, &plan, &w, &c, &ovf);
+    }
+
+    #[test]
+    fn presorted_input_moves_few_blocks() {
+        // All blocks already in place — the skip optimization must leave
+        // the array identical.
+        let mut v: Vec<u64> = (0..1024).collect();
+        let before = v.clone();
+        let (plan, w, c, _, ovf) = classify_and_permute(&mut v, &[256, 512, 768], 16);
+        check_blocks_in_place(&v, &plan, &w, &c, &ovf);
+        assert_eq!(v, before, "sorted input must not be disturbed");
+    }
+
+    #[test]
+    fn plan_delimiters_round_up() {
+        let plan = Plan::new(&[10, 20, 2], 32, 8);
+        assert_eq!(plan.bucket_starts, vec![0, 10, 30, 32]);
+        assert_eq!(plan.d, vec![0, 2, 4, 4]);
+        assert_eq!(plan.num_blocks, 4);
+    }
+
+    #[test]
+    fn stripe_fulls_accounting() {
+        let s = StripeBlocks {
+            begin: vec![0, 4, 8],
+            flush: vec![3, 6],
+        };
+        // Stripe 0: fulls [0,3). Stripe 1: fulls [4,6).
+        assert_eq!(s.fulls_in(0, 8), 5);
+        assert_eq!(s.fulls_in(2, 5), 2); // block 2 + block 4
+        assert_eq!(s.fulls_in(6, 8), 0);
+        let mut seen = vec![];
+        s.for_fulls_desc(0, 8, 2, |p| {
+            seen.push(p);
+            true
+        });
+        assert_eq!(seen, vec![5, 4, 2]);
+    }
+
+    #[test]
+    fn move_empty_blocks_compacts_across_stripes() {
+        // Two stripes, one bucket spanning both; stripe 0 has empties.
+        let block = 4usize;
+        // Layout in blocks: stripe0 = [F F E E], stripe1 = [F F F E].
+        // Bucket 0 covers all 8 blocks. After movement, fulls must occupy
+        // blocks [0,5).
+        let mut v = vec![0u64; 32];
+        // Mark full blocks with distinct tags.
+        for (bi, tag) in [(0, 1u64), (1, 2), (4, 3), (5, 4), (6, 5)] {
+            for e in 0..block {
+                v[bi * block + e] = tag;
+            }
+        }
+        let plan = Plan::new(&[32], 32, block);
+        let stripes = StripeBlocks {
+            begin: vec![0, 4, 8],
+            flush: vec![2, 7],
+        };
+        let arr = SharedSlice::new(v.as_mut_slice());
+        move_empty_blocks(&arr, &plan, &stripes, 0);
+        move_empty_blocks(&arr, &plan, &stripes, 1);
+        // blocks 0..5 must now be the five tagged blocks (in any order),
+        let mut tags: Vec<u64> = (0..5).map(|b| v[b * block]).collect();
+        tags.sort_unstable();
+        assert_eq!(tags, vec![1, 2, 3, 4, 5]);
+        // and each block homogeneous.
+        for b in 0..5 {
+            assert!(v[b * block..(b + 1) * block].iter().all(|&x| x == v[b * block]));
+        }
+    }
+
+    #[test]
+    fn parallel_permutation_stress_invariants() {
+        // Drive permute_blocks directly with several threads over many
+        // seeds; verify every placed block is homogeneous and in its
+        // bucket range — the §4.2 protocol under real contention.
+        use crate::parallel::{SharedSlice, ThreadPool};
+        use crate::util::BucketPointers;
+
+        let block = 16usize;
+        let pool = ThreadPool::new(4);
+        for seed in 0..10u64 {
+            let mut rng = Xoshiro256::new(seed);
+            let n = 4096 + rng.next_below(4096) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(1000)).collect();
+            let c = Classifier::new(&[200u64, 400, 600, 800], false, &lt);
+            let mut bufs = LocalBuffers::new(c.num_buckets(), block);
+            bufs.reset(c.num_buckets(), block);
+            let res = {
+                let arr = SharedSlice::new(v.as_mut_slice());
+                classify_stripe(&arr, 0, n, &c, &mut bufs, &lt)
+            };
+            let plan = Plan::new(&res.counts, n, block);
+            let stripes = StripeBlocks {
+                begin: vec![0, plan.num_blocks as i32],
+                flush: vec![(res.flush_end / block) as i32],
+            };
+            let pointers: Vec<BucketPointers> =
+                (0..plan.num_buckets()).map(|_| BucketPointers::new()).collect();
+            init_pointers(&plan, &stripes, &pointers);
+            let overflow = Overflow::new(block);
+            overflow.reset(block);
+            {
+                let arr = SharedSlice::new(v.as_mut_slice());
+                let plan = &plan;
+                let pointers = &pointers[..];
+                let c = &c;
+                let overflow = &overflow;
+                let arr = &arr;
+                let swaps = crate::parallel::PerThread::new(vec![vec![0u64; 2 * block]; 4]);
+                let swaps = &swaps;
+                pool.run(move |tid| {
+                    let swap = unsafe { swaps.get_mut(tid) };
+                    permute_blocks(arr, plan, pointers, c, overflow, swap, tid, 4, &lt);
+                });
+            }
+            let w = final_writes(&pointers, plan.num_buckets());
+            check_blocks_in_place(&v, &plan, &w, &c, &overflow);
+        }
+    }
+
+    #[test]
+    fn overflow_stores_and_reports() {
+        let ovf = Overflow::<u64>::new(8);
+        ovf.reset(8);
+        assert_eq!(ovf.bucket(), None);
+        unsafe { ovf.store(3, &[7; 8]) };
+        assert_eq!(ovf.bucket(), Some(3));
+        assert_eq!(unsafe { ovf.contents(8) }, &[7; 8]);
+        ovf.reset(8);
+        assert_eq!(ovf.bucket(), None);
+    }
+}

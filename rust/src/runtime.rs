@@ -1,0 +1,153 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! see `python/compile/aot.py`) and execute them from Rust.
+//!
+//! This is the three-layer bridge: Python runs once at build time
+//! (`make artifacts`); at runtime the Rust coordinator loads
+//! `artifacts/*.hlo.txt` through the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → compile → execute) with no Python
+//! anywhere on the path.
+//!
+//! The shipped artifact is the **classification kernel**: the branchless
+//! search-tree descent of §3 expressed as a Pallas kernel, batched over
+//! fixed-size chunks. [`XlaClassifier`] pads the last chunk. Functionally
+//! it plays the same role as s³-sort's oracle: a bucket id per element
+//! plus a histogram — the `xla_classifier` bench and the `xla_pipeline`
+//! example compare it against the native classifier.
+
+use anyhow::{Context, Result};
+
+/// Chunk length the classifier artifact was lowered for (must match
+/// `python/compile/aot.py`).
+pub const CHUNK: usize = 4096;
+/// Splitter-tree fanout the artifact was lowered for (k−1 = 255
+/// splitters, padded).
+pub const FANOUT: usize = 256;
+
+/// A compiled PJRT executable together with its client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))
+    }
+}
+
+/// The offloaded branchless classifier: elements (f32) + splitter tree →
+/// bucket ids + per-chunk histogram, executed by XLA.
+pub struct XlaClassifier {
+    exe: xla::PjRtLoadedExecutable,
+    splitters: Vec<f32>,
+}
+
+impl XlaClassifier {
+    /// Load `artifacts/classify.hlo.txt` (or a caller-supplied path) and
+    /// bind it to `splitters` (sorted, padded/truncated to `FANOUT − 1`).
+    pub fn new(engine: &Engine, artifact_path: &str, splitters: &[f32]) -> Result<XlaClassifier> {
+        let exe = engine.load_hlo_text(artifact_path)?;
+        let mut s = splitters.to_vec();
+        let last = *s.last().unwrap_or(&f32::MAX);
+        s.resize(FANOUT - 1, last);
+        Ok(XlaClassifier { exe, splitters: s })
+    }
+
+    /// The padded splitter set actually bound to the executable
+    /// (classification counts *these*, so elements ≥ the original maximum
+    /// land in the last bucket — same semantics as the native
+    /// [`crate::classifier::Classifier`] padding).
+    pub fn padded_splitters(&self) -> &[f32] {
+        &self.splitters
+    }
+
+    /// Classify `elems` (any length; internally padded to `CHUNK`),
+    /// returning bucket ids in `0..FANOUT`.
+    pub fn classify(&self, elems: &[f32]) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(elems.len());
+        let spl = xla::Literal::vec1(&self.splitters);
+        for chunk in elems.chunks(CHUNK) {
+            let mut padded = chunk.to_vec();
+            padded.resize(CHUNK, f32::MAX);
+            let x = xla::Literal::vec1(&padded);
+            let result = self.exe.execute::<xla::Literal>(&[x, spl.clone()])?[0][0]
+                .to_literal_sync()?;
+            let (ids, _hist) = Self::untuple(result)?;
+            out.extend_from_slice(&ids[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Classify one full chunk and return (bucket ids, histogram).
+    pub fn classify_chunk(&self, chunk: &[f32]) -> Result<(Vec<u32>, Vec<u32>)> {
+        anyhow::ensure!(chunk.len() == CHUNK, "chunk must be {CHUNK} elements");
+        let spl = xla::Literal::vec1(&self.splitters);
+        let x = xla::Literal::vec1(chunk);
+        let result = self.exe.execute::<xla::Literal>(&[x, spl])?[0][0].to_literal_sync()?;
+        Self::untuple(result)
+    }
+
+    fn untuple(result: xla::Literal) -> Result<(Vec<u32>, Vec<u32>)> {
+        let elems = result.to_tuple()?;
+        anyhow::ensure!(elems.len() == 2, "expected (ids, histogram) tuple");
+        let ids: Vec<i32> = elems[0].to_vec()?;
+        let hist: Vec<i32> = elems[1].to_vec()?;
+        Ok((
+            ids.into_iter().map(|x| x as u32).collect(),
+            hist.into_iter().map(|x| x as u32).collect(),
+        ))
+    }
+}
+
+/// Default artifact location relative to the repo root.
+pub fn default_artifact(name: &str) -> String {
+    let root = std::env::var("IPS4O_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    format!("{root}/{name}")
+}
+
+/// Pure-Rust reference of the artifact's classification semantics (used
+/// by tests and the ablation bench to validate the XLA path).
+pub fn classify_reference(elems: &[f32], splitters: &[f32]) -> Vec<u32> {
+    elems
+        .iter()
+        .map(|e| splitters.iter().filter(|s| *e >= **s).count() as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_classifier_counts_splitters() {
+        let spl = vec![10.0f32, 20.0, 30.0];
+        assert_eq!(classify_reference(&[5.0], &spl), vec![0]);
+        assert_eq!(classify_reference(&[10.0], &spl), vec![1]);
+        assert_eq!(classify_reference(&[25.0], &spl), vec![2]);
+        assert_eq!(classify_reference(&[99.0], &spl), vec![3]);
+    }
+
+    #[test]
+    fn default_artifact_path() {
+        std::env::remove_var("IPS4O_ARTIFACTS");
+        assert_eq!(default_artifact("classify.hlo.txt"), "artifacts/classify.hlo.txt");
+    }
+
+    // Engine/XlaClassifier tests that need the artifact live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+}

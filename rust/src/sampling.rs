@@ -1,0 +1,185 @@
+//! Sampling and splitter selection (paper §3, §4 "Sampling", §4.7).
+//!
+//! `α·k − 1` random elements are *swapped to the front* of the input
+//! array (keeping the algorithm in-place even though α depends on `n`),
+//! sorted, and `k − 1` equidistant splitters are picked. Duplicate
+//! splitters are removed; if any were present, equality buckets are
+//! enabled for this partitioning step (§4.7: "Equality buckets are only
+//! used if there were duplicate splitters").
+
+use crate::classifier::Classifier;
+use crate::config::Config;
+use crate::util::Xoshiro256;
+
+/// Outcome of the sampling phase.
+pub enum SampleResult<T> {
+    /// A usable classifier for this partitioning step.
+    Classifier(Classifier<T>),
+    /// The sample contained a single distinct key and equality buckets
+    /// are disabled — a distribution step cannot make progress; the
+    /// caller must fall back (we use heapsort).
+    Degenerate,
+}
+
+/// Swap `m` random elements to the front of `v` (partial Fisher–Yates).
+/// This is the in-place sample-extraction step.
+pub fn select_sample<T: Copy>(v: &mut [T], m: usize, rng: &mut Xoshiro256) {
+    let n = v.len();
+    debug_assert!(m <= n);
+    for i in 0..m {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        v.swap(i, j);
+    }
+}
+
+/// Run the full sampling phase on `v`: extract and sort the sample, pick
+/// equidistant splitters, deduplicate, and build the classifier.
+///
+/// The sorted sample stays at the front of `v`; its elements participate
+/// in the subsequent local classification like any others.
+pub fn build_classifier<T, F>(
+    v: &mut [T],
+    k: usize,
+    cfg: &Config,
+    rng: &mut Xoshiro256,
+    is_less: &F,
+) -> SampleResult<T>
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    debug_assert!(k >= 2 && n >= 2);
+    let sample_size = cfg.sample_size(n, k);
+    select_sample(v, sample_size, rng);
+    let sample = &mut v[..sample_size];
+    // The sample is tiny (α·k − 1); our own introsort baseline sorts it.
+    crate::baselines::introsort::sort_by(sample, is_less);
+
+    // A single-key sample: a k-way split cannot make progress unless
+    // elements equal to the key get their own (equality) bucket.
+    let all_equal = !is_less(&sample[0], &sample[sample_size - 1])
+        && !is_less(&sample[sample_size - 1], &sample[0]);
+    if all_equal {
+        let s = sample[0];
+        if cfg.equality_buckets {
+            return SampleResult::Classifier(Classifier::new(&[s], true, is_less));
+        }
+        return SampleResult::Degenerate;
+    }
+
+    // Pick k−1 equidistant splitters from the sorted sample, skipping
+    // duplicates as we go.
+    let mut unique: Vec<T> = Vec::with_capacity(k - 1);
+    let mut had_duplicates = false;
+    for i in 1..k {
+        let idx = (i * sample_size) / k;
+        let s = sample[idx.min(sample_size - 1)];
+        match unique.last() {
+            Some(last) if !is_less(last, &s) => had_duplicates = true, // s == last
+            _ => unique.push(s),
+        }
+    }
+
+    debug_assert!(!unique.is_empty(), "non-equal sample must yield a splitter");
+    let equality = cfg.equality_buckets && had_duplicates;
+    SampleResult::Classifier(Classifier::new(&unique, equality, is_less))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::multiset_fingerprint;
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn select_sample_preserves_multiset() {
+        let mut rng = Xoshiro256::new(1);
+        let mut v: Vec<u64> = (0..1000).collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        select_sample(&mut v, 100, &mut rng);
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+    }
+
+    #[test]
+    fn select_sample_is_random_enough() {
+        // The front of the array should not just be the original front.
+        let mut rng = Xoshiro256::new(2);
+        let mut v: Vec<u64> = (0..10_000).collect();
+        select_sample(&mut v, 64, &mut rng);
+        let front: Vec<u64> = v[..64].to_vec();
+        assert!(front.iter().any(|&x| x >= 64), "sample looks non-random");
+    }
+
+    #[test]
+    fn classifier_from_uniform_input() {
+        let mut rng = Xoshiro256::new(3);
+        let mut v: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+        let cfg = Config::default();
+        match build_classifier(&mut v, 16, &cfg, &mut rng, &lt) {
+            SampleResult::Classifier(c) => {
+                assert!(c.fanout() >= 2 && c.fanout() <= 16);
+                assert!(!c.has_equality_buckets(), "uniform u64s rarely collide");
+            }
+            SampleResult::Degenerate => panic!("uniform input must yield splitters"),
+        }
+    }
+
+    #[test]
+    fn ones_input_gives_equality_classifier() {
+        let mut rng = Xoshiro256::new(4);
+        let mut v = vec![1u64; 1024];
+        let cfg = Config::default();
+        match build_classifier(&mut v, 16, &cfg, &mut rng, &lt) {
+            SampleResult::Classifier(c) => {
+                assert!(c.has_equality_buckets());
+                assert_eq!(c.classify(&1, &lt), 1); // the equality bucket
+            }
+            SampleResult::Degenerate => panic!("equality buckets should engage"),
+        }
+    }
+
+    #[test]
+    fn ones_input_degenerate_without_equality_buckets() {
+        let mut rng = Xoshiro256::new(5);
+        let mut v = vec![9u64; 512];
+        let cfg = Config::default().with_equality_buckets(false);
+        match build_classifier(&mut v, 16, &cfg, &mut rng, &lt) {
+            SampleResult::Degenerate => {}
+            SampleResult::Classifier(_) => panic!("must report degenerate"),
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_input_enables_equality() {
+        let mut rng = Xoshiro256::new(6);
+        // RootDup-like: many repetitions of few keys.
+        let mut v: Vec<u64> = (0..8192).map(|i| (i % 7) as u64).collect();
+        let cfg = Config::default();
+        match build_classifier(&mut v, 64, &cfg, &mut rng, &lt) {
+            SampleResult::Classifier(c) => {
+                assert!(c.has_equality_buckets(), "7 keys / 64 buckets must dedup");
+                assert!(c.fanout() <= 8);
+            }
+            SampleResult::Degenerate => panic!(),
+        }
+    }
+
+    #[test]
+    fn splitters_subset_of_input() {
+        let mut rng = Xoshiro256::new(7);
+        let mut v: Vec<u64> = (0..2000).map(|_| rng.next_below(100) * 3).collect();
+        let cfg = Config::default();
+        if let SampleResult::Classifier(c) = build_classifier(&mut v, 8, &cfg, &mut rng, &lt) {
+            // Every element classifies into a valid bucket.
+            for e in &v {
+                assert!(c.classify(e, &lt) < c.num_buckets());
+            }
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! IS⁴o — the sequential in-place super scalar samplesort driver
+//! (IPS⁴o with t = 1).
+//!
+//! One partitioning step = sampling → local classification (one stripe)
+//! → sequential block permutation (no atomics, §4.7) → cleanup, then
+//! recursion into the non-equality buckets. Buckets at or below the base
+//! case are insertion-sorted *during* cleanup (§4.7 eager base case).
+
+use crate::base_case::{heapsort, insertion_sort};
+use crate::cleanup::cleanup_buckets;
+use crate::config::Config;
+use crate::local_classification::{classify_stripe, LocalBuffers};
+use crate::parallel::SharedSlice;
+use crate::permutation::{permute_blocks_seq, Overflow, Plan};
+use crate::sampling::{build_classifier, SampleResult};
+use crate::util::{Element, Xoshiro256};
+
+/// Reusable per-thread scratch state: distribution buffers, swap blocks,
+/// overflow block, RNG. One of these exists per worker thread and is
+/// reused across all recursion levels (Theorem 2's O(k·b·t) term).
+pub struct SeqContext<T> {
+    pub bufs: LocalBuffers<T>,
+    pub swap: Vec<T>,
+    pub overflow: Overflow<T>,
+    pub rng: Xoshiro256,
+    pub cfg: Config,
+    /// Element block size for this T (cached).
+    pub block: usize,
+}
+
+impl<T: Element> SeqContext<T> {
+    pub fn new(cfg: Config, seed: u64) -> Self {
+        let block = cfg.block_elems(std::mem::size_of::<T>());
+        let max_buckets = 2 * cfg.max_buckets; // equality buckets double the count
+        SeqContext {
+            bufs: LocalBuffers::new(max_buckets, block),
+            swap: vec![T::default(); 2 * block],
+            overflow: Overflow::new(block),
+            rng: Xoshiro256::new(seed),
+            cfg,
+            block,
+        }
+    }
+}
+
+/// Result of one sequential partitioning step: bucket boundaries
+/// (absolute offsets into the sorted range) and which are equality
+/// buckets.
+pub struct StepResult {
+    /// Bucket boundary offsets, relative to the partitioned range;
+    /// length `num_buckets + 1`.
+    pub bounds: Vec<usize>,
+    /// `true` at index `i` if bucket `i` is an equality bucket.
+    pub equality: Vec<bool>,
+}
+
+/// Perform one partitioning step on `v`. Returns `None` if `v` was
+/// sorted directly (base case or degenerate fallback).
+///
+/// When `eager_base` is set, buckets at or below the base-case size are
+/// insertion-sorted during cleanup.
+pub fn partition_step<T, F>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    is_less: &F,
+    eager_base: bool,
+) -> Option<StepResult>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    let cfg = ctx.cfg.clone();
+    if n <= cfg.base_case_size.max(2) {
+        insertion_sort(v, is_less);
+        return None;
+    }
+
+    // --- Sampling ---
+    let k = cfg.buckets_for(n);
+    let classifier = match build_classifier(v, k, &cfg, &mut ctx.rng, is_less) {
+        SampleResult::Classifier(c) => c,
+        SampleResult::Degenerate => {
+            heapsort(v, is_less);
+            return None;
+        }
+    };
+    let nb = classifier.num_buckets();
+    let block = ctx.block;
+    ctx.bufs.reset(nb, block);
+    ctx.overflow.reset(block);
+
+    // --- Local classification (single stripe) ---
+    let stripe = {
+        let arr = SharedSlice::new(v);
+        classify_stripe(&arr, 0, n, &classifier, &mut ctx.bufs, is_less)
+    };
+
+    // No-progress guard: if one bucket swallowed everything and it is not
+    // an equality bucket, recursing would loop forever.
+    if let Some((bk, _)) = stripe.counts.iter().enumerate().find(|(_, &c)| c == n) {
+        if !classifier.is_equality_bucket(bk) && nb <= 2 {
+            heapsort(v, is_less);
+            return None;
+        }
+    }
+
+    // --- Block permutation (sequential, no atomics) ---
+    let plan = Plan::new(&stripe.counts, n, block);
+    let flush_block = (stripe.flush_end / block) as i32;
+    let mut w = vec![0i32; nb];
+    let mut r = vec![0i32; nb];
+    for i in 0..nb {
+        // Single stripe: fulls in [d_i, d_{i+1}) are [d_i, min(d_{i+1},
+        // flush)) — already compacted, no empty-block movement needed.
+        let f = (plan.d[i + 1].min(flush_block) - plan.d[i]).max(0);
+        w[i] = plan.d[i];
+        r[i] = plan.d[i] + f - 1;
+    }
+    permute_blocks_seq(
+        v,
+        &plan,
+        &mut w,
+        &mut r,
+        &classifier,
+        &ctx.overflow,
+        &mut ctx.swap,
+        is_less,
+    );
+
+    // --- Cleanup ---
+    {
+        let arr = SharedSlice::new(v);
+        let bufs_ref: [&LocalBuffers<T>; 1] = [&ctx.bufs];
+        let base = cfg.base_case_size;
+        cleanup_buckets(
+            &arr,
+            &plan,
+            &w,
+            &bufs_ref,
+            &ctx.overflow,
+            0,
+            nb,
+            &[],
+            |start, end| {
+                if eager_base && end - start <= base && end > start {
+                    // SAFETY: cleanup owns the whole range sequentially.
+                    let slice = unsafe { arr.slice_mut(start, end) };
+                    insertion_sort(slice, is_less);
+                }
+            },
+        );
+    }
+    ctx.bufs.clear();
+
+    let equality = (0..nb).map(|i| classifier.is_equality_bucket(i)).collect();
+    Some(StepResult {
+        bounds: plan.bucket_starts,
+        equality,
+    })
+}
+
+/// Sort `v` sequentially with IS⁴o, reusing `ctx` scratch space.
+pub fn sort_seq<T, F>(v: &mut [T], ctx: &mut SeqContext<T>, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let base = ctx.cfg.base_case_size;
+    match partition_step(v, ctx, is_less, true) {
+        None => {}
+        Some(step) => {
+            for i in 0..step.bounds.len() - 1 {
+                let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+                if e - s <= base || step.equality[i] {
+                    continue; // eager-sorted or all-equal
+                }
+                sort_seq(&mut v[s..e], ctx, is_less);
+            }
+        }
+    }
+}
+
+/// Convenience: allocate a context and sort.
+pub fn sort_by<T, F>(v: &mut [T], cfg: &Config, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let mut ctx = SeqContext::new(cfg.clone(), 0x5EED ^ v.len() as u64);
+    sort_seq(v, &mut ctx, is_less);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    fn check_sort(mut v: Vec<u64>, cfg: &Config) {
+        let fp = multiset_fingerprint(&v, |x| *x);
+        sort_by(&mut v, cfg, &lt);
+        assert!(is_sorted_by(&v, lt), "not sorted (n={})", v.len());
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "multiset changed");
+    }
+
+    #[test]
+    fn sorts_all_distributions_small() {
+        let cfg = Config::default();
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 2, 15, 16, 17, 100, 1000, 4096, 10_007] {
+                check_sort(gen_u64(d, n, 42), &cfg);
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_medium_uniform() {
+        check_sort(gen_u64(Distribution::Uniform, 200_000, 7), &Config::default());
+    }
+
+    #[test]
+    fn sorts_with_tiny_blocks_and_buckets() {
+        // Stress odd configurations.
+        for (k, bb, n0) in [(4, 64, 4), (8, 128, 8), (16, 32, 2), (2, 16, 1)] {
+            let cfg = Config::default()
+                .with_max_buckets(k)
+                .with_block_bytes(bb)
+                .with_base_case(n0);
+            for d in [
+                Distribution::Uniform,
+                Distribution::RootDup,
+                Distribution::Ones,
+                Distribution::ReverseSorted,
+            ] {
+                check_sort(gen_u64(d, 3000, 3), &cfg);
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_without_equality_buckets() {
+        let cfg = Config::default().with_equality_buckets(false);
+        for d in Distribution::ALL {
+            check_sort(gen_u64(d, 5000, 9), &cfg);
+        }
+    }
+
+    #[test]
+    fn partition_step_bounds_are_consistent() {
+        let mut v = gen_u64(Distribution::Uniform, 50_000, 5);
+        let mut ctx = SeqContext::new(Config::default(), 1);
+        let step = partition_step(&mut v, &mut ctx, &lt, false).expect("should partition");
+        assert_eq!(*step.bounds.first().unwrap(), 0);
+        assert_eq!(*step.bounds.last().unwrap(), v.len());
+        // Every element of bucket i is ≤ every element of bucket i+1.
+        for i in 0..step.bounds.len() - 1 {
+            let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+            if s == e {
+                continue;
+            }
+            let max_here = v[s..e].iter().max().unwrap();
+            for j in i + 1..step.bounds.len() - 1 {
+                let (s2, e2) = (step.bounds[j], step.bounds[j + 1]);
+                if s2 == e2 {
+                    continue;
+                }
+                let min_next = v[s2..e2].iter().min().unwrap();
+                assert!(max_here <= min_next, "buckets {i} and {j} out of order");
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn equality_buckets_are_constant() {
+        let mut v = gen_u64(Distribution::RootDup, 40_000, 6);
+        let mut ctx = SeqContext::new(Config::default(), 2);
+        if let Some(step) = partition_step(&mut v, &mut ctx, &lt, false) {
+            let mut saw_equality = false;
+            for i in 0..step.bounds.len() - 1 {
+                if step.equality[i] {
+                    let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+                    if e > s {
+                        saw_equality = true;
+                        assert!(v[s..e].iter().all(|&x| x == v[s]));
+                    }
+                }
+            }
+            assert!(saw_equality, "RootDup should trigger equality buckets");
+        } else {
+            panic!("partition expected");
+        }
+    }
+
+    #[test]
+    fn f64_and_composite_types() {
+        use crate::datagen::{gen_f64, gen_pair};
+        let cfg = Config::default();
+        let mut f = gen_f64(Distribution::Uniform, 30_000, 8);
+        sort_by(&mut f, &cfg, &|a, b| a < b);
+        assert!(is_sorted_by(&f, |a, b| a < b));
+
+        let mut p = gen_pair(Distribution::TwoDup, 30_000, 8);
+        sort_by(&mut p, &cfg, &crate::util::Pair::less);
+        assert!(is_sorted_by(&p, crate::util::Pair::less));
+    }
+}

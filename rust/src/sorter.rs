@@ -1,0 +1,107 @@
+//! The public [`Sorter`] façade: owns the configuration and the
+//! persistent thread pool, dispatches to sequential IS⁴o or parallel
+//! IPS⁴o.
+
+use crate::config::Config;
+use crate::parallel::ThreadPool;
+use crate::util::Element;
+
+/// A reusable sorter. Create one per configuration; `sort_by` can be
+/// called any number of times with any element type (per-call scratch is
+/// type-specific, the pool is shared).
+///
+/// ```
+/// use ips4o::{Config, Sorter};
+/// let sorter = Sorter::new(Config::default().with_threads(4));
+/// let mut v: Vec<u64> = (0..100_000).rev().collect();
+/// sorter.sort(&mut v);
+/// assert!(v.windows(2).all(|w| w[0] <= w[1]));
+/// ```
+pub struct Sorter {
+    cfg: Config,
+    pool: Option<ThreadPool>,
+}
+
+impl Sorter {
+    /// Build a sorter; spawns `cfg.threads − 1` workers when `threads > 1`.
+    pub fn new(cfg: Config) -> Self {
+        let pool = if cfg.threads > 1 {
+            Some(ThreadPool::new(cfg.threads))
+        } else {
+            None
+        };
+        Sorter { cfg, pool }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Sort with the element's natural order.
+    pub fn sort<T: Element + Ord>(&self, v: &mut [T]) {
+        self.sort_by(v, &|a: &T, b: &T| a < b)
+    }
+
+    /// Sort with an explicit strict-weak-order `is_less`.
+    pub fn sort_by<T, F>(&self, v: &mut [T], is_less: &F)
+    where
+        T: Element,
+        F: Fn(&T, &T) -> bool + Sync,
+    {
+        match &self.pool {
+            Some(pool) => crate::task_scheduler::sort_parallel(v, &self.cfg, pool, is_less),
+            None => crate::sequential::sort_by(v, &self.cfg, is_less),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_f64, gen_pair, gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint, Pair};
+
+    #[test]
+    fn sorter_sequential_and_parallel_agree() {
+        let seq = Sorter::new(Config::default());
+        let par = Sorter::new(Config::default().with_threads(4));
+        for d in [Distribution::Uniform, Distribution::TwoDup] {
+            let base = gen_u64(d, 50_000, 1);
+            let mut a = base.clone();
+            let mut b = base.clone();
+            seq.sort(&mut a);
+            par.sort(&mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn sorter_reusable_across_types() {
+        let s = Sorter::new(Config::default().with_threads(3));
+        let mut u = gen_u64(Distribution::Exponential, 30_000, 2);
+        s.sort(&mut u);
+        assert!(is_sorted_by(&u, |a, b| a < b));
+
+        let mut f = gen_f64(Distribution::Uniform, 30_000, 2);
+        s.sort_by(&mut f, &|a: &f64, b: &f64| a < b);
+        assert!(is_sorted_by(&f, |a, b| a < b));
+
+        let mut p = gen_pair(Distribution::RootDup, 30_000, 2);
+        let fp = multiset_fingerprint(&p, |x| x.key.to_bits() ^ x.value.to_bits());
+        s.sort_by(&mut p, &Pair::less);
+        assert!(is_sorted_by(&p, Pair::less));
+        assert_eq!(fp, multiset_fingerprint(&p, |x| x.key.to_bits() ^ x.value.to_bits()));
+    }
+
+    #[test]
+    fn top_level_api() {
+        let mut v: Vec<u64> = (0..10_000).rev().collect();
+        crate::sort(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b));
+
+        let mut v: Vec<u64> = (0..100_000).rev().collect();
+        crate::sort_par(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b));
+    }
+}

@@ -1,0 +1,202 @@
+//! Strictly in-place IS⁴o (paper §4.6): eliminating the recursion stack.
+//!
+//! The partitioning operation additionally *marks* every bucket by
+//! swapping the bucket's largest element to its first position. The
+//! driver then walks the array left to right; the end of the current
+//! bucket is found with an exponential + binary search for the first
+//! element *strictly greater* than the marker (distinct buckets have
+//! disjoint key ranges, so all elements of later buckets compare
+//! greater). Total extra space: the `O(k·b)` distribution buffers only —
+//! no `O(log n)` stack.
+
+use crate::base_case::insertion_sort;
+use crate::sequential::{partition_step, SeqContext};
+use crate::util::Element;
+
+/// Find the first index in `v[from..]` whose element is strictly greater
+/// than `x`, using exponential probing followed by binary search —
+/// `O(log(result − from))` comparisons, as required by §4.6.
+pub fn search_next_larger<T, F>(x: &T, v: &[T], from: usize, is_less: &F) -> usize
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if from >= n {
+        return n;
+    }
+    // Exponential probe: find a window [lo, hi) with v[lo] ≤ x < v[hi].
+    let mut step = 1usize;
+    let mut lo = from;
+    let mut hi = from;
+    loop {
+        if hi >= n {
+            hi = n;
+            break;
+        }
+        if is_less(x, &v[hi]) {
+            break;
+        }
+        lo = hi + 1;
+        hi = from + step;
+        step *= 2;
+    }
+    // Binary search in [lo, hi).
+    let mut a = lo;
+    let mut b = hi;
+    while a < b {
+        let m = a + (b - a) / 2;
+        if is_less(x, &v[m]) {
+            b = m;
+        } else {
+            a = m + 1;
+        }
+    }
+    a
+}
+
+/// Swap each bucket's maximum to the bucket's first slot.
+fn mark_buckets<T, F>(v: &mut [T], bounds: &[usize], is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    for w in bounds.windows(2) {
+        let (s, e) = (w[0], w[1]);
+        if e - s < 2 {
+            continue;
+        }
+        let mut maxi = s;
+        for i in s + 1..e {
+            if is_less(&v[maxi], &v[i]) {
+                maxi = i;
+            }
+        }
+        v.swap(s, maxi);
+    }
+}
+
+/// Sort `v` with the strictly in-place variant: recursion emulated in
+/// constant space via bucket markers (§4.6 pseudocode, corrected for the
+/// all-equal/base-case interplay).
+pub fn sort_strictly_inplace<T, F>(v: &mut [T], cfg: &crate::config::Config, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    let mut ctx = SeqContext::new(cfg.clone(), 0x517 ^ n as u64);
+    let n0 = cfg.base_case_size.max(2);
+
+    let mut i = 0usize; // first element of the current bucket
+    let mut j = n; // one past the current bucket's end
+    while i < n {
+        if j - i <= n0 {
+            insertion_sort(&mut v[i..j], is_less);
+            i = j;
+            if i >= n {
+                break;
+            }
+            // v[i] is the next bucket's marker (= its maximum).
+            j = search_next_larger(&v[i], v, i + 1, is_less);
+        } else {
+            // Partition the first unsorted bucket [i, j). The partition
+            // step is plain IS⁴o without eager base-case sorting (we must
+            // not sort before marking); markers are placed afterwards.
+            match partition_step(&mut v[i..j], &mut ctx, is_less, false) {
+                None => {
+                    // Sorted directly (degenerate fallback).
+                    i = j;
+                    if i >= n {
+                        break;
+                    }
+                    j = search_next_larger(&v[i], v, i + 1, is_less);
+                }
+                Some(step) => {
+                    // All-equal equality bucket spanning the whole range:
+                    // already sorted, move on.
+                    let whole_equal = step
+                        .bounds
+                        .windows(2)
+                        .zip(&step.equality)
+                        .any(|(w, &eq)| eq && w[1] - w[0] == j - i);
+                    if whole_equal {
+                        i = j;
+                        if i >= n {
+                            break;
+                        }
+                        j = search_next_larger(&v[i], v, i + 1, is_less);
+                    } else {
+                        mark_buckets(&mut v[i..j], &step.bounds, is_less);
+                        // Continue with the first sub-bucket: its end is
+                        // found via its marker.
+                        j = i + search_next_larger(&v[i], &v[i..], 1, is_less);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn search_next_larger_basics() {
+        let v: Vec<u64> = vec![1, 1, 2, 2, 2, 5, 7, 7, 9];
+        assert_eq!(search_next_larger(&1, &v, 0, &lt), 2);
+        assert_eq!(search_next_larger(&2, &v, 2, &lt), 5);
+        assert_eq!(search_next_larger(&9, &v, 0, &lt), v.len());
+        assert_eq!(search_next_larger(&0, &v, 0, &lt), 0);
+        assert_eq!(search_next_larger(&7, &v, 6, &lt), 8);
+    }
+
+    #[test]
+    fn search_next_larger_matches_linear_scan() {
+        let mut rng = crate::util::Xoshiro256::new(3);
+        for _ in 0..100 {
+            let n = 1 + rng.next_below(200) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(50)).collect();
+            v.sort_unstable();
+            let from = rng.next_below(n as u64) as usize;
+            let x = rng.next_below(55);
+            let expect = (from..n).find(|&i| v[i] > x).unwrap_or(n);
+            assert_eq!(search_next_larger(&x, &v, from, &lt), expect);
+        }
+    }
+
+    #[test]
+    fn strictly_inplace_sorts_all_distributions() {
+        let cfg = Config::default();
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 17, 1000, 20_000] {
+                let mut v = gen_u64(d, n, 9);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_strictly_inplace(&mut v, &cfg, &lt);
+                assert!(is_sorted_by(&v, lt), "{} n={n}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+            }
+        }
+    }
+
+    #[test]
+    fn strictly_inplace_matches_recursive() {
+        let cfg = Config::default();
+        let mut a = gen_u64(Distribution::TwoDup, 50_000, 4);
+        let mut b = a.clone();
+        sort_strictly_inplace(&mut a, &cfg, &lt);
+        crate::sequential::sort_by(&mut b, &cfg, &lt);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,389 @@
+//! Parallel recursion scheduler and the cooperative parallel partition
+//! step (paper §4, §4.1–4.3, Appendix A).
+//!
+//! While subproblems of at least `β·n/t` elements exist they are
+//! partitioned *one after another*, each by all `t` threads cooperating
+//! (stripes → shared block permutation → bucket-partitioned cleanup).
+//! Remaining small subproblems are assigned to threads in a balanced way
+//! (LPT) and sorted sequentially, independently, in parallel.
+
+use std::collections::VecDeque;
+
+use crate::base_case::heapsort;
+use crate::cleanup::{cleanup_buckets, save_next_head};
+use crate::config::Config;
+use crate::local_classification::{classify_stripe, LocalBuffers, StripeResult};
+use crate::parallel::{stripes, PerThread, SharedSlice, ThreadPool};
+use crate::permutation::{
+    final_writes, init_pointers, move_empty_blocks, permute_blocks, Plan, StripeBlocks,
+};
+use crate::sampling::{build_classifier, SampleResult};
+use crate::sequential::{sort_seq, SeqContext, StepResult};
+use crate::util::{BucketPointers, Element};
+
+/// Sort `v` with IPS⁴o using the given pool. Falls back to sequential
+/// IS⁴o when the input or the pool is too small to benefit.
+pub fn sort_parallel<T, F>(v: &mut [T], cfg: &Config, pool: &ThreadPool, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let t = pool.threads();
+    let n = v.len();
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+    // Below this size the parallel machinery cannot pay for itself:
+    // every thread needs a few blocks' worth of work.
+    let min_parallel = (4 * t * block).max(1 << 13);
+    if t == 1 || n < min_parallel {
+        crate::sequential::sort_by(v, cfg, is_less);
+        return;
+    }
+
+    let ctxs = PerThread::new(
+        (0..t)
+            .map(|i| SeqContext::<T>::new(cfg.clone(), 0x1950_5EED ^ (i as u64) << 32 ^ n as u64))
+            .collect(),
+    );
+    let pointers: Vec<BucketPointers> = (0..2 * cfg.max_buckets)
+        .map(|_| BucketPointers::new())
+        .collect();
+    // The shared overflow block lives outside the per-thread contexts so
+    // SPMD regions can reference it without aliasing a context borrow.
+    let overflow = crate::permutation::Overflow::<T>::new(block);
+
+    let threshold = cfg.parallel_task_min(n).max(min_parallel);
+    let mut big: VecDeque<(usize, usize)> = VecDeque::new();
+    let mut small: Vec<(usize, usize)> = Vec::new();
+    big.push_back((0, n));
+
+    while let Some((s, e)) = big.pop_front() {
+        let step = partition_parallel(&mut v[s..e], cfg, pool, &ctxs, &pointers, &overflow, is_less);
+        if let Some(step) = step {
+            for i in 0..step.bounds.len() - 1 {
+                let (cs, ce) = (s + step.bounds[i], s + step.bounds[i + 1]);
+                let len = ce - cs;
+                if step.equality[i] || len <= cfg.base_case_size {
+                    continue; // all-equal, or eager-sorted during cleanup
+                }
+                if len >= threshold {
+                    big.push_back((cs, ce));
+                } else {
+                    small.push((cs, ce));
+                }
+            }
+        }
+    }
+
+    // --- Small-task phase: LPT assignment, sequential sorting ---
+    small.sort_unstable_by_key(|&(s, e)| std::cmp::Reverse(e - s));
+    let mut bins: Vec<Vec<(usize, usize)>> = vec![Vec::new(); t];
+    let mut load = vec![0usize; t];
+    for task in small {
+        let tid = (0..t).min_by_key(|&i| load[i]).unwrap();
+        load[tid] += task.1 - task.0;
+        bins[tid].push(task);
+    }
+    let arr = SharedSlice::new(v);
+    let bins = &bins;
+    pool.run(|tid| {
+        // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
+        // ranges produced by the partitioning.
+        let ctx = unsafe { ctxs.get_mut(tid) };
+        for &(s, e) in &bins[tid] {
+            let slice = unsafe { arr.slice_mut(s, e) };
+            sort_seq(slice, ctx, is_less);
+        }
+    });
+}
+
+/// One cooperative partition step over `v` with all pool threads.
+/// Returns `None` if the range was sorted directly (degenerate fallback).
+pub fn partition_parallel<T, F>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    ctxs: &PerThread<SeqContext<T>>,
+    pointers: &[BucketPointers],
+    overflow: &crate::permutation::Overflow<T>,
+    is_less: &F,
+) -> Option<StepResult>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let t = pool.threads();
+    let n = v.len();
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+
+    // --- Sampling (leader) ---
+    let classifier = {
+        // SAFETY: exclusive access before any SPMD region starts.
+        let ctx0 = unsafe { ctxs.get_mut(0) };
+        match build_classifier(v, cfg.buckets_for(n), cfg, &mut ctx0.rng, is_less) {
+            SampleResult::Classifier(c) => c,
+            SampleResult::Degenerate => {
+                heapsort(v, is_less);
+                return None;
+            }
+        }
+    };
+    let nb = classifier.num_buckets();
+    assert!(nb <= pointers.len(), "pointer array too small");
+
+    // --- Local classification (SPMD over stripes) ---
+    let bounds = stripes(n, t, block);
+    let arr = SharedSlice::new(v);
+    let results: PerThread<Option<StripeResult>> = PerThread::new((0..t).map(|_| None).collect());
+    {
+        let classifier = &classifier;
+        let bounds = &bounds;
+        let arr = &arr;
+        let results = &results;
+        overflow.reset(block);
+        pool.run(move |tid| {
+            // SAFETY: per-thread slots + disjoint stripes.
+            let ctx = unsafe { ctxs.get_mut(tid) };
+            ctx.bufs.reset(nb, block);
+            let res = classify_stripe(
+                arr,
+                bounds[tid],
+                bounds[tid + 1],
+                classifier,
+                &mut ctx.bufs,
+                is_less,
+            );
+            unsafe { *results.get_mut(tid) = Some(res) };
+        });
+    }
+    let results: Vec<StripeResult> = results
+        .into_inner()
+        .into_iter()
+        .map(|r| r.expect("stripe result"))
+        .collect();
+
+    // --- Aggregate counts, build the plan ---
+    let mut counts = vec![0usize; nb];
+    for r in &results {
+        for (c, rc) in counts.iter_mut().zip(&r.counts) {
+            *c += rc;
+        }
+    }
+
+    // No-progress guard (mirrors the sequential driver).
+    if let Some((bk, _)) = counts.iter().enumerate().find(|(_, &c)| c == n) {
+        if !classifier.is_equality_bucket(bk) && nb <= 2 {
+            heapsort(v, is_less);
+            return None;
+        }
+    }
+
+    let plan = Plan::new(&counts, n, block);
+    let sb = StripeBlocks {
+        begin: bounds.iter().map(|&x| (x / block) as i32).collect(),
+        flush: results.iter().map(|r| (r.flush_end / block) as i32).collect(),
+    };
+    // Note: bounds interior entries are block-aligned; the last entry (n)
+    // rounds *down* here, which is correct: a trailing partial block is
+    // never a full block.
+    init_pointers(&plan, &sb, pointers);
+
+    // --- Appendix A: establish the invariant (empty-block movement) ---
+    {
+        let plan = &plan;
+        let sb = &sb;
+        let arr = &arr;
+        pool.run(move |tid| move_empty_blocks(arr, plan, sb, tid));
+    }
+
+    // --- Block permutation ---
+    {
+        let plan = &plan;
+        let arr = &arr;
+        let classifier = &classifier;
+        pool.run(move |tid| {
+            let ctx = unsafe { ctxs.get_mut(tid) };
+            permute_blocks(
+                arr, plan, pointers, classifier, overflow, &mut ctx.swap, tid, t, is_less,
+            );
+        });
+    }
+    let ws = final_writes(pointers, nb);
+
+    // --- Cleanup: bucket groups, pre-saved heads, then fill ---
+    // Contiguous bucket groups balanced by element count.
+    let mut groups = vec![0usize; t + 1];
+    {
+        let per = crate::util::div_ceil(n.max(1), t);
+        let mut g = 1;
+        let mut acc = 0usize;
+        for i in 0..nb {
+            acc += counts[i];
+            while g < t && acc >= g * per {
+                groups[g] = i + 1;
+                g += 1;
+            }
+        }
+        for gg in g..t {
+            groups[gg] = nb;
+        }
+        groups[t] = nb;
+        // Monotonicity fix-up (tiny inputs can skip groups).
+        for g in 1..=t {
+            if groups[g] < groups[g - 1] {
+                groups[g] = groups[g - 1];
+            }
+        }
+    }
+
+    let saved: PerThread<Vec<T>> = PerThread::new(vec![Vec::new(); t]);
+    {
+        let plan = &plan;
+        let arr = &arr;
+        let saved = &saved;
+        let groups = &groups;
+        pool.run(move |tid| {
+            let head = save_next_head(arr, plan, groups[tid + 1]);
+            unsafe { *saved.get_mut(tid) = head };
+        });
+    }
+    {
+        let plan = &plan;
+        let arr = &arr;
+        let ws = &ws;
+        let saved = &saved;
+        let groups = &groups;
+        let base = cfg.base_case_size;
+        let eager = cfg.eager_base_case;
+        pool.run(move |tid| {
+            // SAFETY: buffers are read-only during cleanup (barrier after
+            // classification), bucket groups are disjoint.
+            let bufs: Vec<&LocalBuffers<T>> =
+                (0..t).map(|i| unsafe { &ctxs.get(i).bufs }).collect();
+            let head = unsafe { saved.get(tid) };
+            cleanup_buckets(
+                arr,
+                plan,
+                ws,
+                &bufs,
+                overflow,
+                groups[tid],
+                groups[tid + 1],
+                head,
+                |start, end| {
+                    if eager && end - start <= base && end > start {
+                        let slice = unsafe { arr.slice_mut(start, end) };
+                        crate::base_case::insertion_sort(slice, is_less);
+                    }
+                },
+            );
+        });
+    }
+    // Buffers are drained; reset fills for the next step.
+    for tid in 0..t {
+        unsafe { ctxs.get_mut(tid) }.bufs.clear();
+    }
+
+    let equality = (0..nb).map(|i| classifier.is_equality_bucket(i)).collect();
+    Some(StepResult {
+        bounds: plan.bucket_starts,
+        equality,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    fn check_parallel(mut v: Vec<u64>, cfg: &Config, t: usize) {
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let pool = ThreadPool::new(t);
+        sort_parallel(&mut v, cfg, &pool, &lt);
+        assert!(is_sorted_by(&v, lt), "not sorted (n={}, t={t})", v.len());
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "multiset changed");
+    }
+
+    #[test]
+    fn parallel_sorts_all_distributions() {
+        let cfg = Config::default().with_threads(4);
+        for d in Distribution::ALL {
+            check_parallel(gen_u64(d, 100_000, 42), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn parallel_various_thread_counts() {
+        for t in [1usize, 2, 3, 5, 8] {
+            let cfg = Config::default().with_threads(t);
+            check_parallel(gen_u64(Distribution::Uniform, 60_000, 7), &cfg, t);
+            check_parallel(gen_u64(Distribution::RootDup, 60_000, 7), &cfg, t);
+        }
+    }
+
+    #[test]
+    fn parallel_small_inputs_fall_back() {
+        let cfg = Config::default().with_threads(4);
+        for n in [0usize, 1, 100, 5000] {
+            check_parallel(gen_u64(Distribution::Uniform, n, 3), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn parallel_odd_sizes_partial_blocks() {
+        let cfg = Config::default().with_threads(4);
+        for n in [99_991usize, 131_072, 131_073, 200_003] {
+            check_parallel(gen_u64(Distribution::TwoDup, n, 11), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn parallel_with_small_blocks_stress() {
+        // Small blocks + small buckets stress permutation/cleanup edges.
+        let cfg = Config::default()
+            .with_threads(4)
+            .with_max_buckets(8)
+            .with_block_bytes(128);
+        for d in [
+            Distribution::Uniform,
+            Distribution::AlmostSorted,
+            Distribution::Ones,
+            Distribution::EightDup,
+        ] {
+            check_parallel(gen_u64(d, 50_000, 13), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn partition_parallel_bucket_order() {
+        let cfg = Config::default().with_threads(4);
+        let mut v = gen_u64(Distribution::Uniform, 80_000, 21);
+        let pool = ThreadPool::new(4);
+        let ctxs = PerThread::new(
+            (0..4)
+                .map(|i| SeqContext::<u64>::new(cfg.clone(), i as u64))
+                .collect(),
+        );
+        let pointers: Vec<BucketPointers> =
+            (0..2 * cfg.max_buckets).map(|_| BucketPointers::new()).collect();
+        let overflow = crate::permutation::Overflow::<u64>::new(
+            cfg.block_elems(std::mem::size_of::<u64>()),
+        );
+        let step = partition_parallel(&mut v, &cfg, &pool, &ctxs, &pointers, &overflow, &lt)
+            .expect("should partition");
+        for i in 0..step.bounds.len() - 2 {
+            let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+            let e2 = step.bounds[i + 2];
+            if s == e || e == e2 {
+                continue;
+            }
+            let max_here = *v[s..e].iter().max().unwrap();
+            let min_next = *v[e..e2].iter().min().unwrap();
+            assert!(max_here <= min_next, "bucket {i} overlaps bucket {}", i + 1);
+        }
+    }
+}

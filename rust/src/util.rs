@@ -1,0 +1,483 @@
+//! Shared utilities: the [`Element`] trait, the paper's record data types
+//! ([`Pair`], [`Quartet`], [`Bytes100`]), a from-scratch PRNG
+//! ([`SplitMix64`], [`Xoshiro256`] — the `rand` crate is unavailable in
+//! this offline environment), and the packed atomic `(write, read)`
+//! pointer word used by the block permutation phase.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Marker trait for sortable elements.
+///
+/// IPS⁴o moves elements block-wise with `memcpy`-style copies, so elements
+/// must be `Copy`. `Send + Sync + 'static` let blocks travel between
+/// threads. `Default` provides a cheap filler for buffer allocation.
+pub trait Element: Copy + Send + Sync + Default + 'static {}
+impl<T: Copy + Send + Sync + Default + 'static> Element for T {}
+
+// ---------------------------------------------------------------------------
+// Paper data types (§5): Pair, Quartet, 100Bytes
+// ---------------------------------------------------------------------------
+
+/// 64-bit float key + 64-bit float payload (paper's "Pair", 16 bytes).
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Pair {
+    pub key: f64,
+    pub value: f64,
+}
+
+impl Pair {
+    pub fn new(key: f64, value: f64) -> Self {
+        Pair { key, value }
+    }
+    /// The comparator used throughout the benchmarks.
+    #[inline(always)]
+    pub fn less(a: &Pair, b: &Pair) -> bool {
+        a.key < b.key
+    }
+}
+
+/// Three 64-bit float keys (lexicographic) + one payload
+/// (paper's "Quartet", 32 bytes).
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Quartet {
+    pub k0: f64,
+    pub k1: f64,
+    pub k2: f64,
+    pub value: f64,
+}
+
+impl Quartet {
+    pub fn new(k0: f64, k1: f64, k2: f64, value: f64) -> Self {
+        Quartet { k0, k1, k2, value }
+    }
+    /// Lexicographic comparison of the three keys.
+    #[inline(always)]
+    pub fn less(a: &Quartet, b: &Quartet) -> bool {
+        if a.k0 != b.k0 {
+            return a.k0 < b.k0;
+        }
+        if a.k1 != b.k1 {
+            return a.k1 < b.k1;
+        }
+        a.k2 < b.k2
+    }
+}
+
+/// 10-byte key + 90-byte payload, compared lexicographically on the key
+/// (paper's "100Bytes").
+#[derive(Copy, Clone)]
+#[repr(C)]
+pub struct Bytes100 {
+    pub key: [u8; 10],
+    pub payload: [u8; 90],
+}
+
+impl Default for Bytes100 {
+    fn default() -> Self {
+        Bytes100 {
+            key: [0; 10],
+            payload: [0; 90],
+        }
+    }
+}
+
+impl std::fmt::Debug for Bytes100 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes100({:?})", self.key)
+    }
+}
+
+impl PartialEq for Bytes100 {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Bytes100 {
+    /// Build a record whose key encodes `k` big-endian (so numeric order
+    /// equals lexicographic order) and whose payload is filler.
+    pub fn from_u64(k: u64) -> Self {
+        let mut key = [0u8; 10];
+        key[2..10].copy_from_slice(&k.to_be_bytes());
+        Bytes100 {
+            key,
+            payload: [0xAB; 90],
+        }
+    }
+    /// Lexicographic comparison of the 10-byte key.
+    #[inline(always)]
+    pub fn less(a: &Bytes100, b: &Bytes100) -> bool {
+        a.key < b.key
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PRNG — splitmix64 (seeding) + xoshiro256** (bulk), both public domain
+// algorithms, implemented from scratch.
+// ---------------------------------------------------------------------------
+
+/// SplitMix64: tiny, fast generator used to seed [`Xoshiro256`] and for
+/// cheap hashing in tests.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the workload generator's bulk PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Xoshiro256 {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift reduction
+    /// (negligibly biased for huge bounds; fine for workload generation).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed atomic (write, read) block-pointer pair — §4.2.
+// ---------------------------------------------------------------------------
+
+/// The paper stores each bucket's write pointer `w_i` and read pointer
+/// `r_i` in a single 128-bit word, modified atomically, so every thread
+/// sees a consistent view of both. Rust std has no stable `AtomicU128`;
+/// we pack two *signed 32-bit block indices* into one `AtomicU64`
+/// (see DESIGN.md §5 for why this preserves the semantics — block counts
+/// are far below 2³¹ at any feasible memory size).
+///
+/// `read` can legitimately become `d_i − 1 = −1` for the first bucket, so
+/// indices are signed.
+///
+/// Cache-line padded to avoid false sharing between adjacent buckets'
+/// pointer words (the paper reserves Θ(B) per pointer for the same
+/// reason).
+#[repr(align(128))]
+pub struct BucketPointers {
+    wr: AtomicU64,
+    /// Number of threads currently reading a block from this bucket; a
+    /// writer may only overwrite an *empty* slot once this drops to zero
+    /// (§4.2 data-race paragraph).
+    pending_reads: std::sync::atomic::AtomicU32,
+}
+
+/// Field bias: both indices are stored biased by 2³¹ so that in-range
+/// `fetch_sub(1)` on the read field never borrows into the write field
+/// (and `fetch_add` on either field never carries out). Without the bias,
+/// decrementing `r` from 0 to −1 would corrupt `w` — a bug our
+/// `sorter_reusable_across_types` test caught in an earlier revision.
+const BIAS: i64 = 1 << 31;
+
+#[inline(always)]
+fn pack(w: i32, r: i32) -> u64 {
+    (((w as i64 + BIAS) as u64) << 32) | ((r as i64 + BIAS) as u64)
+}
+
+#[inline(always)]
+fn unpack(v: u64) -> (i32, i32) {
+    (
+        (((v >> 32) & 0xFFFF_FFFF) as i64 - BIAS) as i32,
+        ((v & 0xFFFF_FFFF) as i64 - BIAS) as i32,
+    )
+}
+
+impl BucketPointers {
+    pub fn new() -> Self {
+        BucketPointers {
+            wr: AtomicU64::new(pack(0, -1)),
+            pending_reads: std::sync::atomic::AtomicU32::new(0),
+        }
+    }
+
+    /// (Re-)initialize for a partition step: `w = d_i`, `r` = last
+    /// non-empty block (or `d_i − 1` if none).
+    pub fn set(&self, w: i32, r: i32) {
+        self.wr.store(pack(w, r), Ordering::Release);
+        self.pending_reads.store(0, Ordering::Release);
+    }
+
+    /// Atomically load both pointers.
+    #[inline]
+    pub fn load(&self) -> (i32, i32) {
+        unpack(self.wr.load(Ordering::Acquire))
+    }
+
+    /// Atomically decrement the read pointer by `block` blocks and
+    /// register a pending read. Returns the *pre-decrement* `(w, r)`.
+    /// The caller must call [`BucketPointers::finish_read`] once the block
+    /// is copied out.
+    #[inline]
+    pub fn fetch_dec_read(&self, block: i32) -> (i32, i32) {
+        self.pending_reads.fetch_add(1, Ordering::AcqRel);
+        let old = self.wr.fetch_sub(block as u32 as u64, Ordering::AcqRel);
+        unpack(old)
+    }
+
+    /// Undo the pending-read registration after the block copy completed
+    /// (or after an aborted acquisition).
+    #[inline]
+    pub fn finish_read(&self) {
+        self.pending_reads.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Atomically increment the write pointer by `block` blocks, returning
+    /// the *pre-increment* `(w, r)`.
+    #[inline]
+    pub fn fetch_inc_write(&self, block: i32) -> (i32, i32) {
+        let old = self
+            .wr
+            .fetch_add((block as u32 as u64) << 32, Ordering::AcqRel);
+        unpack(old)
+    }
+
+    /// True while some thread is mid-read on this bucket.
+    #[inline]
+    pub fn has_pending_reads(&self) -> bool {
+        self.pending_reads.load(Ordering::Acquire) != 0
+    }
+}
+
+impl Default for BucketPointers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Misc small helpers
+// ---------------------------------------------------------------------------
+
+/// `⌈a / b⌉` for positive integers.
+#[inline(always)]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `log₂` rounded down, with `log2_floor(0) == 0` by convention.
+#[inline(always)]
+pub fn log2_floor(x: usize) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        usize::BITS - 1 - x.leading_zeros()
+    }
+}
+
+/// `log₂` rounded up.
+#[inline(always)]
+pub fn log2_ceil(x: usize) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        usize::BITS - (x - 1).leading_zeros()
+    }
+}
+
+/// Check that `v` is sorted w.r.t. `is_less` (strict weak order).
+pub fn is_sorted_by<T, F: Fn(&T, &T) -> bool>(v: &[T], is_less: F) -> bool {
+    v.windows(2).all(|w| !is_less(&w[1], &w[0]))
+}
+
+/// Order-independent multiset fingerprint of elements under a key
+/// projection — used by tests to prove no element is lost or duplicated.
+pub fn multiset_fingerprint<T: Copy>(v: &[T], key: impl Fn(&T) -> u64) -> u64 {
+    // Sum + xor of per-element hashes commutes, so it is order-independent.
+    let mut sum: u64 = 0;
+    let mut xor: u64 = 0;
+    for e in v {
+        let mut h = SplitMix64::new(key(e));
+        let x = h.next_u64();
+        sum = sum.wrapping_add(x);
+        xor ^= x.rotate_left(17);
+    }
+    sum ^ xor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_nontrivial() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn xoshiro_known_seed_changes_with_seed() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn next_below_respects_bound() {
+        let mut r = Xoshiro256::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u32::MAX as u64] {
+            for _ in 0..100 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bucket_pointers_pack_unpack_roundtrip() {
+        for (w, r) in [(0, -1), (5, 17), (-1, -1), (i32::MAX, 0), (0, i32::MAX)] {
+            let (w2, r2) = unpack(pack(w, r));
+            assert_eq!((w, r), (w2, r2));
+        }
+    }
+
+    #[test]
+    fn bucket_pointers_atomic_ops() {
+        let p = BucketPointers::new();
+        p.set(10, 20);
+        assert_eq!(p.load(), (10, 20));
+        let (w, r) = p.fetch_dec_read(1);
+        assert_eq!((w, r), (10, 20));
+        assert!(p.has_pending_reads());
+        p.finish_read();
+        assert!(!p.has_pending_reads());
+        assert_eq!(p.load(), (10, 19));
+        let (w, r) = p.fetch_inc_write(1);
+        assert_eq!((w, r), (10, 19));
+        assert_eq!(p.load(), (11, 19));
+    }
+
+    #[test]
+    fn decrementing_read_through_zero_must_not_corrupt_write() {
+        // Regression: an unbiased packed fetch_sub borrows from the write
+        // field when r crosses 0.
+        let p = BucketPointers::new();
+        p.set(5, 0);
+        let (w, r) = p.fetch_dec_read(1);
+        assert_eq!((w, r), (5, 0));
+        p.finish_read();
+        assert_eq!(p.load(), (5, -1), "write pointer corrupted by borrow");
+        // And incrementing the write field never carries anywhere.
+        p.set(i32::MAX - 1, -5);
+        p.fetch_inc_write(1);
+        assert_eq!(p.load(), (i32::MAX, -5));
+    }
+
+    #[test]
+    fn bucket_pointers_read_can_go_below_zero() {
+        let p = BucketPointers::new();
+        p.set(0, 0);
+        p.fetch_dec_read(1);
+        p.finish_read();
+        assert_eq!(p.load(), (0, -1));
+        p.fetch_dec_read(1);
+        p.finish_read();
+        assert_eq!(p.load(), (0, -2));
+    }
+
+    #[test]
+    fn quartet_lexicographic() {
+        let a = Quartet::new(1.0, 5.0, 9.0, 0.0);
+        let b = Quartet::new(1.0, 6.0, 0.0, 0.0);
+        assert!(Quartet::less(&a, &b));
+        assert!(!Quartet::less(&b, &a));
+        let c = Quartet::new(1.0, 5.0, 9.0, 123.0);
+        assert!(!Quartet::less(&a, &c) && !Quartet::less(&c, &a));
+    }
+
+    #[test]
+    fn bytes100_numeric_order_matches_lexicographic() {
+        let a = Bytes100::from_u64(3);
+        let b = Bytes100::from_u64(300);
+        assert!(Bytes100::less(&a, &b));
+        assert!(!Bytes100::less(&b, &a));
+    }
+
+    #[test]
+    fn fingerprint_order_independent_and_sensitive() {
+        let v1 = vec![1u64, 2, 3, 4, 5];
+        let v2 = vec![5u64, 3, 1, 2, 4];
+        let v3 = vec![1u64, 2, 3, 4, 4];
+        let f = |x: &u64| *x;
+        assert_eq!(multiset_fingerprint(&v1, f), multiset_fingerprint(&v2, f));
+        assert_ne!(multiset_fingerprint(&v1, f), multiset_fingerprint(&v3, f));
+    }
+
+    #[test]
+    fn log2_helpers() {
+        assert_eq!(log2_floor(1), 0);
+        assert_eq!(log2_floor(2), 1);
+        assert_eq!(log2_floor(3), 1);
+        assert_eq!(log2_floor(256), 8);
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(256), 8);
+        assert_eq!(log2_ceil(257), 9);
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+}

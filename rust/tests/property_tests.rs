@@ -1,0 +1,195 @@
+//! Property-based tests (hand-rolled seeded generator loops — proptest
+//! is unavailable offline). The invariant under test for every algorithm
+//! and configuration: **output sorted ∧ multiset preserved**.
+
+use ips4o::config::Config;
+use ips4o::datagen::Distribution;
+use ips4o::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+
+fn lt(a: &u64, b: &u64) -> bool {
+    a < b
+}
+
+/// Draw a random input: size, value range (controls duplicate density),
+/// and pattern mix.
+fn random_input(rng: &mut Xoshiro256) -> Vec<u64> {
+    let n = rng.next_below(30_000) as usize;
+    let shape = rng.next_below(6);
+    let range_bits = rng.next_below(40);
+    let range = 1 + rng.next_below(1 << range_bits);
+    match shape {
+        0 => (0..n).map(|_| rng.next_below(range)).collect(), // uniform in range
+        1 => (0..n as u64).collect(),                         // sorted
+        2 => (0..n as u64).rev().collect(),                   // reversed
+        3 => (0..n as u64).map(|i| i % range.max(1)).collect(), // cyclic dups
+        4 => {
+            // sorted with random corruptions
+            let mut v: Vec<u64> = (0..n as u64).collect();
+            for _ in 0..(n / 20).max(1) {
+                if n > 0 {
+                    let i = rng.next_below(n as u64) as usize;
+                    v[i] = rng.next_below(range);
+                }
+            }
+            v
+        }
+        _ => vec![rng.next_below(3); n], // near-constant
+    }
+}
+
+/// Draw a random (legal) configuration.
+fn random_config(rng: &mut Xoshiro256) -> Config {
+    Config::default()
+        .with_max_buckets(2 << rng.next_below(7)) // 2..=256
+        .with_block_bytes(64 << rng.next_below(6)) // 64..=2048
+        .with_base_case(1 + rng.next_below(32) as usize)
+        .with_equality_buckets(rng.next_below(2) == 0)
+        .with_threads(1 + rng.next_below(6) as usize)
+}
+
+#[test]
+fn property_sequential_random_configs() {
+    let mut rng = Xoshiro256::new(0xA11CE);
+    for trial in 0..60 {
+        let cfg = random_config(&mut rng);
+        let v0 = random_input(&mut rng);
+        let fp = multiset_fingerprint(&v0, |x| *x);
+        let mut v = v0.clone();
+        ips4o::sequential::sort_by(&mut v, &cfg, &lt);
+        assert!(
+            is_sorted_by(&v, lt),
+            "trial {trial}: not sorted (n={}, cfg={cfg:?})",
+            v.len()
+        );
+        assert_eq!(
+            fp,
+            multiset_fingerprint(&v, |x| *x),
+            "trial {trial}: multiset changed"
+        );
+    }
+}
+
+#[test]
+fn property_parallel_random_configs() {
+    let mut rng = Xoshiro256::new(0xB0B);
+    for trial in 0..40 {
+        let cfg = random_config(&mut rng);
+        let sorter = ips4o::Sorter::new(cfg.clone());
+        let mut v = random_input(&mut rng);
+        // Scale some inputs up so the parallel path actually engages.
+        if trial % 3 == 0 {
+            let extra = random_input(&mut rng);
+            v.extend(extra);
+            v.extend(v.clone());
+            v.extend(v.clone());
+        }
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let n = v.len();
+        sorter.sort(&mut v);
+        assert!(is_sorted_by(&v, lt), "trial {trial}: not sorted (n={n})");
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn property_strictly_inplace_random() {
+    let mut rng = Xoshiro256::new(0x57121C7);
+    for trial in 0..40 {
+        let cfg = random_config(&mut rng);
+        let mut v = random_input(&mut rng);
+        let fp = multiset_fingerprint(&v, |x| *x);
+        ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &cfg, &lt);
+        assert!(is_sorted_by(&v, lt), "trial {trial}");
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn property_baselines_random() {
+    let mut rng = Xoshiro256::new(0xBA5E);
+    for trial in 0..30 {
+        let v0 = random_input(&mut rng);
+        let fp = multiset_fingerprint(&v0, |x| *x);
+        let runs: Vec<(&str, Box<dyn Fn(&mut Vec<u64>)>)> = vec![
+            ("introsort", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::introsort::sort_by(v, &lt)
+            })),
+            ("dualpivot", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::dualpivot::sort_by(v, &lt)
+            })),
+            ("blockq", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::blockquicksort::sort_by(v, &lt)
+            })),
+            ("s3sort", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::s3sort::sort_by(v, &lt)
+            })),
+            ("mwm", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::par_mergesort::sort_by(v, 3, &lt)
+            })),
+            ("pbbs", Box::new(|v: &mut Vec<u64>| {
+                ips4o::baselines::pbbs_samplesort::sort_by(v, 3, &lt)
+            })),
+        ];
+        for (name, run) in runs {
+            let mut v = v0.clone();
+            run(&mut v);
+            assert!(is_sorted_by(&v, lt), "{name} trial {trial} (n={})", v0.len());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{name} trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn property_partition_step_invariants() {
+    // After one partition step: bounds cover the range, buckets are
+    // value-disjoint and ordered, equality buckets constant.
+    let mut rng = Xoshiro256::new(0x9A97171);
+    for trial in 0..30 {
+        let cfg = Config::default()
+            .with_max_buckets(2 << rng.next_below(7))
+            .with_block_bytes(64 << rng.next_below(6));
+        let n = 1000 + rng.next_below(50_000) as usize;
+        let range_bits = rng.next_below(32);
+        let range = 1 + rng.next_below(1 << range_bits);
+        let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(range)).collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let mut ctx = ips4o::sequential::SeqContext::new(cfg, trial as u64);
+        let Some(step) = ips4o::sequential::partition_step(&mut v, &mut ctx, &lt, false) else {
+            continue;
+        };
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
+        assert_eq!(*step.bounds.first().unwrap(), 0);
+        assert_eq!(*step.bounds.last().unwrap(), n);
+        let mut prev_max: Option<u64> = None;
+        for i in 0..step.bounds.len() - 1 {
+            let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+            if s == e {
+                continue;
+            }
+            let lo = *v[s..e].iter().min().unwrap();
+            let hi = *v[s..e].iter().max().unwrap();
+            if let Some(pm) = prev_max {
+                assert!(pm <= lo, "trial {trial}: bucket {i} overlaps previous");
+            }
+            prev_max = Some(hi);
+            if step.equality[i] {
+                assert_eq!(lo, hi, "trial {trial}: equality bucket {i} not constant");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_search_next_larger_oracle() {
+    let mut rng = Xoshiro256::new(0x5EA7C4);
+    for _ in 0..200 {
+        let n = 1 + rng.next_below(500) as usize;
+        let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(100)).collect();
+        v.sort_unstable();
+        let from = rng.next_below(n as u64 + 1) as usize;
+        let x = rng.next_below(110);
+        let got = ips4o::strictly_inplace::search_next_larger(&x, &v, from, &lt);
+        let want = (from..n).find(|&i| v[i] > x).unwrap_or(n);
+        assert_eq!(got, want, "v={v:?} from={from} x={x}");
+    }
+}

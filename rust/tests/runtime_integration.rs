@@ -1,0 +1,105 @@
+//! Integration tests for the PJRT runtime path: load the AOT artifacts
+//! produced by `make artifacts` and validate the XLA-executed classifier
+//! against the native Rust classifier.
+//!
+//! These tests are skipped (with a loud message) when the artifacts have
+//! not been built.
+
+use ips4o::runtime::{classify_reference, default_artifact, Engine, XlaClassifier, CHUNK};
+use ips4o::util::Xoshiro256;
+
+fn artifact_or_skip(name: &str) -> Option<String> {
+    let path = default_artifact(name);
+    if std::path::Path::new(&path).exists() {
+        Some(path)
+    } else {
+        eprintln!("SKIP: {path} missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn engine_creates_cpu_client() {
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let platform = engine.platform();
+    assert!(
+        platform.to_lowercase().contains("cpu") || platform.to_lowercase().contains("host"),
+        "unexpected platform: {platform}"
+    );
+}
+
+#[test]
+fn classify_artifact_matches_reference() {
+    let Some(path) = artifact_or_skip("classify.hlo.txt") else {
+        return;
+    };
+    let engine = Engine::cpu().expect("engine");
+    let mut rng = Xoshiro256::new(42);
+    let splitters: Vec<f32> = (1..256).map(|i| i as f32 * 4.0).collect();
+    let clf = XlaClassifier::new(&engine, &path, &splitters).expect("load artifact");
+
+    let elems: Vec<f32> = (0..CHUNK).map(|_| rng.next_f64() as f32 * 1100.0).collect();
+    let got = clf.classify(&elems).expect("classify");
+    let want = classify_reference(&elems, &splitters);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn classify_artifact_handles_padding() {
+    let Some(path) = artifact_or_skip("classify.hlo.txt") else {
+        return;
+    };
+    let engine = Engine::cpu().expect("engine");
+    let splitters: Vec<f32> = vec![10.0, 20.0, 30.0]; // padded internally
+    let clf = XlaClassifier::new(&engine, &path, &splitters).expect("load");
+
+    // Non-multiple-of-CHUNK length exercises the padding path. The
+    // reference must count the *padded* splitters (elements ≥ the max
+    // splitter land in the last bucket, like the native classifier).
+    let elems: Vec<f32> = vec![5.0, 10.0, 15.0, 25.0, 35.0];
+    let got = clf.classify(&elems).expect("classify");
+    let want = classify_reference(&elems, clf.padded_splitters());
+    assert_eq!(got.len(), elems.len());
+    assert_eq!(got, want);
+    assert_eq!(got[..3], [0, 1, 1]); // below the padded run: canonical ids
+}
+
+#[test]
+fn classify_chunk_histogram_consistent() {
+    let Some(path) = artifact_or_skip("classify.hlo.txt") else {
+        return;
+    };
+    let engine = Engine::cpu().expect("engine");
+    let mut rng = Xoshiro256::new(7);
+    let splitters: Vec<f32> = (1..256).map(|i| i as f32).collect();
+    let clf = XlaClassifier::new(&engine, &path, &splitters).expect("load");
+
+    let chunk: Vec<f32> = (0..CHUNK).map(|_| rng.next_f64() as f32 * 300.0).collect();
+    let (ids, hist) = clf.classify_chunk(&chunk).expect("chunk");
+    assert_eq!(ids.len(), CHUNK);
+    assert_eq!(hist.iter().sum::<u32>() as usize, CHUNK);
+    // Histogram must match the ids.
+    let mut counts = vec![0u32; hist.len()];
+    for &b in &ids {
+        counts[b as usize] += 1;
+    }
+    assert_eq!(counts, hist);
+}
+
+#[test]
+fn sample_splitters_artifact_loads_and_runs() {
+    let Some(path) = artifact_or_skip("sample_splitters.hlo.txt") else {
+        return;
+    };
+    let engine = Engine::cpu().expect("engine");
+    let exe = engine.load_hlo_text(&path).expect("compile");
+    let mut rng = Xoshiro256::new(3);
+    let sample: Vec<f32> = (0..4096).map(|_| rng.next_f64() as f32).collect();
+    let lit = xla::Literal::vec1(&sample);
+    let result = exe.execute::<xla::Literal>(&[lit]).expect("exec")[0][0]
+        .to_literal_sync()
+        .expect("literal");
+    let spl: Vec<f32> = result.to_tuple1().expect("tuple").to_vec().expect("vec");
+    assert_eq!(spl.len(), 255);
+    assert!(spl.windows(2).all(|w| w[0] <= w[1]), "splitters not sorted");
+}

@@ -1,0 +1,191 @@
+//! Integration tests across the whole stack: Sorter API, parallel
+//! scheduler, strictly-in-place driver, all baselines, all element
+//! types, cross-algorithm agreement.
+
+use ips4o::baselines;
+use ips4o::datagen::{self, Distribution};
+use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Quartet};
+use ips4o::{Config, Sorter};
+
+fn lt(a: &u64, b: &u64) -> bool {
+    a < b
+}
+
+#[test]
+fn all_algorithms_agree_on_all_distributions() {
+    let n = 30_000;
+    for d in Distribution::ALL {
+        let base = datagen::gen_u64(d, n, 123);
+        let mut expected = base.clone();
+        expected.sort_unstable();
+
+        let check = |name: &str, v: Vec<u64>| {
+            assert_eq!(v, expected, "{name} disagrees on {}", d.name());
+        };
+
+        let mut v = base.clone();
+        ips4o::sort(&mut v);
+        check("IS4o", v);
+
+        let mut v = base.clone();
+        ips4o::sort_par(&mut v);
+        check("IPS4o", v);
+
+        let mut v = base.clone();
+        ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
+        check("IS4o-strict", v);
+
+        let mut v = base.clone();
+        baselines::introsort::sort_by(&mut v, &lt);
+        check("introsort", v);
+
+        let mut v = base.clone();
+        baselines::dualpivot::sort_by(&mut v, &lt);
+        check("dualpivot", v);
+
+        let mut v = base.clone();
+        baselines::blockquicksort::sort_by(&mut v, &lt);
+        check("blockquicksort", v);
+
+        let mut v = base.clone();
+        baselines::s3sort::sort_by(&mut v, &lt);
+        check("s3sort", v);
+
+        let mut v = base.clone();
+        baselines::par_quicksort::sort_unbalanced(&mut v, 4, &lt);
+        check("par_qsort_ub", v);
+
+        let mut v = base.clone();
+        baselines::par_quicksort::sort_balanced(&mut v, 4, &lt);
+        check("par_qsort_b", v);
+
+        let mut v = base.clone();
+        baselines::par_mergesort::sort_by(&mut v, 4, &lt);
+        check("par_mergesort", v);
+
+        let mut v = base.clone();
+        baselines::pbbs_samplesort::sort_by(&mut v, 4, &lt);
+        check("pbbs", v);
+
+        let mut v = base.clone();
+        baselines::tbb_like::sort_by(&mut v, 4, &lt);
+        check("tbb", v);
+    }
+}
+
+#[test]
+fn large_parallel_sort_multiple_big_tasks() {
+    // Big enough that the scheduler partitions several "big" tasks.
+    let n = 2_000_000;
+    let mut v = datagen::gen_u64(Distribution::Uniform, n, 9);
+    let fp = multiset_fingerprint(&v, |x| *x);
+    let sorter = Sorter::new(Config::default().with_threads(4));
+    sorter.sort(&mut v);
+    assert!(is_sorted_by(&v, lt));
+    assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+}
+
+#[test]
+fn parallel_duplicate_heavy_equality_path() {
+    let n = 1_000_000;
+    let mut v = datagen::gen_u64(Distribution::RootDup, n, 5);
+    let fp = multiset_fingerprint(&v, |x| *x);
+    let sorter = Sorter::new(Config::default().with_threads(8));
+    sorter.sort(&mut v);
+    assert!(is_sorted_by(&v, lt));
+    assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+}
+
+#[test]
+fn composite_types_parallel() {
+    let n = 300_000;
+    let sorter = Sorter::new(Config::default().with_threads(4));
+
+    let mut p = datagen::gen_pair(Distribution::TwoDup, n, 2);
+    sorter.sort_by(&mut p, &Pair::less);
+    assert!(is_sorted_by(&p, Pair::less));
+
+    let mut q = datagen::gen_quartet(Distribution::Uniform, n, 2);
+    sorter.sort_by(&mut q, &Quartet::less);
+    assert!(is_sorted_by(&q, Quartet::less));
+
+    let mut b = datagen::gen_bytes100(Distribution::Exponential, 60_000, 2);
+    sorter.sort_by(&mut b, &Bytes100::less);
+    assert!(is_sorted_by(&b, Bytes100::less));
+}
+
+#[test]
+fn f64_total_order_with_nan_free_data() {
+    let n = 500_000;
+    let mut v = datagen::gen_f64(Distribution::Exponential, n, 7);
+    let sorter = Sorter::new(Config::default().with_threads(4));
+    sorter.sort_by(&mut v, &|a: &f64, b: &f64| a < b);
+    assert!(is_sorted_by(&v, |a: &f64, b: &f64| a < b));
+}
+
+#[test]
+fn sorter_survives_many_calls() {
+    let sorter = Sorter::new(Config::default().with_threads(4));
+    for seed in 0..20 {
+        let mut v = datagen::gen_u64(Distribution::Uniform, 50_000, seed);
+        sorter.sort(&mut v);
+        assert!(is_sorted_by(&v, lt));
+    }
+}
+
+#[test]
+fn stability_of_bucket_boundaries_across_configs() {
+    // Different k/b configs must all produce identical sorted output.
+    let base = datagen::gen_u64(Distribution::EightDup, 100_000, 11);
+    let mut expected = base.clone();
+    expected.sort_unstable();
+    for (k, bb) in [(4usize, 256usize), (16, 512), (64, 1024), (256, 4096)] {
+        let cfg = Config::default()
+            .with_max_buckets(k)
+            .with_block_bytes(bb)
+            .with_threads(3);
+        let sorter = Sorter::new(cfg);
+        let mut v = base.clone();
+        sorter.sort(&mut v);
+        assert_eq!(v, expected, "k={k} bb={bb}");
+    }
+}
+
+#[test]
+fn zero_one_two_element_inputs_everywhere() {
+    for n in [0usize, 1, 2] {
+        let mut v: Vec<u64> = (0..n as u64).rev().collect();
+        ips4o::sort(&mut v);
+        assert!(is_sorted_by(&v, lt));
+        let mut v: Vec<u64> = (0..n as u64).rev().collect();
+        ips4o::sort_par(&mut v);
+        assert!(is_sorted_by(&v, lt));
+    }
+}
+
+#[test]
+fn adversarial_patterns() {
+    let n = 200_000u64;
+    let patterns: Vec<(&str, Vec<u64>)> = vec![
+        ("organ_pipe", (0..n / 2).chain((0..n / 2).rev()).collect()),
+        ("sawtooth", (0..n).map(|i| i % 17).collect()),
+        ("two_values", (0..n).map(|i| i % 2).collect()),
+        ("runs", (0..n).map(|i| (i / 1000) ^ (i % 7)).collect()),
+        (
+            "mostly_zero",
+            (0..n).map(|i| if i % 1000 == 0 { i } else { 0 }).collect(),
+        ),
+    ];
+    let sorter = Sorter::new(Config::default().with_threads(4));
+    for (name, base) in patterns {
+        let fp = multiset_fingerprint(&base, |x| *x);
+        let mut v = base.clone();
+        sorter.sort(&mut v);
+        assert!(is_sorted_by(&v, lt), "{name}");
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{name}");
+
+        let mut v = base;
+        ips4o::sequential::sort_by(&mut v, &Config::default(), &lt);
+        assert!(is_sorted_by(&v, lt), "{name} (seq)");
+    }
+}

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Canonical verification gate for this repo (referenced from ROADMAP.md).
+#
+#   ./ci.sh           build + tests + format check
+#   ./ci.sh --fast    build + tests only
+#
+# The crate is dependency-free and builds fully offline.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check (advisory) =="
+        # Advisory until it has been seen green once: parts of the tree
+        # predate rustfmt enforcement. Run `cargo fmt` in rust/ to fix
+        # drift, then make this strict by removing the `|| ...` fallback.
+        cargo fmt --check || echo "WARNING: formatting drift detected (non-blocking)"
+    else
+        echo "== cargo fmt unavailable in this toolchain; skipping format check =="
+    fi
+fi
+
+echo "ci: all green"

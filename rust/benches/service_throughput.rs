@@ -1,0 +1,112 @@
+//! Service-layer throughput: a batch of many small sort jobs pushed
+//! through the batching [`SortService`] vs looping `Sorter::sort` per
+//! job (per-job cooperative-parallel scheduling) vs a plain sequential
+//! `sort_unstable` loop.
+//!
+//! The service's claim: small jobs batched into one parallel pass over
+//! reusable scratch arenas beat per-job parallel dispatch, because a
+//! 10k-element job can never amortize the barriers of a cooperative
+//! partition step — but a bin of ~hundreds of such jobs amortizes one
+//! pool dispatch over all of them, with zero steady-state allocation.
+
+use ips4o::bench_harness::{bench, print_machine_info, Table};
+use ips4o::datagen::{gen_u64, Distribution};
+use ips4o::util::is_sorted_by;
+use ips4o::{Config, SortService, Sorter};
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let num_jobs: usize = if full { 4000 } else { 1000 };
+    let job_size: usize = 10_000;
+    let total = num_jobs * job_size;
+    println!(
+        "# service throughput — {num_jobs} jobs x {job_size} u64 elements, t={threads}\n"
+    );
+
+    let make_jobs = || -> Vec<Vec<u64>> {
+        (0..num_jobs)
+            .map(|i| {
+                gen_u64(
+                    Distribution::ALL[i % Distribution::ALL.len()],
+                    job_size,
+                    i as u64,
+                )
+            })
+            .collect()
+    };
+
+    let cfg = Config::default().with_threads(threads);
+
+    // Correctness spot-check outside the timed region.
+    let svc = SortService::new(cfg.clone());
+    svc.warm::<u64>();
+    {
+        let jobs = make_jobs();
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        for t in tickets {
+            let v = t.wait();
+            assert!(is_sorted_by(&v, |a, b| a < b), "service result not sorted");
+        }
+    }
+    let warm = svc.metrics();
+
+    // (a) per-job Sorter::sort — each small job pays parallel dispatch.
+    let sorter = Sorter::new(cfg.clone());
+    let m_loop = bench(total, 3, &make_jobs, |mut jobs| {
+        for j in jobs.iter_mut() {
+            sorter.sort(j);
+        }
+        jobs
+    });
+
+    // (b) plain sequential std sort loop, for scale.
+    let m_std = bench(total, 3, &make_jobs, |mut jobs| {
+        for j in jobs.iter_mut() {
+            j.sort_unstable();
+        }
+        jobs
+    });
+
+    // (c) the batched service: submit everything, wait for everything.
+    let m_svc = bench(total, 3, &make_jobs, |jobs| {
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        tickets.into_iter().map(|t| t.wait()).collect::<Vec<_>>()
+    });
+
+    let d = svc.metrics().delta(&warm);
+
+    let mut t = Table::new(&["path", "batch ms", "M elem/s", "vs loop"]);
+    let row = |name: &str, m: &ips4o::bench_harness::Measurement| {
+        vec![
+            name.to_string(),
+            format!("{:.1}", m.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m.throughput() / 1e6),
+            format!(
+                "{:.2}x",
+                m_loop.mean.as_secs_f64() / m.mean.as_secs_f64()
+            ),
+        ]
+    };
+    t.row(row("Sorter::sort per job", &m_loop));
+    t.row(row("sort_unstable per job", &m_std));
+    t.row(row("SortService (batched)", &m_svc));
+    t.print();
+
+    println!(
+        "\nservice steady state: {} jobs, {} batches, {} scratch reuses, {} scratch allocations",
+        d.jobs_completed, d.batches_dispatched, d.scratch_reuses, d.scratch_allocations
+    );
+    if m_svc.mean <= m_loop.mean {
+        println!("PASS: batched service >= per-job Sorter loop");
+    } else {
+        println!(
+            "FAIL: service slower than per-job loop ({:.1} ms vs {:.1} ms)",
+            m_svc.mean.as_secs_f64() * 1e3,
+            m_loop.mean.as_secs_f64() * 1e3
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Reusable scratch arenas, type-erased per element type.
+//!
+//! IPS⁴o's premise is a distribution step with O(1) extra memory per
+//! thread — but the *one-shot* entry points still pay that O(1) as fresh
+//! heap allocations (swap blocks, overflow block, k distribution buffers,
+//! bucket-pointer arrays) on **every call**. Under repeated use (the
+//! [`Sorter`] façade, and especially the batching
+//! [`SortService`](crate::service::SortService)) those allocations
+//! dominate small sorts. The journal follow-up to the paper (Axtmann et
+//! al. 2020, *Engineering In-place (Shared-memory) Sorting Algorithms*)
+//! makes the same move: keep per-thread buffers and the scheduler state
+//! alive across invocations.
+//!
+//! [`ArenaPool`] is a checkout/checkin pool of such scratch state. One
+//! pool serves jobs of *any* element type: arenas are stored behind
+//! `Box<dyn Any + Send>` and keyed by their concrete `TypeId`
+//! ([`crate::sequential::SeqContext<u64>`] and
+//! [`crate::task_scheduler::ParScratch<u64>`] live in different slots).
+//! Checkouts that find a recycled arena count as *reuses*; empty-slot
+//! checkouts build a new arena and count as *allocations* — the
+//! [`ScratchCounters`] deltas are how tests prove a warm service
+//! performs zero steady-state scratch allocation.
+//!
+//! [`Sorter`]: crate::sorter::Sorter
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::ScratchCounters;
+
+/// A pool of reusable, type-erased scratch arenas.
+///
+/// Thread-safe: any number of threads may check arenas out concurrently;
+/// the pool never hands the same arena to two callers. The number of
+/// live arenas per type converges to the peak checkout concurrency
+/// (≤ pool threads for the sort service), after which every checkout is
+/// a reuse.
+pub struct ArenaPool {
+    slots: Mutex<HashMap<TypeId, Vec<Box<dyn Any + Send>>>>,
+    counters: Arc<ScratchCounters>,
+}
+
+impl ArenaPool {
+    /// A pool reporting into its own private counter set.
+    pub fn new() -> Self {
+        Self::with_counters(Arc::new(ScratchCounters::new()))
+    }
+
+    /// A pool reporting into a shared counter set (the sort service
+    /// aggregates arena and dispatch metrics in one place).
+    pub fn with_counters(counters: Arc<ScratchCounters>) -> Self {
+        ArenaPool {
+            slots: Mutex::new(HashMap::new()),
+            counters,
+        }
+    }
+
+    /// The counters this pool reports into.
+    pub fn counters(&self) -> &Arc<ScratchCounters> {
+        &self.counters
+    }
+
+    /// Check out an arena of type `A`, building one with `make` only if
+    /// no recycled arena is available. Pair with [`ArenaPool::checkin`].
+    pub fn checkout<A: Any + Send>(&self, make: impl FnOnce() -> A) -> A {
+        let recycled = {
+            let mut slots = self.slots.lock().unwrap();
+            slots
+                .get_mut(&TypeId::of::<A>())
+                .and_then(|stack| stack.pop())
+        };
+        match recycled {
+            Some(boxed) => {
+                self.counters.scratch_reuses.fetch_add(1, Ordering::Relaxed);
+                // The slot is keyed by TypeId::of::<A>, so the downcast
+                // cannot fail.
+                *boxed.downcast::<A>().expect("arena slot type mismatch")
+            }
+            None => {
+                self.counters
+                    .scratch_allocations
+                    .fetch_add(1, Ordering::Relaxed);
+                make()
+            }
+        }
+    }
+
+    /// Return an arena to the pool for future reuse.
+    pub fn checkin<A: Any + Send>(&self, arena: A) {
+        let mut slots = self.slots.lock().unwrap();
+        slots
+            .entry(TypeId::of::<A>())
+            .or_default()
+            .push(Box::new(arena));
+    }
+
+    /// Number of idle (checked-in) arenas currently held, across types.
+    pub fn idle_arenas(&self) -> usize {
+        self.slots.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    /// Drop all idle arenas (frees their memory; counters are kept).
+    pub fn clear(&self) {
+        self.slots.lock().unwrap().clear();
+    }
+}
+
+impl Default for ArenaPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_allocates_then_reuses() {
+        let pool = ArenaPool::new();
+        let a: Vec<u64> = pool.checkout(|| vec![1, 2, 3]);
+        assert_eq!(pool.counters().snapshot().scratch_allocations, 1);
+        pool.checkin(a);
+        assert_eq!(pool.idle_arenas(), 1);
+        let b: Vec<u64> = pool.checkout(|| unreachable!("must reuse"));
+        assert_eq!(b, vec![1, 2, 3]);
+        let s = pool.counters().snapshot();
+        assert_eq!(s.scratch_allocations, 1);
+        assert_eq!(s.scratch_reuses, 1);
+    }
+
+    #[test]
+    fn distinct_types_get_distinct_slots() {
+        let pool = ArenaPool::new();
+        pool.checkin::<Vec<u64>>(vec![7]);
+        pool.checkin::<Vec<f64>>(vec![1.5]);
+        assert_eq!(pool.idle_arenas(), 2);
+        let f: Vec<f64> = pool.checkout(|| unreachable!());
+        assert_eq!(f, vec![1.5]);
+        let u: Vec<u64> = pool.checkout(|| unreachable!());
+        assert_eq!(u, vec![7]);
+        // A third type still allocates.
+        let s: String = pool.checkout(|| "fresh".to_string());
+        assert_eq!(s, "fresh");
+        assert_eq!(pool.counters().snapshot().scratch_allocations, 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_never_share_an_arena() {
+        let pool = Arc::new(ArenaPool::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let mut a: Vec<u64> = pool.checkout(Vec::new);
+                    // Exclusive ownership: our tag must survive the push.
+                    a.push(t * 1000 + i);
+                    assert_eq!(*a.last().unwrap(), t * 1000 + i);
+                    a.clear();
+                    pool.checkin(a);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.counters().snapshot();
+        assert_eq!(s.scratch_allocations + s.scratch_reuses, 200);
+        // At most one arena per concurrent thread was ever built.
+        assert!(s.scratch_allocations <= 4, "{}", s.scratch_allocations);
+        assert!(pool.idle_arenas() <= 4);
+    }
+
+    #[test]
+    fn clear_drops_idle_arenas() {
+        let pool = ArenaPool::new();
+        pool.checkin::<Vec<u8>>(vec![0; 1024]);
+        assert_eq!(pool.idle_arenas(), 1);
+        pool.clear();
+        assert_eq!(pool.idle_arenas(), 0);
+    }
+}

@@ -35,6 +35,18 @@ pub struct Config {
     /// Sort base-case buckets immediately during cleanup on the last
     /// recursion level (§4.7 cache-friendliness optimization).
     pub eager_base_case: bool,
+    /// Number of submission-queue shards in the [`SortService`]: clients
+    /// are spread round-robin over shards so concurrent submitters do not
+    /// contend on one lock.
+    ///
+    /// [`SortService`]: crate::service::SortService
+    pub service_shards: usize,
+    /// Jobs whose payload is below this many **bytes** are batched by the
+    /// service: many small sorts are packed into a single parallel pass
+    /// (one thread-pool dispatch for the whole batch) instead of each
+    /// paying cooperative-partition scheduling overhead. Jobs at or above
+    /// the threshold get the full parallel sort.
+    pub small_sort_bytes: usize,
 }
 
 impl Default for Config {
@@ -49,6 +61,8 @@ impl Default for Config {
             equality_buckets: true,
             single_level_threshold: 0, // derived: k * base_case_size
             eager_base_case: true,
+            service_shards: 4,
+            small_sort_bytes: 256 << 10, // 256 KiB ≈ where cooperative partitioning starts to win
         }
     }
 }
@@ -81,6 +95,19 @@ impl Config {
     /// Builder-style equality-bucket toggle.
     pub fn with_equality_buckets(mut self, on: bool) -> Self {
         self.equality_buckets = on;
+        self
+    }
+
+    /// Builder-style submission-shard count for the sort service (min 1).
+    pub fn with_service_shards(mut self, shards: usize) -> Self {
+        self.service_shards = shards.max(1);
+        self
+    }
+
+    /// Builder-style small-job byte threshold for service batching.
+    /// `0` disables batching (every job takes the parallel path).
+    pub fn with_small_sort_bytes(mut self, bytes: usize) -> Self {
+        self.small_sort_bytes = bytes;
         self
     }
 
@@ -217,5 +244,15 @@ mod tests {
     fn parallel_task_min_beta() {
         let c = Config::default().with_threads(8);
         assert_eq!(c.parallel_task_min(8000), 1000);
+    }
+
+    #[test]
+    fn service_knobs_defaults_and_builders() {
+        let c = Config::default();
+        assert_eq!(c.service_shards, 4);
+        assert_eq!(c.small_sort_bytes, 256 << 10);
+        let c = c.with_service_shards(0).with_small_sort_bytes(0);
+        assert_eq!(c.service_shards, 1, "shards clamp to at least one");
+        assert_eq!(c.small_sort_bytes, 0, "zero disables batching");
     }
 }

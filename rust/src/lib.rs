@@ -29,7 +29,38 @@
 //!
 //! Parallel sorting goes through [`sort_par`] / [`sort_par_by`], or
 //! through a reusable [`Sorter`] built from a [`config::Config`].
+//!
+//! ## Sort service
+//!
+//! Under repeated use, the one-shot entry points pay per-call scratch
+//! allocation and per-call scheduling. [`SortService`] is the serving
+//! layer: it owns a persistent thread pool plus a pool of reusable,
+//! type-erased scratch arenas ([`arena::ArenaPool`]), accepts concurrent
+//! jobs of mixed element types through a sharded submission queue, and
+//! batches small sorts into a single parallel pass. After warm-up a
+//! steady request stream performs **zero** scratch allocations
+//! (verifiable through [`SortService::metrics`]).
+//!
+//! ```
+//! use ips4o::{Config, SortService};
+//!
+//! let svc = SortService::new(Config::default().with_threads(2));
+//! svc.warm::<u64>(); // optional: pre-build arenas before traffic
+//!
+//! // Concurrent, mixed-type jobs; tickets resolve as batches complete.
+//! let a = svc.submit((0..10_000u64).rev().collect::<Vec<_>>());
+//! let b = svc.submit_by(vec![3.0f64, 1.0, 2.0], |x, y| x < y);
+//!
+//! let sorted = a.wait();
+//! assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+//! assert_eq!(b.wait(), vec![1.0, 2.0, 3.0]);
+//!
+//! let m = svc.metrics();
+//! assert_eq!(m.jobs_completed, 2);
+//! assert_eq!(m.elements_sorted, 10_003);
+//! ```
 
+pub mod arena;
 pub mod base_case;
 pub mod baselines;
 pub mod classifier;
@@ -43,6 +74,7 @@ pub mod pem;
 pub mod permutation;
 pub mod sampling;
 pub mod sequential;
+pub mod service;
 pub mod sorter;
 pub mod strictly_inplace;
 pub mod task_scheduler;
@@ -52,6 +84,7 @@ pub mod bench_harness;
 pub mod runtime;
 
 pub use config::Config;
+pub use service::{JobTicket, SortService};
 pub use sorter::Sorter;
 
 /// Sort `v` in place, sequentially (IS⁴o), using the element's natural order.

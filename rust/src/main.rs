@@ -12,6 +12,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("sort") => cmd_sort(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("selftest") => cmd_selftest(&args[1..]),
         Some("iovolume") => cmd_iovolume(&args[1..]),
         Some("info") => cmd_info(),
@@ -37,6 +38,7 @@ USAGE:
 
 COMMANDS:
     sort      generate a workload, sort it, verify, report throughput
+    serve     run the batched SortService under a synthetic request mix
     selftest  run all algorithms over all distributions and verify
     iovolume  reproduce Appendix B's I/O-volume comparison (PEM model)
     info      print machine/config info
@@ -56,6 +58,16 @@ FLAGS (sort):
     --block <bytes>    block size in bytes             [default: 2048]
     --seed <int>       workload seed                   [default: 42]
     --no-eq            disable equality buckets
+
+FLAGS (serve):
+    --clients <int>      concurrent client threads        [default: 4]
+    --jobs <int>         jobs submitted per client        [default: 200]
+    --n <int>            elements per small job           [default: 10k]
+    --large-every <int>  every k-th job is 32x larger (0 = never)
+                                                          [default: 50]
+    --threads <int>      service sort workers             [default: all cores]
+    --shards <int>       submission-queue shards          [default: 4]
+    --small-bytes <int>  batching threshold in bytes      [default: 262144]
 "#
     );
 }
@@ -95,6 +107,12 @@ fn build_config(args: &[String]) -> Config {
     }
     if args.iter().any(|a| a == "--no-eq") {
         cfg = cfg.with_equality_buckets(false);
+    }
+    if let Some(s) = parse_flag(args, "--shards").and_then(|s| s.parse().ok()) {
+        cfg = cfg.with_service_shards(s);
+    }
+    if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
+        cfg = cfg.with_small_sort_bytes(b);
     }
     cfg
 }
@@ -170,6 +188,128 @@ fn cmd_sort(args: &[String]) -> i32 {
     if ok {
         0
     } else {
+        1
+    }
+}
+
+/// Drive the batched [`ips4o::SortService`] with a synthetic request
+/// mix: N client threads concurrently submitting jobs of rotating
+/// element types (u64 / f64 / Pair / Bytes100), rotating distributions,
+/// and mixed sizes (mostly small, every k-th job 32× larger so both the
+/// batch path and the cooperative parallel path are exercised). Every
+/// result is verified sorted; steady-state allocation behavior is
+/// reported from the service metrics.
+fn cmd_serve(args: &[String]) -> i32 {
+    use ips4o::util::{is_sorted_by, Bytes100, Pair};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let clients: usize = parse_flag(args, "--clients")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let jobs: usize = parse_flag(args, "--jobs")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let n = parse_n(parse_flag(args, "--n").unwrap_or("10k"));
+    let large_every: usize = parse_flag(args, "--large-every")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let seed = parse_flag(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42u64);
+    let cfg = build_config(args);
+
+    println!(
+        "# serve: clients={clients} jobs/client={jobs} n={n} large_every={large_every} \
+         threads={} shards={} small_bytes={}",
+        cfg.threads, cfg.service_shards, cfg.small_sort_bytes
+    );
+
+    let svc = ips4o::SortService::new(cfg);
+    svc.warm::<u64>();
+    svc.warm::<f64>();
+    svc.warm::<Pair>();
+    svc.warm::<Bytes100>();
+    let warm = svc.metrics();
+
+    let failures = AtomicU64::new(0);
+    let total_elems = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            let failures = &failures;
+            let total_elems = &total_elems;
+            scope.spawn(move || {
+                let mut tu = Vec::new();
+                let mut tf = Vec::new();
+                let mut tp = Vec::new();
+                let mut tb = Vec::new();
+                for i in 0..jobs {
+                    let sz = if large_every > 0 && i % large_every == large_every - 1 {
+                        n * 32
+                    } else {
+                        n
+                    };
+                    let s = seed ^ ((c as u64) << 32) ^ i as u64;
+                    let dist = Distribution::ALL[i % Distribution::ALL.len()];
+                    match i % 4 {
+                        0 => tu.push(svc.submit(datagen::gen_u64(dist, sz, s))),
+                        1 => tf.push(
+                            svc.submit_by(datagen::gen_f64(dist, sz, s), |a: &f64, b: &f64| a < b),
+                        ),
+                        2 => tp.push(svc.submit_by(datagen::gen_pair(dist, sz, s), Pair::less)),
+                        _ => tb.push(
+                            svc.submit_by(datagen::gen_bytes100(dist, sz, s), Bytes100::less),
+                        ),
+                    }
+                }
+                let count = |len: u64, ok: bool| {
+                    total_elems.fetch_add(len, Ordering::Relaxed);
+                    if !ok {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                };
+                for t in tu {
+                    let v = t.wait();
+                    count(v.len() as u64, is_sorted_by(&v, |a, b| a < b));
+                }
+                for t in tf {
+                    let v = t.wait();
+                    count(v.len() as u64, is_sorted_by(&v, |a: &f64, b: &f64| a < b));
+                }
+                for t in tp {
+                    let v = t.wait();
+                    count(v.len() as u64, is_sorted_by(&v, Pair::less));
+                }
+                for t in tb {
+                    let v = t.wait();
+                    count(v.len() as u64, is_sorted_by(&v, Bytes100::less));
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let d = svc.metrics().delta(&warm);
+    let total_jobs = (clients * jobs) as f64;
+
+    println!(
+        "jobs: {} | elements: {} | time: {:.3}s | {:.0} jobs/s | {:.2} M elem/s",
+        clients * jobs,
+        total_elems.load(Ordering::Relaxed),
+        secs,
+        total_jobs / secs,
+        total_elems.load(Ordering::Relaxed) as f64 / secs / 1e6,
+    );
+    println!(
+        "metrics: batches={} jobs_completed={} scratch_reuses={} scratch_allocations={}",
+        d.batches_dispatched, d.jobs_completed, d.scratch_reuses, d.scratch_allocations
+    );
+    let fails = failures.load(Ordering::Relaxed);
+    if fails == 0 {
+        println!("serve: all results verified sorted");
+        0
+    } else {
+        println!("serve: {fails} FAILURES");
         1
     }
 }

@@ -74,6 +74,80 @@ impl CounterSnapshot {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scratch-arena / sort-service counters
+// ---------------------------------------------------------------------------
+
+/// Allocation/reuse accounting for the reusable scratch arenas
+/// ([`crate::arena::ArenaPool`]) and the batching [`SortService`].
+///
+/// Unlike [`Counters`] these are *per-instance* (each `ArenaPool` /
+/// `SortService` owns one), so tests can assert exact deltas — e.g. that
+/// a warm service performs **zero** scratch allocations — without
+/// interference from concurrently running tests.
+///
+/// [`SortService`]: crate::service::SortService
+#[derive(Default)]
+pub struct ScratchCounters {
+    /// Scratch arenas constructed from fresh heap allocations.
+    pub scratch_allocations: AtomicU64,
+    /// Scratch checkouts served by recycling a previously built arena.
+    pub scratch_reuses: AtomicU64,
+    /// Sort jobs fully completed (service only).
+    pub jobs_completed: AtomicU64,
+    /// Dispatch rounds executed by the service (each drains the
+    /// submission shards once).
+    pub batches_dispatched: AtomicU64,
+    /// Total elements sorted through the owning instance.
+    pub elements_sorted: AtomicU64,
+}
+
+impl ScratchCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn reset(&self) {
+        self.scratch_allocations.store(0, Ordering::Relaxed);
+        self.scratch_reuses.store(0, Ordering::Relaxed);
+        self.jobs_completed.store(0, Ordering::Relaxed);
+        self.batches_dispatched.store(0, Ordering::Relaxed);
+        self.elements_sorted.store(0, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ScratchSnapshot {
+        ScratchSnapshot {
+            scratch_allocations: self.scratch_allocations.load(Ordering::Relaxed),
+            scratch_reuses: self.scratch_reuses.load(Ordering::Relaxed),
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            batches_dispatched: self.batches_dispatched.load(Ordering::Relaxed),
+            elements_sorted: self.elements_sorted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain-value snapshot of [`ScratchCounters`].
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScratchSnapshot {
+    pub scratch_allocations: u64,
+    pub scratch_reuses: u64,
+    pub jobs_completed: u64,
+    pub batches_dispatched: u64,
+    pub elements_sorted: u64,
+}
+
+impl ScratchSnapshot {
+    pub fn delta(&self, earlier: &ScratchSnapshot) -> ScratchSnapshot {
+        ScratchSnapshot {
+            scratch_allocations: self.scratch_allocations - earlier.scratch_allocations,
+            scratch_reuses: self.scratch_reuses - earlier.scratch_reuses,
+            jobs_completed: self.jobs_completed - earlier.jobs_completed,
+            batches_dispatched: self.batches_dispatched - earlier.batches_dispatched,
+            elements_sorted: self.elements_sorted - earlier.elements_sorted,
+        }
+    }
+}
+
 /// Wrap `is_less` so every invocation counts as a *total* comparison.
 /// Use for branchless consumers (classification trees).
 pub fn counting<'a, T, F>(is_less: &'a F) -> impl Fn(&T, &T) -> bool + 'a
@@ -118,6 +192,24 @@ mod tests {
         assert!(d.comparisons >= 3);
         assert!(d.branching_comparisons >= 1);
         assert!(d.branching_comparisons <= d.comparisons);
+    }
+
+    #[test]
+    fn scratch_counters_snapshot_and_delta() {
+        let c = ScratchCounters::new();
+        c.scratch_allocations.fetch_add(2, Ordering::Relaxed);
+        c.scratch_reuses.fetch_add(5, Ordering::Relaxed);
+        c.jobs_completed.fetch_add(7, Ordering::Relaxed);
+        let a = c.snapshot();
+        c.scratch_reuses.fetch_add(3, Ordering::Relaxed);
+        c.elements_sorted.fetch_add(100, Ordering::Relaxed);
+        let b = c.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.scratch_allocations, 0);
+        assert_eq!(d.scratch_reuses, 3);
+        assert_eq!(d.elements_sorted, 100);
+        c.reset();
+        assert_eq!(c.snapshot(), ScratchSnapshot::default());
     }
 
     #[test]

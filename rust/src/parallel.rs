@@ -8,7 +8,7 @@
 //! generation-counted barrier. Dispatch latency is a few microseconds,
 //! amortized over partition steps that move megabytes.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Arc<dyn Fn(usize) + Send + Sync>;
@@ -29,7 +29,15 @@ pub struct ThreadPool {
     shared: Arc<PoolShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
     threads: usize,
-    generation: std::cell::Cell<u64>,
+    generation: AtomicU64,
+    /// Serializes concurrent `run` callers: the pool executes one SPMD
+    /// job at a time, so a second caller simply waits its turn. This is
+    /// what makes `ThreadPool: Sync` sound — the [`SortService`] shares
+    /// one pool between its dispatcher thread and the thread dropping
+    /// the service.
+    ///
+    /// [`SortService`]: crate::service::SortService
+    run_guard: Mutex<()>,
 }
 
 impl ThreadPool {
@@ -58,7 +66,8 @@ impl ThreadPool {
             shared,
             workers,
             threads,
-            generation: std::cell::Cell::new(0),
+            generation: AtomicU64::new(0),
+            run_guard: Mutex::new(()),
         }
     }
 
@@ -79,8 +88,13 @@ impl ThreadPool {
             f(0);
             return;
         }
-        let generation = self.generation.get() + 1;
-        self.generation.set(generation);
+        // One SPMD job at a time; a poisoned guard only means an earlier
+        // job panicked — the pool protocol itself is still consistent.
+        let _serialized = self
+            .run_guard
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
 
         // SAFETY: we erase the lifetime of `f` to hand it to the workers,
         // but we block below until every worker has finished running it,
@@ -111,10 +125,15 @@ impl ThreadPool {
         // Drop our clone last; workers already dropped theirs.
         drop(job);
 
+        // Clear the worker-panic flag unconditionally BEFORE re-raising
+        // thread 0's panic: a caller that catches the panic (the sort
+        // service's per-job containment) keeps using this pool, and a
+        // stale flag would make the next innocent job fail spuriously.
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::AcqRel);
         if let Err(p) = main_result {
             std::panic::resume_unwind(p);
         }
-        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+        if worker_panicked {
             panic!("a pool worker panicked during the SPMD region");
         }
     }
@@ -258,6 +277,12 @@ impl<T> PerThread<T> {
         &*self.items[tid].get()
     }
 
+    /// Safe exclusive access to slot `i` — available outside SPMD regions
+    /// where the caller holds the whole `PerThread` uniquely.
+    pub fn slot_mut(&mut self, i: usize) -> &mut T {
+        self.items[i].get_mut()
+    }
+
     /// Consume, returning the inner values.
     pub fn into_inner(self) -> Vec<T> {
         self.items
@@ -285,6 +310,23 @@ pub fn stripes(n: usize, t: usize, granularity: usize) -> Vec<usize> {
     }
     bounds.push(n);
     bounds
+}
+
+/// Longest-processing-time-first assignment: distribute `items` over
+/// `bins` bins, biggest first, each to the currently least-loaded bin.
+/// Zero-size items still count one unit toward balance. Shared by the
+/// scheduler's small-task phase and the sort service's batch dispatch.
+pub fn lpt_bins<I>(mut items: Vec<I>, bins: usize, size: impl Fn(&I) -> usize) -> Vec<Vec<I>> {
+    let t = bins.max(1);
+    items.sort_by_key(|i| std::cmp::Reverse(size(i)));
+    let mut out: Vec<Vec<I>> = (0..t).map(|_| Vec::new()).collect();
+    let mut load = vec![0usize; t];
+    for item in items {
+        let tid = (0..t).min_by_key(|&i| load[i]).unwrap();
+        load[tid] += size(&item).max(1);
+        out[tid].push(item);
+    }
+    out
 }
 
 /// Atomic work dispenser for dynamic load balancing (used by small-task
@@ -354,6 +396,37 @@ mod tests {
     }
 
     #[test]
+    fn pool_shared_across_threads_serializes_jobs() {
+        // ThreadPool is Sync: several threads may call `run` concurrently
+        // and the run guard serializes the SPMD jobs.
+        let pool = std::sync::Arc::new(ThreadPool::new(3));
+        let counter = std::sync::Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = std::sync::Arc::clone(&pool);
+            let counter = std::sync::Arc::clone(&counter);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    pool.run(|_| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 4 * 10 * 3);
+    }
+
+    #[test]
+    fn per_thread_slot_mut_safe_access() {
+        let mut pt = PerThread::new(vec![0u64; 3]);
+        *pt.slot_mut(1) = 7;
+        assert_eq!(pt.into_inner(), vec![0, 7, 0]);
+    }
+
+    #[test]
     fn pool_borrows_stack_data() {
         let pool = ThreadPool::new(4);
         let mut data = vec![0u64; 4];
@@ -383,6 +456,29 @@ mod tests {
         assert_eq!(stripes(10, 1, 4), vec![0, 10]);
         let b = stripes(7, 3, 16); // fewer units than threads
         assert_eq!(b.last(), Some(&7));
+    }
+
+    #[test]
+    fn lpt_bins_balances_and_preserves_items() {
+        let items: Vec<usize> = vec![10, 1, 7, 3, 3, 8, 2, 6];
+        let bins = lpt_bins(items.clone(), 3, |&x| x);
+        assert_eq!(bins.len(), 3);
+        let mut all: Vec<usize> = bins.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let mut want = items;
+        want.sort_unstable();
+        assert_eq!(all, want, "no item lost or duplicated");
+        // LPT bound: max load ≤ (4/3 − 1/3t)·OPT; loose check: max ≤ 2·avg.
+        let loads: Vec<usize> = bins.iter().map(|b| b.iter().sum()).collect();
+        let max = *loads.iter().max().unwrap();
+        assert!(max <= 2 * (40 / 3 + 1), "imbalanced: {loads:?}");
+        // Degenerate cases.
+        assert_eq!(lpt_bins(Vec::<usize>::new(), 4, |&x| x).len(), 4);
+        let one = lpt_bins(vec![5usize], 1, |&x| x);
+        assert_eq!(one, vec![vec![5]]);
+        // Zero-size items still spread (each counts one unit).
+        let zeros = lpt_bins(vec![0usize; 6], 3, |&x| x);
+        assert!(zeros.iter().all(|b| b.len() == 2), "{zeros:?}");
     }
 
     #[test]

@@ -17,7 +17,14 @@ use crate::util::{Element, Xoshiro256};
 
 /// Reusable per-thread scratch state: distribution buffers, swap blocks,
 /// overflow block, RNG. One of these exists per worker thread and is
-/// reused across all recursion levels (Theorem 2's O(k·b·t) term).
+/// reused across all recursion levels (Theorem 2's O(k·b·t) term) — and,
+/// since the service refactor, across whole *sort invocations*: this is
+/// the sequential arena that [`crate::arena::ArenaPool`] recycles for
+/// [`crate::Sorter`] and [`crate::service::SortService`], so steady-state
+/// sorts allocate nothing. Every partitioning step resets the buffers it
+/// uses ([`LocalBuffers::reset`], [`Overflow::reset`]), which is what
+/// makes a context safe to reuse for any later input of the same
+/// configuration.
 pub struct SeqContext<T> {
     pub bufs: LocalBuffers<T>,
     pub swap: Vec<T>,
@@ -40,6 +47,14 @@ impl<T: Element> SeqContext<T> {
             cfg,
             block,
         }
+    }
+
+    /// True if this context's buffer geometry (block size, bucket count)
+    /// matches `cfg` — the invariant a recycled arena must satisfy before
+    /// being used to sort under `cfg`.
+    pub fn compatible_with(&self, cfg: &Config) -> bool {
+        self.block == cfg.block_elems(std::mem::size_of::<T>())
+            && self.cfg.max_buckets == cfg.max_buckets
     }
 }
 
@@ -215,6 +230,22 @@ mod tests {
             for n in [0usize, 1, 2, 15, 16, 17, 100, 1000, 4096, 10_007] {
                 check_sort(gen_u64(d, n, 42), &cfg);
             }
+        }
+    }
+
+    #[test]
+    fn context_reused_across_whole_invocations() {
+        // One SeqContext serves many sorts — the arena-reuse contract.
+        let cfg = Config::default();
+        let mut ctx = SeqContext::<u64>::new(cfg.clone(), 99);
+        assert!(ctx.compatible_with(&cfg));
+        assert!(!ctx.compatible_with(&Config::default().with_block_bytes(64)));
+        for seed in 0..6u64 {
+            let mut v = gen_u64(Distribution::ALL[seed as usize % 9], 8_000, seed);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_seq(&mut v, &mut ctx, &lt);
+            assert!(is_sorted_by(&v, lt), "seed {seed}");
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
         }
     }
 

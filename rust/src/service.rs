@@ -1,0 +1,599 @@
+//! The batched sort service — IPS⁴o as a long-running subsystem instead
+//! of a one-shot call.
+//!
+//! The ROADMAP's north star is a system serving heavy traffic: thousands
+//! of concurrent sort requests of wildly mixed sizes and element types.
+//! Calling [`crate::sort_par`] per request wastes the two things the
+//! paper works hardest to make cheap — scratch memory (fresh swap and
+//! overflow buffers per call) and scheduling (a cooperative partition
+//! step has several pool barriers, which tiny inputs can never amortize).
+//!
+//! [`SortService`] fixes both:
+//!
+//! * **Persistent resources.** One [`ThreadPool`] and one
+//!   [`ArenaPool`] of type-erased scratch arenas live for the service's
+//!   lifetime. After warm-up, a steady stream of jobs performs *zero*
+//!   scratch allocations — proven by the [`ScratchCounters`] deltas.
+//! * **Sharded submission.** Clients enqueue jobs round-robin over
+//!   `cfg.service_shards` locked queues, so concurrent submitters do not
+//!   serialize on a single lock.
+//! * **Small-job batching.** A dispatcher thread drains all shards at
+//!   once; jobs under `cfg.small_sort_bytes` are packed into per-worker
+//!   bins (LPT by payload size) and sorted **sequentially, in parallel**
+//!   — one pool dispatch for the whole batch. Jobs at or above the
+//!   threshold get the full cooperative IPS⁴o treatment, one at a time.
+//!
+//! Jobs are type-erased at the queue boundary, so one service instance
+//! concurrently serves `u64`, `f64`, [`Pair`](crate::util::Pair),
+//! [`Quartet`](crate::util::Quartet) and
+//! [`Bytes100`](crate::util::Bytes100) payloads.
+//!
+//! ```
+//! use ips4o::{Config, SortService};
+//! let svc = SortService::new(Config::default().with_threads(2));
+//! let t1 = svc.submit((0..5_000u64).rev().collect::<Vec<_>>());
+//! let t2 = svc.submit_by(vec![3.0f64, 1.0, 2.0], |a, b| a < b);
+//! let v = t1.wait();
+//! assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! assert_eq!(t2.wait(), vec![1.0, 2.0, 3.0]);
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::arena::ArenaPool;
+use crate::config::Config;
+use crate::metrics::{ScratchCounters, ScratchSnapshot};
+use crate::parallel::{PerThread, ThreadPool};
+use crate::sequential::{sort_seq, SeqContext};
+use crate::task_scheduler::{sort_parallel_with, ParScratch};
+use crate::util::Element;
+
+// ---------------------------------------------------------------------------
+// Job completion plumbing
+// ---------------------------------------------------------------------------
+
+/// What a job resolved to: the sorted payload, or the panic payload of a
+/// job whose comparator panicked (re-raised on the waiting client).
+type JobResult<T> = std::thread::Result<Vec<T>>;
+
+/// One job's completion slot: filled by the service, drained by the
+/// client holding the [`JobTicket`].
+struct DoneSlot<T> {
+    slot: Mutex<Option<JobResult<T>>>,
+    cv: Condvar,
+}
+
+impl<T> DoneSlot<T> {
+    fn new() -> Self {
+        DoneSlot {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: JobResult<T>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to a submitted sort job. Obtain the sorted payload with
+/// [`JobTicket::wait`].
+pub struct JobTicket<T> {
+    done: Arc<DoneSlot<T>>,
+}
+
+impl<T> JobTicket<T> {
+    /// Block until the job completes and return the sorted data.
+    ///
+    /// If the job's comparator panicked, the panic is re-raised *here*,
+    /// on the thread that owns the job — the service itself (and every
+    /// other client's job) is unaffected.
+    pub fn wait(self) -> Vec<T> {
+        let mut g = self.done.slot.lock().unwrap();
+        loop {
+            if let Some(d) = g.take() {
+                match d {
+                    Ok(v) => return v,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                }
+            }
+            g = self.done.cv.wait(g).unwrap();
+        }
+    }
+
+    /// True once the result is available (`wait` will not block).
+    pub fn is_ready(&self) -> bool {
+        self.done.slot.lock().unwrap().is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Type-erased queued jobs
+// ---------------------------------------------------------------------------
+
+type ErasedJob = Box<dyn QueuedJob + Send>;
+
+/// The erasure boundary: the queue and dispatcher see only this.
+trait QueuedJob: Send {
+    /// Payload size in bytes — drives the batch/parallel split and LPT
+    /// binning.
+    fn size_bytes(&self) -> usize;
+    /// Sort sequentially on one worker thread, reusing a checked-out
+    /// [`SeqContext`] arena. Called from inside a pool SPMD region.
+    fn run_small(&mut self, core: &ServiceCore);
+    /// Sort with the full cooperative parallel IPS⁴o, reusing a
+    /// checked-out [`ParScratch`] arena. Called from the dispatcher
+    /// thread, outside any SPMD region.
+    fn run_large(&mut self, core: &ServiceCore);
+}
+
+struct TypedJob<T, F> {
+    data: Vec<T>,
+    is_less: F,
+    done: Arc<DoneSlot<T>>,
+    finished: bool,
+}
+
+/// Last-resort guard: a job dropped before completing (dispatcher died,
+/// batch unwound) fails its own ticket instead of stranding the waiting
+/// client forever.
+impl<T, F> Drop for TypedJob<T, F> {
+    fn drop(&mut self) {
+        if !self.finished {
+            let payload: Box<dyn std::any::Any + Send> =
+                Box::new("sort service dropped the job before completion");
+            self.done.complete(Err(payload));
+        }
+    }
+}
+
+impl<T, F> TypedJob<T, F>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Send + Sync + 'static,
+{
+    fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
+        if let Ok(data) = &result {
+            core.counters
+                .elements_sorted
+                .fetch_add(data.len() as u64, Ordering::Relaxed);
+        }
+        core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.finished = true;
+        self.done.complete(result);
+    }
+}
+
+impl<T, F> QueuedJob for TypedJob<T, F>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Send + Sync + 'static,
+{
+    fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    fn run_small(&mut self, core: &ServiceCore) {
+        let mut data = std::mem::take(&mut self.data);
+        // Checkout is per job, not per bin: bins mix element types, so a
+        // per-bin arena would need its own type-keyed cache. The two
+        // uncontended mutex ops (~tens of ns) are noise next to even a
+        // 1k-element sort; revisit with a per-worker arena cache if jobs
+        // ever shrink to that scale.
+        let mut ctx = core
+            .arenas
+            .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+        // A panicking user comparator (or a foreign-geometry arena from a
+        // misused checkin) fails only this job: the panic is captured
+        // into the ticket (re-raised at `wait`), the possibly half-sorted
+        // arena is dropped instead of recycled, and the dispatcher/pool
+        // live on.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+            sort_seq(&mut data, &mut ctx, &self.is_less);
+        }));
+        match outcome {
+            Ok(()) => {
+                core.arenas.checkin(ctx);
+                self.finish(core, Ok(data));
+            }
+            Err(panic) => self.finish(core, Err(panic)),
+        }
+    }
+
+    fn run_large(&mut self, core: &ServiceCore) {
+        let mut data = std::mem::take(&mut self.data);
+        let mut scratch = core
+            .arenas
+            .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
+        // See `run_small` on panic containment. `ThreadPool::run` already
+        // funnels worker panics back to this (dispatcher) thread.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert!(scratch.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+            sort_parallel_with(&mut data, &core.cfg, &core.pool, &mut scratch, &self.is_less);
+        }));
+        match outcome {
+            Ok(()) => {
+                core.arenas.checkin(scratch);
+                self.finish(core, Ok(data));
+            }
+            Err(panic) => self.finish(core, Err(panic)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service core (shared between clients, dispatcher, and Drop)
+// ---------------------------------------------------------------------------
+
+struct ServiceCore {
+    cfg: Config,
+    pool: ThreadPool,
+    arenas: ArenaPool,
+    counters: Arc<ScratchCounters>,
+    /// Sharded submission queues; clients pick one round-robin via `rr`.
+    shards: Vec<Mutex<VecDeque<ErasedJob>>>,
+    rr: AtomicUsize,
+    /// Jobs enqueued but not yet drained by the dispatcher.
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    wake_mx: Mutex<()>,
+    wake_cv: Condvar,
+}
+
+impl ServiceCore {
+    /// Drain every shard into one batch.
+    fn drain(&self) -> Vec<ErasedJob> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut q = shard.lock().unwrap();
+            out.extend(q.drain(..));
+        }
+        if !out.is_empty() {
+            self.pending.fetch_sub(out.len(), Ordering::AcqRel);
+        }
+        out
+    }
+
+    /// Execute one drained batch: small jobs in a single parallel pass
+    /// (LPT bins, each worker sorting its bin sequentially), large jobs
+    /// cooperatively, one after another.
+    fn execute_batch(&self, batch: Vec<ErasedJob>) {
+        let threshold = self.cfg.small_sort_bytes;
+        let (small, large): (Vec<ErasedJob>, Vec<ErasedJob>) = batch
+            .into_iter()
+            .partition(|j| j.size_bytes() < threshold);
+
+        if !small.is_empty() {
+            let t = self.pool.threads();
+            // LPT: biggest payloads first, each to the least-loaded bin.
+            let bins = PerThread::new(crate::parallel::lpt_bins(small, t, |j| j.size_bytes()));
+            {
+                let bins = &bins;
+                self.pool.run(move |tid| {
+                    // SAFETY: slot `tid` is exclusively this worker's.
+                    let my = unsafe { bins.get_mut(tid) };
+                    for job in my.iter_mut() {
+                        job.run_small(self);
+                    }
+                });
+            }
+        }
+
+        for mut job in large {
+            job.run_large(self);
+        }
+    }
+}
+
+fn dispatcher_loop(core: Arc<ServiceCore>) {
+    loop {
+        let batch = core.drain();
+        if !batch.is_empty() {
+            core.counters
+                .batches_dispatched
+                .fetch_add(1, Ordering::Relaxed);
+            // Belt and braces: a panic escaping the per-job containment
+            // must not kill the dispatcher. Jobs dropped by an unwinding
+            // batch still resolve their tickets via TypedJob's Drop
+            // guard, so no client is stranded.
+            let c = &core;
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c.execute_batch(batch);
+            }));
+            continue;
+        }
+        if core.shutdown.load(Ordering::Acquire) {
+            return; // queue drained and shutdown requested
+        }
+        let mut g = core.wake_mx.lock().unwrap();
+        while core.pending.load(Ordering::Acquire) == 0
+            && !core.shutdown.load(Ordering::Acquire)
+        {
+            g = core.wake_cv.wait(g).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public façade
+// ---------------------------------------------------------------------------
+
+/// A long-running batched sort service. See the [module docs](self).
+///
+/// Dropping the service drains all queued jobs, then stops the
+/// dispatcher and the thread pool.
+pub struct SortService {
+    core: Arc<ServiceCore>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SortService {
+    /// Start a service with `cfg.threads` sort workers,
+    /// `cfg.service_shards` submission shards, and the
+    /// `cfg.small_sort_bytes` batching threshold.
+    pub fn new(cfg: Config) -> Self {
+        let threads = cfg.threads.max(1);
+        let shards = cfg.service_shards.max(1);
+        let counters = Arc::new(ScratchCounters::new());
+        let core = Arc::new(ServiceCore {
+            pool: ThreadPool::new(threads),
+            arenas: ArenaPool::with_counters(Arc::clone(&counters)),
+            counters,
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            rr: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            wake_mx: Mutex::new(()),
+            wake_cv: Condvar::new(),
+            cfg,
+        });
+        let dcore = Arc::clone(&core);
+        let dispatcher = std::thread::Builder::new()
+            .name("ips4o-svc-dispatch".into())
+            .spawn(move || dispatcher_loop(dcore))
+            .expect("spawn service dispatcher");
+        SortService {
+            core,
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Submit a job using the element's natural order.
+    pub fn submit<T: Element + Ord>(&self, data: Vec<T>) -> JobTicket<T> {
+        self.submit_by(data, |a: &T, b: &T| a < b)
+    }
+
+    /// Submit a job with an explicit strict-weak-order `is_less`.
+    pub fn submit_by<T, F>(&self, data: Vec<T>, is_less: F) -> JobTicket<T>
+    where
+        T: Element,
+        F: Fn(&T, &T) -> bool + Send + Sync + 'static,
+    {
+        let done = Arc::new(DoneSlot::new());
+        let job: ErasedJob = Box::new(TypedJob {
+            data,
+            is_less,
+            done: Arc::clone(&done),
+            finished: false,
+        });
+        let core = &self.core;
+        let idx = core.rr.fetch_add(1, Ordering::Relaxed) % core.shards.len();
+        // Increment `pending` under the shard lock, together with the
+        // push: the dispatcher's drain pops under the same lock and
+        // decrements afterwards, so `pending` can never observe a pop
+        // before its matching push was counted (no underflow).
+        let was_idle = {
+            let mut q = core.shards[idx].lock().unwrap();
+            q.push_back(job);
+            core.pending.fetch_add(1, Ordering::AcqRel) == 0
+        };
+        // Only the submitter that moved the queue from empty to non-empty
+        // needs to wake the dispatcher — while jobs are pending the
+        // dispatcher never sleeps (it re-checks `pending` under `wake_mx`
+        // before waiting), so everyone else skips the lock and the shards
+        // actually shard. Locking wake_mx around the notify closes the
+        // lost-wakeup race against the dispatcher's check-then-wait.
+        if was_idle {
+            let _g = core.wake_mx.lock().unwrap();
+            core.wake_cv.notify_one();
+        }
+        JobTicket { done }
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn sort_vec<T: Element + Ord>(&self, data: Vec<T>) -> Vec<T> {
+        self.submit(data).wait()
+    }
+
+    /// Pre-build scratch arenas for element type `T`: one sequential
+    /// context per worker (the maximum ever checked out concurrently by
+    /// the batch path) plus one parallel scratch (the large-job path is
+    /// serial). After `warm`, a steady stream of `T` jobs performs zero
+    /// scratch allocations. The pre-built arenas are counted in
+    /// `scratch_allocations`.
+    pub fn warm<T: Element>(&self) {
+        let core = &self.core;
+        let t = core.pool.threads();
+        for _ in 0..t {
+            core.arenas
+                .checkin(SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+        }
+        core.arenas.checkin(ParScratch::<T>::new(&core.cfg, t));
+        core.counters
+            .scratch_allocations
+            .fetch_add(t as u64 + 1, Ordering::Relaxed);
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &Config {
+        &self.core.cfg
+    }
+
+    /// Number of sort worker threads.
+    pub fn threads(&self) -> usize {
+        self.core.pool.threads()
+    }
+
+    /// Jobs submitted but not yet picked up by the dispatcher.
+    pub fn queued_jobs(&self) -> usize {
+        self.core.pending.load(Ordering::Acquire)
+    }
+
+    /// Allocation/reuse/dispatch accounting snapshot.
+    pub fn metrics(&self) -> ScratchSnapshot {
+        self.core.counters.snapshot()
+    }
+
+    /// The live counter set (for polling from monitoring threads).
+    pub fn counters(&self) -> Arc<ScratchCounters> {
+        Arc::clone(&self.core.counters)
+    }
+}
+
+impl Drop for SortService {
+    fn drop(&mut self) {
+        self.core.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.core.wake_mx.lock().unwrap();
+            self.core.wake_cv.notify_all();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_pair, gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint, Pair};
+
+    #[test]
+    fn submit_and_wait_sorts() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        let base = gen_u64(Distribution::Uniform, 20_000, 1);
+        let fp = multiset_fingerprint(&base, |x| *x);
+        let out = svc.submit(base).wait();
+        assert!(is_sorted_by(&out, |a, b| a < b));
+        assert_eq!(fp, multiset_fingerprint(&out, |x| *x));
+        assert_eq!(svc.metrics().jobs_completed, 1);
+    }
+
+    #[test]
+    fn mixed_types_one_service() {
+        let svc = SortService::new(Config::default().with_threads(3));
+        let tu = svc.submit(gen_u64(Distribution::TwoDup, 10_000, 2));
+        let tp = svc.submit_by(gen_pair(Distribution::RootDup, 10_000, 2), Pair::less);
+        let tf = svc.submit_by(vec![2.5f64, 0.5, 1.5], |a: &f64, b: &f64| a < b);
+        assert!(is_sorted_by(&tu.wait(), |a, b| a < b));
+        assert!(is_sorted_by(&tp.wait(), Pair::less));
+        assert_eq!(tf.wait(), vec![0.5, 1.5, 2.5]);
+        assert_eq!(svc.metrics().jobs_completed, 3);
+    }
+
+    #[test]
+    fn large_jobs_take_parallel_path() {
+        // 1M u64 = 8 MB ≫ small_sort_bytes.
+        let svc = SortService::new(Config::default().with_threads(4));
+        let base = gen_u64(Distribution::Exponential, 1_000_000, 3);
+        let fp = multiset_fingerprint(&base, |x| *x);
+        let out = svc.submit(base).wait();
+        assert!(is_sorted_by(&out, |a, b| a < b));
+        assert_eq!(fp, multiset_fingerprint(&out, |x| *x));
+    }
+
+    #[test]
+    fn empty_and_tiny_jobs() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        assert_eq!(svc.sort_vec(Vec::<u64>::new()), Vec::<u64>::new());
+        assert_eq!(svc.sort_vec(vec![1u64]), vec![1]);
+        assert_eq!(svc.sort_vec(vec![2u64, 1]), vec![1, 2]);
+    }
+
+    #[test]
+    fn warm_service_sorts_without_allocating() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        svc.warm::<u64>();
+        let warm = svc.metrics();
+        let tickets: Vec<_> = (0..16)
+            .map(|s| svc.submit(gen_u64(Distribution::Uniform, 5_000, s)))
+            .collect();
+        for t in tickets {
+            assert!(is_sorted_by(&t.wait(), |a, b| a < b));
+        }
+        let d = svc.metrics().delta(&warm);
+        assert_eq!(d.scratch_allocations, 0, "warm service must not allocate");
+        assert_eq!(d.jobs_completed, 16);
+        assert!(d.scratch_reuses >= 16);
+    }
+
+    #[test]
+    fn panicking_comparator_fails_only_its_own_job() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        let bad = svc.submit_by(vec![3u64, 1, 2, 9, 5, 4, 8, 0], |_: &u64, _: &u64| {
+            panic!("bad comparator")
+        });
+        let good = svc.submit(gen_u64(Distribution::Uniform, 5_000, 7));
+        // The panic surfaces on the panicking job's ticket only...
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.wait()));
+        assert!(r.is_err(), "panic must propagate through the ticket");
+        // ...while the other client's job and the service are unharmed.
+        assert!(is_sorted_by(&good.wait(), |a, b| a < b));
+        let after = svc.sort_vec(gen_u64(Distribution::TwoDup, 10_000, 8));
+        assert!(is_sorted_by(&after, |a, b| a < b));
+        assert_eq!(svc.metrics().jobs_completed, 3);
+    }
+
+    #[test]
+    fn panic_during_parallel_job_does_not_poison_the_pool() {
+        use std::sync::atomic::AtomicU64;
+        // Comparator that panics only after sampling succeeded, so the
+        // panic lands inside the cooperative SPMD phases (workers and/or
+        // thread 0) of a large job.
+        static CALLS: AtomicU64 = AtomicU64::new(0);
+        let svc = SortService::new(Config::default().with_threads(4));
+        let bad = svc.submit_by(
+            gen_u64(Distribution::Uniform, 100_000, 1),
+            |a: &u64, b: &u64| {
+                if CALLS.fetch_add(1, Ordering::Relaxed) > 50_000 {
+                    panic!("late comparator panic");
+                }
+                a < b
+            },
+        );
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.wait()));
+        assert!(r.is_err(), "late panic must reach the ticket");
+        // The shared pool must be clean for the next (large) job: a stale
+        // worker-panicked flag would fail it spuriously.
+        let good = svc.submit(gen_u64(Distribution::Uniform, 100_000, 2)).wait();
+        assert!(is_sorted_by(&good, |a, b| a < b));
+    }
+
+    #[test]
+    fn drop_drains_queued_jobs() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        let tickets: Vec<_> = (0..32)
+            .map(|s| svc.submit(gen_u64(Distribution::Uniform, 2_000, s)))
+            .collect();
+        drop(svc); // must complete everything before shutting down
+        for t in tickets {
+            assert!(is_sorted_by(&t.wait(), |a, b| a < b));
+        }
+    }
+
+    #[test]
+    fn batching_disabled_still_works() {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(2)
+                .with_small_sort_bytes(0),
+        );
+        let out = svc.sort_vec(gen_u64(Distribution::ReverseSorted, 30_000, 4));
+        assert!(is_sorted_by(&out, |a, b| a < b));
+    }
+}

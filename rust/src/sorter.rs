@@ -1,14 +1,23 @@
-//! The public [`Sorter`] façade: owns the configuration and the
-//! persistent thread pool, dispatches to sequential IS⁴o or parallel
-//! IPS⁴o.
+//! The public [`Sorter`] façade: owns the configuration, the persistent
+//! thread pool, and a pool of reusable scratch arenas; dispatches to
+//! sequential IS⁴o or parallel IPS⁴o.
 
+use std::sync::Arc;
+use std::sync::atomic::Ordering;
+
+use crate::arena::ArenaPool;
 use crate::config::Config;
+use crate::metrics::ScratchSnapshot;
 use crate::parallel::ThreadPool;
+use crate::sequential::SeqContext;
+use crate::task_scheduler::ParScratch;
 use crate::util::Element;
 
 /// A reusable sorter. Create one per configuration; `sort_by` can be
-/// called any number of times with any element type (per-call scratch is
-/// type-specific, the pool is shared).
+/// called any number of times with any element type — the thread pool
+/// *and* the per-type scratch arenas (swap blocks, overflow buffer,
+/// distribution buffers, bucket pointers) persist across calls, so a
+/// warm sorter allocates nothing per sort.
 ///
 /// ```
 /// use ips4o::{Config, Sorter};
@@ -20,6 +29,7 @@ use crate::util::Element;
 pub struct Sorter {
     cfg: Config,
     pool: Option<ThreadPool>,
+    arenas: ArenaPool,
 }
 
 impl Sorter {
@@ -30,12 +40,31 @@ impl Sorter {
         } else {
             None
         };
-        Sorter { cfg, pool }
+        Sorter {
+            cfg,
+            pool,
+            arenas: ArenaPool::new(),
+        }
     }
 
     /// The active configuration.
     pub fn config(&self) -> &Config {
         &self.cfg
+    }
+
+    /// The persistent thread pool, if this sorter is parallel.
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        self.pool.as_ref()
+    }
+
+    /// The scratch arena pool backing this sorter.
+    pub fn arenas(&self) -> &ArenaPool {
+        &self.arenas
+    }
+
+    /// Allocation/reuse accounting for this sorter's scratch arenas.
+    pub fn scratch_metrics(&self) -> ScratchSnapshot {
+        self.arenas.counters().snapshot()
     }
 
     /// Sort with the element's natural order.
@@ -50,9 +79,47 @@ impl Sorter {
         F: Fn(&T, &T) -> bool + Sync,
     {
         match &self.pool {
-            Some(pool) => crate::task_scheduler::sort_parallel(v, &self.cfg, pool, is_less),
-            None => crate::sequential::sort_by(v, &self.cfg, is_less),
+            Some(pool) => {
+                let mut scratch = self
+                    .arenas
+                    .checkout(|| ParScratch::<T>::new(&self.cfg, pool.threads()));
+                // Guards against foreign-geometry scratch checked into
+                // our pool through `arenas()` (mirrors the sequential
+                // path below; the debug_assert inside the sort is
+                // compiled out in release).
+                assert!(
+                    scratch.compatible_with(&self.cfg),
+                    "recycled arena geometry mismatch"
+                );
+                crate::task_scheduler::sort_parallel_with(
+                    v,
+                    &self.cfg,
+                    pool,
+                    &mut scratch,
+                    is_less,
+                );
+                self.arenas.checkin(scratch);
+            }
+            None => {
+                let mut ctx = self
+                    .arenas
+                    .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
+                // Guards against foreign-geometry contexts checked into
+                // our pool through `arenas()`.
+                assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
+                crate::sequential::sort_seq(v, &mut ctx, is_less);
+                self.arenas.checkin(ctx);
+            }
         }
+        self.arenas
+            .counters()
+            .elements_sorted
+            .fetch_add(v.len() as u64, Ordering::Relaxed);
+    }
+
+    /// The counters handle, for sharing with a service-level aggregate.
+    pub fn counters(&self) -> Arc<crate::metrics::ScratchCounters> {
+        Arc::clone(self.arenas.counters())
     }
 }
 
@@ -92,6 +159,42 @@ mod tests {
         s.sort_by(&mut p, &Pair::less);
         assert!(is_sorted_by(&p, Pair::less));
         assert_eq!(fp, multiset_fingerprint(&p, |x| x.key.to_bits() ^ x.value.to_bits()));
+    }
+
+    #[test]
+    fn sorter_scratch_is_reused_not_reallocated() {
+        let s = Sorter::new(Config::default().with_threads(2));
+        // Warm-up: first sort of each type builds its arena.
+        let mut v = gen_u64(Distribution::Uniform, 40_000, 3);
+        s.sort(&mut v);
+        let warm = s.scratch_metrics();
+        assert!(warm.scratch_allocations >= 1);
+        // Steady state: every further sort of the same type reuses.
+        for seed in 0..8 {
+            let mut v = gen_u64(Distribution::Uniform, 40_000, seed);
+            s.sort(&mut v);
+            assert!(is_sorted_by(&v, |a, b| a < b));
+        }
+        let after = s.scratch_metrics().delta(&warm);
+        assert_eq!(after.scratch_allocations, 0, "warm sorter must not allocate");
+        assert_eq!(after.scratch_reuses, 8);
+    }
+
+    #[test]
+    fn sequential_sorter_reuses_context() {
+        let s = Sorter::new(Config::default());
+        let mut v = gen_u64(Distribution::Uniform, 10_000, 1);
+        s.sort(&mut v);
+        let warm = s.scratch_metrics();
+        for seed in 0..5 {
+            let mut v = gen_u64(Distribution::TwoDup, 10_000, seed);
+            s.sort(&mut v);
+            assert!(is_sorted_by(&v, |a, b| a < b));
+        }
+        let d = s.scratch_metrics().delta(&warm);
+        assert_eq!(d.scratch_allocations, 0);
+        assert_eq!(d.scratch_reuses, 5);
+        assert_eq!(d.elements_sorted, 50_000);
     }
 
     #[test]

@@ -21,35 +21,111 @@ use crate::sampling::{build_classifier, SampleResult};
 use crate::sequential::{sort_seq, SeqContext, StepResult};
 use crate::util::{BucketPointers, Element};
 
+/// All scratch state one parallel sort needs, grouped for reuse across
+/// invocations: per-thread sequential contexts (distribution buffers,
+/// swap blocks, RNGs), the shared atomic bucket-pointer array, and the
+/// shared overflow block.
+///
+/// Building one of these is the entire per-call allocation cost of
+/// [`sort_parallel`]; threading a `ParScratch` through
+/// [`sort_parallel_with`] instead (as [`crate::Sorter`] and
+/// [`crate::service::SortService`] do, via [`crate::arena::ArenaPool`])
+/// makes repeated sorts allocation-free after warm-up.
+pub struct ParScratch<T> {
+    ctxs: PerThread<SeqContext<T>>,
+    pointers: Vec<BucketPointers>,
+    /// The shared overflow block lives outside the per-thread contexts so
+    /// SPMD regions can reference it without aliasing a context borrow.
+    overflow: crate::permutation::Overflow<T>,
+    /// Block size (elements) the contexts were built for; must match the
+    /// config used at sort time.
+    block: usize,
+}
+
+impl<T: Element> ParScratch<T> {
+    /// Build scratch for `threads` workers under `cfg`. The same `cfg`
+    /// (or at least the same `block_bytes`/`max_buckets`) must be passed
+    /// to [`sort_parallel_with`] later — the buffers are sized for it.
+    pub fn new(cfg: &Config, threads: usize) -> Self {
+        let t = threads.max(1);
+        let block = cfg.block_elems(std::mem::size_of::<T>());
+        ParScratch {
+            ctxs: PerThread::new(
+                (0..t)
+                    .map(|i| SeqContext::<T>::new(cfg.clone(), 0x1950_5EED ^ ((i as u64) << 32)))
+                    .collect(),
+            ),
+            pointers: (0..2 * cfg.max_buckets)
+                .map(|_| BucketPointers::new())
+                .collect(),
+            overflow: crate::permutation::Overflow::<T>::new(block),
+            block,
+        }
+    }
+
+    /// Number of worker contexts held.
+    pub fn threads(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    /// True if this scratch's buffer geometry (block size, bucket count)
+    /// matches `cfg` — the invariant a recycled arena must satisfy
+    /// before being used to sort under `cfg`.
+    pub fn compatible_with(&self, cfg: &Config) -> bool {
+        self.block == cfg.block_elems(std::mem::size_of::<T>())
+            && self.pointers.len() >= 2 * cfg.max_buckets
+    }
+}
+
 /// Sort `v` with IPS⁴o using the given pool. Falls back to sequential
 /// IS⁴o when the input or the pool is too small to benefit.
+///
+/// Allocates fresh scratch for this one call; for repeated sorts prefer
+/// [`sort_parallel_with`] with a recycled [`ParScratch`].
 pub fn sort_parallel<T, F>(v: &mut [T], cfg: &Config, pool: &ThreadPool, is_less: &F)
 where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let mut scratch = ParScratch::new(cfg, pool.threads());
+    sort_parallel_with(v, cfg, pool, &mut scratch, is_less);
+}
+
+/// Sort `v` with IPS⁴o, reusing caller-provided scratch. `scratch` must
+/// have been built with [`ParScratch::new`] from the same `cfg` and at
+/// least `pool.threads()` workers.
+pub fn sort_parallel_with<T, F>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    scratch: &mut ParScratch<T>,
+    is_less: &F,
+) where
     T: Element,
     F: Fn(&T, &T) -> bool + Sync,
 {
     let t = pool.threads();
     let n = v.len();
     let block = cfg.block_elems(std::mem::size_of::<T>());
+    assert!(
+        scratch.threads() >= t,
+        "scratch built for {} threads, pool has {t}",
+        scratch.threads()
+    );
+    debug_assert_eq!(scratch.block, block, "scratch built for a different block size");
     // Below this size the parallel machinery cannot pay for itself:
     // every thread needs a few blocks' worth of work.
     let min_parallel = (4 * t * block).max(1 << 13);
     if t == 1 || n < min_parallel {
-        crate::sequential::sort_by(v, cfg, is_less);
+        sort_seq(v, scratch.ctxs.slot_mut(0), is_less);
         return;
     }
 
-    let ctxs = PerThread::new(
-        (0..t)
-            .map(|i| SeqContext::<T>::new(cfg.clone(), 0x1950_5EED ^ (i as u64) << 32 ^ n as u64))
-            .collect(),
-    );
-    let pointers: Vec<BucketPointers> = (0..2 * cfg.max_buckets)
-        .map(|_| BucketPointers::new())
-        .collect();
-    // The shared overflow block lives outside the per-thread contexts so
-    // SPMD regions can reference it without aliasing a context borrow.
-    let overflow = crate::permutation::Overflow::<T>::new(block);
+    // Shared views for the SPMD regions below; `&mut scratch` guarantees
+    // no other thread touches these for the duration of the call.
+    let ctxs = &scratch.ctxs;
+    let pointers = &scratch.pointers[..];
+    let overflow = &scratch.overflow;
 
     let threshold = cfg.parallel_task_min(n).max(min_parallel);
     let mut big: VecDeque<(usize, usize)> = VecDeque::new();
@@ -57,7 +133,7 @@ where
     big.push_back((0, n));
 
     while let Some((s, e)) = big.pop_front() {
-        let step = partition_parallel(&mut v[s..e], cfg, pool, &ctxs, &pointers, &overflow, is_less);
+        let step = partition_parallel(&mut v[s..e], cfg, pool, ctxs, pointers, overflow, is_less);
         if let Some(step) = step {
             for i in 0..step.bounds.len() - 1 {
                 let (cs, ce) = (s + step.bounds[i], s + step.bounds[i + 1]);
@@ -75,14 +151,7 @@ where
     }
 
     // --- Small-task phase: LPT assignment, sequential sorting ---
-    small.sort_unstable_by_key(|&(s, e)| std::cmp::Reverse(e - s));
-    let mut bins: Vec<Vec<(usize, usize)>> = vec![Vec::new(); t];
-    let mut load = vec![0usize; t];
-    for task in small {
-        let tid = (0..t).min_by_key(|&i| load[i]).unwrap();
-        load[tid] += task.1 - task.0;
-        bins[tid].push(task);
-    }
+    let bins = crate::parallel::lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
     let arr = SharedSlice::new(v);
     let bins = &bins;
     pool.run(|tid| {
@@ -355,6 +424,25 @@ mod tests {
             Distribution::EightDup,
         ] {
             check_parallel(gen_u64(d, 50_000, 13), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn scratch_reused_across_many_sorts_and_sizes() {
+        // One ParScratch serves many inputs, including sizes below the
+        // parallel threshold (sequential fallback through slot 0) and
+        // duplicate-heavy inputs (equality buckets).
+        let cfg = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<u64>::new(&cfg, 4);
+        for (seed, n) in [(1u64, 60_000usize), (2, 100), (3, 131_073), (4, 0), (5, 9000)] {
+            for d in [Distribution::Uniform, Distribution::RootDup] {
+                let mut v = gen_u64(d, n, seed);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_parallel_with(&mut v, &cfg, &pool, &mut scratch, &lt);
+                assert!(is_sorted_by(&v, lt), "n={n} d={}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+            }
         }
     }
 

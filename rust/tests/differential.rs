@@ -1,0 +1,151 @@
+//! Differential test suite: every algorithm in `baselines/` plus
+//! sequential and parallel IPS⁴o, checked against the standard library
+//! `slice::sort` on a shared corpus of all `datagen::Distribution`s ×
+//! boundary-focused sizes {0, 1, 2, block−1, block, block+1, 30k} ×
+//! all benchmark data types.
+//!
+//! Three assertions per (algorithm, distribution, size, type) cell:
+//! 1. output is sorted under the type's comparator;
+//! 2. the multiset fingerprint (keys *and* payloads) is preserved —
+//!    no element lost, duplicated, or torn;
+//! 3. the output is key-equivalent to the std reference sequence
+//!    position by position (our sorts are unstable, so payload order may
+//!    legitimately differ within equal-key runs).
+
+use std::cmp::Ordering;
+
+use ips4o::baselines::Algo;
+use ips4o::bench_harness::run_algo;
+use ips4o::datagen::{self, Distribution};
+use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Element, Pair, Quartet};
+use ips4o::Config;
+
+const ALGOS: [Algo; 12] = [
+    Algo::Is4o,
+    Algo::Is4oStrict,
+    Algo::Ips4o,
+    Algo::Introsort,
+    Algo::DualPivot,
+    Algo::BlockQ,
+    Algo::S3Sort,
+    Algo::ParQsortUnbalanced,
+    Algo::ParQsortBalanced,
+    Algo::ParMergesort,
+    Algo::PbbsSampleSort,
+    Algo::TbbLike,
+];
+
+/// The shared size corpus for an element type whose block holds `block`
+/// elements: empties, singletons, the block-boundary neighborhood, and
+/// one size large enough to recurse and (for parallel algorithms at
+/// t = 4) engage the cooperative path.
+fn sizes(block: usize) -> [usize; 7] {
+    [0, 1, 2, block - 1, block, block + 1, 30_000]
+}
+
+/// Run the whole corpus for one element type.
+fn differential_for_type<T>(
+    type_name: &str,
+    gen: impl Fn(Distribution, usize, u64) -> Vec<T>,
+    key: impl Fn(&T) -> u64 + Copy,
+    is_less: fn(&T, &T) -> bool,
+) where
+    T: Element,
+{
+    let cfg_seq = Config::default();
+    let cfg_par = Config::default().with_threads(4);
+    let block = cfg_seq.block_elems(std::mem::size_of::<T>());
+    for d in Distribution::ALL {
+        for n in sizes(block) {
+            let base = gen(d, n, 0xD1FF ^ n as u64);
+            let fp = multiset_fingerprint(&base, key);
+            let mut expected = base.clone();
+            expected.sort_by(|a, b| {
+                if is_less(a, b) {
+                    Ordering::Less
+                } else if is_less(b, a) {
+                    Ordering::Greater
+                } else {
+                    Ordering::Equal
+                }
+            });
+            for algo in ALGOS {
+                let cfg = if algo.parallel() { &cfg_par } else { &cfg_seq };
+                let mut v = base.clone();
+                run_algo(algo, &mut v, cfg, &is_less);
+                let ctx = format!(
+                    "{} on {type_name}/{} n={n}",
+                    algo.name(),
+                    d.name()
+                );
+                assert!(is_sorted_by(&v, is_less), "{ctx}: not sorted");
+                assert_eq!(
+                    fp,
+                    multiset_fingerprint(&v, key),
+                    "{ctx}: multiset changed"
+                );
+                assert!(
+                    v.iter()
+                        .zip(&expected)
+                        .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
+                    "{ctx}: key sequence differs from std reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_u64() {
+    differential_for_type("u64", datagen::gen_u64, |x| *x, |a, b| a < b);
+}
+
+#[test]
+fn differential_f64() {
+    differential_for_type(
+        "f64",
+        datagen::gen_f64,
+        |x| x.to_bits(),
+        |a, b| a < b,
+    );
+}
+
+#[test]
+fn differential_pair() {
+    differential_for_type(
+        "Pair",
+        datagen::gen_pair,
+        |p| p.key.to_bits() ^ p.value.to_bits().rotate_left(32),
+        Pair::less,
+    );
+}
+
+#[test]
+fn differential_quartet() {
+    differential_for_type(
+        "Quartet",
+        datagen::gen_quartet,
+        |q| {
+            q.k0.to_bits()
+                ^ q.k1.to_bits().rotate_left(13)
+                ^ q.k2.to_bits().rotate_left(27)
+                ^ q.value.to_bits().rotate_left(41)
+        },
+        Quartet::less,
+    );
+}
+
+#[test]
+fn differential_bytes100() {
+    differential_for_type(
+        "Bytes100",
+        datagen::gen_bytes100,
+        |b| {
+            let mut k = [0u8; 8];
+            k.copy_from_slice(&b.key[2..10]);
+            // Payload folded in so a torn record would change the print.
+            u64::from_be_bytes(k) ^ (b.payload[0] as u64).rotate_left(56)
+        },
+        Bytes100::less,
+    );
+}

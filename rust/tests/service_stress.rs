@@ -1,0 +1,211 @@
+//! Stress and property tests for the batched [`SortService`]:
+//! concurrent clients, mixed job sizes and element types, duplicate-heavy
+//! equality-bucket inputs, and the zero-steady-state-allocation
+//! guarantee.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ips4o::datagen::{self, Distribution};
+use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Xoshiro256};
+use ips4o::{Config, SortService};
+
+fn lt(a: &u64, b: &u64) -> bool {
+    a < b
+}
+
+#[test]
+fn concurrent_clients_mixed_sizes_and_types() {
+    let svc = SortService::new(Config::default().with_threads(4));
+    let jobs_done = AtomicU64::new(0);
+    let clients = 6usize;
+    let jobs_per_client = 18usize;
+
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            let jobs_done = &jobs_done;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(0xC11E27 ^ c as u64);
+                for i in 0..jobs_per_client {
+                    // Mixed sizes: boundary cases, batch-path sizes, and an
+                    // occasional job big enough for the parallel path.
+                    let n = match i % 6 {
+                        0 => 0,
+                        1 => 1 + rng.next_below(3) as usize,
+                        2 => 255 + rng.next_below(3) as usize, // block boundary
+                        3 => 5_000,
+                        4 => 20_000,
+                        _ => 90_000, // ≈ 0.7 MB of u64 ⇒ large-job path
+                    };
+                    let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
+                    let seed = (c as u64) << 32 | i as u64;
+                    match i % 3 {
+                        0 => {
+                            let base = datagen::gen_u64(d, n, seed);
+                            let fp = multiset_fingerprint(&base, |x| *x);
+                            let out = svc.submit(base).wait();
+                            assert!(is_sorted_by(&out, lt), "u64 n={n} {}", d.name());
+                            assert_eq!(fp, multiset_fingerprint(&out, |x| *x));
+                        }
+                        1 => {
+                            let base = datagen::gen_pair(d, n, seed);
+                            let key =
+                                |p: &Pair| p.key.to_bits() ^ p.value.to_bits().rotate_left(32);
+                            let fp = multiset_fingerprint(&base, key);
+                            let out = svc.submit_by(base, Pair::less).wait();
+                            assert!(is_sorted_by(&out, Pair::less), "Pair n={n} {}", d.name());
+                            assert_eq!(fp, multiset_fingerprint(&out, key));
+                        }
+                        _ => {
+                            // Bytes100 jobs scaled down (100 B/element).
+                            let n = n / 8;
+                            let base = datagen::gen_bytes100(d, n, seed);
+                            let key = |b: &Bytes100| {
+                                let mut k = [0u8; 8];
+                                k.copy_from_slice(&b.key[2..10]);
+                                u64::from_be_bytes(k)
+                            };
+                            let fp = multiset_fingerprint(&base, key);
+                            let out = svc.submit_by(base, Bytes100::less).wait();
+                            assert!(is_sorted_by(&out, Bytes100::less), "B100 n={n} {}", d.name());
+                            assert_eq!(fp, multiset_fingerprint(&out, key));
+                        }
+                    }
+                    jobs_done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+
+    let total = (clients * jobs_per_client) as u64;
+    assert_eq!(jobs_done.load(Ordering::Relaxed), total);
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, total);
+    assert!(m.batches_dispatched >= 1);
+    assert!(m.batches_dispatched <= total, "batches cannot exceed jobs");
+}
+
+#[test]
+fn pipelined_submissions_batch_across_clients() {
+    // Submit-all-then-wait-all from several threads: the dispatcher should
+    // coalesce many queued jobs into far fewer batches.
+    let svc = SortService::new(Config::default().with_threads(4));
+    let clients = 4usize;
+    let per_client = 50usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            scope.spawn(move || {
+                let tickets: Vec<_> = (0..per_client)
+                    .map(|i| {
+                        let d = Distribution::ALL[i % Distribution::ALL.len()];
+                        svc.submit(datagen::gen_u64(d, 3_000, (c * 1000 + i) as u64))
+                    })
+                    .collect();
+                for t in tickets {
+                    assert!(is_sorted_by(&t.wait(), lt));
+                }
+            });
+        }
+    });
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, (clients * per_client) as u64);
+    assert!(
+        m.batches_dispatched < m.jobs_completed,
+        "pipelined submission should batch: {} batches for {} jobs",
+        m.batches_dispatched,
+        m.jobs_completed
+    );
+}
+
+#[test]
+fn property_duplicate_heavy_equality_buckets() {
+    // Seeded property loop over the duplicate-heavy generators that
+    // exercise the §4.4 equality-bucket path: TwoDup, RootDup, EightDup,
+    // Ones, plus near-constant inputs with 1–3 distinct keys.
+    let svc = SortService::new(Config::default().with_threads(3));
+    let mut rng = Xoshiro256::new(0xE9B0C7);
+    for trial in 0..40 {
+        let n = 1 + rng.next_below(40_000) as usize;
+        let base: Vec<u64> = match trial % 5 {
+            0 => datagen::gen_u64(Distribution::TwoDup, n, trial),
+            1 => datagen::gen_u64(Distribution::RootDup, n, trial),
+            2 => datagen::gen_u64(Distribution::EightDup, n, trial),
+            3 => datagen::gen_u64(Distribution::Ones, n, trial),
+            _ => {
+                let keys = 1 + rng.next_below(3);
+                (0..n).map(|_| rng.next_below(keys)).collect()
+            }
+        };
+        let fp = multiset_fingerprint(&base, |x| *x);
+        let mut expected = base.clone();
+        expected.sort_unstable();
+        let out = svc.submit(base).wait();
+        assert_eq!(out, expected, "trial {trial} n={n}");
+        assert_eq!(fp, multiset_fingerprint(&out, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn property_duplicate_heavy_without_equality_buckets() {
+    // The degenerate-sample fallback (heapsort) must keep the service
+    // correct when equality buckets are disabled.
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(2)
+            .with_equality_buckets(false),
+    );
+    let mut rng = Xoshiro256::new(0x0FF);
+    for trial in 0..12 {
+        let n = 1 + rng.next_below(20_000) as usize;
+        let keys = 1 + rng.next_below(2); // 1–2 distinct keys
+        let base: Vec<u64> = (0..n).map(|_| rng.next_below(keys)).collect();
+        let fp = multiset_fingerprint(&base, |x| *x);
+        let out = svc.submit(base).wait();
+        assert!(is_sorted_by(&out, lt), "trial {trial}");
+        assert_eq!(fp, multiset_fingerprint(&out, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn zero_scratch_allocations_after_warmup() {
+    // The acceptance criterion: a repeated-sort loop through the service
+    // performs zero scratch allocations after warm-up, proven by the
+    // metrics reuse counters.
+    let svc = SortService::new(Config::default().with_threads(2));
+    svc.warm::<u64>();
+    svc.warm::<Pair>();
+    let warm = svc.metrics();
+    assert!(warm.scratch_allocations > 0, "warm pre-builds arenas");
+
+    for round in 0..10u64 {
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                svc.submit(datagen::gen_u64(
+                    Distribution::ALL[(i + round as usize) % 9],
+                    4_000,
+                    round ^ i as u64,
+                ))
+            })
+            .collect();
+        // A parallel-path job mixed in: ParScratch<u64> came from warm().
+        let big = svc.submit(datagen::gen_u64(Distribution::Uniform, 150_000, round));
+        let pair_job = datagen::gen_pair(Distribution::TwoDup, 4_000, round);
+        let pairs = svc.submit_by(pair_job, Pair::less);
+        for t in tickets {
+            assert!(is_sorted_by(&t.wait(), lt));
+        }
+        assert!(is_sorted_by(&big.wait(), lt));
+        assert!(is_sorted_by(&pairs.wait(), Pair::less));
+    }
+
+    let d = svc.metrics().delta(&warm);
+    assert_eq!(
+        d.scratch_allocations, 0,
+        "warm service must never allocate scratch (reuses={})",
+        d.scratch_reuses
+    );
+    assert_eq!(d.jobs_completed, 100);
+    assert!(d.scratch_reuses >= 100, "every job reuses an arena");
+    assert_eq!(d.elements_sorted, 10 * (8 * 4_000 + 150_000 + 4_000));
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Canonical verification gate for this repo (referenced from ROADMAP.md).
 #
-#   ./ci.sh           build + tests + format check
+#   ./ci.sh           build + tests + bench compile check + format check
 #   ./ci.sh --fast    build + tests only
 #
 # The crate is dependency-free and builds fully offline.
@@ -15,12 +15,17 @@ echo "== cargo test -q =="
 cargo test -q
 
 if [[ "${1:-}" != "--fast" ]]; then
+    echo "== cargo bench --no-run =="
+    # Bench targets must keep compiling even when nobody runs them.
+    cargo bench --no-run
+
     if cargo fmt --version >/dev/null 2>&1; then
-        echo "== cargo fmt --check (advisory) =="
-        # Advisory until it has been seen green once: parts of the tree
-        # predate rustfmt enforcement. Run `cargo fmt` in rust/ to fix
-        # drift, then make this strict by removing the `|| ...` fallback.
-        cargo fmt --check || echo "WARNING: formatting drift detected (non-blocking)"
+        echo "== cargo fmt --check =="
+        # Enforced (it was advisory until first seen green, per PR 1).
+        cargo fmt --check || {
+            echo "formatting drift detected — run 'cargo fmt' in rust/ and re-commit"
+            exit 1
+        }
     else
         echo "== cargo fmt unavailable in this toolchain; skipping format check =="
     fi

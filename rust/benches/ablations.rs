@@ -21,7 +21,10 @@ fn main() {
     let lt = |a: &f64, b: &f64| a < b;
 
     // --- Ablation 1: equality buckets ---
-    println!("# Ablation 1 — equality buckets (§4.4), n=2^{}, sequential, ms", (n as f64).log2() as u32);
+    println!(
+        "# Ablation 1 — equality buckets (§4.4), n=2^{}, sequential, ms",
+        (n as f64).log2() as u32
+    );
     let mut t = Table::new(&["distribution", "eq=on", "eq=off", "off/on"]);
     for dist in [
         Distribution::Uniform,

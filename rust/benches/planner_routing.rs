@@ -1,0 +1,110 @@
+//! Planner routing bench: per distribution, measure the planner's
+//! chosen backend against forced radix (IPS²Ra) and forced
+//! comparison-IPS⁴o on u64 keys — showing both what the planner picks
+//! and what that choice costs or saves.
+//!
+//! Emits `BENCH_planner_routing.json` when `IPS4O_BENCH_JSON=<dir>` is
+//! set; the acceptance reference is radix ≥ comparison-IPS⁴o throughput
+//! on uniform u64 keys.
+
+use ips4o::bench_harness::{bench, print_machine_info, reps_for, JsonReport, Table};
+use ips4o::datagen::{gen_u64, Distribution};
+use ips4o::planner::plan_keys;
+use ips4o::util::is_sorted_by;
+use ips4o::{Backend, Config, PlannerMode, Sorter};
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n: usize = if full { 1 << 23 } else { 1 << 20 };
+    let reps = reps_for(n);
+    println!("# planner routing — n={n} u64 keys, t={threads}\n");
+
+    let cfg_auto = Config::default().with_threads(threads);
+    let cfg_radix = cfg_auto
+        .clone()
+        .with_planner(PlannerMode::Force(Backend::Radix));
+    let cfg_ips4o = cfg_auto
+        .clone()
+        .with_planner(PlannerMode::Force(Backend::Ips4oPar));
+    let auto = Sorter::new(cfg_auto.clone());
+    let radix = Sorter::new(cfg_radix);
+    let ips4o = Sorter::new(cfg_ips4o);
+
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Exponential,
+        Distribution::AlmostSorted,
+        Distribution::RootDup,
+        Distribution::Sorted,
+        Distribution::Ones,
+        Distribution::Zipf,
+        Distribution::SortedRuns,
+    ];
+
+    let mut table = Table::new(&["dist", "plan", "auto ms", "radix ms", "ips4o ms"]);
+    let mut report = JsonReport::new("planner_routing", threads);
+    let mut uniform_radix_tp = 0.0f64;
+    let mut uniform_ips4o_tp = 0.0f64;
+
+    for d in dists {
+        let make = || gen_u64(d, n, 0xBE7C4);
+        let plan = plan_keys(&make(), &cfg_auto);
+
+        let m_auto = bench(n, reps, &make, |mut v| {
+            auto.sort_keys(&mut v);
+            v
+        });
+        let m_radix = bench(n, reps, &make, |mut v| {
+            radix.sort_keys(&mut v);
+            v
+        });
+        let m_ips4o = bench(n, reps, &make, |mut v| {
+            ips4o.sort_keys(&mut v);
+            v
+        });
+
+        // Correctness spot-check outside the timed closures.
+        let mut v = make();
+        radix.sort_keys(&mut v);
+        assert!(
+            is_sorted_by(&v, |a, b| a < b),
+            "radix failed on {}",
+            d.name()
+        );
+
+        report.add("planner-auto", d.name(), &m_auto);
+        report.add("radix", d.name(), &m_radix);
+        report.add("ips4o-par", d.name(), &m_ips4o);
+        if d == Distribution::Uniform {
+            uniform_radix_tp = m_radix.throughput();
+            uniform_ips4o_tp = m_ips4o.throughput();
+        }
+
+        table.row(vec![
+            d.name().to_string(),
+            plan.backend.name().to_string(),
+            format!("{:.1}", m_auto.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m_radix.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m_ips4o.mean.as_secs_f64() * 1e3),
+        ]);
+    }
+
+    table.print();
+    report.emit_and_report();
+
+    println!(
+        "\nuniform u64: radix {:.1} M elem/s vs ips4o {:.1} M elem/s ({:.2}x)",
+        uniform_radix_tp / 1e6,
+        uniform_ips4o_tp / 1e6,
+        uniform_radix_tp / uniform_ips4o_tp.max(1.0)
+    );
+    if uniform_radix_tp >= uniform_ips4o_tp {
+        println!("PASS: radix >= comparison IPS4o on uniform u64 keys");
+    } else {
+        println!("FAIL: radix slower than comparison IPS4o on uniform u64 keys");
+    }
+}

@@ -9,7 +9,7 @@
 //! partition step — but a bin of ~hundreds of such jobs amortizes one
 //! pool dispatch over all of them, with zero steady-state allocation.
 
-use ips4o::bench_harness::{bench, print_machine_info, Table};
+use ips4o::bench_harness::{bench, print_machine_info, JsonReport, Table};
 use ips4o::datagen::{gen_u64, Distribution};
 use ips4o::util::is_sorted_by;
 use ips4o::{Config, SortService, Sorter};
@@ -96,10 +96,17 @@ fn main() {
     t.row(row("SortService (batched)", &m_svc));
     t.print();
 
+    let mut report = JsonReport::new("service_throughput", threads);
+    report.add("sorter-loop", "mixed-small-jobs/u64", &m_loop);
+    report.add("std-sort-loop", "mixed-small-jobs/u64", &m_std);
+    report.add("sort-service", "mixed-small-jobs/u64", &m_svc);
+    report.emit_and_report();
+
     println!(
         "\nservice steady state: {} jobs, {} batches, {} scratch reuses, {} scratch allocations",
         d.jobs_completed, d.batches_dispatched, d.scratch_reuses, d.scratch_allocations
     );
+    println!("service backends: {}", d.backends_summary());
     if m_svc.mean <= m_loop.mean {
         println!("PASS: batched service >= per-job Sorter loop");
     } else {

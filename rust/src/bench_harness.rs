@@ -5,6 +5,11 @@
 //! reporting mean and min. The paper's figures plot *running time /
 //! (n log₂ n)* per element — [`Measurement::per_nlogn_ns`] reproduces
 //! that unit.
+//!
+//! With `IPS4O_BENCH_JSON=<dir>` set, benches that build a
+//! [`JsonReport`] additionally write machine-readable
+//! `BENCH_<name>.json` files there (per-entry ns/elem, throughput,
+//! thread count), so repeated runs accumulate a perf trajectory.
 
 use std::time::{Duration, Instant};
 
@@ -150,14 +155,140 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench output (`IPS4O_BENCH_JSON`)
+// ---------------------------------------------------------------------------
+
+/// The environment variable naming the output directory for
+/// [`JsonReport::emit`]. Unset ⇒ no files are written.
+pub const BENCH_JSON_ENV: &str = "IPS4O_BENCH_JSON";
+
+/// One emitted record: an algorithm/backend measured on one workload.
+struct JsonEntry {
+    algo: String,
+    detail: String,
+    n: usize,
+    reps: usize,
+    mean_ns: u128,
+    min_ns: u128,
+    ns_per_elem: f64,
+    throughput: f64,
+}
+
+/// Accumulator for a bench's machine-readable results. Build one per
+/// bench binary, `add` every measurement, and `emit` at the end:
+/// `BENCH_<name>.json` is written to `$IPS4O_BENCH_JSON` when set.
+pub struct JsonReport {
+    name: String,
+    threads: usize,
+    entries: Vec<JsonEntry>,
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl JsonReport {
+    pub fn new(name: &str, threads: usize) -> Self {
+        JsonReport {
+            name: name.to_string(),
+            threads,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one measurement for `algo` on workload `detail`.
+    pub fn add(&mut self, algo: &str, detail: &str, m: &Measurement) {
+        let n = m.n.max(1);
+        self.entries.push(JsonEntry {
+            algo: algo.to_string(),
+            detail: detail.to_string(),
+            n: m.n,
+            reps: m.reps,
+            mean_ns: m.mean.as_nanos(),
+            min_ns: m.min.as_nanos(),
+            ns_per_elem: m.mean.as_nanos() as f64 / n as f64,
+            throughput: m.throughput(),
+        });
+    }
+
+    /// The serialized report (stable field order, no external deps).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.name)));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"algo\": \"{}\", \"detail\": \"{}\", \"n\": {}, \"reps\": {}, \
+                 \"mean_ns\": {}, \"min_ns\": {}, \"ns_per_elem\": {:.3}, \
+                 \"throughput_elem_per_s\": {:.1}}}{}\n",
+                json_escape(&e.algo),
+                json_escape(&e.detail),
+                e.n,
+                e.reps,
+                e.mean_ns,
+                e.min_ns,
+                e.ns_per_elem,
+                e.throughput,
+                if i + 1 < self.entries.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into `$IPS4O_BENCH_JSON` (creating the
+    /// directory if needed) and return the path, or `None` when the
+    /// variable is unset or the write failed.
+    pub fn emit(&self) -> Option<std::path::PathBuf> {
+        let dir = std::env::var(BENCH_JSON_ENV).ok()?;
+        if dir.is_empty() {
+            return None;
+        }
+        if std::fs::create_dir_all(&dir).is_err() {
+            eprintln!("# {BENCH_JSON_ENV}: cannot create {dir}");
+            return None;
+        }
+        let file = format!("BENCH_{}.json", self.name);
+        let path = std::path::Path::new(&dir).join(file);
+        match std::fs::write(&path, self.to_json()) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                eprintln!("# {BENCH_JSON_ENV}: write failed: {e}");
+                None
+            }
+        }
+    }
+
+    /// Emit (if configured) and print where the report went.
+    pub fn emit_and_report(&self) {
+        match self.emit() {
+            Some(path) => println!("# bench json: {}", path.display()),
+            None => println!("# bench json: set {BENCH_JSON_ENV}=<dir> to emit"),
+        }
+    }
+}
+
 /// Machine/environment banner for bench logs.
 pub fn print_machine_info() {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     println!(
-        "# machine: {} logical cores | substitution for the paper's Intel2S/Intel4S/AMD1S (DESIGN.md §5)",
-        cores
+        "# machine: {cores} logical cores | substitution for the paper's \
+         Intel2S/Intel4S/AMD1S (DESIGN.md §5)"
     );
 }
 
@@ -194,5 +325,45 @@ mod tests {
         let mut t = Table::new(&["algo", "n", "time"]);
         t.row(vec!["IPS4o".into(), "1048576".into(), "1.23ms".into()]);
         t.print();
+    }
+
+    #[test]
+    fn json_report_serializes_entries() {
+        let m = Measurement {
+            mean: Duration::from_nanos(2_000),
+            min: Duration::from_nanos(1_500),
+            reps: 3,
+            n: 1000,
+        };
+        let mut r = JsonReport::new("unit_test", 4);
+        r.add("radix", "Uniform/u64", &m);
+        r.add("IPS4o", "Zipf/u64", &m);
+        let s = r.to_json();
+        assert!(s.contains("\"bench\": \"unit_test\""));
+        assert!(s.contains("\"threads\": 4"));
+        assert!(s.contains("\"algo\": \"radix\""));
+        assert!(s.contains("\"detail\": \"Zipf/u64\""));
+        assert!(s.contains("\"mean_ns\": 2000"));
+        assert!(s.contains("\"ns_per_elem\": 2.000"));
+        // Two entries: exactly one comma-terminated, one bare.
+        assert_eq!(s.matches("},\n").count(), 1);
+        assert!(s.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\u000ay");
+    }
+
+    #[test]
+    fn json_report_emit_without_env_is_none() {
+        // The test env does not set IPS4O_BENCH_JSON for unit tests; if a
+        // caller does, emitting is exercised by the benches instead.
+        if std::env::var(BENCH_JSON_ENV).is_err() {
+            let r = JsonReport::new("unit_test_unset", 1);
+            assert!(r.emit().is_none());
+        }
     }
 }

@@ -17,6 +17,83 @@
 
 use crate::util::log2_ceil;
 
+/// Anything that maps elements to bucket indices for one distribution
+/// step. The block machinery (local classification, block permutation,
+/// cleanup) is generic over this trait, which is what lets the radix
+/// backend ([`crate::radix`], IPS²Ra-style) reuse IPS⁴o's phases
+/// unchanged: the comparison-based [`Classifier`] plugs in through
+/// [`CmpMap`], the digit extractor through
+/// [`crate::radix::DigitMap`].
+///
+/// Implementations must be *monotone*: if `a` precedes `b` in the
+/// intended output order, `bucket_of(a) <= bucket_of(b)`.
+pub trait BucketMap<T> {
+    /// Total number of buckets produced by this mapping.
+    fn num_buckets(&self) -> usize;
+
+    /// True if bucket `b` holds a single key (no recursion needed).
+    fn is_equality_bucket(&self, _b: usize) -> bool {
+        false
+    }
+
+    /// Map one element to its bucket index in `0..num_buckets()`.
+    fn bucket_of(&self, e: &T) -> usize;
+
+    /// Map four elements at once. Implementations should interleave the
+    /// four independent computations so their latencies overlap (the
+    /// "super scalar" part of s³-sort); the default just maps serially.
+    fn bucket_of4(&self, es: &[T; 4]) -> [usize; 4] {
+        [
+            self.bucket_of(&es[0]),
+            self.bucket_of(&es[1]),
+            self.bucket_of(&es[2]),
+            self.bucket_of(&es[3]),
+        ]
+    }
+}
+
+/// Adapter pairing a [`Classifier`] with its comparator so it can be
+/// used wherever a [`BucketMap`] is expected.
+pub struct CmpMap<'a, T, F> {
+    classifier: &'a Classifier<T>,
+    is_less: &'a F,
+}
+
+impl<'a, T, F> CmpMap<'a, T, F> {
+    pub fn new(classifier: &'a Classifier<T>, is_less: &'a F) -> Self {
+        CmpMap {
+            classifier,
+            is_less,
+        }
+    }
+}
+
+impl<'a, T, F> BucketMap<T> for CmpMap<'a, T, F>
+where
+    T: Copy,
+    F: Fn(&T, &T) -> bool,
+{
+    #[inline(always)]
+    fn num_buckets(&self) -> usize {
+        self.classifier.num_buckets()
+    }
+
+    #[inline(always)]
+    fn is_equality_bucket(&self, b: usize) -> bool {
+        self.classifier.is_equality_bucket(b)
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, e: &T) -> usize {
+        self.classifier.classify(e, self.is_less)
+    }
+
+    #[inline(always)]
+    fn bucket_of4(&self, es: &[T; 4]) -> [usize; 4] {
+        self.classifier.classify4(es, self.is_less)
+    }
+}
+
 /// A built classifier for one partitioning step.
 ///
 /// Bucket index layout:
@@ -381,6 +458,24 @@ mod tests {
                 for u in 0..4 {
                     assert_eq!(got[u], c.classify(&es[u], &lt));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn cmp_map_adapter_matches_classifier() {
+        let spl: Vec<u64> = vec![10, 20, 30];
+        for equality in [false, true] {
+            let c = Classifier::new(&spl, equality, &lt);
+            let m = CmpMap::new(&c, &lt);
+            assert_eq!(m.num_buckets(), c.num_buckets());
+            for e in 0..40u64 {
+                assert_eq!(m.bucket_of(&e), c.classify(&e, &lt));
+            }
+            let es = [5u64, 10, 25, 39];
+            assert_eq!(m.bucket_of4(&es), c.classify4(&es, &lt));
+            for b in 0..c.num_buckets() {
+                assert_eq!(m.is_equality_bucket(b), c.is_equality_bucket(b));
             }
         }
     }

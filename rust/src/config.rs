@@ -1,5 +1,6 @@
 //! Tuning parameters of IPS⁴o (paper §4.7) and their defaults.
 
+use crate::planner::backend::PlannerMode;
 use crate::util::{log2_ceil, log2_floor};
 
 /// All tuning knobs of the algorithm. Field names follow the paper:
@@ -47,6 +48,12 @@ pub struct Config {
     /// paying cooperative-partition scheduling overhead. Jobs at or above
     /// the threshold get the full parallel sort.
     pub small_sort_bytes: usize,
+    /// How [`Sorter`](crate::Sorter) and
+    /// [`SortService`](crate::SortService) route jobs: fingerprint and
+    /// pick the predicted-fastest backend (`Auto`, the default), always
+    /// use one backend (`Force`), or the pre-planner thread-count
+    /// dispatch (`Disabled`). See [`crate::planner`].
+    pub planner: PlannerMode,
 }
 
 impl Default for Config {
@@ -63,6 +70,7 @@ impl Default for Config {
             eager_base_case: true,
             service_shards: 4,
             small_sort_bytes: 256 << 10, // 256 KiB ≈ where cooperative partitioning starts to win
+            planner: PlannerMode::Auto,
         }
     }
 }
@@ -108,6 +116,12 @@ impl Config {
     /// `0` disables batching (every job takes the parallel path).
     pub fn with_small_sort_bytes(mut self, bytes: usize) -> Self {
         self.small_sort_bytes = bytes;
+        self
+    }
+
+    /// Builder-style planner mode override.
+    pub fn with_planner(mut self, mode: PlannerMode) -> Self {
+        self.planner = mode;
         self
     }
 
@@ -254,5 +268,15 @@ mod tests {
         let c = c.with_service_shards(0).with_small_sort_bytes(0);
         assert_eq!(c.service_shards, 1, "shards clamp to at least one");
         assert_eq!(c.small_sort_bytes, 0, "zero disables batching");
+    }
+
+    #[test]
+    fn planner_knob_defaults_and_builder() {
+        use crate::planner::backend::Backend;
+        assert_eq!(Config::default().planner, PlannerMode::Auto);
+        let c = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
+        assert_eq!(c.planner, PlannerMode::Force(Backend::Radix));
+        let c = c.with_planner(PlannerMode::Disabled);
+        assert_eq!(c.planner, PlannerMode::Disabled);
     }
 }

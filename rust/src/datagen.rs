@@ -1,14 +1,18 @@
 //! Workload generators — the nine input distributions of the paper's
-//! evaluation (§5) over the four benchmark data types.
+//! evaluation (§5) over the four benchmark data types, plus two
+//! planner-focused additions.
 //!
 //! * `Uniform`, `Exponential`, `AlmostSorted` — from Shun et al. [28]
 //! * `RootDup` (`A[i] = i mod ⌊√n⌋`), `TwoDup` (`A[i] = i² + n/2 mod n`),
 //!   `EightDup` (`A[i] = i⁸ + n/2 mod n`) — from Edelkamp et al. [9]
 //! * `Sorted`, `ReverseSorted`, `Ones`
+//! * `Zipf` (heavy-tailed skewed keys, s = 1 via inverse CDF) and
+//!   `SortedRuns` (16 concatenated ascending runs) — targets for the
+//!   planner's skew and run detection ([`crate::planner`])
 
 use crate::util::{Bytes100, Pair, Quartet, Xoshiro256};
 
-/// The paper's input distributions.
+/// The paper's input distributions plus the planner additions.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Distribution {
     Uniform,
@@ -20,11 +24,14 @@ pub enum Distribution {
     Sorted,
     ReverseSorted,
     Ones,
+    Zipf,
+    SortedRuns,
 }
 
 impl Distribution {
-    /// All nine, in the paper's order.
-    pub const ALL: [Distribution; 9] = [
+    /// All eleven: the paper's nine in the paper's order, then the
+    /// planner additions.
+    pub const ALL: [Distribution; 11] = [
         Distribution::Uniform,
         Distribution::Exponential,
         Distribution::AlmostSorted,
@@ -34,6 +41,8 @@ impl Distribution {
         Distribution::Sorted,
         Distribution::ReverseSorted,
         Distribution::Ones,
+        Distribution::Zipf,
+        Distribution::SortedRuns,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -47,6 +56,8 @@ impl Distribution {
             Distribution::Sorted => "Sorted",
             Distribution::ReverseSorted => "ReverseSorted",
             Distribution::Ones => "Ones",
+            Distribution::Zipf => "Zipf",
+            Distribution::SortedRuns => "SortedRuns",
         }
     }
 
@@ -108,6 +119,29 @@ pub fn keys_u64(d: Distribution, n: usize, seed: u64) -> Vec<u64> {
         Distribution::Sorted => (0..nn).collect(),
         Distribution::ReverseSorted => (0..nn).rev().collect(),
         Distribution::Ones => vec![1; n],
+        Distribution::Zipf => {
+            // Continuous Zipf with s = 1 via inverse CDF: F(x) = ln x /
+            // ln n on [1, n], so x = n^u — log-uniform keys whose mass
+            // concentrates on small values with a heavy tail up to n.
+            let ln_n = (nn.max(2) as f64).ln();
+            (0..n)
+                .map(|_| (ln_n * rng.next_f64()).exp() as u64)
+                .collect()
+        }
+        Distribution::SortedRuns => {
+            // 16 concatenated ascending runs of uniform keys — the
+            // planner's run-detection target.
+            let runs = 16usize.min(n.max(1));
+            let mut v = Vec::with_capacity(n);
+            for r in 0..runs {
+                let start = r * n / runs;
+                let end = (r + 1) * n / runs;
+                let mut run: Vec<u64> = (start..end).map(|_| rng.next_u64()).collect();
+                run.sort_unstable();
+                v.extend(run);
+            }
+            v
+        }
     }
 }
 
@@ -235,6 +269,46 @@ mod tests {
         let below_tenth = v.iter().filter(|&&x| x < max / 10).count();
         // Exponential mass concentrates near zero.
         assert!(below_tenth > v.len() / 3, "{below_tenth}");
+    }
+
+    #[test]
+    fn zipf_is_heavily_skewed() {
+        let n = 100_000;
+        let v = keys_u64(Distribution::Zipf, n, 21);
+        assert!(v.iter().all(|&x| x >= 1 && x < n as u64));
+        // Log-uniform: about half the mass below √n.
+        let root = (n as f64).sqrt() as u64;
+        let below_root = v.iter().filter(|&&x| x < root).count();
+        assert!(below_root > n / 3, "{below_root}");
+        assert!(below_root < 2 * n / 3, "{below_root}");
+        // Heavy tail: some keys land in the top decade.
+        assert!(v.iter().any(|&x| x > n as u64 / 10));
+    }
+
+    #[test]
+    fn sorted_runs_has_exactly_sixteen_runs() {
+        let n = 32_000;
+        let v = keys_u64(Distribution::SortedRuns, n, 22);
+        assert_eq!(v.len(), n);
+        let descents = v.windows(2).filter(|w| w[0] > w[1]).count();
+        // 16 runs ⇒ at most 15 descending boundaries (and, with random
+        // keys, almost surely exactly 15).
+        assert!(descents <= 15, "{descents}");
+        assert!(descents >= 8, "degenerate runs: {descents}");
+        // Each run is internally sorted.
+        for r in 0..16 {
+            let (s, e) = (r * n / 16, (r + 1) * n / 16);
+            assert!(v[s..e].windows(2).all(|w| w[0] <= w[1]), "run {r}");
+        }
+    }
+
+    #[test]
+    fn new_distributions_handle_edge_sizes() {
+        for d in [Distribution::Zipf, Distribution::SortedRuns] {
+            for n in [0usize, 1, 2, 15, 17] {
+                assert_eq!(keys_u64(d, n, 3).len(), n, "{} n={n}", d.name());
+            }
+        }
     }
 
     #[test]

@@ -59,6 +59,18 @@
 //! assert_eq!(m.jobs_completed, 2);
 //! assert_eq!(m.elements_sorted, 10_003);
 //! ```
+//!
+//! ## Adaptive backend planner
+//!
+//! Jobs are not hard-wired to comparison-based IPS⁴o: the [`planner`]
+//! fingerprints each input (presortedness, duplicate density, key-byte
+//! entropy) and routes it to the predicted-fastest backend — IPS⁴o
+//! (sequential or parallel), the derived in-place radix sort IPS²Ra
+//! ([`radix`], for [`RadixKey`] element types via [`Sorter::sort_keys`]
+//! / [`SortService::submit_keys`]), run detection + merging for
+//! nearly-sorted inputs, or the insertion-sort base case. Routing
+//! decisions are counted per backend in the metrics;
+//! [`Config::with_planner`] forces a backend or disables routing.
 
 pub mod arena;
 pub mod base_case;
@@ -72,6 +84,8 @@ pub mod metrics;
 pub mod parallel;
 pub mod pem;
 pub mod permutation;
+pub mod planner;
+pub mod radix;
 pub mod sampling;
 pub mod sequential;
 pub mod service;
@@ -84,6 +98,8 @@ pub mod bench_harness;
 pub mod runtime;
 
 pub use config::Config;
+pub use planner::{Backend, PlannerMode, SortPlan};
+pub use radix::RadixKey;
 pub use service::{JobTicket, SortService};
 pub use sorter::Sorter;
 
@@ -117,4 +133,19 @@ where
         .map(|n| n.get())
         .unwrap_or(1);
     Sorter::new(Config::default().with_threads(threads)).sort_by(v, &is_less);
+}
+
+/// Sort a radix-keyed type sequentially, letting the planner route
+/// (comparison IS⁴o, in-place radix, run merging, or the base case).
+pub fn sort_keys<T: RadixKey>(v: &mut [T]) {
+    Sorter::new(Config::default()).sort_keys(v)
+}
+
+/// Sort a radix-keyed type with all hardware threads, letting the
+/// planner route (IPS⁴o, IPS²Ra radix, run merging, or the base case).
+pub fn sort_par_keys<T: RadixKey>(v: &mut [T]) {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    Sorter::new(Config::default().with_threads(threads)).sort_keys(v)
 }

@@ -9,7 +9,7 @@
 //! bucket-homogeneous blocks followed by empty blocks; leftovers stay in
 //! the buffers for the cleanup phase.
 
-use crate::classifier::Classifier;
+use crate::classifier::BucketMap;
 use crate::parallel::SharedSlice;
 use crate::util::Element;
 
@@ -109,24 +109,25 @@ pub struct StripeResult {
 }
 
 /// Classify the stripe `[begin, end)` of `arr`, filling `bufs` and
-/// flushing full blocks to the stripe front.
+/// flushing full blocks to the stripe front. Generic over the bucket
+/// mapping: the comparison classifier (via
+/// [`crate::classifier::CmpMap`]) or the radix digit extractor.
 ///
 /// # Safety contract
 /// The caller guarantees `[begin, end)` is owned exclusively by this
 /// thread for the duration of the call.
-pub fn classify_stripe<T, F>(
+pub fn classify_stripe<T, M>(
     arr: &SharedSlice<T>,
     begin: usize,
     end: usize,
-    classifier: &Classifier<T>,
+    map: &M,
     bufs: &mut LocalBuffers<T>,
-    is_less: &F,
 ) -> StripeResult
 where
     T: Element,
-    F: Fn(&T, &T) -> bool,
+    M: BucketMap<T>,
 {
-    let nb = classifier.num_buckets();
+    let nb = map.num_buckets();
     debug_assert!(bufs.num_buckets() >= nb);
     let b = bufs.block_elems();
     let mut counts = vec![0usize; nb];
@@ -150,7 +151,7 @@ where
                 std::ptr::read(p.add(2)),
                 std::ptr::read(p.add(3)),
             ];
-            let bks = classifier.classify4(&es, is_less);
+            let bks = map.bucket_of4(&es);
             for u in 0..4 {
                 let bk = bks[u];
                 *counts.get_unchecked_mut(bk) += 1;
@@ -169,7 +170,7 @@ where
         }
         while i < end {
             let e = std::ptr::read(arr.slice(i, i + 1).as_ptr());
-            let bk = classifier.classify(&e, is_less);
+            let bk = map.bucket_of(&e);
             *counts.get_unchecked_mut(bk) += 1;
             if bufs.push(bk, e) {
                 debug_assert!(write + b <= i + 1);
@@ -194,6 +195,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::classifier::{Classifier, CmpMap};
     use crate::util::{multiset_fingerprint, Xoshiro256};
 
     fn lt(a: &u64, b: &u64) -> bool {
@@ -211,7 +213,7 @@ mod tests {
         bufs.reset(c.num_buckets(), block);
         let n = v.len();
         let shared = SharedSlice::new(v.as_mut_slice());
-        let res = classify_stripe(&shared, 0, n, &c, &mut bufs, &lt);
+        let res = classify_stripe(&shared, 0, n, &CmpMap::new(&c, &lt), &mut bufs);
         (res, c, bufs)
     }
 

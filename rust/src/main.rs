@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use ips4o::baselines::Algo;
 use ips4o::datagen::{self, Distribution};
-use ips4o::Config;
+use ips4o::{Backend, Config, PlannerMode, Sorter};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -47,10 +47,11 @@ COMMANDS:
 FLAGS (sort):
     --algo <name>      IPS4o | IS4o | IS4o-strict | BlockQ | s3-sort |
                        DualPivot | std-sort | MCSTLubq | MCSTLbq |
-                       MCSTLmwm | PBBS | TBB          [default: IPS4o]
+                       MCSTLmwm | PBBS | TBB | radix | planned
+                                                      [default: IPS4o]
     --dist <name>      Uniform | Exponential | AlmostSorted | RootDup |
-                       TwoDup | EightDup | Sorted | ReverseSorted | Ones
-                                                      [default: Uniform]
+                       TwoDup | EightDup | Sorted | ReverseSorted |
+                       Ones | Zipf | SortedRuns       [default: Uniform]
     --n <int>          number of elements (suffix k/m/g ok) [default: 1m]
     --threads <int>    worker threads                  [default: all cores]
     --type <name>      f64 | u64 | pair | quartet | bytes100 [default: f64]
@@ -58,6 +59,9 @@ FLAGS (sort):
     --block <bytes>    block size in bytes             [default: 2048]
     --seed <int>       workload seed                   [default: 42]
     --no-eq            disable equality buckets
+    --planner <mode>   auto | off | ips4o-par | ips4o-seq | radix |
+                       run-merge | base-case (forces a backend)
+                                                      [default: auto]
 
 FLAGS (serve):
     --clients <int>      concurrent client threads        [default: 4]
@@ -68,6 +72,7 @@ FLAGS (serve):
     --threads <int>      service sort workers             [default: all cores]
     --shards <int>       submission-queue shards          [default: 4]
     --small-bytes <int>  batching threshold in bytes      [default: 262144]
+    --planner <mode>     auto | off | <backend>           [default: auto]
 "#
     );
 }
@@ -114,25 +119,76 @@ fn build_config(args: &[String]) -> Config {
     if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_small_sort_bytes(b);
     }
+    if let Some(mode) = parse_flag(args, "--planner") {
+        cfg = cfg.with_planner(match mode {
+            "auto" => PlannerMode::Auto,
+            "off" | "disabled" => PlannerMode::Disabled,
+            name => match Backend::from_name(name) {
+                Some(b) => PlannerMode::Force(b),
+                None => {
+                    eprintln!("unknown planner mode {name:?}; using auto");
+                    PlannerMode::Auto
+                }
+            },
+        });
+    }
     cfg
+}
+
+/// What `sort --algo` can name: a registry algorithm, the forced radix
+/// backend, or the planner's own choice.
+#[derive(Copy, Clone)]
+enum CliAlgo {
+    Classic(Algo),
+    Radix,
+    Planned,
+}
+
+impl CliAlgo {
+    fn name(&self) -> &'static str {
+        match self {
+            CliAlgo::Classic(a) => a.name(),
+            CliAlgo::Radix => "radix",
+            CliAlgo::Planned => "planned",
+        }
+    }
+
+    fn from_name(s: &str) -> CliAlgo {
+        match s.to_ascii_lowercase().as_str() {
+            "radix" => CliAlgo::Radix,
+            "planned" | "auto" => CliAlgo::Planned,
+            _ => CliAlgo::Classic(Algo::from_name(s).unwrap_or(Algo::Ips4o)),
+        }
+    }
 }
 
 /// Run one algorithm over an already-generated keyset, generically over
 /// the element type; returns elapsed seconds.
-fn run_algo<T: ips4o::util::Element>(
-    algo: Algo,
+fn run_algo<T: ips4o::RadixKey>(
+    algo: CliAlgo,
     v: &mut Vec<T>,
     cfg: &Config,
     is_less: impl Fn(&T, &T) -> bool + Sync,
 ) -> f64 {
     let t0 = Instant::now();
-    ips4o::bench_harness::run_algo(algo, v, cfg, &is_less);
+    match algo {
+        CliAlgo::Classic(a) => ips4o::bench_harness::run_algo(a, v, cfg, &is_less),
+        CliAlgo::Radix => {
+            let cfg = cfg.clone().with_planner(PlannerMode::Force(Backend::Radix));
+            Sorter::new(cfg).sort_keys(v);
+        }
+        CliAlgo::Planned => {
+            let sorter = Sorter::new(cfg.clone());
+            sorter.sort_keys(v);
+            let m = sorter.scratch_metrics();
+            println!("# planned backend: {}", m.backends_summary());
+        }
+    }
     t0.elapsed().as_secs_f64()
 }
 
 fn cmd_sort(args: &[String]) -> i32 {
-    let algo = Algo::from_name(parse_flag(args, "--algo").unwrap_or("IPS4o"))
-        .unwrap_or(Algo::Ips4o);
+    let algo = CliAlgo::from_name(parse_flag(args, "--algo").unwrap_or("IPS4o"));
     let dist = Distribution::from_name(parse_flag(args, "--dist").unwrap_or("Uniform"))
         .unwrap_or(Distribution::Uniform);
     let n = parse_n(parse_flag(args, "--n").unwrap_or("1m"));
@@ -252,15 +308,14 @@ fn cmd_serve(args: &[String]) -> i32 {
                     };
                     let s = seed ^ ((c as u64) << 32) ^ i as u64;
                     let dist = Distribution::ALL[i % Distribution::ALL.len()];
+                    // Keyed submission: the planner may route each job to
+                    // radix, run merge, or comparison IPS⁴o per its
+                    // fingerprint (all four types implement RadixKey).
                     match i % 4 {
-                        0 => tu.push(svc.submit(datagen::gen_u64(dist, sz, s))),
-                        1 => tf.push(
-                            svc.submit_by(datagen::gen_f64(dist, sz, s), |a: &f64, b: &f64| a < b),
-                        ),
-                        2 => tp.push(svc.submit_by(datagen::gen_pair(dist, sz, s), Pair::less)),
-                        _ => tb.push(
-                            svc.submit_by(datagen::gen_bytes100(dist, sz, s), Bytes100::less),
-                        ),
+                        0 => tu.push(svc.submit_keys(datagen::gen_u64(dist, sz, s))),
+                        1 => tf.push(svc.submit_keys(datagen::gen_f64(dist, sz, s))),
+                        2 => tp.push(svc.submit_keys(datagen::gen_pair(dist, sz, s))),
+                        _ => tb.push(svc.submit_keys(datagen::gen_bytes100(dist, sz, s))),
                     }
                 }
                 let count = |len: u64, ok: bool| {
@@ -304,6 +359,11 @@ fn cmd_serve(args: &[String]) -> i32 {
         "metrics: batches={} jobs_completed={} scratch_reuses={} scratch_allocations={}",
         d.batches_dispatched, d.jobs_completed, d.scratch_reuses, d.scratch_allocations
     );
+    println!(
+        "backends: {} ({} distinct)",
+        d.backends_summary(),
+        d.distinct_backends()
+    );
     let fails = failures.load(Ordering::Relaxed);
     if fails == 0 {
         println!("serve: all results verified sorted");
@@ -318,7 +378,7 @@ fn cmd_selftest(args: &[String]) -> i32 {
     let n = parse_n(parse_flag(args, "--n").unwrap_or("200k"));
     let cfg = build_config(args);
     let mut failures = 0;
-    let algos = [
+    let mut algos: Vec<CliAlgo> = [
         Algo::Is4o,
         Algo::Is4oStrict,
         Algo::Ips4o,
@@ -331,7 +391,12 @@ fn cmd_selftest(args: &[String]) -> i32 {
         Algo::ParMergesort,
         Algo::PbbsSampleSort,
         Algo::TbbLike,
-    ];
+    ]
+    .into_iter()
+    .map(CliAlgo::Classic)
+    .collect();
+    algos.push(CliAlgo::Radix);
+    algos.push(CliAlgo::Planned);
     for algo in algos {
         for dist in Distribution::ALL {
             let mut v = datagen::gen_u64(dist, n, 42);

@@ -11,6 +11,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::planner::backend::Backend;
+
 /// Global counters (process-wide; benches reset them around a run).
 #[derive(Default)]
 pub struct Counters {
@@ -87,7 +89,6 @@ impl CounterSnapshot {
 /// interference from concurrently running tests.
 ///
 /// [`SortService`]: crate::service::SortService
-#[derive(Default)]
 pub struct ScratchCounters {
     /// Scratch arenas constructed from fresh heap allocations.
     pub scratch_allocations: AtomicU64,
@@ -100,6 +101,28 @@ pub struct ScratchCounters {
     pub batches_dispatched: AtomicU64,
     /// Total elements sorted through the owning instance.
     pub elements_sorted: AtomicU64,
+    /// Planner routing decisions, indexed by
+    /// [`Backend::index`](crate::planner::Backend::index).
+    pub backend_selected: [AtomicU64; Backend::COUNT],
+}
+
+impl Default for ScratchCounters {
+    fn default() -> Self {
+        ScratchCounters {
+            scratch_allocations: AtomicU64::new(0),
+            scratch_reuses: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            batches_dispatched: AtomicU64::new(0),
+            elements_sorted: AtomicU64::new(0),
+            backend_selected: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
 }
 
 impl ScratchCounters {
@@ -113,15 +136,28 @@ impl ScratchCounters {
         self.jobs_completed.store(0, Ordering::Relaxed);
         self.batches_dispatched.store(0, Ordering::Relaxed);
         self.elements_sorted.store(0, Ordering::Relaxed);
+        for c in &self.backend_selected {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one planner routing decision.
+    pub fn record_backend(&self, b: Backend) {
+        self.backend_selected[b.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> ScratchSnapshot {
+        let mut backend_selected = [0u64; Backend::COUNT];
+        for (out, c) in backend_selected.iter_mut().zip(&self.backend_selected) {
+            *out = c.load(Ordering::Relaxed);
+        }
         ScratchSnapshot {
             scratch_allocations: self.scratch_allocations.load(Ordering::Relaxed),
             scratch_reuses: self.scratch_reuses.load(Ordering::Relaxed),
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             batches_dispatched: self.batches_dispatched.load(Ordering::Relaxed),
             elements_sorted: self.elements_sorted.load(Ordering::Relaxed),
+            backend_selected,
         }
     }
 }
@@ -134,16 +170,50 @@ pub struct ScratchSnapshot {
     pub jobs_completed: u64,
     pub batches_dispatched: u64,
     pub elements_sorted: u64,
+    /// Planner routing decisions, indexed by
+    /// [`Backend::index`](crate::planner::Backend::index).
+    pub backend_selected: [u64; Backend::COUNT],
 }
 
 impl ScratchSnapshot {
     pub fn delta(&self, earlier: &ScratchSnapshot) -> ScratchSnapshot {
+        let mut backend_selected = [0u64; Backend::COUNT];
+        for i in 0..Backend::COUNT {
+            backend_selected[i] = self.backend_selected[i] - earlier.backend_selected[i];
+        }
         ScratchSnapshot {
             scratch_allocations: self.scratch_allocations - earlier.scratch_allocations,
             scratch_reuses: self.scratch_reuses - earlier.scratch_reuses,
             jobs_completed: self.jobs_completed - earlier.jobs_completed,
             batches_dispatched: self.batches_dispatched - earlier.batches_dispatched,
             elements_sorted: self.elements_sorted - earlier.elements_sorted,
+            backend_selected,
+        }
+    }
+
+    /// Jobs routed to `b`.
+    pub fn backend_count(&self, b: Backend) -> u64 {
+        self.backend_selected[b.index()]
+    }
+
+    /// Number of distinct backends that handled at least one job.
+    pub fn distinct_backends(&self) -> usize {
+        self.backend_selected.iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Compact `name=count` summary of the non-zero backend counters.
+    pub fn backends_summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for b in Backend::ALL {
+            let c = self.backend_count(b);
+            if c > 0 {
+                parts.push(format!("{}={}", b.name(), c));
+            }
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(" ")
         }
     }
 }
@@ -210,6 +280,30 @@ mod tests {
         assert_eq!(d.elements_sorted, 100);
         c.reset();
         assert_eq!(c.snapshot(), ScratchSnapshot::default());
+    }
+
+    #[test]
+    fn backend_counters_record_and_summarize() {
+        let c = ScratchCounters::new();
+        c.record_backend(Backend::Radix);
+        c.record_backend(Backend::Radix);
+        c.record_backend(Backend::RunMerge);
+        let s = c.snapshot();
+        assert_eq!(s.backend_count(Backend::Radix), 2);
+        assert_eq!(s.backend_count(Backend::RunMerge), 1);
+        assert_eq!(s.backend_count(Backend::Ips4oPar), 0);
+        assert_eq!(s.distinct_backends(), 2);
+        assert_eq!(s.backends_summary(), "radix=2 run-merge=1");
+        let later = {
+            c.record_backend(Backend::Ips4oSeq);
+            c.snapshot()
+        };
+        let d = later.delta(&s);
+        assert_eq!(d.backend_count(Backend::Ips4oSeq), 1);
+        assert_eq!(d.backend_count(Backend::Radix), 0);
+        c.reset();
+        assert_eq!(c.snapshot().distinct_backends(), 0);
+        assert_eq!(c.snapshot().backends_summary(), "none");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use crate::classifier::Classifier;
+use crate::classifier::BucketMap;
 use crate::parallel::SharedSlice;
 use crate::util::{div_ceil, BucketPointers, Element};
 
@@ -264,19 +264,18 @@ pub fn move_empty_blocks<T: Element>(
 /// `swap` must hold 2·b elements of scratch. `offset` is the element
 /// offset of the subproblem inside the underlying array (all plan/pointer
 /// indices are subproblem-relative; `arr` spans the subproblem only).
-pub fn permute_blocks<T, F>(
+pub fn permute_blocks<T, M>(
     arr: &SharedSlice<T>,
     plan: &Plan,
     pointers: &[BucketPointers],
-    classifier: &Classifier<T>,
+    map: &M,
     overflow: &Overflow<T>,
     swap: &mut [T],
     tid: usize,
     threads: usize,
-    is_less: &F,
 ) where
     T: Element,
-    F: Fn(&T, &T) -> bool,
+    M: BucketMap<T>,
 {
     let b = plan.block;
     let nb = plan.num_buckets();
@@ -322,15 +321,13 @@ pub fn permute_blocks<T, F>(
         }
 
         // Chase the block in buf_a to its destination.
-        let mut dest = classifier.classify(&buf_a[0], is_less);
+        let mut dest = map.bucket_of(&buf_a[0]);
         loop {
             let (w, r) = pointers[dest].fetch_inc_write(1);
             if w <= r {
                 // w points at an unprocessed block of `dest`.
                 let wb = w as usize * b;
-                let db = unsafe {
-                    classifier.classify(&arr.slice(wb, wb + 1)[0], is_less)
-                };
+                let db = unsafe { map.bucket_of(&arr.slice(wb, wb + 1)[0]) };
                 if db == dest {
                     // Block already in place — skip it (w advanced).
                     continue;
@@ -367,18 +364,17 @@ pub fn permute_blocks<T, F>(
 /// Sequential block permutation — same protocol without atomics
 /// (paper §4.7: "In the sequential case, we avoid the use of atomic
 /// operations on pointers").
-pub fn permute_blocks_seq<T, F>(
+pub fn permute_blocks_seq<T, M>(
     arr: &mut [T],
     plan: &Plan,
     w: &mut [i32],
     r: &mut [i32],
-    classifier: &Classifier<T>,
+    map: &M,
     overflow: &Overflow<T>,
     swap: &mut [T],
-    is_less: &F,
 ) where
     T: Element,
-    F: Fn(&T, &T) -> bool,
+    M: BucketMap<T>,
 {
     let b = plan.block;
     let nb = plan.num_buckets();
@@ -402,13 +398,13 @@ pub fn permute_blocks_seq<T, F>(
             break 'outer;
         }
 
-        let mut dest = classifier.classify(&buf_a[0], is_less);
+        let mut dest = map.bucket_of(&buf_a[0]);
         loop {
             let wd = w[dest];
             if wd <= r[dest] {
                 w[dest] += 1;
                 let wb = wd as usize * b;
-                let db = classifier.classify(&arr[wb], is_less);
+                let db = map.bucket_of(&arr[wb]);
                 if db == dest {
                     continue; // skip correctly-placed block
                 }
@@ -441,6 +437,7 @@ pub fn final_writes(pointers: &[BucketPointers], nb: usize) -> Vec<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::classifier::{Classifier, CmpMap};
     use crate::local_classification::{classify_stripe, LocalBuffers};
     use crate::util::Xoshiro256;
 
@@ -461,7 +458,7 @@ mod tests {
         let n = v.len();
         let res = {
             let shared = SharedSlice::new(v.as_mut_slice());
-            classify_stripe(&shared, 0, n, &c, &mut bufs, &lt)
+            classify_stripe(&shared, 0, n, &CmpMap::new(&c, &lt), &mut bufs)
         };
         let plan = Plan::new(&res.counts, n, block);
         let stripes = StripeBlocks {
@@ -478,7 +475,7 @@ mod tests {
         let overflow = Overflow::new(block);
         overflow.reset(block);
         let mut swap = vec![0u64; 2 * block];
-        permute_blocks_seq(v, &plan, &mut w, &mut r, &c, &overflow, &mut swap, &lt);
+        permute_blocks_seq(v, &plan, &mut w, &mut r, &CmpMap::new(&c, &lt), &overflow, &mut swap);
         (plan, w, c, bufs, overflow)
     }
 
@@ -634,7 +631,7 @@ mod tests {
             bufs.reset(c.num_buckets(), block);
             let res = {
                 let arr = SharedSlice::new(v.as_mut_slice());
-                classify_stripe(&arr, 0, n, &c, &mut bufs, &lt)
+                classify_stripe(&arr, 0, n, &CmpMap::new(&c, &lt), &mut bufs)
             };
             let plan = Plan::new(&res.counts, n, block);
             let stripes = StripeBlocks {
@@ -655,9 +652,12 @@ mod tests {
                 let arr = &arr;
                 let swaps = crate::parallel::PerThread::new(vec![vec![0u64; 2 * block]; 4]);
                 let swaps = &swaps;
+                let is_less = lt;
+                let map = CmpMap::new(c, &is_less);
+                let map = &map;
                 pool.run(move |tid| {
                     let swap = unsafe { swaps.get_mut(tid) };
-                    permute_blocks(arr, plan, pointers, c, overflow, swap, tid, 4, &lt);
+                    permute_blocks(arr, plan, pointers, map, overflow, swap, tid, 4);
                 });
             }
             let w = final_writes(&pointers, plan.num_buckets());

@@ -1,0 +1,166 @@
+//! The cost model: turn a [`Fingerprint`] (and, for radix-keyed types,
+//! [`KeyStats`]) into a [`SortPlan`].
+//!
+//! The rules are deliberately simple, threshold-based, and documented —
+//! a learned-CDF model is a ROADMAP follow-on. Rationale per rule:
+//!
+//! * **Base case** — at or below `n₀` nothing beats insertion sort.
+//! * **Run merge** — when nearly every probed adjacent pair is ordered
+//!   (or reverse-ordered), the input decomposes into a handful of long
+//!   runs; detecting and merging them is `O(n)`–`O(n log r)`, far below
+//!   a full distribution sort ("Towards Parallel Learned Sorting"
+//!   observes the same for its run-adaptive candidates).
+//! * **Radix** — worthwhile when the keys carry enough entropy that a
+//!   digit pass splits effectively (≈ one byte's worth) and the input is
+//!   large enough to amortize the extra min/max scan; duplicate-heavy
+//!   inputs stay with IPS⁴o, whose equality buckets finish them in one
+//!   pass (IPS²Ra's weak spot per the 2020 paper's measurements).
+//! * **Parallel vs sequential IPS⁴o** — the scheduler's own viability
+//!   bound: at least a few blocks of work per thread.
+
+use crate::config::Config;
+use crate::planner::backend::{Backend, SortPlan};
+use crate::planner::fingerprint::{fingerprint_by, key_stats, Fingerprint};
+use crate::radix::RadixKey;
+use crate::util::Element;
+
+/// Adjacent-pair order ratio above which run merging is chosen.
+pub const NEARLY_SORTED_RATIO: f64 = 0.95;
+/// Minimum sampled key entropy (bits) for radix to be considered.
+pub const MIN_RADIX_ENTROPY_BITS: f64 = 8.0;
+/// Minimum input size for radix (amortizes the key-range scans).
+pub const MIN_RADIX_N: usize = 1 << 12;
+/// Duplicate-neighbor ratio above which equality buckets beat digits.
+pub const MAX_RADIX_DUP_RATIO: f64 = 0.5;
+
+/// True when a cooperative parallel pass can pay for itself — the same
+/// bound the parallel scheduler uses for its sequential fallback.
+pub fn parallel_viable<T: Element>(n: usize, cfg: &Config) -> bool {
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+    cfg.threads > 1 && n >= (4 * cfg.threads * block).max(1 << 13)
+}
+
+/// Shared comparison-menu decision, given a fingerprint.
+fn comparison_plan<T: Element>(fp: &Fingerprint, cfg: &Config) -> SortPlan {
+    if fp.n <= cfg.base_case_size.max(2) {
+        return SortPlan {
+            backend: Backend::BaseCase,
+            reason: "at or below base-case size",
+        };
+    }
+    if fp.sorted_ratio >= NEARLY_SORTED_RATIO || fp.reversed_ratio >= NEARLY_SORTED_RATIO {
+        return SortPlan {
+            backend: Backend::RunMerge,
+            reason: "nearly sorted (few runs)",
+        };
+    }
+    if parallel_viable::<T>(fp.n, cfg) {
+        SortPlan {
+            backend: Backend::Ips4oPar,
+            reason: "large unordered input, threads available",
+        }
+    } else {
+        SortPlan {
+            backend: Backend::Ips4oSeq,
+            reason: "unordered input below parallel threshold",
+        }
+    }
+}
+
+/// Plan for a comparator-only job (`sort_by` closures): the comparison
+/// menu — base case, run merge, sequential or parallel IPS⁴o.
+pub fn plan_by<T, F>(v: &[T], cfg: &Config, is_less: &F) -> SortPlan
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    comparison_plan::<T>(&fingerprint_by(v, cfg, is_less), cfg)
+}
+
+/// Plan for a radix-keyed job: the full menu including [`Backend::Radix`].
+pub fn plan_keys<T: RadixKey>(v: &[T], cfg: &Config) -> SortPlan {
+    let fp = fingerprint_by(v, cfg, &T::radix_less);
+    let cmp = comparison_plan::<T>(&fp, cfg);
+    if matches!(cmp.backend, Backend::BaseCase | Backend::RunMerge) {
+        return cmp;
+    }
+    if fp.n >= MIN_RADIX_N && fp.dup_ratio <= MAX_RADIX_DUP_RATIO {
+        let ks = key_stats(v);
+        if ks.entropy_bits >= MIN_RADIX_ENTROPY_BITS && ks.key_min < ks.key_max {
+            return SortPlan {
+                backend: Backend::Radix,
+                reason: "wide-entropy keys, low duplication",
+            };
+        }
+    }
+    cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn tiny_inputs_use_base_case() {
+        let cfg = Config::default();
+        let v = gen_u64(Distribution::Uniform, 10, 1);
+        assert_eq!(plan_by(&v, &cfg, &lt).backend, Backend::BaseCase);
+        assert_eq!(plan_keys(&v, &cfg).backend, Backend::BaseCase);
+    }
+
+    #[test]
+    fn sorted_inputs_use_run_merge() {
+        let cfg = Config::default().with_threads(4);
+        for d in [
+            Distribution::Sorted,
+            Distribution::ReverseSorted,
+            Distribution::AlmostSorted,
+            Distribution::SortedRuns,
+        ] {
+            let v = gen_u64(d, 50_000, 2);
+            assert_eq!(
+                plan_by(&v, &cfg, &lt).backend,
+                Backend::RunMerge,
+                "{}",
+                d.name()
+            );
+            assert_eq!(
+                plan_keys(&v, &cfg).backend,
+                Backend::RunMerge,
+                "{}",
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_keys_route_to_radix() {
+        let cfg = Config::default().with_threads(4);
+        let v = gen_u64(Distribution::Uniform, 100_000, 3);
+        assert_eq!(plan_keys(&v, &cfg).backend, Backend::Radix);
+        // Comparator-only path cannot use radix.
+        assert_eq!(plan_by(&v, &cfg, &lt).backend, Backend::Ips4oPar);
+    }
+
+    #[test]
+    fn constant_input_avoids_radix() {
+        let cfg = Config::default().with_threads(4);
+        let v = gen_u64(Distribution::Ones, 100_000, 4);
+        let p = plan_keys(&v, &cfg);
+        assert_ne!(p.backend, Backend::Radix, "{p:?}");
+    }
+
+    #[test]
+    fn thread_count_splits_par_and_seq() {
+        let v = gen_u64(Distribution::EightDup, 40_000, 5);
+        let seq = plan_by(&v, &Config::default(), &lt);
+        assert_eq!(seq.backend, Backend::Ips4oSeq);
+        let par = plan_by(&v, &Config::default().with_threads(8), &lt);
+        assert_eq!(par.backend, Backend::Ips4oPar);
+    }
+}

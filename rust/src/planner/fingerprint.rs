@@ -1,0 +1,245 @@
+//! Input fingerprinting: cheap, deterministic statistics the cost model
+//! routes on.
+//!
+//! The probe budget mirrors the oversampling budget IPS⁴o already spends
+//! in [`crate::sampling`] (`α·k − 1` elements), but the probes here are
+//! *strided and non-mutating*: `select_sample` swaps random elements to
+//! the array front, which would destroy exactly the structure
+//! (presortedness, runs) the fingerprint is trying to detect before any
+//! backend has been chosen.
+//!
+//! Two probes:
+//! * [`fingerprint_by`] — comparator-only: adjacent-pair order probes
+//!   (presortedness / reversedness) and duplicate density in a small
+//!   sorted sample. Works for arbitrary `sort_by` closures.
+//! * [`key_stats`] — radix-key statistics for
+//!   [`RadixKey`](crate::radix::RadixKey) types: per-byte-lane Shannon
+//!   entropy of sampled keys (an estimate of how many useful radix
+//!   passes exist) plus the sampled key range.
+
+use crate::config::Config;
+use crate::radix::RadixKey;
+use crate::util::Element;
+
+/// Maximum probes drawn by either probe pass.
+const MAX_PROBES: usize = 256;
+
+/// Comparator-only input statistics.
+#[derive(Copy, Clone, Debug)]
+pub struct Fingerprint {
+    pub n: usize,
+    /// Fraction of probed adjacent pairs already in (non-strict) order.
+    pub sorted_ratio: f64,
+    /// Fraction of probed adjacent pairs strictly descending.
+    pub reversed_ratio: f64,
+    /// Fraction of duplicate neighbors in the sorted probe sample.
+    pub dup_ratio: f64,
+}
+
+/// Probe `v` with `is_less`: adjacent-pair order at evenly strided
+/// positions, then duplicate density in a sorted strided sample.
+pub fn fingerprint_by<T, F>(v: &[T], cfg: &Config, is_less: &F) -> Fingerprint
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if n < 2 {
+        return Fingerprint {
+            n,
+            sorted_ratio: 1.0,
+            reversed_ratio: 0.0,
+            dup_ratio: 0.0,
+        };
+    }
+
+    // Probe budget: the sampling phase's α·k − 1, capped.
+    let budget = cfg.sample_size(n, cfg.buckets_for(n)).clamp(16, MAX_PROBES);
+
+    // --- Adjacent-pair order probes ---
+    let pairs = budget.min(n - 1);
+    let step = ((n - 1) / pairs).max(1);
+    let mut asc = 0usize;
+    let mut desc = 0usize;
+    let mut probed = 0usize;
+    let mut i = 0usize;
+    while i + 1 < n && probed < pairs {
+        if is_less(&v[i + 1], &v[i]) {
+            desc += 1;
+        } else {
+            asc += 1;
+        }
+        probed += 1;
+        i += step;
+    }
+    let probed = probed.max(1) as f64;
+
+    // --- Duplicate density in a sorted strided sample ---
+    // The sample lives on the stack (MAX_PROBES is a compile-time cap)
+    // so fingerprinting a job on the warm service path allocates
+    // nothing — preserving PR 1's zero-steady-state-allocation story.
+    let m = budget.min(n);
+    let stride = (n / m).max(1);
+    let mut sample = [T::default(); MAX_PROBES];
+    let mut len = 0usize;
+    let mut j = 0usize;
+    while j < n && len < m {
+        sample[len] = v[j];
+        len += 1;
+        j += stride;
+    }
+    let sample = &mut sample[..len];
+    crate::baselines::introsort::sort_by(sample, is_less);
+    let dups = sample
+        .windows(2)
+        .filter(|w| !is_less(&w[0], &w[1]) && !is_less(&w[1], &w[0]))
+        .count();
+    let dup_ratio = if sample.len() > 1 {
+        dups as f64 / (sample.len() - 1) as f64
+    } else {
+        0.0
+    };
+
+    Fingerprint {
+        n,
+        sorted_ratio: asc as f64 / probed,
+        reversed_ratio: desc as f64 / probed,
+        dup_ratio,
+    }
+}
+
+/// Radix-key statistics from a strided sample.
+#[derive(Copy, Clone, Debug)]
+pub struct KeyStats {
+    /// Shannon entropy (bits) summed over the eight byte lanes of the
+    /// sampled radix keys — roughly how many key bits a radix sort can
+    /// usefully split on.
+    pub entropy_bits: f64,
+    /// Smallest sampled radix key.
+    pub key_min: u64,
+    /// Largest sampled radix key.
+    pub key_max: u64,
+}
+
+/// Sample radix keys at an even stride and summarize them.
+pub fn key_stats<T: RadixKey>(v: &[T]) -> KeyStats {
+    let n = v.len();
+    if n == 0 {
+        return KeyStats {
+            entropy_bits: 0.0,
+            key_min: 0,
+            key_max: 0,
+        };
+    }
+    let m = MAX_PROBES.min(n);
+    let stride = (n / m).max(1);
+    let mut hist = [[0u32; 256]; 8];
+    let mut count = 0u32;
+    let mut key_min = u64::MAX;
+    let mut key_max = 0u64;
+    let mut i = 0usize;
+    while i < n && (count as usize) < m {
+        let k = v[i].radix_key();
+        key_min = key_min.min(k);
+        key_max = key_max.max(k);
+        for (lane, h) in hist.iter_mut().enumerate() {
+            h[((k >> (lane * 8)) & 0xFF) as usize] += 1;
+        }
+        count += 1;
+        i += stride;
+    }
+    let mut entropy_bits = 0.0f64;
+    for h in &hist {
+        for &c in h.iter() {
+            if c > 0 {
+                let p = c as f64 / count as f64;
+                entropy_bits -= p * p.log2();
+            }
+        }
+    }
+    KeyStats {
+        entropy_bits,
+        key_min,
+        key_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_u64, Distribution};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn sorted_inputs_have_high_sorted_ratio() {
+        let cfg = Config::default();
+        let v = gen_u64(Distribution::Sorted, 50_000, 1);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        assert_eq!(fp.sorted_ratio, 1.0);
+        assert_eq!(fp.reversed_ratio, 0.0);
+
+        let v = gen_u64(Distribution::AlmostSorted, 50_000, 1);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        assert!(fp.sorted_ratio > 0.9, "{fp:?}");
+    }
+
+    #[test]
+    fn reverse_sorted_detected() {
+        let cfg = Config::default();
+        let v = gen_u64(Distribution::ReverseSorted, 50_000, 1);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        assert_eq!(fp.reversed_ratio, 1.0);
+    }
+
+    #[test]
+    fn uniform_is_neither_sorted_nor_duplicated() {
+        let cfg = Config::default();
+        let v = gen_u64(Distribution::Uniform, 50_000, 2);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        assert!(fp.sorted_ratio < 0.8, "{fp:?}");
+        assert!(fp.reversed_ratio < 0.8, "{fp:?}");
+        assert!(fp.dup_ratio < 0.1, "{fp:?}");
+    }
+
+    #[test]
+    fn constant_input_has_full_duplication_zero_entropy() {
+        let cfg = Config::default();
+        let v = gen_u64(Distribution::Ones, 10_000, 3);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        assert_eq!(fp.dup_ratio, 1.0);
+        let ks = key_stats(&v);
+        assert_eq!(ks.entropy_bits, 0.0);
+        assert_eq!(ks.key_min, ks.key_max);
+    }
+
+    #[test]
+    fn uniform_keys_have_high_entropy() {
+        let v = gen_u64(Distribution::Uniform, 50_000, 4);
+        let ks = key_stats(&v);
+        assert!(ks.entropy_bits > 40.0, "{ks:?}");
+        assert!(ks.key_min < ks.key_max);
+    }
+
+    #[test]
+    fn narrow_keys_have_low_entropy() {
+        // RootDup keys live in [0, √n): only the low lanes carry bits.
+        let v = gen_u64(Distribution::RootDup, 30_000, 5);
+        let ks = key_stats(&v);
+        assert!(ks.entropy_bits < 16.0, "{ks:?}");
+        assert!(ks.key_max < 256, "RootDup keys fit one byte at n=30k");
+    }
+
+    #[test]
+    fn tiny_inputs_are_safe() {
+        let cfg = Config::default();
+        for n in [0usize, 1, 2, 3] {
+            let v = gen_u64(Distribution::Uniform, n, 6);
+            let fp = fingerprint_by(&v, &cfg, &lt);
+            assert!(fp.sorted_ratio >= 0.0 && fp.sorted_ratio <= 1.0);
+            let _ = key_stats(&v);
+        }
+    }
+}

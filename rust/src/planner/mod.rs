@@ -1,0 +1,51 @@
+//! The adaptive sort planner: fingerprint each job, pick the
+//! predicted-fastest backend, and record the decision.
+//!
+//! IPS⁴o is one excellent point in a space of sort strategies, not the
+//! optimum everywhere: nearly-sorted inputs want run detection + merging
+//! (`O(n)` instead of a full distribution sort), wide-entropy integer or
+//! float keys want the derived radix variant IPS²Ra ([`crate::radix`]),
+//! tiny inputs want insertion sort, and everything else wants
+//! comparison-based IS⁴o/IPS⁴o. The serving layer should route, not
+//! assume — "Towards Parallel Learned Sorting" (Carvalho 2022) makes
+//! the same case for distribution-aware strategy selection.
+//!
+//! Three pieces:
+//! * [`fingerprint`] — cheap, deterministic, non-mutating probes:
+//!   presortedness, duplicate density, key-byte entropy;
+//! * [`cost_model`] — threshold rules mapping a fingerprint to a
+//!   [`SortPlan`] (see that module for the rationale per rule);
+//! * [`backend`] — the [`Backend`] registry, the [`PlannerMode`]
+//!   override knob carried by [`Config`](crate::Config), and the
+//!   run-merge backend implementation.
+//!
+//! [`Sorter`](crate::Sorter) and [`SortService`](crate::SortService)
+//! consult the planner on every job (unless `Config::planner` says
+//! otherwise) and count each decision in their
+//! [`ScratchCounters`](crate::metrics::ScratchCounters), so `serve`
+//! traffic reports which backend handled each job.
+//!
+//! ```
+//! use ips4o::{Backend, Config, PlannerMode, Sorter};
+//!
+//! // Auto-routing is the default:
+//! let sorter = Sorter::new(Config::default());
+//! let mut v: Vec<u64> = (0..20_000).collect(); // already sorted
+//! sorter.sort_keys(&mut v);
+//! let m = sorter.scratch_metrics();
+//! assert_eq!(m.backend_count(Backend::RunMerge), 1);
+//!
+//! // Forcing a backend:
+//! let forced = Sorter::new(Config::default().with_planner(PlannerMode::Force(Backend::Radix)));
+//! let mut v: Vec<u64> = (0..20_000).rev().collect();
+//! forced.sort_keys(&mut v);
+//! assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! ```
+
+pub mod backend;
+pub mod cost_model;
+pub mod fingerprint;
+
+pub use backend::{run_merge_sort, Backend, PlannerMode, SortPlan};
+pub use cost_model::{parallel_viable, plan_by, plan_keys};
+pub use fingerprint::{fingerprint_by, key_stats, Fingerprint, KeyStats};

@@ -1,0 +1,619 @@
+//! IPS²Ra — in-place parallel radix sort derived from the IPS⁴o
+//! skeleton (Axtmann et al. 2020, *Engineering In-place (Shared-memory)
+//! Sorting Algorithms*).
+//!
+//! The follow-up paper's observation: IPS⁴o's block machinery — local
+//! classification into per-thread buffer blocks, atomic block
+//! permutation, cleanup — never looks *inside* the bucket mapping. Swap
+//! the branchless comparison search tree for key-digit extraction and
+//! the same skeleton becomes an in-place (parallel) MSD radix sort.
+//! This module supplies exactly that swap:
+//!
+//! * [`RadixKey`] maps an element to a `u64` whose unsigned order
+//!   refines the element's comparison order (order-preserving bit
+//!   transforms for `i64`/`f64`, key-prefix extraction for the record
+//!   types);
+//! * [`DigitMap`] is the digit-extracting [`BucketMap`]: after scanning
+//!   the (sub)range's key min/max, it takes the `log₂ k` bits just below
+//!   the most significant *differing* bit — skipping common prefixes the
+//!   way IPS²Ra does, so low-entropy keys (e.g. `RootDup`) don't waste
+//!   passes on constant high bytes;
+//! * [`sort_radix_seq`] / [`sort_radix_par_with`] drive the shared
+//!   [`distribute_seq`] / [`distribute_parallel`] phases, recursing per
+//!   digit instead of re-sampling. Types whose radix key is a prefix
+//!   ([`RadixKey::COMPLETE`]` == false`) fall back to comparison sorting
+//!   once their prefix stops discriminating.
+//!
+//! The planner ([`crate::planner`]) decides when this backend beats the
+//! comparison-based IPS⁴o; force it with
+//! `Config::default().with_planner(PlannerMode::Force(Backend::Radix))`.
+//!
+//! ```
+//! use ips4o::{Backend, Config, PlannerMode, Sorter};
+//!
+//! let sorter = Sorter::new(Config::default().with_planner(PlannerMode::Force(Backend::Radix)));
+//! let mut v: Vec<u64> = (0..50_000).rev().collect();
+//! sorter.sort_keys(&mut v);
+//! assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! ```
+
+use std::collections::VecDeque;
+
+use crate::base_case::insertion_sort;
+use crate::classifier::BucketMap;
+use crate::config::Config;
+use crate::parallel::{stripes, PerThread, SharedSlice, ThreadPool};
+use crate::sequential::{distribute_seq, SeqContext};
+use crate::task_scheduler::{distribute_parallel, sort_parallel_with, ParScratch};
+use crate::util::{Bytes100, Element, Pair, Quartet};
+
+// ---------------------------------------------------------------------------
+// The RadixKey trait and its implementations
+// ---------------------------------------------------------------------------
+
+/// An element with an order-preserving `u64` key projection.
+///
+/// Invariant: for any `a`, `b`, `radix_less(a, b)` implies
+/// `a.radix_key() <= b.radix_key()` — the unsigned key order *refines*
+/// the comparison order (key-equivalent elements may still map to
+/// distinct keys, e.g. `-0.0` vs `+0.0`, which is harmless for an
+/// unstable sort).
+pub trait RadixKey: Element {
+    /// True when equal radix keys imply key-equivalent elements under
+    /// [`RadixKey::radix_less`]. When false, the key is a *prefix*
+    /// (e.g. the first 8 of [`Bytes100`]'s 10 key bytes) and the sorter
+    /// falls back to comparison sorting inside key-equal runs.
+    const COMPLETE: bool;
+
+    /// The order-preserving key projection.
+    fn radix_key(&self) -> u64;
+
+    /// The comparison order the radix order refines — used for base
+    /// cases and the incomplete-key fallback.
+    fn radix_less(a: &Self, b: &Self) -> bool;
+}
+
+/// Order-preserving bit transform for totally-ordered (NaN-free) `f64`:
+/// negative values have all bits flipped, non-negative values the sign
+/// bit — mapping `-∞ … -0.0, +0.0 … +∞` to increasing `u64`s.
+#[inline(always)]
+pub fn f64_radix_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+impl RadixKey for u64 {
+    const COMPLETE: bool = true;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        *self
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        a < b
+    }
+}
+
+impl RadixKey for i64 {
+    const COMPLETE: bool = true;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        (*self as u64) ^ (1 << 63)
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        a < b
+    }
+}
+
+impl RadixKey for f64 {
+    const COMPLETE: bool = true;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        f64_radix_key(*self)
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        a < b
+    }
+}
+
+impl RadixKey for Pair {
+    // Pair order is by `key` alone, which the f64 transform captures.
+    const COMPLETE: bool = true;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        f64_radix_key(self.key)
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        Pair::less(a, b)
+    }
+}
+
+impl RadixKey for Quartet {
+    // Only the primary key k0 fits the prefix; ties on k0 are resolved
+    // by the comparison fallback.
+    const COMPLETE: bool = false;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        f64_radix_key(self.k0)
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        Quartet::less(a, b)
+    }
+}
+
+impl RadixKey for Bytes100 {
+    // The first 8 of the 10 key bytes, big-endian — a strict prefix of
+    // the lexicographic order.
+    const COMPLETE: bool = false;
+
+    #[inline(always)]
+    fn radix_key(&self) -> u64 {
+        let mut k = [0u8; 8];
+        k.copy_from_slice(&self.key[..8]);
+        u64::from_be_bytes(k)
+    }
+
+    #[inline(always)]
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        Bytes100::less(a, b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The digit-extracting bucket map
+// ---------------------------------------------------------------------------
+
+/// Digit extractor: bucket = `(radix_key >> shift) & (k − 1)`.
+///
+/// Built from the (sub)range's key min/max so the extracted window sits
+/// just below the most significant differing bit; all higher bits are
+/// common to every key in `[min, max]`, which makes the mapping monotone
+/// and guarantees min and max land in different buckets (progress).
+pub struct DigitMap {
+    shift: u32,
+    mask: usize,
+}
+
+impl DigitMap {
+    /// Digit window for keys spanning `[min, max]` with `k` (power of
+    /// two, ≥ 2) buckets. Requires `min < max`.
+    pub fn new(min: u64, max: u64, k: usize) -> DigitMap {
+        debug_assert!(min < max, "degenerate key range");
+        debug_assert!(k.is_power_of_two() && k >= 2);
+        let log_k = k.trailing_zeros();
+        let high = 63 - (min ^ max).leading_zeros();
+        DigitMap {
+            shift: (high + 1).saturating_sub(log_k),
+            mask: k - 1,
+        }
+    }
+
+    /// The bit position the extracted digit starts at.
+    pub fn shift(&self) -> u32 {
+        self.shift
+    }
+}
+
+impl<T: RadixKey> BucketMap<T> for DigitMap {
+    #[inline(always)]
+    fn num_buckets(&self) -> usize {
+        self.mask + 1
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, e: &T) -> usize {
+        ((e.radix_key() >> self.shift) as usize) & self.mask
+    }
+
+    #[inline(always)]
+    fn bucket_of4(&self, es: &[T; 4]) -> [usize; 4] {
+        // Four independent shift/mask chains — trivially overlapping.
+        let k = [
+            es[0].radix_key(),
+            es[1].radix_key(),
+            es[2].radix_key(),
+            es[3].radix_key(),
+        ];
+        [
+            ((k[0] >> self.shift) as usize) & self.mask,
+            ((k[1] >> self.shift) as usize) & self.mask,
+            ((k[2] >> self.shift) as usize) & self.mask,
+            ((k[3] >> self.shift) as usize) & self.mask,
+        ]
+    }
+}
+
+/// Bucket count for a radix pass on `n` elements: the adaptive IPS⁴o
+/// policy (§4.7) capped at 256 — at most one byte per level.
+fn radix_fanout(n: usize, cfg: &Config) -> usize {
+    cfg.buckets_for(n).min(256).max(2)
+}
+
+/// Min/max radix key of `v` by sequential scan.
+fn key_range<T: RadixKey>(v: &[T]) -> (u64, u64) {
+    let mut min = u64::MAX;
+    let mut max = 0u64;
+    for e in v {
+        let k = e.radix_key();
+        min = min.min(k);
+        max = max.max(k);
+    }
+    (min, max)
+}
+
+/// Min/max radix key of `v`, scanned by all pool threads over stripes.
+fn key_range_par<T: RadixKey>(v: &mut [T], pool: &ThreadPool) -> (u64, u64) {
+    let t = pool.threads();
+    let n = v.len();
+    let bounds = stripes(n, t, 1);
+    let ranges: PerThread<(u64, u64)> = PerThread::new(vec![(u64::MAX, 0u64); t]);
+    let arr = SharedSlice::new(v);
+    {
+        let bounds = &bounds;
+        let ranges = &ranges;
+        let arr = &arr;
+        pool.run(move |tid| {
+            let mut min = u64::MAX;
+            let mut max = 0u64;
+            // SAFETY: disjoint read-only stripes; slot `tid` is ours.
+            for e in unsafe { arr.slice(bounds[tid], bounds[tid + 1]) } {
+                let k = e.radix_key();
+                min = min.min(k);
+                max = max.max(k);
+            }
+            unsafe { *ranges.get_mut(tid) = (min, max) };
+        });
+    }
+    ranges
+        .into_inner()
+        .into_iter()
+        .fold((u64::MAX, 0u64), |acc, r| (acc.0.min(r.0), acc.1.max(r.1)))
+}
+
+// ---------------------------------------------------------------------------
+// Sequential driver (IS²Ra)
+// ---------------------------------------------------------------------------
+
+/// Sort `v` with sequential in-place radix sort, reusing `ctx` scratch.
+pub fn sort_radix_seq<T: RadixKey>(v: &mut [T], ctx: &mut SeqContext<T>) {
+    let n = v.len();
+    if n <= ctx.cfg.base_case_size.max(2) {
+        insertion_sort(v, &T::radix_less);
+        return;
+    }
+    let (min, max) = key_range(v);
+    if min == max {
+        // One radix key: done, unless the key is only a prefix.
+        if !T::COMPLETE {
+            crate::baselines::introsort::sort_by(v, &T::radix_less);
+        }
+        return;
+    }
+    let map = DigitMap::new(min, max, radix_fanout(n, &ctx.cfg));
+    let bounds = distribute_seq(v, ctx, &map, &T::radix_less, true);
+    let base = ctx.cfg.base_case_size;
+    for i in 0..bounds.len() - 1 {
+        let (s, e) = (bounds[i], bounds[i + 1]);
+        if e - s > base {
+            sort_radix_seq(&mut v[s..e], ctx);
+        }
+    }
+}
+
+/// Convenience one-shot: allocate a context and radix-sort sequentially.
+pub fn sort_radix<T: RadixKey>(v: &mut [T], cfg: &Config) {
+    let mut ctx = SeqContext::new(cfg.clone(), 0x5EED_0003 ^ v.len() as u64);
+    sort_radix_seq(v, &mut ctx);
+}
+
+// ---------------------------------------------------------------------------
+// Parallel driver (IPS²Ra)
+// ---------------------------------------------------------------------------
+
+/// Sort `v` with parallel in-place radix sort, reusing caller-provided
+/// scratch. Mirrors [`sort_parallel_with`]: big subproblems are
+/// distributed by all threads cooperatively; the remaining small ones
+/// are LPT-binned and radix-sorted sequentially, in parallel.
+pub fn sort_radix_par_with<T: RadixKey>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    scratch: &mut ParScratch<T>,
+) {
+    let t = pool.threads();
+    let n = v.len();
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+    assert!(
+        scratch.threads() >= t,
+        "scratch built for {} threads, pool has {t}",
+        scratch.threads()
+    );
+    let min_parallel = (4 * t * block).max(1 << 13);
+    if t == 1 || n < min_parallel {
+        sort_radix_seq(v, scratch.leader_ctx());
+        return;
+    }
+
+    let threshold = cfg.parallel_task_min(n).max(min_parallel);
+    let base = cfg.base_case_size;
+    // Ranges whose radix key stopped discriminating but whose elements
+    // are not yet fully ordered (prefix keys): comparison-sorted after
+    // the radix phases release the scratch parts.
+    let mut prefix_exhausted: Vec<(usize, usize)> = Vec::new();
+
+    {
+        let (ctxs, pointers, overflow) = scratch.parts();
+        let mut big: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut small: Vec<(usize, usize)> = Vec::new();
+        big.push_back((0, n));
+
+        while let Some((s, e)) = big.pop_front() {
+            let sub = &mut v[s..e];
+            let (min, max) = key_range_par(sub, pool);
+            if min == max {
+                if !T::COMPLETE {
+                    prefix_exhausted.push((s, e));
+                }
+                continue;
+            }
+            let map = DigitMap::new(min, max, radix_fanout(e - s, cfg));
+            let bounds = distribute_parallel(
+                sub,
+                cfg,
+                pool,
+                ctxs,
+                pointers,
+                overflow,
+                &map,
+                &T::radix_less,
+            );
+            for i in 0..bounds.len() - 1 {
+                let (cs, ce) = (s + bounds[i], s + bounds[i + 1]);
+                let len = ce - cs;
+                if len <= base && cfg.eager_base_case {
+                    continue; // eager-sorted during cleanup
+                }
+                if len < 2 {
+                    continue;
+                }
+                if len >= threshold {
+                    big.push_back((cs, ce));
+                } else {
+                    small.push((cs, ce));
+                }
+            }
+        }
+
+        // --- Small-task phase: LPT assignment, sequential radix ---
+        let bins = crate::parallel::lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
+        let arr = SharedSlice::new(v);
+        let bins = &bins;
+        pool.run(|tid| {
+            // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
+            // ranges produced by the partitioning.
+            let ctx = unsafe { ctxs.get_mut(tid) };
+            for &(s, e) in &bins[tid] {
+                let slice = unsafe { arr.slice_mut(s, e) };
+                sort_radix_seq(slice, ctx);
+            }
+        });
+    }
+
+    // --- Prefix-exhausted fallback: comparison IPS⁴o on the same pool ---
+    for (s, e) in prefix_exhausted {
+        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_bytes100, gen_f64, gen_pair, gen_quartet, gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint};
+
+    #[test]
+    fn f64_transform_is_order_preserving() {
+        let mut vals = vec![
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -1.0,
+            -1e-300,
+            -0.0,
+            0.0,
+            1e-300,
+            1.0,
+            2.5,
+            1e300,
+            f64::INFINITY,
+        ];
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let keys: Vec<u64> = vals.iter().map(|&x| f64_radix_key(x)).collect();
+        assert!(keys.windows(2).all(|w| w[0] <= w[1]), "{keys:?}");
+        // -0.0 sorts strictly before +0.0 in key space (a refinement of
+        // the comparison order, under which they are equivalent).
+        assert!(f64_radix_key(-0.0) < f64_radix_key(0.0));
+    }
+
+    #[test]
+    fn i64_transform_is_order_preserving() {
+        let vals = [i64::MIN, -5, -1, 0, 1, 5, i64::MAX];
+        let keys: Vec<u64> = vals.iter().map(|x| x.radix_key()).collect();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]), "{keys:?}");
+    }
+
+    #[test]
+    fn digit_map_is_monotone_and_makes_progress() {
+        let cases = [
+            (0u64, u64::MAX, 256usize),
+            (0, 255, 16),
+            (1000, 1173, 256),
+            (u64::MAX - 1, u64::MAX, 2),
+            (0, 1, 256),
+            (1 << 40, (1 << 40) + (1 << 20), 64),
+        ];
+        for (min, max, k) in cases {
+            let m = DigitMap::new(min, max, k);
+            let b_min: usize = BucketMap::<u64>::bucket_of(&m, &min);
+            let b_max: usize = BucketMap::<u64>::bucket_of(&m, &max);
+            assert!(b_min < b_max, "no progress for [{min}, {max}] k={k}");
+            // Monotone over a sweep of in-range keys.
+            let step = ((max - min) / 1000).max(1);
+            let mut last = 0usize;
+            let mut key = min;
+            while key <= max {
+                let b: usize = BucketMap::<u64>::bucket_of(&m, &key);
+                assert!(b >= last, "not monotone at {key}");
+                assert!(b <= k - 1);
+                last = b;
+                match key.checked_add(step) {
+                    Some(next) => key = next,
+                    None => break,
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn digit_map_bucket_of4_agrees() {
+        let m = DigitMap::new(0, 987_654_321, 64);
+        let es = [0u64, 123_456, 987, 987_654_321];
+        let got: [usize; 4] = BucketMap::<u64>::bucket_of4(&m, &es);
+        for u in 0..4 {
+            assert_eq!(got[u], BucketMap::<u64>::bucket_of(&m, &es[u]));
+        }
+    }
+
+    #[test]
+    fn radix_seq_sorts_all_distributions() {
+        let cfg = Config::default();
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 2, 255, 256, 257, 1000, 30_000] {
+                let mut v = gen_u64(d, n, 77);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_radix(&mut v, &cfg);
+                assert!(is_sorted_by(&v, |a, b| a < b), "{} n={n}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn radix_seq_composite_types() {
+        let cfg = Config::default();
+
+        let mut f = gen_f64(Distribution::Uniform, 20_000, 3);
+        sort_radix(&mut f, &cfg);
+        assert!(is_sorted_by(&f, |a, b| a < b));
+
+        let mut p = gen_pair(Distribution::RootDup, 20_000, 3);
+        let key = |x: &Pair| x.key.to_bits() ^ x.value.to_bits().rotate_left(32);
+        let fp = multiset_fingerprint(&p, key);
+        sort_radix(&mut p, &cfg);
+        assert!(is_sorted_by(&p, Pair::less));
+        assert_eq!(fp, multiset_fingerprint(&p, key));
+
+        // Quartet/Bytes100 exercise the incomplete-prefix fallback.
+        let mut q = gen_quartet(Distribution::TwoDup, 20_000, 3);
+        sort_radix(&mut q, &cfg);
+        assert!(is_sorted_by(&q, Quartet::less));
+
+        let mut b = gen_bytes100(Distribution::RootDup, 5_000, 3);
+        sort_radix(&mut b, &cfg);
+        assert!(is_sorted_by(&b, Bytes100::less));
+    }
+
+    #[test]
+    fn radix_parallel_matches_sequential() {
+        let cfg = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<u64>::new(&cfg, 4);
+        for d in Distribution::ALL {
+            let base = gen_u64(d, 120_000, 9);
+            let mut a = base.clone();
+            let mut b = base;
+            sort_radix(&mut a, &Config::default());
+            sort_radix_par_with(&mut b, &cfg, &pool, &mut scratch);
+            assert_eq!(a, b, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn radix_parallel_prefix_fallback() {
+        // All radix keys equal but full keys differ: Bytes100 records
+        // sharing the first 8 key bytes, differing in bytes 8..10. Large
+        // enough for the cooperative path.
+        let cfg = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<Bytes100>::new(&cfg, 4);
+        let mut rng = crate::util::Xoshiro256::new(5);
+        let mut v: Vec<Bytes100> = (0..40_000)
+            .map(|_| {
+                let mut b = Bytes100::from_u64(rng.next_below(1 << 16));
+                // from_u64 puts the value big-endian in key[2..10]; the
+                // low two bytes (key[8..10]) vary, key[..8] is constant.
+                b.key[..8].copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+                b
+            })
+            .collect();
+        sort_radix_par_with(&mut v, &cfg, &pool, &mut scratch);
+        assert!(is_sorted_by(&v, Bytes100::less));
+    }
+
+    #[test]
+    fn radix_negative_zero_agrees_with_comparison() {
+        // The -0.0 / +0.0 bugfix case: the radix key transform must keep
+        // the output key-equivalent to the comparison path.
+        let mut rng = crate::util::Xoshiro256::new(11);
+        let mut v: Vec<f64> = (0..10_000)
+            .map(|i| match i % 4 {
+                0 => -0.0,
+                1 => 0.0,
+                2 => -rng.next_f64(),
+                _ => rng.next_f64(),
+            })
+            .collect();
+        let fp = multiset_fingerprint(&v, |x| x.to_bits());
+        let mut expected = v.clone();
+        expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_radix(&mut v, &Config::default());
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(fp, multiset_fingerprint(&v, |x| x.to_bits()));
+        // Position-wise key equivalence with the std reference.
+        assert!(v.iter().zip(&expected).all(|(a, b)| a == b || (*a == 0.0 && *b == 0.0)));
+    }
+
+    #[test]
+    fn radix_reuses_scratch_geometry_across_configs() {
+        // Small blocks + small bucket caps, as the property suite draws.
+        for (k, bb, n0) in [(4usize, 64usize, 4usize), (8, 128, 8), (2, 16, 1)] {
+            let cfg = Config::default()
+                .with_max_buckets(k)
+                .with_block_bytes(bb)
+                .with_base_case(n0);
+            let mut v = gen_u64(Distribution::EightDup, 3_000, 13);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_radix(&mut v, &cfg);
+            assert!(is_sorted_by(&v, |a, b| a < b), "k={k} bb={bb}");
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! case are insertion-sorted *during* cleanup (§4.7 eager base case).
 
 use crate::base_case::{heapsort, insertion_sort};
+use crate::classifier::{BucketMap, CmpMap};
 use crate::cleanup::cleanup_buckets;
 use crate::config::Config;
 use crate::local_classification::{classify_stripe, LocalBuffers};
@@ -33,6 +34,9 @@ pub struct SeqContext<T> {
     pub cfg: Config,
     /// Element block size for this T (cached).
     pub block: usize,
+    /// Scratch for the planner's run-merge backend, grown on demand and
+    /// kept across sorts so a warm context never reallocates it.
+    pub merge_buf: Vec<T>,
 }
 
 impl<T: Element> SeqContext<T> {
@@ -46,6 +50,7 @@ impl<T: Element> SeqContext<T> {
             rng: Xoshiro256::new(seed),
             cfg,
             block,
+            merge_buf: Vec::new(),
         }
     }
 
@@ -67,6 +72,80 @@ pub struct StepResult {
     pub bounds: Vec<usize>,
     /// `true` at index `i` if bucket `i` is an equality bucket.
     pub equality: Vec<bool>,
+}
+
+/// Run the three sequential block phases — local classification (one
+/// stripe) → sequential block permutation (no atomics, §4.7) → cleanup —
+/// for one already-chosen bucket mapping, and return the bucket boundary
+/// offsets (length `num_buckets + 1`). Shared by the sampling-based
+/// [`partition_step`] and the radix backend ([`crate::radix`]), which
+/// differ only in how they build the mapping.
+///
+/// When `eager_base` is set, buckets at or below the base-case size are
+/// sorted with `is_less` during cleanup.
+pub fn distribute_seq<T, M, F>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    map: &M,
+    is_less: &F,
+    eager_base: bool,
+) -> Vec<usize>
+where
+    T: Element,
+    M: BucketMap<T>,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    let nb = map.num_buckets();
+    let block = ctx.block;
+    ctx.bufs.reset(nb, block);
+    ctx.overflow.reset(block);
+
+    // --- Local classification (single stripe) ---
+    let stripe = {
+        let arr = SharedSlice::new(v);
+        classify_stripe(&arr, 0, n, map, &mut ctx.bufs)
+    };
+
+    // --- Block permutation (sequential, no atomics) ---
+    let plan = Plan::new(&stripe.counts, n, block);
+    let flush_block = (stripe.flush_end / block) as i32;
+    let mut w = vec![0i32; nb];
+    let mut r = vec![0i32; nb];
+    for i in 0..nb {
+        // Single stripe: fulls in [d_i, d_{i+1}) are [d_i, min(d_{i+1},
+        // flush)) — already compacted, no empty-block movement needed.
+        let f = (plan.d[i + 1].min(flush_block) - plan.d[i]).max(0);
+        w[i] = plan.d[i];
+        r[i] = plan.d[i] + f - 1;
+    }
+    permute_blocks_seq(v, &plan, &mut w, &mut r, map, &ctx.overflow, &mut ctx.swap);
+
+    // --- Cleanup ---
+    {
+        let arr = SharedSlice::new(v);
+        let bufs_ref: [&LocalBuffers<T>; 1] = [&ctx.bufs];
+        let base = ctx.cfg.base_case_size;
+        cleanup_buckets(
+            &arr,
+            &plan,
+            &w,
+            &bufs_ref,
+            &ctx.overflow,
+            0,
+            nb,
+            &[],
+            |start, end| {
+                if eager_base && end - start <= base && end > start {
+                    // SAFETY: cleanup owns the whole range sequentially.
+                    let slice = unsafe { arr.slice_mut(start, end) };
+                    insertion_sort(slice, is_less);
+                }
+            },
+        );
+    }
+    ctx.bufs.clear();
+    plan.bucket_starts
 }
 
 /// Perform one partitioning step on `v`. Returns `None` if `v` was
@@ -101,78 +180,24 @@ where
         }
     };
     let nb = classifier.num_buckets();
-    let block = ctx.block;
-    ctx.bufs.reset(nb, block);
-    ctx.overflow.reset(block);
 
-    // --- Local classification (single stripe) ---
-    let stripe = {
-        let arr = SharedSlice::new(v);
-        classify_stripe(&arr, 0, n, &classifier, &mut ctx.bufs, is_less)
-    };
+    // --- Distribution (classify → permute → cleanup) ---
+    let bounds = distribute_seq(v, ctx, &CmpMap::new(&classifier, is_less), is_less, eager_base);
 
-    // No-progress guard: if one bucket swallowed everything and it is not
-    // an equality bucket, recursing would loop forever.
-    if let Some((bk, _)) = stripe.counts.iter().enumerate().find(|(_, &c)| c == n) {
-        if !classifier.is_equality_bucket(bk) && nb <= 2 {
-            heapsort(v, is_less);
-            return None;
+    // No-progress guard: if one non-equality bucket swallowed everything
+    // and there is no sibling to recurse into, recursing would loop
+    // forever — fall back to heapsort.
+    if nb <= 2 {
+        for i in 0..nb {
+            if bounds[i + 1] - bounds[i] == n && !classifier.is_equality_bucket(i) {
+                heapsort(v, is_less);
+                return None;
+            }
         }
     }
 
-    // --- Block permutation (sequential, no atomics) ---
-    let plan = Plan::new(&stripe.counts, n, block);
-    let flush_block = (stripe.flush_end / block) as i32;
-    let mut w = vec![0i32; nb];
-    let mut r = vec![0i32; nb];
-    for i in 0..nb {
-        // Single stripe: fulls in [d_i, d_{i+1}) are [d_i, min(d_{i+1},
-        // flush)) — already compacted, no empty-block movement needed.
-        let f = (plan.d[i + 1].min(flush_block) - plan.d[i]).max(0);
-        w[i] = plan.d[i];
-        r[i] = plan.d[i] + f - 1;
-    }
-    permute_blocks_seq(
-        v,
-        &plan,
-        &mut w,
-        &mut r,
-        &classifier,
-        &ctx.overflow,
-        &mut ctx.swap,
-        is_less,
-    );
-
-    // --- Cleanup ---
-    {
-        let arr = SharedSlice::new(v);
-        let bufs_ref: [&LocalBuffers<T>; 1] = [&ctx.bufs];
-        let base = cfg.base_case_size;
-        cleanup_buckets(
-            &arr,
-            &plan,
-            &w,
-            &bufs_ref,
-            &ctx.overflow,
-            0,
-            nb,
-            &[],
-            |start, end| {
-                if eager_base && end - start <= base && end > start {
-                    // SAFETY: cleanup owns the whole range sequentially.
-                    let slice = unsafe { arr.slice_mut(start, end) };
-                    insertion_sort(slice, is_less);
-                }
-            },
-        );
-    }
-    ctx.bufs.clear();
-
     let equality = (0..nb).map(|i| classifier.is_equality_bucket(i)).collect();
-    Some(StepResult {
-        bounds: plan.bucket_starts,
-        equality,
-    })
+    Some(StepResult { bounds, equality })
 }
 
 /// Sort `v` sequentially with IS⁴o, reusing `ctx` scratch space.
@@ -241,7 +266,8 @@ mod tests {
         assert!(ctx.compatible_with(&cfg));
         assert!(!ctx.compatible_with(&Config::default().with_block_bytes(64)));
         for seed in 0..6u64 {
-            let mut v = gen_u64(Distribution::ALL[seed as usize % 9], 8_000, seed);
+            let d = Distribution::ALL[seed as usize % Distribution::ALL.len()];
+            let mut v = gen_u64(d, 8_000, seed);
             let fp = multiset_fingerprint(&v, |x| *x);
             sort_seq(&mut v, &mut ctx, &lt);
             assert!(is_sorted_by(&v, lt), "seed {seed}");

@@ -43,9 +43,12 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arena::ArenaPool;
+use crate::base_case::insertion_sort;
 use crate::config::Config;
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
+use crate::planner::{plan_by, plan_keys, run_merge_sort, Backend, PlannerMode, SortPlan};
+use crate::radix::{sort_radix_par_with, sort_radix_seq, RadixKey};
 use crate::sequential::{sort_seq, SeqContext};
 use crate::task_scheduler::{sort_parallel_with, ParScratch};
 use crate::util::Element;
@@ -167,6 +170,58 @@ where
     }
 }
 
+/// The comparison-menu routing decision for a service job. `parallel_ok`
+/// is false on the batch path (the job already runs on a worker thread)
+/// and true on the dispatcher's large-job path. Forced radix degrades to
+/// IPS⁴o — a bare comparator has no radix key.
+fn resolve_cmp_plan<T, F>(
+    core: &ServiceCore,
+    data: &[T],
+    is_less: &F,
+    parallel_ok: bool,
+) -> SortPlan
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let mut plan = match core.cfg.planner {
+        PlannerMode::Auto => plan_by(data, &core.cfg, is_less),
+        PlannerMode::Force(backend) => SortPlan {
+            backend,
+            reason: "forced by config",
+        },
+        PlannerMode::Disabled => SortPlan {
+            backend: Backend::Ips4oPar,
+            reason: "planner disabled",
+        },
+    };
+    plan.backend = match plan.backend {
+        Backend::Radix | Backend::Ips4oPar if !parallel_ok => Backend::Ips4oSeq,
+        Backend::Radix => Backend::Ips4oPar,
+        b => b,
+    };
+    plan
+}
+
+/// The full-menu routing decision for a radix-keyed service job.
+fn resolve_keys_plan<T: RadixKey>(core: &ServiceCore, data: &[T], parallel_ok: bool) -> SortPlan {
+    let mut plan = match core.cfg.planner {
+        PlannerMode::Auto => plan_keys(data, &core.cfg),
+        PlannerMode::Force(backend) => SortPlan {
+            backend,
+            reason: "forced by config",
+        },
+        PlannerMode::Disabled => SortPlan {
+            backend: Backend::Ips4oPar,
+            reason: "planner disabled",
+        },
+    };
+    if !parallel_ok && plan.backend == Backend::Ips4oPar {
+        plan.backend = Backend::Ips4oSeq;
+    }
+    plan
+}
+
 impl<T, F> QueuedJob for TypedJob<T, F>
 where
     T: Element,
@@ -190,10 +245,17 @@ where
         // misused checkin) fails only this job: the panic is captured
         // into the ticket (re-raised at `wait`), the possibly half-sorted
         // arena is dropped instead of recycled, and the dispatcher/pool
-        // live on.
+        // live on. The plan probes call the comparator too, so they sit
+        // inside the containment.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
-            sort_seq(&mut data, &mut ctx, &self.is_less);
+            let plan = resolve_cmp_plan(core, &data, &self.is_less, false);
+            core.counters.record_backend(plan.backend);
+            match plan.backend {
+                Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
+                Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &self.is_less),
+                _ => sort_seq(&mut data, &mut ctx, &self.is_less),
+            }
         }));
         match outcome {
             Ok(()) => {
@@ -206,21 +268,193 @@ where
 
     fn run_large(&mut self, core: &ServiceCore) {
         let mut data = std::mem::take(&mut self.data);
-        let mut scratch = core
+        // Plan first (the probes may run the user comparator — contain).
+        let plan = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            resolve_cmp_plan(core, &data, &self.is_less, true)
+        })) {
+            Ok(plan) => plan,
+            Err(panic) => {
+                self.finish(core, Err(panic));
+                return;
+            }
+        };
+        core.counters.record_backend(plan.backend);
+        if plan.backend == Backend::Ips4oPar {
+            let mut scratch = core
+                .arenas
+                .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
+            // See `run_small` on panic containment. `ThreadPool::run`
+            // already funnels worker panics back to this (dispatcher)
+            // thread.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                assert!(scratch.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+                sort_parallel_with(&mut data, &core.cfg, &core.pool, &mut scratch, &self.is_less);
+            }));
+            match outcome {
+                Ok(()) => {
+                    core.arenas.checkin(scratch);
+                    self.finish(core, Ok(data));
+                }
+                Err(panic) => self.finish(core, Err(panic)),
+            }
+        } else {
+            let mut ctx = core
+                .arenas
+                .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+                match plan.backend {
+                    Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
+                    Backend::RunMerge => {
+                        run_merge_sort(&mut data, &mut ctx.merge_buf, &self.is_less)
+                    }
+                    _ => sort_seq(&mut data, &mut ctx, &self.is_less),
+                }
+            }));
+            match outcome {
+                Ok(()) => {
+                    core.arenas.checkin(ctx);
+                    self.finish(core, Ok(data));
+                }
+                Err(panic) => self.finish(core, Err(panic)),
+            }
+        }
+    }
+}
+
+/// A radix-keyed job: routed through the full backend menu, including
+/// in-place radix (no user closure involved — [`RadixKey::radix_less`]
+/// is the comparator).
+struct KeyedJob<T: RadixKey> {
+    data: Vec<T>,
+    done: Arc<DoneSlot<T>>,
+    finished: bool,
+}
+
+/// Same last-resort guard as [`TypedJob`]: a dropped-before-completion
+/// job fails its own ticket instead of stranding the client.
+impl<T: RadixKey> Drop for KeyedJob<T> {
+    fn drop(&mut self) {
+        if !self.finished {
+            let payload: Box<dyn std::any::Any + Send> =
+                Box::new("sort service dropped the job before completion");
+            self.done.complete(Err(payload));
+        }
+    }
+}
+
+impl<T: RadixKey> KeyedJob<T> {
+    fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
+        if let Ok(data) = &result {
+            core.counters
+                .elements_sorted
+                .fetch_add(data.len() as u64, Ordering::Relaxed);
+        }
+        core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.finished = true;
+        self.done.complete(result);
+    }
+}
+
+impl<T: RadixKey> QueuedJob for KeyedJob<T> {
+    fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+
+    fn run_small(&mut self, core: &ServiceCore) {
+        let mut data = std::mem::take(&mut self.data);
+        let mut ctx = core
             .arenas
-            .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
-        // See `run_small` on panic containment. `ThreadPool::run` already
-        // funnels worker panics back to this (dispatcher) thread.
+            .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+        // Containment here only guards against a foreign-geometry arena:
+        // keyed jobs run no user closures.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            assert!(scratch.compatible_with(&core.cfg), "recycled arena geometry mismatch");
-            sort_parallel_with(&mut data, &core.cfg, &core.pool, &mut scratch, &self.is_less);
+            assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+            let plan = resolve_keys_plan(core, &data, false);
+            core.counters.record_backend(plan.backend);
+            match plan.backend {
+                Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
+                Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less),
+                Backend::Radix => sort_radix_seq(&mut data, &mut ctx),
+                _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
+            }
         }));
         match outcome {
             Ok(()) => {
-                core.arenas.checkin(scratch);
+                core.arenas.checkin(ctx);
                 self.finish(core, Ok(data));
             }
             Err(panic) => self.finish(core, Err(panic)),
+        }
+    }
+
+    fn run_large(&mut self, core: &ServiceCore) {
+        let mut data = std::mem::take(&mut self.data);
+        // RadixKey is unsealed: contain a panicking downstream
+        // radix_key/radix_less during the plan probes, like TypedJob
+        // contains the user comparator.
+        let plan = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            resolve_keys_plan(core, &data, true)
+        })) {
+            Ok(plan) => plan,
+            Err(panic) => {
+                self.finish(core, Err(panic));
+                return;
+            }
+        };
+        core.counters.record_backend(plan.backend);
+        match plan.backend {
+            Backend::Ips4oPar | Backend::Radix => {
+                let mut scratch = core
+                    .arenas
+                    .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    assert!(
+                        scratch.compatible_with(&core.cfg),
+                        "recycled arena geometry mismatch"
+                    );
+                    if plan.backend == Backend::Radix {
+                        sort_radix_par_with(&mut data, &core.cfg, &core.pool, &mut scratch);
+                    } else {
+                        sort_parallel_with(
+                            &mut data,
+                            &core.cfg,
+                            &core.pool,
+                            &mut scratch,
+                            &T::radix_less,
+                        );
+                    }
+                }));
+                match outcome {
+                    Ok(()) => {
+                        core.arenas.checkin(scratch);
+                        self.finish(core, Ok(data));
+                    }
+                    Err(panic) => self.finish(core, Err(panic)),
+                }
+            }
+            _ => {
+                let mut ctx = core
+                    .arenas
+                    .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+                    match plan.backend {
+                        Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
+                        Backend::RunMerge => {
+                            run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less)
+                        }
+                        _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
+                    }
+                }));
+                match outcome {
+                    Ok(()) => {
+                        core.arenas.checkin(ctx);
+                        self.finish(core, Ok(data));
+                    }
+                    Err(panic) => self.finish(core, Err(panic)),
+                }
+            }
         }
     }
 }
@@ -362,12 +596,14 @@ impl SortService {
         }
     }
 
-    /// Submit a job using the element's natural order.
+    /// Submit a job using the element's natural order (comparison
+    /// backends; see [`SortService::submit_keys`] for radix routing).
     pub fn submit<T: Element + Ord>(&self, data: Vec<T>) -> JobTicket<T> {
         self.submit_by(data, |a: &T, b: &T| a < b)
     }
 
-    /// Submit a job with an explicit strict-weak-order `is_less`.
+    /// Submit a job with an explicit strict-weak-order `is_less`. The
+    /// planner routes it among the comparison backends.
     pub fn submit_by<T, F>(&self, data: Vec<T>, is_less: F) -> JobTicket<T>
     where
         T: Element,
@@ -380,6 +616,24 @@ impl SortService {
             done: Arc::clone(&done),
             finished: false,
         });
+        self.enqueue(job);
+        JobTicket { done }
+    }
+
+    /// Submit a radix-keyed job: the planner picks among the full
+    /// backend menu, including in-place radix (IPS²Ra).
+    pub fn submit_keys<T: RadixKey>(&self, data: Vec<T>) -> JobTicket<T> {
+        let done = Arc::new(DoneSlot::new());
+        let job: ErasedJob = Box::new(KeyedJob {
+            data,
+            done: Arc::clone(&done),
+            finished: false,
+        });
+        self.enqueue(job);
+        JobTicket { done }
+    }
+
+    fn enqueue(&self, job: ErasedJob) {
         let core = &self.core;
         let idx = core.rr.fetch_add(1, Ordering::Relaxed) % core.shards.len();
         // Increment `pending` under the shard lock, together with the
@@ -401,7 +655,6 @@ impl SortService {
             let _g = core.wake_mx.lock().unwrap();
             core.wake_cv.notify_one();
         }
-        JobTicket { done }
     }
 
     /// Convenience: submit and block for the result.
@@ -583,6 +836,33 @@ mod tests {
         drop(svc); // must complete everything before shutting down
         for t in tickets {
             assert!(is_sorted_by(&t.wait(), |a, b| a < b));
+        }
+    }
+
+    #[test]
+    fn submit_keys_routes_through_multiple_backends() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        // Sorted → run merge; big uniform → radix; tiny → base case.
+        let a = svc.submit_keys((0..20_000u64).collect::<Vec<_>>());
+        let b = svc.submit_keys(gen_u64(Distribution::Uniform, 200_000, 1));
+        let c = svc.submit_keys(vec![3u64, 1, 2]);
+        assert!(is_sorted_by(&a.wait(), |x, y| x < y));
+        assert!(is_sorted_by(&b.wait(), |x, y| x < y));
+        assert_eq!(c.wait(), vec![1, 2, 3]);
+        let m = svc.metrics();
+        assert_eq!(m.jobs_completed, 3);
+        assert!(m.distinct_backends() >= 2, "got {}", m.backends_summary());
+        assert!(m.backend_count(crate::planner::Backend::Radix) >= 1);
+    }
+
+    #[test]
+    fn keyed_jobs_match_comparator_jobs() {
+        let svc = SortService::new(Config::default().with_threads(3));
+        for d in Distribution::ALL {
+            let base = gen_u64(d, 40_000, 9);
+            let ka = svc.submit_keys(base.clone());
+            let kb = svc.submit(base);
+            assert_eq!(ka.wait(), kb.wait(), "{}", d.name());
         }
     }
 

@@ -1,6 +1,9 @@
 //! The public [`Sorter`] façade: owns the configuration, the persistent
-//! thread pool, and a pool of reusable scratch arenas; dispatches to
-//! sequential IS⁴o or parallel IPS⁴o.
+//! thread pool, and a pool of reusable scratch arenas; consults the
+//! [`planner`](crate::planner) per job and dispatches to the chosen
+//! backend — sequential IS⁴o, parallel IPS⁴o, in-place radix (for
+//! [`RadixKey`] types through [`Sorter::sort_keys`]), run merging, or
+//! the insertion-sort base case.
 
 use std::sync::Arc;
 use std::sync::atomic::Ordering;
@@ -9,6 +12,8 @@ use crate::arena::ArenaPool;
 use crate::config::Config;
 use crate::metrics::ScratchSnapshot;
 use crate::parallel::ThreadPool;
+use crate::planner::{plan_by, plan_keys, run_merge_sort, Backend, PlannerMode, SortPlan};
+use crate::radix::RadixKey;
 use crate::sequential::SeqContext;
 use crate::task_scheduler::ParScratch;
 use crate::util::Element;
@@ -67,26 +72,151 @@ impl Sorter {
         self.arenas.counters().snapshot()
     }
 
-    /// Sort with the element's natural order.
+    /// The plan for a comparator-only job, honoring the override knob.
+    fn resolve_plan_by<T, F>(&self, v: &[T], is_less: &F) -> SortPlan
+    where
+        T: Element,
+        F: Fn(&T, &T) -> bool,
+    {
+        match self.cfg.planner {
+            PlannerMode::Auto => plan_by(v, &self.cfg, is_less),
+            PlannerMode::Force(backend) => SortPlan {
+                backend,
+                reason: "forced by config",
+            },
+            PlannerMode::Disabled => SortPlan {
+                backend: if self.pool.is_some() {
+                    Backend::Ips4oPar
+                } else {
+                    Backend::Ips4oSeq
+                },
+                reason: "planner disabled",
+            },
+        }
+    }
+
+    /// Sort with the element's natural order (comparison backends only;
+    /// [`Sorter::sort_keys`] additionally unlocks the radix backend).
     pub fn sort<T: Element + Ord>(&self, v: &mut [T]) {
         self.sort_by(v, &|a: &T, b: &T| a < b)
     }
 
-    /// Sort with an explicit strict-weak-order `is_less`.
+    /// Sort with an explicit strict-weak-order `is_less`. The planner
+    /// routes among the comparison backends (base case, run merge,
+    /// sequential/parallel IPS⁴o); a forced radix plan degrades to
+    /// IPS⁴o because a bare comparator has no radix key.
     pub fn sort_by<T, F>(&self, v: &mut [T], is_less: &F)
     where
         T: Element,
         F: Fn(&T, &T) -> bool + Sync,
     {
-        match &self.pool {
-            Some(pool) => {
+        let plan = self.resolve_plan_by(v, is_less);
+        self.execute_cmp(v, is_less, plan);
+        self.arenas
+            .counters()
+            .elements_sorted
+            .fetch_add(v.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Sort a radix-keyed type: the planner picks among the full backend
+    /// menu, including in-place radix (IPS²Ra, [`crate::radix`]).
+    pub fn sort_keys<T: RadixKey>(&self, v: &mut [T]) {
+        let plan = match self.cfg.planner {
+            PlannerMode::Auto => plan_keys(v, &self.cfg),
+            PlannerMode::Force(backend) => SortPlan {
+                backend,
+                reason: "forced by config",
+            },
+            PlannerMode::Disabled => SortPlan {
+                backend: if self.pool.is_some() {
+                    Backend::Ips4oPar
+                } else {
+                    Backend::Ips4oSeq
+                },
+                reason: "planner disabled",
+            },
+        };
+        if plan.backend == Backend::Radix {
+            self.arenas.counters().record_backend(Backend::Radix);
+            match &self.pool {
+                Some(pool) => {
+                    let mut scratch = self
+                        .arenas
+                        .checkout(|| ParScratch::<T>::new(&self.cfg, pool.threads()));
+                    assert!(
+                        scratch.compatible_with(&self.cfg),
+                        "recycled arena geometry mismatch"
+                    );
+                    crate::radix::sort_radix_par_with(v, &self.cfg, pool, &mut scratch);
+                    self.arenas.checkin(scratch);
+                }
+                None => {
+                    let mut ctx = self
+                        .arenas
+                        .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
+                    assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
+                    crate::radix::sort_radix_seq(v, &mut ctx);
+                    self.arenas.checkin(ctx);
+                }
+            }
+            self.arenas
+                .counters()
+                .elements_sorted
+                .fetch_add(v.len() as u64, Ordering::Relaxed);
+        } else {
+            self.execute_cmp(v, &T::radix_less, plan);
+            self.arenas
+                .counters()
+                .elements_sorted
+                .fetch_add(v.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Execute a comparison-menu plan, recording the routing decision.
+    /// [`Backend::Radix`] (reachable only via `Force` on a comparator
+    /// job) degrades to IPS⁴o.
+    fn execute_cmp<T, F>(&self, v: &mut [T], is_less: &F, plan: SortPlan)
+    where
+        T: Element,
+        F: Fn(&T, &T) -> bool + Sync,
+    {
+        let backend = match (plan.backend, &self.pool) {
+            (Backend::Radix, Some(_)) => Backend::Ips4oPar,
+            (Backend::Radix, None) => Backend::Ips4oSeq,
+            (Backend::Ips4oPar, None) => Backend::Ips4oSeq,
+            (b, _) => b,
+        };
+        self.arenas.counters().record_backend(backend);
+        match backend {
+            Backend::BaseCase => crate::base_case::insertion_sort(v, is_less),
+            Backend::RunMerge => {
+                let mut ctx = self
+                    .arenas
+                    .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
+                assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
+                run_merge_sort(v, &mut ctx.merge_buf, is_less);
+                self.arenas.checkin(ctx);
+            }
+            Backend::Ips4oSeq => {
+                let mut ctx = self
+                    .arenas
+                    .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
+                // Guards against foreign-geometry contexts checked into
+                // our pool through `arenas()`.
+                assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
+                crate::sequential::sort_seq(v, &mut ctx, is_less);
+                self.arenas.checkin(ctx);
+            }
+            Backend::Ips4oPar | Backend::Radix => {
+                // Radix is rewritten above; only Ips4oPar reaches here,
+                // and only with a live pool.
+                let pool = self.pool.as_ref().expect("parallel plan without a pool");
                 let mut scratch = self
                     .arenas
                     .checkout(|| ParScratch::<T>::new(&self.cfg, pool.threads()));
                 // Guards against foreign-geometry scratch checked into
-                // our pool through `arenas()` (mirrors the sequential
-                // path below; the debug_assert inside the sort is
-                // compiled out in release).
+                // our pool through `arenas()` (the debug_assert inside
+                // the sort is compiled out in release).
                 assert!(
                     scratch.compatible_with(&self.cfg),
                     "recycled arena geometry mismatch"
@@ -100,21 +230,7 @@ impl Sorter {
                 );
                 self.arenas.checkin(scratch);
             }
-            None => {
-                let mut ctx = self
-                    .arenas
-                    .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
-                // Guards against foreign-geometry contexts checked into
-                // our pool through `arenas()`.
-                assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
-                crate::sequential::sort_seq(v, &mut ctx, is_less);
-                self.arenas.checkin(ctx);
-            }
         }
-        self.arenas
-            .counters()
-            .elements_sorted
-            .fetch_add(v.len() as u64, Ordering::Relaxed);
     }
 
     /// The counters handle, for sharing with a service-level aggregate.
@@ -195,6 +311,69 @@ mod tests {
         assert_eq!(d.scratch_allocations, 0);
         assert_eq!(d.scratch_reuses, 5);
         assert_eq!(d.elements_sorted, 50_000);
+    }
+
+    #[test]
+    fn sort_keys_routes_and_counts_backends() {
+        use crate::planner::Backend;
+        let s = Sorter::new(Config::default().with_threads(2));
+        let mut sorted: Vec<u64> = (0..20_000).collect();
+        s.sort_keys(&mut sorted); // nearly sorted → run merge
+        assert!(is_sorted_by(&sorted, |a, b| a < b));
+        let mut uniform = gen_u64(Distribution::Uniform, 100_000, 1);
+        s.sort_keys(&mut uniform); // wide-entropy keys → radix
+        assert!(is_sorted_by(&uniform, |a, b| a < b));
+        let m = s.scratch_metrics();
+        assert_eq!(m.backend_count(Backend::RunMerge), 1);
+        assert_eq!(m.backend_count(Backend::Radix), 1);
+        assert!(m.distinct_backends() >= 2);
+        assert_eq!(m.elements_sorted, 120_000);
+    }
+
+    #[test]
+    fn forced_backends_all_sort_correctly() {
+        use crate::planner::{Backend, PlannerMode};
+        for backend in Backend::ALL {
+            for threads in [1usize, 4] {
+                let cfg = Config::default()
+                    .with_threads(threads)
+                    .with_planner(PlannerMode::Force(backend));
+                let s = Sorter::new(cfg);
+                // Insertion sort is quadratic; keep its forced input small.
+                let n = if backend == Backend::BaseCase {
+                    2_000
+                } else {
+                    30_000
+                };
+                let mut v = gen_u64(Distribution::TwoDup, n, 5);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                s.sort_keys(&mut v);
+                assert!(is_sorted_by(&v, |a, b| a < b), "{backend:?} t={threads}");
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{backend:?}");
+                // Comparator path: radix degrades to IPS⁴o.
+                let mut v = gen_u64(Distribution::RootDup, n, 6);
+                s.sort(&mut v);
+                assert!(is_sorted_by(&v, |a, b| a < b), "{backend:?} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn planner_disabled_restores_thread_dispatch() {
+        use crate::planner::{Backend, PlannerMode};
+        let seq = Sorter::new(Config::default().with_planner(PlannerMode::Disabled));
+        let mut v: Vec<u64> = (0..10_000).collect(); // sorted, but no run merge
+        seq.sort(&mut v);
+        assert_eq!(seq.scratch_metrics().backend_count(Backend::Ips4oSeq), 1);
+        let par = Sorter::new(
+            Config::default()
+                .with_threads(4)
+                .with_planner(PlannerMode::Disabled),
+        );
+        let mut v = gen_u64(Distribution::Uniform, 50_000, 2);
+        par.sort_keys(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(par.scratch_metrics().backend_count(Backend::Ips4oPar), 1);
     }
 
     #[test]

@@ -10,12 +10,13 @@
 use std::collections::VecDeque;
 
 use crate::base_case::heapsort;
+use crate::classifier::{BucketMap, CmpMap};
 use crate::cleanup::{cleanup_buckets, save_next_head};
 use crate::config::Config;
 use crate::local_classification::{classify_stripe, LocalBuffers, StripeResult};
 use crate::parallel::{stripes, PerThread, SharedSlice, ThreadPool};
 use crate::permutation::{
-    final_writes, init_pointers, move_empty_blocks, permute_blocks, Plan, StripeBlocks,
+    final_writes, init_pointers, move_empty_blocks, permute_blocks, Overflow, Plan, StripeBlocks,
 };
 use crate::sampling::{build_classifier, SampleResult};
 use crate::sequential::{sort_seq, SeqContext, StepResult};
@@ -36,7 +37,7 @@ pub struct ParScratch<T> {
     pointers: Vec<BucketPointers>,
     /// The shared overflow block lives outside the per-thread contexts so
     /// SPMD regions can reference it without aliasing a context borrow.
-    overflow: crate::permutation::Overflow<T>,
+    overflow: Overflow<T>,
     /// Block size (elements) the contexts were built for; must match the
     /// config used at sort time.
     block: usize,
@@ -58,7 +59,7 @@ impl<T: Element> ParScratch<T> {
             pointers: (0..2 * cfg.max_buckets)
                 .map(|_| BucketPointers::new())
                 .collect(),
-            overflow: crate::permutation::Overflow::<T>::new(block),
+            overflow: Overflow::<T>::new(block),
             block,
         }
     }
@@ -66,6 +67,19 @@ impl<T: Element> ParScratch<T> {
     /// Number of worker contexts held.
     pub fn threads(&self) -> usize {
         self.ctxs.len()
+    }
+
+    /// Shared views of the scratch parts for a parallel driver: the
+    /// per-thread contexts, the atomic bucket pointers, and the shared
+    /// overflow block. `&mut self` guarantees exclusivity for the
+    /// duration of the borrows.
+    pub fn parts(&mut self) -> (&PerThread<SeqContext<T>>, &[BucketPointers], &Overflow<T>) {
+        (&self.ctxs, &self.pointers[..], &self.overflow)
+    }
+
+    /// Exclusive access to the leader context (for sequential fallbacks).
+    pub fn leader_ctx(&mut self) -> &mut SeqContext<T> {
+        self.ctxs.slot_mut(0)
     }
 
     /// True if this scratch's buffer geometry (block size, bucket count)
@@ -138,8 +152,14 @@ pub fn sort_parallel_with<T, F>(
             for i in 0..step.bounds.len() - 1 {
                 let (cs, ce) = (s + step.bounds[i], s + step.bounds[i + 1]);
                 let len = ce - cs;
-                if step.equality[i] || len <= cfg.base_case_size {
-                    continue; // all-equal, or eager-sorted during cleanup
+                // All-equal, or eager-sorted during cleanup. With the
+                // eager optimization disabled, base-case buckets must
+                // still reach the small-task phase to be sorted at all.
+                if step.equality[i] || (len <= cfg.base_case_size && cfg.eager_base_case) {
+                    continue;
+                }
+                if len < 2 {
+                    continue;
                 }
                 if len >= threshold {
                     big.push_back((cs, ce));
@@ -165,38 +185,34 @@ pub fn sort_parallel_with<T, F>(
     });
 }
 
-/// One cooperative partition step over `v` with all pool threads.
-/// Returns `None` if the range was sorted directly (degenerate fallback).
-pub fn partition_parallel<T, F>(
+/// The cooperative block phases — striped classification → empty-block
+/// movement (Appendix A) → atomic block permutation → bucket-partitioned
+/// cleanup — run by all pool threads for one already-chosen bucket
+/// mapping. Shared by the sampling-based [`partition_parallel`] and the
+/// parallel radix backend ([`crate::radix`]). Returns the bucket
+/// boundary offsets (length `num_buckets + 1`).
+///
+/// `is_less` is only used to eagerly sort base-case buckets during
+/// cleanup (when `cfg.eager_base_case` is set).
+pub fn distribute_parallel<T, M, F>(
     v: &mut [T],
     cfg: &Config,
     pool: &ThreadPool,
     ctxs: &PerThread<SeqContext<T>>,
     pointers: &[BucketPointers],
-    overflow: &crate::permutation::Overflow<T>,
+    overflow: &Overflow<T>,
+    map: &M,
     is_less: &F,
-) -> Option<StepResult>
+) -> Vec<usize>
 where
     T: Element,
+    M: BucketMap<T> + Sync,
     F: Fn(&T, &T) -> bool + Sync,
 {
     let t = pool.threads();
     let n = v.len();
     let block = cfg.block_elems(std::mem::size_of::<T>());
-
-    // --- Sampling (leader) ---
-    let classifier = {
-        // SAFETY: exclusive access before any SPMD region starts.
-        let ctx0 = unsafe { ctxs.get_mut(0) };
-        match build_classifier(v, cfg.buckets_for(n), cfg, &mut ctx0.rng, is_less) {
-            SampleResult::Classifier(c) => c,
-            SampleResult::Degenerate => {
-                heapsort(v, is_less);
-                return None;
-            }
-        }
-    };
-    let nb = classifier.num_buckets();
+    let nb = map.num_buckets();
     assert!(nb <= pointers.len(), "pointer array too small");
 
     // --- Local classification (SPMD over stripes) ---
@@ -204,7 +220,6 @@ where
     let arr = SharedSlice::new(v);
     let results: PerThread<Option<StripeResult>> = PerThread::new((0..t).map(|_| None).collect());
     {
-        let classifier = &classifier;
         let bounds = &bounds;
         let arr = &arr;
         let results = &results;
@@ -213,14 +228,7 @@ where
             // SAFETY: per-thread slots + disjoint stripes.
             let ctx = unsafe { ctxs.get_mut(tid) };
             ctx.bufs.reset(nb, block);
-            let res = classify_stripe(
-                arr,
-                bounds[tid],
-                bounds[tid + 1],
-                classifier,
-                &mut ctx.bufs,
-                is_less,
-            );
+            let res = classify_stripe(arr, bounds[tid], bounds[tid + 1], map, &mut ctx.bufs);
             unsafe { *results.get_mut(tid) = Some(res) };
         });
     }
@@ -235,14 +243,6 @@ where
     for r in &results {
         for (c, rc) in counts.iter_mut().zip(&r.counts) {
             *c += rc;
-        }
-    }
-
-    // No-progress guard (mirrors the sequential driver).
-    if let Some((bk, _)) = counts.iter().enumerate().find(|(_, &c)| c == n) {
-        if !classifier.is_equality_bucket(bk) && nb <= 2 {
-            heapsort(v, is_less);
-            return None;
         }
     }
 
@@ -268,12 +268,9 @@ where
     {
         let plan = &plan;
         let arr = &arr;
-        let classifier = &classifier;
         pool.run(move |tid| {
             let ctx = unsafe { ctxs.get_mut(tid) };
-            permute_blocks(
-                arr, plan, pointers, classifier, overflow, &mut ctx.swap, tid, t, is_less,
-            );
+            permute_blocks(arr, plan, pointers, map, overflow, &mut ctx.swap, tid, t);
         });
     }
     let ws = final_writes(pointers, nb);
@@ -352,11 +349,65 @@ where
         unsafe { ctxs.get_mut(tid) }.bufs.clear();
     }
 
+    plan.bucket_starts
+}
+
+/// One cooperative partition step over `v` with all pool threads.
+/// Returns `None` if the range was sorted directly (degenerate fallback).
+pub fn partition_parallel<T, F>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    ctxs: &PerThread<SeqContext<T>>,
+    pointers: &[BucketPointers],
+    overflow: &Overflow<T>,
+    is_less: &F,
+) -> Option<StepResult>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+
+    // --- Sampling (leader) ---
+    let classifier = {
+        // SAFETY: exclusive access before any SPMD region starts.
+        let ctx0 = unsafe { ctxs.get_mut(0) };
+        match build_classifier(v, cfg.buckets_for(n), cfg, &mut ctx0.rng, is_less) {
+            SampleResult::Classifier(c) => c,
+            SampleResult::Degenerate => {
+                heapsort(v, is_less);
+                return None;
+            }
+        }
+    };
+    let nb = classifier.num_buckets();
+
+    // --- Distribution (classify → permute → cleanup) ---
+    let bounds = distribute_parallel(
+        v,
+        cfg,
+        pool,
+        ctxs,
+        pointers,
+        overflow,
+        &CmpMap::new(&classifier, is_less),
+        is_less,
+    );
+
+    // No-progress guard (mirrors the sequential driver): a non-equality
+    // bucket that swallowed everything with no sibling to recurse into.
+    if nb <= 2 {
+        for i in 0..nb {
+            if bounds[i + 1] - bounds[i] == n && !classifier.is_equality_bucket(i) {
+                heapsort(v, is_less);
+                return None;
+            }
+        }
+    }
+
     let equality = (0..nb).map(|i| classifier.is_equality_bucket(i)).collect();
-    Some(StepResult {
-        bounds: plan.bucket_starts,
-        equality,
-    })
+    Some(StepResult { bounds, equality })
 }
 
 #[cfg(test)]

@@ -1,8 +1,9 @@
 //! Differential test suite: every algorithm in `baselines/` plus
-//! sequential and parallel IPS⁴o, checked against the standard library
-//! `slice::sort` on a shared corpus of all `datagen::Distribution`s ×
-//! boundary-focused sizes {0, 1, 2, block−1, block, block+1, 30k} ×
-//! all benchmark data types.
+//! sequential and parallel IPS⁴o — and, since the planner landed, the
+//! planner-routed and forced-radix drivers — checked against the
+//! standard library `slice::sort` on a shared corpus of all
+//! `datagen::Distribution`s × boundary-focused sizes
+//! {0, 1, 2, block−1, block, block+1, 30k} × all benchmark data types.
 //!
 //! Three assertions per (algorithm, distribution, size, type) cell:
 //! 1. output is sorted under the type's comparator;
@@ -18,7 +19,7 @@ use ips4o::baselines::Algo;
 use ips4o::bench_harness::run_algo;
 use ips4o::datagen::{self, Distribution};
 use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Element, Pair, Quartet};
-use ips4o::Config;
+use ips4o::{Backend, Config, PlannerMode, RadixKey, Sorter};
 
 const ALGOS: [Algo; 12] = [
     Algo::Is4o,
@@ -95,6 +96,56 @@ fn differential_for_type<T>(
     }
 }
 
+/// The keyed drivers: the planner's own choice (enabled by default) and
+/// the forced radix backend, each sequential and parallel, against the
+/// std reference — same three assertions as `differential_for_type`.
+fn differential_for_keys<T>(
+    type_name: &str,
+    gen: impl Fn(Distribution, usize, u64) -> Vec<T>,
+    key: impl Fn(&T) -> u64 + Copy,
+) where
+    T: RadixKey,
+{
+    let forced = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
+    let sorters = [
+        ("planner-seq", Sorter::new(Config::default())),
+        ("planner-par", Sorter::new(Config::default().with_threads(4))),
+        ("radix-seq", Sorter::new(forced.clone())),
+        ("radix-par", Sorter::new(forced.with_threads(4))),
+    ];
+    let is_less = T::radix_less;
+    let block = Config::default().block_elems(std::mem::size_of::<T>());
+    for d in Distribution::ALL {
+        for n in sizes(block) {
+            let base = gen(d, n, 0x4E15 ^ n as u64);
+            let fp = multiset_fingerprint(&base, key);
+            let mut expected = base.clone();
+            expected.sort_by(|a, b| {
+                if is_less(a, b) {
+                    Ordering::Less
+                } else if is_less(b, a) {
+                    Ordering::Greater
+                } else {
+                    Ordering::Equal
+                }
+            });
+            for (name, sorter) in &sorters {
+                let mut v = base.clone();
+                sorter.sort_keys(&mut v);
+                let ctx = format!("{name} on {type_name}/{} n={n}", d.name());
+                assert!(is_sorted_by(&v, is_less), "{ctx}: not sorted");
+                assert_eq!(fp, multiset_fingerprint(&v, key), "{ctx}: multiset changed");
+                assert!(
+                    v.iter()
+                        .zip(&expected)
+                        .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
+                    "{ctx}: key sequence differs from std reference"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn differential_u64() {
     differential_for_type("u64", datagen::gen_u64, |x| *x, |a, b| a < b);
@@ -148,4 +199,88 @@ fn differential_bytes100() {
         },
         Bytes100::less,
     );
+}
+
+#[test]
+fn differential_keys_u64() {
+    differential_for_keys("u64", datagen::gen_u64, |x| *x);
+}
+
+#[test]
+fn differential_keys_f64() {
+    differential_for_keys("f64", datagen::gen_f64, |x| x.to_bits());
+}
+
+#[test]
+fn differential_keys_pair() {
+    differential_for_keys("Pair", datagen::gen_pair, |p| {
+        p.key.to_bits() ^ p.value.to_bits().rotate_left(32)
+    });
+}
+
+#[test]
+fn differential_keys_quartet() {
+    differential_for_keys("Quartet", datagen::gen_quartet, |q| {
+        q.k0.to_bits()
+            ^ q.k1.to_bits().rotate_left(13)
+            ^ q.k2.to_bits().rotate_left(27)
+            ^ q.value.to_bits().rotate_left(41)
+    });
+}
+
+#[test]
+fn differential_keys_bytes100() {
+    differential_for_keys("Bytes100", datagen::gen_bytes100, |b| {
+        let mut k = [0u8; 8];
+        k.copy_from_slice(&b.key[2..10]);
+        u64::from_be_bytes(k) ^ (b.payload[0] as u64).rotate_left(56)
+    });
+}
+
+/// The −0.0 vs +0.0 bugfix case: the radix key transform orders −0.0
+/// strictly before +0.0 (a refinement), but the output must stay
+/// key-equivalent to the comparison reference, which treats the two as
+/// equal under `<`.
+#[test]
+fn differential_f64_negative_zero_key_equivalence() {
+    let mut rng = ips4o::util::Xoshiro256::new(0x5E20);
+    let base: Vec<f64> = (0..30_000)
+        .map(|i| match i % 5 {
+            0 => -0.0,
+            1 => 0.0,
+            2 => -rng.next_f64(),
+            3 => rng.next_f64(),
+            _ => 0.0,
+        })
+        .collect();
+    let fp = multiset_fingerprint(&base, |x| x.to_bits());
+    let mut expected = base.clone();
+    expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let is_less = |a: &f64, b: &f64| a < b;
+    let forced = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
+    let radix_seq = Sorter::new(forced.clone());
+    let radix_par = Sorter::new(forced.with_threads(4));
+    let planner = Sorter::new(Config::default().with_threads(4));
+    let sorters: [(&str, &Sorter); 3] = [
+        ("radix-seq", &radix_seq),
+        ("radix-par", &radix_par),
+        ("planner", &planner),
+    ];
+    for (name, sorter) in sorters {
+        let mut v = base.clone();
+        sorter.sort_keys(&mut v);
+        assert!(is_sorted_by(&v, is_less), "{name}: not sorted");
+        assert_eq!(
+            fp,
+            multiset_fingerprint(&v, |x| x.to_bits()),
+            "{name}: multiset changed (a zero was lost or its sign flipped)"
+        );
+        assert!(
+            v.iter()
+                .zip(&expected)
+                .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
+            "{name}: key sequence differs from std reference"
+        );
+    }
 }

@@ -3,8 +3,9 @@
 //! and configuration: **output sorted ∧ multiset preserved**.
 
 use ips4o::config::Config;
-use ips4o::datagen::Distribution;
+use ips4o::datagen::{self, Distribution};
 use ips4o::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+use ips4o::{Backend, PlannerMode, Sorter};
 
 fn lt(a: &u64, b: &u64) -> bool {
     a < b
@@ -175,6 +176,86 @@ fn property_partition_step_invariants() {
             if step.equality[i] {
                 assert_eq!(lo, hi, "trial {trial}: equality bucket {i} not constant");
             }
+        }
+    }
+}
+
+#[test]
+fn property_radix_random_configs() {
+    // Forced radix (sequential and parallel by drawn thread count) over
+    // random configurations and input shapes.
+    let mut rng = Xoshiro256::new(0x2AD1);
+    for trial in 0..40 {
+        let cfg = random_config(&mut rng);
+        let cfg = cfg.with_planner(PlannerMode::Force(Backend::Radix));
+        let sorter = Sorter::new(cfg.clone());
+        let mut v = random_input(&mut rng);
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let n = v.len();
+        sorter.sort_keys(&mut v);
+        assert!(
+            is_sorted_by(&v, lt),
+            "trial {trial}: not sorted (n={n}, cfg={cfg:?})"
+        );
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn property_planner_auto_random() {
+    // The default (planner-enabled) path over random configs and shapes,
+    // including the new skew/run distributions.
+    let mut rng = Xoshiro256::new(0x91A2);
+    for trial in 0..40 {
+        let cfg = random_config(&mut rng);
+        let sorter = Sorter::new(cfg.clone());
+        let d = Distribution::ALL[rng.next_below(Distribution::ALL.len() as u64) as usize];
+        let n = rng.next_below(40_000) as usize;
+        let mut v = datagen::gen_u64(d, n, trial);
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let mut expected = v.clone();
+        expected.sort_unstable();
+        sorter.sort_keys(&mut v);
+        assert_eq!(v, expected, "trial {trial}: {} n={n} cfg={cfg:?}", d.name());
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
+    }
+}
+
+#[test]
+fn property_zipf_and_sorted_runs_all_drivers() {
+    // The new distributions through every first-party driver: sequential
+    // IS⁴o, strictly-in-place IS⁴o, parallel IPS⁴o, radix, and the
+    // planner's own routing.
+    let mut rng = Xoshiro256::new(0x21F5);
+    for trial in 0..10u64 {
+        for d in [Distribution::Zipf, Distribution::SortedRuns] {
+            let n = 1 + rng.next_below(30_000) as usize;
+            let base = datagen::gen_u64(d, n, trial);
+            let fp = multiset_fingerprint(&base, |x| *x);
+            let mut expected = base.clone();
+            expected.sort_unstable();
+
+            let mut v = base.clone();
+            ips4o::sequential::sort_by(&mut v, &Config::default(), &lt);
+            assert_eq!(v, expected, "seq {} trial {trial}", d.name());
+
+            let mut v = base.clone();
+            ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
+            assert_eq!(v, expected, "strict {} trial {trial}", d.name());
+
+            let mut v = base.clone();
+            let par = Sorter::new(Config::default().with_threads(4));
+            par.sort_by(&mut v, &lt);
+            assert_eq!(v, expected, "par {} trial {trial}", d.name());
+
+            let mut v = base.clone();
+            ips4o::radix::sort_radix(&mut v, &Config::default());
+            assert_eq!(v, expected, "radix {} trial {trial}", d.name());
+
+            let mut v = base;
+            Sorter::new(Config::default()).sort_keys(&mut v);
+            assert_eq!(v, expected, "planner {} trial {trial}", d.name());
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
         }
     }
 }

@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use ips4o::datagen::{self, Distribution};
 use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Xoshiro256};
-use ips4o::{Config, SortService};
+use ips4o::{Backend, Config, PlannerMode, SortService};
 
 fn lt(a: &u64, b: &u64) -> bool {
     a < b
@@ -168,6 +168,63 @@ fn property_duplicate_heavy_without_equality_buckets() {
 }
 
 #[test]
+fn keyed_mixed_workload_selects_multiple_backends() {
+    // The serve-style mixed workload through submit_keys: across the
+    // distribution mix the planner must engage at least two distinct
+    // backends, and every result must match the std reference.
+    let svc = SortService::new(Config::default().with_threads(4));
+    let clients = 4usize;
+    let per_client = 12usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = &svc;
+            scope.spawn(move || {
+                for i in 0..per_client {
+                    let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
+                    let n = if i % 4 == 3 { 150_000 } else { 20_000 };
+                    let base = datagen::gen_u64(d, n, (c * 100 + i) as u64);
+                    let mut expected = base.clone();
+                    expected.sort_unstable();
+                    let out = svc.submit_keys(base).wait();
+                    assert_eq!(out, expected, "{} n={n}", d.name());
+                }
+            });
+        }
+    });
+    let m = svc.metrics();
+    assert_eq!(m.jobs_completed, (clients * per_client) as u64);
+    assert!(
+        m.distinct_backends() >= 2,
+        "planner used only: {}",
+        m.backends_summary()
+    );
+}
+
+#[test]
+fn forced_radix_service_handles_mixed_types() {
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(3)
+            .with_planner(PlannerMode::Force(Backend::Radix)),
+    );
+    let tu = svc.submit_keys(datagen::gen_u64(Distribution::Zipf, 50_000, 1));
+    let tf = svc.submit_keys(datagen::gen_f64(Distribution::Uniform, 50_000, 2));
+    let tp = svc.submit_keys(datagen::gen_pair(Distribution::RootDup, 50_000, 3));
+    let tb = svc.submit_keys(datagen::gen_bytes100(Distribution::TwoDup, 10_000, 4));
+    assert!(is_sorted_by(&tu.wait(), lt));
+    assert!(is_sorted_by(&tf.wait(), |a: &f64, b: &f64| a < b));
+    assert!(is_sorted_by(&tp.wait(), Pair::less));
+    assert!(is_sorted_by(&tb.wait(), Bytes100::less));
+    let m = svc.metrics();
+    assert_eq!(
+        m.backend_count(Backend::Radix),
+        4,
+        "{}",
+        m.backends_summary()
+    );
+}
+
+#[test]
 fn zero_scratch_allocations_after_warmup() {
     // The acceptance criterion: a repeated-sort loop through the service
     // performs zero scratch allocations after warm-up, proven by the
@@ -182,7 +239,7 @@ fn zero_scratch_allocations_after_warmup() {
         let tickets: Vec<_> = (0..8)
             .map(|i| {
                 svc.submit(datagen::gen_u64(
-                    Distribution::ALL[(i + round as usize) % 9],
+                    Distribution::ALL[(i + round as usize) % Distribution::ALL.len()],
                     4_000,
                     round ^ i as u64,
                 ))

@@ -5,7 +5,7 @@
 use ips4o::baselines;
 use ips4o::datagen::{self, Distribution};
 use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Quartet};
-use ips4o::{Config, Sorter};
+use ips4o::{Backend, Config, PlannerMode, Sorter};
 
 fn lt(a: &u64, b: &u64) -> bool {
     a < b
@@ -70,6 +70,50 @@ fn all_algorithms_agree_on_all_distributions() {
         let mut v = base.clone();
         baselines::tbb_like::sort_by(&mut v, 4, &lt);
         check("tbb", v);
+
+        let mut v = base.clone();
+        ips4o::radix::sort_radix(&mut v, &Config::default());
+        check("radix-seq", v);
+
+        let mut v = base.clone();
+        ips4o::sort_par_keys(&mut v);
+        check("planner-par", v);
+    }
+}
+
+#[test]
+fn planner_backends_agree_on_every_distribution() {
+    // Every forced backend (plus auto routing), sequential and parallel,
+    // must produce the exact std-sorted sequence.
+    let n = 30_000;
+    for d in Distribution::ALL {
+        let base = datagen::gen_u64(d, n, 321);
+        let mut expected = base.clone();
+        expected.sort_unstable();
+        for backend in Backend::ALL {
+            if backend == Backend::BaseCase {
+                continue; // quadratic on 30k elements; covered in unit tests
+            }
+            for threads in [1usize, 4] {
+                let cfg = Config::default()
+                    .with_threads(threads)
+                    .with_planner(PlannerMode::Force(backend));
+                let sorter = Sorter::new(cfg);
+                let mut v = base.clone();
+                sorter.sort_keys(&mut v);
+                assert_eq!(
+                    v,
+                    expected,
+                    "{} t={threads} on {}",
+                    backend.name(),
+                    d.name()
+                );
+            }
+        }
+        let auto = Sorter::new(Config::default().with_threads(4));
+        let mut v = base;
+        auto.sort_keys(&mut v);
+        assert_eq!(v, expected, "auto on {}", d.name());
     }
 }
 

@@ -14,6 +14,14 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Seeded replay: the integration suites a second time with the test seed
+# pinned and a single test thread — exercising the IPS4O_TEST_SEED
+# replay path (tests/common/oracle.rs) on every gate, including --fast.
+echo "== seeded replay (IPS4O_TEST_SEED=271828, --test-threads=1) =="
+for suite in differential property_tests service_stress sort_integration; do
+    IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
+done
+
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== cargo bench --no-run =="
     # Bench targets must keep compiling even when nobody runs them.

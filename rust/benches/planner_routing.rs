@@ -1,11 +1,14 @@
 //! Planner routing bench: per distribution, measure the planner's
-//! chosen backend against forced radix (IPS²Ra) and forced
-//! comparison-IPS⁴o on u64 keys — showing both what the planner picks
-//! and what that choice costs or saves.
+//! chosen backend against forced learned-CDF, forced radix (IPS²Ra),
+//! forced parallel comparison-IPS⁴o, and forced *sequential* IS⁴o on
+//! u64 keys — showing both what the planner picks and what that choice
+//! costs or saves.
 //!
 //! Emits `BENCH_planner_routing.json` when `IPS4O_BENCH_JSON=<dir>` is
-//! set; the acceptance reference is radix ≥ comparison-IPS⁴o throughput
-//! on uniform u64 keys.
+//! set. Two acceptance references:
+//! * radix ≥ comparison-IPS⁴o throughput on uniform u64 keys;
+//! * forced-CDF ≥ sequential IS⁴o throughput on the Zipf and
+//!   Exponential (skewed-lane) distributions.
 
 use ips4o::bench_harness::{bench, print_machine_info, reps_for, JsonReport, Table};
 use ips4o::datagen::{gen_u64, Distribution};
@@ -27,12 +30,20 @@ fn main() {
     let cfg_radix = cfg_auto
         .clone()
         .with_planner(PlannerMode::Force(Backend::Radix));
+    let cfg_cdf = cfg_auto
+        .clone()
+        .with_planner(PlannerMode::Force(Backend::CdfSort));
     let cfg_ips4o = cfg_auto
         .clone()
         .with_planner(PlannerMode::Force(Backend::Ips4oPar));
+    let cfg_seq = cfg_auto
+        .clone()
+        .with_planner(PlannerMode::Force(Backend::Ips4oSeq));
     let auto = Sorter::new(cfg_auto.clone());
     let radix = Sorter::new(cfg_radix);
+    let cdf = Sorter::new(cfg_cdf);
     let ips4o = Sorter::new(cfg_ips4o);
+    let seq = Sorter::new(cfg_seq);
 
     let dists = [
         Distribution::Uniform,
@@ -45,10 +56,13 @@ fn main() {
         Distribution::SortedRuns,
     ];
 
-    let mut table = Table::new(&["dist", "plan", "auto ms", "radix ms", "ips4o ms"]);
+    let mut table = Table::new(&[
+        "dist", "plan", "auto ms", "cdf ms", "radix ms", "ips4o ms", "is4o ms",
+    ]);
     let mut report = JsonReport::new("planner_routing", threads);
     let mut uniform_radix_tp = 0.0f64;
     let mut uniform_ips4o_tp = 0.0f64;
+    let mut cdf_vs_seq: Vec<(&str, f64, f64)> = Vec::new();
 
     for d in dists {
         let make = || gen_u64(d, n, 0xBE7C4);
@@ -56,6 +70,10 @@ fn main() {
 
         let m_auto = bench(n, reps, &make, |mut v| {
             auto.sort_keys(&mut v);
+            v
+        });
+        let m_cdf = bench(n, reps, &make, |mut v| {
+            cdf.sort_keys(&mut v);
             v
         });
         let m_radix = bench(n, reps, &make, |mut v| {
@@ -66,8 +84,12 @@ fn main() {
             ips4o.sort_keys(&mut v);
             v
         });
+        let m_seq = bench(n, reps, &make, |mut v| {
+            seq.sort_keys(&mut v);
+            v
+        });
 
-        // Correctness spot-check outside the timed closures.
+        // Correctness spot-checks outside the timed closures.
         let mut v = make();
         radix.sort_keys(&mut v);
         assert!(
@@ -75,21 +97,31 @@ fn main() {
             "radix failed on {}",
             d.name()
         );
+        let mut v = make();
+        cdf.sort_keys(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b), "cdf failed on {}", d.name());
 
         report.add("planner-auto", d.name(), &m_auto);
+        report.add("cdf", d.name(), &m_cdf);
         report.add("radix", d.name(), &m_radix);
         report.add("ips4o-par", d.name(), &m_ips4o);
+        report.add("ips4o-seq", d.name(), &m_seq);
         if d == Distribution::Uniform {
             uniform_radix_tp = m_radix.throughput();
             uniform_ips4o_tp = m_ips4o.throughput();
+        }
+        if matches!(d, Distribution::Zipf | Distribution::Exponential) {
+            cdf_vs_seq.push((d.name(), m_cdf.throughput(), m_seq.throughput()));
         }
 
         table.row(vec![
             d.name().to_string(),
             plan.backend.name().to_string(),
             format!("{:.1}", m_auto.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m_cdf.mean.as_secs_f64() * 1e3),
             format!("{:.1}", m_radix.mean.as_secs_f64() * 1e3),
             format!("{:.1}", m_ips4o.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m_seq.mean.as_secs_f64() * 1e3),
         ]);
     }
 
@@ -106,5 +138,18 @@ fn main() {
         println!("PASS: radix >= comparison IPS4o on uniform u64 keys");
     } else {
         println!("FAIL: radix slower than comparison IPS4o on uniform u64 keys");
+    }
+    for (name, cdf_tp, seq_tp) in cdf_vs_seq {
+        println!(
+            "{name} u64: cdf {:.1} M elem/s vs sequential IS4o {:.1} M elem/s ({:.2}x)",
+            cdf_tp / 1e6,
+            seq_tp / 1e6,
+            cdf_tp / seq_tp.max(1.0)
+        );
+        if cdf_tp >= seq_tp {
+            println!("PASS: forced-cdf >= forced sequential IS4o on {name}");
+        } else {
+            println!("FAIL: forced-cdf slower than sequential IS4o on {name}");
+        }
     }
 }

@@ -41,12 +41,14 @@ fn main() {
 
     let cfg = Config::default().with_threads(threads);
 
-    // Correctness spot-check outside the timed region.
+    // Correctness spot-check outside the timed region. Keyed submission
+    // opens the full backend menu (IPS⁴o, radix, learned CDF, run
+    // merge) — the mixed distribution set routes across it.
     let svc = SortService::new(cfg.clone());
     svc.warm::<u64>();
     {
         let jobs = make_jobs();
-        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit_keys(j)).collect();
         for t in tickets {
             let v = t.wait();
             assert!(is_sorted_by(&v, |a, b| a < b), "service result not sorted");
@@ -54,11 +56,11 @@ fn main() {
     }
     let warm = svc.metrics();
 
-    // (a) per-job Sorter::sort — each small job pays parallel dispatch.
+    // (a) per-job Sorter::sort_keys — each job pays its own dispatch.
     let sorter = Sorter::new(cfg.clone());
     let m_loop = bench(total, 3, &make_jobs, |mut jobs| {
         for j in jobs.iter_mut() {
-            sorter.sort(j);
+            sorter.sort_keys(j);
         }
         jobs
     });
@@ -73,7 +75,7 @@ fn main() {
 
     // (c) the batched service: submit everything, wait for everything.
     let m_svc = bench(total, 3, &make_jobs, |jobs| {
-        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit_keys(j)).collect();
         tickets.into_iter().map(|t| t.wait()).collect::<Vec<_>>()
     });
 
@@ -91,7 +93,7 @@ fn main() {
             ),
         ]
     };
-    t.row(row("Sorter::sort per job", &m_loop));
+    t.row(row("Sorter::sort_keys per job", &m_loop));
     t.row(row("sort_unstable per job", &m_std));
     t.row(row("SortService (batched)", &m_svc));
     t.print();

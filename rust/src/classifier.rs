@@ -94,6 +94,55 @@ where
     }
 }
 
+/// The learned-CDF bucket mapping: wraps a fitted
+/// [`CdfModel`](crate::planner::cdf::CdfModel) so the shared block
+/// machinery can distribute with it. Bucket indices are monotone in key
+/// order by the model's construction; there are no equality buckets —
+/// duplicate-heavy ranges are rejected at fit time and fall back to the
+/// comparison [`Classifier`].
+pub struct CdfMap {
+    model: crate::planner::cdf::CdfModel,
+}
+
+impl CdfMap {
+    pub fn new(model: crate::planner::cdf::CdfModel) -> Self {
+        CdfMap { model }
+    }
+
+    pub fn model(&self) -> &crate::planner::cdf::CdfModel {
+        &self.model
+    }
+}
+
+impl<T: crate::radix::RadixKey> BucketMap<T> for CdfMap {
+    #[inline(always)]
+    fn num_buckets(&self) -> usize {
+        self.model.num_buckets()
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, e: &T) -> usize {
+        self.model.bucket_of_key(e.radix_key())
+    }
+
+    #[inline(always)]
+    fn bucket_of4(&self, es: &[T; 4]) -> [usize; 4] {
+        // Four independent multiply/interpolate chains — overlap freely.
+        let k = [
+            es[0].radix_key(),
+            es[1].radix_key(),
+            es[2].radix_key(),
+            es[3].radix_key(),
+        ];
+        [
+            self.model.bucket_of_key(k[0]),
+            self.model.bucket_of_key(k[1]),
+            self.model.bucket_of_key(k[2]),
+            self.model.bucket_of_key(k[3]),
+        ]
+    }
+}
+
 /// A built classifier for one partitioning step.
 ///
 /// Bucket index layout:
@@ -478,6 +527,31 @@ mod tests {
                 assert_eq!(m.is_equality_bucket(b), c.is_equality_bucket(b));
             }
         }
+    }
+
+    #[test]
+    fn cdf_map_adapter_matches_model_and_is_monotone() {
+        use crate::planner::cdf::{CdfFit, CdfModel};
+        let sample: Vec<u64> = (0..200).map(|i| i * 37).collect();
+        let CdfFit::Fitted(model) = CdfModel::fit(&sample, 16) else {
+            panic!("linear sample must fit");
+        };
+        let m = CdfMap::new(model);
+        assert_eq!(BucketMap::<u64>::num_buckets(&m), 16);
+        let mut last = 0usize;
+        for e in (0..8000u64).step_by(13) {
+            let b = BucketMap::<u64>::bucket_of(&m, &e);
+            assert_eq!(b, m.model().bucket_of_key(e));
+            assert!(b >= last, "not monotone at {e}");
+            last = b;
+        }
+        let es = [5u64, 100, 2500, 7399];
+        let got = BucketMap::<u64>::bucket_of4(&m, &es);
+        for u in 0..4 {
+            assert_eq!(got[u], BucketMap::<u64>::bucket_of(&m, &es[u]));
+        }
+        // No equality buckets in the CDF layout.
+        assert!(!BucketMap::<u64>::is_equality_bucket(&m, 1));
     }
 
     #[test]

@@ -66,11 +66,14 @@
 //! fingerprints each input (presortedness, duplicate density, key-byte
 //! entropy) and routes it to the predicted-fastest backend — IPS⁴o
 //! (sequential or parallel), the derived in-place radix sort IPS²Ra
-//! ([`radix`], for [`RadixKey`] element types via [`Sorter::sort_keys`]
-//! / [`SortService::submit_keys`]), run detection + merging for
-//! nearly-sorted inputs, or the insertion-sort base case. Routing
-//! decisions are counted per backend in the metrics;
-//! [`Config::with_planner`] forces a backend or disables routing.
+//! ([`radix`]), the learned CDF distribution sort ([`planner::cdf`],
+//! for heavy-tailed key distributions where fixed digit windows go
+//! lopsided — both for [`RadixKey`] element types via
+//! [`Sorter::sort_keys`] / [`SortService::submit_keys`]), run detection
+//! + merging for nearly-sorted inputs, or the insertion-sort base case.
+//! Routing decisions are counted per backend in the metrics (CDF
+//! fit-failure fallbacks separately); [`Config::with_planner`] forces a
+//! backend or disables routing.
 
 pub mod arena;
 pub mod base_case;

@@ -47,7 +47,7 @@ COMMANDS:
 FLAGS (sort):
     --algo <name>      IPS4o | IS4o | IS4o-strict | BlockQ | s3-sort |
                        DualPivot | std-sort | MCSTLubq | MCSTLbq |
-                       MCSTLmwm | PBBS | TBB | radix | planned
+                       MCSTLmwm | PBBS | TBB | radix | cdf | planned
                                                       [default: IPS4o]
     --dist <name>      Uniform | Exponential | AlmostSorted | RootDup |
                        TwoDup | EightDup | Sorted | ReverseSorted |
@@ -59,7 +59,7 @@ FLAGS (sort):
     --block <bytes>    block size in bytes             [default: 2048]
     --seed <int>       workload seed                   [default: 42]
     --no-eq            disable equality buckets
-    --planner <mode>   auto | off | ips4o-par | ips4o-seq | radix |
+    --planner <mode>   auto | off | ips4o-par | ips4o-seq | radix | cdf |
                        run-merge | base-case (forces a backend)
                                                       [default: auto]
 
@@ -136,11 +136,12 @@ fn build_config(args: &[String]) -> Config {
 }
 
 /// What `sort --algo` can name: a registry algorithm, the forced radix
-/// backend, or the planner's own choice.
+/// or learned-CDF backend, or the planner's own choice.
 #[derive(Copy, Clone)]
 enum CliAlgo {
     Classic(Algo),
     Radix,
+    Cdf,
     Planned,
 }
 
@@ -149,6 +150,7 @@ impl CliAlgo {
         match self {
             CliAlgo::Classic(a) => a.name(),
             CliAlgo::Radix => "radix",
+            CliAlgo::Cdf => "cdf",
             CliAlgo::Planned => "planned",
         }
     }
@@ -156,6 +158,7 @@ impl CliAlgo {
     fn from_name(s: &str) -> CliAlgo {
         match s.to_ascii_lowercase().as_str() {
             "radix" => CliAlgo::Radix,
+            "cdf" => CliAlgo::Cdf,
             "planned" | "auto" => CliAlgo::Planned,
             _ => CliAlgo::Classic(Algo::from_name(s).unwrap_or(Algo::Ips4o)),
         }
@@ -175,6 +178,12 @@ fn run_algo<T: ips4o::RadixKey>(
         CliAlgo::Classic(a) => ips4o::bench_harness::run_algo(a, v, cfg, &is_less),
         CliAlgo::Radix => {
             let cfg = cfg.clone().with_planner(PlannerMode::Force(Backend::Radix));
+            Sorter::new(cfg).sort_keys(v);
+        }
+        CliAlgo::Cdf => {
+            let cfg = cfg
+                .clone()
+                .with_planner(PlannerMode::Force(Backend::CdfSort));
             Sorter::new(cfg).sort_keys(v);
         }
         CliAlgo::Planned => {
@@ -396,6 +405,7 @@ fn cmd_selftest(args: &[String]) -> i32 {
     .map(CliAlgo::Classic)
     .collect();
     algos.push(CliAlgo::Radix);
+    algos.push(CliAlgo::Cdf);
     algos.push(CliAlgo::Planned);
     for algo in algos {
         for dist in Distribution::ALL {

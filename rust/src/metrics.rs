@@ -101,6 +101,10 @@ pub struct ScratchCounters {
     pub batches_dispatched: AtomicU64,
     /// Total elements sorted through the owning instance.
     pub elements_sorted: AtomicU64,
+    /// (Sub)ranges the CDF backend handed back to the comparison
+    /// classifier because the learned fit was degenerate or too skewed
+    /// (see [`crate::planner::cdf`]).
+    pub cdf_fallbacks: AtomicU64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [AtomicU64; Backend::COUNT],
@@ -114,13 +118,8 @@ impl Default for ScratchCounters {
             jobs_completed: AtomicU64::new(0),
             batches_dispatched: AtomicU64::new(0),
             elements_sorted: AtomicU64::new(0),
-            backend_selected: [
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-            ],
+            cdf_fallbacks: AtomicU64::new(0),
+            backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 }
@@ -136,6 +135,7 @@ impl ScratchCounters {
         self.jobs_completed.store(0, Ordering::Relaxed);
         self.batches_dispatched.store(0, Ordering::Relaxed);
         self.elements_sorted.store(0, Ordering::Relaxed);
+        self.cdf_fallbacks.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
             c.store(0, Ordering::Relaxed);
         }
@@ -157,6 +157,7 @@ impl ScratchCounters {
             jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
             batches_dispatched: self.batches_dispatched.load(Ordering::Relaxed),
             elements_sorted: self.elements_sorted.load(Ordering::Relaxed),
+            cdf_fallbacks: self.cdf_fallbacks.load(Ordering::Relaxed),
             backend_selected,
         }
     }
@@ -170,6 +171,9 @@ pub struct ScratchSnapshot {
     pub jobs_completed: u64,
     pub batches_dispatched: u64,
     pub elements_sorted: u64,
+    /// (Sub)ranges the CDF backend handed back to the comparison
+    /// classifier (degenerate or skewed fit).
+    pub cdf_fallbacks: u64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [u64; Backend::COUNT],
@@ -187,6 +191,7 @@ impl ScratchSnapshot {
             jobs_completed: self.jobs_completed - earlier.jobs_completed,
             batches_dispatched: self.batches_dispatched - earlier.batches_dispatched,
             elements_sorted: self.elements_sorted - earlier.elements_sorted,
+            cdf_fallbacks: self.cdf_fallbacks - earlier.cdf_fallbacks,
             backend_selected,
         }
     }

@@ -13,6 +13,11 @@ pub enum Backend {
     /// In-place radix, IPS²Ra-style ([`crate::radix`]); available only
     /// for [`RadixKey`](crate::radix::RadixKey) element types.
     Radix,
+    /// Learned CDF distribution sort ([`crate::planner::cdf`]): bucket
+    /// boundaries from a sample-fitted piecewise-linear CDF instead of a
+    /// splitter tree or fixed digit windows. Available only for
+    /// [`RadixKey`](crate::radix::RadixKey) element types.
+    CdfSort,
     /// Run detection + bottom-up merging, for nearly-sorted inputs.
     RunMerge,
     /// Insertion sort, for inputs at or below the base-case size.
@@ -21,13 +26,14 @@ pub enum Backend {
 
 impl Backend {
     /// Number of backends (sizes the per-backend metrics counters).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 6;
 
     /// All backends, in [`Backend::index`] order.
     pub const ALL: [Backend; Backend::COUNT] = [
         Backend::Ips4oPar,
         Backend::Ips4oSeq,
         Backend::Radix,
+        Backend::CdfSort,
         Backend::RunMerge,
         Backend::BaseCase,
     ];
@@ -38,8 +44,9 @@ impl Backend {
             Backend::Ips4oPar => 0,
             Backend::Ips4oSeq => 1,
             Backend::Radix => 2,
-            Backend::RunMerge => 3,
-            Backend::BaseCase => 4,
+            Backend::CdfSort => 3,
+            Backend::RunMerge => 4,
+            Backend::BaseCase => 5,
         }
     }
 
@@ -48,6 +55,7 @@ impl Backend {
             Backend::Ips4oPar => "ips4o-par",
             Backend::Ips4oSeq => "ips4o-seq",
             Backend::Radix => "radix",
+            Backend::CdfSort => "cdf",
             Backend::RunMerge => "run-merge",
             Backend::BaseCase => "base-case",
         }
@@ -69,9 +77,10 @@ pub enum PlannerMode {
     /// (the default).
     Auto,
     /// Always use the named backend (benchmarks, differential tests).
-    /// [`Backend::Radix`] degrades to IPS⁴o for jobs without a
-    /// [`RadixKey`](crate::radix::RadixKey); parallel backends degrade
-    /// to their sequential form when no thread pool is available.
+    /// [`Backend::Radix`] and [`Backend::CdfSort`] degrade to IPS⁴o for
+    /// jobs without a [`RadixKey`](crate::radix::RadixKey); parallel
+    /// backends degrade to their sequential form when no thread pool is
+    /// available.
     Force(Backend),
     /// Pre-planner behavior: IPS⁴o chosen purely by thread count.
     Disabled,

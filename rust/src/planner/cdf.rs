@@ -1,0 +1,617 @@
+//! Learned CDF classification — the third [`BucketMap`] family.
+//!
+//! IPS⁴o's splitter tree equalizes bucket sizes by construction (the
+//! splitters *are* sample quantiles) but costs `log₂ k` comparisons per
+//! element; the radix digit map costs two ALU ops but inherits whatever
+//! skew the key distribution has in the extracted bit window. The
+//! learned-sort observation ("Towards Parallel Learned Sorting",
+//! Carvalho 2022) is that a model of the key CDF gives both at once:
+//! bucket `⌊F(key)·k⌋` is as cheap as a digit extraction *and* as
+//! balanced as the fit is good.
+//!
+//! [`CdfModel`] is that model, kept deliberately tiny: a monotone
+//! piecewise-linear interpolation of the empirical CDF of a strided key
+//! sample, over [`CDF_SEGMENTS`] equal-width key segments. Evaluation is
+//! two multiplies and a clamp — no branches, no tree, no search:
+//!
+//! ```text
+//! x = (key − min) · seg_scale          // fractional segment position
+//! y = table[⌊x⌋] + frac(x) · (table[⌊x⌋+1] − table[⌊x⌋])
+//! bucket = min(⌊y⌋, k − 1)
+//! ```
+//!
+//! Monotonicity (the [`BucketMap`] contract) holds by construction: the
+//! table is a non-decreasing sequence, interpolation within a segment is
+//! non-decreasing in `x`, and `x` is non-decreasing in the key.
+//!
+//! The fit is *checked before use*: the model classifies its own sample
+//! and, if any bucket captures more than [`CDF_MAX_BUCKET_SHARE`] of it
+//! (duplicate-heavy or pathologically non-linear inputs), the range
+//! falls back to the comparison classifier — whose equality buckets are
+//! exactly the right tool there. Fallbacks are counted in
+//! [`ScratchCounters::cdf_fallbacks`].
+//!
+//! The drivers below reuse the shared block machinery
+//! ([`distribute_seq`] / [`distribute_parallel`]) the same way the radix
+//! backend does — the 2020 follow-up paper's point that the IPS⁴o
+//! skeleton never looks inside the bucket mapping.
+//!
+//! ```
+//! use ips4o::{Backend, Config, PlannerMode, Sorter};
+//!
+//! let sorter = Sorter::new(Config::default().with_planner(PlannerMode::Force(Backend::CdfSort)));
+//! let mut v: Vec<u64> = (0..50_000).rev().collect();
+//! sorter.sort_keys(&mut v);
+//! assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! ```
+//!
+//! [`BucketMap`]: crate::classifier::BucketMap
+//! [`distribute_seq`]: crate::sequential::distribute_seq
+//! [`distribute_parallel`]: crate::task_scheduler::distribute_parallel
+//! [`ScratchCounters::cdf_fallbacks`]: crate::metrics::ScratchCounters
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+
+use crate::base_case::insertion_sort;
+use crate::classifier::CdfMap;
+use crate::config::Config;
+use crate::metrics::ScratchCounters;
+use crate::parallel::{lpt_bins, SharedSlice, ThreadPool};
+use crate::radix::RadixKey;
+use crate::sequential::{distribute_seq, sort_seq, SeqContext};
+use crate::task_scheduler::{distribute_parallel, sort_parallel_with, ParScratch};
+
+/// Number of equal-width key segments in the piecewise-linear CDF.
+pub const CDF_SEGMENTS: usize = 64;
+/// Maximum keys sampled per fit (stack-allocated; no heap traffic on the
+/// warm service path, mirroring the fingerprint probes).
+pub const CDF_SAMPLE: usize = 256;
+/// A fit whose largest bucket captures more than this share of its own
+/// sample is rejected — the range goes to the comparison classifier,
+/// whose equality buckets handle duplicate-heavy inputs in one pass.
+/// The effective limit is `max(0.5, 3/k)`: at tiny fanouts a near-even
+/// split legitimately exceeds one half, and progress is already
+/// guaranteed there because the sampled min and max always land in the
+/// first and last bucket.
+pub const CDF_MAX_BUCKET_SHARE: f64 = 0.5;
+
+/// A fitted monotone piecewise-linear CDF, scaled to bucket space.
+///
+/// `Copy` and fixed-size on purpose: building one allocates nothing, so
+/// recursing per subrange keeps the zero-steady-state-allocation story
+/// of the serving layer intact.
+#[derive(Copy, Clone, Debug)]
+pub struct CdfModel {
+    key_min: u64,
+    /// Maps `key − key_min` to a fractional segment position.
+    seg_scale: f64,
+    segments: usize,
+    num_buckets: usize,
+    /// CDF at the `segments + 1` equal-width key boundaries, pre-scaled
+    /// by `num_buckets`; non-decreasing, `table[0] = 0`,
+    /// `table[segments] = num_buckets`.
+    table: [f64; CDF_SEGMENTS + 1],
+}
+
+/// Outcome of a fit attempt.
+pub enum CdfFit {
+    /// A usable model.
+    Fitted(CdfModel),
+    /// The sample held a single distinct key — nothing to interpolate;
+    /// the comparison classifier (equality buckets) should finish the
+    /// range.
+    SingleKey,
+    /// The fit failed its own skew check ([`CDF_MAX_BUCKET_SHARE`]).
+    Skewed,
+}
+
+impl CdfModel {
+    /// Fit a model to a *sorted* key sample for `num_buckets` buckets
+    /// (`2 ..= 256`). Returns [`CdfFit::SingleKey`] / [`CdfFit::Skewed`]
+    /// when the sample cannot support a balanced distribution step.
+    pub fn fit(sorted: &[u64], num_buckets: usize) -> CdfFit {
+        debug_assert!((2..=256).contains(&num_buckets));
+        debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+        let m = sorted.len();
+        if m == 0 || sorted[0] == sorted[m - 1] {
+            return CdfFit::SingleKey;
+        }
+        let key_min = sorted[0];
+        let span = sorted[m - 1] - key_min; // >= 1
+        let segments = (CDF_SEGMENTS as u64).min(span).min(m as u64) as usize;
+        let kf = num_buckets as f64;
+        let mf = m as f64;
+        let mut table = [0.0f64; CDF_SEGMENTS + 1];
+        let mut consumed = 0usize; // sorted-sample cursor: one linear walk
+        for (j, slot) in table.iter_mut().enumerate().take(segments).skip(1) {
+            let boundary = key_min + ((span as u128 * j as u128) / segments as u128) as u64;
+            while consumed < m && sorted[consumed] < boundary {
+                consumed += 1;
+            }
+            *slot = kf * consumed as f64 / mf;
+        }
+        table[segments] = kf; // bucket(key_max) clamps to num_buckets − 1
+        let model = CdfModel {
+            key_min,
+            seg_scale: segments as f64 / span as f64,
+            segments,
+            num_buckets,
+            table,
+        };
+
+        // Self-check: the model must spread its own sample. A bucket
+        // swallowing most of it means duplicates or a shape the linear
+        // segments cannot follow — the comparison classifier's job.
+        let mut hist = [0u32; 256];
+        let mut max_count = 0u32;
+        for &k in sorted {
+            let b = model.bucket_of_key(k);
+            hist[b] += 1;
+            max_count = max_count.max(hist[b]);
+        }
+        let limit = (3.0 / kf).max(CDF_MAX_BUCKET_SHARE);
+        if (max_count as f64) > limit * mf {
+            return CdfFit::Skewed;
+        }
+        CdfFit::Fitted(model)
+    }
+
+    /// Total buckets this model maps into.
+    #[inline(always)]
+    pub fn num_buckets(&self) -> usize {
+        self.num_buckets
+    }
+
+    /// Map a radix key to its bucket: two multiplies and a clamp.
+    /// Monotone over the whole `u64` domain (keys outside the fitted
+    /// range clamp to the first/last bucket).
+    #[inline(always)]
+    pub fn bucket_of_key(&self, key: u64) -> usize {
+        let x = key.saturating_sub(self.key_min) as f64 * self.seg_scale;
+        let s = (x as usize).min(self.segments - 1);
+        // SAFETY: s + 1 <= segments <= CDF_SEGMENTS < table.len().
+        let (lo, hi) = unsafe { (*self.table.get_unchecked(s), *self.table.get_unchecked(s + 1)) };
+        let y = lo + (x - s as f64) * (hi - lo);
+        (y as usize).min(self.num_buckets - 1)
+    }
+
+    /// Smallest key mapping to a bucket `>= b` (for `1 <= b <
+    /// num_buckets`) — the model's implied splitter, used by the tests
+    /// to cross-check against the comparison classifier.
+    pub fn boundary_key(&self, b: usize) -> u64 {
+        debug_assert!(b >= 1 && b < self.num_buckets);
+        let (mut lo, mut hi) = (0u64, u64::MAX);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.bucket_of_key(mid) >= b {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+}
+
+/// Strided radix-key sample of `v` into `buf`, sorted; returns its
+/// length (`min(CDF_SAMPLE, v.len())`). Deterministic and allocation-free.
+fn sample_keys<T: RadixKey>(v: &[T], buf: &mut [u64; CDF_SAMPLE]) -> usize {
+    let n = v.len();
+    let m = CDF_SAMPLE.min(n);
+    // Ceiling division: the sample must span the *whole* range (a floor
+    // stride would cover only the first `m` elements when m < n < 2m,
+    // blinding the fit to the tail's keys).
+    let stride = crate::util::div_ceil(n, m.max(1)).max(1);
+    let mut len = 0usize;
+    let mut i = 0usize;
+    while i < n && len < m {
+        buf[len] = v[i].radix_key();
+        len += 1;
+        i += stride;
+    }
+    crate::baselines::introsort::sort_by(&mut buf[..len], &|a: &u64, b: &u64| a < b);
+    len
+}
+
+/// Sample `v`'s keys and fit a model with `num_buckets` buckets.
+pub fn fit_range<T: RadixKey>(v: &[T], num_buckets: usize) -> CdfFit {
+    let mut buf = [0u64; CDF_SAMPLE];
+    let len = sample_keys(v, &mut buf);
+    CdfModel::fit(&buf[..len], num_buckets)
+}
+
+fn record_fallback(counters: Option<&ScratchCounters>) {
+    if let Some(c) = counters {
+        c.cdf_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Resolution of a single-key sample: scan the true key range. All keys
+/// equal and complete ⇒ the range is key-equivalent throughout, nothing
+/// to do. Otherwise the comparison classifier must finish it (prefix
+/// keys, or variation the sample missed).
+enum SingleKeyOutcome {
+    AlreadySorted,
+    NeedsComparison,
+}
+
+fn resolve_single_key<T: RadixKey>(v: &[T]) -> SingleKeyOutcome {
+    let (min, max) = crate::radix::key_range(v);
+    if min == max && T::COMPLETE {
+        SingleKeyOutcome::AlreadySorted
+    } else {
+        SingleKeyOutcome::NeedsComparison
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequential driver
+// ---------------------------------------------------------------------------
+
+/// Sort `v` with the sequential learned-CDF distribution sort, reusing
+/// `ctx` scratch. Ranges whose fit degenerates (single key, skew) are
+/// finished by the comparison classifier ([`sort_seq`]) and counted in
+/// `counters.cdf_fallbacks` when provided.
+pub fn sort_cdf_seq<T: RadixKey>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    counters: Option<&ScratchCounters>,
+) {
+    let n = v.len();
+    if n <= ctx.cfg.base_case_size.max(2) {
+        insertion_sort(v, &T::radix_less);
+        return;
+    }
+    let model = match fit_range(v, crate::radix::capped_fanout(n, &ctx.cfg)) {
+        CdfFit::Fitted(m) => m,
+        CdfFit::SingleKey => {
+            if let SingleKeyOutcome::AlreadySorted = resolve_single_key(v) {
+                return;
+            }
+            record_fallback(counters);
+            sort_seq(v, ctx, &T::radix_less);
+            return;
+        }
+        CdfFit::Skewed => {
+            record_fallback(counters);
+            sort_seq(v, ctx, &T::radix_less);
+            return;
+        }
+    };
+    let map = CdfMap::new(model);
+    let bounds = distribute_seq(v, ctx, &map, &T::radix_less, true);
+    let base = ctx.cfg.base_case_size;
+    for i in 0..bounds.len() - 1 {
+        let (s, e) = (bounds[i], bounds[i + 1]);
+        if e - s <= base {
+            continue; // eager-sorted during cleanup
+        }
+        if e - s == n {
+            // The sample fit passed but the full data still collapsed
+            // into one bucket — recursing would re-fit the same range
+            // forever. Hand it to the comparison classifier instead.
+            record_fallback(counters);
+            sort_seq(&mut v[s..e], ctx, &T::radix_less);
+        } else {
+            sort_cdf_seq(&mut v[s..e], ctx, counters);
+        }
+    }
+}
+
+/// Convenience one-shot: allocate a context and CDF-sort sequentially.
+pub fn sort_cdf<T: RadixKey>(v: &mut [T], cfg: &Config) {
+    let mut ctx = SeqContext::new(cfg.clone(), 0x5EED_0004 ^ v.len() as u64);
+    sort_cdf_seq(v, &mut ctx, None);
+}
+
+// ---------------------------------------------------------------------------
+// Parallel driver
+// ---------------------------------------------------------------------------
+
+/// Sort `v` with the parallel learned-CDF distribution sort, reusing
+/// caller-provided scratch. Mirrors the radix driver: big subproblems
+/// are distributed cooperatively, the remaining small ones are
+/// LPT-binned and CDF-sorted sequentially in parallel, and
+/// fallback ranges are comparison-sorted on the same pool at the end.
+pub fn sort_cdf_par_with<T: RadixKey>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    scratch: &mut ParScratch<T>,
+    counters: Option<&ScratchCounters>,
+) {
+    let t = pool.threads();
+    let n = v.len();
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+    assert!(
+        scratch.threads() >= t,
+        "scratch built for {} threads, pool has {t}",
+        scratch.threads()
+    );
+    let min_parallel = (4 * t * block).max(1 << 13);
+    if t == 1 || n < min_parallel {
+        sort_cdf_seq(v, scratch.leader_ctx(), counters);
+        return;
+    }
+
+    let threshold = cfg.parallel_task_min(n).max(min_parallel);
+    let base = cfg.base_case_size;
+    // Ranges the model could not split (degenerate fit or a one-bucket
+    // pass): comparison-sorted after the CDF phases release the scratch.
+    let mut fallback: Vec<(usize, usize)> = Vec::new();
+
+    {
+        let (ctxs, pointers, overflow) = scratch.parts();
+        let mut big: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut small: Vec<(usize, usize)> = Vec::new();
+        big.push_back((0, n));
+
+        while let Some((s, e)) = big.pop_front() {
+            let sub = &mut v[s..e];
+            let model = match fit_range(sub, crate::radix::capped_fanout(e - s, cfg)) {
+                CdfFit::Fitted(m) => m,
+                CdfFit::SingleKey => {
+                    // Scan the true range with the whole pool (the
+                    // subrange here is at least `threshold` elements).
+                    let (min, max) = crate::radix::key_range_par(sub, pool);
+                    if !(min == max && T::COMPLETE) {
+                        record_fallback(counters);
+                        fallback.push((s, e));
+                    }
+                    continue;
+                }
+                CdfFit::Skewed => {
+                    record_fallback(counters);
+                    fallback.push((s, e));
+                    continue;
+                }
+            };
+            let map = CdfMap::new(model);
+            let bounds =
+                distribute_parallel(sub, cfg, pool, ctxs, pointers, overflow, &map, &T::radix_less);
+            for i in 0..bounds.len() - 1 {
+                let (cs, ce) = (s + bounds[i], s + bounds[i + 1]);
+                let len = ce - cs;
+                if len <= base && cfg.eager_base_case {
+                    continue; // eager-sorted during cleanup
+                }
+                if len < 2 {
+                    continue;
+                }
+                if len == e - s {
+                    // One-bucket pass: no progress possible here.
+                    record_fallback(counters);
+                    fallback.push((cs, ce));
+                } else if len >= threshold {
+                    big.push_back((cs, ce));
+                } else {
+                    small.push((cs, ce));
+                }
+            }
+        }
+
+        // --- Small-task phase: LPT assignment, sequential CDF sort ---
+        let bins = lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
+        let arr = SharedSlice::new(v);
+        let bins = &bins;
+        pool.run(|tid| {
+            // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
+            // ranges produced by the partitioning.
+            let ctx = unsafe { ctxs.get_mut(tid) };
+            for &(s, e) in &bins[tid] {
+                let slice = unsafe { arr.slice_mut(s, e) };
+                sort_cdf_seq(slice, ctx, counters);
+            }
+        });
+    }
+
+    // --- Fallback ranges: comparison IPS⁴o on the same pool ---
+    for (s, e) in fallback {
+        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{gen_bytes100, gen_f64, gen_pair, gen_quartet, gen_u64, Distribution};
+    use crate::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Quartet, Xoshiro256};
+
+    #[test]
+    fn fit_uniform_sample_is_balanced_and_monotone() {
+        let mut rng = Xoshiro256::new(0xCDF1);
+        let mut sample: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+        sample.sort_unstable();
+        let k = 64usize;
+        let CdfFit::Fitted(m) = CdfModel::fit(&sample, k) else {
+            panic!("uniform sample must fit");
+        };
+        assert_eq!(m.num_buckets(), k);
+        // Endpoints cover the bucket range.
+        assert_eq!(m.bucket_of_key(sample[0]), 0);
+        assert_eq!(m.bucket_of_key(*sample.last().unwrap()), k - 1);
+        // Monotone over a random key sweep (including out-of-range keys).
+        let mut keys: Vec<u64> = (0..4000).map(|_| rng.next_u64()).collect();
+        keys.push(0);
+        keys.push(u64::MAX);
+        keys.sort_unstable();
+        let mut last = 0usize;
+        for key in keys {
+            let b = m.bucket_of_key(key);
+            assert!(b >= last, "not monotone at {key}");
+            assert!(b < k);
+            last = b;
+        }
+        // Balanced on its own sample: no bucket above the skew cap.
+        let mut hist = vec![0u32; k];
+        for &s in &sample {
+            hist[m.bucket_of_key(s)] += 1;
+        }
+        let max = *hist.iter().max().unwrap();
+        assert!((max as f64) <= CDF_MAX_BUCKET_SHARE * sample.len() as f64);
+    }
+
+    #[test]
+    fn fit_detects_single_key_and_skew() {
+        assert!(matches!(CdfModel::fit(&[], 16), CdfFit::SingleKey));
+        assert!(matches!(CdfModel::fit(&[7], 16), CdfFit::SingleKey));
+        assert!(matches!(CdfModel::fit(&[7; 100], 16), CdfFit::SingleKey));
+        // 90% of the sample on one key: must be rejected as skewed.
+        let mut sample = vec![5u64; 90];
+        sample.extend(1000..1010u64);
+        sample.sort_unstable();
+        assert!(matches!(CdfModel::fit(&sample, 16), CdfFit::Skewed));
+    }
+
+    #[test]
+    fn boundary_keys_invert_the_bucket_mapping() {
+        let mut rng = Xoshiro256::new(0xB0DA);
+        for trial in 0..20 {
+            let mut sample: Vec<u64> = (0..200)
+                .map(|_| rng.next_below(1 << (8 + trial % 40)))
+                .collect();
+            sample.sort_unstable();
+            let k = 16usize;
+            let CdfFit::Fitted(m) = CdfModel::fit(&sample, k) else {
+                continue;
+            };
+            for b in 1..k {
+                let s = m.boundary_key(b);
+                assert!(m.bucket_of_key(s) >= b);
+                if s > 0 {
+                    assert!(m.bucket_of_key(s - 1) < b, "boundary {b} not minimal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_seq_sorts_all_distributions() {
+        let cfg = Config::default();
+        for d in Distribution::ALL {
+            for n in [0usize, 1, 2, 255, 256, 257, 1000, 30_000] {
+                let mut v = gen_u64(d, n, 77);
+                let fp = multiset_fingerprint(&v, |x| *x);
+                sort_cdf(&mut v, &cfg);
+                assert!(is_sorted_by(&v, |a, b| a < b), "{} n={n}", d.name());
+                assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{} n={n}", d.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_seq_composite_types() {
+        let cfg = Config::default();
+
+        let mut f = gen_f64(Distribution::Exponential, 20_000, 3);
+        sort_cdf(&mut f, &cfg);
+        assert!(is_sorted_by(&f, |a, b| a < b));
+
+        let mut p = gen_pair(Distribution::Zipf, 20_000, 3);
+        let key = |x: &Pair| x.key.to_bits() ^ x.value.to_bits().rotate_left(32);
+        let fp = multiset_fingerprint(&p, key);
+        sort_cdf(&mut p, &cfg);
+        assert!(is_sorted_by(&p, Pair::less));
+        assert_eq!(fp, multiset_fingerprint(&p, key));
+
+        // Quartet/Bytes100: the radix key is only a prefix; ties within
+        // a prefix-equal range resolve through the comparison fallback.
+        let mut q = gen_quartet(Distribution::TwoDup, 20_000, 3);
+        sort_cdf(&mut q, &cfg);
+        assert!(is_sorted_by(&q, Quartet::less));
+
+        let mut b = gen_bytes100(Distribution::Zipf, 5_000, 3);
+        sort_cdf(&mut b, &cfg);
+        assert!(is_sorted_by(&b, Bytes100::less));
+    }
+
+    #[test]
+    fn cdf_parallel_matches_sequential() {
+        let cfg = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<u64>::new(&cfg, 4);
+        for d in Distribution::ALL {
+            let base = gen_u64(d, 120_000, 9);
+            let mut a = base.clone();
+            let mut b = base;
+            sort_cdf(&mut a, &Config::default());
+            sort_cdf_par_with(&mut b, &cfg, &pool, &mut scratch, None);
+            assert_eq!(a, b, "{}", d.name());
+        }
+    }
+
+    /// 90% of the elements share one key, the rest spread wide — the
+    /// root fit must degenerate (a stride-aliased sample sees only the
+    /// atom → `SingleKey` over a varying range; an unaliased one fails
+    /// the skew check), forcing the comparison fallback either way.
+    fn skewed_input(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|i| if i % 10 == 9 { rng.next_u64() | 1 } else { 0 })
+            .collect()
+    }
+
+    #[test]
+    fn cdf_fallback_counter_increments_on_degenerate_input() {
+        let counters = ScratchCounters::new();
+        let cfg = Config::default();
+        let mut ctx = SeqContext::<u64>::new(cfg.clone(), 1);
+        // Heavily skewed keys: the fit rejects itself, comparison takes
+        // over, and the fallback counter records it.
+        let mut v = skewed_input(10_000, 1);
+        sort_cdf_seq(&mut v, &mut ctx, Some(&counters));
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert!(counters.snapshot().cdf_fallbacks >= 1);
+        // Constant complete keys are already key-equivalent throughout:
+        // no work, and *not* a fallback.
+        counters.reset();
+        let mut v = gen_u64(Distribution::Ones, 10_000, 1);
+        sort_cdf_seq(&mut v, &mut ctx, Some(&counters));
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(counters.snapshot().cdf_fallbacks, 0);
+        // A clean uniform input must not add fallbacks either.
+        let mut v = gen_u64(Distribution::Uniform, 30_000, 2);
+        sort_cdf_seq(&mut v, &mut ctx, Some(&counters));
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(counters.snapshot().cdf_fallbacks, 0);
+    }
+
+    #[test]
+    fn cdf_reuses_scratch_geometry_across_configs() {
+        for (k, bb, n0) in [(4usize, 64usize, 4usize), (8, 128, 8), (2, 16, 1)] {
+            let cfg = Config::default()
+                .with_max_buckets(k)
+                .with_block_bytes(bb)
+                .with_base_case(n0);
+            let mut v = gen_u64(Distribution::Zipf, 3_000, 13);
+            let fp = multiset_fingerprint(&v, |x| *x);
+            sort_cdf(&mut v, &cfg);
+            assert!(is_sorted_by(&v, |a, b| a < b), "k={k} bb={bb}");
+            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        }
+    }
+
+    #[test]
+    fn cdf_negative_zero_agrees_with_comparison() {
+        let mut rng = Xoshiro256::new(11);
+        let mut v: Vec<f64> = (0..10_000)
+            .map(|i| match i % 4 {
+                0 => -0.0,
+                1 => 0.0,
+                2 => -rng.next_f64(),
+                _ => rng.next_f64(),
+            })
+            .collect();
+        let fp = multiset_fingerprint(&v, |x| x.to_bits());
+        let mut expected = v.clone();
+        expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_cdf(&mut v, &Config::default());
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(fp, multiset_fingerprint(&v, |x| x.to_bits()));
+        assert!(v
+            .iter()
+            .zip(&expected)
+            .all(|(a, b)| a == b || (*a == 0.0 && *b == 0.0)));
+    }
+}

@@ -1,8 +1,8 @@
 //! The cost model: turn a [`Fingerprint`] (and, for radix-keyed types,
 //! [`KeyStats`]) into a [`SortPlan`].
 //!
-//! The rules are deliberately simple, threshold-based, and documented —
-//! a learned-CDF model is a ROADMAP follow-on. Rationale per rule:
+//! The rules are deliberately simple, threshold-based, and documented.
+//! Rationale per rule:
 //!
 //! * **Base case** — at or below `n₀` nothing beats insertion sort.
 //! * **Run merge** — when nearly every probed adjacent pair is ordered
@@ -10,11 +10,18 @@
 //!   runs; detecting and merging them is `O(n)`–`O(n log r)`, far below
 //!   a full distribution sort ("Towards Parallel Learned Sorting"
 //!   observes the same for its run-adaptive candidates).
-//! * **Radix** — worthwhile when the keys carry enough entropy that a
-//!   digit pass splits effectively (≈ one byte's worth) and the input is
-//!   large enough to amortize the extra min/max scan; duplicate-heavy
-//!   inputs stay with IPS⁴o, whose equality buckets finish them in one
-//!   pass (IPS²Ra's weak spot per the 2020 paper's measurements).
+//! * **Radix / learned CDF** — a digit-style pass is worthwhile when the
+//!   keys carry enough entropy that it splits effectively (≈ one byte's
+//!   worth) and the input is large enough to amortize the scan;
+//!   duplicate-heavy inputs stay with IPS⁴o, whose equality buckets
+//!   finish them in one pass (IPS²Ra's weak spot per the 2020 paper's
+//!   measurements). Within that gate, the *shape* of the top varying
+//!   byte lane decides the flavor: a near-uniform lane means plain digit
+//!   windows ([`Backend::Radix`]) already balance their buckets, while a
+//!   skewed lane (Zipf, Exponential — heavy-tailed keys) would give the
+//!   digit map lopsided buckets and deep recursion, which is exactly
+//!   what the sample-fitted CDF classifier ([`Backend::CdfSort`],
+//!   [`crate::planner::cdf`]) corrects for.
 //! * **Parallel vs sequential IPS⁴o** — the scheduler's own viability
 //!   bound: at least a few blocks of work per thread.
 
@@ -32,6 +39,12 @@ pub const MIN_RADIX_ENTROPY_BITS: f64 = 8.0;
 pub const MIN_RADIX_N: usize = 1 << 12;
 /// Duplicate-neighbor ratio above which equality buckets beat digits.
 pub const MAX_RADIX_DUP_RATIO: f64 = 0.5;
+/// Top-varying-lane entropy (bits) at or below which the learned CDF
+/// classifier is preferred over plain radix digits: a skewed top lane
+/// means skewed digit buckets, which the sample-fitted CDF equalizes.
+/// A uniform byte lane carries ~7.2 empirical bits at the 256-key probe
+/// budget, so 6.0 cleanly separates uniform from heavy-tailed lanes.
+pub const MAX_CDF_LANE_ENTROPY_BITS: f64 = 6.0;
 
 /// True when a cooperative parallel pass can pay for itself — the same
 /// bound the parallel scheduler uses for its sequential fallback.
@@ -87,6 +100,12 @@ pub fn plan_keys<T: RadixKey>(v: &[T], cfg: &Config) -> SortPlan {
     if fp.n >= MIN_RADIX_N && fp.dup_ratio <= MAX_RADIX_DUP_RATIO {
         let ks = key_stats(v);
         if ks.entropy_bits >= MIN_RADIX_ENTROPY_BITS && ks.key_min < ks.key_max {
+            if ks.top_lane_entropy <= MAX_CDF_LANE_ENTROPY_BITS {
+                return SortPlan {
+                    backend: Backend::CdfSort,
+                    reason: "wide-entropy keys with skewed byte lanes, learned CDF",
+                };
+            }
             return SortPlan {
                 backend: Backend::Radix,
                 reason: "wide-entropy keys, low duplication",
@@ -145,6 +164,23 @@ mod tests {
         assert_eq!(plan_keys(&v, &cfg).backend, Backend::Radix);
         // Comparator-only path cannot use radix.
         assert_eq!(plan_by(&v, &cfg, &lt).backend, Backend::Ips4oPar);
+    }
+
+    #[test]
+    fn skewed_keys_route_to_cdf() {
+        // Zipf: log-uniform keys — the top varying byte lane is nearly
+        // constant, so digit windows would be lopsided.
+        let cfg = Config::default().with_threads(4);
+        let v = gen_u64(Distribution::Zipf, 100_000, 7);
+        let p = plan_keys(&v, &cfg);
+        assert_eq!(p.backend, Backend::CdfSort, "{p:?}");
+        // Exponential at a size where the tail spans several byte lanes.
+        let v = gen_u64(Distribution::Exponential, 300_000, 8);
+        let p = plan_keys(&v, &cfg);
+        assert_eq!(p.backend, Backend::CdfSort, "{p:?}");
+        // The comparator-only menu still has no CDF backend.
+        let v = gen_u64(Distribution::Zipf, 100_000, 7);
+        assert_ne!(plan_by(&v, &cfg, &lt).backend, Backend::CdfSort);
     }
 
     #[test]

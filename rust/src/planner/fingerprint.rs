@@ -115,6 +115,14 @@ pub struct KeyStats {
     /// sampled radix keys — roughly how many key bits a radix sort can
     /// usefully split on.
     pub entropy_bits: f64,
+    /// Shannon entropy (bits) of the most significant byte lane that
+    /// *varies* across the sample. A radix digit pass extracts its
+    /// window just below the top varying bit, so this lane's skew is a
+    /// direct proxy for how unbalanced that pass's buckets will be —
+    /// low values (heavy-tailed key distributions like Zipf or
+    /// Exponential) are where the learned CDF classifier
+    /// ([`crate::planner::cdf`]) pays off. `8.0` when no lane varies.
+    pub top_lane_entropy: f64,
     /// Smallest sampled radix key.
     pub key_min: u64,
     /// Largest sampled radix key.
@@ -127,6 +135,7 @@ pub fn key_stats<T: RadixKey>(v: &[T]) -> KeyStats {
     if n == 0 {
         return KeyStats {
             entropy_bits: 0.0,
+            top_lane_entropy: 8.0,
             key_min: 0,
             key_max: 0,
         };
@@ -149,16 +158,28 @@ pub fn key_stats<T: RadixKey>(v: &[T]) -> KeyStats {
         i += stride;
     }
     let mut entropy_bits = 0.0f64;
-    for h in &hist {
+    let mut lane_entropy = [0.0f64; 8];
+    let mut lane_varies = [false; 8];
+    for (lane, h) in hist.iter().enumerate() {
+        let mut nonzero = 0usize;
         for &c in h.iter() {
             if c > 0 {
+                nonzero += 1;
                 let p = c as f64 / count as f64;
-                entropy_bits -= p * p.log2();
+                lane_entropy[lane] -= p * p.log2();
             }
         }
+        lane_varies[lane] = nonzero > 1;
+        entropy_bits += lane_entropy[lane];
     }
+    let top_lane_entropy = (0..8usize)
+        .rev()
+        .find(|&lane| lane_varies[lane])
+        .map(|lane| lane_entropy[lane])
+        .unwrap_or(8.0);
     KeyStats {
         entropy_bits,
+        top_lane_entropy,
         key_min,
         key_max,
     }
@@ -230,6 +251,20 @@ mod tests {
         let ks = key_stats(&v);
         assert!(ks.entropy_bits < 16.0, "{ks:?}");
         assert!(ks.key_max < 256, "RootDup keys fit one byte at n=30k");
+    }
+
+    #[test]
+    fn top_lane_entropy_separates_uniform_from_skewed() {
+        // Uniform u64: the top byte lane is itself uniform — near 8 bits.
+        let v = gen_u64(Distribution::Uniform, 50_000, 4);
+        assert!(key_stats(&v).top_lane_entropy > 6.0, "{:?}", key_stats(&v));
+        // Zipf: log-uniform keys make the top varying lane nearly
+        // constant (most keys live far below the max).
+        let v = gen_u64(Distribution::Zipf, 100_000, 4);
+        assert!(key_stats(&v).top_lane_entropy < 4.0, "{:?}", key_stats(&v));
+        // Constant keys: no lane varies; reported as neutral 8.0.
+        let v = gen_u64(Distribution::Ones, 10_000, 4);
+        assert_eq!(key_stats(&v).top_lane_entropy, 8.0);
     }
 
     #[test]

@@ -10,11 +10,16 @@
 //! assume — "Towards Parallel Learned Sorting" (Carvalho 2022) makes
 //! the same case for distribution-aware strategy selection.
 //!
-//! Three pieces:
+//! Four pieces:
 //! * [`fingerprint`] — cheap, deterministic, non-mutating probes:
-//!   presortedness, duplicate density, key-byte entropy;
+//!   presortedness, duplicate density, key-byte entropy (total and of
+//!   the top varying lane);
 //! * [`cost_model`] — threshold rules mapping a fingerprint to a
 //!   [`SortPlan`] (see that module for the rationale per rule);
+//! * [`cdf`] — the learned CDF classifier ([`Backend::CdfSort`]): a
+//!   sample-fitted monotone piecewise-linear CDF whose bucket mapping
+//!   costs two multiplies and a clamp, for heavy-tailed key
+//!   distributions where fixed digit windows go lopsided;
 //! * [`backend`] — the [`Backend`] registry, the [`PlannerMode`]
 //!   override knob carried by [`Config`](crate::Config), and the
 //!   run-merge backend implementation.
@@ -43,9 +48,11 @@
 //! ```
 
 pub mod backend;
+pub mod cdf;
 pub mod cost_model;
 pub mod fingerprint;
 
 pub use backend::{run_merge_sort, Backend, PlannerMode, SortPlan};
+pub use cdf::{fit_range, sort_cdf, sort_cdf_par_with, sort_cdf_seq, CdfFit, CdfModel};
 pub use cost_model::{parallel_viable, plan_by, plan_keys};
 pub use fingerprint::{fingerprint_by, key_stats, Fingerprint, KeyStats};

@@ -241,14 +241,18 @@ impl<T: RadixKey> BucketMap<T> for DigitMap {
     }
 }
 
-/// Bucket count for a radix pass on `n` elements: the adaptive IPS⁴o
-/// policy (§4.7) capped at 256 — at most one byte per level.
-fn radix_fanout(n: usize, cfg: &Config) -> usize {
+/// Bucket count for a radix or CDF pass on `n` elements: the adaptive
+/// IPS⁴o policy (§4.7) capped at 256 — at most one byte per digit
+/// level, and the CDF fit's histogram bound. Shared with
+/// [`crate::planner::cdf`].
+pub(crate) fn capped_fanout(n: usize, cfg: &Config) -> usize {
     cfg.buckets_for(n).min(256).max(2)
 }
 
-/// Min/max radix key of `v` by sequential scan.
-fn key_range<T: RadixKey>(v: &[T]) -> (u64, u64) {
+/// Min/max radix key of `v` by sequential scan. Shared with the
+/// learned-CDF backend ([`crate::planner::cdf`]), whose degenerate
+/// single-key-sample path scans the true range the same way.
+pub(crate) fn key_range<T: RadixKey>(v: &[T]) -> (u64, u64) {
     let mut min = u64::MAX;
     let mut max = 0u64;
     for e in v {
@@ -260,7 +264,9 @@ fn key_range<T: RadixKey>(v: &[T]) -> (u64, u64) {
 }
 
 /// Min/max radix key of `v`, scanned by all pool threads over stripes.
-fn key_range_par<T: RadixKey>(v: &mut [T], pool: &ThreadPool) -> (u64, u64) {
+/// Shared with the learned-CDF backend's parallel degenerate-sample
+/// check ([`crate::planner::cdf`]).
+pub(crate) fn key_range_par<T: RadixKey>(v: &mut [T], pool: &ThreadPool) -> (u64, u64) {
     let t = pool.threads();
     let n = v.len();
     let bounds = stripes(n, t, 1);
@@ -307,7 +313,7 @@ pub fn sort_radix_seq<T: RadixKey>(v: &mut [T], ctx: &mut SeqContext<T>) {
         }
         return;
     }
-    let map = DigitMap::new(min, max, radix_fanout(n, &ctx.cfg));
+    let map = DigitMap::new(min, max, capped_fanout(n, &ctx.cfg));
     let bounds = distribute_seq(v, ctx, &map, &T::radix_less, true);
     let base = ctx.cfg.base_case_size;
     for i in 0..bounds.len() - 1 {
@@ -374,7 +380,7 @@ pub fn sort_radix_par_with<T: RadixKey>(
                 }
                 continue;
             }
-            let map = DigitMap::new(min, max, radix_fanout(e - s, cfg));
+            let map = DigitMap::new(min, max, capped_fanout(e - s, cfg));
             let bounds = distribute_parallel(
                 sub,
                 cfg,

@@ -47,7 +47,10 @@ use crate::base_case::insertion_sort;
 use crate::config::Config;
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
-use crate::planner::{plan_by, plan_keys, run_merge_sort, Backend, PlannerMode, SortPlan};
+use crate::planner::{
+    plan_by, plan_keys, run_merge_sort, sort_cdf_par_with, sort_cdf_seq, Backend, PlannerMode,
+    SortPlan,
+};
 use crate::radix::{sort_radix_par_with, sort_radix_seq, RadixKey};
 use crate::sequential::{sort_seq, SeqContext};
 use crate::task_scheduler::{sort_parallel_with, ParScratch};
@@ -172,8 +175,8 @@ where
 
 /// The comparison-menu routing decision for a service job. `parallel_ok`
 /// is false on the batch path (the job already runs on a worker thread)
-/// and true on the dispatcher's large-job path. Forced radix degrades to
-/// IPS⁴o — a bare comparator has no radix key.
+/// and true on the dispatcher's large-job path. Forced radix/CDF
+/// degrades to IPS⁴o — a bare comparator has no radix key.
 fn resolve_cmp_plan<T, F>(
     core: &ServiceCore,
     data: &[T],
@@ -196,8 +199,8 @@ where
         },
     };
     plan.backend = match plan.backend {
-        Backend::Radix | Backend::Ips4oPar if !parallel_ok => Backend::Ips4oSeq,
-        Backend::Radix => Backend::Ips4oPar,
+        Backend::Radix | Backend::CdfSort | Backend::Ips4oPar if !parallel_ok => Backend::Ips4oSeq,
+        Backend::Radix | Backend::CdfSort => Backend::Ips4oPar,
         b => b,
     };
     plan
@@ -376,6 +379,9 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                 Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
                 Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less),
                 Backend::Radix => sort_radix_seq(&mut data, &mut ctx),
+                Backend::CdfSort => {
+                    sort_cdf_seq(&mut data, &mut ctx, Some(core.counters.as_ref()))
+                }
                 _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
             }
         }));
@@ -404,7 +410,7 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
         };
         core.counters.record_backend(plan.backend);
         match plan.backend {
-            Backend::Ips4oPar | Backend::Radix => {
+            Backend::Ips4oPar | Backend::Radix | Backend::CdfSort => {
                 let mut scratch = core
                     .arenas
                     .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
@@ -413,16 +419,24 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                         scratch.compatible_with(&core.cfg),
                         "recycled arena geometry mismatch"
                     );
-                    if plan.backend == Backend::Radix {
-                        sort_radix_par_with(&mut data, &core.cfg, &core.pool, &mut scratch);
-                    } else {
-                        sort_parallel_with(
+                    match plan.backend {
+                        Backend::Radix => {
+                            sort_radix_par_with(&mut data, &core.cfg, &core.pool, &mut scratch)
+                        }
+                        Backend::CdfSort => sort_cdf_par_with(
+                            &mut data,
+                            &core.cfg,
+                            &core.pool,
+                            &mut scratch,
+                            Some(core.counters.as_ref()),
+                        ),
+                        _ => sort_parallel_with(
                             &mut data,
                             &core.cfg,
                             &core.pool,
                             &mut scratch,
                             &T::radix_less,
-                        );
+                        ),
                     }
                 }));
                 match outcome {

@@ -136,8 +136,9 @@ impl Sorter {
                 reason: "planner disabled",
             },
         };
-        if plan.backend == Backend::Radix {
-            self.arenas.counters().record_backend(Backend::Radix);
+        if matches!(plan.backend, Backend::Radix | Backend::CdfSort) {
+            self.arenas.counters().record_backend(plan.backend);
+            let counters: &crate::metrics::ScratchCounters = self.arenas.counters().as_ref();
             match &self.pool {
                 Some(pool) => {
                     let mut scratch = self
@@ -147,7 +148,17 @@ impl Sorter {
                         scratch.compatible_with(&self.cfg),
                         "recycled arena geometry mismatch"
                     );
-                    crate::radix::sort_radix_par_with(v, &self.cfg, pool, &mut scratch);
+                    if plan.backend == Backend::Radix {
+                        crate::radix::sort_radix_par_with(v, &self.cfg, pool, &mut scratch);
+                    } else {
+                        crate::planner::sort_cdf_par_with(
+                            v,
+                            &self.cfg,
+                            pool,
+                            &mut scratch,
+                            Some(counters),
+                        );
+                    }
                     self.arenas.checkin(scratch);
                 }
                 None => {
@@ -155,7 +166,11 @@ impl Sorter {
                         .arenas
                         .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
                     assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
-                    crate::radix::sort_radix_seq(v, &mut ctx);
+                    if plan.backend == Backend::Radix {
+                        crate::radix::sort_radix_seq(v, &mut ctx);
+                    } else {
+                        crate::planner::sort_cdf_seq(v, &mut ctx, Some(counters));
+                    }
                     self.arenas.checkin(ctx);
                 }
             }
@@ -173,16 +188,16 @@ impl Sorter {
     }
 
     /// Execute a comparison-menu plan, recording the routing decision.
-    /// [`Backend::Radix`] (reachable only via `Force` on a comparator
-    /// job) degrades to IPS⁴o.
+    /// [`Backend::Radix`] / [`Backend::CdfSort`] (reachable only via
+    /// `Force` on a comparator job) degrade to IPS⁴o.
     fn execute_cmp<T, F>(&self, v: &mut [T], is_less: &F, plan: SortPlan)
     where
         T: Element,
         F: Fn(&T, &T) -> bool + Sync,
     {
         let backend = match (plan.backend, &self.pool) {
-            (Backend::Radix, Some(_)) => Backend::Ips4oPar,
-            (Backend::Radix, None) => Backend::Ips4oSeq,
+            (Backend::Radix | Backend::CdfSort, Some(_)) => Backend::Ips4oPar,
+            (Backend::Radix | Backend::CdfSort, None) => Backend::Ips4oSeq,
             (Backend::Ips4oPar, None) => Backend::Ips4oSeq,
             (b, _) => b,
         };
@@ -207,9 +222,9 @@ impl Sorter {
                 crate::sequential::sort_seq(v, &mut ctx, is_less);
                 self.arenas.checkin(ctx);
             }
-            Backend::Ips4oPar | Backend::Radix => {
-                // Radix is rewritten above; only Ips4oPar reaches here,
-                // and only with a live pool.
+            Backend::Ips4oPar | Backend::Radix | Backend::CdfSort => {
+                // Radix/CdfSort are rewritten above; only Ips4oPar
+                // reaches here, and only with a live pool.
                 let pool = self.pool.as_ref().expect("parallel plan without a pool");
                 let mut scratch = self
                     .arenas
@@ -321,13 +336,38 @@ mod tests {
         s.sort_keys(&mut sorted); // nearly sorted → run merge
         assert!(is_sorted_by(&sorted, |a, b| a < b));
         let mut uniform = gen_u64(Distribution::Uniform, 100_000, 1);
-        s.sort_keys(&mut uniform); // wide-entropy keys → radix
+        s.sort_keys(&mut uniform); // wide-entropy uniform keys → radix
         assert!(is_sorted_by(&uniform, |a, b| a < b));
+        let mut zipf = gen_u64(Distribution::Zipf, 100_000, 1);
+        s.sort_keys(&mut zipf); // heavy-tailed keys → learned CDF
+        assert!(is_sorted_by(&zipf, |a, b| a < b));
         let m = s.scratch_metrics();
         assert_eq!(m.backend_count(Backend::RunMerge), 1);
         assert_eq!(m.backend_count(Backend::Radix), 1);
-        assert!(m.distinct_backends() >= 2);
-        assert_eq!(m.elements_sorted, 120_000);
+        assert_eq!(m.backend_count(Backend::CdfSort), 1);
+        assert!(m.distinct_backends() >= 3);
+        assert_eq!(m.elements_sorted, 220_000);
+    }
+
+    #[test]
+    fn forced_cdf_on_skewed_input_counts_fallbacks() {
+        use crate::planner::{Backend, PlannerMode};
+        use crate::util::Xoshiro256;
+        let s = Sorter::new(Config::default().with_planner(PlannerMode::Force(Backend::CdfSort)));
+        // ~90% duplicate atom + thin wide tail: the strided sample
+        // degenerates (single-key or skew-rejected), so the comparison
+        // classifier takes over.
+        let mut rng = Xoshiro256::new(3);
+        let mut v: Vec<u64> = (0..20_000)
+            .map(|i| if i % 10 == 9 { rng.next_u64() | 1 } else { 0 })
+            .collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        s.sort_keys(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        let m = s.scratch_metrics();
+        assert_eq!(m.backend_count(Backend::CdfSort), 1);
+        assert!(m.cdf_fallbacks >= 1, "skewed fit must fall back");
     }
 
     #[test]

@@ -1,0 +1,5 @@
+//! Shared helpers for the integration test binaries. Each suite pulls
+//! this in with `mod common;` — the pieces it does not use are
+//! legitimately dead in that binary.
+#[allow(dead_code)]
+pub mod oracle;

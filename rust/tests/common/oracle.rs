@@ -1,0 +1,149 @@
+//! The shared test oracle: one implementation of the three sort
+//! assertions every integration suite used to hand-roll —
+//!
+//! 1. **sorted** under the type's comparator;
+//! 2. **multiset preserved** (no element lost, duplicated, or torn),
+//!    via the order-independent fingerprint from `ips4o::util`;
+//! 3. **key-equivalent to the std reference** position by position
+//!    (our sorts are unstable, so payload order may differ inside
+//!    equal-key runs).
+//!
+//! — plus seeded-RNG replay: every randomized test draws its seed
+//! through [`seeded`], which honors the `IPS4O_TEST_SEED` environment
+//! variable and, on failure, prints a one-line command that replays the
+//! exact run.
+
+use std::cmp::Ordering;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+use ips4o::util::multiset_fingerprint;
+
+// ---------------------------------------------------------------------------
+// Seeded replay
+// ---------------------------------------------------------------------------
+
+/// The seed a randomized test should use: `IPS4O_TEST_SEED` when set
+/// (decimal or `0x`-prefixed hex), else the test's own default.
+pub fn test_seed(default: u64) -> u64 {
+    match std::env::var("IPS4O_TEST_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            parsed.unwrap_or_else(|_| panic!("IPS4O_TEST_SEED={s:?} is not a u64"))
+        }
+        Err(_) => default,
+    }
+}
+
+/// The test binary's suite name (`differential`, `property_tests`, …),
+/// recovered from the executable path for the replay command.
+fn suite_name() -> String {
+    let stem = std::env::current_exe()
+        .ok()
+        .and_then(|p| p.file_stem().map(|s| s.to_string_lossy().into_owned()))
+        .unwrap_or_else(|| "<suite>".into());
+    // Cargo names test binaries `<suite>-<hash>`; strip the hash.
+    if let Some((name, hash)) = stem.rsplit_once('-') {
+        if !hash.is_empty() && hash.chars().all(|c| c.is_ascii_hexdigit()) {
+            return name.to_string();
+        }
+    }
+    stem
+}
+
+/// Run a randomized test body with a replayable seed. On panic, prints
+/// the one-line repro command before re-raising, e.g.:
+///
+/// ```text
+/// replay: IPS4O_TEST_SEED=1234 cargo test --test differential differential_u64 -- --test-threads=1
+/// ```
+pub fn seeded(test_name: &str, default_seed: u64, body: impl FnOnce(u64)) {
+    let seed = test_seed(default_seed);
+    if let Err(panic) = catch_unwind(AssertUnwindSafe(|| body(seed))) {
+        eprintln!(
+            "replay: IPS4O_TEST_SEED={seed} cargo test --test {} {test_name} -- --test-threads=1",
+            suite_name()
+        );
+        resume_unwind(panic);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sort oracle
+// ---------------------------------------------------------------------------
+
+/// Captured pre-sort state of one input: its multiset fingerprint and
+/// the std-sorted reference sequence. One capture serves any number of
+/// algorithm runs over clones of the same input.
+pub struct SortCheck<T, K: Fn(&T) -> u64> {
+    fingerprint: u64,
+    expected: Vec<T>,
+    key: K,
+}
+
+impl<T: Copy, K: Fn(&T) -> u64> SortCheck<T, K> {
+    /// Fingerprint `input` under `key` and build the std reference with
+    /// `is_less`. `key` must fold in everything a torn element would
+    /// corrupt (key bits *and* payload bits where the type has them).
+    pub fn capture(input: &[T], is_less: impl Fn(&T, &T) -> bool, key: K) -> Self {
+        let fingerprint = multiset_fingerprint(input, &key);
+        let mut expected = input.to_vec();
+        expected.sort_by(|a, b| {
+            if is_less(a, b) {
+                Ordering::Less
+            } else if is_less(b, a) {
+                Ordering::Greater
+            } else {
+                Ordering::Equal
+            }
+        });
+        SortCheck {
+            fingerprint,
+            expected,
+            key,
+        }
+    }
+
+    /// The three oracle assertions against one algorithm's output.
+    /// `ctx` names the failing cell (algorithm, distribution, size, …).
+    pub fn assert_output(&self, output: &[T], is_less: impl Fn(&T, &T) -> bool, ctx: &str) {
+        assert_sorted(output, &is_less, ctx);
+        assert_eq!(
+            self.fingerprint,
+            multiset_fingerprint(output, &self.key),
+            "{ctx}: multiset changed (element lost, duplicated, or torn)"
+        );
+        assert_eq!(output.len(), self.expected.len(), "{ctx}: length changed");
+        assert!(
+            output
+                .iter()
+                .zip(&self.expected)
+                .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
+            "{ctx}: key sequence differs from std reference"
+        );
+    }
+}
+
+/// Assert `v` is sorted under `is_less` (strict weak order).
+pub fn assert_sorted<T>(v: &[T], is_less: impl Fn(&T, &T) -> bool, ctx: &str) {
+    assert!(v.windows(2).all(|w| !is_less(&w[1], &w[0])), "{ctx}: not sorted");
+}
+
+/// Assert `after` holds exactly the same multiset as `before` under the
+/// key projection — the lighter oracle for tests that do not need a std
+/// reference sequence.
+pub fn assert_same_multiset<T: Copy>(
+    before: &[T],
+    after: &[T],
+    key: impl Fn(&T) -> u64,
+    ctx: &str,
+) {
+    assert_eq!(
+        multiset_fingerprint(before, &key),
+        multiset_fingerprint(after, &key),
+        "{ctx}: multiset changed"
+    );
+}

@@ -1,24 +1,23 @@
 //! Differential test suite: every algorithm in `baselines/` plus
 //! sequential and parallel IPS⁴o — and, since the planner landed, the
-//! planner-routed and forced-radix drivers — checked against the
-//! standard library `slice::sort` on a shared corpus of all
+//! planner-routed, forced-radix, and forced-CDF drivers — checked
+//! against the standard library `slice::sort` on a shared corpus of all
 //! `datagen::Distribution`s × boundary-focused sizes
 //! {0, 1, 2, block−1, block, block+1, 30k} × all benchmark data types.
 //!
-//! Three assertions per (algorithm, distribution, size, type) cell:
-//! 1. output is sorted under the type's comparator;
-//! 2. the multiset fingerprint (keys *and* payloads) is preserved —
-//!    no element lost, duplicated, or torn;
-//! 3. the output is key-equivalent to the std reference sequence
-//!    position by position (our sorts are unstable, so payload order may
-//!    legitimately differ within equal-key runs).
+//! The three assertions per (algorithm, distribution, size, type) cell
+//! live in the shared oracle (`tests/common/oracle.rs`): sorted order,
+//! multiset fingerprint preserved, key-equivalence to the std reference
+//! position by position. Workload seeds flow through `oracle::seeded`,
+//! so a failure prints an `IPS4O_TEST_SEED=…` replay line.
 
-use std::cmp::Ordering;
+mod common;
 
+use common::oracle::{seeded, SortCheck};
 use ips4o::baselines::Algo;
 use ips4o::bench_harness::run_algo;
 use ips4o::datagen::{self, Distribution};
-use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Element, Pair, Quartet};
+use ips4o::util::{Bytes100, Element, Pair, Quartet};
 use ips4o::{Backend, Config, PlannerMode, RadixKey, Sorter};
 
 const ALGOS: [Algo; 12] = [
@@ -46,115 +45,83 @@ fn sizes(block: usize) -> [usize; 7] {
 
 /// Run the whole corpus for one element type.
 fn differential_for_type<T>(
-    type_name: &str,
+    test_name: &str,
     gen: impl Fn(Distribution, usize, u64) -> Vec<T>,
     key: impl Fn(&T) -> u64 + Copy,
     is_less: fn(&T, &T) -> bool,
 ) where
     T: Element,
 {
-    let cfg_seq = Config::default();
-    let cfg_par = Config::default().with_threads(4);
-    let block = cfg_seq.block_elems(std::mem::size_of::<T>());
-    for d in Distribution::ALL {
-        for n in sizes(block) {
-            let base = gen(d, n, 0xD1FF ^ n as u64);
-            let fp = multiset_fingerprint(&base, key);
-            let mut expected = base.clone();
-            expected.sort_by(|a, b| {
-                if is_less(a, b) {
-                    Ordering::Less
-                } else if is_less(b, a) {
-                    Ordering::Greater
-                } else {
-                    Ordering::Equal
+    seeded(test_name, 0xD1FF, |seed| {
+        let cfg_seq = Config::default();
+        let cfg_par = Config::default().with_threads(4);
+        let block = cfg_seq.block_elems(std::mem::size_of::<T>());
+        for d in Distribution::ALL {
+            for n in sizes(block) {
+                let base = gen(d, n, seed ^ n as u64);
+                let check = SortCheck::capture(&base, is_less, key);
+                for algo in ALGOS {
+                    let cfg = if algo.parallel() { &cfg_par } else { &cfg_seq };
+                    let mut v = base.clone();
+                    run_algo(algo, &mut v, cfg, &is_less);
+                    let ctx = format!("{} on {test_name}/{} n={n}", algo.name(), d.name());
+                    check.assert_output(&v, is_less, &ctx);
                 }
-            });
-            for algo in ALGOS {
-                let cfg = if algo.parallel() { &cfg_par } else { &cfg_seq };
-                let mut v = base.clone();
-                run_algo(algo, &mut v, cfg, &is_less);
-                let ctx = format!(
-                    "{} on {type_name}/{} n={n}",
-                    algo.name(),
-                    d.name()
-                );
-                assert!(is_sorted_by(&v, is_less), "{ctx}: not sorted");
-                assert_eq!(
-                    fp,
-                    multiset_fingerprint(&v, key),
-                    "{ctx}: multiset changed"
-                );
-                assert!(
-                    v.iter()
-                        .zip(&expected)
-                        .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
-                    "{ctx}: key sequence differs from std reference"
-                );
             }
         }
-    }
+    });
 }
 
-/// The keyed drivers: the planner's own choice (enabled by default) and
-/// the forced radix backend, each sequential and parallel, against the
-/// std reference — same three assertions as `differential_for_type`.
+/// The keyed drivers: the planner's own choice (enabled by default),
+/// the forced radix backend, and the forced learned-CDF backend, each
+/// sequential and parallel, against the std reference — the same three
+/// oracle assertions as `differential_for_type`. Zipf and SortedRuns
+/// are part of `Distribution::ALL`, so the CDF fit sees its hardest
+/// inputs here.
 fn differential_for_keys<T>(
-    type_name: &str,
+    test_name: &str,
     gen: impl Fn(Distribution, usize, u64) -> Vec<T>,
     key: impl Fn(&T) -> u64 + Copy,
 ) where
     T: RadixKey,
 {
-    let forced = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
-    let sorters = [
-        ("planner-seq", Sorter::new(Config::default())),
-        ("planner-par", Sorter::new(Config::default().with_threads(4))),
-        ("radix-seq", Sorter::new(forced.clone())),
-        ("radix-par", Sorter::new(forced.with_threads(4))),
-    ];
-    let is_less = T::radix_less;
-    let block = Config::default().block_elems(std::mem::size_of::<T>());
-    for d in Distribution::ALL {
-        for n in sizes(block) {
-            let base = gen(d, n, 0x4E15 ^ n as u64);
-            let fp = multiset_fingerprint(&base, key);
-            let mut expected = base.clone();
-            expected.sort_by(|a, b| {
-                if is_less(a, b) {
-                    Ordering::Less
-                } else if is_less(b, a) {
-                    Ordering::Greater
-                } else {
-                    Ordering::Equal
+    seeded(test_name, 0x4E15, |seed| {
+        let radix = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
+        let cdf = Config::default().with_planner(PlannerMode::Force(Backend::CdfSort));
+        let sorters = [
+            ("planner-seq", Sorter::new(Config::default())),
+            ("planner-par", Sorter::new(Config::default().with_threads(4))),
+            ("radix-seq", Sorter::new(radix.clone())),
+            ("radix-par", Sorter::new(radix.with_threads(4))),
+            ("cdf-seq", Sorter::new(cdf.clone())),
+            ("cdf-par", Sorter::new(cdf.with_threads(4))),
+        ];
+        let is_less = T::radix_less;
+        let block = Config::default().block_elems(std::mem::size_of::<T>());
+        for d in Distribution::ALL {
+            for n in sizes(block) {
+                let base = gen(d, n, seed ^ n as u64);
+                let check = SortCheck::capture(&base, is_less, key);
+                for (name, sorter) in &sorters {
+                    let mut v = base.clone();
+                    sorter.sort_keys(&mut v);
+                    let ctx = format!("{name} on {test_name}/{} n={n}", d.name());
+                    check.assert_output(&v, is_less, &ctx);
                 }
-            });
-            for (name, sorter) in &sorters {
-                let mut v = base.clone();
-                sorter.sort_keys(&mut v);
-                let ctx = format!("{name} on {type_name}/{} n={n}", d.name());
-                assert!(is_sorted_by(&v, is_less), "{ctx}: not sorted");
-                assert_eq!(fp, multiset_fingerprint(&v, key), "{ctx}: multiset changed");
-                assert!(
-                    v.iter()
-                        .zip(&expected)
-                        .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
-                    "{ctx}: key sequence differs from std reference"
-                );
             }
         }
-    }
+    });
 }
 
 #[test]
 fn differential_u64() {
-    differential_for_type("u64", datagen::gen_u64, |x| *x, |a, b| a < b);
+    differential_for_type("differential_u64", datagen::gen_u64, |x| *x, |a, b| a < b);
 }
 
 #[test]
 fn differential_f64() {
     differential_for_type(
-        "f64",
+        "differential_f64",
         datagen::gen_f64,
         |x| x.to_bits(),
         |a, b| a < b,
@@ -164,7 +131,7 @@ fn differential_f64() {
 #[test]
 fn differential_pair() {
     differential_for_type(
-        "Pair",
+        "differential_pair",
         datagen::gen_pair,
         |p| p.key.to_bits() ^ p.value.to_bits().rotate_left(32),
         Pair::less,
@@ -174,7 +141,7 @@ fn differential_pair() {
 #[test]
 fn differential_quartet() {
     differential_for_type(
-        "Quartet",
+        "differential_quartet",
         datagen::gen_quartet,
         |q| {
             q.k0.to_bits()
@@ -189,7 +156,7 @@ fn differential_quartet() {
 #[test]
 fn differential_bytes100() {
     differential_for_type(
-        "Bytes100",
+        "differential_bytes100",
         datagen::gen_bytes100,
         |b| {
             let mut k = [0u8; 8];
@@ -203,24 +170,24 @@ fn differential_bytes100() {
 
 #[test]
 fn differential_keys_u64() {
-    differential_for_keys("u64", datagen::gen_u64, |x| *x);
+    differential_for_keys("differential_keys_u64", datagen::gen_u64, |x| *x);
 }
 
 #[test]
 fn differential_keys_f64() {
-    differential_for_keys("f64", datagen::gen_f64, |x| x.to_bits());
+    differential_for_keys("differential_keys_f64", datagen::gen_f64, |x| x.to_bits());
 }
 
 #[test]
 fn differential_keys_pair() {
-    differential_for_keys("Pair", datagen::gen_pair, |p| {
+    differential_for_keys("differential_keys_pair", datagen::gen_pair, |p| {
         p.key.to_bits() ^ p.value.to_bits().rotate_left(32)
     });
 }
 
 #[test]
 fn differential_keys_quartet() {
-    differential_for_keys("Quartet", datagen::gen_quartet, |q| {
+    differential_for_keys("differential_keys_quartet", datagen::gen_quartet, |q| {
         q.k0.to_bits()
             ^ q.k1.to_bits().rotate_left(13)
             ^ q.k2.to_bits().rotate_left(27)
@@ -230,57 +197,46 @@ fn differential_keys_quartet() {
 
 #[test]
 fn differential_keys_bytes100() {
-    differential_for_keys("Bytes100", datagen::gen_bytes100, |b| {
+    differential_for_keys("differential_keys_bytes100", datagen::gen_bytes100, |b| {
         let mut k = [0u8; 8];
         k.copy_from_slice(&b.key[2..10]);
         u64::from_be_bytes(k) ^ (b.payload[0] as u64).rotate_left(56)
     });
 }
 
-/// The −0.0 vs +0.0 bugfix case: the radix key transform orders −0.0
-/// strictly before +0.0 (a refinement), but the output must stay
+/// The −0.0 vs +0.0 bugfix case: the radix/CDF key transform orders
+/// −0.0 strictly before +0.0 (a refinement), but the output must stay
 /// key-equivalent to the comparison reference, which treats the two as
 /// equal under `<`.
 #[test]
 fn differential_f64_negative_zero_key_equivalence() {
-    let mut rng = ips4o::util::Xoshiro256::new(0x5E20);
-    let base: Vec<f64> = (0..30_000)
-        .map(|i| match i % 5 {
-            0 => -0.0,
-            1 => 0.0,
-            2 => -rng.next_f64(),
-            3 => rng.next_f64(),
-            _ => 0.0,
-        })
-        .collect();
-    let fp = multiset_fingerprint(&base, |x| x.to_bits());
-    let mut expected = base.clone();
-    expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    seeded("differential_f64_negative_zero_key_equivalence", 0x5E20, |seed| {
+        let mut rng = ips4o::util::Xoshiro256::new(seed);
+        let base: Vec<f64> = (0..30_000)
+            .map(|i| match i % 5 {
+                0 => -0.0,
+                1 => 0.0,
+                2 => -rng.next_f64(),
+                3 => rng.next_f64(),
+                _ => 0.0,
+            })
+            .collect();
+        let is_less = |a: &f64, b: &f64| a < b;
+        let check = SortCheck::capture(&base, is_less, |x: &f64| x.to_bits());
 
-    let is_less = |a: &f64, b: &f64| a < b;
-    let forced = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
-    let radix_seq = Sorter::new(forced.clone());
-    let radix_par = Sorter::new(forced.with_threads(4));
-    let planner = Sorter::new(Config::default().with_threads(4));
-    let sorters: [(&str, &Sorter); 3] = [
-        ("radix-seq", &radix_seq),
-        ("radix-par", &radix_par),
-        ("planner", &planner),
-    ];
-    for (name, sorter) in sorters {
-        let mut v = base.clone();
-        sorter.sort_keys(&mut v);
-        assert!(is_sorted_by(&v, is_less), "{name}: not sorted");
-        assert_eq!(
-            fp,
-            multiset_fingerprint(&v, |x| x.to_bits()),
-            "{name}: multiset changed (a zero was lost or its sign flipped)"
-        );
-        assert!(
-            v.iter()
-                .zip(&expected)
-                .all(|(a, b)| !is_less(a, b) && !is_less(b, a)),
-            "{name}: key sequence differs from std reference"
-        );
-    }
+        let radix = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
+        let cdf = Config::default().with_planner(PlannerMode::Force(Backend::CdfSort));
+        let sorters = [
+            ("radix-seq", Sorter::new(radix.clone())),
+            ("radix-par", Sorter::new(radix.with_threads(4))),
+            ("cdf-seq", Sorter::new(cdf.clone())),
+            ("cdf-par", Sorter::new(cdf.with_threads(4))),
+            ("planner", Sorter::new(Config::default().with_threads(4))),
+        ];
+        for (name, sorter) in &sorters {
+            let mut v = base.clone();
+            sorter.sort_keys(&mut v);
+            check.assert_output(&v, is_less, name);
+        }
+    });
 }

@@ -1,10 +1,18 @@
 //! Property-based tests (hand-rolled seeded generator loops — proptest
 //! is unavailable offline). The invariant under test for every algorithm
-//! and configuration: **output sorted ∧ multiset preserved**.
+//! and configuration: **output sorted ∧ multiset preserved**, asserted
+//! through the shared oracle (`tests/common/oracle.rs`). Every test
+//! draws its seed via `oracle::seeded`, so failures print an
+//! `IPS4O_TEST_SEED=…` replay line.
 
+mod common;
+
+use common::oracle::{assert_same_multiset, assert_sorted, seeded};
+use ips4o::classifier::Classifier;
 use ips4o::config::Config;
 use ips4o::datagen::{self, Distribution};
-use ips4o::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+use ips4o::planner::{CdfFit, CdfModel};
+use ips4o::util::Xoshiro256;
 use ips4o::{Backend, PlannerMode, Sorter};
 
 fn lt(a: &u64, b: &u64) -> bool {
@@ -50,227 +58,360 @@ fn random_config(rng: &mut Xoshiro256) -> Config {
 
 #[test]
 fn property_sequential_random_configs() {
-    let mut rng = Xoshiro256::new(0xA11CE);
-    for trial in 0..60 {
-        let cfg = random_config(&mut rng);
-        let v0 = random_input(&mut rng);
-        let fp = multiset_fingerprint(&v0, |x| *x);
-        let mut v = v0.clone();
-        ips4o::sequential::sort_by(&mut v, &cfg, &lt);
-        assert!(
-            is_sorted_by(&v, lt),
-            "trial {trial}: not sorted (n={}, cfg={cfg:?})",
-            v.len()
-        );
-        assert_eq!(
-            fp,
-            multiset_fingerprint(&v, |x| *x),
-            "trial {trial}: multiset changed"
-        );
-    }
+    seeded("property_sequential_random_configs", 0xA11CE, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..60 {
+            let cfg = random_config(&mut rng);
+            let v0 = random_input(&mut rng);
+            let mut v = v0.clone();
+            ips4o::sequential::sort_by(&mut v, &cfg, &lt);
+            let ctx = format!("trial {trial} (n={}, cfg={cfg:?})", v.len());
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
+        }
+    });
 }
 
 #[test]
 fn property_parallel_random_configs() {
-    let mut rng = Xoshiro256::new(0xB0B);
-    for trial in 0..40 {
-        let cfg = random_config(&mut rng);
-        let sorter = ips4o::Sorter::new(cfg.clone());
-        let mut v = random_input(&mut rng);
-        // Scale some inputs up so the parallel path actually engages.
-        if trial % 3 == 0 {
-            let extra = random_input(&mut rng);
-            v.extend(extra);
-            v.extend(v.clone());
-            v.extend(v.clone());
+    seeded("property_parallel_random_configs", 0xB0B, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let sorter = ips4o::Sorter::new(cfg.clone());
+            let mut v = random_input(&mut rng);
+            // Scale some inputs up so the parallel path actually engages.
+            if trial % 3 == 0 {
+                let extra = random_input(&mut rng);
+                v.extend(extra);
+                v.extend(v.clone());
+                v.extend(v.clone());
+            }
+            let v0 = v.clone();
+            sorter.sort(&mut v);
+            let ctx = format!("trial {trial} (n={})", v0.len());
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
         }
-        let fp = multiset_fingerprint(&v, |x| *x);
-        let n = v.len();
-        sorter.sort(&mut v);
-        assert!(is_sorted_by(&v, lt), "trial {trial}: not sorted (n={n})");
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
-    }
+    });
 }
 
 #[test]
 fn property_strictly_inplace_random() {
-    let mut rng = Xoshiro256::new(0x57121C7);
-    for trial in 0..40 {
-        let cfg = random_config(&mut rng);
-        let mut v = random_input(&mut rng);
-        let fp = multiset_fingerprint(&v, |x| *x);
-        ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &cfg, &lt);
-        assert!(is_sorted_by(&v, lt), "trial {trial}");
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
-    }
+    seeded("property_strictly_inplace_random", 0x57121C7, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let mut v = random_input(&mut rng);
+            let v0 = v.clone();
+            ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &cfg, &lt);
+            let ctx = format!("trial {trial}");
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
+        }
+    });
 }
 
 #[test]
 fn property_baselines_random() {
-    let mut rng = Xoshiro256::new(0xBA5E);
-    for trial in 0..30 {
-        let v0 = random_input(&mut rng);
-        let fp = multiset_fingerprint(&v0, |x| *x);
-        let runs: Vec<(&str, Box<dyn Fn(&mut Vec<u64>)>)> = vec![
-            ("introsort", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::introsort::sort_by(v, &lt)
-            })),
-            ("dualpivot", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::dualpivot::sort_by(v, &lt)
-            })),
-            ("blockq", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::blockquicksort::sort_by(v, &lt)
-            })),
-            ("s3sort", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::s3sort::sort_by(v, &lt)
-            })),
-            ("mwm", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::par_mergesort::sort_by(v, 3, &lt)
-            })),
-            ("pbbs", Box::new(|v: &mut Vec<u64>| {
-                ips4o::baselines::pbbs_samplesort::sort_by(v, 3, &lt)
-            })),
-        ];
-        for (name, run) in runs {
-            let mut v = v0.clone();
-            run(&mut v);
-            assert!(is_sorted_by(&v, lt), "{name} trial {trial} (n={})", v0.len());
-            assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{name} trial {trial}");
+    seeded("property_baselines_random", 0xBA5E, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..30 {
+            let v0 = random_input(&mut rng);
+            let runs: Vec<(&str, Box<dyn Fn(&mut Vec<u64>)>)> = vec![
+                ("introsort", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::introsort::sort_by(v, &lt)
+                })),
+                ("dualpivot", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::dualpivot::sort_by(v, &lt)
+                })),
+                ("blockq", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::blockquicksort::sort_by(v, &lt)
+                })),
+                ("s3sort", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::s3sort::sort_by(v, &lt)
+                })),
+                ("mwm", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::par_mergesort::sort_by(v, 3, &lt)
+                })),
+                ("pbbs", Box::new(|v: &mut Vec<u64>| {
+                    ips4o::baselines::pbbs_samplesort::sort_by(v, 3, &lt)
+                })),
+            ];
+            for (name, run) in runs {
+                let mut v = v0.clone();
+                run(&mut v);
+                let ctx = format!("{name} trial {trial} (n={})", v0.len());
+                assert_sorted(&v, lt, &ctx);
+                assert_same_multiset(&v0, &v, |x| *x, &ctx);
+            }
         }
-    }
+    });
 }
 
 #[test]
 fn property_partition_step_invariants() {
     // After one partition step: bounds cover the range, buckets are
     // value-disjoint and ordered, equality buckets constant.
-    let mut rng = Xoshiro256::new(0x9A97171);
-    for trial in 0..30 {
-        let cfg = Config::default()
-            .with_max_buckets(2 << rng.next_below(7))
-            .with_block_bytes(64 << rng.next_below(6));
-        let n = 1000 + rng.next_below(50_000) as usize;
-        let range_bits = rng.next_below(32);
-        let range = 1 + rng.next_below(1 << range_bits);
-        let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(range)).collect();
-        let fp = multiset_fingerprint(&v, |x| *x);
-        let mut ctx = ips4o::sequential::SeqContext::new(cfg, trial as u64);
-        let Some(step) = ips4o::sequential::partition_step(&mut v, &mut ctx, &lt, false) else {
-            continue;
-        };
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
-        assert_eq!(*step.bounds.first().unwrap(), 0);
-        assert_eq!(*step.bounds.last().unwrap(), n);
-        let mut prev_max: Option<u64> = None;
-        for i in 0..step.bounds.len() - 1 {
-            let (s, e) = (step.bounds[i], step.bounds[i + 1]);
-            if s == e {
-                continue;
-            }
-            let lo = *v[s..e].iter().min().unwrap();
-            let hi = *v[s..e].iter().max().unwrap();
-            if let Some(pm) = prev_max {
-                assert!(pm <= lo, "trial {trial}: bucket {i} overlaps previous");
-            }
-            prev_max = Some(hi);
-            if step.equality[i] {
-                assert_eq!(lo, hi, "trial {trial}: equality bucket {i} not constant");
+    seeded("property_partition_step_invariants", 0x9A97171, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..30 {
+            let cfg = Config::default()
+                .with_max_buckets(2 << rng.next_below(7))
+                .with_block_bytes(64 << rng.next_below(6));
+            let n = 1000 + rng.next_below(50_000) as usize;
+            let range_bits = rng.next_below(32);
+            let range = 1 + rng.next_below(1 << range_bits);
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(range)).collect();
+            let v0 = v.clone();
+            let mut ctx = ips4o::sequential::SeqContext::new(cfg, trial as u64);
+            let step = match ips4o::sequential::partition_step(&mut v, &mut ctx, &lt, false) {
+                Some(step) => step,
+                None => continue,
+            };
+            assert_same_multiset(&v0, &v, |x| *x, &format!("trial {trial}"));
+            assert_eq!(*step.bounds.first().unwrap(), 0);
+            assert_eq!(*step.bounds.last().unwrap(), n);
+            let mut prev_max: Option<u64> = None;
+            for i in 0..step.bounds.len() - 1 {
+                let (s, e) = (step.bounds[i], step.bounds[i + 1]);
+                if s == e {
+                    continue;
+                }
+                let lo = *v[s..e].iter().min().unwrap();
+                let hi = *v[s..e].iter().max().unwrap();
+                if let Some(pm) = prev_max {
+                    assert!(pm <= lo, "trial {trial}: bucket {i} overlaps previous");
+                }
+                prev_max = Some(hi);
+                if step.equality[i] {
+                    assert_eq!(lo, hi, "trial {trial}: equality bucket {i} not constant");
+                }
             }
         }
-    }
+    });
 }
 
 #[test]
 fn property_radix_random_configs() {
     // Forced radix (sequential and parallel by drawn thread count) over
     // random configurations and input shapes.
-    let mut rng = Xoshiro256::new(0x2AD1);
-    for trial in 0..40 {
-        let cfg = random_config(&mut rng);
-        let cfg = cfg.with_planner(PlannerMode::Force(Backend::Radix));
-        let sorter = Sorter::new(cfg.clone());
-        let mut v = random_input(&mut rng);
-        let fp = multiset_fingerprint(&v, |x| *x);
-        let n = v.len();
-        sorter.sort_keys(&mut v);
-        assert!(
-            is_sorted_by(&v, lt),
-            "trial {trial}: not sorted (n={n}, cfg={cfg:?})"
-        );
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
-    }
+    seeded("property_radix_random_configs", 0x2AD1, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let cfg = cfg.with_planner(PlannerMode::Force(Backend::Radix));
+            let sorter = Sorter::new(cfg.clone());
+            let mut v = random_input(&mut rng);
+            let v0 = v.clone();
+            sorter.sort_keys(&mut v);
+            let ctx = format!("trial {trial} (n={}, cfg={cfg:?})", v0.len());
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
+        }
+    });
+}
+
+#[test]
+fn property_cdf_random_configs() {
+    // Forced learned-CDF over random configurations and input shapes —
+    // the skew/fallback machinery must keep every draw correct.
+    seeded("property_cdf_random_configs", 0xCDF2, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let cfg = cfg.with_planner(PlannerMode::Force(Backend::CdfSort));
+            let sorter = Sorter::new(cfg.clone());
+            let mut v = random_input(&mut rng);
+            let v0 = v.clone();
+            sorter.sort_keys(&mut v);
+            let ctx = format!("trial {trial} (n={}, cfg={cfg:?})", v0.len());
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
+        }
+    });
+}
+
+/// The fitted CDF itself (satellite property): monotone bucket mapping,
+/// total coverage of the key range, and agreement with the comparison
+/// classifier's bucket assignment on the sample points.
+#[test]
+fn property_cdf_model_monotone_covering_and_classifier_agreement() {
+    seeded(
+        "property_cdf_model_monotone_covering_and_classifier_agreement",
+        0xCDF3,
+        |seed| {
+            let mut rng = Xoshiro256::new(seed);
+            let mut fitted = 0usize;
+            let mut classifier_checked = 0usize;
+            for trial in 0..80u64 {
+                // Mixed sample shapes: wide uniform, narrow uniform,
+                // log-uniform (Zipf-like), and linear ramps.
+                let m = 2 + rng.next_below(255) as usize;
+                let mut sample: Vec<u64> = match trial % 4 {
+                    0 => (0..m).map(|_| rng.next_u64()).collect(),
+                    1 => {
+                        let range = 1 + rng.next_below(1 << rng.next_below(30));
+                        (0..m).map(|_| rng.next_below(range)).collect()
+                    }
+                    2 => (0..m)
+                        .map(|_| {
+                            let bits = rng.next_below(50);
+                            rng.next_below(1 + (1 << bits))
+                        })
+                        .collect(),
+                    _ => (0..m as u64).map(|i| i * (1 + rng.next_below(1000))).collect(),
+                };
+                sample.sort_unstable();
+                let k = 1usize << (1 + rng.next_below(8)); // 2..=256 buckets
+                let model = match CdfModel::fit(&sample, k) {
+                    CdfFit::Fitted(m) => m,
+                    CdfFit::SingleKey | CdfFit::Skewed => continue,
+                };
+                fitted += 1;
+                let key_min = sample[0];
+                let key_max = *sample.last().unwrap();
+
+                // (1) Monotone: k1 <= k2 ⇒ bucket(k1) <= bucket(k2),
+                // over random in-range and out-of-range key pairs.
+                for _ in 0..200 {
+                    let a = rng.next_u64();
+                    let b = rng.next_u64();
+                    let (a, b) = (a.min(b), a.max(b));
+                    assert!(
+                        model.bucket_of_key(a) <= model.bucket_of_key(b),
+                        "trial {trial}: not monotone at ({a}, {b})"
+                    );
+                }
+
+                // (2) Total coverage: the fitted range maps onto the full
+                // bucket range, every key to a valid bucket.
+                assert_eq!(model.bucket_of_key(key_min), 0, "trial {trial}");
+                assert_eq!(model.bucket_of_key(key_max), k - 1, "trial {trial}");
+                assert_eq!(model.bucket_of_key(0), 0, "trial {trial}");
+                assert_eq!(model.bucket_of_key(u64::MAX), k - 1, "trial {trial}");
+                for _ in 0..100 {
+                    assert!(model.bucket_of_key(rng.next_u64()) < k, "trial {trial}");
+                }
+
+                // (3) Agreement with the comparison classifier. The
+                // model's implied splitters are its bucket boundary keys;
+                // by minimality, bucket(e) >= b ⟺ e >= boundary(b) —
+                // i.e. the model assigns exactly the
+                // count-of-splitters-≤-e bucket a comparison classifier
+                // computes.
+                let boundaries: Vec<u64> = (1..k).map(|b| model.boundary_key(b)).collect();
+                for &e in &sample {
+                    for (i, &s) in boundaries.iter().enumerate() {
+                        let b = i + 1;
+                        assert_eq!(
+                            model.bucket_of_key(e) >= b,
+                            e >= s,
+                            "trial {trial}: splitter semantics broken at b={b} e={e}"
+                        );
+                    }
+                }
+                // When all boundaries are distinct the comparison
+                // classifier can be built verbatim (fanout = k, no
+                // padding) and must agree bucket-for-bucket.
+                if boundaries.windows(2).all(|w| w[0] < w[1]) {
+                    classifier_checked += 1;
+                    let cls = Classifier::new(&boundaries, false, &lt);
+                    assert_eq!(cls.fanout(), k);
+                    for &e in &sample {
+                        assert_eq!(
+                            cls.classify(&e, &lt),
+                            model.bucket_of_key(e),
+                            "trial {trial}: classifier disagrees at e={e}"
+                        );
+                    }
+                }
+            }
+            assert!(fitted >= 30, "too few fits succeeded: {fitted}");
+            assert!(classifier_checked >= 10, "agreement check starved: {classifier_checked}");
+        },
+    );
 }
 
 #[test]
 fn property_planner_auto_random() {
     // The default (planner-enabled) path over random configs and shapes,
     // including the new skew/run distributions.
-    let mut rng = Xoshiro256::new(0x91A2);
-    for trial in 0..40 {
-        let cfg = random_config(&mut rng);
-        let sorter = Sorter::new(cfg.clone());
-        let d = Distribution::ALL[rng.next_below(Distribution::ALL.len() as u64) as usize];
-        let n = rng.next_below(40_000) as usize;
-        let mut v = datagen::gen_u64(d, n, trial);
-        let fp = multiset_fingerprint(&v, |x| *x);
-        let mut expected = v.clone();
-        expected.sort_unstable();
-        sorter.sort_keys(&mut v);
-        assert_eq!(v, expected, "trial {trial}: {} n={n} cfg={cfg:?}", d.name());
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "trial {trial}");
-    }
+    seeded("property_planner_auto_random", 0x91A2, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let sorter = Sorter::new(cfg.clone());
+            let d = Distribution::ALL[rng.next_below(Distribution::ALL.len() as u64) as usize];
+            let n = rng.next_below(40_000) as usize;
+            let mut v = datagen::gen_u64(d, n, seed ^ trial);
+            let v0 = v.clone();
+            let mut expected = v.clone();
+            expected.sort_unstable();
+            sorter.sort_keys(&mut v);
+            assert_eq!(v, expected, "trial {trial}: {} n={n} cfg={cfg:?}", d.name());
+            assert_same_multiset(&v0, &v, |x| *x, &format!("trial {trial}"));
+        }
+    });
 }
 
 #[test]
 fn property_zipf_and_sorted_runs_all_drivers() {
-    // The new distributions through every first-party driver: sequential
-    // IS⁴o, strictly-in-place IS⁴o, parallel IPS⁴o, radix, and the
-    // planner's own routing.
-    let mut rng = Xoshiro256::new(0x21F5);
-    for trial in 0..10u64 {
-        for d in [Distribution::Zipf, Distribution::SortedRuns] {
-            let n = 1 + rng.next_below(30_000) as usize;
-            let base = datagen::gen_u64(d, n, trial);
-            let fp = multiset_fingerprint(&base, |x| *x);
-            let mut expected = base.clone();
-            expected.sort_unstable();
+    // The skew distributions through every first-party driver:
+    // sequential IS⁴o, strictly-in-place IS⁴o, parallel IPS⁴o, radix,
+    // learned CDF, and the planner's own routing.
+    seeded("property_zipf_and_sorted_runs_all_drivers", 0x21F5, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..10u64 {
+            for d in [Distribution::Zipf, Distribution::SortedRuns] {
+                let n = 1 + rng.next_below(30_000) as usize;
+                let base = datagen::gen_u64(d, n, seed ^ trial);
+                let mut expected = base.clone();
+                expected.sort_unstable();
 
-            let mut v = base.clone();
-            ips4o::sequential::sort_by(&mut v, &Config::default(), &lt);
-            assert_eq!(v, expected, "seq {} trial {trial}", d.name());
+                let mut v = base.clone();
+                ips4o::sequential::sort_by(&mut v, &Config::default(), &lt);
+                assert_eq!(v, expected, "seq {} trial {trial}", d.name());
 
-            let mut v = base.clone();
-            ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
-            assert_eq!(v, expected, "strict {} trial {trial}", d.name());
+                let mut v = base.clone();
+                ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
+                assert_eq!(v, expected, "strict {} trial {trial}", d.name());
 
-            let mut v = base.clone();
-            let par = Sorter::new(Config::default().with_threads(4));
-            par.sort_by(&mut v, &lt);
-            assert_eq!(v, expected, "par {} trial {trial}", d.name());
+                let mut v = base.clone();
+                let par = Sorter::new(Config::default().with_threads(4));
+                par.sort_by(&mut v, &lt);
+                assert_eq!(v, expected, "par {} trial {trial}", d.name());
 
-            let mut v = base.clone();
-            ips4o::radix::sort_radix(&mut v, &Config::default());
-            assert_eq!(v, expected, "radix {} trial {trial}", d.name());
+                let mut v = base.clone();
+                ips4o::radix::sort_radix(&mut v, &Config::default());
+                assert_eq!(v, expected, "radix {} trial {trial}", d.name());
 
-            let mut v = base;
-            Sorter::new(Config::default()).sort_keys(&mut v);
-            assert_eq!(v, expected, "planner {} trial {trial}", d.name());
-            assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+                let mut v = base.clone();
+                ips4o::planner::sort_cdf(&mut v, &Config::default());
+                assert_eq!(v, expected, "cdf {} trial {trial}", d.name());
+
+                let mut v = base.clone();
+                Sorter::new(Config::default()).sort_keys(&mut v);
+                assert_eq!(v, expected, "planner {} trial {trial}", d.name());
+                assert_same_multiset(&base, &v, |x| *x, &format!("{} {trial}", d.name()));
+            }
         }
-    }
+    });
 }
 
 #[test]
 fn property_search_next_larger_oracle() {
-    let mut rng = Xoshiro256::new(0x5EA7C4);
-    for _ in 0..200 {
-        let n = 1 + rng.next_below(500) as usize;
-        let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(100)).collect();
-        v.sort_unstable();
-        let from = rng.next_below(n as u64 + 1) as usize;
-        let x = rng.next_below(110);
-        let got = ips4o::strictly_inplace::search_next_larger(&x, &v, from, &lt);
-        let want = (from..n).find(|&i| v[i] > x).unwrap_or(n);
-        assert_eq!(got, want, "v={v:?} from={from} x={x}");
-    }
+    seeded("property_search_next_larger_oracle", 0x5EA7C4, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for _ in 0..200 {
+            let n = 1 + rng.next_below(500) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(100)).collect();
+            v.sort_unstable();
+            let from = rng.next_below(n as u64 + 1) as usize;
+            let x = rng.next_below(110);
+            let got = ips4o::strictly_inplace::search_next_larger(&x, &v, from, &lt);
+            let want = (from..n).find(|&i| v[i] > x).unwrap_or(n);
+            assert_eq!(got, want, "v={v:?} from={from} x={x}");
+        }
+    });
 }

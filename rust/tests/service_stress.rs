@@ -1,12 +1,19 @@
 //! Stress and property tests for the batched [`SortService`]:
 //! concurrent clients, mixed job sizes and element types, duplicate-heavy
-//! equality-bucket inputs, and the zero-steady-state-allocation
-//! guarantee.
+//! equality-bucket inputs, planner routing (including the learned-CDF
+//! backend), and the zero-steady-state-allocation guarantee. Sort
+//! outputs are checked through the shared oracle
+//! (`tests/common/oracle.rs`); random workloads are seeded via
+//! `oracle::seeded` for `IPS4O_TEST_SEED` replay.
+
+mod common;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use common::oracle::{assert_same_multiset, assert_sorted, seeded, SortCheck};
 use ips4o::datagen::{self, Distribution};
-use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Xoshiro256};
+use ips4o::planner::plan_keys;
+use ips4o::util::{Bytes100, Pair, Xoshiro256};
 use ips4o::{Backend, Config, PlannerMode, SortService};
 
 fn lt(a: &u64, b: &u64) -> bool {
@@ -15,74 +22,75 @@ fn lt(a: &u64, b: &u64) -> bool {
 
 #[test]
 fn concurrent_clients_mixed_sizes_and_types() {
-    let svc = SortService::new(Config::default().with_threads(4));
-    let jobs_done = AtomicU64::new(0);
-    let clients = 6usize;
-    let jobs_per_client = 18usize;
+    seeded("concurrent_clients_mixed_sizes_and_types", 0xC11E27, |seed| {
+        let svc = SortService::new(Config::default().with_threads(4));
+        let jobs_done = AtomicU64::new(0);
+        let clients = 6usize;
+        let jobs_per_client = 18usize;
 
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let svc = &svc;
-            let jobs_done = &jobs_done;
-            scope.spawn(move || {
-                let mut rng = Xoshiro256::new(0xC11E27 ^ c as u64);
-                for i in 0..jobs_per_client {
-                    // Mixed sizes: boundary cases, batch-path sizes, and an
-                    // occasional job big enough for the parallel path.
-                    let n = match i % 6 {
-                        0 => 0,
-                        1 => 1 + rng.next_below(3) as usize,
-                        2 => 255 + rng.next_below(3) as usize, // block boundary
-                        3 => 5_000,
-                        4 => 20_000,
-                        _ => 90_000, // ≈ 0.7 MB of u64 ⇒ large-job path
-                    };
-                    let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
-                    let seed = (c as u64) << 32 | i as u64;
-                    match i % 3 {
-                        0 => {
-                            let base = datagen::gen_u64(d, n, seed);
-                            let fp = multiset_fingerprint(&base, |x| *x);
-                            let out = svc.submit(base).wait();
-                            assert!(is_sorted_by(&out, lt), "u64 n={n} {}", d.name());
-                            assert_eq!(fp, multiset_fingerprint(&out, |x| *x));
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let svc = &svc;
+                let jobs_done = &jobs_done;
+                scope.spawn(move || {
+                    let mut rng = Xoshiro256::new(seed ^ c as u64);
+                    for i in 0..jobs_per_client {
+                        // Mixed sizes: boundary cases, batch-path sizes, and an
+                        // occasional job big enough for the parallel path.
+                        let n = match i % 6 {
+                            0 => 0,
+                            1 => 1 + rng.next_below(3) as usize,
+                            2 => 255 + rng.next_below(3) as usize, // block boundary
+                            3 => 5_000,
+                            4 => 20_000,
+                            _ => 90_000, // ≈ 0.7 MB of u64 ⇒ large-job path
+                        };
+                        let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
+                        let job_seed = seed ^ ((c as u64) << 32 | i as u64);
+                        match i % 3 {
+                            0 => {
+                                let base = datagen::gen_u64(d, n, job_seed);
+                                let check = SortCheck::capture(&base, lt, |x| *x);
+                                let out = svc.submit(base).wait();
+                                check.assert_output(&out, lt, &format!("u64 n={n} {}", d.name()));
+                            }
+                            1 => {
+                                let base = datagen::gen_pair(d, n, job_seed);
+                                let key =
+                                    |p: &Pair| p.key.to_bits() ^ p.value.to_bits().rotate_left(32);
+                                let check = SortCheck::capture(&base, Pair::less, key);
+                                let out = svc.submit_by(base, Pair::less).wait();
+                                let ctx = format!("Pair n={n} {}", d.name());
+                                check.assert_output(&out, Pair::less, &ctx);
+                            }
+                            _ => {
+                                // Bytes100 jobs scaled down (100 B/element).
+                                let n = n / 8;
+                                let base = datagen::gen_bytes100(d, n, job_seed);
+                                let key = |b: &Bytes100| {
+                                    let mut k = [0u8; 8];
+                                    k.copy_from_slice(&b.key[2..10]);
+                                    u64::from_be_bytes(k)
+                                };
+                                let check = SortCheck::capture(&base, Bytes100::less, key);
+                                let out = svc.submit_by(base, Bytes100::less).wait();
+                                let ctx = format!("B100 n={n} {}", d.name());
+                                check.assert_output(&out, Bytes100::less, &ctx);
+                            }
                         }
-                        1 => {
-                            let base = datagen::gen_pair(d, n, seed);
-                            let key =
-                                |p: &Pair| p.key.to_bits() ^ p.value.to_bits().rotate_left(32);
-                            let fp = multiset_fingerprint(&base, key);
-                            let out = svc.submit_by(base, Pair::less).wait();
-                            assert!(is_sorted_by(&out, Pair::less), "Pair n={n} {}", d.name());
-                            assert_eq!(fp, multiset_fingerprint(&out, key));
-                        }
-                        _ => {
-                            // Bytes100 jobs scaled down (100 B/element).
-                            let n = n / 8;
-                            let base = datagen::gen_bytes100(d, n, seed);
-                            let key = |b: &Bytes100| {
-                                let mut k = [0u8; 8];
-                                k.copy_from_slice(&b.key[2..10]);
-                                u64::from_be_bytes(k)
-                            };
-                            let fp = multiset_fingerprint(&base, key);
-                            let out = svc.submit_by(base, Bytes100::less).wait();
-                            assert!(is_sorted_by(&out, Bytes100::less), "B100 n={n} {}", d.name());
-                            assert_eq!(fp, multiset_fingerprint(&out, key));
-                        }
+                        jobs_done.fetch_add(1, Ordering::Relaxed);
                     }
-                    jobs_done.fetch_add(1, Ordering::Relaxed);
-                }
-            });
-        }
-    });
+                });
+            }
+        });
 
-    let total = (clients * jobs_per_client) as u64;
-    assert_eq!(jobs_done.load(Ordering::Relaxed), total);
-    let m = svc.metrics();
-    assert_eq!(m.jobs_completed, total);
-    assert!(m.batches_dispatched >= 1);
-    assert!(m.batches_dispatched <= total, "batches cannot exceed jobs");
+        let total = (clients * jobs_per_client) as u64;
+        assert_eq!(jobs_done.load(Ordering::Relaxed), total);
+        let m = svc.metrics();
+        assert_eq!(m.jobs_completed, total);
+        assert!(m.batches_dispatched >= 1);
+        assert!(m.batches_dispatched <= total, "batches cannot exceed jobs");
+    });
 }
 
 #[test]
@@ -103,7 +111,7 @@ fn pipelined_submissions_batch_across_clients() {
                     })
                     .collect();
                 for t in tickets {
-                    assert!(is_sorted_by(&t.wait(), lt));
+                    assert_sorted(&t.wait(), lt, "pipelined job");
                 }
             });
         }
@@ -123,48 +131,49 @@ fn property_duplicate_heavy_equality_buckets() {
     // Seeded property loop over the duplicate-heavy generators that
     // exercise the §4.4 equality-bucket path: TwoDup, RootDup, EightDup,
     // Ones, plus near-constant inputs with 1–3 distinct keys.
-    let svc = SortService::new(Config::default().with_threads(3));
-    let mut rng = Xoshiro256::new(0xE9B0C7);
-    for trial in 0..40 {
-        let n = 1 + rng.next_below(40_000) as usize;
-        let base: Vec<u64> = match trial % 5 {
-            0 => datagen::gen_u64(Distribution::TwoDup, n, trial),
-            1 => datagen::gen_u64(Distribution::RootDup, n, trial),
-            2 => datagen::gen_u64(Distribution::EightDup, n, trial),
-            3 => datagen::gen_u64(Distribution::Ones, n, trial),
-            _ => {
-                let keys = 1 + rng.next_below(3);
-                (0..n).map(|_| rng.next_below(keys)).collect()
-            }
-        };
-        let fp = multiset_fingerprint(&base, |x| *x);
-        let mut expected = base.clone();
-        expected.sort_unstable();
-        let out = svc.submit(base).wait();
-        assert_eq!(out, expected, "trial {trial} n={n}");
-        assert_eq!(fp, multiset_fingerprint(&out, |x| *x), "trial {trial}");
-    }
+    seeded("property_duplicate_heavy_equality_buckets", 0xE9B0C7, |seed| {
+        let svc = SortService::new(Config::default().with_threads(3));
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40u64 {
+            let n = 1 + rng.next_below(40_000) as usize;
+            let base: Vec<u64> = match trial % 5 {
+                0 => datagen::gen_u64(Distribution::TwoDup, n, seed ^ trial),
+                1 => datagen::gen_u64(Distribution::RootDup, n, seed ^ trial),
+                2 => datagen::gen_u64(Distribution::EightDup, n, seed ^ trial),
+                3 => datagen::gen_u64(Distribution::Ones, n, seed ^ trial),
+                _ => {
+                    let keys = 1 + rng.next_below(3);
+                    (0..n).map(|_| rng.next_below(keys)).collect()
+                }
+            };
+            let check = SortCheck::capture(&base, lt, |x| *x);
+            let out = svc.submit(base).wait();
+            check.assert_output(&out, lt, &format!("trial {trial} n={n}"));
+        }
+    });
 }
 
 #[test]
 fn property_duplicate_heavy_without_equality_buckets() {
     // The degenerate-sample fallback (heapsort) must keep the service
     // correct when equality buckets are disabled.
-    let svc = SortService::new(
-        Config::default()
-            .with_threads(2)
-            .with_equality_buckets(false),
-    );
-    let mut rng = Xoshiro256::new(0x0FF);
-    for trial in 0..12 {
-        let n = 1 + rng.next_below(20_000) as usize;
-        let keys = 1 + rng.next_below(2); // 1–2 distinct keys
-        let base: Vec<u64> = (0..n).map(|_| rng.next_below(keys)).collect();
-        let fp = multiset_fingerprint(&base, |x| *x);
-        let out = svc.submit(base).wait();
-        assert!(is_sorted_by(&out, lt), "trial {trial}");
-        assert_eq!(fp, multiset_fingerprint(&out, |x| *x), "trial {trial}");
-    }
+    seeded("property_duplicate_heavy_without_equality_buckets", 0x0FF, |seed| {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(2)
+                .with_equality_buckets(false),
+        );
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..12 {
+            let n = 1 + rng.next_below(20_000) as usize;
+            let keys = 1 + rng.next_below(2); // 1–2 distinct keys
+            let base: Vec<u64> = (0..n).map(|_| rng.next_below(keys)).collect();
+            let out = svc.submit(base.clone()).wait();
+            let ctx = format!("trial {trial}");
+            assert_sorted(&out, lt, &ctx);
+            assert_same_multiset(&base, &out, |x| *x, &ctx);
+        }
+    });
 }
 
 #[test]
@@ -183,10 +192,9 @@ fn keyed_mixed_workload_selects_multiple_backends() {
                     let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
                     let n = if i % 4 == 3 { 150_000 } else { 20_000 };
                     let base = datagen::gen_u64(d, n, (c * 100 + i) as u64);
-                    let mut expected = base.clone();
-                    expected.sort_unstable();
+                    let check = SortCheck::capture(&base, lt, |x| *x);
                     let out = svc.submit_keys(base).wait();
-                    assert_eq!(out, expected, "{} n={n}", d.name());
+                    check.assert_output(&out, lt, &format!("{} n={n}", d.name()));
                 }
             });
         }
@@ -201,6 +209,72 @@ fn keyed_mixed_workload_selects_multiple_backends() {
 }
 
 #[test]
+fn cdf_routes_match_cost_model_and_fallback_counts() {
+    // The learned-CDF backend must be chosen exactly where the cost
+    // model says — skewed-lane fingerprints (Zipf, Exponential) — and
+    // nowhere else in this mix.
+    let cfg = Config::default().with_threads(2);
+    let svc = SortService::new(cfg.clone());
+    let jobs = [
+        (Distribution::Zipf, 120_000usize),
+        (Distribution::Exponential, 1 << 20),
+        (Distribution::Uniform, 120_000),
+        (Distribution::Sorted, 60_000),
+        (Distribution::RootDup, 60_000),
+        (Distribution::Ones, 60_000),
+    ];
+    let mut expected_cdf = 0u64;
+    for (i, &(d, n)) in jobs.iter().enumerate() {
+        let base = datagen::gen_u64(d, n, 0xC0DE ^ i as u64);
+        if plan_keys(&base, &cfg).backend == Backend::CdfSort {
+            expected_cdf += 1;
+        }
+        let check = SortCheck::capture(&base, lt, |x| *x);
+        let out = svc.submit_keys(base).wait();
+        check.assert_output(&out, lt, &format!("{} n={n}", d.name()));
+    }
+    assert!(expected_cdf >= 1, "Zipf must fingerprint as a CDF input");
+    let m = svc.metrics();
+    assert_eq!(
+        m.backend_count(Backend::CdfSort),
+        expected_cdf,
+        "cdf routed off-model: {}",
+        m.backends_summary()
+    );
+
+    // The fallback-to-comparison path has its own counter: force the
+    // CDF backend onto inputs whose fit must degenerate (a ~90%
+    // duplicate atom plus a thin wide tail — the strided sample either
+    // collapses to a single key or fails the skew check).
+    let forced = SortService::new(
+        Config::default()
+            .with_threads(2)
+            .with_planner(PlannerMode::Force(Backend::CdfSort)),
+    );
+    let mut rng = Xoshiro256::new(0xFA11BACC);
+    for trial in 0..2u64 {
+        let base: Vec<u64> = (0..40_000)
+            .map(|i| if i % 10 == 9 { rng.next_u64() | 1 } else { trial })
+            .collect();
+        let check = SortCheck::capture(&base, lt, |x| *x);
+        let out = forced.submit_keys(base).wait();
+        check.assert_output(&out, lt, "forced-cdf skewed");
+    }
+    let fm = forced.metrics();
+    assert_eq!(
+        fm.backend_count(Backend::CdfSort),
+        2,
+        "{}",
+        fm.backends_summary()
+    );
+    assert!(
+        fm.cdf_fallbacks >= 2,
+        "degenerate fits must increment the fallback counter (got {})",
+        fm.cdf_fallbacks
+    );
+}
+
+#[test]
 fn forced_radix_service_handles_mixed_types() {
     let svc = SortService::new(
         Config::default()
@@ -211,13 +285,37 @@ fn forced_radix_service_handles_mixed_types() {
     let tf = svc.submit_keys(datagen::gen_f64(Distribution::Uniform, 50_000, 2));
     let tp = svc.submit_keys(datagen::gen_pair(Distribution::RootDup, 50_000, 3));
     let tb = svc.submit_keys(datagen::gen_bytes100(Distribution::TwoDup, 10_000, 4));
-    assert!(is_sorted_by(&tu.wait(), lt));
-    assert!(is_sorted_by(&tf.wait(), |a: &f64, b: &f64| a < b));
-    assert!(is_sorted_by(&tp.wait(), Pair::less));
-    assert!(is_sorted_by(&tb.wait(), Bytes100::less));
+    assert_sorted(&tu.wait(), lt, "radix u64");
+    assert_sorted(&tf.wait(), |a: &f64, b: &f64| a < b, "radix f64");
+    assert_sorted(&tp.wait(), Pair::less, "radix Pair");
+    assert_sorted(&tb.wait(), Bytes100::less, "radix Bytes100");
     let m = svc.metrics();
     assert_eq!(
         m.backend_count(Backend::Radix),
+        4,
+        "{}",
+        m.backends_summary()
+    );
+}
+
+#[test]
+fn forced_cdf_service_handles_mixed_types() {
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(3)
+            .with_planner(PlannerMode::Force(Backend::CdfSort)),
+    );
+    let tu = svc.submit_keys(datagen::gen_u64(Distribution::Zipf, 50_000, 1));
+    let tf = svc.submit_keys(datagen::gen_f64(Distribution::Exponential, 50_000, 2));
+    let tp = svc.submit_keys(datagen::gen_pair(Distribution::Zipf, 50_000, 3));
+    let tb = svc.submit_keys(datagen::gen_bytes100(Distribution::SortedRuns, 10_000, 4));
+    assert_sorted(&tu.wait(), lt, "cdf u64");
+    assert_sorted(&tf.wait(), |a: &f64, b: &f64| a < b, "cdf f64");
+    assert_sorted(&tp.wait(), Pair::less, "cdf Pair");
+    assert_sorted(&tb.wait(), Bytes100::less, "cdf Bytes100");
+    let m = svc.metrics();
+    assert_eq!(
+        m.backend_count(Backend::CdfSort),
         4,
         "{}",
         m.backends_summary()
@@ -250,10 +348,10 @@ fn zero_scratch_allocations_after_warmup() {
         let pair_job = datagen::gen_pair(Distribution::TwoDup, 4_000, round);
         let pairs = svc.submit_by(pair_job, Pair::less);
         for t in tickets {
-            assert!(is_sorted_by(&t.wait(), lt));
+            assert_sorted(&t.wait(), lt, "small job");
         }
-        assert!(is_sorted_by(&big.wait(), lt));
-        assert!(is_sorted_by(&pairs.wait(), Pair::less));
+        assert_sorted(&big.wait(), lt, "big job");
+        assert_sorted(&pairs.wait(), Pair::less, "pair job");
     }
 
     let d = svc.metrics().delta(&warm);

@@ -1,10 +1,15 @@
 //! Integration tests across the whole stack: Sorter API, parallel
 //! scheduler, strictly-in-place driver, all baselines, all element
-//! types, cross-algorithm agreement.
+//! types, cross-algorithm agreement — with the sort assertions provided
+//! by the shared oracle (`tests/common/oracle.rs`) and workload seeds
+//! replayable through `IPS4O_TEST_SEED`.
 
+mod common;
+
+use common::oracle::{assert_same_multiset, assert_sorted, seeded, SortCheck};
 use ips4o::baselines;
 use ips4o::datagen::{self, Distribution};
-use ips4o::util::{is_sorted_by, multiset_fingerprint, Bytes100, Pair, Quartet};
+use ips4o::util::{Bytes100, Pair, Quartet};
 use ips4o::{Backend, Config, PlannerMode, Sorter};
 
 fn lt(a: &u64, b: &u64) -> bool {
@@ -13,186 +18,198 @@ fn lt(a: &u64, b: &u64) -> bool {
 
 #[test]
 fn all_algorithms_agree_on_all_distributions() {
-    let n = 30_000;
-    for d in Distribution::ALL {
-        let base = datagen::gen_u64(d, n, 123);
-        let mut expected = base.clone();
-        expected.sort_unstable();
+    seeded("all_algorithms_agree_on_all_distributions", 123, |seed| {
+        let n = 30_000;
+        for d in Distribution::ALL {
+            let base = datagen::gen_u64(d, n, seed);
+            let check = SortCheck::capture(&base, lt, |x| *x);
+            let run = |name: &str, v: Vec<u64>| {
+                check.assert_output(&v, lt, &format!("{name} on {}", d.name()));
+            };
 
-        let check = |name: &str, v: Vec<u64>| {
-            assert_eq!(v, expected, "{name} disagrees on {}", d.name());
-        };
+            let mut v = base.clone();
+            ips4o::sort(&mut v);
+            run("IS4o", v);
 
-        let mut v = base.clone();
-        ips4o::sort(&mut v);
-        check("IS4o", v);
+            let mut v = base.clone();
+            ips4o::sort_par(&mut v);
+            run("IPS4o", v);
 
-        let mut v = base.clone();
-        ips4o::sort_par(&mut v);
-        check("IPS4o", v);
+            let mut v = base.clone();
+            ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
+            run("IS4o-strict", v);
 
-        let mut v = base.clone();
-        ips4o::strictly_inplace::sort_strictly_inplace(&mut v, &Config::default(), &lt);
-        check("IS4o-strict", v);
+            let mut v = base.clone();
+            baselines::introsort::sort_by(&mut v, &lt);
+            run("introsort", v);
 
-        let mut v = base.clone();
-        baselines::introsort::sort_by(&mut v, &lt);
-        check("introsort", v);
+            let mut v = base.clone();
+            baselines::dualpivot::sort_by(&mut v, &lt);
+            run("dualpivot", v);
 
-        let mut v = base.clone();
-        baselines::dualpivot::sort_by(&mut v, &lt);
-        check("dualpivot", v);
+            let mut v = base.clone();
+            baselines::blockquicksort::sort_by(&mut v, &lt);
+            run("blockquicksort", v);
 
-        let mut v = base.clone();
-        baselines::blockquicksort::sort_by(&mut v, &lt);
-        check("blockquicksort", v);
+            let mut v = base.clone();
+            baselines::s3sort::sort_by(&mut v, &lt);
+            run("s3sort", v);
 
-        let mut v = base.clone();
-        baselines::s3sort::sort_by(&mut v, &lt);
-        check("s3sort", v);
+            let mut v = base.clone();
+            baselines::par_quicksort::sort_unbalanced(&mut v, 4, &lt);
+            run("par_qsort_ub", v);
 
-        let mut v = base.clone();
-        baselines::par_quicksort::sort_unbalanced(&mut v, 4, &lt);
-        check("par_qsort_ub", v);
+            let mut v = base.clone();
+            baselines::par_quicksort::sort_balanced(&mut v, 4, &lt);
+            run("par_qsort_b", v);
 
-        let mut v = base.clone();
-        baselines::par_quicksort::sort_balanced(&mut v, 4, &lt);
-        check("par_qsort_b", v);
+            let mut v = base.clone();
+            baselines::par_mergesort::sort_by(&mut v, 4, &lt);
+            run("par_mergesort", v);
 
-        let mut v = base.clone();
-        baselines::par_mergesort::sort_by(&mut v, 4, &lt);
-        check("par_mergesort", v);
+            let mut v = base.clone();
+            baselines::pbbs_samplesort::sort_by(&mut v, 4, &lt);
+            run("pbbs", v);
 
-        let mut v = base.clone();
-        baselines::pbbs_samplesort::sort_by(&mut v, 4, &lt);
-        check("pbbs", v);
+            let mut v = base.clone();
+            baselines::tbb_like::sort_by(&mut v, 4, &lt);
+            run("tbb", v);
 
-        let mut v = base.clone();
-        baselines::tbb_like::sort_by(&mut v, 4, &lt);
-        check("tbb", v);
+            let mut v = base.clone();
+            ips4o::radix::sort_radix(&mut v, &Config::default());
+            run("radix-seq", v);
 
-        let mut v = base.clone();
-        ips4o::radix::sort_radix(&mut v, &Config::default());
-        check("radix-seq", v);
+            let mut v = base.clone();
+            ips4o::planner::sort_cdf(&mut v, &Config::default());
+            run("cdf-seq", v);
 
-        let mut v = base.clone();
-        ips4o::sort_par_keys(&mut v);
-        check("planner-par", v);
-    }
+            let mut v = base.clone();
+            ips4o::sort_par_keys(&mut v);
+            run("planner-par", v);
+        }
+    });
 }
 
 #[test]
 fn planner_backends_agree_on_every_distribution() {
     // Every forced backend (plus auto routing), sequential and parallel,
-    // must produce the exact std-sorted sequence.
-    let n = 30_000;
-    for d in Distribution::ALL {
-        let base = datagen::gen_u64(d, n, 321);
-        let mut expected = base.clone();
-        expected.sort_unstable();
-        for backend in Backend::ALL {
-            if backend == Backend::BaseCase {
-                continue; // quadratic on 30k elements; covered in unit tests
+    // must produce the exact std-sorted sequence — `Backend::ALL` now
+    // includes the learned-CDF backend.
+    seeded("planner_backends_agree_on_every_distribution", 321, |seed| {
+        let n = 30_000;
+        for d in Distribution::ALL {
+            let base = datagen::gen_u64(d, n, seed);
+            let check = SortCheck::capture(&base, lt, |x| *x);
+            for backend in Backend::ALL {
+                if backend == Backend::BaseCase {
+                    continue; // quadratic on 30k elements; covered in unit tests
+                }
+                for threads in [1usize, 4] {
+                    let cfg = Config::default()
+                        .with_threads(threads)
+                        .with_planner(PlannerMode::Force(backend));
+                    let sorter = Sorter::new(cfg);
+                    let mut v = base.clone();
+                    sorter.sort_keys(&mut v);
+                    let ctx = format!("{} t={threads} on {}", backend.name(), d.name());
+                    check.assert_output(&v, lt, &ctx);
+                }
             }
-            for threads in [1usize, 4] {
-                let cfg = Config::default()
-                    .with_threads(threads)
-                    .with_planner(PlannerMode::Force(backend));
-                let sorter = Sorter::new(cfg);
-                let mut v = base.clone();
-                sorter.sort_keys(&mut v);
-                assert_eq!(
-                    v,
-                    expected,
-                    "{} t={threads} on {}",
-                    backend.name(),
-                    d.name()
-                );
-            }
+            let auto = Sorter::new(Config::default().with_threads(4));
+            let mut v = base.clone();
+            auto.sort_keys(&mut v);
+            check.assert_output(&v, lt, &format!("auto on {}", d.name()));
         }
-        let auto = Sorter::new(Config::default().with_threads(4));
-        let mut v = base;
-        auto.sort_keys(&mut v);
-        assert_eq!(v, expected, "auto on {}", d.name());
-    }
+    });
 }
 
 #[test]
 fn large_parallel_sort_multiple_big_tasks() {
     // Big enough that the scheduler partitions several "big" tasks.
-    let n = 2_000_000;
-    let mut v = datagen::gen_u64(Distribution::Uniform, n, 9);
-    let fp = multiset_fingerprint(&v, |x| *x);
-    let sorter = Sorter::new(Config::default().with_threads(4));
-    sorter.sort(&mut v);
-    assert!(is_sorted_by(&v, lt));
-    assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+    seeded("large_parallel_sort_multiple_big_tasks", 9, |seed| {
+        let n = 2_000_000;
+        let base = datagen::gen_u64(Distribution::Uniform, n, seed);
+        let mut v = base.clone();
+        let sorter = Sorter::new(Config::default().with_threads(4));
+        sorter.sort(&mut v);
+        assert_sorted(&v, lt, "large parallel");
+        assert_same_multiset(&base, &v, |x| *x, "large parallel");
+    });
 }
 
 #[test]
 fn parallel_duplicate_heavy_equality_path() {
-    let n = 1_000_000;
-    let mut v = datagen::gen_u64(Distribution::RootDup, n, 5);
-    let fp = multiset_fingerprint(&v, |x| *x);
-    let sorter = Sorter::new(Config::default().with_threads(8));
-    sorter.sort(&mut v);
-    assert!(is_sorted_by(&v, lt));
-    assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+    seeded("parallel_duplicate_heavy_equality_path", 5, |seed| {
+        let n = 1_000_000;
+        let base = datagen::gen_u64(Distribution::RootDup, n, seed);
+        let mut v = base.clone();
+        let sorter = Sorter::new(Config::default().with_threads(8));
+        sorter.sort(&mut v);
+        assert_sorted(&v, lt, "RootDup parallel");
+        assert_same_multiset(&base, &v, |x| *x, "RootDup parallel");
+    });
 }
 
 #[test]
 fn composite_types_parallel() {
-    let n = 300_000;
-    let sorter = Sorter::new(Config::default().with_threads(4));
+    seeded("composite_types_parallel", 2, |seed| {
+        let n = 300_000;
+        let sorter = Sorter::new(Config::default().with_threads(4));
 
-    let mut p = datagen::gen_pair(Distribution::TwoDup, n, 2);
-    sorter.sort_by(&mut p, &Pair::less);
-    assert!(is_sorted_by(&p, Pair::less));
+        let mut p = datagen::gen_pair(Distribution::TwoDup, n, seed);
+        sorter.sort_by(&mut p, &Pair::less);
+        assert_sorted(&p, Pair::less, "Pair");
 
-    let mut q = datagen::gen_quartet(Distribution::Uniform, n, 2);
-    sorter.sort_by(&mut q, &Quartet::less);
-    assert!(is_sorted_by(&q, Quartet::less));
+        let mut q = datagen::gen_quartet(Distribution::Uniform, n, seed);
+        sorter.sort_by(&mut q, &Quartet::less);
+        assert_sorted(&q, Quartet::less, "Quartet");
 
-    let mut b = datagen::gen_bytes100(Distribution::Exponential, 60_000, 2);
-    sorter.sort_by(&mut b, &Bytes100::less);
-    assert!(is_sorted_by(&b, Bytes100::less));
+        let mut b = datagen::gen_bytes100(Distribution::Exponential, 60_000, seed);
+        sorter.sort_by(&mut b, &Bytes100::less);
+        assert_sorted(&b, Bytes100::less, "Bytes100");
+    });
 }
 
 #[test]
 fn f64_total_order_with_nan_free_data() {
-    let n = 500_000;
-    let mut v = datagen::gen_f64(Distribution::Exponential, n, 7);
-    let sorter = Sorter::new(Config::default().with_threads(4));
-    sorter.sort_by(&mut v, &|a: &f64, b: &f64| a < b);
-    assert!(is_sorted_by(&v, |a: &f64, b: &f64| a < b));
+    seeded("f64_total_order_with_nan_free_data", 7, |seed| {
+        let n = 500_000;
+        let mut v = datagen::gen_f64(Distribution::Exponential, n, seed);
+        let sorter = Sorter::new(Config::default().with_threads(4));
+        sorter.sort_by(&mut v, &|a: &f64, b: &f64| a < b);
+        assert_sorted(&v, |a: &f64, b: &f64| a < b, "f64");
+    });
 }
 
 #[test]
 fn sorter_survives_many_calls() {
-    let sorter = Sorter::new(Config::default().with_threads(4));
-    for seed in 0..20 {
-        let mut v = datagen::gen_u64(Distribution::Uniform, 50_000, seed);
-        sorter.sort(&mut v);
-        assert!(is_sorted_by(&v, lt));
-    }
+    seeded("sorter_survives_many_calls", 0, |seed| {
+        let sorter = Sorter::new(Config::default().with_threads(4));
+        for i in 0..20 {
+            let mut v = datagen::gen_u64(Distribution::Uniform, 50_000, seed ^ i);
+            sorter.sort(&mut v);
+            assert_sorted(&v, lt, &format!("call {i}"));
+        }
+    });
 }
 
 #[test]
 fn stability_of_bucket_boundaries_across_configs() {
     // Different k/b configs must all produce identical sorted output.
-    let base = datagen::gen_u64(Distribution::EightDup, 100_000, 11);
-    let mut expected = base.clone();
-    expected.sort_unstable();
-    for (k, bb) in [(4usize, 256usize), (16, 512), (64, 1024), (256, 4096)] {
-        let cfg = Config::default()
-            .with_max_buckets(k)
-            .with_block_bytes(bb)
-            .with_threads(3);
-        let sorter = Sorter::new(cfg);
-        let mut v = base.clone();
-        sorter.sort(&mut v);
-        assert_eq!(v, expected, "k={k} bb={bb}");
-    }
+    seeded("stability_of_bucket_boundaries_across_configs", 11, |seed| {
+        let base = datagen::gen_u64(Distribution::EightDup, 100_000, seed);
+        let check = SortCheck::capture(&base, lt, |x| *x);
+        for (k, bb) in [(4usize, 256usize), (16, 512), (64, 1024), (256, 4096)] {
+            let cfg = Config::default()
+                .with_max_buckets(k)
+                .with_block_bytes(bb)
+                .with_threads(3);
+            let sorter = Sorter::new(cfg);
+            let mut v = base.clone();
+            sorter.sort(&mut v);
+            check.assert_output(&v, lt, &format!("k={k} bb={bb}"));
+        }
+    });
 }
 
 #[test]
@@ -200,10 +217,10 @@ fn zero_one_two_element_inputs_everywhere() {
     for n in [0usize, 1, 2] {
         let mut v: Vec<u64> = (0..n as u64).rev().collect();
         ips4o::sort(&mut v);
-        assert!(is_sorted_by(&v, lt));
+        assert_sorted(&v, lt, "seq tiny");
         let mut v: Vec<u64> = (0..n as u64).rev().collect();
         ips4o::sort_par(&mut v);
-        assert!(is_sorted_by(&v, lt));
+        assert_sorted(&v, lt, "par tiny");
     }
 }
 
@@ -222,14 +239,19 @@ fn adversarial_patterns() {
     ];
     let sorter = Sorter::new(Config::default().with_threads(4));
     for (name, base) in patterns {
-        let fp = multiset_fingerprint(&base, |x| *x);
+        let check = SortCheck::capture(&base, lt, |x| *x);
         let mut v = base.clone();
         sorter.sort(&mut v);
-        assert!(is_sorted_by(&v, lt), "{name}");
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x), "{name}");
+        check.assert_output(&v, lt, name);
 
-        let mut v = base;
+        let mut v = base.clone();
         ips4o::sequential::sort_by(&mut v, &Config::default(), &lt);
-        assert!(is_sorted_by(&v, lt), "{name} (seq)");
+        check.assert_output(&v, lt, &format!("{name} (seq)"));
+
+        // The adversarial shapes through the keyed menu as well — the
+        // planner may route these to radix or the learned CDF.
+        let mut v = base;
+        sorter.sort_keys(&mut v);
+        check.assert_output(&v, lt, &format!("{name} (keys)"));
     }
 }

@@ -1,0 +1,125 @@
+//! Scheduler A/B bench: the dynamic work-stealing recursion scheduler
+//! against the `static-lpt` baseline (serialized big tasks + LPT small
+//! bins), per distribution, for the comparison and radix parallel
+//! backends.
+//!
+//! Emits `BENCH_scheduler_scaling.json` when `IPS4O_BENCH_JSON=<dir>` is
+//! set. Acceptance reference: dynamic ≥ static-lpt throughput on the
+//! skewed distributions (Zipf, AlmostSorted, Exponential) at t ≥ 4 —
+//! exactly where serialized full-pool passes and unstolen straggler
+//! bins cost the most.
+
+use ips4o::bench_harness::{bench, print_machine_info, reps_for, JsonReport, Table};
+use ips4o::datagen::{gen_u64, Distribution};
+use ips4o::util::is_sorted_by;
+use ips4o::{Backend, Config, PlannerMode, SchedulerMode, Sorter};
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(4); // the acceptance reference is defined for t >= 4
+    let n: usize = if full { 1 << 23 } else { 1 << 20 };
+    let reps = reps_for(n);
+    println!("# scheduler scaling — n={n} u64 keys, t={threads}, dynamic vs static-lpt\n");
+
+    let mk = |backend: Backend, mode: SchedulerMode| {
+        Sorter::new(
+            Config::default()
+                .with_threads(threads)
+                .with_planner(PlannerMode::Force(backend))
+                .with_scheduler(mode),
+        )
+    };
+    let backends = [Backend::Ips4oPar, Backend::Radix];
+    let dists = [
+        Distribution::Uniform,
+        Distribution::Zipf,
+        Distribution::AlmostSorted,
+        Distribution::Exponential,
+        Distribution::RootDup,
+        Distribution::SortedRuns,
+    ];
+
+    let mut table = Table::new(&["backend", "dist", "dynamic ms", "static ms", "dyn/static"]);
+    let mut report = JsonReport::new("scheduler_scaling", threads);
+    // (dist, backend, dynamic throughput, static throughput)
+    let mut pass_lines: Vec<(&str, &str, f64, f64)> = Vec::new();
+
+    for backend in backends {
+        let dynamic = mk(backend, SchedulerMode::Dynamic);
+        let static_lpt = mk(backend, SchedulerMode::StaticLpt);
+        for d in dists {
+            let make = || gen_u64(d, n, 0x5CA1E);
+            let m_dyn = bench(n, reps, &make, |mut v| {
+                dynamic.sort_keys(&mut v);
+                v
+            });
+            let m_static = bench(n, reps, &make, |mut v| {
+                static_lpt.sort_keys(&mut v);
+                v
+            });
+
+            // Correctness spot-check outside the timed closures.
+            let mut v = make();
+            dynamic.sort_keys(&mut v);
+            assert!(
+                is_sorted_by(&v, |a, b| a < b),
+                "dynamic {} failed on {}",
+                backend.name(),
+                d.name()
+            );
+
+            report.add(&format!("dynamic-{}", backend.name()), d.name(), &m_dyn);
+            report.add(&format!("static-lpt-{}", backend.name()), d.name(), &m_static);
+            if matches!(
+                d,
+                Distribution::Zipf | Distribution::AlmostSorted | Distribution::Exponential
+            ) {
+                pass_lines.push((
+                    d.name(),
+                    backend.name(),
+                    m_dyn.throughput(),
+                    m_static.throughput(),
+                ));
+            }
+            table.row(vec![
+                backend.name().to_string(),
+                d.name().to_string(),
+                format!("{:.1}", m_dyn.mean.as_secs_f64() * 1e3),
+                format!("{:.1}", m_static.mean.as_secs_f64() * 1e3),
+                format!("{:.2}x", m_dyn.throughput() / m_static.throughput().max(1.0)),
+            ]);
+        }
+        // Rebalancing must actually have happened under the dynamic mode.
+        let m = dynamic.scratch_metrics();
+        println!(
+            "# {}: steals={} shares={} group_splits={} fused_scans={}",
+            backend.name(),
+            m.task_steals,
+            m.task_shares,
+            m.group_splits,
+            m.radix_fused_scans
+        );
+    }
+
+    table.print();
+    report.emit_and_report();
+
+    println!();
+    for (dist, backend, dyn_tp, static_tp) in pass_lines {
+        println!(
+            "{dist}/{backend}: dynamic {:.1} M elem/s vs static-lpt {:.1} M elem/s ({:.2}x)",
+            dyn_tp / 1e6,
+            static_tp / 1e6,
+            dyn_tp / static_tp.max(1.0)
+        );
+        if dyn_tp >= static_tp {
+            println!("PASS: dynamic >= static-lpt on {dist} ({backend})");
+        } else {
+            println!("FAIL: dynamic slower than static-lpt on {dist} ({backend})");
+        }
+    }
+}

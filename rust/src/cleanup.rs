@@ -80,7 +80,10 @@ fn overhang(plan: &Plan, i: usize, w: i32, overflowed: bool) -> (usize, usize) {
 /// * `bufs` — every thread's local buffers (partial fills are drained);
 /// * `saved_head` — pre-saved contents of `[bucket_starts[hi], d[hi]·b)`,
 ///   used as the overhang source when processing bucket `hi − 1`;
-/// * `on_bucket_done(start, end)` — eager base-case hook (§4.7).
+/// * `on_bucket_done(bucket, start, end)` — per-bucket completion hook:
+///   eager base-case sorting (§4.7) and the radix/CDF key-range fusion
+///   (the next level's min/max scan runs here, while the bucket is
+///   cache-warm, instead of as a separate sweep).
 ///
 /// # Safety contract
 /// Bucket element ranges `[bucket_starts[lo], bucket_starts[hi])` are
@@ -99,7 +102,7 @@ pub fn cleanup_buckets<T, F>(
     mut on_bucket_done: F,
 ) where
     T: Element,
-    F: FnMut(usize, usize),
+    F: FnMut(usize, usize, usize),
 {
     let b = plan.block;
     let ovf_bucket = overflow.bucket();
@@ -183,7 +186,7 @@ pub fn cleanup_buckets<T, F>(
             h.b
         );
 
-        on_bucket_done(plan.bucket_starts[i], plan.bucket_starts[i + 1]);
+        on_bucket_done(i, plan.bucket_starts[i], plan.bucket_starts[i + 1]);
     }
 }
 

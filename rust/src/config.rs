@@ -1,6 +1,7 @@
 //! Tuning parameters of IPS⁴o (paper §4.7) and their defaults.
 
 use crate::planner::backend::PlannerMode;
+use crate::scheduler::SchedulerMode;
 use crate::util::{log2_ceil, log2_floor};
 
 /// All tuning knobs of the algorithm. Field names follow the paper:
@@ -54,6 +55,12 @@ pub struct Config {
     /// use one backend (`Force`), or the pre-planner thread-count
     /// dispatch (`Disabled`). See [`crate::planner`].
     pub planner: PlannerMode,
+    /// How the parallel drivers schedule recursion: `Dynamic` (the
+    /// default — concurrent big-task partitioning by proportional
+    /// thread groups plus work stealing/sharing for small tasks) or
+    /// `StaticLpt` (the serialized-big + LPT-small baseline, kept for
+    /// A/B comparison). See [`crate::scheduler`].
+    pub scheduler: SchedulerMode,
 }
 
 impl Default for Config {
@@ -71,6 +78,7 @@ impl Default for Config {
             service_shards: 4,
             small_sort_bytes: 256 << 10, // 256 KiB ≈ where cooperative partitioning starts to win
             planner: PlannerMode::Auto,
+            scheduler: SchedulerMode::Dynamic,
         }
     }
 }
@@ -122,6 +130,12 @@ impl Config {
     /// Builder-style planner mode override.
     pub fn with_planner(mut self, mode: PlannerMode) -> Self {
         self.planner = mode;
+        self
+    }
+
+    /// Builder-style recursion-scheduler mode override.
+    pub fn with_scheduler(mut self, mode: SchedulerMode) -> Self {
+        self.scheduler = mode;
         self
     }
 
@@ -268,6 +282,13 @@ mod tests {
         let c = c.with_service_shards(0).with_small_sort_bytes(0);
         assert_eq!(c.service_shards, 1, "shards clamp to at least one");
         assert_eq!(c.small_sort_bytes, 0, "zero disables batching");
+    }
+
+    #[test]
+    fn scheduler_knob_defaults_and_builder() {
+        assert_eq!(Config::default().scheduler, SchedulerMode::Dynamic);
+        let c = Config::default().with_scheduler(SchedulerMode::StaticLpt);
+        assert_eq!(c.scheduler, SchedulerMode::StaticLpt);
     }
 
     #[test]

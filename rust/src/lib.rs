@@ -74,6 +74,18 @@
 //! Routing decisions are counted per backend in the metrics (CDF
 //! fit-failure fallbacks separately); [`Config::with_planner`] forces a
 //! backend or disables routing.
+//!
+//! ## Dynamic recursion scheduler
+//!
+//! All three parallel backends share one recursion driver
+//! ([`scheduler`]): coexisting big subproblems are partitioned
+//! *concurrently* by proportional thread groups (instead of one after
+//! another behind a full-pool barrier), small subproblems flow through a
+//! lock-light work-stealing queue, and busy threads voluntarily share
+//! parts of their sequential recursion stacks with idle peers.
+//! Steal/share/group-split events are counted in the metrics;
+//! [`Config::with_scheduler`] switches to the `static-lpt` baseline for
+//! A/B comparison (`benches/scheduler_scaling.rs`).
 
 pub mod arena;
 pub mod base_case;
@@ -90,6 +102,7 @@ pub mod permutation;
 pub mod planner;
 pub mod radix;
 pub mod sampling;
+pub mod scheduler;
 pub mod sequential;
 pub mod service;
 pub mod sorter;
@@ -103,6 +116,7 @@ pub mod runtime;
 pub use config::Config;
 pub use planner::{Backend, PlannerMode, SortPlan};
 pub use radix::RadixKey;
+pub use scheduler::SchedulerMode;
 pub use service::{JobTicket, SortService};
 pub use sorter::Sorter;
 

@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use ips4o::baselines::Algo;
 use ips4o::datagen::{self, Distribution};
-use ips4o::{Backend, Config, PlannerMode, Sorter};
+use ips4o::{Backend, Config, PlannerMode, SchedulerMode, Sorter};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +62,8 @@ FLAGS (sort):
     --planner <mode>   auto | off | ips4o-par | ips4o-seq | radix | cdf |
                        run-merge | base-case (forces a backend)
                                                       [default: auto]
+    --scheduler <mode> dynamic | static-lpt (recursion scheduling A/B)
+                                                      [default: dynamic]
 
 FLAGS (serve):
     --clients <int>      concurrent client threads        [default: 4]
@@ -73,6 +75,7 @@ FLAGS (serve):
     --shards <int>       submission-queue shards          [default: 4]
     --small-bytes <int>  batching threshold in bytes      [default: 262144]
     --planner <mode>     auto | off | <backend>           [default: auto]
+    --scheduler <mode>   dynamic | static-lpt             [default: dynamic]
 "#
     );
 }
@@ -118,6 +121,12 @@ fn build_config(args: &[String]) -> Config {
     }
     if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_small_sort_bytes(b);
+    }
+    if let Some(mode) = parse_flag(args, "--scheduler") {
+        match SchedulerMode::from_name(mode) {
+            Some(m) => cfg = cfg.with_scheduler(m),
+            None => eprintln!("unknown scheduler mode {mode:?}; using dynamic"),
+        }
     }
     if let Some(mode) = parse_flag(args, "--planner") {
         cfg = cfg.with_planner(match mode {
@@ -372,6 +381,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         "backends: {} ({} distinct)",
         d.backends_summary(),
         d.distinct_backends()
+    );
+    println!(
+        "scheduler: steals={} shares={} group_splits={} fused_scans={}",
+        d.task_steals, d.task_shares, d.group_splits, d.radix_fused_scans
     );
     let fails = failures.load(Ordering::Relaxed);
     if fails == 0 {

@@ -105,6 +105,18 @@ pub struct ScratchCounters {
     /// classifier because the learned fit was degenerate or too skewed
     /// (see [`crate::planner::cdf`]).
     pub cdf_fallbacks: AtomicU64,
+    /// Queued subtasks taken from another worker's shard by the dynamic
+    /// recursion scheduler ([`crate::scheduler`]).
+    pub task_steals: AtomicU64,
+    /// Subtasks a busy worker voluntarily published from its sequential
+    /// recursion stack because it observed idle peers.
+    pub task_shares: AtomicU64,
+    /// Times a thread group split into two or more proportional
+    /// subgroups to partition coexisting big subproblems concurrently.
+    pub group_splits: AtomicU64,
+    /// Radix/CDF recursion levels whose min/max key scan was fused into
+    /// the previous level's cleanup pass (one full sweep saved each).
+    pub radix_fused_scans: AtomicU64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [AtomicU64; Backend::COUNT],
@@ -119,6 +131,10 @@ impl Default for ScratchCounters {
             batches_dispatched: AtomicU64::new(0),
             elements_sorted: AtomicU64::new(0),
             cdf_fallbacks: AtomicU64::new(0),
+            task_steals: AtomicU64::new(0),
+            task_shares: AtomicU64::new(0),
+            group_splits: AtomicU64::new(0),
+            radix_fused_scans: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -136,6 +152,10 @@ impl ScratchCounters {
         self.batches_dispatched.store(0, Ordering::Relaxed);
         self.elements_sorted.store(0, Ordering::Relaxed);
         self.cdf_fallbacks.store(0, Ordering::Relaxed);
+        self.task_steals.store(0, Ordering::Relaxed);
+        self.task_shares.store(0, Ordering::Relaxed);
+        self.group_splits.store(0, Ordering::Relaxed);
+        self.radix_fused_scans.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
             c.store(0, Ordering::Relaxed);
         }
@@ -158,6 +178,10 @@ impl ScratchCounters {
             batches_dispatched: self.batches_dispatched.load(Ordering::Relaxed),
             elements_sorted: self.elements_sorted.load(Ordering::Relaxed),
             cdf_fallbacks: self.cdf_fallbacks.load(Ordering::Relaxed),
+            task_steals: self.task_steals.load(Ordering::Relaxed),
+            task_shares: self.task_shares.load(Ordering::Relaxed),
+            group_splits: self.group_splits.load(Ordering::Relaxed),
+            radix_fused_scans: self.radix_fused_scans.load(Ordering::Relaxed),
             backend_selected,
         }
     }
@@ -174,6 +198,14 @@ pub struct ScratchSnapshot {
     /// (Sub)ranges the CDF backend handed back to the comparison
     /// classifier (degenerate or skewed fit).
     pub cdf_fallbacks: u64,
+    /// Queued subtasks taken from another worker's shard.
+    pub task_steals: u64,
+    /// Subtasks voluntarily published by busy workers to idle peers.
+    pub task_shares: u64,
+    /// Thread-group splits for concurrent big-task partitioning.
+    pub group_splits: u64,
+    /// Min/max key scans fused into a previous cleanup pass.
+    pub radix_fused_scans: u64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [u64; Backend::COUNT],
@@ -192,6 +224,10 @@ impl ScratchSnapshot {
             batches_dispatched: self.batches_dispatched - earlier.batches_dispatched,
             elements_sorted: self.elements_sorted - earlier.elements_sorted,
             cdf_fallbacks: self.cdf_fallbacks - earlier.cdf_fallbacks,
+            task_steals: self.task_steals - earlier.task_steals,
+            task_shares: self.task_shares - earlier.task_shares,
+            group_splits: self.group_splits - earlier.group_splits,
+            radix_fused_scans: self.radix_fused_scans - earlier.radix_fused_scans,
             backend_selected,
         }
     }

@@ -149,6 +149,75 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Subgroup execution: barriers for SPMD regions smaller than the pool
+// ---------------------------------------------------------------------------
+
+/// A reusable sense-reversing spin barrier for a *subset* of the pool's
+/// threads — the substrate for thread-group execution: inside one
+/// [`ThreadPool::run`] region, disjoint contiguous groups of threads can
+/// each run their own barrier-phased SPMD computation (e.g. one
+/// cooperative partition step per group, concurrently), which is how the
+/// dynamic recursion scheduler ([`crate::scheduler`]) partitions several
+/// big subproblems at once instead of serializing full-pool passes.
+///
+/// The generation counter is monotone and never reset, so a thread that
+/// is slow to observe a release can never be trapped by a later reuse of
+/// the same barrier memory.
+///
+/// `wait` takes an abort flag: when a peer panics mid-phase it can never
+/// arrive, so waiters watch the flag and unwind instead of spinning
+/// forever (the pool then surfaces the original panic).
+pub struct SpinBarrier {
+    members: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    /// A barrier released when `members` threads arrive.
+    pub fn new(members: usize) -> Self {
+        SpinBarrier {
+            members: members.max(1),
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of threads that must arrive per release.
+    pub fn members(&self) -> usize {
+        self.members
+    }
+
+    /// Block until all members arrive. Panics if `aborted` becomes true
+    /// while waiting (a peer unwound and will never arrive).
+    pub fn wait(&self, aborted: &AtomicBool) {
+        if self.members == 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.members {
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if aborted.load(Ordering::Acquire) {
+                    panic!("SPMD group aborted: a peer thread panicked mid-phase");
+                }
+                spins = spins.saturating_add(1);
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    // Oversubscribed pools (t > cores) must make progress
+                    // even when an arriving member is descheduled.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
 fn worker_loop(shared: Arc<PoolShared>, tid: usize) {
     let mut last_gen = 0u64;
     loop {
@@ -211,6 +280,21 @@ impl<T> SharedSlice<T> {
     #[inline(always)]
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// A narrowed view of `[start, end)` under the same aliasing
+    /// contract — used by the recursion scheduler to hand a subtask's
+    /// range to the shared block phases with local offsets.
+    ///
+    /// Bounds are checked unconditionally: this is a safe `fn` and runs
+    /// once per partition step, so the check is free — and it keeps an
+    /// out-of-range caller from reaching `ptr.add` UB in release builds.
+    pub fn subslice(&self, start: usize, end: usize) -> SharedSlice<T> {
+        assert!(start <= end && end <= self.len, "subslice out of bounds");
+        SharedSlice {
+            ptr: unsafe { self.ptr.add(start) },
+            len: end - start,
+        }
     }
 
     /// Reborrow a sub-range as a mutable slice.
@@ -479,6 +563,69 @@ mod tests {
         // Zero-size items still spread (each counts one unit).
         let zeros = lpt_bins(vec![0usize; 6], 3, |&x| x);
         assert!(zeros.iter().all(|b| b.len() == 2), "{zeros:?}");
+    }
+
+    #[test]
+    fn spin_barrier_phases_are_ordered() {
+        // 4 threads append their id per phase; the barrier must make
+        // every phase's writes visible before the next phase reads them.
+        let t = 4;
+        let pool = ThreadPool::new(t);
+        let barrier = SpinBarrier::new(t);
+        let aborted = AtomicBool::new(false);
+        let phase_sums = (0..8).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        let sums = &phase_sums;
+        let b = &barrier;
+        let a = &aborted;
+        pool.run(move |tid| {
+            for (p, sum) in sums.iter().enumerate() {
+                sum.fetch_add(tid as u64 + 1, Ordering::Relaxed);
+                b.wait(a);
+                // After the barrier every member sees the full phase sum.
+                assert_eq!(sum.load(Ordering::Relaxed), 10, "phase {p}");
+                b.wait(a);
+            }
+        });
+    }
+
+    #[test]
+    fn spin_barrier_two_disjoint_groups() {
+        // Two groups of 2 inside one 4-thread SPMD region, each with its
+        // own barrier — the thread-group pattern the scheduler uses.
+        let pool = ThreadPool::new(4);
+        let b0 = SpinBarrier::new(2);
+        let b1 = SpinBarrier::new(2);
+        let aborted = AtomicBool::new(false);
+        let hits = AtomicU64::new(0);
+        let (b0, b1, a, h) = (&b0, &b1, &aborted, &hits);
+        pool.run(move |tid| {
+            let my = if tid < 2 { b0 } else { b1 };
+            for _ in 0..50 {
+                my.wait(a);
+                h.fetch_add(1, Ordering::Relaxed);
+                my.wait(a);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 50);
+    }
+
+    #[test]
+    fn spin_barrier_abort_releases_waiters() {
+        let pool = ThreadPool::new(3);
+        let barrier = SpinBarrier::new(3);
+        let aborted = AtomicBool::new(false);
+        let (b, a) = (&barrier, &aborted);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(move |tid| {
+                if tid == 2 {
+                    // This member never arrives; it aborts instead.
+                    a.store(true, Ordering::Release);
+                    panic!("simulated peer failure");
+                }
+                b.wait(a); // must unwind via the abort flag, not hang
+            });
+        }));
+        assert!(r.is_err(), "abort must propagate as a panic");
     }
 
     #[test]

@@ -32,9 +32,10 @@
 //! [`ScratchCounters::cdf_fallbacks`].
 //!
 //! The drivers below reuse the shared block machinery
-//! ([`distribute_seq`] / [`distribute_parallel`]) the same way the radix
-//! backend does — the 2020 follow-up paper's point that the IPS⁴o
-//! skeleton never looks inside the bucket mapping.
+//! ([`distribute_seq`] sequentially, the dynamic recursion scheduler
+//! [`crate::scheduler`] in parallel) the same way the radix backend
+//! does — the 2020 follow-up paper's point that the IPS⁴o skeleton
+//! never looks inside the bucket mapping.
 //!
 //! ```
 //! use ips4o::{Backend, Config, PlannerMode, Sorter};
@@ -47,20 +48,19 @@
 //!
 //! [`BucketMap`]: crate::classifier::BucketMap
 //! [`distribute_seq`]: crate::sequential::distribute_seq
-//! [`distribute_parallel`]: crate::task_scheduler::distribute_parallel
 //! [`ScratchCounters::cdf_fallbacks`]: crate::metrics::ScratchCounters
 
-use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 
 use crate::base_case::insertion_sort;
 use crate::classifier::CdfMap;
 use crate::config::Config;
 use crate::metrics::ScratchCounters;
-use crate::parallel::{lpt_bins, SharedSlice, ThreadPool};
+use crate::parallel::ThreadPool;
 use crate::radix::RadixKey;
+use crate::scheduler::{sort_scheduled, SchedBackend, StepPlan, WholeAction};
 use crate::sequential::{distribute_seq, sort_seq, SeqContext};
-use crate::task_scheduler::{distribute_parallel, sort_parallel_with, ParScratch};
+use crate::task_scheduler::{sort_parallel_with, ParScratch};
 
 /// Number of equal-width key segments in the piecewise-linear CDF.
 pub const CDF_SEGMENTS: usize = 64;
@@ -309,11 +309,67 @@ pub fn sort_cdf<T: RadixKey>(v: &mut [T], cfg: &Config) {
 // Parallel driver
 // ---------------------------------------------------------------------------
 
-/// Sort `v` with the parallel learned-CDF distribution sort, reusing
-/// caller-provided scratch. Mirrors the radix driver: big subproblems
-/// are distributed cooperatively, the remaining small ones are
-/// LPT-binned and CDF-sorted sequentially in parallel, and
-/// fallback ranges are comparison-sorted on the same pool at the end.
+/// The learned-CDF backend for the shared recursion scheduler: fit a
+/// model per task; degenerate fits (single key over a varying range,
+/// skew-rejected) and one-bucket passes defer to the comparison sort,
+/// counted in `cdf_fallbacks`.
+pub(crate) struct CdfSched<'c> {
+    counters: Option<&'c ScratchCounters>,
+}
+
+impl<'c, T: RadixKey> SchedBackend<T> for CdfSched<'c> {
+    type Aux = ();
+    type Map = CdfMap;
+
+    #[inline(always)]
+    fn less(&self, a: &T, b: &T) -> bool {
+        T::radix_less(a, b)
+    }
+
+    fn root_aux(&self, _v: &mut [T], _pool: &ThreadPool) {}
+
+    fn plan_step(
+        &self,
+        v: &mut [T],
+        _aux: (),
+        cfg: &Config,
+        _ctx: &mut SeqContext<T>,
+    ) -> StepPlan<CdfMap> {
+        match fit_range(v, crate::radix::capped_fanout(v.len(), cfg)) {
+            CdfFit::Fitted(m) => StepPlan::Partition(CdfMap::new(m)),
+            CdfFit::SingleKey => {
+                // The true-range scan here is sequential even for a big
+                // task (the group waits at the barrier): a degenerate
+                // sample is rare, the sweep happens once per such range,
+                // and it ends the CDF recursion either way (Done/Defer).
+                if let SingleKeyOutcome::AlreadySorted = resolve_single_key(v) {
+                    StepPlan::Done
+                } else {
+                    record_fallback(self.counters);
+                    StepPlan::Defer
+                }
+            }
+            CdfFit::Skewed => {
+                record_fallback(self.counters);
+                StepPlan::Defer
+            }
+        }
+    }
+
+    fn child_aux(&self, _slice: &[T]) {}
+
+    fn whole_range_action(&self, _num_buckets: usize) -> WholeAction {
+        // A one-bucket pass: the sample fit passed but the full data
+        // collapsed — refitting the same range would loop forever.
+        record_fallback(self.counters);
+        WholeAction::Defer
+    }
+}
+
+/// Sort `v` with the parallel learned-CDF distribution sort through the
+/// shared dynamic recursion scheduler, reusing caller-provided scratch.
+/// Fallback ranges (degenerate fits, one-bucket passes) are
+/// comparison-sorted on the same pool at the end.
 pub fn sort_cdf_par_with<T: RadixKey>(
     v: &mut [T],
     cfg: &Config,
@@ -334,81 +390,11 @@ pub fn sort_cdf_par_with<T: RadixKey>(
         sort_cdf_seq(v, scratch.leader_ctx(), counters);
         return;
     }
-
-    let threshold = cfg.parallel_task_min(n).max(min_parallel);
-    let base = cfg.base_case_size;
-    // Ranges the model could not split (degenerate fit or a one-bucket
-    // pass): comparison-sorted after the CDF phases release the scratch.
-    let mut fallback: Vec<(usize, usize)> = Vec::new();
-
-    {
-        let (ctxs, pointers, overflow) = scratch.parts();
-        let mut big: VecDeque<(usize, usize)> = VecDeque::new();
-        let mut small: Vec<(usize, usize)> = Vec::new();
-        big.push_back((0, n));
-
-        while let Some((s, e)) = big.pop_front() {
-            let sub = &mut v[s..e];
-            let model = match fit_range(sub, crate::radix::capped_fanout(e - s, cfg)) {
-                CdfFit::Fitted(m) => m,
-                CdfFit::SingleKey => {
-                    // Scan the true range with the whole pool (the
-                    // subrange here is at least `threshold` elements).
-                    let (min, max) = crate::radix::key_range_par(sub, pool);
-                    if !(min == max && T::COMPLETE) {
-                        record_fallback(counters);
-                        fallback.push((s, e));
-                    }
-                    continue;
-                }
-                CdfFit::Skewed => {
-                    record_fallback(counters);
-                    fallback.push((s, e));
-                    continue;
-                }
-            };
-            let map = CdfMap::new(model);
-            let bounds =
-                distribute_parallel(sub, cfg, pool, ctxs, pointers, overflow, &map, &T::radix_less);
-            for i in 0..bounds.len() - 1 {
-                let (cs, ce) = (s + bounds[i], s + bounds[i + 1]);
-                let len = ce - cs;
-                if len <= base && cfg.eager_base_case {
-                    continue; // eager-sorted during cleanup
-                }
-                if len < 2 {
-                    continue;
-                }
-                if len == e - s {
-                    // One-bucket pass: no progress possible here.
-                    record_fallback(counters);
-                    fallback.push((cs, ce));
-                } else if len >= threshold {
-                    big.push_back((cs, ce));
-                } else {
-                    small.push((cs, ce));
-                }
-            }
-        }
-
-        // --- Small-task phase: LPT assignment, sequential CDF sort ---
-        let bins = lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
-        let arr = SharedSlice::new(v);
-        let bins = &bins;
-        pool.run(|tid| {
-            // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
-            // ranges produced by the partitioning.
-            let ctx = unsafe { ctxs.get_mut(tid) };
-            for &(s, e) in &bins[tid] {
-                let slice = unsafe { arr.slice_mut(s, e) };
-                sort_cdf_seq(slice, ctx, counters);
-            }
-        });
-    }
-
+    let backend = CdfSched { counters };
+    let deferred = sort_scheduled(v, cfg, pool, scratch, &backend, counters);
     // --- Fallback ranges: comparison IPS⁴o on the same pool ---
-    for (s, e) in fallback {
-        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less);
+    for (s, e) in deferred {
+        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less, counters);
     }
 }
 

@@ -18,11 +18,20 @@
 //!   the most significant *differing* bit — skipping common prefixes the
 //!   way IPS²Ra does, so low-entropy keys (e.g. `RootDup`) don't waste
 //!   passes on constant high bytes;
-//! * [`sort_radix_seq`] / [`sort_radix_par_with`] drive the shared
-//!   [`distribute_seq`] / [`distribute_parallel`] phases, recursing per
-//!   digit instead of re-sampling. Types whose radix key is a prefix
-//!   ([`RadixKey::COMPLETE`]` == false`) fall back to comparison sorting
-//!   once their prefix stops discriminating.
+//! * [`sort_radix_seq`] drives the shared sequential distribution
+//!   phases ([`crate::sequential::distribute_seq_hooked`]), recursing
+//!   per digit instead of re-sampling; [`sort_radix_par_with`] plugs the
+//!   same digit extraction into the shared dynamic recursion scheduler
+//!   ([`crate::scheduler`]) as a [`SchedBackend`]. Types whose radix key
+//!   is a prefix ([`RadixKey::COMPLETE`]` == false`) fall back to
+//!   comparison sorting once their prefix stops discriminating.
+//!
+//! Each recursion level's min/max key scan is *fused* into the previous
+//! level's cleanup pass (the per-bucket completion hook computes the
+//! child's key range while its elements are cache-warm), saving one
+//! full sweep per level — counted in
+//! [`ScratchCounters::radix_fused_scans`](crate::metrics::ScratchCounters).
+//! Only the root range pays a dedicated scan.
 //!
 //! The planner ([`crate::planner`]) decides when this backend beats the
 //! comparison-based IPS⁴o; force it with
@@ -37,14 +46,16 @@
 //! assert!(v.windows(2).all(|w| w[0] <= w[1]));
 //! ```
 
-use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::base_case::insertion_sort;
 use crate::classifier::BucketMap;
 use crate::config::Config;
+use crate::metrics::ScratchCounters;
 use crate::parallel::{stripes, PerThread, SharedSlice, ThreadPool};
-use crate::sequential::{distribute_seq, SeqContext};
-use crate::task_scheduler::{distribute_parallel, sort_parallel_with, ParScratch};
+use crate::scheduler::{sort_scheduled, SchedBackend, StepPlan, WholeAction};
+use crate::sequential::{distribute_seq_hooked, SeqContext};
+use crate::task_scheduler::{sort_parallel_with, ParScratch};
 use crate::util::{Bytes100, Element, Pair, Quartet};
 
 // ---------------------------------------------------------------------------
@@ -263,9 +274,9 @@ pub(crate) fn key_range<T: RadixKey>(v: &[T]) -> (u64, u64) {
     (min, max)
 }
 
-/// Min/max radix key of `v`, scanned by all pool threads over stripes.
-/// Shared with the learned-CDF backend's parallel degenerate-sample
-/// check ([`crate::planner::cdf`]).
+/// Min/max radix key of `v`, scanned by all pool threads over stripes —
+/// the radix scheduler backend's root-task scan (every deeper level's
+/// range is fused into the parent's cleanup pass instead).
 pub(crate) fn key_range_par<T: RadixKey>(v: &mut [T], pool: &ThreadPool) -> (u64, u64) {
     let t = pool.threads();
     let n = v.len();
@@ -300,12 +311,43 @@ pub(crate) fn key_range_par<T: RadixKey>(v: &mut [T], pool: &ThreadPool) -> (u64
 
 /// Sort `v` with sequential in-place radix sort, reusing `ctx` scratch.
 pub fn sort_radix_seq<T: RadixKey>(v: &mut [T], ctx: &mut SeqContext<T>) {
+    sort_radix_seq_with(v, ctx, None);
+}
+
+/// [`sort_radix_seq`] with fused-scan accounting: every recursion level
+/// below the root gets its min/max key range from the parent's cleanup
+/// pass instead of a dedicated sweep, counted in
+/// `counters.radix_fused_scans` when provided.
+pub fn sort_radix_seq_with<T: RadixKey>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    counters: Option<&ScratchCounters>,
+) {
     let n = v.len();
     if n <= ctx.cfg.base_case_size.max(2) {
         insertion_sort(v, &T::radix_less);
         return;
     }
+    // The only dedicated key scan of the whole recursion (the root).
     let (min, max) = key_range(v);
+    radix_seq_ranged(v, ctx, min, max, counters);
+}
+
+/// The recursion body: `[min, max]` is the range's radix-key span,
+/// supplied by the caller (root scan or the parent's fused cleanup
+/// hook).
+fn radix_seq_ranged<T: RadixKey>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    min: u64,
+    max: u64,
+    counters: Option<&ScratchCounters>,
+) {
+    let n = v.len();
+    if n <= ctx.cfg.base_case_size.max(2) {
+        insertion_sort(v, &T::radix_less);
+        return;
+    }
     if min == max {
         // One radix key: done, unless the key is only a prefix.
         if !T::COMPLETE {
@@ -314,12 +356,22 @@ pub fn sort_radix_seq<T: RadixKey>(v: &mut [T], ctx: &mut SeqContext<T>) {
         return;
     }
     let map = DigitMap::new(min, max, capped_fanout(n, &ctx.cfg));
-    let bounds = distribute_seq(v, ctx, &map, &T::radix_less, true);
+    let nb = BucketMap::<T>::num_buckets(&map);
+    // Fused key-range scan: each non-eager bucket's min/max is computed
+    // during cleanup, while the bucket is cache-warm.
+    let mut ranges: Vec<(u64, u64)> = vec![(u64::MAX, 0); nb];
+    let bounds = distribute_seq_hooked(v, ctx, &map, &T::radix_less, true, |bk, s: &mut [T]| {
+        ranges[bk] = key_range(s);
+    });
     let base = ctx.cfg.base_case_size;
-    for i in 0..bounds.len() - 1 {
+    for i in 0..nb {
         let (s, e) = (bounds[i], bounds[i + 1]);
         if e - s > base {
-            sort_radix_seq(&mut v[s..e], ctx);
+            let (cmin, cmax) = ranges[i];
+            if let Some(c) = counters {
+                c.radix_fused_scans.fetch_add(1, Ordering::Relaxed);
+            }
+            radix_seq_ranged(&mut v[s..e], ctx, cmin, cmax, counters);
         }
     }
 }
@@ -334,15 +386,78 @@ pub fn sort_radix<T: RadixKey>(v: &mut [T], cfg: &Config) {
 // Parallel driver (IPS²Ra)
 // ---------------------------------------------------------------------------
 
-/// Sort `v` with parallel in-place radix sort, reusing caller-provided
-/// scratch. Mirrors [`sort_parallel_with`]: big subproblems are
-/// distributed by all threads cooperatively; the remaining small ones
-/// are LPT-binned and radix-sorted sequentially, in parallel.
+/// The radix backend for the shared recursion scheduler: `Aux` carries
+/// each task's fused `(min, max)` key range, so only the root range ever
+/// pays a dedicated key scan (pool-parallel, via [`key_range_par`]).
+pub(crate) struct RadixSched<'c> {
+    counters: Option<&'c ScratchCounters>,
+    /// The first planned task is the root, whose key range came from a
+    /// real scan; every later task's range was fused into a cleanup
+    /// pass (one saved sweep each).
+    root_planned: AtomicBool,
+}
+
+impl<'c, T: RadixKey> SchedBackend<T> for RadixSched<'c> {
+    type Aux = (u64, u64);
+    type Map = DigitMap;
+
+    #[inline(always)]
+    fn less(&self, a: &T, b: &T) -> bool {
+        T::radix_less(a, b)
+    }
+
+    fn root_aux(&self, v: &mut [T], pool: &ThreadPool) -> (u64, u64) {
+        key_range_par(v, pool)
+    }
+
+    fn plan_step(
+        &self,
+        v: &mut [T],
+        (min, max): (u64, u64),
+        cfg: &Config,
+        _ctx: &mut SeqContext<T>,
+    ) -> StepPlan<DigitMap> {
+        if self.root_planned.swap(true, Ordering::Relaxed) {
+            // Non-root task: its key range was computed during the
+            // parent's cleanup — one full sweep saved.
+            if let Some(c) = self.counters {
+                c.radix_fused_scans.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if min == max {
+            // One radix key: done, unless the key is only a prefix —
+            // then the comparison sort must finish the range.
+            return if T::COMPLETE {
+                StepPlan::Done
+            } else {
+                StepPlan::Defer
+            };
+        }
+        StepPlan::Partition(DigitMap::new(min, max, capped_fanout(v.len(), cfg)))
+    }
+
+    fn child_aux(&self, slice: &[T]) -> (u64, u64) {
+        key_range(slice)
+    }
+
+    fn whole_range_action(&self, _num_buckets: usize) -> WholeAction {
+        // Unreachable in practice: a digit window over an exact [min,
+        // max] range always separates min from max.
+        WholeAction::Recurse
+    }
+}
+
+/// Sort `v` with parallel in-place radix sort through the shared dynamic
+/// recursion scheduler, reusing caller-provided scratch. Prefix-
+/// exhausted ranges (all radix keys equal but the key is only a prefix)
+/// are comparison-sorted on the same pool afterwards; scheduler and
+/// fused-scan events are counted in `counters` when provided.
 pub fn sort_radix_par_with<T: RadixKey>(
     v: &mut [T],
     cfg: &Config,
     pool: &ThreadPool,
     scratch: &mut ParScratch<T>,
+    counters: Option<&ScratchCounters>,
 ) {
     let t = pool.threads();
     let n = v.len();
@@ -354,78 +469,17 @@ pub fn sort_radix_par_with<T: RadixKey>(
     );
     let min_parallel = (4 * t * block).max(1 << 13);
     if t == 1 || n < min_parallel {
-        sort_radix_seq(v, scratch.leader_ctx());
+        sort_radix_seq_with(v, scratch.leader_ctx(), counters);
         return;
     }
-
-    let threshold = cfg.parallel_task_min(n).max(min_parallel);
-    let base = cfg.base_case_size;
-    // Ranges whose radix key stopped discriminating but whose elements
-    // are not yet fully ordered (prefix keys): comparison-sorted after
-    // the radix phases release the scratch parts.
-    let mut prefix_exhausted: Vec<(usize, usize)> = Vec::new();
-
-    {
-        let (ctxs, pointers, overflow) = scratch.parts();
-        let mut big: VecDeque<(usize, usize)> = VecDeque::new();
-        let mut small: Vec<(usize, usize)> = Vec::new();
-        big.push_back((0, n));
-
-        while let Some((s, e)) = big.pop_front() {
-            let sub = &mut v[s..e];
-            let (min, max) = key_range_par(sub, pool);
-            if min == max {
-                if !T::COMPLETE {
-                    prefix_exhausted.push((s, e));
-                }
-                continue;
-            }
-            let map = DigitMap::new(min, max, capped_fanout(e - s, cfg));
-            let bounds = distribute_parallel(
-                sub,
-                cfg,
-                pool,
-                ctxs,
-                pointers,
-                overflow,
-                &map,
-                &T::radix_less,
-            );
-            for i in 0..bounds.len() - 1 {
-                let (cs, ce) = (s + bounds[i], s + bounds[i + 1]);
-                let len = ce - cs;
-                if len <= base && cfg.eager_base_case {
-                    continue; // eager-sorted during cleanup
-                }
-                if len < 2 {
-                    continue;
-                }
-                if len >= threshold {
-                    big.push_back((cs, ce));
-                } else {
-                    small.push((cs, ce));
-                }
-            }
-        }
-
-        // --- Small-task phase: LPT assignment, sequential radix ---
-        let bins = crate::parallel::lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
-        let arr = SharedSlice::new(v);
-        let bins = &bins;
-        pool.run(|tid| {
-            // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
-            // ranges produced by the partitioning.
-            let ctx = unsafe { ctxs.get_mut(tid) };
-            for &(s, e) in &bins[tid] {
-                let slice = unsafe { arr.slice_mut(s, e) };
-                sort_radix_seq(slice, ctx);
-            }
-        });
-    }
-
+    let backend = RadixSched {
+        counters,
+        root_planned: AtomicBool::new(false),
+    };
+    let deferred = sort_scheduled(v, cfg, pool, scratch, &backend, counters);
     // --- Prefix-exhausted fallback: comparison IPS⁴o on the same pool ---
-    for (s, e) in prefix_exhausted {
-        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less);
+    for (s, e) in deferred {
+        sort_parallel_with(&mut v[s..e], cfg, pool, scratch, &T::radix_less, counters);
     }
 }
 
@@ -557,7 +611,7 @@ mod tests {
             let mut a = base.clone();
             let mut b = base;
             sort_radix(&mut a, &Config::default());
-            sort_radix_par_with(&mut b, &cfg, &pool, &mut scratch);
+            sort_radix_par_with(&mut b, &cfg, &pool, &mut scratch, None);
             assert_eq!(a, b, "{}", d.name());
         }
     }
@@ -580,8 +634,32 @@ mod tests {
                 b
             })
             .collect();
-        sort_radix_par_with(&mut v, &cfg, &pool, &mut scratch);
+        sort_radix_par_with(&mut v, &cfg, &pool, &mut scratch, None);
         assert!(is_sorted_by(&v, Bytes100::less));
+    }
+
+    #[test]
+    fn fused_key_scans_are_counted() {
+        // Sequential: every level below the root reuses a fused range.
+        let counters = ScratchCounters::new();
+        let cfg = Config::default();
+        let mut ctx = SeqContext::<u64>::new(cfg.clone(), 3);
+        let mut v = gen_u64(Distribution::Uniform, 120_000, 3);
+        sort_radix_seq_with(&mut v, &mut ctx, Some(&counters));
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert!(
+            counters.snapshot().radix_fused_scans > 0,
+            "multi-level radix recursion must fuse child key scans"
+        );
+        // Parallel: same accounting through the scheduler backend.
+        counters.reset();
+        let par = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<u64>::new(&par, 4);
+        let mut v = gen_u64(Distribution::Uniform, 300_000, 4);
+        sort_radix_par_with(&mut v, &par, &pool, &mut scratch, Some(&counters));
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        assert!(counters.snapshot().radix_fused_scans > 0);
     }
 
     #[test]

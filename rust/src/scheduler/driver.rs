@@ -1,0 +1,923 @@
+//! The shared recursion driver: one implementation of the big/small
+//! task machinery that previously existed as three copy-pasted loops in
+//! `task_scheduler.rs`, `radix.rs`, and `planner/cdf.rs`.
+//!
+//! A parallel backend plugs in through [`SchedBackend`]: it supplies the
+//! bucket mapping for one partitioning step ([`SchedBackend::plan_step`])
+//! plus a comparator, an optional per-task payload (`Aux`, e.g. the
+//! radix backend's fused min/max key range), and two policy hooks. The
+//! driver owns everything else — cooperative group partitioning of big
+//! tasks, the work-stealing queue of small tasks, voluntary work
+//! sharing, termination detection, and the `static-lpt` A/B baseline.
+//!
+//! Two modes ([`SchedulerMode`](crate::scheduler::SchedulerMode)):
+//!
+//! * **`dynamic`** (default, paper §4.3/Appendix A semantics): the whole
+//!   sort runs in a single SPMD region. All threads start as one group
+//!   on the root task; after each cooperative partition step the group
+//!   *splits proportionally* over the coexisting big children and the
+//!   subgroups recurse concurrently — no full-pool barrier between big
+//!   tasks. Small children go to the work-stealing queue; idle threads
+//!   steal them, and a thread descending a deep sequential recursion
+//!   publishes parts of its stack when it observes idle peers.
+//! * **`static-lpt`** (the pre-scheduler behavior, kept for A/B): big
+//!   tasks are partitioned one after another by the full pool, then the
+//!   accumulated small tasks are LPT-binned and sorted sequentially in
+//!   parallel with no stealing.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::base_case::{heapsort, insertion_sort};
+use crate::classifier::BucketMap;
+use crate::cleanup::{cleanup_buckets, save_next_head};
+use crate::config::Config;
+use crate::local_classification::{classify_stripe, LocalBuffers, StripeResult};
+use crate::metrics::ScratchCounters;
+use crate::parallel::{lpt_bins, stripes, PerThread, SharedSlice, SpinBarrier, ThreadPool};
+use crate::permutation::{
+    final_writes, init_pointers, move_empty_blocks, permute_blocks, Plan, StripeBlocks,
+};
+use crate::scheduler::queue::{Task, TaskQueue};
+use crate::sequential::{distribute_seq_hooked, sort_seq, SeqContext};
+use crate::task_scheduler::{GroupResources, ParScratch};
+use crate::util::Element;
+
+// ---------------------------------------------------------------------------
+// The backend plug-in surface
+// ---------------------------------------------------------------------------
+
+/// What one planning call decided for a task.
+pub(crate) enum StepPlan<M> {
+    /// Distribute the range with this bucket mapping.
+    Partition(M),
+    /// The range needs no further work (e.g. a constant complete key).
+    Done,
+    /// Sort the range right now with the backend comparator (degenerate
+    /// sample — the no-progress fallback).
+    SortNow,
+    /// Hand the range to the post-run comparison sort (big tasks) or
+    /// sort it sequentially by comparison now (small tasks): radix
+    /// prefix exhaustion, failed CDF fits.
+    Defer,
+}
+
+/// Disposition of a non-equality child bucket that swallowed its whole
+/// parent range.
+pub(crate) enum WholeAction {
+    /// Re-partition it (a fresh sample will make progress eventually).
+    Recurse,
+    /// Sort it now with the backend comparator (no-progress guard).
+    SortNow,
+    /// Treat it like a deferred range (CDF: a one-bucket pass).
+    Defer,
+}
+
+/// A parallel sort family, as seen by the shared recursion driver.
+pub(crate) trait SchedBackend<T: Element>: Sync {
+    /// Per-task payload carried through the queue (e.g. the fused
+    /// min/max key range of the radix backend).
+    type Aux: Copy + Default + Send + Sync + 'static;
+    /// The bucket mapping of one partitioning step. Owned — it is built
+    /// by the group leader and shared with the members for the duration
+    /// of the step.
+    type Map: BucketMap<T> + Send + Sync;
+
+    /// The backend's total order (base cases, eager sorting, fallbacks).
+    fn less(&self, a: &T, b: &T) -> bool;
+
+    /// The root task's payload; may use the whole pool (the radix
+    /// backend's initial min/max scan).
+    fn root_aux(&self, v: &mut [T], pool: &ThreadPool) -> Self::Aux;
+
+    /// Plan one partitioning step for a task's range. Runs on the group
+    /// leader (big tasks) or the owning worker (small tasks); `ctx` is
+    /// that thread's scratch.
+    fn plan_step(
+        &self,
+        v: &mut [T],
+        aux: Self::Aux,
+        cfg: &Config,
+        ctx: &mut SeqContext<T>,
+    ) -> StepPlan<Self::Map>;
+
+    /// Payload for a recursing child bucket, computed from its final
+    /// contents during the parent's cleanup pass (cache-warm) — the
+    /// key-range fusion that saves the radix backend one sweep per
+    /// level.
+    fn child_aux(&self, slice: &[T]) -> Self::Aux;
+
+    /// Policy for a non-equality child covering the whole parent range.
+    fn whole_range_action(&self, num_buckets: usize) -> WholeAction;
+}
+
+// ---------------------------------------------------------------------------
+// Shared per-step state of one thread group
+// ---------------------------------------------------------------------------
+
+/// Which path the members of a group take after the planning barrier.
+#[derive(Copy, Clone)]
+enum Directive {
+    Partition,
+    Done,
+    SortNow,
+    Defer,
+}
+
+/// A member's assignment after a group's partition step.
+enum Assign<T: Element, B: SchedBackend<T>> {
+    /// Threads `[lo, hi)` descend into this subgroup.
+    Group {
+        lo: usize,
+        hi: usize,
+        node: Arc<GroupNode<T, B>>,
+    },
+    /// Thread `tid` sorts this big-but-solo task sequentially, sharing
+    /// subtasks with idle peers as it goes.
+    Solo { tid: usize, task: Task<B::Aux> },
+}
+
+/// All shared state one thread group needs for one partitioning step.
+/// Built fresh per step (a few small vectors — amortized over a
+/// cooperative pass that moves at least `threshold` elements), used
+/// once, and dropped when the last member releases it; nothing is ever
+/// rewritten after its publishing barrier, which is what makes the
+/// single-writer [`UnsafeCell`] discipline sound.
+struct StepShared<T: Element, B: SchedBackend<T>> {
+    /// Absolute pool tid of the group leader (= first member).
+    lo: usize,
+    gsize: usize,
+    begin: usize,
+    end: usize,
+    barrier: SpinBarrier,
+    /// Leader-written cells: each is written in exactly one phase, with
+    /// a barrier between the write and every read.
+    lead_directive: UnsafeCell<Directive>,
+    lead_map: UnsafeCell<Option<B::Map>>,
+    lead_plan: UnsafeCell<Option<Plan>>,
+    lead_sb: UnsafeCell<StripeBlocks>,
+    lead_ws: UnsafeCell<Vec<i32>>,
+    lead_bgroups: UnsafeCell<Vec<usize>>,
+    lead_assigns: UnsafeCell<Vec<Assign<T, B>>>,
+    /// Member-written slots (index = group-relative tid).
+    results: PerThread<Option<StripeResult>>,
+    saved: PerThread<Vec<T>>,
+    /// Bucket-indexed child payloads, written by the cleanup owner of
+    /// each bucket (disjoint buckets ⇒ disjoint slots).
+    aux_out: PerThread<B::Aux>,
+}
+
+// SAFETY: every cell follows the barrier-separated single-writer
+// protocol documented on the struct; all contents are Send.
+unsafe impl<T: Element, B: SchedBackend<T>> Sync for StepShared<T, B> {}
+
+impl<T: Element, B: SchedBackend<T>> StepShared<T, B> {
+    fn new(lo: usize, gsize: usize, begin: usize, end: usize, aux_slots: usize) -> Self {
+        StepShared {
+            lo,
+            gsize,
+            begin,
+            end,
+            barrier: SpinBarrier::new(gsize),
+            lead_directive: UnsafeCell::new(Directive::Done),
+            lead_map: UnsafeCell::new(None),
+            lead_plan: UnsafeCell::new(None),
+            lead_sb: UnsafeCell::new(StripeBlocks {
+                begin: Vec::new(),
+                flush: Vec::new(),
+            }),
+            lead_ws: UnsafeCell::new(Vec::new()),
+            lead_bgroups: UnsafeCell::new(Vec::new()),
+            lead_assigns: UnsafeCell::new(Vec::new()),
+            results: PerThread::new((0..gsize).map(|_| None).collect()),
+            saved: PerThread::new(vec![Vec::new(); gsize]),
+            aux_out: PerThread::new(vec![B::Aux::default(); aux_slots]),
+        }
+    }
+}
+
+/// One node of the dynamic group-descent tree: a big task plus the
+/// step state its group shares.
+struct GroupNode<T: Element, B: SchedBackend<T>> {
+    task: Task<B::Aux>,
+    sh: StepShared<T, B>,
+}
+
+impl<T: Element, B: SchedBackend<T>> GroupNode<T, B> {
+    fn new(lo: usize, gsize: usize, task: Task<B::Aux>, aux_slots: usize) -> Self {
+        GroupNode {
+            sh: StepShared::new(lo, gsize, task.begin, task.end, aux_slots),
+            task,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The driver environment
+// ---------------------------------------------------------------------------
+
+/// Everything the drivers and workers share for one sort call.
+struct Env<'a, T: Element, B: SchedBackend<T>> {
+    arr: SharedSlice<T>,
+    cfg: &'a Config,
+    backend: &'a B,
+    ctxs: &'a PerThread<SeqContext<T>>,
+    groups: &'a [GroupResources<T>],
+    block: usize,
+    /// Tasks at least this large are partitioned cooperatively.
+    threshold: usize,
+    /// Subtasks below this size are not worth publishing to idle peers.
+    share_min: usize,
+    queue: TaskQueue<B::Aux>,
+    /// Ranges the backend handed back for post-run comparison sorting.
+    deferred: Mutex<Vec<(usize, usize)>>,
+    counters: Option<&'a ScratchCounters>,
+}
+
+impl<'a, T: Element, B: SchedBackend<T>> Env<'a, T, B> {
+    fn bump(&self, pick: impl Fn(&ScratchCounters) -> &AtomicU64) {
+        if let Some(c) = self.counters {
+            pick(c).fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn aux_slots(&self) -> usize {
+        2 * self.cfg.max_buckets
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Sort `v` with the shared recursion scheduler under `cfg.scheduler`,
+/// returning the deferred ranges the backend could not finish (the
+/// caller comparison-sorts them on the same pool). The caller has
+/// already ruled out the sequential fallback (`t == 1` or `n` below the
+/// parallel minimum).
+pub(crate) fn sort_scheduled<T, B>(
+    v: &mut [T],
+    cfg: &Config,
+    pool: &ThreadPool,
+    scratch: &mut ParScratch<T>,
+    backend: &B,
+    counters: Option<&ScratchCounters>,
+) -> Vec<(usize, usize)>
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let t = pool.threads();
+    let n = v.len();
+    let block = cfg.block_elems(std::mem::size_of::<T>());
+    assert!(
+        scratch.threads() >= t,
+        "scratch built for {} threads, pool has {t}",
+        scratch.threads()
+    );
+    // A recycled arena with mismatched block geometry would silently
+    // corrupt the permutation phase in release builds — hard assert.
+    assert_eq!(
+        scratch.block(),
+        block,
+        "scratch built for a different block size"
+    );
+    let min_parallel = (4 * t * block).max(1 << 13);
+    let threshold = cfg.parallel_task_min(n).max(min_parallel);
+    let root_aux = backend.root_aux(v, pool);
+    let mode = cfg.scheduler;
+    // Subtasks this small are cheaper to sort locally than to hand off —
+    // but the bar is low on purpose: sharing only happens when a peer is
+    // otherwise idle, so even a few-hundred-element bucket is a win.
+    let share_min = cfg.base_case_size.max(1) * 4;
+    let (ctxs, groups) = scratch.views();
+    let env = Env {
+        arr: SharedSlice::new(v),
+        cfg,
+        backend,
+        ctxs,
+        groups,
+        block,
+        threshold,
+        share_min,
+        queue: TaskQueue::new(t, t),
+        deferred: Mutex::new(Vec::new()),
+        counters,
+    };
+    let root = Task {
+        begin: 0,
+        end: n,
+        aux: root_aux,
+    };
+    match mode {
+        super::SchedulerMode::StaticLpt => static_driver(&env, pool, root),
+        super::SchedulerMode::Dynamic => dynamic_driver(&env, pool, root),
+    }
+    env.deferred.into_inner().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// The cooperative SPMD distribute (shared by both modes)
+// ---------------------------------------------------------------------------
+
+/// The cooperative block phases — striped classification → empty-block
+/// movement → atomic block permutation → bucket-partitioned cleanup —
+/// executed by every member of one thread group (`rel` = member index in
+/// `0..sh.gsize`). The leader must have stored the step's map in
+/// `sh.lead_map` and reset the group overflow before the members enter.
+fn distribute_spmd<T, B>(env: &Env<'_, T, B>, sh: &StepShared<T, B>, rel: usize)
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let abort = env.queue.aborted_flag();
+    let sub = env.arr.subslice(sh.begin, sh.end);
+    let n = sh.end - sh.begin;
+    let g = sh.gsize;
+    let tid = sh.lo + rel;
+    let block = env.block;
+    let res = &env.groups[sh.lo];
+    let pointers = &res.pointers[..];
+    let overflow = &res.overflow;
+    // SAFETY: written by the leader before the pre-step barrier, never
+    // rewritten while the group lives.
+    let map = unsafe { &*sh.lead_map.get() }.as_ref().expect("step map");
+    let nb = map.num_buckets();
+    assert!(nb <= pointers.len(), "pointer array too small");
+
+    // --- Local classification (one stripe per member) ---
+    let bounds = stripes(n, g, block);
+    {
+        // SAFETY: slot `tid` belongs to this member; stripes disjoint.
+        let ctx = unsafe { env.ctxs.get_mut(tid) };
+        ctx.bufs.reset(nb, block);
+        let r = classify_stripe(&sub, bounds[rel], bounds[rel + 1], map, &mut ctx.bufs);
+        unsafe { *sh.results.get_mut(rel) = Some(r) };
+    }
+    sh.barrier.wait(abort);
+
+    // --- Leader: aggregate counts, build the plan, init pointers ---
+    if rel == 0 {
+        let mut counts = vec![0usize; nb];
+        let mut flush = Vec::with_capacity(g);
+        for i in 0..g {
+            // SAFETY: barrier above; members only read their own slots
+            // from here on.
+            let r = unsafe { sh.results.get(i) }.as_ref().expect("stripe result");
+            for (c, rc) in counts.iter_mut().zip(&r.counts) {
+                *c += rc;
+            }
+            flush.push((r.flush_end / block) as i32);
+        }
+        let plan = Plan::new(&counts, n, block);
+        let sb = StripeBlocks {
+            begin: bounds.iter().map(|&x| (x / block) as i32).collect(),
+            flush,
+        };
+        init_pointers(&plan, &sb, pointers);
+
+        // Contiguous bucket groups balanced by element count (cleanup).
+        let mut bgroups = vec![0usize; g + 1];
+        {
+            let per = crate::util::div_ceil(n.max(1), g);
+            let mut grp = 1;
+            let mut acc = 0usize;
+            for (i, &c) in counts.iter().enumerate() {
+                acc += c;
+                while grp < g && acc >= grp * per {
+                    bgroups[grp] = i + 1;
+                    grp += 1;
+                }
+            }
+            for gg in grp..g {
+                bgroups[gg] = nb;
+            }
+            bgroups[g] = nb;
+            for gg in 1..=g {
+                if bgroups[gg] < bgroups[gg - 1] {
+                    bgroups[gg] = bgroups[gg - 1];
+                }
+            }
+        }
+        // SAFETY: leader-only writes, read by members after the barrier.
+        unsafe {
+            *sh.lead_plan.get() = Some(plan);
+            *sh.lead_sb.get() = sb;
+            *sh.lead_bgroups.get() = bgroups;
+        }
+    }
+    sh.barrier.wait(abort);
+    // SAFETY: published above; no one writes these cells again.
+    let plan = unsafe { &*sh.lead_plan.get() }.as_ref().expect("plan");
+    let sb = unsafe { &*sh.lead_sb.get() };
+    let bgroups = unsafe { &*sh.lead_bgroups.get() };
+
+    // --- Establish the invariant (empty-block movement, Appendix A) ---
+    move_empty_blocks(&sub, plan, sb, rel);
+    sh.barrier.wait(abort);
+
+    // --- Block permutation ---
+    {
+        let ctx = unsafe { env.ctxs.get_mut(tid) };
+        permute_blocks(&sub, plan, pointers, map, overflow, &mut ctx.swap, rel, g);
+    }
+    sh.barrier.wait(abort);
+
+    // --- Leader: final write pointers ---
+    if rel == 0 {
+        unsafe { *sh.lead_ws.get() = final_writes(pointers, nb) };
+    }
+    sh.barrier.wait(abort);
+    let ws = unsafe { &*sh.lead_ws.get() };
+
+    // --- Pre-save next heads, then fill ---
+    {
+        let head = save_next_head(&sub, plan, bgroups[rel + 1]);
+        unsafe { *sh.saved.get_mut(rel) = head };
+    }
+    sh.barrier.wait(abort);
+    {
+        // SAFETY: buffers are read-only during cleanup (barrier after
+        // classification); bucket groups are disjoint.
+        let bufs: Vec<&LocalBuffers<T>> = (0..g)
+            .map(|i| unsafe { &env.ctxs.get(sh.lo + i).bufs })
+            .collect();
+        let head = unsafe { sh.saved.get(rel) };
+        let base = env.cfg.base_case_size;
+        let eager = env.cfg.eager_base_case;
+        cleanup_buckets(
+            &sub,
+            plan,
+            ws,
+            &bufs,
+            overflow,
+            bgroups[rel],
+            bgroups[rel + 1],
+            head,
+            |bucket, start, end| {
+                if end <= start {
+                    return;
+                }
+                // SAFETY: cleanup owners hold disjoint bucket ranges.
+                let slice = unsafe { sub.slice_mut(start, end) };
+                if eager && end - start <= base {
+                    insertion_sort(slice, &|a: &T, b: &T| env.backend.less(a, b));
+                } else {
+                    // Key-range fusion: the child's payload is computed
+                    // here, cache-warm, saving the next level a sweep.
+                    unsafe { *sh.aux_out.get_mut(bucket) = env.backend.child_aux(slice) };
+                }
+            },
+        );
+    }
+    sh.barrier.wait(abort);
+    // Buffers are drained; reset own fills for the next step.
+    unsafe { env.ctxs.get_mut(tid) }.bufs.clear();
+}
+
+/// Classify the children of a finished partition step (leader only).
+/// Small children are pushed to the work queue; big ones are returned;
+/// whole-range children follow the backend's policy (`leader_sort`
+/// collects ranges the leader must sort itself after publishing).
+fn classify_children<T, B>(
+    env: &Env<'_, T, B>,
+    sh: &StepShared<T, B>,
+    tid: usize,
+    leader_sort: &mut Vec<(usize, usize)>,
+) -> Vec<Task<B::Aux>>
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let map = unsafe { &*sh.lead_map.get() }.as_ref().expect("step map");
+    let plan = unsafe { &*sh.lead_plan.get() }.as_ref().expect("plan");
+    let bounds = &plan.bucket_starts;
+    let nb = map.num_buckets();
+    let n = sh.end - sh.begin;
+    let base = env.cfg.base_case_size;
+    let eager = env.cfg.eager_base_case;
+    let mut big: Vec<Task<B::Aux>> = Vec::new();
+    for i in 0..nb {
+        let (s, e) = (sh.begin + bounds[i], sh.begin + bounds[i + 1]);
+        let len = e - s;
+        if len < 2 || map.is_equality_bucket(i) {
+            continue;
+        }
+        if len <= base && eager {
+            continue; // eager-sorted during cleanup
+        }
+        if len == n {
+            match env.backend.whole_range_action(nb) {
+                WholeAction::Recurse => {}
+                WholeAction::SortNow => {
+                    leader_sort.push((s, e));
+                    continue;
+                }
+                WholeAction::Defer => {
+                    env.deferred.lock().unwrap().push((s, e));
+                    continue;
+                }
+            }
+        }
+        let task = Task {
+            begin: s,
+            end: e,
+            aux: unsafe { *sh.aux_out.get(i) },
+        };
+        if len >= env.threshold {
+            big.push(task);
+        } else {
+            env.queue.push(tid, task);
+        }
+    }
+    big
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic mode: group descent + work stealing
+// ---------------------------------------------------------------------------
+
+fn dynamic_driver<T, B>(env: &Env<'_, T, B>, pool: &ThreadPool, root: Task<B::Aux>)
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let t = pool.threads();
+    let root_node = Arc::new(GroupNode::<T, B>::new(0, t, root, env.aux_slots()));
+    let root_ref = &root_node;
+    pool.run(move |tid| {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut cur: Option<Arc<GroupNode<T, B>>> = Some(Arc::clone(root_ref));
+            while let Some(node) = cur {
+                cur = run_group_step(env, tid, &node);
+            }
+            env.queue.leave_active();
+            small_loop(env, tid);
+        }));
+        if let Err(p) = r {
+            // Peers may be waiting for us at a barrier or in the steal
+            // loop: release them before unwinding into the pool.
+            env.queue.abort();
+            resume_unwind(p);
+        }
+    });
+}
+
+/// One step of a thread group's descent: plan (leader), cooperate on the
+/// distribution, then either descend into an assigned subgroup (returned)
+/// or leave the descent (`None`).
+fn run_group_step<T, B>(
+    env: &Env<'_, T, B>,
+    tid: usize,
+    node: &GroupNode<T, B>,
+) -> Option<Arc<GroupNode<T, B>>>
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let sh = &node.sh;
+    let rel = tid - sh.lo;
+    let abort = env.queue.aborted_flag();
+
+    if rel == 0 {
+        // SAFETY: the task range is owned by this group; members wait at
+        // the barrier below while the leader plans (which may mutate the
+        // range: sampling swaps elements into a prefix).
+        let slice = unsafe { env.arr.slice_mut(sh.begin, sh.end) };
+        let ctx = unsafe { env.ctxs.get_mut(tid) };
+        let directive = match env.backend.plan_step(slice, node.task.aux, env.cfg, ctx) {
+            StepPlan::Partition(map) => {
+                unsafe { *sh.lead_map.get() = Some(map) };
+                env.groups[sh.lo].overflow.reset(env.block);
+                Directive::Partition
+            }
+            StepPlan::Done => Directive::Done,
+            StepPlan::SortNow => Directive::SortNow,
+            StepPlan::Defer => Directive::Defer,
+        };
+        unsafe { *sh.lead_directive.get() = directive };
+    }
+    sh.barrier.wait(abort);
+    let directive = unsafe { *sh.lead_directive.get() };
+
+    match directive {
+        Directive::Done => None,
+        Directive::SortNow => {
+            if rel == 0 {
+                let slice = unsafe { env.arr.slice_mut(sh.begin, sh.end) };
+                heapsort(slice, &|a: &T, b: &T| env.backend.less(a, b));
+            }
+            None
+        }
+        Directive::Defer => {
+            if rel == 0 {
+                env.deferred.lock().unwrap().push((sh.begin, sh.end));
+            }
+            None
+        }
+        Directive::Partition => {
+            distribute_spmd(env, sh, rel);
+            let mut leader_sort: Vec<(usize, usize)> = Vec::new();
+            if rel == 0 {
+                let big = classify_children(env, sh, tid, &mut leader_sort);
+                let assigns = plan_subgroups(env, sh, tid, big);
+                unsafe { *sh.lead_assigns.get() = assigns };
+            }
+            sh.barrier.wait(abort);
+            if rel == 0 {
+                for (s, e) in leader_sort {
+                    let slice = unsafe { env.arr.slice_mut(s, e) };
+                    heapsort(slice, &|a: &T, b: &T| env.backend.less(a, b));
+                }
+            }
+            // SAFETY: published above; read-only for the node's lifetime.
+            let assigns = unsafe { &*sh.lead_assigns.get() };
+            let mut solo: Option<Task<B::Aux>> = None;
+            for a in assigns {
+                match a {
+                    Assign::Group { lo, hi, node } => {
+                        if tid >= *lo && tid < *hi {
+                            return Some(Arc::clone(node));
+                        }
+                    }
+                    Assign::Solo { tid: stid, task } => {
+                        if *stid == tid {
+                            solo = Some(*task);
+                        }
+                    }
+                }
+            }
+            if let Some(task) = solo {
+                // A big task that got exactly one thread: sort it
+                // sequentially, sharing subtasks with idle peers.
+                process_seq(env, tid, task, true);
+            }
+            None
+        }
+    }
+}
+
+/// Split the group's threads proportionally over the coexisting big
+/// children (leader only). Children beyond the thread count go to the
+/// queue; a child allotted exactly one thread becomes a solo assignment.
+fn plan_subgroups<T, B>(
+    env: &Env<'_, T, B>,
+    sh: &StepShared<T, B>,
+    tid: usize,
+    mut big: Vec<Task<B::Aux>>,
+) -> Vec<Assign<T, B>>
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let g = sh.gsize;
+    let mut assigns: Vec<Assign<T, B>> = Vec::new();
+    if big.is_empty() {
+        return assigns;
+    }
+    big.sort_by_key(|t| std::cmp::Reverse(t.len()));
+    if big.len() > g {
+        for task in big.split_off(g) {
+            // More big tasks than threads: the tail becomes stealable
+            // sequential work (idle threads pick it up and its children
+            // are re-published as they appear).
+            env.queue.push(tid, task);
+        }
+    }
+    let m = big.len();
+    if m >= 2 {
+        env.bump(|c| &c.group_splits);
+    }
+    // Proportional thread allotment: everyone gets one thread, the rest
+    // go to whichever task has the most elements per allotted thread.
+    let mut alloc = vec![1usize; m];
+    let mut rest = g - m;
+    while rest > 0 {
+        let mut bi = 0usize;
+        let mut best = 0.0f64;
+        for (i, task) in big.iter().enumerate() {
+            let ratio = task.len() as f64 / alloc[i] as f64;
+            if ratio > best {
+                best = ratio;
+                bi = i;
+            }
+        }
+        alloc[bi] += 1;
+        rest -= 1;
+    }
+    let mut lo = sh.lo;
+    for (i, task) in big.into_iter().enumerate() {
+        let hi = lo + alloc[i];
+        if alloc[i] == 1 {
+            assigns.push(Assign::Solo { tid: lo, task });
+        } else {
+            let node = Arc::new(GroupNode::<T, B>::new(lo, alloc[i], task, env.aux_slots()));
+            assigns.push(Assign::Group { lo, hi, node });
+        }
+        lo = hi;
+    }
+    assigns
+}
+
+/// The steal loop: drain the queue until global termination.
+fn small_loop<T, B>(env: &Env<'_, T, B>, tid: usize)
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let q = &env.queue;
+    let mut idle = false;
+    loop {
+        if let Some((task, stolen)) = q.take(tid) {
+            if idle {
+                q.leave_idle();
+                idle = false;
+            }
+            if stolen {
+                env.bump(|c| &c.task_steals);
+            }
+            process_seq(env, tid, task, true);
+            q.task_done();
+            continue;
+        }
+        if !idle {
+            q.enter_idle();
+            idle = true;
+        }
+        if q.finished() {
+            break;
+        }
+        if q.is_aborted() {
+            panic!("scheduler aborted: a peer thread panicked");
+        }
+        std::thread::yield_now();
+    }
+    if idle {
+        q.leave_idle();
+    }
+}
+
+/// Sort one task sequentially on this thread with an explicit recursion
+/// stack. When `share` is set and idle peers exist, the oldest (largest)
+/// stacked subtasks are published to the work queue instead of being
+/// processed locally — the paper's voluntary work sharing.
+fn process_seq<T, B>(env: &Env<'_, T, B>, tid: usize, task: Task<B::Aux>, share: bool)
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    // SAFETY: slot `tid` belongs to this worker for the whole call; no
+    // other `get_mut(tid)` happens concurrently.
+    let ctx = unsafe { env.ctxs.get_mut(tid) };
+    let backend = env.backend;
+    let less = |a: &T, b: &T| backend.less(a, b);
+    let base = env.cfg.base_case_size;
+    let mut stack: VecDeque<Task<B::Aux>> = VecDeque::new();
+    stack.push_back(task);
+    while let Some(t) = stack.pop_back() {
+        if env.queue.is_aborted() {
+            panic!("scheduler aborted: a peer thread panicked");
+        }
+        let n = t.len();
+        // SAFETY: each task's range is disjoint from every other live
+        // task's range and exclusively owned by its processor.
+        let v = unsafe { env.arr.slice_mut(t.begin, t.end) };
+        if n <= base.max(2) {
+            insertion_sort(v, &less);
+            continue;
+        }
+        match backend.plan_step(v, t.aux, env.cfg, ctx) {
+            StepPlan::Done => {}
+            StepPlan::SortNow => heapsort(v, &less),
+            StepPlan::Defer => sort_seq(v, ctx, &less),
+            StepPlan::Partition(map) => {
+                let nb = map.num_buckets();
+                let mut child_aux: Vec<B::Aux> = vec![B::Aux::default(); nb];
+                let bounds = distribute_seq_hooked(v, ctx, &map, &less, true, |bk, s: &mut [T]| {
+                    child_aux[bk] = backend.child_aux(s);
+                });
+                for i in 0..nb {
+                    let (s, e) = (bounds[i], bounds[i + 1]);
+                    let len = e - s;
+                    if len < 2 || map.is_equality_bucket(i) {
+                        continue;
+                    }
+                    if len <= base {
+                        continue; // sequential steps always eager-sort these
+                    }
+                    let child = Task {
+                        begin: t.begin + s,
+                        end: t.begin + e,
+                        aux: child_aux[i],
+                    };
+                    if len == n {
+                        match backend.whole_range_action(nb) {
+                            WholeAction::Recurse => stack.push_back(child),
+                            WholeAction::SortNow => {
+                                let cv = unsafe { env.arr.slice_mut(child.begin, child.end) };
+                                heapsort(cv, &less);
+                            }
+                            WholeAction::Defer => {
+                                let cv = unsafe { env.arr.slice_mut(child.begin, child.end) };
+                                sort_seq(cv, ctx, &less);
+                            }
+                        }
+                    } else {
+                        stack.push_back(child);
+                    }
+                }
+                // Voluntary work sharing: publish the shallowest stacked
+                // subtasks while peers are visibly starved.
+                if share && env.queue.idle() > 0 {
+                    while stack.len() > 1 {
+                        let front_len = stack.front().map(Task::len).unwrap_or(0);
+                        if front_len < env.share_min || env.queue.idle() == 0 {
+                            break;
+                        }
+                        let published = stack.pop_front().unwrap();
+                        env.queue.push(tid, published);
+                        env.bump(|c| &c.task_shares);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static mode: serialized big tasks + LPT small phase (the A/B baseline)
+// ---------------------------------------------------------------------------
+
+fn static_driver<T, B>(env: &Env<'_, T, B>, pool: &ThreadPool, root: Task<B::Aux>)
+where
+    T: Element,
+    B: SchedBackend<T>,
+{
+    let t = pool.threads();
+    let mut big: VecDeque<Task<B::Aux>> = VecDeque::new();
+    let mut small: Vec<Task<B::Aux>> = Vec::new();
+    big.push_back(root);
+
+    while let Some(task) = big.pop_front() {
+        // The calling thread is pool thread 0 — the leader.
+        let slice = unsafe { env.arr.slice_mut(task.begin, task.end) };
+        let ctx = unsafe { env.ctxs.get_mut(0) };
+        let less = |a: &T, b: &T| env.backend.less(a, b);
+        match env.backend.plan_step(slice, task.aux, env.cfg, ctx) {
+            StepPlan::Done => {}
+            StepPlan::SortNow => heapsort(slice, &less),
+            StepPlan::Defer => env.deferred.lock().unwrap().push((task.begin, task.end)),
+            StepPlan::Partition(map) => {
+                let sh = StepShared::<T, B>::new(0, t, task.begin, task.end, env.aux_slots());
+                unsafe { *sh.lead_map.get() = Some(map) };
+                env.groups[0].overflow.reset(env.block);
+                {
+                    let shr = &sh;
+                    pool.run(move |tid| {
+                        let r = catch_unwind(AssertUnwindSafe(|| distribute_spmd(env, shr, tid)));
+                        if let Err(p) = r {
+                            env.queue.abort();
+                            resume_unwind(p);
+                        }
+                    });
+                }
+                let mut leader_sort: Vec<(usize, usize)> = Vec::new();
+                for child in classify_children(env, &sh, 0, &mut leader_sort) {
+                    big.push_back(child);
+                }
+                for (s, e) in leader_sort {
+                    let cv = unsafe { env.arr.slice_mut(s, e) };
+                    heapsort(cv, &less);
+                }
+                // classify_children pushed the small children to the
+                // queue (shard 0); move them to the static small list.
+                while let Some((child, _)) = env.queue.take(0) {
+                    env.queue.task_done();
+                    small.push(child);
+                }
+            }
+        }
+    }
+
+    // --- Small-task phase: LPT assignment, sequential sorting ---
+    let bins = PerThread::new(lpt_bins(small, t, |task: &Task<B::Aux>| task.len()));
+    {
+        let bins = &bins;
+        pool.run(move |tid| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                // SAFETY: slot `tid` is exclusively this worker's.
+                let my = unsafe { bins.get_mut(tid) };
+                for task in my.drain(..) {
+                    process_seq(env, tid, task, false);
+                }
+            }));
+            if let Err(p) = r {
+                env.queue.abort();
+                resume_unwind(p);
+            }
+        });
+    }
+}

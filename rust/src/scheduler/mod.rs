@@ -1,0 +1,113 @@
+//! Dynamic work-stealing recursion scheduler with thread-group
+//! partitioning (paper §4.3, Appendix A) — the one parallel driver
+//! shared by all three distribution backends (comparison IPS⁴o, the
+//! radix IPS²Ra, and the learned-CDF sort).
+//!
+//! Before this module existed, each parallel backend carried its own
+//! copy of the same two-phase loop: partition big subproblems one after
+//! another behind a full-pool barrier, then LPT-bin the remaining small
+//! subproblems with no rebalancing. That serializes independent big
+//! subproblems (span, not work, is what limits in-place distribution
+//! sorts at scale) and lets one straggler bin idle every other thread.
+//! The scheduler replaces both phases:
+//!
+//! * **Concurrent big-task partitioning.** The whole sort runs in one
+//!   SPMD region. All threads start as one group on the root range;
+//!   after each cooperative partition step the group splits into
+//!   *proportional* subgroups — one per coexisting big child, sized by
+//!   element count — which recurse concurrently, each with its own
+//!   [`SpinBarrier`](crate::parallel::SpinBarrier)-phased pipeline and
+//!   its own bucket-pointer/overflow arena slot.
+//! * **Work stealing.** Small subproblems go to a sharded, lock-light
+//!   queue (one spinlocked deque per worker — no `Mutex` on the pop
+//!   path): own-shard LIFO pops, cross-shard FIFO steals.
+//! * **Voluntary work sharing.** A thread descending a deep sequential
+//!   recursion keeps an explicit stack; when it observes idle peers it
+//!   publishes the oldest (largest) stacked subtasks to the queue.
+//!
+//! Steals, shares, and group splits are counted in
+//! [`ScratchCounters`](crate::metrics::ScratchCounters)
+//! (`task_steals` / `task_shares` / `group_splits`) and surface through
+//! [`Sorter`](crate::Sorter) and [`SortService`](crate::SortService)
+//! metric snapshots. The pre-scheduler behavior is preserved behind
+//! [`SchedulerMode::StaticLpt`] for A/B comparison
+//! (`benches/scheduler_scaling.rs`, CLI `--scheduler static-lpt`).
+//!
+//! # Safety argument: disjoint-range stealing
+//!
+//! Every task names a half-open range `[begin, end)` of the one input
+//! slice, and the driver maintains this invariant:
+//!
+//! 1. The root task covers `[0, n)` and is the only task at start.
+//! 2. A partition step *consumes* its task and produces child tasks
+//!    that are exactly the step's bucket subranges — pairwise disjoint
+//!    subsets of the consumed range (buckets partition the range).
+//!    Buckets that are already sorted (equality buckets, eager base
+//!    cases) produce no task and are never touched again.
+//! 3. A task is owned by exactly one executor at a time: it moves from
+//!    the producing thread into a spinlocked deque (release/acquire on
+//!    the shard lock orders the hand-off) and out to exactly one
+//!    stealer or popper; group tasks are owned by their whole group,
+//!    whose phases are barrier-ordered.
+//!
+//! By induction, the ranges of all *live* tasks are pairwise disjoint at
+//! every instant, so two threads never hold `&mut` views of overlapping
+//! elements (`SharedSlice::slice_mut` is only called on a task's own
+//! range, or on barrier-separated stripe/bucket subdivisions of it
+//! inside a group step). Termination detection is the pair of counters
+//! documented in [`queue`]: `pending` (queued-but-unfinished tasks,
+//! incremented before a task becomes stealable) and `active` (threads
+//! still inside a group descent) — workers exit only when both are zero,
+//! so no queued task can be orphaned; a panicking worker raises the
+//! queue's abort flag, which releases peers spinning at barriers or in
+//! the steal loop instead of deadlocking them.
+
+pub(crate) mod driver;
+pub(crate) mod queue;
+
+pub(crate) use driver::{sort_scheduled, SchedBackend, StepPlan, WholeAction};
+
+/// How the parallel drivers schedule recursion — the A/B knob
+/// (`Config::scheduler`, CLI `--scheduler`).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Dynamic scheduling (the default): concurrent big-task
+    /// partitioning by proportional thread groups, work stealing, and
+    /// voluntary work sharing for small tasks.
+    Dynamic,
+    /// The pre-scheduler baseline: big tasks partitioned one after
+    /// another by the full pool, small tasks assigned once by LPT with
+    /// no stealing.
+    StaticLpt,
+}
+
+impl SchedulerMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerMode::Dynamic => "dynamic",
+            SchedulerMode::StaticLpt => "static-lpt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SchedulerMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "dynamic" | "dyn" => Some(SchedulerMode::Dynamic),
+            "static-lpt" | "static" | "lpt" => Some(SchedulerMode::StaticLpt),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [SchedulerMode::Dynamic, SchedulerMode::StaticLpt] {
+            assert_eq!(SchedulerMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(SchedulerMode::from_name("STATIC"), Some(SchedulerMode::StaticLpt));
+        assert_eq!(SchedulerMode::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,257 @@
+//! The lock-light work queue of the dynamic recursion scheduler: one
+//! shard per worker, each a short-critical-section spinlocked deque.
+//!
+//! A worker pushes and pops its *own* shard from the back (LIFO — the
+//! most recently produced, cache-warm subtask first) and, when its shard
+//! runs dry, steals from its peers' shards from the front (FIFO — the
+//! oldest, typically largest, subtask, which amortizes the steal). There
+//! is no `Mutex` anywhere on the pop path: shard access is a single
+//! compare-exchange on an uncontended `AtomicBool`, a few nanoseconds
+//! when the shard is private, which it is for every own-shard operation
+//! outside active stealing.
+//!
+//! The queue also carries the scheduler's global accounting:
+//!
+//! * `pending` — queued-but-unfinished tasks (incremented at push,
+//!   decremented after the popped task is fully processed), and
+//! * `active` — threads still inside a thread-group descent and hence
+//!   able to produce new tasks outside the queue.
+//!
+//! A worker may terminate exactly when both are zero: no queued task
+//! exists and no thread can still create one. `idlers` counts workers
+//! currently failing to find work; busy workers consult it to decide
+//! when to voluntarily share their sequential recursion stacks.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// One schedulable subtask: a range of the input plus backend-specific
+/// payload (e.g. the radix backend's fused min/max key range).
+#[derive(Copy, Clone, Debug)]
+pub(crate) struct Task<A> {
+    pub begin: usize,
+    pub end: usize,
+    pub aux: A,
+}
+
+impl<A> Task<A> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+}
+
+struct Shard<A> {
+    locked: AtomicBool,
+    deque: UnsafeCell<VecDeque<Task<A>>>,
+}
+
+// SAFETY: the deque is only touched while `locked` is held (see
+// `with_shard`), which serializes all access.
+unsafe impl<A: Send> Sync for Shard<A> {}
+
+/// Sharded work-stealing task queue plus termination/idleness counters.
+pub(crate) struct TaskQueue<A> {
+    shards: Vec<Shard<A>>,
+    pending: AtomicUsize,
+    active: AtomicUsize,
+    idlers: AtomicUsize,
+    aborted: AtomicBool,
+}
+
+impl<A: Copy + Send> TaskQueue<A> {
+    /// A queue with one shard per worker; `active` starts at the number
+    /// of threads that will enter a group descent.
+    pub fn new(workers: usize, active: usize) -> Self {
+        let w = workers.max(1);
+        TaskQueue {
+            shards: (0..w)
+                .map(|_| Shard {
+                    locked: AtomicBool::new(false),
+                    deque: UnsafeCell::new(VecDeque::new()),
+                })
+                .collect(),
+            pending: AtomicUsize::new(0),
+            active: AtomicUsize::new(active),
+            idlers: AtomicUsize::new(0),
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    /// Run `f` with shard `i` locked. The critical section is a few
+    /// deque operations — no allocation beyond deque growth, no waiting.
+    fn with_shard<R>(&self, i: usize, f: impl FnOnce(&mut VecDeque<Task<A>>) -> R) -> R {
+        let shard = &self.shards[i];
+        while shard
+            .locked
+            .compare_exchange_weak(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            std::hint::spin_loop();
+        }
+        // SAFETY: the spinlock above gives exclusive access.
+        let r = f(unsafe { &mut *shard.deque.get() });
+        shard.locked.store(false, Ordering::Release);
+        r
+    }
+
+    /// Enqueue a task on `tid`'s shard. Counted in `pending` *before*
+    /// the task becomes visible, so the termination check can never
+    /// observe an in-flight task as finished.
+    pub fn push(&self, tid: usize, task: Task<A>) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        self.with_shard(tid % self.shards.len(), |q| q.push_back(task));
+    }
+
+    /// Take a task: own shard LIFO first, then steal FIFO from peers.
+    /// Returns `(task, stolen)`.
+    pub fn take(&self, tid: usize) -> Option<(Task<A>, bool)> {
+        let w = self.shards.len();
+        let own = tid % w;
+        if let Some(t) = self.with_shard(own, |q| q.pop_back()) {
+            return Some((t, false));
+        }
+        for k in 1..w {
+            let i = (own + k) % w;
+            if let Some(t) = self.with_shard(i, |q| q.pop_front()) {
+                return Some((t, true));
+            }
+        }
+        None
+    }
+
+    /// Mark one previously taken task fully processed (its children, if
+    /// any, were pushed before this).
+    pub fn task_done(&self) {
+        self.pending.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// This thread left its thread-group descent and can no longer
+    /// produce tasks outside the queue.
+    pub fn leave_active(&self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Enter / leave the "searching for work and finding none" state.
+    pub fn enter_idle(&self) {
+        self.idlers.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn leave_idle(&self) {
+        self.idlers.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Number of workers currently idle — busy workers share queued
+    /// subtasks of their sequential recursions when this is non-zero.
+    pub fn idle(&self) -> usize {
+        self.idlers.load(Ordering::Acquire)
+    }
+
+    /// True when no task is queued or in flight and no thread can still
+    /// produce one: workers may terminate.
+    pub fn finished(&self) -> bool {
+        self.pending.load(Ordering::Acquire) == 0 && self.active.load(Ordering::Acquire) == 0
+    }
+
+    /// Raise the abort flag (a worker panicked); peers unwind instead of
+    /// waiting for it at a barrier or in the steal loop.
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Release);
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    /// The raw abort flag, for [`SpinBarrier::wait`].
+    ///
+    /// [`SpinBarrier::wait`]: crate::parallel::SpinBarrier::wait
+    pub fn aborted_flag(&self) -> &AtomicBool {
+        &self.aborted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ThreadPool;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn own_shard_is_lifo_steals_are_fifo() {
+        let q: TaskQueue<()> = TaskQueue::new(2, 0);
+        for i in 0..3usize {
+            q.push(0, Task { begin: i, end: i + 1, aux: () });
+        }
+        // Own pops: LIFO.
+        let (t, stolen) = q.take(0).unwrap();
+        assert_eq!((t.begin, stolen), (2, false));
+        // Steals from thread 1: FIFO (oldest first).
+        let (t, stolen) = q.take(1).unwrap();
+        assert_eq!((t.begin, stolen), (0, true));
+        let (t, stolen) = q.take(1).unwrap();
+        assert_eq!((t.begin, stolen), (1, true));
+        assert!(q.take(0).is_none());
+        q.task_done();
+        q.task_done();
+        q.task_done();
+        assert!(q.finished());
+    }
+
+    #[test]
+    fn pending_and_active_gate_termination() {
+        let q: TaskQueue<()> = TaskQueue::new(1, 1);
+        assert!(!q.finished(), "active thread blocks termination");
+        q.push(0, Task { begin: 0, end: 4, aux: () });
+        q.leave_active();
+        assert!(!q.finished(), "pending task blocks termination");
+        let _ = q.take(0).unwrap();
+        assert!(!q.finished(), "in-flight task still counted");
+        q.task_done();
+        assert!(q.finished());
+    }
+
+    #[test]
+    fn concurrent_push_take_loses_nothing() {
+        let t = 4;
+        let per = 500usize;
+        let q: TaskQueue<()> = TaskQueue::new(t, t);
+        let pool = ThreadPool::new(t);
+        let taken = AtomicU64::new(0);
+        let stolen = AtomicU64::new(0);
+        let (qr, tk, st) = (&q, &taken, &stolen);
+        pool.run(move |tid| {
+            for i in 0..per {
+                qr.push(tid, Task { begin: tid * per + i, end: tid * per + i + 1, aux: () });
+            }
+            qr.leave_active();
+            loop {
+                if let Some((_, was_steal)) = qr.take(tid) {
+                    tk.fetch_add(1, Ordering::Relaxed);
+                    if was_steal {
+                        st.fetch_add(1, Ordering::Relaxed);
+                    }
+                    qr.task_done();
+                    continue;
+                }
+                if qr.finished() {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        });
+        assert_eq!(taken.load(Ordering::Relaxed), (t * per) as u64);
+        assert!(q.finished());
+    }
+
+    #[test]
+    fn idle_accounting() {
+        let q: TaskQueue<()> = TaskQueue::new(2, 0);
+        assert_eq!(q.idle(), 0);
+        q.enter_idle();
+        assert_eq!(q.idle(), 1);
+        q.leave_idle();
+        assert_eq!(q.idle(), 0);
+    }
+}

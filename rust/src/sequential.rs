@@ -95,6 +95,30 @@ where
     M: BucketMap<T>,
     F: Fn(&T, &T) -> bool,
 {
+    distribute_seq_hooked(v, ctx, map, is_less, eager_base, |_, _: &mut [T]| {})
+}
+
+/// [`distribute_seq`] with a per-bucket completion hook: `hook(bucket,
+/// contents)` runs during cleanup for every non-empty bucket that was
+/// *not* eager-sorted, while its elements are still cache-warm. The
+/// radix and CDF backends use it to fuse the next recursion level's
+/// min/max key scan into this level's cleanup (saving one full sweep per
+/// level, counted in
+/// [`ScratchCounters::radix_fused_scans`](crate::metrics::ScratchCounters)).
+pub fn distribute_seq_hooked<T, M, F, H>(
+    v: &mut [T],
+    ctx: &mut SeqContext<T>,
+    map: &M,
+    is_less: &F,
+    eager_base: bool,
+    mut hook: H,
+) -> Vec<usize>
+where
+    T: Element,
+    M: BucketMap<T>,
+    F: Fn(&T, &T) -> bool,
+    H: FnMut(usize, &mut [T]),
+{
     let n = v.len();
     let nb = map.num_buckets();
     let block = ctx.block;
@@ -135,11 +159,16 @@ where
             0,
             nb,
             &[],
-            |start, end| {
-                if eager_base && end - start <= base && end > start {
-                    // SAFETY: cleanup owns the whole range sequentially.
-                    let slice = unsafe { arr.slice_mut(start, end) };
+            |bucket, start, end| {
+                if end <= start {
+                    return;
+                }
+                // SAFETY: cleanup owns the whole range sequentially.
+                let slice = unsafe { arr.slice_mut(start, end) };
+                if eager_base && end - start <= base {
                     insertion_sort(slice, is_less);
+                } else {
+                    hook(bucket, slice);
                 }
             },
         );

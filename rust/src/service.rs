@@ -51,7 +51,7 @@ use crate::planner::{
     plan_by, plan_keys, run_merge_sort, sort_cdf_par_with, sort_cdf_seq, Backend, PlannerMode,
     SortPlan,
 };
-use crate::radix::{sort_radix_par_with, sort_radix_seq, RadixKey};
+use crate::radix::{sort_radix_par_with, sort_radix_seq_with, RadixKey};
 use crate::sequential::{sort_seq, SeqContext};
 use crate::task_scheduler::{sort_parallel_with, ParScratch};
 use crate::util::Element;
@@ -291,7 +291,14 @@ where
             // thread.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 assert!(scratch.compatible_with(&core.cfg), "recycled arena geometry mismatch");
-                sort_parallel_with(&mut data, &core.cfg, &core.pool, &mut scratch, &self.is_less);
+                sort_parallel_with(
+                    &mut data,
+                    &core.cfg,
+                    &core.pool,
+                    &mut scratch,
+                    &self.is_less,
+                    Some(core.counters.as_ref()),
+                );
             }));
             match outcome {
                 Ok(()) => {
@@ -378,7 +385,9 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
             match plan.backend {
                 Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
                 Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less),
-                Backend::Radix => sort_radix_seq(&mut data, &mut ctx),
+                Backend::Radix => {
+                    sort_radix_seq_with(&mut data, &mut ctx, Some(core.counters.as_ref()))
+                }
                 Backend::CdfSort => {
                     sort_cdf_seq(&mut data, &mut ctx, Some(core.counters.as_ref()))
                 }
@@ -420,9 +429,13 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                         "recycled arena geometry mismatch"
                     );
                     match plan.backend {
-                        Backend::Radix => {
-                            sort_radix_par_with(&mut data, &core.cfg, &core.pool, &mut scratch)
-                        }
+                        Backend::Radix => sort_radix_par_with(
+                            &mut data,
+                            &core.cfg,
+                            &core.pool,
+                            &mut scratch,
+                            Some(core.counters.as_ref()),
+                        ),
                         Backend::CdfSort => sort_cdf_par_with(
                             &mut data,
                             &core.cfg,
@@ -436,6 +449,7 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                             &core.pool,
                             &mut scratch,
                             &T::radix_less,
+                            Some(core.counters.as_ref()),
                         ),
                     }
                 }));

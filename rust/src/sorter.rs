@@ -149,7 +149,13 @@ impl Sorter {
                         "recycled arena geometry mismatch"
                     );
                     if plan.backend == Backend::Radix {
-                        crate::radix::sort_radix_par_with(v, &self.cfg, pool, &mut scratch);
+                        crate::radix::sort_radix_par_with(
+                            v,
+                            &self.cfg,
+                            pool,
+                            &mut scratch,
+                            Some(counters),
+                        );
                     } else {
                         crate::planner::sort_cdf_par_with(
                             v,
@@ -167,7 +173,7 @@ impl Sorter {
                         .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
                     assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
                     if plan.backend == Backend::Radix {
-                        crate::radix::sort_radix_seq(v, &mut ctx);
+                        crate::radix::sort_radix_seq_with(v, &mut ctx, Some(counters));
                     } else {
                         crate::planner::sort_cdf_seq(v, &mut ctx, Some(counters));
                     }
@@ -242,6 +248,7 @@ impl Sorter {
                     pool,
                     &mut scratch,
                     is_less,
+                    Some(self.arenas.counters().as_ref()),
                 );
                 self.arenas.checkin(scratch);
             }

@@ -1,31 +1,40 @@
-//! Parallel recursion scheduler and the cooperative parallel partition
-//! step (paper §4, §4.1–4.3, Appendix A).
+//! Parallel comparison-based IPS⁴o: the [`ParScratch`] arena shared by
+//! every parallel backend, plus the comparison backend adapter for the
+//! shared dynamic recursion scheduler (paper §4, §4.1–4.3, Appendix A).
 //!
-//! While subproblems of at least `β·n/t` elements exist they are
-//! partitioned *one after another*, each by all `t` threads cooperating
-//! (stripes → shared block permutation → bucket-partitioned cleanup).
-//! Remaining small subproblems are assigned to threads in a balanced way
-//! (LPT) and sorted sequentially, independently, in parallel.
+//! The recursion machinery itself — concurrent big-task partitioning by
+//! proportional thread groups, the work-stealing small-task queue,
+//! voluntary work sharing, and the `static-lpt` baseline — lives in
+//! [`crate::scheduler`] and is shared with the radix
+//! ([`crate::radix`]) and learned-CDF ([`crate::planner::cdf`])
+//! backends. This module supplies what is specific to comparison
+//! sorting: sampling a splitter tree per step ([`CmpSched`]) and the
+//! degenerate-sample / no-progress fallbacks.
 
-use std::collections::VecDeque;
-
-use crate::base_case::heapsort;
-use crate::classifier::{BucketMap, CmpMap};
-use crate::cleanup::{cleanup_buckets, save_next_head};
+use crate::classifier::{BucketMap, Classifier};
 use crate::config::Config;
-use crate::local_classification::{classify_stripe, LocalBuffers, StripeResult};
-use crate::parallel::{stripes, PerThread, SharedSlice, ThreadPool};
-use crate::permutation::{
-    final_writes, init_pointers, move_empty_blocks, permute_blocks, Overflow, Plan, StripeBlocks,
-};
+use crate::metrics::ScratchCounters;
+use crate::parallel::{PerThread, ThreadPool};
+use crate::permutation::Overflow;
 use crate::sampling::{build_classifier, SampleResult};
-use crate::sequential::{sort_seq, SeqContext, StepResult};
+use crate::scheduler::{sort_scheduled, SchedBackend, StepPlan, WholeAction};
+use crate::sequential::{sort_seq, SeqContext};
 use crate::util::{BucketPointers, Element};
+
+/// Per-group distribution resources: the atomic bucket-pointer array and
+/// the overflow block of one cooperative partition step. The scratch
+/// holds one slot per thread, indexed by the group leader's pool tid, so
+/// concurrently partitioning thread groups never share pointers or
+/// overflow storage.
+pub(crate) struct GroupResources<T> {
+    pub(crate) pointers: Vec<BucketPointers>,
+    pub(crate) overflow: Overflow<T>,
+}
 
 /// All scratch state one parallel sort needs, grouped for reuse across
 /// invocations: per-thread sequential contexts (distribution buffers,
-/// swap blocks, RNGs), the shared atomic bucket-pointer array, and the
-/// shared overflow block.
+/// swap blocks, RNGs) and per-group distribution resources (bucket
+/// pointers, overflow blocks — one slot per potential group leader).
 ///
 /// Building one of these is the entire per-call allocation cost of
 /// [`sort_parallel`]; threading a `ParScratch` through
@@ -34,10 +43,7 @@ use crate::util::{BucketPointers, Element};
 /// makes repeated sorts allocation-free after warm-up.
 pub struct ParScratch<T> {
     ctxs: PerThread<SeqContext<T>>,
-    pointers: Vec<BucketPointers>,
-    /// The shared overflow block lives outside the per-thread contexts so
-    /// SPMD regions can reference it without aliasing a context borrow.
-    overflow: Overflow<T>,
+    groups: Vec<GroupResources<T>>,
     /// Block size (elements) the contexts were built for; must match the
     /// config used at sort time.
     block: usize,
@@ -56,10 +62,12 @@ impl<T: Element> ParScratch<T> {
                     .map(|i| SeqContext::<T>::new(cfg.clone(), 0x1950_5EED ^ ((i as u64) << 32)))
                     .collect(),
             ),
-            pointers: (0..2 * cfg.max_buckets)
-                .map(|_| BucketPointers::new())
+            groups: (0..t)
+                .map(|_| GroupResources {
+                    pointers: (0..2 * cfg.max_buckets).map(|_| BucketPointers::new()).collect(),
+                    overflow: Overflow::<T>::new(block),
+                })
                 .collect(),
-            overflow: Overflow::<T>::new(block),
             block,
         }
     }
@@ -69,12 +77,17 @@ impl<T: Element> ParScratch<T> {
         self.ctxs.len()
     }
 
-    /// Shared views of the scratch parts for a parallel driver: the
-    /// per-thread contexts, the atomic bucket pointers, and the shared
-    /// overflow block. `&mut self` guarantees exclusivity for the
-    /// duration of the borrows.
-    pub fn parts(&mut self) -> (&PerThread<SeqContext<T>>, &[BucketPointers], &Overflow<T>) {
-        (&self.ctxs, &self.pointers[..], &self.overflow)
+    /// The block size (elements) this scratch was built for.
+    pub(crate) fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Shared views of the scratch parts for the recursion scheduler:
+    /// the per-thread contexts and the per-group distribution resources.
+    /// `&mut self` guarantees exclusivity for the duration of the
+    /// borrows.
+    pub(crate) fn views(&mut self) -> (&PerThread<SeqContext<T>>, &[GroupResources<T>]) {
+        (&self.ctxs, &self.groups[..])
     }
 
     /// Exclusive access to the leader context (for sequential fallbacks).
@@ -87,9 +100,106 @@ impl<T: Element> ParScratch<T> {
     /// before being used to sort under `cfg`.
     pub fn compatible_with(&self, cfg: &Config) -> bool {
         self.block == cfg.block_elems(std::mem::size_of::<T>())
-            && self.pointers.len() >= 2 * cfg.max_buckets
+            && self
+                .groups
+                .iter()
+                .all(|g| g.pointers.len() >= 2 * cfg.max_buckets)
     }
 }
+
+// ---------------------------------------------------------------------------
+// The comparison backend for the shared scheduler
+// ---------------------------------------------------------------------------
+
+/// One step's owned bucket mapping: the sampled splitter tree plus the
+/// comparator it descends with.
+pub(crate) struct CmpStepMap<'f, T, F> {
+    classifier: Classifier<T>,
+    is_less: &'f F,
+}
+
+impl<'f, T, F> BucketMap<T> for CmpStepMap<'f, T, F>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    #[inline(always)]
+    fn num_buckets(&self) -> usize {
+        self.classifier.num_buckets()
+    }
+
+    #[inline(always)]
+    fn is_equality_bucket(&self, b: usize) -> bool {
+        self.classifier.is_equality_bucket(b)
+    }
+
+    #[inline(always)]
+    fn bucket_of(&self, e: &T) -> usize {
+        self.classifier.classify(e, self.is_less)
+    }
+
+    #[inline(always)]
+    fn bucket_of4(&self, es: &[T; 4]) -> [usize; 4] {
+        self.classifier.classify4(es, self.is_less)
+    }
+}
+
+/// Comparison IPS⁴o as a [`SchedBackend`]: sample a splitter tree per
+/// step; degenerate samples fall back to heapsort; a two-way step whose
+/// single non-equality bucket swallowed everything is the no-progress
+/// guard (heapsort again).
+pub(crate) struct CmpSched<'f, F> {
+    pub is_less: &'f F,
+}
+
+impl<'f, T, F> SchedBackend<T> for CmpSched<'f, F>
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    type Aux = ();
+    type Map = CmpStepMap<'f, T, F>;
+
+    #[inline(always)]
+    fn less(&self, a: &T, b: &T) -> bool {
+        (self.is_less)(a, b)
+    }
+
+    fn root_aux(&self, _v: &mut [T], _pool: &ThreadPool) {}
+
+    fn plan_step(
+        &self,
+        v: &mut [T],
+        _aux: (),
+        cfg: &Config,
+        ctx: &mut SeqContext<T>,
+    ) -> StepPlan<Self::Map> {
+        let n = v.len();
+        match build_classifier(v, cfg.buckets_for(n), cfg, &mut ctx.rng, self.is_less) {
+            SampleResult::Classifier(c) => StepPlan::Partition(CmpStepMap {
+                classifier: c,
+                is_less: self.is_less,
+            }),
+            SampleResult::Degenerate => StepPlan::SortNow,
+        }
+    }
+
+    fn child_aux(&self, _slice: &[T]) {}
+
+    fn whole_range_action(&self, num_buckets: usize) -> WholeAction {
+        // Mirrors the sequential no-progress guard: with at most two
+        // buckets there is no sibling to recurse into.
+        if num_buckets <= 2 {
+            WholeAction::SortNow
+        } else {
+            WholeAction::Recurse
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
 
 /// Sort `v` with IPS⁴o using the given pool. Falls back to sequential
 /// IS⁴o when the input or the pool is too small to benefit.
@@ -102,18 +212,21 @@ where
     F: Fn(&T, &T) -> bool + Sync,
 {
     let mut scratch = ParScratch::new(cfg, pool.threads());
-    sort_parallel_with(v, cfg, pool, &mut scratch, is_less);
+    sort_parallel_with(v, cfg, pool, &mut scratch, is_less, None);
 }
 
-/// Sort `v` with IPS⁴o, reusing caller-provided scratch. `scratch` must
-/// have been built with [`ParScratch::new`] from the same `cfg` and at
-/// least `pool.threads()` workers.
+/// Sort `v` with IPS⁴o through the shared recursion scheduler, reusing
+/// caller-provided scratch. `scratch` must have been built with
+/// [`ParScratch::new`] from the same `cfg` and at least
+/// `pool.threads()` workers. Steal/share/group-split events are counted
+/// in `counters` when provided.
 pub fn sort_parallel_with<T, F>(
     v: &mut [T],
     cfg: &Config,
     pool: &ThreadPool,
     scratch: &mut ParScratch<T>,
     is_less: &F,
+    counters: Option<&ScratchCounters>,
 ) where
     T: Element,
     F: Fn(&T, &T) -> bool + Sync,
@@ -126,294 +239,33 @@ pub fn sort_parallel_with<T, F>(
         "scratch built for {} threads, pool has {t}",
         scratch.threads()
     );
-    debug_assert_eq!(scratch.block, block, "scratch built for a different block size");
+    // A recycled arena with mismatched block geometry would silently
+    // corrupt the permutation phase in release builds — hard assert.
+    assert_eq!(
+        scratch.block, block,
+        "scratch built for a different block size"
+    );
     // Below this size the parallel machinery cannot pay for itself:
     // every thread needs a few blocks' worth of work.
     let min_parallel = (4 * t * block).max(1 << 13);
     if t == 1 || n < min_parallel {
-        sort_seq(v, scratch.ctxs.slot_mut(0), is_less);
+        sort_seq(v, scratch.leader_ctx(), is_less);
         return;
     }
-
-    // Shared views for the SPMD regions below; `&mut scratch` guarantees
-    // no other thread touches these for the duration of the call.
-    let ctxs = &scratch.ctxs;
-    let pointers = &scratch.pointers[..];
-    let overflow = &scratch.overflow;
-
-    let threshold = cfg.parallel_task_min(n).max(min_parallel);
-    let mut big: VecDeque<(usize, usize)> = VecDeque::new();
-    let mut small: Vec<(usize, usize)> = Vec::new();
-    big.push_back((0, n));
-
-    while let Some((s, e)) = big.pop_front() {
-        let step = partition_parallel(&mut v[s..e], cfg, pool, ctxs, pointers, overflow, is_less);
-        if let Some(step) = step {
-            for i in 0..step.bounds.len() - 1 {
-                let (cs, ce) = (s + step.bounds[i], s + step.bounds[i + 1]);
-                let len = ce - cs;
-                // All-equal, or eager-sorted during cleanup. With the
-                // eager optimization disabled, base-case buckets must
-                // still reach the small-task phase to be sorted at all.
-                if step.equality[i] || (len <= cfg.base_case_size && cfg.eager_base_case) {
-                    continue;
-                }
-                if len < 2 {
-                    continue;
-                }
-                if len >= threshold {
-                    big.push_back((cs, ce));
-                } else {
-                    small.push((cs, ce));
-                }
-            }
-        }
+    let backend = CmpSched { is_less };
+    let deferred = sort_scheduled(v, cfg, pool, scratch, &backend, counters);
+    // The comparison backend never defers (its fallbacks sort in place).
+    debug_assert!(deferred.is_empty(), "comparison backend deferred a range");
+    for (s, e) in deferred {
+        sort_seq(&mut v[s..e], scratch.leader_ctx(), is_less);
     }
-
-    // --- Small-task phase: LPT assignment, sequential sorting ---
-    let bins = crate::parallel::lpt_bins(small, t, |r: &(usize, usize)| r.1 - r.0);
-    let arr = SharedSlice::new(v);
-    let bins = &bins;
-    pool.run(|tid| {
-        // SAFETY: `tid` slot is exclusively ours; bins hold disjoint
-        // ranges produced by the partitioning.
-        let ctx = unsafe { ctxs.get_mut(tid) };
-        for &(s, e) in &bins[tid] {
-            let slice = unsafe { arr.slice_mut(s, e) };
-            sort_seq(slice, ctx, is_less);
-        }
-    });
-}
-
-/// The cooperative block phases — striped classification → empty-block
-/// movement (Appendix A) → atomic block permutation → bucket-partitioned
-/// cleanup — run by all pool threads for one already-chosen bucket
-/// mapping. Shared by the sampling-based [`partition_parallel`] and the
-/// parallel radix backend ([`crate::radix`]). Returns the bucket
-/// boundary offsets (length `num_buckets + 1`).
-///
-/// `is_less` is only used to eagerly sort base-case buckets during
-/// cleanup (when `cfg.eager_base_case` is set).
-pub fn distribute_parallel<T, M, F>(
-    v: &mut [T],
-    cfg: &Config,
-    pool: &ThreadPool,
-    ctxs: &PerThread<SeqContext<T>>,
-    pointers: &[BucketPointers],
-    overflow: &Overflow<T>,
-    map: &M,
-    is_less: &F,
-) -> Vec<usize>
-where
-    T: Element,
-    M: BucketMap<T> + Sync,
-    F: Fn(&T, &T) -> bool + Sync,
-{
-    let t = pool.threads();
-    let n = v.len();
-    let block = cfg.block_elems(std::mem::size_of::<T>());
-    let nb = map.num_buckets();
-    assert!(nb <= pointers.len(), "pointer array too small");
-
-    // --- Local classification (SPMD over stripes) ---
-    let bounds = stripes(n, t, block);
-    let arr = SharedSlice::new(v);
-    let results: PerThread<Option<StripeResult>> = PerThread::new((0..t).map(|_| None).collect());
-    {
-        let bounds = &bounds;
-        let arr = &arr;
-        let results = &results;
-        overflow.reset(block);
-        pool.run(move |tid| {
-            // SAFETY: per-thread slots + disjoint stripes.
-            let ctx = unsafe { ctxs.get_mut(tid) };
-            ctx.bufs.reset(nb, block);
-            let res = classify_stripe(arr, bounds[tid], bounds[tid + 1], map, &mut ctx.bufs);
-            unsafe { *results.get_mut(tid) = Some(res) };
-        });
-    }
-    let results: Vec<StripeResult> = results
-        .into_inner()
-        .into_iter()
-        .map(|r| r.expect("stripe result"))
-        .collect();
-
-    // --- Aggregate counts, build the plan ---
-    let mut counts = vec![0usize; nb];
-    for r in &results {
-        for (c, rc) in counts.iter_mut().zip(&r.counts) {
-            *c += rc;
-        }
-    }
-
-    let plan = Plan::new(&counts, n, block);
-    let sb = StripeBlocks {
-        begin: bounds.iter().map(|&x| (x / block) as i32).collect(),
-        flush: results.iter().map(|r| (r.flush_end / block) as i32).collect(),
-    };
-    // Note: bounds interior entries are block-aligned; the last entry (n)
-    // rounds *down* here, which is correct: a trailing partial block is
-    // never a full block.
-    init_pointers(&plan, &sb, pointers);
-
-    // --- Appendix A: establish the invariant (empty-block movement) ---
-    {
-        let plan = &plan;
-        let sb = &sb;
-        let arr = &arr;
-        pool.run(move |tid| move_empty_blocks(arr, plan, sb, tid));
-    }
-
-    // --- Block permutation ---
-    {
-        let plan = &plan;
-        let arr = &arr;
-        pool.run(move |tid| {
-            let ctx = unsafe { ctxs.get_mut(tid) };
-            permute_blocks(arr, plan, pointers, map, overflow, &mut ctx.swap, tid, t);
-        });
-    }
-    let ws = final_writes(pointers, nb);
-
-    // --- Cleanup: bucket groups, pre-saved heads, then fill ---
-    // Contiguous bucket groups balanced by element count.
-    let mut groups = vec![0usize; t + 1];
-    {
-        let per = crate::util::div_ceil(n.max(1), t);
-        let mut g = 1;
-        let mut acc = 0usize;
-        for i in 0..nb {
-            acc += counts[i];
-            while g < t && acc >= g * per {
-                groups[g] = i + 1;
-                g += 1;
-            }
-        }
-        for gg in g..t {
-            groups[gg] = nb;
-        }
-        groups[t] = nb;
-        // Monotonicity fix-up (tiny inputs can skip groups).
-        for g in 1..=t {
-            if groups[g] < groups[g - 1] {
-                groups[g] = groups[g - 1];
-            }
-        }
-    }
-
-    let saved: PerThread<Vec<T>> = PerThread::new(vec![Vec::new(); t]);
-    {
-        let plan = &plan;
-        let arr = &arr;
-        let saved = &saved;
-        let groups = &groups;
-        pool.run(move |tid| {
-            let head = save_next_head(arr, plan, groups[tid + 1]);
-            unsafe { *saved.get_mut(tid) = head };
-        });
-    }
-    {
-        let plan = &plan;
-        let arr = &arr;
-        let ws = &ws;
-        let saved = &saved;
-        let groups = &groups;
-        let base = cfg.base_case_size;
-        let eager = cfg.eager_base_case;
-        pool.run(move |tid| {
-            // SAFETY: buffers are read-only during cleanup (barrier after
-            // classification), bucket groups are disjoint.
-            let bufs: Vec<&LocalBuffers<T>> =
-                (0..t).map(|i| unsafe { &ctxs.get(i).bufs }).collect();
-            let head = unsafe { saved.get(tid) };
-            cleanup_buckets(
-                arr,
-                plan,
-                ws,
-                &bufs,
-                overflow,
-                groups[tid],
-                groups[tid + 1],
-                head,
-                |start, end| {
-                    if eager && end - start <= base && end > start {
-                        let slice = unsafe { arr.slice_mut(start, end) };
-                        crate::base_case::insertion_sort(slice, is_less);
-                    }
-                },
-            );
-        });
-    }
-    // Buffers are drained; reset fills for the next step.
-    for tid in 0..t {
-        unsafe { ctxs.get_mut(tid) }.bufs.clear();
-    }
-
-    plan.bucket_starts
-}
-
-/// One cooperative partition step over `v` with all pool threads.
-/// Returns `None` if the range was sorted directly (degenerate fallback).
-pub fn partition_parallel<T, F>(
-    v: &mut [T],
-    cfg: &Config,
-    pool: &ThreadPool,
-    ctxs: &PerThread<SeqContext<T>>,
-    pointers: &[BucketPointers],
-    overflow: &Overflow<T>,
-    is_less: &F,
-) -> Option<StepResult>
-where
-    T: Element,
-    F: Fn(&T, &T) -> bool + Sync,
-{
-    let n = v.len();
-
-    // --- Sampling (leader) ---
-    let classifier = {
-        // SAFETY: exclusive access before any SPMD region starts.
-        let ctx0 = unsafe { ctxs.get_mut(0) };
-        match build_classifier(v, cfg.buckets_for(n), cfg, &mut ctx0.rng, is_less) {
-            SampleResult::Classifier(c) => c,
-            SampleResult::Degenerate => {
-                heapsort(v, is_less);
-                return None;
-            }
-        }
-    };
-    let nb = classifier.num_buckets();
-
-    // --- Distribution (classify → permute → cleanup) ---
-    let bounds = distribute_parallel(
-        v,
-        cfg,
-        pool,
-        ctxs,
-        pointers,
-        overflow,
-        &CmpMap::new(&classifier, is_less),
-        is_less,
-    );
-
-    // No-progress guard (mirrors the sequential driver): a non-equality
-    // bucket that swallowed everything with no sibling to recurse into.
-    if nb <= 2 {
-        for i in 0..nb {
-            if bounds[i + 1] - bounds[i] == n && !classifier.is_equality_bucket(i) {
-                heapsort(v, is_less);
-                return None;
-            }
-        }
-    }
-
-    let equality = (0..nb).map(|i| classifier.is_equality_bucket(i)).collect();
-    Some(StepResult { bounds, equality })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::datagen::{gen_u64, Distribution};
+    use crate::scheduler::SchedulerMode;
     use crate::util::{is_sorted_by, multiset_fingerprint};
 
     fn lt(a: &u64, b: &u64) -> bool {
@@ -479,6 +331,56 @@ mod tests {
     }
 
     #[test]
+    fn static_lpt_mode_sorts_all_distributions() {
+        let cfg = Config::default()
+            .with_threads(4)
+            .with_scheduler(SchedulerMode::StaticLpt);
+        for d in Distribution::ALL {
+            check_parallel(gen_u64(d, 100_000, 23), &cfg, 4);
+        }
+    }
+
+    #[test]
+    fn dynamic_and_static_modes_agree() {
+        let dy = Config::default().with_threads(4);
+        let st = Config::default()
+            .with_threads(4)
+            .with_scheduler(SchedulerMode::StaticLpt);
+        let pool = ThreadPool::new(4);
+        for d in [
+            Distribution::Uniform,
+            Distribution::Zipf,
+            Distribution::AlmostSorted,
+            Distribution::RootDup,
+        ] {
+            let base = gen_u64(d, 150_000, 31);
+            let mut a = base.clone();
+            let mut b = base;
+            sort_parallel(&mut a, &dy, &pool, &lt);
+            sort_parallel(&mut b, &st, &pool, &lt);
+            assert_eq!(a, b, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn dynamic_mode_counts_scheduler_events() {
+        // Enough small subproblems that non-leader threads must steal
+        // from the leader's shard.
+        let counters = ScratchCounters::new();
+        let cfg = Config::default().with_threads(4);
+        let pool = ThreadPool::new(4);
+        let mut scratch = ParScratch::<u64>::new(&cfg, 4);
+        let mut v = gen_u64(Distribution::Uniform, 400_000, 5);
+        sort_parallel_with(&mut v, &cfg, &pool, &mut scratch, &lt, Some(&counters));
+        assert!(is_sorted_by(&v, lt));
+        let s = counters.snapshot();
+        assert!(
+            s.task_steals + s.task_shares > 0,
+            "dynamic mode must rebalance: {s:?}"
+        );
+    }
+
+    #[test]
     fn scratch_reused_across_many_sorts_and_sizes() {
         // One ParScratch serves many inputs, including sizes below the
         // parallel threshold (sequential fallback through slot 0) and
@@ -490,7 +392,7 @@ mod tests {
             for d in [Distribution::Uniform, Distribution::RootDup] {
                 let mut v = gen_u64(d, n, seed);
                 let fp = multiset_fingerprint(&v, |x| *x);
-                sort_parallel_with(&mut v, &cfg, &pool, &mut scratch, &lt);
+                sort_parallel_with(&mut v, &cfg, &pool, &mut scratch, &lt, None);
                 assert!(is_sorted_by(&v, lt), "n={n} d={}", d.name());
                 assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
             }
@@ -498,31 +400,19 @@ mod tests {
     }
 
     #[test]
-    fn partition_parallel_bucket_order() {
-        let cfg = Config::default().with_threads(4);
-        let mut v = gen_u64(Distribution::Uniform, 80_000, 21);
-        let pool = ThreadPool::new(4);
-        let ctxs = PerThread::new(
-            (0..4)
-                .map(|i| SeqContext::<u64>::new(cfg.clone(), i as u64))
-                .collect(),
-        );
-        let pointers: Vec<BucketPointers> =
-            (0..2 * cfg.max_buckets).map(|_| BucketPointers::new()).collect();
-        let overflow = crate::permutation::Overflow::<u64>::new(
-            cfg.block_elems(std::mem::size_of::<u64>()),
-        );
-        let step = partition_parallel(&mut v, &cfg, &pool, &ctxs, &pointers, &overflow, &lt)
-            .expect("should partition");
-        for i in 0..step.bounds.len() - 2 {
-            let (s, e) = (step.bounds[i], step.bounds[i + 1]);
-            let e2 = step.bounds[i + 2];
-            if s == e || e == e2 {
-                continue;
-            }
-            let max_here = *v[s..e].iter().max().unwrap();
-            let min_next = *v[e..e2].iter().min().unwrap();
-            assert!(max_here <= min_next, "bucket {i} overlaps bucket {}", i + 1);
-        }
+    fn scratch_geometry_mismatch_is_rejected() {
+        // The block-geometry assert must fire in release builds too — a
+        // recycled arena with the wrong block size silently corrupts the
+        // permutation otherwise.
+        let cfg_big = Config::default().with_threads(2);
+        let cfg_small = Config::default().with_threads(2).with_block_bytes(64);
+        let pool = ThreadPool::new(2);
+        let mut scratch = ParScratch::<u64>::new(&cfg_small, 2);
+        assert!(!scratch.compatible_with(&cfg_big));
+        let mut v = gen_u64(Distribution::Uniform, 100_000, 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sort_parallel_with(&mut v, &cfg_big, &pool, &mut scratch, &lt, None);
+        }));
+        assert!(r.is_err(), "mismatched block geometry must be rejected");
     }
 }

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Canonical verification gate for this repo (referenced from ROADMAP.md).
 #
-#   ./ci.sh           build + tests + bench compile check + format check
+#   ./ci.sh           build + examples + tests + bench compile check +
+#                     rustdoc (warnings denied) + format check
 #   ./ci.sh --fast    build + tests only
 #
 # The crate is dependency-free and builds fully offline.
@@ -18,7 +19,8 @@ cargo test -q
 # pinned and a single test thread — exercising the IPS4O_TEST_SEED
 # replay path (tests/common/oracle.rs) on every gate, including --fast.
 echo "== seeded replay (IPS4O_TEST_SEED=271828, --test-threads=1) =="
-for suite in differential property_tests scheduler_stress service_stress sort_integration; do
+for suite in differential planner_calibration property_tests scheduler_stress service_stress \
+             sort_integration; do
     IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
 done
 
@@ -31,18 +33,23 @@ IPS4O_TEST_SEED=271828 IPS4O_STRESS_THREADS=16 \
     cargo test -q --test scheduler_stress -- --test-threads=1
 
 if [[ "${1:-}" != "--fast" ]]; then
+    echo "== cargo build --release --examples =="
+    # The repo-root examples are registered example targets; they are
+    # documentation that must keep compiling.
+    cargo build --release --examples
+
     echo "== cargo bench --no-run =="
     # Bench targets must keep compiling even when nobody runs them.
     cargo bench --no-run
 
+    echo "== cargo doc --no-deps (warnings denied) =="
+    # Rustdoc is a gate: broken intra-doc links and malformed docs fail.
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
     if cargo fmt --version >/dev/null 2>&1; then
-        echo "== cargo fmt --check (advisory) =="
-        # Advisory since PR 4 (the scheduler refactor was authored in an
-        # environment without rustfmt); run 'cargo fmt' in rust/, commit
-        # the result, and flip this back to a hard failure.
-        cargo fmt --check || {
-            echo "WARNING: formatting drift — run 'cargo fmt' in rust/ and re-commit"
-        }
+        echo "== cargo fmt --check =="
+        # Fatal again since PR 5 (advisory during PR 4 only).
+        cargo fmt --check
     else
         echo "== cargo fmt unavailable in this toolchain; skipping format check =="
     fi

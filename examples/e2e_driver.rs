@@ -13,7 +13,11 @@
 //! 3. verifies every output (sorted + multiset-preserving);
 //! 4. reports the paper's headline ratios: IPS⁴o vs best in-place and
 //!    vs best non-in-place competitor (paper: ~2–3× and ~1.4–2.3× on
-//!    uniform input), plus sequential IS⁴o vs BlockQuicksort (~1.1–1.6×).
+//!    uniform input), plus sequential IS⁴o vs BlockQuicksort (~1.1–1.6×);
+//! 5. calibrates the planner on this machine and drives the
+//!    `SortService` with the measured profile installed
+//!    (calibrate-then-serve), verifying the mixed stream routes through
+//!    measured decisions.
 //!
 //! ```bash
 //! cargo run --release --example e2e_driver
@@ -133,5 +137,52 @@ fn main() {
         "\nheadline: IPS4o ≥ {:.2}x faster than best in-place, ≥ {:.2}x than best non-in-place (random-ish inputs)",
         worst_inplace_ratio, worst_noninplace_ratio
     );
+
+    // Calibrate-then-serve: measure every backend on this machine (a
+    // reduced grid keeps the driver quick), then serve a mixed keyed
+    // stream with the profile installed and verify measured routing
+    // engaged.
+    let opts = ips4o::CalibrationOptions {
+        sizes: vec![1 << 13, 1 << 16],
+        reps: 2,
+        seed: 42,
+    };
+    let t0 = Instant::now();
+    let profile = ips4o::planner::run_calibration_with(&par_cfg, &opts);
+    println!(
+        "\ncalibration: {} cells in {:.2}s",
+        profile.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let svc = ips4o::SortService::new(par_cfg.clone().with_calibration(profile));
+    let mut tickets = Vec::new();
+    for (i, dist) in [
+        Distribution::Uniform,
+        Distribution::Zipf,
+        Distribution::RootDup,
+        Distribution::AlmostSorted,
+        Distribution::Exponential,
+        Distribution::Uniform,
+    ]
+    .iter()
+    .enumerate()
+    {
+        tickets.push(svc.submit_keys(datagen::gen_u64(*dist, 40_000 + i * 8_000, 9 + i as u64)));
+    }
+    let mut served = 0usize;
+    for t in tickets {
+        let v = t.wait();
+        assert!(is_sorted_by(&v, |a, b| a < b), "calibrated service output");
+        served += v.len();
+    }
+    let m = svc.metrics();
+    assert!(m.planner_calibrated > 0, "measured routing must engage");
+    println!(
+        "calibrate-then-serve: {served} elements via {} (calibrated={} static={})",
+        m.backends_summary(),
+        m.planner_calibrated,
+        m.planner_static
+    );
+
     println!("e2e_driver OK — all outputs verified");
 }

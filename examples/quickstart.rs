@@ -1,10 +1,13 @@
-//! Quickstart: the three ways to use the library.
+//! Quickstart: the ways to use the library — one-shot sorts, a reusable
+//! configured sorter, the strictly in-place variant, and
+//! calibrate-then-serve (measured planner routing through the
+//! `SortService`).
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use ips4o::{Config, Sorter};
+use ips4o::{CalibrationOptions, Config, SortService, Sorter};
 
 fn main() {
     // 1. One-shot sequential sort (IS⁴o) with the natural order.
@@ -39,6 +42,34 @@ fn main() {
     ips4o::strictly_inplace::sort_strictly_inplace(&mut w, &Config::default(), &|a, b| a < b);
     assert!(w.windows(2).all(|x| x[0] <= x[1]));
     println!("strictly in-place IS4o: sorted {} u64s", w.len());
+
+    // 4. Calibrate, then serve: micro-trial every backend on this
+    //    machine and let the planner route with measured ns/elem instead
+    //    of its built-in static thresholds. (A small grid keeps the
+    //    example quick; `Sorter::calibrate()` or the CLI `calibrate`
+    //    subcommand measure the full grid and can persist the profile.)
+    let mut measured = Sorter::new(Config::default().with_threads(2));
+    let profile = measured.calibrate_with(&CalibrationOptions {
+        sizes: vec![1 << 12, 1 << 15],
+        reps: 1,
+        seed: 7,
+    });
+    let svc = SortService::new(Config::default().with_threads(2).with_calibration(profile));
+    let ticket = svc.submit_keys(ips4o::datagen::gen_u64(
+        ips4o::datagen::Distribution::Uniform,
+        60_000,
+        4,
+    ));
+    let sorted = ticket.wait();
+    assert!(sorted.windows(2).all(|x| x[0] <= x[1]));
+    let m = svc.metrics();
+    assert!(m.planner_calibrated > 0, "measured routing must engage");
+    println!(
+        "calibrated service: routed via {} (calibrated={} static={})",
+        m.backends_summary(),
+        m.planner_calibrated,
+        m.planner_static
+    );
 
     println!("quickstart OK");
 }

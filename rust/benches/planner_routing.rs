@@ -1,20 +1,31 @@
 //! Planner routing bench: per distribution, measure the planner's
-//! chosen backend against forced learned-CDF, forced radix (IPS²Ra),
-//! forced parallel comparison-IPS⁴o, and forced *sequential* IS⁴o on
-//! u64 keys — showing both what the planner picks and what that choice
-//! costs or saves.
+//! chosen backend against a *calibrated* planner (routing on measured
+//! ns/elem — see `ips4o::planner::calibration`), forced learned-CDF,
+//! forced radix (IPS²Ra), forced parallel comparison-IPS⁴o, and forced
+//! *sequential* IS⁴o on u64 keys — showing what the planner picks, what
+//! that choice costs or saves, and whether measurement beats the static
+//! thresholds.
 //!
 //! Emits `BENCH_planner_routing.json` when `IPS4O_BENCH_JSON=<dir>` is
-//! set. Two acceptance references:
+//! set; when a previous run's report already exists there, its
+//! per-backend measurements are ingested into the calibration profile
+//! (the ROADMAP's planner feedback loop). Acceptance references:
+//! * calibrated-auto ≥ static-auto throughput on every distribution
+//!   (within a small run-to-run noise margin);
 //! * radix ≥ comparison-IPS⁴o throughput on uniform u64 keys;
 //! * forced-CDF ≥ sequential IS⁴o throughput on the Zipf and
 //!   Exponential (skewed-lane) distributions.
 
-use ips4o::bench_harness::{bench, print_machine_info, reps_for, JsonReport, Table};
+use ips4o::bench_harness::{bench, bench_json_dir, print_machine_info, reps_for, JsonReport, Table};
 use ips4o::datagen::{gen_u64, Distribution};
-use ips4o::planner::plan_keys;
+use ips4o::planner::{plan_keys, run_calibration};
 use ips4o::util::is_sorted_by;
 use ips4o::{Backend, Config, PlannerMode, Sorter};
+
+/// Two identical auto runs of this bench jitter by a few percent; a
+/// calibrated row must beat static by more than that to claim a win,
+/// and is allowed to trail by less without failing.
+const NOISE_TOLERANCE: f64 = 0.97;
 
 fn main() {
     print_machine_info();
@@ -27,6 +38,23 @@ fn main() {
     println!("# planner routing — n={n} u64 keys, t={threads}\n");
 
     let cfg_auto = Config::default().with_threads(threads);
+
+    // Calibrate in-process; fold in a previous run's report when one
+    // exists under IPS4O_BENCH_JSON.
+    println!("# calibrating (micro-trials over the size x archetype grid)…");
+    let mut profile = run_calibration(&cfg_auto);
+    if let Some(dir) = bench_json_dir() {
+        let prev = dir.join("BENCH_planner_routing.json");
+        if prev.exists() {
+            match profile.ingest_bench_json_file(&prev) {
+                Ok(k) => println!("# ingested {k} measurements from {}", prev.display()),
+                Err(e) => println!("# previous report unusable ({e}); fresh trials only"),
+            }
+        }
+    }
+    println!("# calibration profile: {} cells\n", profile.len());
+
+    let cfg_calib = cfg_auto.clone().with_calibration(profile);
     let cfg_radix = cfg_auto
         .clone()
         .with_planner(PlannerMode::Force(Backend::Radix));
@@ -40,6 +68,7 @@ fn main() {
         .clone()
         .with_planner(PlannerMode::Force(Backend::Ips4oSeq));
     let auto = Sorter::new(cfg_auto.clone());
+    let calib = Sorter::new(cfg_calib.clone());
     let radix = Sorter::new(cfg_radix);
     let cdf = Sorter::new(cfg_cdf);
     let ips4o = Sorter::new(cfg_ips4o);
@@ -57,19 +86,37 @@ fn main() {
     ];
 
     let mut table = Table::new(&[
-        "dist", "plan", "auto ms", "cdf ms", "radix ms", "ips4o ms", "is4o ms",
+        "dist",
+        "static plan",
+        "calib plan",
+        "auto ms",
+        "calib ms",
+        "cdf ms",
+        "radix ms",
+        "ips4o ms",
+        "is4o ms",
     ]);
     let mut report = JsonReport::new("planner_routing", threads);
     let mut uniform_radix_tp = 0.0f64;
     let mut uniform_ips4o_tp = 0.0f64;
     let mut cdf_vs_seq: Vec<(&str, f64, f64)> = Vec::new();
+    let mut calib_vs_auto: Vec<(&str, f64, f64)> = Vec::new();
 
     for d in dists {
         let make = || gen_u64(d, n, 0xBE7C4);
-        let plan = plan_keys(&make(), &cfg_auto);
+        // Both planners' decisions, so each timing column sits next to
+        // the route that produced it.
+        let input = make();
+        let static_plan = plan_keys(&input, &cfg_auto);
+        let calib_plan = plan_keys(&input, &cfg_calib);
+        drop(input);
 
         let m_auto = bench(n, reps, &make, |mut v| {
             auto.sort_keys(&mut v);
+            v
+        });
+        let m_calib = bench(n, reps, &make, |mut v| {
+            calib.sort_keys(&mut v);
             v
         });
         let m_cdf = bench(n, reps, &make, |mut v| {
@@ -100,8 +147,16 @@ fn main() {
         let mut v = make();
         cdf.sort_keys(&mut v);
         assert!(is_sorted_by(&v, |a, b| a < b), "cdf failed on {}", d.name());
+        let mut v = make();
+        calib.sort_keys(&mut v);
+        assert!(
+            is_sorted_by(&v, |a, b| a < b),
+            "calibrated-auto failed on {}",
+            d.name()
+        );
 
         report.add("planner-auto", d.name(), &m_auto);
+        report.add("calibrated-auto", d.name(), &m_calib);
         report.add("cdf", d.name(), &m_cdf);
         report.add("radix", d.name(), &m_radix);
         report.add("ips4o-par", d.name(), &m_ips4o);
@@ -113,11 +168,14 @@ fn main() {
         if matches!(d, Distribution::Zipf | Distribution::Exponential) {
             cdf_vs_seq.push((d.name(), m_cdf.throughput(), m_seq.throughput()));
         }
+        calib_vs_auto.push((d.name(), m_calib.throughput(), m_auto.throughput()));
 
         table.row(vec![
             d.name().to_string(),
-            plan.backend.name().to_string(),
+            static_plan.backend.name().to_string(),
+            calib_plan.backend.name().to_string(),
             format!("{:.1}", m_auto.mean.as_secs_f64() * 1e3),
+            format!("{:.1}", m_calib.mean.as_secs_f64() * 1e3),
             format!("{:.1}", m_cdf.mean.as_secs_f64() * 1e3),
             format!("{:.1}", m_radix.mean.as_secs_f64() * 1e3),
             format!("{:.1}", m_ips4o.mean.as_secs_f64() * 1e3),
@@ -127,6 +185,35 @@ fn main() {
 
     table.print();
     report.emit_and_report();
+
+    let m = calib.scratch_metrics();
+    println!(
+        "\n# calibrated-auto routing: {} | calibrated={} static={}",
+        m.backends_summary(),
+        m.planner_calibrated,
+        m.planner_static
+    );
+
+    let mut calib_failures = 0usize;
+    for (name, calib_tp, auto_tp) in &calib_vs_auto {
+        println!(
+            "{name} u64: calibrated-auto {:.1} M elem/s vs static-auto {:.1} M elem/s ({:.2}x)",
+            calib_tp / 1e6,
+            auto_tp / 1e6,
+            calib_tp / auto_tp.max(1.0)
+        );
+        if *calib_tp >= NOISE_TOLERANCE * auto_tp {
+            println!("PASS: calibrated-auto >= static-auto on {name}");
+        } else {
+            println!("FAIL: calibrated-auto slower than static-auto on {name}");
+            calib_failures += 1;
+        }
+    }
+    if calib_failures == 0 {
+        println!("PASS: calibrated-auto >= static-auto on every distribution");
+    } else {
+        println!("FAIL: calibrated-auto lost on {calib_failures} distribution(s)");
+    }
 
     println!(
         "\nuniform u64: radix {:.1} M elem/s vs ips4o {:.1} M elem/s ({:.2}x)",

@@ -9,7 +9,12 @@
 //! With `IPS4O_BENCH_JSON=<dir>` set, benches that build a
 //! [`JsonReport`] additionally write machine-readable
 //! `BENCH_<name>.json` files there (per-entry ns/elem, throughput,
-//! thread count), so repeated runs accumulate a perf trajectory.
+//! thread count), so repeated runs accumulate a perf trajectory. Those
+//! reports are also a calibration source: the planner can ingest their
+//! per-backend measurements as profile cells
+//! ([`CalibrationProfile::ingest_bench_json_file`](crate::planner::CalibrationProfile::ingest_bench_json_file)),
+//! which `benches/planner_routing.rs` and the CLI `calibrate
+//! --bench-json` both use.
 
 use std::time::{Duration, Instant};
 
@@ -163,6 +168,18 @@ impl Table {
 /// [`JsonReport::emit`]. Unset ⇒ no files are written.
 pub const BENCH_JSON_ENV: &str = "IPS4O_BENCH_JSON";
 
+/// The directory named by [`BENCH_JSON_ENV`], when set and non-empty —
+/// shared by the report writer and by readers looking for earlier
+/// reports to ingest (e.g. the routing bench's calibration pass).
+pub fn bench_json_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var(BENCH_JSON_ENV).ok()?;
+    if dir.is_empty() {
+        None
+    } else {
+        Some(std::path::PathBuf::from(dir))
+    }
+}
+
 /// One emitted record: an algorithm/backend measured on one workload.
 struct JsonEntry {
     algo: String,
@@ -253,16 +270,12 @@ impl JsonReport {
     /// directory if needed) and return the path, or `None` when the
     /// variable is unset or the write failed.
     pub fn emit(&self) -> Option<std::path::PathBuf> {
-        let dir = std::env::var(BENCH_JSON_ENV).ok()?;
-        if dir.is_empty() {
-            return None;
-        }
+        let dir = bench_json_dir()?;
         if std::fs::create_dir_all(&dir).is_err() {
-            eprintln!("# {BENCH_JSON_ENV}: cannot create {dir}");
+            eprintln!("# {BENCH_JSON_ENV}: cannot create {}", dir.display());
             return None;
         }
-        let file = format!("BENCH_{}.json", self.name);
-        let path = std::path::Path::new(&dir).join(file);
+        let path = dir.join(format!("BENCH_{}.json", self.name));
         match std::fs::write(&path, self.to_json()) {
             Ok(()) => Some(path),
             Err(e) => {

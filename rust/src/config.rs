@@ -1,6 +1,9 @@
 //! Tuning parameters of IPS⁴o (paper §4.7) and their defaults.
 
+use std::sync::Arc;
+
 use crate::planner::backend::PlannerMode;
+use crate::planner::calibration::CalibrationProfile;
 use crate::scheduler::SchedulerMode;
 use crate::util::{log2_ceil, log2_floor};
 
@@ -61,6 +64,11 @@ pub struct Config {
     /// `StaticLpt` (the serialized-big + LPT-small baseline, kept for
     /// A/B comparison). See [`crate::scheduler`].
     pub scheduler: SchedulerMode,
+    /// Measured per-backend costs consulted by the planner's decision
+    /// layer ([`crate::planner::calibration`]). `None` (the default)
+    /// routes purely on the built-in static thresholds. Shared behind an
+    /// [`Arc`] so cloning a configured `Config` stays cheap.
+    pub calibration: Option<Arc<CalibrationProfile>>,
 }
 
 impl Default for Config {
@@ -79,6 +87,7 @@ impl Default for Config {
             small_sort_bytes: 256 << 10, // 256 KiB ≈ where cooperative partitioning starts to win
             planner: PlannerMode::Auto,
             scheduler: SchedulerMode::Dynamic,
+            calibration: None,
         }
     }
 }
@@ -136,6 +145,20 @@ impl Config {
     /// Builder-style recursion-scheduler mode override.
     pub fn with_scheduler(mut self, mode: SchedulerMode) -> Self {
         self.scheduler = mode;
+        self
+    }
+
+    /// Builder-style calibration-profile install: the planner's decision
+    /// layer consults the measured costs, falling back to the static
+    /// thresholds wherever the profile has no data.
+    pub fn with_calibration(mut self, profile: CalibrationProfile) -> Self {
+        self.calibration = Some(Arc::new(profile));
+        self
+    }
+
+    /// [`Config::with_calibration`] for an already-shared profile.
+    pub fn with_calibration_shared(mut self, profile: Arc<CalibrationProfile>) -> Self {
+        self.calibration = Some(profile);
         self
     }
 
@@ -289,6 +312,22 @@ mod tests {
         assert_eq!(Config::default().scheduler, SchedulerMode::Dynamic);
         let c = Config::default().with_scheduler(SchedulerMode::StaticLpt);
         assert_eq!(c.scheduler, SchedulerMode::StaticLpt);
+    }
+
+    #[test]
+    fn calibration_knob_defaults_and_builder() {
+        let c = Config::default();
+        assert!(c.calibration.is_none(), "static thresholds by default");
+        let c = c.with_calibration(CalibrationProfile::new(4));
+        let p = c.calibration.as_deref().expect("profile installed");
+        assert_eq!(p.threads(), 4);
+        // Cloning shares the profile instead of copying the cells.
+        let shared = c.calibration.clone().unwrap();
+        let c2 = Config::default().with_calibration_shared(shared);
+        assert!(Arc::ptr_eq(
+            c.calibration.as_ref().unwrap(),
+            c2.calibration.as_ref().unwrap()
+        ));
     }
 
     #[test]

@@ -75,6 +75,30 @@
 //! fit-failure fallbacks separately); [`Config::with_planner`] forces a
 //! backend or disables routing.
 //!
+//! ## Measured planner calibration
+//!
+//! The comparison-vs-radix crossovers the planner routes on are
+//! machine-dependent (the paper tunes its thresholds per architecture).
+//! Instead of guessing, [`Sorter::calibrate`] — or the CLI
+//! `ips4o calibrate --out profile.json` — micro-trials every eligible
+//! backend over a size × archetype grid and distills the measurements
+//! into a [`CalibrationProfile`] ([`planner::calibration`]). Install it
+//! with [`Config::with_calibration`] (CLI: `--calibration <path>` or
+//! `IPS4O_CALIBRATION=<path>`) and auto-planned jobs route on measured
+//! ns/elem, falling back to the static thresholds off the measured
+//! grid; the split is counted in `planner_calibrated` /
+//! `planner_static`.
+//!
+//! ```no_run
+//! use ips4o::{Config, Sorter};
+//! let mut sorter = Sorter::new(Config::default().with_threads(4));
+//! let profile = sorter.calibrate(); // a few seconds of micro-trials
+//! profile.save(std::path::Path::new("calibration.json")).unwrap();
+//! ```
+//!
+//! Repo-level orientation lives in `README.md` (overview, quickstart)
+//! and `ARCHITECTURE.md` (module map, routing flowchart).
+//!
 //! ## Dynamic recursion scheduler
 //!
 //! All three parallel backends share one recursion driver
@@ -114,7 +138,9 @@ pub mod bench_harness;
 pub mod runtime;
 
 pub use config::Config;
-pub use planner::{Backend, PlannerMode, SortPlan};
+pub use planner::{
+    Backend, CalibrationOptions, CalibrationProfile, PlannerMode, ProfileError, SortPlan,
+};
 pub use radix::RadixKey;
 pub use scheduler::SchedulerMode;
 pub use service::{JobTicket, SortService};

@@ -1,11 +1,13 @@
-//! `ips4o` CLI launcher — sorting driver, workload generator, self-test,
-//! and experiment runner. Hand-rolled argument parsing (clap is
-//! unavailable offline).
+//! `ips4o` CLI launcher — sorting driver, workload generator, planner
+//! calibration, self-test, and experiment runner. Hand-rolled argument
+//! parsing (clap is unavailable offline).
 
+use std::path::Path;
 use std::time::Instant;
 
 use ips4o::baselines::Algo;
 use ips4o::datagen::{self, Distribution};
+use ips4o::planner::{run_calibration_with, CalibrationOptions, CalibrationProfile};
 use ips4o::{Backend, Config, PlannerMode, SchedulerMode, Sorter};
 
 fn main() {
@@ -13,6 +15,7 @@ fn main() {
     let code = match args.first().map(|s| s.as_str()) {
         Some("sort") => cmd_sort(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("selftest") => cmd_selftest(&args[1..]),
         Some("iovolume") => cmd_iovolume(&args[1..]),
         Some("info") => cmd_info(),
@@ -37,12 +40,13 @@ USAGE:
     ips4o <COMMAND> [FLAGS]
 
 COMMANDS:
-    sort      generate a workload, sort it, verify, report throughput
-    serve     run the batched SortService under a synthetic request mix
-    selftest  run all algorithms over all distributions and verify
-    iovolume  reproduce Appendix B's I/O-volume comparison (PEM model)
-    info      print machine/config info
-    help      this message
+    sort       generate a workload, sort it, verify, report throughput
+    serve      run the batched SortService under a synthetic request mix
+    calibrate  micro-trial every backend and write a calibration profile
+    selftest   run all algorithms over all distributions and verify
+    iovolume   reproduce Appendix B's I/O-volume comparison (PEM model)
+    info       print machine/config info
+    help       this message
 
 FLAGS (sort):
     --algo <name>      IPS4o | IS4o | IS4o-strict | BlockQ | s3-sort |
@@ -64,6 +68,8 @@ FLAGS (sort):
                                                       [default: auto]
     --scheduler <mode> dynamic | static-lpt (recursion scheduling A/B)
                                                       [default: dynamic]
+    --calibration <path>  route auto-planned jobs via a measured profile
+                          (also read from $IPS4O_CALIBRATION)
 
 FLAGS (serve):
     --clients <int>      concurrent client threads        [default: 4]
@@ -76,6 +82,14 @@ FLAGS (serve):
     --small-bytes <int>  batching threshold in bytes      [default: 262144]
     --planner <mode>     auto | off | <backend>           [default: auto]
     --scheduler <mode>   dynamic | static-lpt             [default: dynamic]
+    --calibration <path> route via a measured profile (or $IPS4O_CALIBRATION)
+
+FLAGS (calibrate):
+    --out <path>         profile destination      [default: calibration.json]
+    --threads <int>      thread count to measure with [default: all cores]
+    --reps <int>         repetitions per micro-trial (min kept) [default: 3]
+    --seed <int>         trial workload seed              [default: builtin]
+    --bench-json <path>  also ingest a BENCH_*.json report's measurements
 "#
     );
 }
@@ -141,6 +155,27 @@ fn build_config(args: &[String]) -> Config {
             },
         });
     }
+    // --calibration <path> wins over $IPS4O_CALIBRATION; either way an
+    // unreadable or corrupt profile degrades to static thresholds.
+    match parse_flag(args, "--calibration") {
+        Some(path) => match CalibrationProfile::load(Path::new(path)) {
+            Ok(p) => {
+                println!("# calibration: {} cells from {path}", p.len());
+                cfg = cfg.with_calibration(p);
+            }
+            Err(e) => eprintln!("# calibration profile {path}: {e}; using static thresholds"),
+        },
+        None => {
+            if let Some(p) = CalibrationProfile::from_env() {
+                println!(
+                    "# calibration: {} cells from ${}",
+                    p.len(),
+                    ips4o::planner::CALIBRATION_ENV
+                );
+                cfg = cfg.with_calibration(p);
+            }
+        }
+    }
     cfg
 }
 
@@ -184,6 +219,14 @@ fn run_algo<T: ips4o::RadixKey>(
 ) -> f64 {
     let t0 = Instant::now();
     match algo {
+        CliAlgo::Classic(Algo::Ips4o) => {
+            // Built here (not via the bench-harness dispatcher) so the
+            // planner's routing — including calibrated decisions when a
+            // profile is loaded — can be reported.
+            let sorter = Sorter::new(cfg.clone());
+            sorter.sort_by(v, &is_less);
+            print_planner_report(&sorter.scratch_metrics());
+        }
         CliAlgo::Classic(a) => ips4o::bench_harness::run_algo(a, v, cfg, &is_less),
         CliAlgo::Radix => {
             let cfg = cfg.clone().with_planner(PlannerMode::Force(Backend::Radix));
@@ -198,11 +241,21 @@ fn run_algo<T: ips4o::RadixKey>(
         CliAlgo::Planned => {
             let sorter = Sorter::new(cfg.clone());
             sorter.sort_keys(v);
-            let m = sorter.scratch_metrics();
-            println!("# planned backend: {}", m.backends_summary());
+            print_planner_report(&sorter.scratch_metrics());
         }
     }
     t0.elapsed().as_secs_f64()
+}
+
+/// One-line routing report: which backends handled the job(s) and how
+/// many decisions were measured (calibrated) vs static.
+fn print_planner_report(m: &ips4o::metrics::ScratchSnapshot) {
+    println!(
+        "# planner: {} | calibrated={} static={}",
+        m.backends_summary(),
+        m.planner_calibrated,
+        m.planner_static
+    );
 }
 
 fn cmd_sort(args: &[String]) -> i32 {
@@ -383,6 +436,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         d.distinct_backends()
     );
     println!(
+        "planner: calibrated={} static={}",
+        d.planner_calibrated, d.planner_static
+    );
+    println!(
         "scheduler: steals={} shares={} group_splits={} fused_scans={}",
         d.task_steals, d.task_shares, d.group_splits, d.radix_fused_scans
     );
@@ -393,6 +450,69 @@ fn cmd_serve(args: &[String]) -> i32 {
     } else {
         println!("serve: {fails} FAILURES");
         1
+    }
+}
+
+/// Micro-trial every eligible backend over the calibration grid and
+/// write the measured profile to `--out` (see
+/// `ips4o::planner::calibration`). The profile then drives `sort` and
+/// `serve` routing via `--calibration <path>` or `$IPS4O_CALIBRATION`.
+fn cmd_calibrate(args: &[String]) -> i32 {
+    let out = parse_flag(args, "--out").unwrap_or("calibration.json");
+    let threads = parse_flag(args, "--threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    let cfg = Config::default().with_threads(threads);
+    let mut opts = CalibrationOptions::default();
+    if let Some(r) = parse_flag(args, "--reps").and_then(|s| s.parse().ok()) {
+        opts.reps = r;
+    }
+    if let Some(s) = parse_flag(args, "--seed").and_then(|s| s.parse().ok()) {
+        opts.seed = s;
+    }
+
+    println!(
+        "# calibrate: threads={} sizes={:?} reps={}",
+        cfg.threads, opts.sizes, opts.reps
+    );
+    let t0 = Instant::now();
+    let mut profile = run_calibration_with(&cfg, &opts);
+    if let Some(path) = parse_flag(args, "--bench-json") {
+        match profile.ingest_bench_json_file(Path::new(path)) {
+            Ok(k) => println!("# ingested {k} measurements from {path}"),
+            Err(e) => eprintln!("# could not ingest {path}: {e}"),
+        }
+    }
+
+    let mut table = ips4o::bench_harness::Table::new(&["backend", "archetype", "n", "ns/elem"]);
+    for c in profile.cells() {
+        table.row(vec![
+            c.backend.name().to_string(),
+            c.archetype.name().to_string(),
+            c.size_class.to_string(),
+            format!("{:.2}", c.ns_per_elem),
+        ]);
+    }
+    table.print();
+
+    match profile.save(Path::new(out)) {
+        Ok(()) => {
+            println!(
+                "calibration: {} cells in {:.2}s -> {out}",
+                profile.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            println!("use it: ips4o sort --calibration {out}   (or IPS4O_CALIBRATION={out})");
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot write {out}: {e}");
+            1
+        }
     }
 }
 

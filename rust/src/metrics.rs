@@ -117,6 +117,15 @@ pub struct ScratchCounters {
     /// Radix/CDF recursion levels whose min/max key scan was fused into
     /// the previous level's cleanup pass (one full sweep saved each).
     pub radix_fused_scans: AtomicU64,
+    /// Routing decisions driven by measured [`CalibrationProfile`] data
+    /// (the plan's `calibrated` flag was set).
+    ///
+    /// [`CalibrationProfile`]: crate::planner::CalibrationProfile
+    pub planner_calibrated: AtomicU64,
+    /// Routing decisions from the built-in static thresholds — including
+    /// structural guards, grid misses, forced backends, and planner-off
+    /// dispatch.
+    pub planner_static: AtomicU64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [AtomicU64; Backend::COUNT],
@@ -135,6 +144,8 @@ impl Default for ScratchCounters {
             task_shares: AtomicU64::new(0),
             group_splits: AtomicU64::new(0),
             radix_fused_scans: AtomicU64::new(0),
+            planner_calibrated: AtomicU64::new(0),
+            planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -156,6 +167,8 @@ impl ScratchCounters {
         self.task_shares.store(0, Ordering::Relaxed);
         self.group_splits.store(0, Ordering::Relaxed);
         self.radix_fused_scans.store(0, Ordering::Relaxed);
+        self.planner_calibrated.store(0, Ordering::Relaxed);
+        self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
             c.store(0, Ordering::Relaxed);
         }
@@ -164,6 +177,19 @@ impl ScratchCounters {
     /// Record one planner routing decision.
     pub fn record_backend(&self, b: Backend) {
         self.backend_selected[b.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record whether a routing decision came from measured calibration
+    /// data (`true`) or the static thresholds (`false`). Every executed
+    /// plan records exactly one source, so
+    /// `planner_calibrated + planner_static` equals the number of
+    /// planned jobs.
+    pub fn record_plan_source(&self, calibrated: bool) {
+        if calibrated {
+            self.planner_calibrated.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.planner_static.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn snapshot(&self) -> ScratchSnapshot {
@@ -182,6 +208,8 @@ impl ScratchCounters {
             task_shares: self.task_shares.load(Ordering::Relaxed),
             group_splits: self.group_splits.load(Ordering::Relaxed),
             radix_fused_scans: self.radix_fused_scans.load(Ordering::Relaxed),
+            planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
+            planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
         }
     }
@@ -206,6 +234,11 @@ pub struct ScratchSnapshot {
     pub group_splits: u64,
     /// Min/max key scans fused into a previous cleanup pass.
     pub radix_fused_scans: u64,
+    /// Routing decisions driven by measured calibration data.
+    pub planner_calibrated: u64,
+    /// Routing decisions from the static thresholds (including forced
+    /// and planner-off dispatch).
+    pub planner_static: u64,
     /// Planner routing decisions, indexed by
     /// [`Backend::index`](crate::planner::Backend::index).
     pub backend_selected: [u64; Backend::COUNT],
@@ -228,6 +261,8 @@ impl ScratchSnapshot {
             task_shares: self.task_shares - earlier.task_shares,
             group_splits: self.group_splits - earlier.group_splits,
             radix_fused_scans: self.radix_fused_scans - earlier.radix_fused_scans,
+            planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
+            planner_static: self.planner_static - earlier.planner_static,
             backend_selected,
         }
     }
@@ -345,6 +380,24 @@ mod tests {
         c.reset();
         assert_eq!(c.snapshot().distinct_backends(), 0);
         assert_eq!(c.snapshot().backends_summary(), "none");
+    }
+
+    #[test]
+    fn plan_source_counters_record_and_delta() {
+        let c = ScratchCounters::new();
+        c.record_plan_source(true);
+        c.record_plan_source(true);
+        c.record_plan_source(false);
+        let s = c.snapshot();
+        assert_eq!(s.planner_calibrated, 2);
+        assert_eq!(s.planner_static, 1);
+        c.record_plan_source(false);
+        let d = c.snapshot().delta(&s);
+        assert_eq!(d.planner_calibrated, 0);
+        assert_eq!(d.planner_static, 1);
+        c.reset();
+        assert_eq!(c.snapshot().planner_calibrated, 0);
+        assert_eq!(c.snapshot().planner_static, 0);
     }
 
     #[test]

@@ -86,12 +86,20 @@ pub enum PlannerMode {
     Disabled,
 }
 
-/// One routing decision: the chosen backend and a human-readable reason
-/// (surfaced by the CLI and the routing bench).
+/// One routing decision: the chosen backend, a human-readable reason
+/// (surfaced by the CLI and the routing bench), and whether the
+/// decision came from measured calibration data.
 #[derive(Copy, Clone, Debug)]
 pub struct SortPlan {
     pub backend: Backend,
     pub reason: &'static str,
+    /// True when a [`CalibrationProfile`] measurement drove the choice;
+    /// false for static-threshold, forced, and planner-off decisions.
+    /// Counted in `ScratchCounters::planner_calibrated` /
+    /// `planner_static` by whoever executes the plan.
+    ///
+    /// [`CalibrationProfile`]: crate::planner::CalibrationProfile
+    pub calibrated: bool,
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,657 @@
+//! Measurement-driven planner calibration.
+//!
+//! The IPS⁴o paper tunes block size, fan-out, and base-case thresholds
+//! per machine, and its journal follow-up (*Engineering In-place
+//! (Shared-memory) Sorting Algorithms*) shows that the comparison-vs-
+//! radix crossover moves with both hardware and key distribution. The
+//! cost model's built-in thresholds ([`crate::planner::cost_model`]) are
+//! educated guesses about exactly those machine-dependent crossovers.
+//! This module replaces the guessing with measurement:
+//!
+//! 1. [`run_calibration`] runs short in-process micro-trials of every
+//!    eligible backend over a grid of size classes × input archetypes
+//!    (uniform, duplicate-heavy, presorted, skewed-top-lane — see
+//!    [`Archetype`]), timing each trial and keeping the per-element
+//!    cost of the best repetition.
+//! 2. The measurements distill into a [`CalibrationProfile`]: a flat
+//!    list of (backend, size class, archetype) → ns/elem cells.
+//! 3. At plan time the cost model classifies the job's fingerprint into
+//!    the same archetype space and asks the profile for the cheapest
+//!    measured backend (nearest size class in log₂ distance, capped at
+//!    [`MAX_SIZE_CLASS_LOG_DIST`] so a 2 KiB cell can never speak for a
+//!    1 GiB job). Jobs outside the measured grid — and every job when no
+//!    profile is installed — fall back to the static thresholds, counted
+//!    separately in
+//!    [`ScratchCounters::planner_static`](crate::metrics::ScratchCounters).
+//!
+//! Profiles persist as dependency-free, hand-rolled JSON
+//! ([`CalibrationProfile::save`] / [`CalibrationProfile::load`], parsed
+//! by [`crate::planner::json`]). The CLI writes one with
+//! `ips4o calibrate --out profile.json` and loads one with
+//! `--calibration profile.json` on `sort` / `serve`, or implicitly via
+//! the `IPS4O_CALIBRATION` environment variable ([`CALIBRATION_ENV`]).
+//! Existing `BENCH_planner_routing.json` reports (emitted by the bench
+//! harness under `IPS4O_BENCH_JSON`) can be folded in as additional
+//! measurements through [`CalibrationProfile::ingest_bench_json_file`].
+//!
+//! Calibration trials time `u64` keys. The other benchmark element
+//! types derive their key ordering from the same generator stream
+//! ([`crate::datagen`]), so relative backend cost carries over; per-type
+//! grids are a noted extension.
+
+use std::fmt;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::datagen::{gen_u64, Distribution};
+use crate::planner::backend::{Backend, PlannerMode};
+use crate::planner::fingerprint::{classify_archetype, fingerprint_by, key_stats, Archetype};
+use crate::planner::json::JsonValue;
+use crate::sorter::Sorter;
+use crate::util::Xoshiro256;
+
+/// Environment variable naming a profile file to load implicitly
+/// (the CLI and benches check it; `--calibration` overrides it).
+pub const CALIBRATION_ENV: &str = "IPS4O_CALIBRATION";
+
+/// Default size-class grid: 2 Ki, 16 Ki, 128 Ki, and 1 Mi elements —
+/// log-spaced through the small-job batching range up to the default
+/// CLI/bench workload size.
+pub const SIZE_CLASSES: [usize; 4] = [1 << 11, 1 << 14, 1 << 17, 1 << 20];
+
+/// Maximum |log₂(n) − log₂(size class)| a lookup may bridge. Beyond 4×
+/// in either direction a measurement says nothing trustworthy about the
+/// job (insertion sort measured at 2 Ki must never speak for 1 Mi), so
+/// the planner falls back to the static thresholds instead.
+pub const MAX_SIZE_CLASS_LOG_DIST: f64 = 2.0;
+
+/// Largest input for which the base case (insertion sort) is measured
+/// *and* offered to the measured decision layer as a candidate —
+/// insertion sort is quadratic, so neither trials nor routing may touch
+/// it beyond this size.
+pub const MAX_BASE_CASE_N: usize = 1 << 12;
+
+/// On-disk format version (bumped on incompatible changes).
+const PROFILE_VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// The profile
+// ---------------------------------------------------------------------------
+
+/// One measured grid cell: what `backend` cost per element on a
+/// `size_class`-element input of shape `archetype`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibrationCell {
+    pub backend: Backend,
+    /// Nominal input size the trial ran at (elements).
+    pub size_class: usize,
+    pub archetype: Archetype,
+    /// Best-repetition wall-clock nanoseconds per element (averaged
+    /// when several measurements merge into one cell).
+    pub ns_per_elem: f64,
+    /// How many measurements were folded into this cell.
+    pub samples: u32,
+}
+
+/// A machine-specific table of measured per-backend sort costs, consumed
+/// by the cost model's decision layer. See the [module docs](self).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationProfile {
+    threads: usize,
+    cells: Vec<CalibrationCell>,
+}
+
+impl CalibrationProfile {
+    /// An empty profile measured-for (or destined-for) `threads` workers.
+    pub fn new(threads: usize) -> Self {
+        CalibrationProfile {
+            threads: threads.max(1),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Thread count the measurements were taken with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The measured cells, in insertion order.
+    pub fn cells(&self) -> &[CalibrationCell] {
+        &self.cells
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Fold one measurement into the grid. Repeated measurements of the
+    /// same (backend, size class, archetype) cell average; non-finite or
+    /// non-positive values are dropped.
+    pub fn add_measurement(
+        &mut self,
+        backend: Backend,
+        size_class: usize,
+        archetype: Archetype,
+        ns_per_elem: f64,
+    ) {
+        if !ns_per_elem.is_finite() || ns_per_elem <= 0.0 || size_class == 0 {
+            return;
+        }
+        let existing = self.cells.iter_mut().find(|c| {
+            c.backend == backend && c.size_class == size_class && c.archetype == archetype
+        });
+        match existing {
+            Some(c) => {
+                let total = c.ns_per_elem * c.samples as f64 + ns_per_elem;
+                c.samples += 1;
+                c.ns_per_elem = total / c.samples as f64;
+            }
+            None => self.cells.push(CalibrationCell {
+                backend,
+                size_class,
+                archetype,
+                ns_per_elem,
+                samples: 1,
+            }),
+        }
+    }
+
+    /// Measured ns/elem for `backend` on an `n`-element job of shape
+    /// `archetype`: the nearest size class in log₂ distance, or `None`
+    /// when no cell is within [`MAX_SIZE_CLASS_LOG_DIST`].
+    pub fn lookup(&self, backend: Backend, n: usize, archetype: Archetype) -> Option<f64> {
+        let target = (n.max(1) as f64).log2();
+        let mut best: Option<(f64, f64)> = None;
+        for c in &self.cells {
+            if c.backend != backend || c.archetype != archetype {
+                continue;
+            }
+            let dist = ((c.size_class as f64).log2() - target).abs();
+            if dist <= MAX_SIZE_CLASS_LOG_DIST && best.map_or(true, |(d, _)| dist < d) {
+                best = Some((dist, c.ns_per_elem));
+            }
+        }
+        best.map(|(_, ns)| ns)
+    }
+
+    /// The cheapest measured backend among `candidates` for this job
+    /// shape. Returns `None` — meaning "fall back to the static
+    /// thresholds" — unless at least two candidates have measurements:
+    /// a single data point cannot support a comparison.
+    pub fn best_backend(
+        &self,
+        candidates: &[Backend],
+        n: usize,
+        archetype: Archetype,
+    ) -> Option<Backend> {
+        let mut best: Option<(f64, Backend)> = None;
+        let mut measured = 0usize;
+        for &b in candidates {
+            if let Some(ns) = self.lookup(b, n, archetype) {
+                measured += 1;
+                if best.map_or(true, |(cost, _)| ns < cost) {
+                    best = Some((ns, b));
+                }
+            }
+        }
+        if measured < 2 {
+            return None;
+        }
+        best.map(|(_, b)| b)
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    /// Serialize to the versioned profile JSON format (stable field
+    /// order; f64 written in Rust's shortest exact representation, so a
+    /// write-read cycle reproduces identical decisions).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"version\": {PROFILE_VERSION},\n"));
+        s.push_str("  \"kind\": \"ips4o-calibration\",\n");
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"backend\": \"{}\", \"size_class\": {}, \"archetype\": \"{}\", \
+                 \"ns_per_elem\": {}, \"samples\": {}}}{}\n",
+                c.backend.name(),
+                c.size_class,
+                c.archetype.name(),
+                c.ns_per_elem,
+                c.samples,
+                if i + 1 < self.cells.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse a profile written by [`CalibrationProfile::to_json`].
+    /// Structural problems and version mismatches are errors; cells
+    /// naming backends or archetypes this build does not know (a newer
+    /// writer) are skipped.
+    pub fn from_json(text: &str) -> Result<CalibrationProfile, ProfileError> {
+        let doc = JsonValue::parse(text).map_err(|e| ProfileError::Parse(e.to_string()))?;
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| ProfileError::Parse("missing version".into()))?;
+        if version != PROFILE_VERSION {
+            return Err(ProfileError::Parse(format!(
+                "unsupported profile version {version} (this build reads {PROFILE_VERSION})"
+            )));
+        }
+        let threads = doc.get("threads").and_then(|v| v.as_usize()).unwrap_or(1);
+        let cells = doc
+            .get("cells")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| ProfileError::Parse("missing cells array".into()))?;
+        let mut profile = CalibrationProfile::new(threads);
+        for cell in cells {
+            let backend = cell.get("backend").and_then(|v| v.as_str());
+            let archetype = cell.get("archetype").and_then(|v| v.as_str());
+            let size_class = cell.get("size_class").and_then(|v| v.as_usize());
+            let ns = cell.get("ns_per_elem").and_then(|v| v.as_f64());
+            let (Some(backend), Some(archetype), Some(size_class), Some(ns)) =
+                (backend, archetype, size_class, ns)
+            else {
+                return Err(ProfileError::Parse("malformed cell".into()));
+            };
+            let samples = cell
+                .get("samples")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .clamp(1, u32::MAX as usize) as u32;
+            if !ns.is_finite() || ns <= 0.0 || size_class == 0 {
+                continue; // a hand-edited cost cannot hijack routing — skip
+            }
+            match (Backend::from_name(backend), Archetype::from_name(archetype)) {
+                (Some(b), Some(a)) => profile.cells.push(CalibrationCell {
+                    backend: b,
+                    size_class,
+                    archetype: a,
+                    ns_per_elem: ns,
+                    samples,
+                }),
+                _ => {} // unknown name from a newer writer — skip
+            }
+        }
+        Ok(profile)
+    }
+
+    /// Write the profile to `path` (see [`CalibrationProfile::to_json`]).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Read a profile from `path`.
+    pub fn load(path: &Path) -> Result<CalibrationProfile, ProfileError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    /// Load the profile named by [`CALIBRATION_ENV`], when set. An
+    /// unreadable or corrupt file degrades to `None` (static-threshold
+    /// routing) with a note on stderr — it never panics.
+    pub fn from_env() -> Option<CalibrationProfile> {
+        let path = std::env::var(CALIBRATION_ENV).ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        match Self::load(Path::new(&path)) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("# {CALIBRATION_ENV}={path}: {e}; using static thresholds");
+                None
+            }
+        }
+    }
+
+    // -- bench-report ingestion ---------------------------------------------
+
+    /// Fold the per-backend measurements of a `BENCH_*.json` report
+    /// (the bench harness format, e.g. `BENCH_planner_routing.json`)
+    /// into this profile. Entries whose `algo` is not a backend name
+    /// (`planner-auto`, `calibrated-auto`, baseline algorithms) or whose
+    /// `detail` does not start with a known distribution are skipped.
+    /// Returns how many entries were ingested.
+    pub fn ingest_bench_json(&mut self, text: &str) -> Result<usize, ProfileError> {
+        let doc = JsonValue::parse(text).map_err(|e| ProfileError::Parse(e.to_string()))?;
+        let entries = doc
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| ProfileError::Parse("missing entries array".into()))?;
+        let mut added = 0usize;
+        for e in entries {
+            let Some(backend) = e.get("algo").and_then(|v| v.as_str()).and_then(Backend::from_name)
+            else {
+                continue;
+            };
+            let Some(detail) = e.get("detail").and_then(|v| v.as_str()) else {
+                continue;
+            };
+            // Bench details are "Uniform" or "Zipf/u64"-style.
+            let dist_name = detail.split('/').next().unwrap_or(detail);
+            let Some(dist) = Distribution::from_name(dist_name) else {
+                continue;
+            };
+            let Some(n) = e.get("n").and_then(|v| v.as_usize()).filter(|&n| n > 0) else {
+                continue;
+            };
+            let Some(ns) = e.get("ns_per_elem").and_then(|v| v.as_f64()) else {
+                continue;
+            };
+            self.add_measurement(backend, n, dist_archetype(dist), ns);
+            added += 1;
+        }
+        Ok(added)
+    }
+
+    /// [`CalibrationProfile::ingest_bench_json`] from a file on disk.
+    pub fn ingest_bench_json_file(&mut self, path: &Path) -> Result<usize, ProfileError> {
+        let text = std::fs::read_to_string(path)?;
+        self.ingest_bench_json(&text)
+    }
+}
+
+/// Why a profile could not be loaded.
+#[derive(Debug)]
+pub enum ProfileError {
+    Io(std::io::Error),
+    Parse(String),
+}
+
+impl fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProfileError::Io(e) => write!(f, "cannot read profile: {e}"),
+            ProfileError::Parse(msg) => write!(f, "cannot parse profile: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ProfileError {}
+
+impl From<std::io::Error> for ProfileError {
+    fn from(e: std::io::Error) -> Self {
+        ProfileError::Io(e)
+    }
+}
+
+/// The archetype a benchmark distribution's inputs fingerprint as —
+/// used when ingesting bench reports, whose entries are labeled by
+/// distribution name rather than by probe output.
+pub fn dist_archetype(d: Distribution) -> Archetype {
+    match d {
+        Distribution::Uniform => Archetype::Uniform,
+        Distribution::Exponential | Distribution::Zipf => Archetype::Skewed,
+        Distribution::AlmostSorted
+        | Distribution::Sorted
+        | Distribution::ReverseSorted
+        | Distribution::SortedRuns
+        | Distribution::Ones => Archetype::Presorted,
+        Distribution::RootDup | Distribution::TwoDup | Distribution::EightDup => {
+            Archetype::DupHeavy
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The calibration runner
+// ---------------------------------------------------------------------------
+
+/// Knobs for a calibration pass. The defaults measure the full
+/// [`SIZE_CLASSES`] grid with three repetitions — a few seconds of
+/// wall clock; tests and examples shrink `sizes`/`reps`.
+#[derive(Clone, Debug)]
+pub struct CalibrationOptions {
+    /// Input sizes (elements) to measure, one grid row each.
+    pub sizes: Vec<usize>,
+    /// Repetitions per trial; the best (minimum) time is kept.
+    pub reps: usize,
+    /// Seed for the synthetic trial inputs.
+    pub seed: u64,
+}
+
+impl Default for CalibrationOptions {
+    fn default() -> Self {
+        CalibrationOptions {
+            sizes: SIZE_CLASSES.to_vec(),
+            reps: 3,
+            seed: 0xCA11_B7A7,
+        }
+    }
+}
+
+/// A synthetic `u64` exemplar for one archetype. The returned input is
+/// re-fingerprinted before measuring, so drift between generator intent
+/// and probe classification cannot mislabel a cell.
+fn archetype_input(a: Archetype, n: usize, seed: u64) -> Vec<u64> {
+    match a {
+        Archetype::Uniform => gen_u64(Distribution::Uniform, n, seed),
+        Archetype::DupHeavy => {
+            // Eight random atoms: a ~7/8 duplicate-neighbor ratio in any
+            // sorted sample, with full-width keys so no lane-skew signal.
+            let mut rng = Xoshiro256::new(seed);
+            let atoms: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+            (0..n).map(|_| atoms[rng.next_below(8) as usize]).collect()
+        }
+        Archetype::Presorted => gen_u64(Distribution::AlmostSorted, n, seed),
+        Archetype::Skewed => gen_u64(Distribution::Zipf, n, seed),
+    }
+}
+
+/// Run the default calibration pass for `cfg` (thread count, block
+/// geometry, and equality-bucket setting are all honored — the trials
+/// execute through the same [`Sorter`] path production jobs take).
+pub fn run_calibration(cfg: &Config) -> CalibrationProfile {
+    run_calibration_with(cfg, &CalibrationOptions::default())
+}
+
+/// [`run_calibration`] with explicit [`CalibrationOptions`].
+pub fn run_calibration_with(cfg: &Config, opts: &CalibrationOptions) -> CalibrationProfile {
+    let mut base = cfg.clone();
+    base.calibration = None; // trials must not route through a stale profile
+    let mut profile = CalibrationProfile::new(base.threads);
+
+    // Pre-generate one labeled exemplar per grid cell, so the backend
+    // loop below can own exactly one forced sorter (one thread pool) at
+    // a time while still reusing its scratch arenas across all trials.
+    struct Trial {
+        n: usize,
+        label: Archetype,
+        input: Vec<u64>,
+    }
+    let lt = |a: &u64, b: &u64| a < b;
+    let mut trials: Vec<Trial> = Vec::new();
+    for &size in &opts.sizes {
+        let n = size.max(64);
+        for (ai, &intent) in Archetype::ALL.iter().enumerate() {
+            let input = archetype_input(intent, n, opts.seed ^ ((ai as u64) << 32) ^ n as u64);
+            // Label by what the probes actually say (see archetype_input).
+            let fp = fingerprint_by(&input, &base, &lt);
+            let ks = key_stats(&input);
+            let label = classify_archetype(&fp, Some(&ks));
+            trials.push(Trial { n, label, input });
+        }
+    }
+
+    let reps = opts.reps.max(1);
+    for &backend in Backend::ALL.iter() {
+        if backend == Backend::Ips4oPar && base.threads <= 1 {
+            continue;
+        }
+        let sorter = Sorter::new(base.clone().with_planner(PlannerMode::Force(backend)));
+        for t in &trials {
+            if backend == Backend::BaseCase && t.n > MAX_BASE_CASE_N {
+                continue; // insertion sort is quadratic; keep trials short
+            }
+            let mut best_ns = u128::MAX;
+            for _ in 0..reps {
+                let mut v = t.input.clone();
+                let t0 = Instant::now();
+                sorter.sort_keys(&mut v);
+                best_ns = best_ns.min(t0.elapsed().as_nanos());
+                debug_assert!(v.windows(2).all(|w| w[0] <= w[1]), "{backend:?} trial");
+            }
+            profile.add_measurement(backend, t.n, t.label, best_ns as f64 / t.n as f64);
+        }
+    }
+    profile
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_merge_averages_and_filters() {
+        let mut p = CalibrationProfile::new(2);
+        p.add_measurement(Backend::Radix, 1 << 14, Archetype::Uniform, 4.0);
+        p.add_measurement(Backend::Radix, 1 << 14, Archetype::Uniform, 8.0);
+        p.add_measurement(Backend::Radix, 1 << 14, Archetype::Uniform, f64::NAN);
+        p.add_measurement(Backend::Radix, 1 << 14, Archetype::Uniform, -1.0);
+        p.add_measurement(Backend::Radix, 0, Archetype::Uniform, 1.0);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.cells()[0].samples, 2);
+        assert_eq!(p.cells()[0].ns_per_elem, 6.0);
+    }
+
+    #[test]
+    fn lookup_prefers_the_nearest_size_class_and_caps_distance() {
+        let mut p = CalibrationProfile::new(2);
+        p.add_measurement(Backend::Radix, 1 << 11, Archetype::Uniform, 9.0);
+        p.add_measurement(Backend::Radix, 1 << 17, Archetype::Uniform, 3.0);
+        assert_eq!(p.lookup(Backend::Radix, 1 << 17, Archetype::Uniform), Some(3.0));
+        assert_eq!(p.lookup(Backend::Radix, 1 << 16, Archetype::Uniform), Some(3.0));
+        assert_eq!(p.lookup(Backend::Radix, 1 << 12, Archetype::Uniform), Some(9.0));
+        // 2^25 is 8 log₂ steps past the nearest cell: out of range.
+        assert_eq!(p.lookup(Backend::Radix, 1 << 25, Archetype::Uniform), None);
+        // Archetype is part of the key.
+        assert_eq!(p.lookup(Backend::Radix, 1 << 17, Archetype::Skewed), None);
+    }
+
+    #[test]
+    fn best_backend_needs_two_measured_candidates() {
+        let mut p = CalibrationProfile::new(2);
+        p.add_measurement(Backend::Radix, 1 << 17, Archetype::Uniform, 3.0);
+        let cands = [Backend::Radix, Backend::Ips4oSeq];
+        assert_eq!(p.best_backend(&cands, 1 << 17, Archetype::Uniform), None);
+        p.add_measurement(Backend::Ips4oSeq, 1 << 17, Archetype::Uniform, 7.0);
+        assert_eq!(
+            p.best_backend(&cands, 1 << 17, Archetype::Uniform),
+            Some(Backend::Radix)
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut p = CalibrationProfile::new(8);
+        p.add_measurement(Backend::Radix, 1 << 20, Archetype::Uniform, 3.141592653589793);
+        p.add_measurement(Backend::CdfSort, 1 << 14, Archetype::Skewed, 11.25);
+        p.add_measurement(Backend::Ips4oPar, 1 << 17, Archetype::DupHeavy, 0.875);
+        let text = p.to_json();
+        let q = CalibrationProfile::from_json(&text).expect("roundtrip");
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_and_mismatched_documents() {
+        for bad in [
+            "",
+            "{",
+            "[]",
+            "{\"threads\": 2}",
+            "{\"version\": 99, \"threads\": 2, \"cells\": []}",
+            "{\"version\": 1, \"threads\": 2, \"cells\": 3}",
+            "{\"version\": 1, \"threads\": 2, \"cells\": [{\"backend\": \"radix\"}]}",
+        ] {
+            assert!(CalibrationProfile::from_json(bad).is_err(), "accepted: {bad}");
+        }
+        // Unknown backend names (a newer writer) are skipped, not fatal.
+        let future = "{\"version\": 1, \"threads\": 2, \"cells\": [{\"backend\": \"warp-sort\", \
+                      \"size_class\": 1024, \"archetype\": \"uniform\", \"ns_per_elem\": 1.0, \
+                      \"samples\": 1}]}";
+        let p = CalibrationProfile::from_json(future).expect("unknown cells skip");
+        assert!(p.is_empty());
+        // Hand-edited non-positive costs are dropped (they would
+        // otherwise always win best_backend), matching add_measurement.
+        let poisoned = "{\"version\": 1, \"threads\": 2, \"cells\": [{\"backend\": \"base-case\", \
+                        \"size_class\": 4096, \"archetype\": \"uniform\", \"ns_per_elem\": -5, \
+                        \"samples\": 1}, {\"backend\": \"radix\", \"size_class\": 4096, \
+                        \"archetype\": \"uniform\", \"ns_per_elem\": 2.5, \"samples\": 1}]}";
+        let p = CalibrationProfile::from_json(poisoned).expect("bad cells skip");
+        assert_eq!(p.len(), 1, "only the valid cell survives");
+        assert_eq!(p.cells()[0].backend, Backend::Radix);
+    }
+
+    #[test]
+    fn bench_report_ingestion_maps_algos_and_distributions() {
+        let text = r#"{
+          "bench": "planner_routing",
+          "threads": 4,
+          "entries": [
+            {"algo": "radix", "detail": "Uniform", "n": 1048576, "reps": 5,
+             "mean_ns": 1, "min_ns": 1, "ns_per_elem": 2.5, "throughput_elem_per_s": 4.0e8},
+            {"algo": "planner-auto", "detail": "Uniform", "n": 1048576, "reps": 5,
+             "mean_ns": 1, "min_ns": 1, "ns_per_elem": 2.0, "throughput_elem_per_s": 5.0e8},
+            {"algo": "ips4o-par", "detail": "Zipf/u64", "n": 1048576, "reps": 5,
+             "mean_ns": 1, "min_ns": 1, "ns_per_elem": 9.5, "throughput_elem_per_s": 1.0e8}
+          ]
+        }"#;
+        let mut p = CalibrationProfile::new(4);
+        let added = p.ingest_bench_json(text).expect("bench report parses");
+        assert_eq!(added, 2, "planner-auto is not a single backend");
+        assert_eq!(p.lookup(Backend::Radix, 1 << 20, Archetype::Uniform), Some(2.5));
+        assert_eq!(p.lookup(Backend::Ips4oPar, 1 << 20, Archetype::Skewed), Some(9.5));
+        assert_eq!(p.lookup(Backend::Ips4oPar, 1 << 20, Archetype::Uniform), None);
+        assert!(p.ingest_bench_json("{\"entries\": 1}").is_err());
+    }
+
+    #[test]
+    fn archetype_exemplars_classify_as_intended_at_grid_sizes() {
+        let cfg = Config::default();
+        let lt = |a: &u64, b: &u64| a < b;
+        for &n in &[1usize << 11, 1 << 14, 1 << 17] {
+            for intent in [Archetype::Uniform, Archetype::DupHeavy, Archetype::Presorted] {
+                let v = archetype_input(intent, n, 5);
+                let fp = fingerprint_by(&v, &cfg, &lt);
+                let ks = key_stats(&v);
+                assert_eq!(classify_archetype(&fp, Some(&ks)), intent, "n={n} {intent:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_calibration_pass_covers_the_grid() {
+        let cfg = Config::default().with_threads(2);
+        let opts = CalibrationOptions {
+            sizes: vec![1 << 10],
+            reps: 1,
+            seed: 42,
+        };
+        let p = run_calibration_with(&cfg, &opts);
+        assert!(!p.is_empty());
+        assert_eq!(p.threads(), 2);
+        // Every eligible backend measured at least one cell (1024 ≤ the
+        // base-case trial cap, and threads > 1 keeps ips4o-par in).
+        for b in Backend::ALL {
+            assert!(
+                p.cells().iter().any(|c| c.backend == b),
+                "{b:?} missing from {p:?}"
+            );
+        }
+        // All cells carry the trial size and a positive cost.
+        for c in p.cells() {
+            assert_eq!(c.size_class, 1 << 10);
+            assert!(c.ns_per_elem > 0.0);
+        }
+    }
+}

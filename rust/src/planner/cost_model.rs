@@ -1,8 +1,23 @@
 //! The cost model: turn a [`Fingerprint`] (and, for radix-keyed types,
-//! [`KeyStats`]) into a [`SortPlan`].
+//! [`KeyStats`](crate::planner::KeyStats)) into a [`SortPlan`].
 //!
-//! The rules are deliberately simple, threshold-based, and documented.
-//! Rationale per rule:
+//! Decisions are layered:
+//!
+//! 1. **Structural guards** (always static — no measurement overrides
+//!    them): tiny inputs go to the base case, overwhelmingly ordered
+//!    inputs go to run merging. These are asymptotic wins, not machine
+//!    crossovers.
+//! 2. **The measured decision layer**: when a
+//!    [`CalibrationProfile`](crate::planner::CalibrationProfile) is
+//!    installed (`Config::calibration`), the job's fingerprint is
+//!    bucketed into an [`Archetype`] and the profile is asked for the
+//!    cheapest *measured* backend among the job's eligible candidates —
+//!    nearest size class in log₂ distance, within
+//!    [`MAX_SIZE_CLASS_LOG_DIST`](crate::planner::MAX_SIZE_CLASS_LOG_DIST).
+//!    These decisions set [`SortPlan::calibrated`].
+//! 3. **Static thresholds** (the pre-calibration rules, unchanged):
+//!    used when no profile is loaded, the job falls outside the measured
+//!    grid, or fewer than two candidates have data. Rationale per rule:
 //!
 //! * **Base case** — at or below `n₀` nothing beats insertion sort.
 //! * **Run merge** — when nearly every probed adjacent pair is ordered
@@ -24,10 +39,17 @@
 //!   [`crate::planner::cdf`]) corrects for.
 //! * **Parallel vs sequential IPS⁴o** — the scheduler's own viability
 //!   bound: at least a few blocks of work per thread.
+//!
+//! The static thresholds are exactly the machine-dependent crossovers
+//! the IPS⁴o paper tunes per architecture — which is why the measured
+//! layer exists and takes precedence when it has data.
 
 use crate::config::Config;
 use crate::planner::backend::{Backend, SortPlan};
-use crate::planner::fingerprint::{fingerprint_by, key_stats, Fingerprint};
+use crate::planner::calibration::CalibrationProfile;
+use crate::planner::fingerprint::{
+    classify_archetype, fingerprint_by, key_stats, Archetype, Fingerprint,
+};
 use crate::radix::RadixKey;
 use crate::util::Element;
 
@@ -53,29 +75,89 @@ pub fn parallel_viable<T: Element>(n: usize, cfg: &Config) -> bool {
     cfg.threads > 1 && n >= (4 * cfg.threads * block).max(1 << 13)
 }
 
-/// Shared comparison-menu decision, given a fingerprint.
-fn comparison_plan<T: Element>(fp: &Fingerprint, cfg: &Config) -> SortPlan {
+/// Layer 1: the structural guards no measurement overrides.
+fn structural_plan(fp: &Fingerprint, cfg: &Config) -> Option<SortPlan> {
     if fp.n <= cfg.base_case_size.max(2) {
-        return SortPlan {
+        return Some(SortPlan {
             backend: Backend::BaseCase,
             reason: "at or below base-case size",
-        };
+            calibrated: false,
+        });
     }
     if fp.sorted_ratio >= NEARLY_SORTED_RATIO || fp.reversed_ratio >= NEARLY_SORTED_RATIO {
-        return SortPlan {
+        return Some(SortPlan {
             backend: Backend::RunMerge,
             reason: "nearly sorted (few runs)",
-        };
+            calibrated: false,
+        });
     }
+    None
+}
+
+/// Layer 2: the measured decision among `candidates`, if the profile
+/// covers this (size, archetype) cell for at least two of them.
+fn calibrated_plan(
+    profile: &CalibrationProfile,
+    n: usize,
+    archetype: Archetype,
+    candidates: &[Backend],
+) -> Option<SortPlan> {
+    profile
+        .best_backend(candidates, n, archetype)
+        .map(|backend| SortPlan {
+            backend,
+            reason: "calibrated: lowest measured ns/elem for this size and archetype",
+            calibrated: true,
+        })
+}
+
+/// The backends the measured layer may choose among for one job —
+/// shared by both menus; `keyed` adds the radix-family backends, and
+/// the quadratic base case is only a candidate at sizes calibration
+/// actually measures it at ([`MAX_BASE_CASE_N`]). Fixed capacity, so
+/// planning allocates nothing on the warm service path.
+///
+/// [`MAX_BASE_CASE_N`]: crate::planner::MAX_BASE_CASE_N
+fn calibration_candidates(
+    cfg: &Config,
+    n: usize,
+    keyed: bool,
+) -> ([Backend; Backend::COUNT], usize) {
+    let mut candidates = [Backend::Ips4oSeq; Backend::COUNT];
+    let mut len = 1;
+    candidates[len] = Backend::RunMerge;
+    len += 1;
+    if keyed {
+        candidates[len] = Backend::Radix;
+        len += 1;
+        candidates[len] = Backend::CdfSort;
+        len += 1;
+    }
+    if cfg.threads > 1 {
+        candidates[len] = Backend::Ips4oPar;
+        len += 1;
+    }
+    if n <= crate::planner::calibration::MAX_BASE_CASE_N {
+        candidates[len] = Backend::BaseCase;
+        len += 1;
+    }
+    (candidates, len)
+}
+
+/// Layer 3 tail shared by both menus: parallel vs sequential IPS⁴o by
+/// the static viability bound.
+fn static_cmp_tail<T: Element>(fp: &Fingerprint, cfg: &Config) -> SortPlan {
     if parallel_viable::<T>(fp.n, cfg) {
         SortPlan {
             backend: Backend::Ips4oPar,
             reason: "large unordered input, threads available",
+            calibrated: false,
         }
     } else {
         SortPlan {
             backend: Backend::Ips4oSeq,
             reason: "unordered input below parallel threshold",
+            calibrated: false,
         }
     }
 }
@@ -87,32 +169,60 @@ where
     T: Element,
     F: Fn(&T, &T) -> bool,
 {
-    comparison_plan::<T>(&fingerprint_by(v, cfg, is_less), cfg)
+    let fp = fingerprint_by(v, cfg, is_less);
+    if let Some(plan) = structural_plan(&fp, cfg) {
+        return plan;
+    }
+    if let Some(profile) = cfg.calibration.as_deref() {
+        let (candidates, len) = calibration_candidates(cfg, fp.n, false);
+        let archetype = classify_archetype(&fp, None);
+        if let Some(plan) = calibrated_plan(profile, fp.n, archetype, &candidates[..len]) {
+            return plan;
+        }
+    }
+    static_cmp_tail::<T>(&fp, cfg)
 }
 
-/// Plan for a radix-keyed job: the full menu including [`Backend::Radix`].
+/// Plan for a radix-keyed job: the full menu including [`Backend::Radix`]
+/// and [`Backend::CdfSort`].
 pub fn plan_keys<T: RadixKey>(v: &[T], cfg: &Config) -> SortPlan {
     let fp = fingerprint_by(v, cfg, &T::radix_less);
-    let cmp = comparison_plan::<T>(&fp, cfg);
-    if matches!(cmp.backend, Backend::BaseCase | Backend::RunMerge) {
-        return cmp;
+    if let Some(plan) = structural_plan(&fp, cfg) {
+        return plan;
     }
-    if fp.n >= MIN_RADIX_N && fp.dup_ratio <= MAX_RADIX_DUP_RATIO {
-        let ks = key_stats(v);
+    let radix_gate_open = fp.n >= MIN_RADIX_N && fp.dup_ratio <= MAX_RADIX_DUP_RATIO;
+    // Key statistics feed both the measured layer (archetype bucketing)
+    // and the static radix gate; computed once, only when needed.
+    let ks = if cfg.calibration.is_some() || radix_gate_open {
+        Some(key_stats(v))
+    } else {
+        None
+    };
+    if let Some(profile) = cfg.calibration.as_deref() {
+        let (candidates, len) = calibration_candidates(cfg, fp.n, true);
+        let archetype = classify_archetype(&fp, ks.as_ref());
+        if let Some(plan) = calibrated_plan(profile, fp.n, archetype, &candidates[..len]) {
+            return plan;
+        }
+    }
+    if radix_gate_open {
+        let ks = ks.expect("key stats are computed whenever the radix gate is open");
         if ks.entropy_bits >= MIN_RADIX_ENTROPY_BITS && ks.key_min < ks.key_max {
             if ks.top_lane_entropy <= MAX_CDF_LANE_ENTROPY_BITS {
                 return SortPlan {
                     backend: Backend::CdfSort,
                     reason: "wide-entropy keys with skewed byte lanes, learned CDF",
+                    calibrated: false,
                 };
             }
             return SortPlan {
                 backend: Backend::Radix,
                 reason: "wide-entropy keys, low duplication",
+                calibrated: false,
             };
         }
     }
-    cmp
+    static_cmp_tail::<T>(&fp, cfg)
 }
 
 #[cfg(test)]
@@ -198,5 +308,67 @@ mod tests {
         assert_eq!(seq.backend, Backend::Ips4oSeq);
         let par = plan_by(&v, &Config::default().with_threads(8), &lt);
         assert_eq!(par.backend, Backend::Ips4oPar);
+    }
+
+    #[test]
+    fn static_plans_are_marked_uncalibrated() {
+        let cfg = Config::default().with_threads(4);
+        for d in [Distribution::Uniform, Distribution::Sorted, Distribution::Zipf] {
+            let v = gen_u64(d, 50_000, 6);
+            assert!(!plan_keys(&v, &cfg).calibrated, "{}", d.name());
+            assert!(!plan_by(&v, &cfg, &lt).calibrated, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn calibrated_profile_inverts_a_static_route() {
+        // Static: wide-entropy uniform keys at 100k route to radix.
+        let cfg = Config::default().with_threads(4);
+        let v = gen_u64(Distribution::Uniform, 100_000, 3);
+        assert_eq!(plan_keys(&v, &cfg).backend, Backend::Radix);
+
+        // A profile that measured sequential IS⁴o fastest on this very
+        // (size, archetype) cell must flip the decision.
+        let mut p = CalibrationProfile::new(4);
+        p.add_measurement(Backend::Ips4oSeq, 1 << 17, Archetype::Uniform, 1.0);
+        p.add_measurement(Backend::Radix, 1 << 17, Archetype::Uniform, 80.0);
+        p.add_measurement(Backend::Ips4oPar, 1 << 17, Archetype::Uniform, 40.0);
+        let calibrated_cfg = cfg.clone().with_calibration(p);
+        let plan = plan_keys(&v, &calibrated_cfg);
+        assert_eq!(plan.backend, Backend::Ips4oSeq, "{plan:?}");
+        assert!(plan.calibrated);
+
+        // Jobs outside the measured grid fall back to the static rules.
+        let zipf = gen_u64(Distribution::Zipf, 100_000, 7);
+        let plan = plan_keys(&zipf, &calibrated_cfg);
+        assert_eq!(plan.backend, Backend::CdfSort, "{plan:?}");
+        assert!(!plan.calibrated);
+    }
+
+    #[test]
+    fn structural_guards_override_calibration() {
+        // Even a profile that loves radix cannot claim sorted or tiny
+        // inputs: structural guards run first.
+        let mut p = CalibrationProfile::new(4);
+        for a in Archetype::ALL {
+            p.add_measurement(Backend::Radix, 1 << 14, a, 0.001);
+            p.add_measurement(Backend::Ips4oSeq, 1 << 14, a, 99.0);
+        }
+        let cfg = Config::default().with_threads(4).with_calibration(p);
+        let sorted = gen_u64(Distribution::Sorted, 20_000, 1);
+        assert_eq!(plan_keys(&sorted, &cfg).backend, Backend::RunMerge);
+        let tiny = gen_u64(Distribution::Uniform, 10, 1);
+        assert_eq!(plan_keys(&tiny, &cfg).backend, Backend::BaseCase);
+    }
+
+    #[test]
+    fn empty_profile_behaves_as_static() {
+        let cfg = Config::default()
+            .with_threads(4)
+            .with_calibration(CalibrationProfile::new(4));
+        let v = gen_u64(Distribution::Uniform, 100_000, 3);
+        let plan = plan_keys(&v, &cfg);
+        assert_eq!(plan.backend, Backend::Radix);
+        assert!(!plan.calibrated);
     }
 }

@@ -16,6 +16,11 @@
 //!   [`RadixKey`](crate::radix::RadixKey) types: per-byte-lane Shannon
 //!   entropy of sampled keys (an estimate of how many useful radix
 //!   passes exist) plus the sampled key range.
+//!
+//! The probes also bucket inputs into coarse [`Archetype`]s
+//! (via [`classify_archetype`]) — the fingerprint half of the
+//! calibration grid's (size class × archetype) lookup key
+//! ([`crate::planner::calibration`]).
 
 use crate::config::Config;
 use crate::radix::RadixKey;
@@ -185,6 +190,91 @@ pub fn key_stats<T: RadixKey>(v: &[T]) -> KeyStats {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Input archetypes (the fingerprint half of the calibration grid)
+// ---------------------------------------------------------------------------
+
+/// Adjacent-pair order ratio at or above which an input is bucketed as
+/// [`Archetype::Presorted`]. Deliberately looser than the cost model's
+/// run-merge threshold (0.95): inputs between the two still benefit
+/// from presorted-bucket measurements.
+pub const ARCHETYPE_PRESORTED_RATIO: f64 = 0.8;
+/// Duplicate-neighbor ratio at or above which an input is bucketed as
+/// [`Archetype::DupHeavy`] (matches the cost model's radix duplication
+/// gate).
+pub const ARCHETYPE_DUP_RATIO: f64 = 0.5;
+/// Top-varying-lane entropy (bits) at or below which radix-keyed input
+/// is bucketed as [`Archetype::Skewed`] (matches the cost model's
+/// CDF-vs-radix lane threshold).
+pub const ARCHETYPE_SKEWED_LANE_BITS: f64 = 6.0;
+
+/// Coarse input shapes the calibration grid measures — the
+/// "fingerprint bucket" of a profile lookup. Classification must agree
+/// between calibration time and plan time, which is why both go through
+/// [`classify_archetype`] on the same probe outputs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Archetype {
+    /// Unordered, low-duplication, no lane skew (e.g. uniform keys).
+    Uniform,
+    /// Duplicate-heavy (few distinct keys; equality buckets shine).
+    DupHeavy,
+    /// Mostly ordered or mostly reverse-ordered.
+    Presorted,
+    /// Heavy-tailed radix keys: a skewed top varying byte lane
+    /// (Zipf/Exponential shapes, where the learned CDF pays off).
+    Skewed,
+}
+
+impl Archetype {
+    /// Number of archetypes (sizes the calibration grid).
+    pub const COUNT: usize = 4;
+
+    /// All archetypes, in a stable order.
+    pub const ALL: [Archetype; Archetype::COUNT] = [
+        Archetype::Uniform,
+        Archetype::DupHeavy,
+        Archetype::Presorted,
+        Archetype::Skewed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Archetype::Uniform => "uniform",
+            Archetype::DupHeavy => "dup-heavy",
+            Archetype::Presorted => "presorted",
+            Archetype::Skewed => "skewed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Archetype> {
+        Archetype::ALL
+            .iter()
+            .copied()
+            .find(|a| a.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Bucket a probed input into its [`Archetype`]. Order matters:
+/// presortedness is the strongest structural signal, duplication the
+/// next (equality buckets act on it regardless of lane shape), and lane
+/// skew only applies when key statistics exist (radix-keyed jobs).
+pub fn classify_archetype(fp: &Fingerprint, ks: Option<&KeyStats>) -> Archetype {
+    if fp.sorted_ratio >= ARCHETYPE_PRESORTED_RATIO
+        || fp.reversed_ratio >= ARCHETYPE_PRESORTED_RATIO
+    {
+        return Archetype::Presorted;
+    }
+    if fp.dup_ratio >= ARCHETYPE_DUP_RATIO {
+        return Archetype::DupHeavy;
+    }
+    if let Some(ks) = ks {
+        if ks.top_lane_entropy <= ARCHETYPE_SKEWED_LANE_BITS {
+            return Archetype::Skewed;
+        }
+    }
+    Archetype::Uniform
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,5 +366,45 @@ mod tests {
             assert!(fp.sorted_ratio >= 0.0 && fp.sorted_ratio <= 1.0);
             let _ = key_stats(&v);
         }
+    }
+
+    #[test]
+    fn archetype_names_roundtrip() {
+        for a in Archetype::ALL {
+            assert_eq!(Archetype::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Archetype::from_name("DUP-HEAVY"), Some(Archetype::DupHeavy));
+        assert_eq!(Archetype::from_name("nope"), None);
+    }
+
+    #[test]
+    fn archetypes_separate_the_calibration_shapes() {
+        let cfg = Config::default();
+        let classify = |d: Distribution, n: usize| {
+            let v = gen_u64(d, n, 9);
+            let fp = fingerprint_by(&v, &cfg, &lt);
+            let ks = key_stats(&v);
+            classify_archetype(&fp, Some(&ks))
+        };
+        assert_eq!(classify(Distribution::Uniform, 50_000), Archetype::Uniform);
+        assert_eq!(classify(Distribution::Ones, 20_000), Archetype::Presorted);
+        assert_eq!(
+            classify(Distribution::AlmostSorted, 50_000),
+            Archetype::Presorted
+        );
+        assert_eq!(
+            classify(Distribution::ReverseSorted, 50_000),
+            Archetype::Presorted
+        );
+        assert_eq!(classify(Distribution::Zipf, 100_000), Archetype::Skewed);
+        // Without key statistics, lane skew is invisible: Zipf falls in
+        // the uniform (unordered, low-dup) bucket on the comparator menu.
+        let v = gen_u64(Distribution::Zipf, 100_000, 9);
+        let fp = fingerprint_by(&v, &cfg, &lt);
+        let comparator_bucket = classify_archetype(&fp, None);
+        assert!(
+            comparator_bucket == Archetype::Uniform || comparator_bucket == Archetype::DupHeavy,
+            "{comparator_bucket:?}"
+        );
     }
 }

@@ -10,12 +10,20 @@
 //! assume — "Towards Parallel Learned Sorting" (Carvalho 2022) makes
 //! the same case for distribution-aware strategy selection.
 //!
-//! Four pieces:
-//! * [`fingerprint`] — cheap, deterministic, non-mutating probes:
-//!   presortedness, duplicate density, key-byte entropy (total and of
-//!   the top varying lane);
-//! * [`cost_model`] — threshold rules mapping a fingerprint to a
-//!   [`SortPlan`] (see that module for the rationale per rule);
+//! Six pieces:
+//! * [`fingerprint`] — cheap, deterministic, non-mutating probes
+//!   (presortedness, duplicate density, key-byte entropy — total and of
+//!   the top varying lane), plus the coarse [`Archetype`] bucketing the
+//!   calibration grid is keyed on;
+//! * [`cost_model`] — the decision layer mapping a fingerprint to a
+//!   [`SortPlan`]: structural guards, then measured calibration data
+//!   when a profile is installed, then the built-in static thresholds
+//!   (see that module for the rationale per rule);
+//! * [`calibration`] — measurement-driven calibration: in-process
+//!   micro-trials of every backend over a size × archetype grid,
+//!   distilled into a [`CalibrationProfile`] that persists as
+//!   dependency-free JSON and can also ingest bench reports;
+//! * [`json`] — the minimal hand-rolled JSON reader behind it;
 //! * [`cdf`] — the learned CDF classifier ([`Backend::CdfSort`]): a
 //!   sample-fitted monotone piecewise-linear CDF whose bucket mapping
 //!   costs two multiplies and a clamp, for heavy-tailed key
@@ -48,11 +56,20 @@
 //! ```
 
 pub mod backend;
+pub mod calibration;
 pub mod cdf;
 pub mod cost_model;
 pub mod fingerprint;
+pub mod json;
 
 pub use backend::{run_merge_sort, Backend, PlannerMode, SortPlan};
+pub use calibration::{
+    dist_archetype, run_calibration, run_calibration_with, CalibrationCell, CalibrationOptions,
+    CalibrationProfile, ProfileError, CALIBRATION_ENV, MAX_BASE_CASE_N, MAX_SIZE_CLASS_LOG_DIST,
+    SIZE_CLASSES,
+};
 pub use cdf::{fit_range, sort_cdf, sort_cdf_par_with, sort_cdf_seq, CdfFit, CdfModel};
 pub use cost_model::{parallel_viable, plan_by, plan_keys};
-pub use fingerprint::{fingerprint_by, key_stats, Fingerprint, KeyStats};
+pub use fingerprint::{
+    classify_archetype, fingerprint_by, key_stats, Archetype, Fingerprint, KeyStats,
+};

@@ -22,7 +22,7 @@
 //!   phases ([`crate::sequential::distribute_seq_hooked`]), recursing
 //!   per digit instead of re-sampling; [`sort_radix_par_with`] plugs the
 //!   same digit extraction into the shared dynamic recursion scheduler
-//!   ([`crate::scheduler`]) as a [`SchedBackend`]. Types whose radix key
+//!   ([`crate::scheduler`]) as a crate-private `SchedBackend`. Types whose radix key
 //!   is a prefix ([`RadixKey::COMPLETE`]` == false`) fall back to
 //!   comparison sorting once their prefix stops discriminating.
 //!

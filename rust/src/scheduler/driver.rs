@@ -24,6 +24,13 @@
 //!   tasks are partitioned one after another by the full pool, then the
 //!   accumulated small tasks are LPT-binned and sorted sequentially in
 //!   parallel with no stealing.
+//!
+//! How this driver sits under the backends and above the thread pool —
+//! and how the planner decides which backend enters it — is mapped in
+//! the repo-root `ARCHITECTURE.md`; the calibration subsystem
+//! (`planner/calibration.rs`) measures each backend *through* this
+//! driver, so a profile reflects real scheduled costs, group splits,
+//! steals and all.
 
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;

@@ -55,7 +55,7 @@
 //! elements (`SharedSlice::slice_mut` is only called on a task's own
 //! range, or on barrier-separated stripe/bucket subdivisions of it
 //! inside a group step). Termination detection is the pair of counters
-//! documented in [`queue`]: `pending` (queued-but-unfinished tasks,
+//! documented in `queue.rs`: `pending` (queued-but-unfinished tasks,
 //! incremented before a task becomes stealable) and `active` (threads
 //! still inside a group descent) — workers exit only when both are zero,
 //! so no queued task can be orphaned; a panicking worker raises the

@@ -48,8 +48,8 @@ use crate::config::Config;
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
 use crate::planner::{
-    plan_by, plan_keys, run_merge_sort, sort_cdf_par_with, sort_cdf_seq, Backend, PlannerMode,
-    SortPlan,
+    plan_by, plan_keys, run_merge_sort, sort_cdf_par_with, sort_cdf_seq, Backend,
+    CalibrationOptions, PlannerMode, SortPlan,
 };
 use crate::radix::{sort_radix_par_with, sort_radix_seq_with, RadixKey};
 use crate::sequential::{sort_seq, SeqContext};
@@ -188,14 +188,24 @@ where
     F: Fn(&T, &T) -> bool,
 {
     let mut plan = match core.cfg.planner {
+        // Batch-path jobs run on one worker thread: plan with a
+        // single-thread view of the config so neither the static tail
+        // nor the measured decision layer can select a backend this
+        // path cannot execute (a cheap clone — Config is scalars plus
+        // an Arc).
+        PlannerMode::Auto if !parallel_ok => {
+            plan_by(data, &core.cfg.clone().with_threads(1), is_less)
+        }
         PlannerMode::Auto => plan_by(data, &core.cfg, is_less),
         PlannerMode::Force(backend) => SortPlan {
             backend,
             reason: "forced by config",
+            calibrated: false,
         },
         PlannerMode::Disabled => SortPlan {
             backend: Backend::Ips4oPar,
             reason: "planner disabled",
+            calibrated: false,
         },
     };
     plan.backend = match plan.backend {
@@ -209,14 +219,20 @@ where
 /// The full-menu routing decision for a radix-keyed service job.
 fn resolve_keys_plan<T: RadixKey>(core: &ServiceCore, data: &[T], parallel_ok: bool) -> SortPlan {
     let mut plan = match core.cfg.planner {
+        // See resolve_cmp_plan: batch-path jobs plan with a
+        // single-thread view so measured decisions stay executable
+        // (radix/cdf are fine — run_small executes them sequentially).
+        PlannerMode::Auto if !parallel_ok => plan_keys(data, &core.cfg.clone().with_threads(1)),
         PlannerMode::Auto => plan_keys(data, &core.cfg),
         PlannerMode::Force(backend) => SortPlan {
             backend,
             reason: "forced by config",
+            calibrated: false,
         },
         PlannerMode::Disabled => SortPlan {
             backend: Backend::Ips4oPar,
             reason: "planner disabled",
+            calibrated: false,
         },
     };
     if !parallel_ok && plan.backend == Backend::Ips4oPar {
@@ -254,6 +270,7 @@ where
             assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
             let plan = resolve_cmp_plan(core, &data, &self.is_less, false);
             core.counters.record_backend(plan.backend);
+            core.counters.record_plan_source(plan.calibrated);
             match plan.backend {
                 Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
                 Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &self.is_less),
@@ -282,6 +299,7 @@ where
             }
         };
         core.counters.record_backend(plan.backend);
+        core.counters.record_plan_source(plan.calibrated);
         if plan.backend == Backend::Ips4oPar {
             let mut scratch = core
                 .arenas
@@ -382,6 +400,7 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
             assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
             let plan = resolve_keys_plan(core, &data, false);
             core.counters.record_backend(plan.backend);
+            core.counters.record_plan_source(plan.calibrated);
             match plan.backend {
                 Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
                 Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less),
@@ -418,6 +437,7 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
             }
         };
         core.counters.record_backend(plan.backend);
+        core.counters.record_plan_source(plan.calibrated);
         match plan.backend {
             Backend::Ips4oPar | Backend::Radix | Backend::CdfSort => {
                 let mut scratch = core
@@ -622,6 +642,18 @@ impl SortService {
             core,
             dispatcher: Some(dispatcher),
         }
+    }
+
+    /// Start a service "constructed warm with a profile": run an
+    /// in-process calibration pass with `opts` first (see
+    /// [`crate::planner::calibration`]), then serve with the measured
+    /// profile installed, so the very first job already routes on
+    /// measured ns/elem. Equivalent to
+    /// `SortService::new(cfg.with_calibration(profile))` with a profile
+    /// you measured or loaded yourself.
+    pub fn new_calibrated(cfg: Config, opts: &CalibrationOptions) -> Self {
+        let profile = crate::planner::run_calibration_with(&cfg, opts);
+        SortService::new(cfg.with_calibration(profile))
     }
 
     /// Submit a job using the element's natural order (comparison
@@ -892,6 +924,25 @@ mod tests {
             let kb = svc.submit(base);
             assert_eq!(ka.wait(), kb.wait(), "{}", d.name());
         }
+    }
+
+    #[test]
+    fn calibrated_service_counts_measured_routes() {
+        let svc = SortService::new_calibrated(
+            Config::default().with_threads(2),
+            &CalibrationOptions {
+                sizes: vec![1 << 13],
+                reps: 1,
+                seed: 3,
+            },
+        );
+        let out = svc
+            .submit_keys(gen_u64(Distribution::Uniform, 10_000, 1))
+            .wait();
+        assert!(is_sorted_by(&out, |a, b| a < b));
+        let m = svc.metrics();
+        assert_eq!(m.planner_calibrated, 1, "measured route expected: {m:?}");
+        assert_eq!(m.planner_static, 0);
     }
 
     #[test]

@@ -12,7 +12,10 @@ use crate::arena::ArenaPool;
 use crate::config::Config;
 use crate::metrics::ScratchSnapshot;
 use crate::parallel::ThreadPool;
-use crate::planner::{plan_by, plan_keys, run_merge_sort, Backend, PlannerMode, SortPlan};
+use crate::planner::{
+    plan_by, plan_keys, run_merge_sort, Backend, CalibrationOptions, CalibrationProfile,
+    PlannerMode, SortPlan,
+};
 use crate::radix::RadixKey;
 use crate::sequential::SeqContext;
 use crate::task_scheduler::ParScratch;
@@ -72,6 +75,29 @@ impl Sorter {
         self.arenas.counters().snapshot()
     }
 
+    /// Run the default calibration pass for this sorter's configuration
+    /// (in-process micro-trials of every eligible backend — a few
+    /// seconds; see [`crate::planner::calibration`]), install the
+    /// resulting profile, and return it for persisting
+    /// ([`CalibrationProfile::save`]).
+    pub fn calibrate(&mut self) -> CalibrationProfile {
+        self.calibrate_with(&CalibrationOptions::default())
+    }
+
+    /// [`Sorter::calibrate`] with explicit trial options (smaller grids
+    /// for tests and examples).
+    pub fn calibrate_with(&mut self, opts: &CalibrationOptions) -> CalibrationProfile {
+        let profile = crate::planner::run_calibration_with(&self.cfg, opts);
+        self.set_calibration(profile.clone());
+        profile
+    }
+
+    /// Install a previously measured (or loaded) calibration profile;
+    /// subsequent auto-planned jobs route through its measurements.
+    pub fn set_calibration(&mut self, profile: CalibrationProfile) {
+        self.cfg.calibration = Some(Arc::new(profile));
+    }
+
     /// The plan for a comparator-only job, honoring the override knob.
     fn resolve_plan_by<T, F>(&self, v: &[T], is_less: &F) -> SortPlan
     where
@@ -83,6 +109,7 @@ impl Sorter {
             PlannerMode::Force(backend) => SortPlan {
                 backend,
                 reason: "forced by config",
+                calibrated: false,
             },
             PlannerMode::Disabled => SortPlan {
                 backend: if self.pool.is_some() {
@@ -91,6 +118,7 @@ impl Sorter {
                     Backend::Ips4oSeq
                 },
                 reason: "planner disabled",
+                calibrated: false,
             },
         }
     }
@@ -126,6 +154,7 @@ impl Sorter {
             PlannerMode::Force(backend) => SortPlan {
                 backend,
                 reason: "forced by config",
+                calibrated: false,
             },
             PlannerMode::Disabled => SortPlan {
                 backend: if self.pool.is_some() {
@@ -134,10 +163,12 @@ impl Sorter {
                     Backend::Ips4oSeq
                 },
                 reason: "planner disabled",
+                calibrated: false,
             },
         };
         if matches!(plan.backend, Backend::Radix | Backend::CdfSort) {
             self.arenas.counters().record_backend(plan.backend);
+            self.arenas.counters().record_plan_source(plan.calibrated);
             let counters: &crate::metrics::ScratchCounters = self.arenas.counters().as_ref();
             match &self.pool {
                 Some(pool) => {
@@ -208,6 +239,7 @@ impl Sorter {
             (b, _) => b,
         };
         self.arenas.counters().record_backend(backend);
+        self.arenas.counters().record_plan_source(plan.calibrated);
         match backend {
             Backend::BaseCase => crate::base_case::insertion_sort(v, is_less),
             Backend::RunMerge => {
@@ -421,6 +453,29 @@ mod tests {
         par.sort_keys(&mut v);
         assert!(is_sorted_by(&v, |a, b| a < b));
         assert_eq!(par.scratch_metrics().backend_count(Backend::Ips4oPar), 1);
+    }
+
+    #[test]
+    fn calibrated_sorter_counts_measured_decisions() {
+        let mut s = Sorter::new(Config::default().with_threads(2));
+        // A static-threshold decision before any profile exists.
+        let mut v = gen_u64(Distribution::Uniform, 30_000, 1);
+        s.sort_keys(&mut v);
+        assert_eq!(s.scratch_metrics().planner_static, 1);
+        assert_eq!(s.scratch_metrics().planner_calibrated, 0);
+        // Calibrate on a tiny grid covering the job size, then re-sort:
+        // the decision now comes from measurements.
+        s.calibrate_with(&CalibrationOptions {
+            sizes: vec![1 << 14],
+            reps: 1,
+            seed: 11,
+        });
+        let mut v = gen_u64(Distribution::Uniform, 30_000, 2);
+        s.sort_keys(&mut v);
+        assert!(is_sorted_by(&v, |a, b| a < b));
+        let m = s.scratch_metrics();
+        assert_eq!(m.planner_calibrated, 1, "{m:?}");
+        assert_eq!(m.planner_static, 1);
     }
 
     #[test]

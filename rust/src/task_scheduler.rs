@@ -8,8 +8,9 @@
 //! [`crate::scheduler`] and is shared with the radix
 //! ([`crate::radix`]) and learned-CDF ([`crate::planner::cdf`])
 //! backends. This module supplies what is specific to comparison
-//! sorting: sampling a splitter tree per step ([`CmpSched`]) and the
-//! degenerate-sample / no-progress fallbacks.
+//! sorting: sampling a splitter tree per step (the crate-private
+//! `CmpSched` backend adapter) and the degenerate-sample / no-progress
+//! fallbacks.
 
 use crate::classifier::{BucketMap, Classifier};
 use crate::config::Config;

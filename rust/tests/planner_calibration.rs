@@ -1,0 +1,200 @@
+//! Integration suite for the calibration subsystem: profile JSON
+//! round-trips (identical decisions after write → read), cost-model A/B
+//! under an inverting profile, degenerate-profile fallback (corrupt or
+//! empty files must degrade to static thresholds, never panic), bench
+//! report ingestion, and seeded oracle-clean routing through a
+//! calibrated sorter. Outputs are checked through the shared oracle
+//! (`tests/common/oracle.rs`).
+
+mod common;
+
+use std::path::Path;
+
+use common::oracle::{seeded, SortCheck};
+use ips4o::datagen::{self, Distribution};
+use ips4o::planner::{
+    plan_keys, run_calibration_with, Archetype, CalibrationOptions, CalibrationProfile,
+};
+use ips4o::{Backend, Config, Sorter};
+
+fn lt(a: &u64, b: &u64) -> bool {
+    a < b
+}
+
+#[test]
+fn profile_json_roundtrip_preserves_decisions() {
+    seeded("profile_json_roundtrip_preserves_decisions", 0x0CA11B01, |seed| {
+        let cfg = Config::default().with_threads(2);
+        let opts = CalibrationOptions {
+            sizes: vec![1 << 11, 1 << 14],
+            reps: 1,
+            seed,
+        };
+        let original = run_calibration_with(&cfg, &opts);
+        assert!(!original.is_empty());
+
+        // Write → read: cell-identical…
+        let reread = CalibrationProfile::from_json(&original.to_json()).expect("roundtrip");
+        assert_eq!(original, reread);
+
+        // …and through a real file on disk too.
+        let path = std::env::temp_dir().join(format!(
+            "ips4o-calibration-roundtrip-{}-{seed}.json",
+            std::process::id()
+        ));
+        original.save(&path).expect("profile written");
+        let from_disk = CalibrationProfile::load(&path).expect("profile read back");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(original, from_disk);
+
+        // Identical profiles must produce identical routing decisions.
+        let cfg_a = cfg.clone().with_calibration(original);
+        let cfg_b = cfg.clone().with_calibration(from_disk);
+        for d in Distribution::ALL {
+            for n in [3_000usize, 12_000, 30_000] {
+                let v = datagen::gen_u64(d, n, seed);
+                let a = plan_keys(&v, &cfg_a);
+                let b = plan_keys(&v, &cfg_b);
+                assert_eq!(a.backend, b.backend, "{} n={n}", d.name());
+                assert_eq!(a.calibrated, b.calibrated, "{} n={n}", d.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn calibrated_profile_inverts_a_static_route_end_to_end() {
+    // Static thresholds send 100k wide-entropy uniform keys to radix; a
+    // profile that measured sequential IS⁴o cheapest on that exact cell
+    // must flip the executed route, and the flip must be counted.
+    let cfg = Config::default().with_threads(4);
+    let v = datagen::gen_u64(Distribution::Uniform, 100_000, 3);
+    assert_eq!(plan_keys(&v, &cfg).backend, Backend::Radix);
+
+    let mut p = CalibrationProfile::new(4);
+    p.add_measurement(Backend::Ips4oSeq, 1 << 17, Archetype::Uniform, 1.0);
+    p.add_measurement(Backend::Radix, 1 << 17, Archetype::Uniform, 80.0);
+    p.add_measurement(Backend::Ips4oPar, 1 << 17, Archetype::Uniform, 40.0);
+    p.add_measurement(Backend::CdfSort, 1 << 17, Archetype::Uniform, 60.0);
+    let sorter = Sorter::new(cfg.clone().with_calibration(p));
+
+    let check = SortCheck::capture(&v, lt, |x| *x);
+    let mut w = v.clone();
+    sorter.sort_keys(&mut w);
+    check.assert_output(&w, lt, "inverted route");
+
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.backend_count(Backend::Ips4oSeq), 1, "{}", m.backends_summary());
+    assert_eq!(m.backend_count(Backend::Radix), 0);
+    assert_eq!(m.planner_calibrated, 1);
+    assert_eq!(m.planner_static, 0);
+}
+
+#[test]
+fn degenerate_profiles_fall_back_to_static_without_panicking() {
+    // Corrupt documents are load errors, not panics.
+    for bad in [
+        "",
+        "not json at all",
+        "{\"version\": 1",
+        "{\"version\": 2, \"threads\": 4, \"cells\": []}",
+        "[]",
+    ] {
+        assert!(CalibrationProfile::from_json(bad).is_err(), "accepted: {bad:?}");
+    }
+    assert!(
+        CalibrationProfile::load(Path::new("/nonexistent/ips4o-profile.json")).is_err(),
+        "missing file must be an error, not a panic"
+    );
+
+    // An empty-but-valid profile must behave exactly like no profile.
+    let empty = CalibrationProfile::from_json("{\"version\": 1, \"threads\": 4, \"cells\": []}")
+        .expect("valid empty profile");
+    assert!(empty.is_empty());
+    let cfg = Config::default().with_threads(2).with_calibration(empty);
+    let v = datagen::gen_u64(Distribution::Uniform, 100_000, 5);
+    let plan = plan_keys(&v, &cfg);
+    assert_eq!(plan.backend, Backend::Radix, "static route expected");
+    assert!(!plan.calibrated);
+
+    let sorter = Sorter::new(cfg);
+    let check = SortCheck::capture(&v, lt, |x| *x);
+    let mut w = v.clone();
+    sorter.sort_keys(&mut w);
+    check.assert_output(&w, lt, "empty-profile sort");
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.planner_static, 1);
+    assert_eq!(m.planner_calibrated, 0);
+}
+
+#[test]
+fn bench_report_ingestion_feeds_the_decision_layer() {
+    // A BENCH_planner_routing.json-shaped report (the harness format)
+    // is enough on its own to drive calibrated decisions.
+    let report = r#"{
+      "bench": "planner_routing",
+      "threads": 4,
+      "entries": [
+        {"algo": "planner-auto", "detail": "Uniform", "n": 1048576, "reps": 5,
+         "mean_ns": 1, "min_ns": 1, "ns_per_elem": 3.0, "throughput_elem_per_s": 3.3e8},
+        {"algo": "ips4o-seq", "detail": "Uniform", "n": 1048576, "reps": 5,
+         "mean_ns": 1, "min_ns": 1, "ns_per_elem": 1.0, "throughput_elem_per_s": 1.0e9},
+        {"algo": "radix", "detail": "Uniform", "n": 1048576, "reps": 5,
+         "mean_ns": 1, "min_ns": 1, "ns_per_elem": 50.0, "throughput_elem_per_s": 2.0e7},
+        {"algo": "ips4o-par", "detail": "Uniform", "n": 1048576, "reps": 5,
+         "mean_ns": 1, "min_ns": 1, "ns_per_elem": 25.0, "throughput_elem_per_s": 4.0e7}
+      ]
+    }"#;
+    let mut p = CalibrationProfile::new(4);
+    let added = p.ingest_bench_json(report).expect("harness format parses");
+    assert_eq!(added, 3, "planner-auto must be skipped");
+
+    // 1M uniform keys now route by the ingested measurements: the
+    // report says sequential IS⁴o was fastest.
+    let cfg = Config::default().with_threads(4).with_calibration(p);
+    let v = datagen::gen_u64(Distribution::Uniform, 1 << 20, 8);
+    let plan = plan_keys(&v, &cfg);
+    assert!(plan.calibrated, "{plan:?}");
+    assert_eq!(plan.backend, Backend::Ips4oSeq, "{plan:?}");
+}
+
+#[test]
+fn calibrated_sorter_stays_oracle_clean_across_distributions() {
+    seeded(
+        "calibrated_sorter_stays_oracle_clean_across_distributions",
+        0x0CA11B02,
+        |seed| {
+            let base = Config::default().with_threads(3);
+            let opts = CalibrationOptions {
+                sizes: vec![1 << 12, 1 << 15],
+                reps: 1,
+                seed,
+            };
+            let profile = run_calibration_with(&base, &opts);
+            let sorter = Sorter::new(base.with_calibration(profile));
+
+            let mut jobs = 0u64;
+            for (i, d) in Distribution::ALL.iter().enumerate() {
+                for n in [3_000usize, 30_000] {
+                    let v = datagen::gen_u64(*d, n, seed ^ (i as u64) << 8);
+                    let check = SortCheck::capture(&v, lt, |x| *x);
+                    let mut w = v;
+                    sorter.sort_keys(&mut w);
+                    check.assert_output(&w, lt, &format!("{} n={n}", d.name()));
+                    jobs += 1;
+                }
+            }
+            let m = sorter.scratch_metrics();
+            assert!(
+                m.planner_calibrated > 0,
+                "measured routing must engage: {}",
+                m.backends_summary()
+            );
+            assert_eq!(
+                m.planner_calibrated + m.planner_static,
+                jobs,
+                "every job records exactly one plan source"
+            );
+        },
+    );
+}

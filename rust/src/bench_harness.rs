@@ -268,21 +268,34 @@ impl JsonReport {
 
     /// Write `BENCH_<name>.json` into `$IPS4O_BENCH_JSON` (creating the
     /// directory if needed) and return the path, or `None` when the
-    /// variable is unset or the write failed.
+    /// variable is unset.
+    ///
+    /// When the variable *is* set, the caller asked for a report, so a
+    /// directory that cannot be created or a failed write **panics**
+    /// (failing the bench) instead of printing a stderr note and
+    /// silently dropping the report — a silent skip starves the planner
+    /// feedback loop (`planner_routing` ingests the previous report as
+    /// calibration data) without anything ever going red.
     pub fn emit(&self) -> Option<std::path::PathBuf> {
         let dir = bench_json_dir()?;
-        if std::fs::create_dir_all(&dir).is_err() {
-            eprintln!("# {BENCH_JSON_ENV}: cannot create {}", dir.display());
-            return None;
+        Some(self.emit_to(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`, creating it if needed.
+    /// Panics on failure — report mode is explicit opt-in, so losing
+    /// the report is an error, not a degradation.
+    pub fn emit_to(&self, dir: &std::path::Path) -> std::path::PathBuf {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            panic!(
+                "{BENCH_JSON_ENV}: cannot create report directory {}: {e}",
+                dir.display()
+            );
         }
         let path = dir.join(format!("BENCH_{}.json", self.name));
-        match std::fs::write(&path, self.to_json()) {
-            Ok(()) => Some(path),
-            Err(e) => {
-                eprintln!("# {BENCH_JSON_ENV}: write failed: {e}");
-                None
-            }
+        if let Err(e) = std::fs::write(&path, self.to_json()) {
+            panic!("{BENCH_JSON_ENV}: cannot write {}: {e}", path.display());
         }
+        path
     }
 
     /// Emit (if configured) and print where the report went.
@@ -378,5 +391,34 @@ mod tests {
             let r = JsonReport::new("unit_test_unset", 1);
             assert!(r.emit().is_none());
         }
+    }
+
+    #[test]
+    fn emit_to_uncreatable_dir_panics() {
+        // `/dev/null/...` can never be created (parent is not a dir), so
+        // report mode must fail loudly rather than skip. No env mutation:
+        // emit_to takes the directory directly.
+        let r = JsonReport::new("unit_test_baddir", 1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.emit_to(std::path::Path::new("/dev/null/ips4o_no_such_dir"));
+        }));
+        assert!(err.is_err(), "uncreatable report dir must panic the bench");
+    }
+
+    #[test]
+    fn emit_to_writes_and_returns_path() {
+        let dir = std::env::temp_dir().join(format!("ips4o_emit_test_{}", std::process::id()));
+        let m = Measurement {
+            mean: Duration::from_nanos(2_000),
+            min: Duration::from_nanos(1_500),
+            reps: 3,
+            n: 1000,
+        };
+        let mut r = JsonReport::new("unit_test_emit", 2);
+        r.add("radix", "Uniform/u64", &m);
+        let path = r.emit_to(&dir);
+        let body = std::fs::read_to_string(&path).expect("report must exist");
+        assert!(body.contains("\"bench\": \"unit_test_emit\""));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

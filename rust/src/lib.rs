@@ -119,6 +119,7 @@ pub mod cleanup;
 pub mod config;
 pub mod datagen;
 pub mod local_classification;
+pub mod merge;
 pub mod metrics;
 pub mod parallel;
 pub mod pem;

@@ -51,8 +51,8 @@ COMMANDS:
 FLAGS (sort):
     --algo <name>      IPS4o | IS4o | IS4o-strict | BlockQ | s3-sort |
                        DualPivot | std-sort | MCSTLubq | MCSTLbq |
-                       MCSTLmwm | PBBS | TBB | radix | cdf | planned
-                                                      [default: IPS4o]
+                       MCSTLmwm | PBBS | TBB | radix | cdf | run-merge |
+                       planned                        [default: IPS4o]
     --dist <name>      Uniform | Exponential | AlmostSorted | RootDup |
                        TwoDup | EightDup | Sorted | ReverseSorted |
                        Ones | Zipf | SortedRuns       [default: Uniform]
@@ -186,6 +186,7 @@ enum CliAlgo {
     Classic(Algo),
     Radix,
     Cdf,
+    RunMerge,
     Planned,
 }
 
@@ -195,6 +196,7 @@ impl CliAlgo {
             CliAlgo::Classic(a) => a.name(),
             CliAlgo::Radix => "radix",
             CliAlgo::Cdf => "cdf",
+            CliAlgo::RunMerge => "run-merge",
             CliAlgo::Planned => "planned",
         }
     }
@@ -203,6 +205,7 @@ impl CliAlgo {
         match s.to_ascii_lowercase().as_str() {
             "radix" => CliAlgo::Radix,
             "cdf" => CliAlgo::Cdf,
+            "run-merge" | "runmerge" | "merge" => CliAlgo::RunMerge,
             "planned" | "auto" => CliAlgo::Planned,
             _ => CliAlgo::Classic(Algo::from_name(s).unwrap_or(Algo::Ips4o)),
         }
@@ -236,6 +239,14 @@ fn run_algo<T: ips4o::RadixKey>(
             let cfg = cfg
                 .clone()
                 .with_planner(PlannerMode::Force(Backend::CdfSort));
+            Sorter::new(cfg).sort_keys(v);
+        }
+        CliAlgo::RunMerge => {
+            // Forces the branchless merge engine (ips4o::merge) — the
+            // parallel driver when --threads > 1, sequential otherwise.
+            let cfg = cfg
+                .clone()
+                .with_planner(PlannerMode::Force(Backend::RunMerge));
             Sorter::new(cfg).sort_keys(v);
         }
         CliAlgo::Planned => {
@@ -443,6 +454,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         "scheduler: steals={} shares={} group_splits={} fused_scans={}",
         d.task_steals, d.task_shares, d.group_splits, d.radix_fused_scans
     );
+    println!(
+        "merge: passes={} parallel_splits={}",
+        d.merge_passes, d.merge_parallel_splits
+    );
     let fails = failures.load(Ordering::Relaxed);
     if fails == 0 {
         println!("serve: all results verified sorted");
@@ -539,6 +554,7 @@ fn cmd_selftest(args: &[String]) -> i32 {
     .collect();
     algos.push(CliAlgo::Radix);
     algos.push(CliAlgo::Cdf);
+    algos.push(CliAlgo::RunMerge);
     algos.push(CliAlgo::Planned);
     for algo in algos {
         for dist in Distribution::ALL {

@@ -1,0 +1,446 @@
+//! Branchless merge kernels: the inner loops of the multiway merge
+//! engine ([`crate::merge`]).
+//!
+//! Three disciplines, shared by every kernel:
+//!
+//! * **Conditional-move cursor advancement.** One comparison per output
+//!   element selects a source pointer and bumps exactly one cursor via
+//!   `usize::from(bool)` arithmetic — no data-dependent branch in the
+//!   hot loop, so a misprediction-prone comparator result never steers
+//!   control flow (the same discipline the IPS⁴o classification tree
+//!   uses, applied to merging).
+//! * **Gap-guarded chunks.** Before entering the inner loop we compute
+//!   `chunk = min(remaining per run)`; each iteration advances exactly
+//!   one cursor, so no cursor can leave its run before the chunk ends —
+//!   all boundary checks live *outside* the inner loop.
+//! * **Stability.** Ties always take the leftmost (lower-index) run, at
+//!   every level of the selection cascade, so the engine as a whole is a
+//!   stable sort.
+//!
+//! Kernels that read one side *in place* (`merge_forward_staged_left`,
+//! `merge_backward_staged_right`) are only safe single-threaded on their
+//! range: forward merging must stage the left run and backward merging
+//! the right run, or the write cursor would overrun the unstaged source.
+//! The parallel driver therefore feeds segments exclusively through
+//! [`merge_forward_staged2`] (both sources staged), which has no such
+//! aliasing hazard.
+
+use std::ptr;
+
+use crate::util::Element;
+
+/// Stable co-ranking: the number of elements the *left* run contributes
+/// to the first `o` outputs of the stable merge of `l` and `r`.
+///
+/// Equal keys are pushed into the left contribution (left-biased), which
+/// is exactly the stable-merge prefix — so cutting both runs at
+/// `(i, o - i)` and merging the two halves independently reproduces the
+/// stable merge of the whole pair.
+pub fn co_rank<T, F>(o: usize, l: &[T], r: &[T], is_less: &F) -> usize
+where
+    F: Fn(&T, &T) -> bool,
+{
+    debug_assert!(o <= l.len() + r.len());
+    let mut lo = o.saturating_sub(r.len());
+    let mut hi = o.min(l.len());
+    while lo < hi {
+        let i = lo + (hi - lo) / 2;
+        let j = o - i;
+        // r[j-1] < l[i] ⇒ too many lefts in the prefix; shrink.
+        if is_less(&r[j - 1], &l[i]) {
+            hi = i;
+        } else {
+            lo = i + 1;
+        }
+    }
+    lo
+}
+
+/// Branchless forward merge of a *staged* left run (`left`, a scratch
+/// copy) with the in-place right run `base[j..j_end]`, writing the
+/// merged output to `base[out..]`.
+///
+/// # Safety
+/// * `base[j..j_end]` and `base[out..out + left.len() + (j_end - j)]`
+///   must be valid, initialized ranges of one allocation.
+/// * The output range must precede the unread right-run data at every
+///   step, which holds iff `out + left.len() <= j` (the standard
+///   adjacent-merge layout where the left run was staged out of
+///   `base[out..j]`, or a co-ranked sub-segment of it).
+/// * `left` must not alias `base`'s output range.
+pub unsafe fn merge_forward_staged_left<T, F>(
+    base: *mut T,
+    left: &[T],
+    mut j: usize,
+    j_end: usize,
+    mut out: usize,
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let lp = left.as_ptr();
+    let llen = left.len();
+    let mut i = 0usize;
+    while i < llen && j < j_end {
+        // Each iteration advances exactly one cursor, so `chunk`
+        // iterations cannot exhaust either run before the last read.
+        let chunk = (llen - i).min(j_end - j);
+        for _ in 0..chunk {
+            let l = lp.add(i);
+            let r = base.add(j) as *const T;
+            let take_right = is_less(&*r, &*l);
+            let src = if take_right { r } else { l };
+            ptr::copy_nonoverlapping(src, base.add(out), 1);
+            out += 1;
+            i += usize::from(!take_right);
+            j += usize::from(take_right);
+        }
+    }
+    if i < llen {
+        // Right exhausted: the staged left remainder fills the tail.
+        ptr::copy_nonoverlapping(lp.add(i), base.add(out), llen - i);
+    } else if out != j {
+        // Left exhausted mid-range: slide the unread right remainder
+        // down to close the gap (a memmove; ranges may overlap).
+        ptr::copy(base.add(j), base.add(out), j_end - j);
+    }
+}
+
+/// Branchless backward merge of the in-place left run
+/// `base[l_start..l_end]` with a *staged* right run, writing the merged
+/// output downward so it *ends* at `base[out]` (exclusive).
+///
+/// # Safety
+/// * `base[l_start..l_end]` and the output range must be valid,
+///   initialized ranges of one allocation, with `out = l_end +
+///   right.len()` (the adjacent-merge layout where the right run was
+///   staged out of `base[l_end..out]`).
+/// * `right` must not alias `base`'s output range.
+pub unsafe fn merge_backward_staged_right<T, F>(
+    base: *mut T,
+    right: &[T],
+    l_start: usize,
+    mut l_end: usize,
+    mut out: usize,
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let rp = right.as_ptr();
+    let mut rj = right.len();
+    while l_end > l_start && rj > 0 {
+        let chunk = (l_end - l_start).min(rj);
+        for _ in 0..chunk {
+            let l = base.add(l_end - 1) as *const T;
+            let r = rp.add(rj - 1);
+            // Strictly greater left goes last; ties take the right run
+            // (its equal elements must land above the left run's).
+            let take_left = is_less(&*r, &*l);
+            let src = if take_left { l } else { r };
+            out -= 1;
+            ptr::copy_nonoverlapping(src, base.add(out), 1);
+            l_end -= usize::from(take_left);
+            rj -= usize::from(!take_left);
+        }
+    }
+    if rj > 0 {
+        // Left exhausted: the staged right remainder is the smallest
+        // prefix of the output (out == l_start + rj here).
+        ptr::copy_nonoverlapping(rp, base.add(out - rj), rj);
+    }
+    // A left remainder is already in place: out == l_end when rj == 0.
+}
+
+/// Branchless forward merge of two *staged* runs into `base[out..]`.
+/// Both sources live in scratch, so this kernel has no in-place
+/// aliasing constraint at all — it is the segment kernel the parallel
+/// driver uses (disjoint co-ranked output ranges, shared read-only
+/// staging buffer).
+///
+/// # Safety
+/// `base[out..out + left.len() + right.len()]` must be a valid,
+/// initialized range not aliased by `left` or `right`.
+pub unsafe fn merge_forward_staged2<T, F>(
+    base: *mut T,
+    left: &[T],
+    right: &[T],
+    mut out: usize,
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let lp = left.as_ptr();
+    let rp = right.as_ptr();
+    let (llen, rlen) = (left.len(), right.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < llen && j < rlen {
+        let chunk = (llen - i).min(rlen - j);
+        for _ in 0..chunk {
+            let l = lp.add(i);
+            let r = rp.add(j);
+            let take_right = is_less(&*r, &*l);
+            let src = if take_right { r } else { l };
+            ptr::copy_nonoverlapping(src, base.add(out), 1);
+            out += 1;
+            i += usize::from(!take_right);
+            j += usize::from(take_right);
+        }
+    }
+    if i < llen {
+        ptr::copy_nonoverlapping(lp.add(i), base.add(out), llen - i);
+    } else if j < rlen {
+        ptr::copy_nonoverlapping(rp.add(j), base.add(out), rlen - j);
+    }
+}
+
+/// Branchless k-way (k ≤ 4) merge of adjacent staged runs back into
+/// `base[out..]`. The runs occupy `staged[bounds[r]..bounds[r + 1]]`
+/// for `r < k`; one physical pass replaces two pairwise merge levels
+/// (2·total moves instead of 3·total for a quad).
+///
+/// The selection cascade is a two-level tournament of conditional
+/// moves: `(h0 vs h1)`, `(h2 vs h3)`, then the two winners — three
+/// comparisons per output element for a quad, every tie resolved toward
+/// the lower run index, so stability is preserved at each level. When a
+/// run exhausts, the survivors are compacted (order preserved) and the
+/// loop re-enters at the smaller arity.
+///
+/// # Safety
+/// `base[out..out + bounds[k]]` must be a valid, initialized range not
+/// aliased by `staged`.
+pub unsafe fn merge_kway_staged<T, F>(
+    base: *mut T,
+    mut out: usize,
+    staged: &[T],
+    bounds: &[usize; 5],
+    k: usize,
+    is_less: &F,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    debug_assert!((1..=4).contains(&k));
+    debug_assert!(bounds[k] <= staged.len());
+    let sp = staged.as_ptr();
+    let mut cur = [0usize; 4];
+    let mut end = [0usize; 4];
+    for r in 0..k {
+        cur[r] = bounds[r];
+        end[r] = bounds[r + 1];
+    }
+    let mut active = k;
+    // Drop empty runs up front so every chunk is non-empty.
+    active = compact(&mut cur, &mut end, active);
+    loop {
+        match active {
+            0 => return,
+            1 => {
+                ptr::copy_nonoverlapping(sp.add(cur[0]), base.add(out), end[0] - cur[0]);
+                return;
+            }
+            2 => {
+                let chunk = (end[0] - cur[0]).min(end[1] - cur[1]);
+                for _ in 0..chunk {
+                    let p0 = sp.add(cur[0]);
+                    let p1 = sp.add(cur[1]);
+                    let t = is_less(&*p1, &*p0);
+                    let src = if t { p1 } else { p0 };
+                    let wi = usize::from(t);
+                    ptr::copy_nonoverlapping(src, base.add(out), 1);
+                    out += 1;
+                    *cur.get_unchecked_mut(wi) += 1;
+                }
+            }
+            3 => {
+                let chunk = (end[0] - cur[0])
+                    .min(end[1] - cur[1])
+                    .min(end[2] - cur[2]);
+                for _ in 0..chunk {
+                    let p0 = sp.add(cur[0]);
+                    let p1 = sp.add(cur[1]);
+                    let p2 = sp.add(cur[2]);
+                    let t1 = is_less(&*p1, &*p0);
+                    let w01 = if t1 { p1 } else { p0 };
+                    let i01 = usize::from(t1);
+                    let t2 = is_less(&*p2, &*w01);
+                    let src = if t2 { p2 } else { w01 };
+                    let wi = if t2 { 2 } else { i01 };
+                    ptr::copy_nonoverlapping(src, base.add(out), 1);
+                    out += 1;
+                    *cur.get_unchecked_mut(wi) += 1;
+                }
+            }
+            _ => {
+                let chunk = (end[0] - cur[0])
+                    .min(end[1] - cur[1])
+                    .min(end[2] - cur[2])
+                    .min(end[3] - cur[3]);
+                for _ in 0..chunk {
+                    let p0 = sp.add(cur[0]);
+                    let p1 = sp.add(cur[1]);
+                    let p2 = sp.add(cur[2]);
+                    let p3 = sp.add(cur[3]);
+                    let t1 = is_less(&*p1, &*p0);
+                    let w01 = if t1 { p1 } else { p0 };
+                    let i01 = usize::from(t1);
+                    let t2 = is_less(&*p3, &*p2);
+                    let w23 = if t2 { p3 } else { p2 };
+                    let i23 = 2 + usize::from(t2);
+                    let tf = is_less(&*w23, &*w01);
+                    let src = if tf { w23 } else { w01 };
+                    let wi = if tf { i23 } else { i01 };
+                    ptr::copy_nonoverlapping(src, base.add(out), 1);
+                    out += 1;
+                    *cur.get_unchecked_mut(wi) += 1;
+                }
+            }
+        }
+        active = compact(&mut cur, &mut end, active);
+    }
+}
+
+/// Drop exhausted runs from the cursor arrays, preserving run order
+/// (which is what keeps the tournament's tie-break stable).
+fn compact(cur: &mut [usize; 4], end: &mut [usize; 4], active: usize) -> usize {
+    let mut w = 0;
+    for r in 0..active {
+        if cur[r] < end[r] {
+            cur[w] = cur[r];
+            end[w] = end[r];
+            w += 1;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{is_sorted_by, Xoshiro256};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    #[test]
+    fn co_rank_splits_are_stable_prefixes() {
+        let l: Vec<u64> = vec![1, 3, 3, 5, 9];
+        let r: Vec<u64> = vec![2, 3, 3, 8];
+        for o in 0..=l.len() + r.len() {
+            let i = co_rank(o, &l, &r, &lt);
+            let j = o - i;
+            assert!(i <= l.len() && j <= r.len(), "o={o}");
+            // Valid stable split: left prefix precedes right suffix,
+            // right prefix strictly precedes left suffix.
+            if i > 0 && j < r.len() {
+                assert!(!lt(&r[j], &l[i - 1]), "o={o}: left prefix too big");
+            }
+            if j > 0 && i < l.len() {
+                assert!(lt(&r[j - 1], &l[i]), "o={o}: left prefix too small");
+            }
+        }
+    }
+
+    #[test]
+    fn co_rank_degenerate_runs() {
+        let empty: Vec<u64> = Vec::new();
+        let some: Vec<u64> = vec![1, 2, 3];
+        assert_eq!(co_rank(0, &empty, &empty, &lt), 0);
+        assert_eq!(co_rank(2, &some, &empty, &lt), 2);
+        assert_eq!(co_rank(2, &empty, &some, &lt), 0);
+        // All-equal keys: the left run fills the prefix first.
+        let l = vec![7u64; 4];
+        let r = vec![7u64; 4];
+        assert_eq!(co_rank(3, &l, &r, &lt), 3);
+        assert_eq!(co_rank(6, &l, &r, &lt), 4);
+    }
+
+    #[test]
+    fn forward_and_backward_kernels_agree_with_std() {
+        let mut rng = Xoshiro256::new(0xF0);
+        for trial in 0..40 {
+            let ll = rng.next_below(60) as usize;
+            let rl = 1 + rng.next_below(60) as usize;
+            let mut left: Vec<u64> = (0..ll).map(|_| rng.next_below(40)).collect();
+            let mut right: Vec<u64> = (0..rl).map(|_| rng.next_below(40)).collect();
+            left.sort_unstable();
+            right.sort_unstable();
+            let mut want: Vec<u64> = left.iter().chain(&right).copied().collect();
+            want.sort_unstable();
+
+            // Forward: left staged, right in place.
+            let mut v: Vec<u64> = left.iter().chain(&right).copied().collect();
+            let staged = left.clone();
+            unsafe {
+                merge_forward_staged_left(v.as_mut_ptr(), &staged, ll, ll + rl, 0, &lt);
+            }
+            assert_eq!(v, want, "forward trial {trial}");
+
+            // Backward: right staged, left in place.
+            let mut v: Vec<u64> = left.iter().chain(&right).copied().collect();
+            let staged = right.clone();
+            unsafe {
+                merge_backward_staged_right(v.as_mut_ptr(), &staged, 0, ll, ll + rl, &lt);
+            }
+            assert_eq!(v, want, "backward trial {trial}");
+
+            // Two-source staged kernel.
+            let mut v = vec![0u64; ll + rl];
+            unsafe {
+                merge_forward_staged2(v.as_mut_ptr(), &left, &right, 0, &lt);
+            }
+            assert_eq!(v, want, "staged2 trial {trial}");
+        }
+    }
+
+    #[test]
+    fn kway_merges_all_arities_and_duplicates() {
+        let mut rng = Xoshiro256::new(0x4A11);
+        for k in 1..=4usize {
+            for trial in 0..25 {
+                let mut staged: Vec<u64> = Vec::new();
+                let mut bounds = [0usize; 5];
+                for r in 0..k {
+                    let len = rng.next_below(50) as usize;
+                    let mut run: Vec<u64> = (0..len).map(|_| rng.next_below(30)).collect();
+                    run.sort_unstable();
+                    staged.extend(run);
+                    bounds[r + 1] = staged.len();
+                }
+                let mut want = staged.clone();
+                want.sort_unstable();
+                let mut out = vec![0u64; staged.len()];
+                unsafe {
+                    merge_kway_staged(out.as_mut_ptr(), 0, &staged, &bounds, k, &lt);
+                }
+                assert_eq!(out, want, "k={k} trial {trial}");
+                assert!(is_sorted_by(&out, lt));
+            }
+        }
+    }
+
+    /// Tagged values expose stability: equal keys must come out in run
+    /// order, and in-run order within a run.
+    #[test]
+    fn kway_tournament_is_stable() {
+        let key = |x: &u64| x >> 32;
+        let less = |a: &u64, b: &u64| key(a) < key(b);
+        // Four runs of equal keys, tagged with (run, position).
+        let mut staged: Vec<u64> = Vec::new();
+        let mut bounds = [0usize; 5];
+        for r in 0..4u64 {
+            for p in 0..5u64 {
+                staged.push((7 << 32) | (r << 8) | p);
+            }
+            bounds[r as usize + 1] = staged.len();
+        }
+        let mut out = vec![0u64; staged.len()];
+        unsafe {
+            merge_kway_staged(out.as_mut_ptr(), 0, &staged, &bounds, 4, &less);
+        }
+        assert_eq!(out, staged, "equal keys must preserve run order exactly");
+    }
+}

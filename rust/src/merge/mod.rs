@@ -1,0 +1,731 @@
+//! The branchless multiway merge engine — the planner's
+//! [`Backend::RunMerge`](crate::planner::Backend::RunMerge)
+//! implementation for nearly-sorted inputs.
+//!
+//! Replaces the original branchy pairwise `run_merge_sort`: detect
+//! maximal runs (ascending kept, strictly-descending reversed in
+//! place), then merge adjacent runs bottom-up in physical groups of up
+//! to **four** per pass through the branchless kernels in [`kernel`].
+//! A staged quad merge costs 2·total element moves per pass where two
+//! pairwise levels cost 3·total, and it halves the number of passes —
+//! the win that matters on memory-bound nearly-sorted data.
+//!
+//! Engineering discipline (see `kernel` for the per-loop details):
+//!
+//! * **No steady-state allocation.** All bookkeeping lives in
+//!   [`MergeScratch`], which [`SeqContext`](crate::sequential::SeqContext)
+//!   carries inside the recycled arena: a staging buffer capped at
+//!   ⌈n/2⌉ elements and a run-boundary vec reserved to its worst case
+//!   *before* detection, so a warm arena never reallocates — growth is
+//!   counted in `ScratchCounters::scratch_allocations` like every other
+//!   arena build.
+//! * **⌈n/2⌉ staging.** Groups small enough to fit the buffer are
+//!   block-copied out and k-way merged back (an out-of-place merge with
+//!   gap-guarded inner loops); oversized groups fall back to pairwise
+//!   merges that stage only the *shorter* side (forward with the left
+//!   staged, backward with the right staged), so ⌈n/2⌉ is a hard cap.
+//! * **Parallel merging** ([`merge_sort_runs_par`]) above
+//!   [`PAR_MIN_TOTAL`]: per pass, small groups are claimed dynamically
+//!   off an [`IndexDispenser`] and merged in per-thread stripes of the
+//!   staging buffer; each oversized group's pair merges are split into
+//!   co-ranked segments ([`kernel::co_rank`]) that all read from the
+//!   staged copy and write disjoint output ranges — and a pair too big
+//!   to stage is first split *once* at its midpoint co-rank with a
+//!   rotation into two independent halves, each of which then fits.
+//!   Splits are counted in `ScratchCounters::merge_parallel_splits`,
+//!   passes in `merge_passes`.
+//! * **Stability.** Run detection reverses only *strictly* descending
+//!   spans and every kernel breaks ties toward the lower run, so the
+//!   engine is a stable sort (unlike the distribution backends) — the
+//!   test suites exploit this by diffing against `slice::sort_by`
+//!   exactly.
+
+pub mod kernel;
+
+use std::ptr;
+use std::sync::atomic::Ordering;
+
+use crate::metrics::ScratchCounters;
+use crate::parallel::{IndexDispenser, SharedSlice, ThreadPool};
+use crate::util::Element;
+
+use kernel::{
+    co_rank, merge_backward_staged_right, merge_forward_staged2, merge_forward_staged_left,
+    merge_kway_staged,
+};
+
+/// Minimum total size before [`merge_sort_runs_par`] engages the
+/// parallel per-pass driver; below it the sequential engine wins on
+/// dispatch overhead alone.
+pub const PAR_MIN_TOTAL: usize = 1 << 15;
+
+/// Minimum merged output per co-ranked segment: splitting finer than
+/// this pays more in co-ranking and dispatch than the merge costs.
+const SEG_GRAN: usize = 1 << 12;
+
+/// Hard cap on co-ranked segments per pair merge (bounds the stack
+/// cut array; far above any realistic pool width).
+const MAX_SEGS: usize = 64;
+
+/// Reusable scratch for the merge engine: the ⌈n/2⌉ staging buffer and
+/// the run-boundary bookkeeping the original implementation allocated
+/// fresh on every call. Lives inside
+/// [`SeqContext`](crate::sequential::SeqContext) so the arena pool
+/// recycles it across sorts.
+pub struct MergeScratch<T> {
+    /// Staging buffer; grown on demand to ⌈n/2⌉ of the largest job.
+    buf: Vec<T>,
+    /// Run boundaries as *end offsets* (runs are contiguous: run `r`
+    /// spans `[ends[r-1], ends[r])`, with `ends[-1] == 0`) — half the
+    /// bookkeeping of (start, end) pairs and compactable in place.
+    runs: Vec<usize>,
+}
+
+impl<T: Element> MergeScratch<T> {
+    pub fn new() -> Self {
+        MergeScratch {
+            buf: Vec::new(),
+            runs: Vec::new(),
+        }
+    }
+
+    /// Scratch pre-sized for inputs of up to `n` elements: the run table
+    /// and the ⌈n/2⌉ staging buffer are built to their worst case up
+    /// front, so every later sort of ≤ `n` elements runs allocation-free
+    /// from the first call. This is how
+    /// [`SeqContext`](crate::sequential::SeqContext) sizes its merge
+    /// scratch for the service's small-job bound — the cost is folded
+    /// into the arena build, where it is counted once.
+    pub fn with_capacity_for(n: usize) -> Self {
+        let mut s = MergeScratch::new();
+        s.ensure_runs(n, None);
+        s.ensure_buf(n, None);
+        s
+    }
+
+    /// Current staging-buffer capacity in elements (tests assert the
+    /// ⌈n/2⌉ cap and cross-call reuse through this).
+    pub fn staging_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Clear the run vec and reserve its worst case for an input of
+    /// `n` — ⌈n/2⌉ runs (every run but the last spans ≥ 2 elements) —
+    /// *before* detection, so capacity never depends on the
+    /// data-dependent run count and a warm scratch never reallocates
+    /// mid-detection.
+    fn ensure_runs(&mut self, n: usize, counters: Option<&ScratchCounters>) {
+        self.runs.clear();
+        let want = n / 2 + 1;
+        if self.runs.capacity() < want {
+            if let Some(c) = counters {
+                c.scratch_allocations.fetch_add(1, Ordering::Relaxed);
+            }
+            self.runs.reserve_exact(want);
+        }
+    }
+
+    /// Grow the staging buffer to ⌈n/2⌉ initialized elements.
+    fn ensure_buf(&mut self, n: usize, counters: Option<&ScratchCounters>) {
+        let want = (n + 1) / 2;
+        if self.buf.len() < want {
+            if self.buf.capacity() < want {
+                if let Some(c) = counters {
+                    c.scratch_allocations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            self.buf.resize(want, T::default());
+        }
+    }
+}
+
+impl<T: Element> Default for MergeScratch<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Detect maximal runs: ascending runs kept, strictly-descending runs
+/// reversed in place (stable — no equal pair is reordered). Pushes each
+/// run's *end offset* onto `ends`.
+fn detect_runs<T, F>(v: &mut [T], ends: &mut Vec<usize>, is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    let mut i = 0;
+    while i < n {
+        let start = i;
+        i += 1;
+        if i < n && is_less(&v[i], &v[i - 1]) {
+            while i < n && is_less(&v[i], &v[i - 1]) {
+                i += 1;
+            }
+            v[start..i].reverse();
+        } else {
+            while i < n && !is_less(&v[i], &v[i - 1]) {
+                i += 1;
+            }
+        }
+        ends.push(i);
+    }
+}
+
+/// Sort a (nearly-sorted) slice with the sequential merge engine:
+/// detect runs, then merge adjacent groups of up to four runs per pass.
+/// `O(n)` on sorted or reverse-sorted input, `O(n log₄ r)` passes for
+/// `r` runs. Stable. A single-run input returns before the staging
+/// buffer is even sized.
+pub fn merge_sort_runs<T, F>(
+    v: &mut [T],
+    scratch: &mut MergeScratch<T>,
+    is_less: &F,
+    counters: Option<&ScratchCounters>,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n = v.len();
+    if n < 2 {
+        return;
+    }
+    scratch.ensure_runs(n, counters);
+    detect_runs(v, &mut scratch.runs, is_less);
+    if scratch.runs.len() < 2 {
+        return;
+    }
+    scratch.ensure_buf(n, counters);
+    let MergeScratch { buf, runs } = scratch;
+    let base = v.as_mut_ptr();
+    while runs.len() > 1 {
+        if let Some(c) = counters {
+            c.merge_passes.fetch_add(1, Ordering::Relaxed);
+        }
+        merge_pass_seq(base, runs, buf, is_less);
+    }
+}
+
+/// One sequential bottom-up pass: merge each group of ≤ 4 adjacent runs
+/// and compact the run vec in place.
+fn merge_pass_seq<T, F>(base: *mut T, runs: &mut Vec<usize>, buf: &mut [T], is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let n_groups = (runs.len() + 3) / 4;
+    for g in 0..n_groups {
+        let r0 = g * 4;
+        let r1 = (r0 + 4).min(runs.len());
+        let start = if r0 == 0 { 0 } else { runs[r0 - 1] };
+        // SAFETY: groups are disjoint, in-bounds subranges of `v`; the
+        // in-place compaction below only writes indices < g, and every
+        // read here is at index ≥ r0 − 1 ≥ g for g ≥ 1.
+        unsafe { merge_group(base, start, &runs[r0..r1], buf, is_less) };
+        runs[g] = runs[r1 - 1];
+    }
+    runs.truncate(n_groups);
+}
+
+/// Merge one group of 2–4 adjacent runs (`ends` are their end offsets,
+/// `start` the group's first element). Groups that fit the staging
+/// buffer are block-copied out and k-way merged back in a single pass;
+/// oversized groups fall back to pairwise staged-shorter merges.
+///
+/// # Safety
+/// `base[start..ends.last()]` must be a valid, initialized range and
+/// `ends` strictly increasing with `start < ends[0]`.
+unsafe fn merge_group<T, F>(base: *mut T, start: usize, ends: &[usize], buf: &mut [T], is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let g = ends.len();
+    if g < 2 {
+        return;
+    }
+    let gend = ends[g - 1];
+    let total = gend - start;
+    if total <= buf.len() {
+        ptr::copy_nonoverlapping(base.add(start), buf.as_mut_ptr(), total);
+        let mut bounds = [0usize; 5];
+        for (r, &e) in ends.iter().enumerate() {
+            bounds[r + 1] = e - start;
+        }
+        merge_kway_staged(base, start, &buf[..total], &bounds, g, is_less);
+    } else {
+        // Pairwise, staging the shorter side of each pair: every pair
+        // here spans ≤ total ≤ n, so its shorter side is ≤ ⌈n/2⌉ and
+        // always fits the buffer.
+        match g {
+            2 => merge_pair(base, start, ends[0], ends[1], buf, is_less),
+            3 => {
+                merge_pair(base, start, ends[0], ends[1], buf, is_less);
+                merge_pair(base, start, ends[1], ends[2], buf, is_less);
+            }
+            _ => {
+                merge_pair(base, start, ends[0], ends[1], buf, is_less);
+                merge_pair(base, ends[1], ends[2], ends[3], buf, is_less);
+                merge_pair(base, start, ends[1], ends[3], buf, is_less);
+            }
+        }
+    }
+}
+
+/// Merge the adjacent sorted ranges `base[a..mid]` and `base[mid..b]`
+/// in place, staging only the *shorter* side — forward with the left
+/// run staged, or backward with the right run staged — so the staging
+/// cost is ≤ ⌈(b − a)/2⌉ copies regardless of how lopsided the pair is.
+/// One boundary comparison skips already-ordered pairs entirely.
+///
+/// # Safety
+/// `base[a..b]` must be a valid, initialized range with
+/// `a <= mid <= b`, and `min(mid − a, b − mid) <= buf.len()`.
+unsafe fn merge_pair<T, F>(base: *mut T, a: usize, mid: usize, b: usize, buf: &mut [T], is_less: &F)
+where
+    T: Element,
+    F: Fn(&T, &T) -> bool,
+{
+    let ll = mid - a;
+    let rl = b - mid;
+    if ll == 0 || rl == 0 {
+        return;
+    }
+    if !is_less(&*base.add(mid), &*base.add(mid - 1)) {
+        return; // already in order
+    }
+    if ll <= rl {
+        debug_assert!(ll <= buf.len());
+        ptr::copy_nonoverlapping(base.add(a), buf.as_mut_ptr(), ll);
+        merge_forward_staged_left(base, &buf[..ll], mid, b, a, is_less);
+    } else {
+        debug_assert!(rl <= buf.len());
+        ptr::copy_nonoverlapping(base.add(mid), buf.as_mut_ptr(), rl);
+        merge_backward_staged_right(base, &buf[..rl], a, mid, b, is_less);
+    }
+}
+
+/// Parallel merge engine: run detection stays sequential (it is one
+/// `O(n)` scan), then each bottom-up pass runs in two phases on the
+/// pool — Phase A merges buffer-stripe-sized groups dynamically across
+/// threads, Phase B splits each remaining big group's pair merges into
+/// co-ranked segments. Degrades to [`merge_sort_runs`] below
+/// [`PAR_MIN_TOTAL`] or on a single-thread pool. Stable, same ⌈n/2⌉
+/// staging cap.
+pub fn merge_sort_runs_par<T, F>(
+    v: &mut [T],
+    pool: &ThreadPool,
+    scratch: &mut MergeScratch<T>,
+    is_less: &F,
+    counters: Option<&ScratchCounters>,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let n = v.len();
+    let t = pool.threads();
+    if t <= 1 || n < PAR_MIN_TOTAL {
+        merge_sort_runs(v, scratch, is_less, counters);
+        return;
+    }
+    scratch.ensure_runs(n, counters);
+    detect_runs(v, &mut scratch.runs, is_less);
+    if scratch.runs.len() < 2 {
+        return;
+    }
+    scratch.ensure_buf(n, counters);
+    let MergeScratch { buf, runs } = scratch;
+    let arr = SharedSlice::new(v);
+    let buf_arr = SharedSlice::new(buf.as_mut_slice());
+    let stride = buf_arr.len() / t;
+
+    while runs.len() > 1 {
+        if let Some(c) = counters {
+            c.merge_passes.fetch_add(1, Ordering::Relaxed);
+        }
+        let n_groups = (runs.len() + 3) / 4;
+
+        // Phase A: stripe-sized groups, claimed dynamically. Each thread
+        // owns buf stripe [tid·stride, (tid+1)·stride) and a claimed
+        // group's disjoint range of `arr`, so no two threads alias.
+        let dispenser = IndexDispenser::new(n_groups);
+        let runs_ro: &[usize] = runs;
+        pool.run(|tid| {
+            while let Some(g) = dispenser.next() {
+                let r0 = g * 4;
+                let r1 = (r0 + 4).min(runs_ro.len());
+                if r1 - r0 < 2 {
+                    continue;
+                }
+                let start = if r0 == 0 { 0 } else { runs_ro[r0 - 1] };
+                let total = runs_ro[r1 - 1] - start;
+                if total > stride {
+                    continue; // Phase B's problem
+                }
+                // SAFETY: per-thread stripe, disjoint group range; total
+                // ≤ stride means merge_group takes the staged path.
+                unsafe {
+                    let my_buf = buf_arr.slice_mut(tid * stride, tid * stride + total);
+                    merge_group(arr.base_ptr(), start, &runs_ro[r0..r1], my_buf, is_less);
+                }
+            }
+        });
+
+        // Phase B: the oversized groups, one at a time, each pair merge
+        // internally parallel. (pool.run above is a barrier, so Phase A
+        // writes are complete and visible.)
+        for g in 0..n_groups {
+            let r0 = g * 4;
+            let r1 = (r0 + 4).min(runs.len());
+            if r1 - r0 < 2 {
+                continue;
+            }
+            let start = if r0 == 0 { 0 } else { runs[r0 - 1] };
+            let total = runs[r1 - 1] - start;
+            if total <= stride {
+                continue; // done in Phase A
+            }
+            let e = &runs[r0..r1];
+            match r1 - r0 {
+                2 => par_merge_pair(&arr, &buf_arr, pool, start, e[0], e[1], is_less, counters),
+                3 => {
+                    par_merge_pair(&arr, &buf_arr, pool, start, e[0], e[1], is_less, counters);
+                    par_merge_pair(&arr, &buf_arr, pool, start, e[1], e[2], is_less, counters);
+                }
+                _ => {
+                    par_merge_pair(&arr, &buf_arr, pool, start, e[0], e[1], is_less, counters);
+                    par_merge_pair(&arr, &buf_arr, pool, e[1], e[2], e[3], is_less, counters);
+                    par_merge_pair(&arr, &buf_arr, pool, start, e[1], e[3], is_less, counters);
+                }
+            }
+        }
+
+        // Compact the run vec in place (reads at index r1 − 1 ≥ g stay
+        // ahead of writes at index g, as in the sequential pass).
+        for g in 0..n_groups {
+            let r1 = (g * 4 + 4).min(runs.len());
+            runs[g] = runs[r1 - 1];
+        }
+        runs.truncate(n_groups);
+    }
+}
+
+/// One possibly-parallel pair merge of `arr[a..mid]` with
+/// `arr[mid..b]`.
+///
+/// * Pair fits the staging buffer → stage the whole pair, cut it into
+///   co-ranked segments, and let every pool thread merge one segment
+///   from the staged copy into its disjoint slice of `arr`. Staging
+///   both sources is what makes the segments race-free: an in-place
+///   source would double as the output region of the segment above it.
+/// * Pair too big to stage → split once at the midpoint co-rank,
+///   rotate the middle so both halves become contiguous adjacent pairs
+///   (each ≤ ⌈(b−a)/2⌉ ≤ buffer), and recurse — each half then takes
+///   the staged parallel path.
+/// * Too small to split (or a 1-thread pool) → sequential
+///   staged-shorter [`merge_pair`].
+#[allow(clippy::too_many_arguments)]
+fn par_merge_pair<T, F>(
+    arr: &SharedSlice<T>,
+    buf_arr: &SharedSlice<T>,
+    pool: &ThreadPool,
+    a: usize,
+    mid: usize,
+    b: usize,
+    is_less: &F,
+    counters: Option<&ScratchCounters>,
+) where
+    T: Element,
+    F: Fn(&T, &T) -> bool + Sync,
+{
+    let ll = mid - a;
+    let rl = b - mid;
+    if ll == 0 || rl == 0 {
+        return;
+    }
+    let base = arr.base_ptr();
+    // SAFETY: no concurrent access here (between pool dispatches).
+    unsafe {
+        if !is_less(&*base.add(mid), &*base.add(mid - 1)) {
+            return; // already in order
+        }
+    }
+    let m = b - a;
+    let segs = pool.threads().min(m / SEG_GRAN).min(MAX_SEGS);
+
+    if m > buf_arr.len() {
+        // Split at the midpoint co-rank: the stable merge's first o
+        // outputs are exactly left[..i_c] ∪ right[..j_c], so after
+        // rotating [left-suffix | right-prefix] into
+        // [right-prefix | left-suffix] the two halves are independent
+        // adjacent pairs whose concatenated stable merges equal the
+        // stable merge of the whole pair.
+        let o = m / 2;
+        let (i_c, j_c);
+        {
+            // SAFETY: read-only probes; nothing writes `arr` here.
+            let left = unsafe { arr.slice(a, mid) };
+            let right = unsafe { arr.slice(mid, b) };
+            i_c = co_rank(o, left, right, is_less);
+            j_c = o - i_c;
+        }
+        // SAFETY: in-bounds contiguous range, exclusive access.
+        unsafe {
+            let middle = arr.slice_mut(a + i_c, mid + j_c);
+            middle.rotate_left(ll - i_c);
+        }
+        if let Some(c) = counters {
+            c.merge_parallel_splits.fetch_add(1, Ordering::Relaxed);
+        }
+        // Halves are ⌊m/2⌋ and ⌈m/2⌉ ≤ buf, so both recursions stage.
+        par_merge_pair(arr, buf_arr, pool, a, a + i_c, a + o, is_less, counters);
+        par_merge_pair(arr, buf_arr, pool, a + o, a + o + (ll - i_c), b, is_less, counters);
+        return;
+    }
+
+    if segs < 2 {
+        // SAFETY: exclusive access between pool dispatches; the shorter
+        // side is ≤ ⌈m/2⌉ ≤ buf.
+        unsafe {
+            let buf = buf_arr.slice_mut(0, buf_arr.len());
+            merge_pair(base, a, mid, b, buf, is_less);
+        }
+        return;
+    }
+
+    // Stage the whole pair, then co-ranked segments merge staged → arr.
+    // SAFETY: buf is exclusively ours between dispatches and m ≤ buf.
+    unsafe {
+        ptr::copy_nonoverlapping(base.add(a), buf_arr.base_ptr(), m);
+    }
+    let mut cuts = [(0usize, 0usize); MAX_SEGS + 1];
+    {
+        // SAFETY: read-only views of the staged copy.
+        let left = unsafe { buf_arr.slice(0, ll) };
+        let right = unsafe { buf_arr.slice(ll, m) };
+        for (s, cut) in cuts.iter_mut().enumerate().take(segs).skip(1) {
+            let o = m * s / segs;
+            let i = co_rank(o, left, right, is_less);
+            *cut = (i, o - i);
+        }
+    }
+    cuts[segs] = (ll, rl);
+    let cuts_ref = &cuts;
+    pool.run(|tid| {
+        if tid >= segs {
+            return;
+        }
+        let (i0, j0) = cuts_ref[tid];
+        let (i1, j1) = cuts_ref[tid + 1];
+        // SAFETY: segments read disjoint-or-shared *staged* data only
+        // and write disjoint ranges [a+i0+j0, a+i1+j1) of `arr`.
+        unsafe {
+            let lseg = buf_arr.slice(i0, i1);
+            let rseg = buf_arr.slice(ll + j0, ll + j1);
+            merge_forward_staged2(arr.base_ptr(), lseg, rseg, a + i0 + j0, is_less);
+        }
+    });
+    if let Some(c) = counters {
+        c.merge_parallel_splits
+            .fetch_add((segs - 1) as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
+
+    fn lt(a: &u64, b: &u64) -> bool {
+        a < b
+    }
+
+    fn check(mut v: Vec<u64>) {
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let mut scratch = MergeScratch::new();
+        merge_sort_runs(&mut v, &mut scratch, &lt, None);
+        assert!(is_sorted_by(&v, lt), "n={}", v.len());
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+    }
+
+    #[test]
+    fn merge_sorted_input_is_untouched() {
+        let v: Vec<u64> = (0..10_000).collect();
+        let mut w = v.clone();
+        let mut scratch = MergeScratch::new();
+        merge_sort_runs(&mut w, &mut scratch, &lt, None);
+        assert_eq!(v, w);
+        assert_eq!(
+            scratch.staging_capacity(),
+            0,
+            "single run must not grow the staging buffer"
+        );
+    }
+
+    #[test]
+    fn merge_reverse_sorted() {
+        check((0..10_000u64).rev().collect());
+    }
+
+    #[test]
+    fn merge_concatenated_runs() {
+        let mut v: Vec<u64> = Vec::new();
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..17 {
+            let mut run: Vec<u64> = (0..500).map(|_| rng.next_below(10_000)).collect();
+            run.sort_unstable();
+            v.extend(run);
+        }
+        check(v);
+    }
+
+    #[test]
+    fn merge_random_and_edge_inputs() {
+        let mut rng = Xoshiro256::new(9);
+        check(Vec::new());
+        check(vec![1]);
+        check(vec![2, 1]);
+        check(vec![7; 1000]);
+        for _ in 0..20 {
+            let n = rng.next_below(5_000) as usize;
+            check((0..n).map(|_| rng.next_below(1 << 20)).collect());
+        }
+    }
+
+    #[test]
+    fn staging_buffer_capped_at_half_and_reused() {
+        let mut scratch = MergeScratch::new();
+        let mut v: Vec<u64> = (0..2_000u64).chain(0..2_000).collect();
+        merge_sort_runs(&mut v, &mut scratch, &lt, None);
+        assert!(is_sorted_by(&v, lt));
+        let cap = scratch.staging_capacity();
+        assert!(cap >= 2_000, "two runs of 2000 need ⌈n/2⌉ staging");
+        assert!(cap <= 2_048, "staging must stay near ⌈n/2⌉, got {cap}");
+        // A second, smaller multi-run job must not regrow the buffer.
+        let mut w: Vec<u64> = (0..1_000u64).chain(0..1_000).collect();
+        merge_sort_runs(&mut w, &mut scratch, &lt, None);
+        assert!(is_sorted_by(&w, lt));
+        assert_eq!(scratch.staging_capacity(), cap);
+    }
+
+    #[test]
+    fn lopsided_pairs_stage_only_the_shorter_side() {
+        // One run of 9000 followed by one of 50: the old engine staged
+        // the full 9000-element left run; the new one must get by with
+        // ⌈n/2⌉ capacity (and actually stages only 50).
+        let mut v: Vec<u64> = (0..9_000u64).chain(100..150).collect();
+        let fp = multiset_fingerprint(&v, |x| *x);
+        let mut scratch = MergeScratch::new();
+        merge_sort_runs(&mut v, &mut scratch, &lt, None);
+        assert!(is_sorted_by(&v, lt));
+        assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
+        assert!(
+            scratch.staging_capacity() <= (9_050 + 1) / 2,
+            "staging exceeded ⌈n/2⌉: {}",
+            scratch.staging_capacity()
+        );
+    }
+
+    #[test]
+    fn engine_is_stable() {
+        // Key = high bits, tag = low bits: a stable sort preserves tag
+        // order within equal keys, so output must equal slice::sort_by
+        // (which is stable) exactly — not just key-equivalent.
+        let mut rng = Xoshiro256::new(0x57AB);
+        let mut v: Vec<u64> = (0..40_000u64)
+            .map(|i| (rng.next_below(50) << 32) | i)
+            .collect();
+        // Pre-structure into runs so run-merge does real merging.
+        for chunk in v.chunks_mut(1_500) {
+            chunk.sort_by_key(|x| x >> 32);
+        }
+        let less = |a: &u64, b: &u64| (a >> 32) < (b >> 32);
+        let mut want = v.clone();
+        want.sort_by(|a, b| (a >> 32).cmp(&(b >> 32)));
+        let mut scratch = MergeScratch::new();
+        merge_sort_runs(&mut v, &mut scratch, &less, None);
+        assert_eq!(v, want, "merge engine must be stable");
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_and_counts() {
+        let pool = ThreadPool::new(4);
+        let counters = ScratchCounters::new();
+        let mut rng = Xoshiro256::new(0xBEEF);
+        for trial in 0..6 {
+            let n = 60_000 + rng.next_below(60_000) as usize;
+            let mut v: Vec<u64> = (0..n as u64).map(|_| rng.next_below(1 << 40)).collect();
+            let run_len = [37, 500, 9_000, 25_000, n / 2, n][trial % 6].max(2);
+            for chunk in v.chunks_mut(run_len) {
+                chunk.sort_unstable();
+            }
+            let mut want = v.clone();
+            want.sort_unstable();
+            let mut scratch = MergeScratch::new();
+            merge_sort_runs_par(&mut v, &pool, &mut scratch, &lt, Some(&counters));
+            assert_eq!(v, want, "trial {trial} run_len={run_len}");
+        }
+        let s = counters.snapshot();
+        assert!(s.merge_passes > 0, "passes must be counted");
+        assert!(
+            s.merge_parallel_splits > 0,
+            "large pairs must split across threads"
+        );
+    }
+
+    #[test]
+    fn parallel_engine_stable_on_two_giant_runs() {
+        // Two runs of 500k force the rotate-split path (pair > ⌈n/2⌉
+        // staging); equal keys carry tags to prove stability end-to-end.
+        let pool = ThreadPool::new(4);
+        let n = 1_000_000u64;
+        let mut rng = Xoshiro256::new(0x616);
+        let mut v: Vec<u64> = (0..n).map(|i| (rng.next_below(200) << 32) | i).collect();
+        let half = (n / 2) as usize;
+        let less = |a: &u64, b: &u64| (a >> 32) < (b >> 32);
+        v[..half].sort_by_key(|x| x >> 32);
+        v[half..].sort_by_key(|x| x >> 32);
+        let mut want = v.clone();
+        want.sort_by(|a, b| (a >> 32).cmp(&(b >> 32)));
+        let counters = ScratchCounters::new();
+        let mut scratch = MergeScratch::new();
+        merge_sort_runs_par(&mut v, &pool, &mut scratch, &less, Some(&counters));
+        assert_eq!(v, want, "parallel engine must be stable");
+        let s = counters.snapshot();
+        assert!(s.merge_parallel_splits >= 1, "{s:?}");
+        assert!(
+            scratch.staging_capacity() <= (n as usize + 1) / 2,
+            "staging exceeded ⌈n/2⌉"
+        );
+    }
+
+    #[test]
+    fn warm_scratch_never_reallocates() {
+        // Deterministic steady state: repeated jobs of one size, varying
+        // content (and so varying run counts), must not touch the
+        // allocation counter after the first call sized the scratch.
+        let counters = ScratchCounters::new();
+        let mut scratch = MergeScratch::new();
+        let mut rng = Xoshiro256::new(0x2EA1);
+        let n = 50_000usize;
+        let mut warm: Vec<u64> = (0..n as u64).collect();
+        merge_sort_runs(&mut warm, &mut scratch, &lt, Some(&counters));
+        let mut v: Vec<u64> = (0..n as u64).rev().collect();
+        merge_sort_runs(&mut v, &mut scratch, &lt, Some(&counters));
+        let warm_allocs = counters.snapshot().scratch_allocations;
+        for _ in 0..10 {
+            let run_len = 2 + rng.next_below(5_000) as usize;
+            let mut v: Vec<u64> = (0..n as u64).map(|_| rng.next_u64()).collect();
+            for chunk in v.chunks_mut(run_len) {
+                chunk.sort_unstable();
+            }
+            merge_sort_runs(&mut v, &mut scratch, &lt, Some(&counters));
+            assert!(is_sorted_by(&v, lt));
+        }
+        assert_eq!(
+            counters.snapshot().scratch_allocations,
+            warm_allocs,
+            "warm merge scratch must never reallocate"
+        );
+    }
+}

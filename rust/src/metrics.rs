@@ -117,6 +117,12 @@ pub struct ScratchCounters {
     /// Radix/CDF recursion levels whose min/max key scan was fused into
     /// the previous level's cleanup pass (one full sweep saved each).
     pub radix_fused_scans: AtomicU64,
+    /// Bottom-up merge passes executed by the run-merge engine
+    /// ([`crate::merge`]).
+    pub merge_passes: AtomicU64,
+    /// Co-ranked segment splits performed by parallel pair merges in
+    /// the run-merge engine.
+    pub merge_parallel_splits: AtomicU64,
     /// Routing decisions driven by measured [`CalibrationProfile`] data
     /// (the plan's `calibrated` flag was set).
     ///
@@ -144,6 +150,8 @@ impl Default for ScratchCounters {
             task_shares: AtomicU64::new(0),
             group_splits: AtomicU64::new(0),
             radix_fused_scans: AtomicU64::new(0),
+            merge_passes: AtomicU64::new(0),
+            merge_parallel_splits: AtomicU64::new(0),
             planner_calibrated: AtomicU64::new(0),
             planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -167,6 +175,8 @@ impl ScratchCounters {
         self.task_shares.store(0, Ordering::Relaxed);
         self.group_splits.store(0, Ordering::Relaxed);
         self.radix_fused_scans.store(0, Ordering::Relaxed);
+        self.merge_passes.store(0, Ordering::Relaxed);
+        self.merge_parallel_splits.store(0, Ordering::Relaxed);
         self.planner_calibrated.store(0, Ordering::Relaxed);
         self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
@@ -208,6 +218,8 @@ impl ScratchCounters {
             task_shares: self.task_shares.load(Ordering::Relaxed),
             group_splits: self.group_splits.load(Ordering::Relaxed),
             radix_fused_scans: self.radix_fused_scans.load(Ordering::Relaxed),
+            merge_passes: self.merge_passes.load(Ordering::Relaxed),
+            merge_parallel_splits: self.merge_parallel_splits.load(Ordering::Relaxed),
             planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
             planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
@@ -234,6 +246,10 @@ pub struct ScratchSnapshot {
     pub group_splits: u64,
     /// Min/max key scans fused into a previous cleanup pass.
     pub radix_fused_scans: u64,
+    /// Bottom-up merge passes executed by the run-merge engine.
+    pub merge_passes: u64,
+    /// Co-ranked segment splits performed by parallel pair merges.
+    pub merge_parallel_splits: u64,
     /// Routing decisions driven by measured calibration data.
     pub planner_calibrated: u64,
     /// Routing decisions from the static thresholds (including forced
@@ -261,6 +277,8 @@ impl ScratchSnapshot {
             task_shares: self.task_shares - earlier.task_shares,
             group_splits: self.group_splits - earlier.group_splits,
             radix_fused_scans: self.radix_fused_scans - earlier.radix_fused_scans,
+            merge_passes: self.merge_passes - earlier.merge_passes,
+            merge_parallel_splits: self.merge_parallel_splits - earlier.merge_parallel_splits,
             planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
             planner_static: self.planner_static - earlier.planner_static,
             backend_selected,

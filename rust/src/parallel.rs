@@ -282,6 +282,17 @@ impl<T> SharedSlice<T> {
         self.len == 0
     }
 
+    /// The raw base pointer — for kernels (the merge engine's staged
+    /// segment merges) whose read and write windows interleave within a
+    /// single task's range, where a reborrowed `&mut [T]` would assert
+    /// uniqueness the access pattern doesn't have. The usual aliasing
+    /// contract applies: disjoint writes, no read of a range another
+    /// thread is writing.
+    #[inline(always)]
+    pub(crate) fn base_ptr(&self) -> *mut T {
+        self.ptr
+    }
+
     /// A narrowed view of `[start, end)` under the same aliasing
     /// contract — used by the recursion scheduler to hand a subtask's
     /// range to the shared block phases with local offsets.

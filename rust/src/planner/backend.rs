@@ -1,7 +1,6 @@
 //! The backend registry: which sort families the planner can dispatch
-//! to, plus the run-detect-then-merge backend for nearly-sorted inputs.
-
-use crate::util::Element;
+//! to. The run-merge backend's implementation lives in [`crate::merge`]
+//! (the branchless multiway merge engine); this module only names it.
 
 /// The families of sort strategies the planner chooses among.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -18,7 +17,8 @@ pub enum Backend {
     /// splitter tree or fixed digit windows. Available only for
     /// [`RadixKey`](crate::radix::RadixKey) element types.
     CdfSort,
-    /// Run detection + bottom-up merging, for nearly-sorted inputs.
+    /// Run detection + branchless multiway merging ([`crate::merge`]),
+    /// for nearly-sorted inputs.
     RunMerge,
     /// Insertion sort, for inputs at or below the base-case size.
     BaseCase,
@@ -102,113 +102,9 @@ pub struct SortPlan {
     pub calibrated: bool,
 }
 
-// ---------------------------------------------------------------------------
-// The run-merge backend
-// ---------------------------------------------------------------------------
-
-/// Sort a (nearly-sorted) slice by detecting maximal runs — ascending
-/// kept, strictly-descending reversed — then merging adjacent run pairs
-/// bottom-up through `buf` (grown to `v.len()` on demand and reusable
-/// across calls). `O(n)` on sorted or reverse-sorted input, `O(n log r)`
-/// for `r` runs.
-pub fn run_merge_sort<T, F>(v: &mut [T], buf: &mut Vec<T>, is_less: &F)
-where
-    T: Element,
-    F: Fn(&T, &T) -> bool,
-{
-    let n = v.len();
-    if n < 2 {
-        return;
-    }
-
-    // --- Run detection ---
-    let mut runs: Vec<(usize, usize)> = Vec::new();
-    let mut i = 0;
-    while i < n {
-        let start = i;
-        i += 1;
-        if i < n && is_less(&v[i], &v[i - 1]) {
-            // Strictly descending: reversing is safe (no equal pair is
-            // reordered) and yields an ascending run.
-            while i < n && is_less(&v[i], &v[i - 1]) {
-                i += 1;
-            }
-            v[start..i].reverse();
-        } else {
-            while i < n && !is_less(&v[i], &v[i - 1]) {
-                i += 1;
-            }
-        }
-        runs.push((start, i));
-    }
-
-    // --- Bottom-up merging of adjacent runs ---
-    if runs.len() > 1 && buf.len() < n {
-        buf.resize(n, T::default());
-    }
-    while runs.len() > 1 {
-        let mut merged = Vec::with_capacity((runs.len() + 1) / 2);
-        let mut j = 0;
-        while j + 1 < runs.len() {
-            let (a, mid) = runs[j];
-            let (_, b) = runs[j + 1];
-            merge_adjacent(v, a, mid, b, buf, is_less);
-            merged.push((a, b));
-            j += 2;
-        }
-        if j < runs.len() {
-            merged.push(runs[j]);
-        }
-        runs = merged;
-    }
-}
-
-/// Merge the adjacent sorted ranges `v[a..mid]` and `v[mid..b]` in
-/// place, staging the left run in `buf`.
-fn merge_adjacent<T, F>(v: &mut [T], a: usize, mid: usize, b: usize, buf: &mut [T], is_less: &F)
-where
-    T: Element,
-    F: Fn(&T, &T) -> bool,
-{
-    let left_len = mid - a;
-    buf[..left_len].copy_from_slice(&v[a..mid]);
-    let mut i = 0; // cursor into buf[..left_len]
-    let mut j = mid; // cursor into the right run
-    let mut out = a;
-    while i < left_len && j < b {
-        if is_less(&v[j], &buf[i]) {
-            v[out] = v[j];
-            j += 1;
-        } else {
-            v[out] = buf[i];
-            i += 1;
-        }
-        out += 1;
-    }
-    while i < left_len {
-        v[out] = buf[i];
-        i += 1;
-        out += 1;
-    }
-    // Any remaining right-run elements are already in place.
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::{is_sorted_by, multiset_fingerprint, Xoshiro256};
-
-    fn lt(a: &u64, b: &u64) -> bool {
-        a < b
-    }
-
-    fn check(mut v: Vec<u64>) {
-        let fp = multiset_fingerprint(&v, |x| *x);
-        let mut buf = Vec::new();
-        run_merge_sort(&mut v, &mut buf, &lt);
-        assert!(is_sorted_by(&v, lt), "n={}", v.len());
-        assert_eq!(fp, multiset_fingerprint(&v, |x| *x));
-    }
 
     #[test]
     fn backend_registry_roundtrip() {
@@ -218,60 +114,5 @@ mod tests {
         }
         assert_eq!(Backend::from_name("RADIX"), Some(Backend::Radix));
         assert_eq!(Backend::from_name("nope"), None);
-    }
-
-    #[test]
-    fn run_merge_sorted_input_is_untouched() {
-        let v: Vec<u64> = (0..10_000).collect();
-        let mut w = v.clone();
-        let mut buf = Vec::new();
-        run_merge_sort(&mut w, &mut buf, &lt);
-        assert_eq!(v, w);
-        assert!(buf.is_empty(), "single run must not grow the buffer");
-    }
-
-    #[test]
-    fn run_merge_reverse_sorted() {
-        check((0..10_000u64).rev().collect());
-    }
-
-    #[test]
-    fn run_merge_concatenated_runs() {
-        let mut v: Vec<u64> = Vec::new();
-        let mut rng = Xoshiro256::new(3);
-        for _ in 0..17 {
-            let mut run: Vec<u64> = (0..500).map(|_| rng.next_below(10_000)).collect();
-            run.sort_unstable();
-            v.extend(run);
-        }
-        check(v);
-    }
-
-    #[test]
-    fn run_merge_random_and_edge_inputs() {
-        let mut rng = Xoshiro256::new(9);
-        check(Vec::new());
-        check(vec![1]);
-        check(vec![2, 1]);
-        check(vec![7; 1000]);
-        for _ in 0..20 {
-            let n = rng.next_below(5_000) as usize;
-            check((0..n).map(|_| rng.next_below(1 << 20)).collect());
-        }
-    }
-
-    #[test]
-    fn run_merge_buffer_reused_across_calls() {
-        let mut buf = Vec::new();
-        let mut v: Vec<u64> = (0..2_000u64).chain(0..2_000).collect();
-        run_merge_sort(&mut v, &mut buf, &lt);
-        assert!(is_sorted_by(&v, lt));
-        let cap = buf.capacity();
-        assert!(cap >= 4_000, "two runs of 2000 require a full-size buffer");
-        // A second, smaller multi-run job must not regrow the buffer.
-        let mut w: Vec<u64> = (0..1_000u64).chain(0..1_000).collect();
-        run_merge_sort(&mut w, &mut buf, &lt);
-        assert!(is_sorted_by(&w, lt));
-        assert_eq!(buf.capacity(), cap);
     }
 }

@@ -28,9 +28,10 @@
 //!   sample-fitted monotone piecewise-linear CDF whose bucket mapping
 //!   costs two multiplies and a clamp, for heavy-tailed key
 //!   distributions where fixed digit windows go lopsided;
-//! * [`backend`] — the [`Backend`] registry, the [`PlannerMode`]
-//!   override knob carried by [`Config`](crate::Config), and the
-//!   run-merge backend implementation.
+//! * [`backend`] — the [`Backend`] registry and the [`PlannerMode`]
+//!   override knob carried by [`Config`](crate::Config). The run-merge
+//!   backend's implementation is the branchless multiway merge engine
+//!   in [`crate::merge`].
 //!
 //! [`Sorter`](crate::Sorter) and [`SortService`](crate::SortService)
 //! consult the planner on every job (unless `Config::planner` says
@@ -62,7 +63,7 @@ pub mod cost_model;
 pub mod fingerprint;
 pub mod json;
 
-pub use backend::{run_merge_sort, Backend, PlannerMode, SortPlan};
+pub use backend::{Backend, PlannerMode, SortPlan};
 pub use calibration::{
     dist_archetype, run_calibration, run_calibration_with, CalibrationCell, CalibrationOptions,
     CalibrationProfile, ProfileError, CALIBRATION_ENV, MAX_BASE_CASE_N, MAX_SIZE_CLASS_LOG_DIST,

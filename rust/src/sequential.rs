@@ -34,15 +34,19 @@ pub struct SeqContext<T> {
     pub cfg: Config,
     /// Element block size for this T (cached).
     pub block: usize,
-    /// Scratch for the planner's run-merge backend, grown on demand and
-    /// kept across sorts so a warm context never reallocates it.
-    pub merge_buf: Vec<T>,
+    /// Run bookkeeping + ⌈n/2⌉ staging scratch for the merge engine
+    /// (the planner's run-merge backend). Pre-sized at build for jobs up
+    /// to the service's small-job byte bound — so batch-path run-merge
+    /// jobs never grow a warm context, no matter which worker's arena
+    /// they land on — and grown on demand (counted) beyond that.
+    pub merge: crate::merge::MergeScratch<T>,
 }
 
 impl<T: Element> SeqContext<T> {
     pub fn new(cfg: Config, seed: u64) -> Self {
         let block = cfg.block_elems(std::mem::size_of::<T>());
         let max_buckets = 2 * cfg.max_buckets; // equality buckets double the count
+        let small_elems = cfg.small_sort_bytes / std::mem::size_of::<T>();
         SeqContext {
             bufs: LocalBuffers::new(max_buckets, block),
             swap: vec![T::default(); 2 * block],
@@ -50,7 +54,7 @@ impl<T: Element> SeqContext<T> {
             rng: Xoshiro256::new(seed),
             cfg,
             block,
-            merge_buf: Vec::new(),
+            merge: crate::merge::MergeScratch::with_capacity_for(small_elems),
         }
     }
 

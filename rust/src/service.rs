@@ -45,11 +45,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::arena::ArenaPool;
 use crate::base_case::insertion_sort;
 use crate::config::Config;
+use crate::merge::{merge_sort_runs, merge_sort_runs_par, MergeScratch};
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
 use crate::planner::{
-    plan_by, plan_keys, run_merge_sort, sort_cdf_par_with, sort_cdf_seq, Backend,
-    CalibrationOptions, PlannerMode, SortPlan,
+    plan_by, plan_keys, sort_cdf_par_with, sort_cdf_seq, Backend, CalibrationOptions, PlannerMode,
+    SortPlan,
 };
 use crate::radix::{sort_radix_par_with, sort_radix_seq_with, RadixKey};
 use crate::sequential::{sort_seq, SeqContext};
@@ -273,7 +274,12 @@ where
             core.counters.record_plan_source(plan.calibrated);
             match plan.backend {
                 Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
-                Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &self.is_less),
+                Backend::RunMerge => merge_sort_runs(
+                    &mut data,
+                    &mut ctx.merge,
+                    &self.is_less,
+                    Some(core.counters.as_ref()),
+                ),
                 _ => sort_seq(&mut data, &mut ctx, &self.is_less),
             }
         }));
@@ -325,6 +331,26 @@ where
                 }
                 Err(panic) => self.finish(core, Err(panic)),
             }
+        } else if plan.backend == Backend::RunMerge {
+            // Large run-merge jobs use the dedicated serialized arena —
+            // see [`LargeMergeScratch`].
+            let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                merge_sort_runs_par(
+                    &mut data,
+                    &core.pool,
+                    &mut ms.scratch,
+                    &self.is_less,
+                    Some(core.counters.as_ref()),
+                );
+            }));
+            match outcome {
+                Ok(()) => {
+                    core.arenas.checkin(ms);
+                    self.finish(core, Ok(data));
+                }
+                Err(panic) => self.finish(core, Err(panic)),
+            }
         } else {
             let mut ctx = core
                 .arenas
@@ -333,9 +359,6 @@ where
                 assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
                 match plan.backend {
                     Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
-                    Backend::RunMerge => {
-                        run_merge_sort(&mut data, &mut ctx.merge_buf, &self.is_less)
-                    }
                     _ => sort_seq(&mut data, &mut ctx, &self.is_less),
                 }
             }));
@@ -346,6 +369,27 @@ where
                 }
                 Err(panic) => self.finish(core, Err(panic)),
             }
+        }
+    }
+}
+
+/// Merge scratch for the dispatcher's *large* run-merge jobs. Large
+/// jobs are serialized on the dispatcher thread, so this arena slot
+/// converges to exactly one arena whose staging buffer tracks the
+/// largest run-merge job seen — which makes the zero-steady-state-
+/// allocation guarantee deterministic for run-merge-routed jobs. (The
+/// per-worker [`SeqContext`] merge scratch is pre-sized for batch-path
+/// jobs only; which worker arena a large job would pop is
+/// scheduling-dependent, so sizing it from large jobs could never be
+/// proven warm.)
+struct LargeMergeScratch<T> {
+    scratch: MergeScratch<T>,
+}
+
+impl<T: Element> LargeMergeScratch<T> {
+    fn new() -> Self {
+        LargeMergeScratch {
+            scratch: MergeScratch::new(),
         }
     }
 }
@@ -403,7 +447,12 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
             core.counters.record_plan_source(plan.calibrated);
             match plan.backend {
                 Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
-                Backend::RunMerge => run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less),
+                Backend::RunMerge => merge_sort_runs(
+                    &mut data,
+                    &mut ctx.merge,
+                    &T::radix_less,
+                    Some(core.counters.as_ref()),
+                ),
                 Backend::Radix => {
                     sort_radix_seq_with(&mut data, &mut ctx, Some(core.counters.as_ref()))
                 }
@@ -481,6 +530,27 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                     Err(panic) => self.finish(core, Err(panic)),
                 }
             }
+            Backend::RunMerge => {
+                // Large run-merge jobs use the dedicated serialized
+                // arena — see [`LargeMergeScratch`].
+                let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    merge_sort_runs_par(
+                        &mut data,
+                        &core.pool,
+                        &mut ms.scratch,
+                        &T::radix_less,
+                        Some(core.counters.as_ref()),
+                    );
+                }));
+                match outcome {
+                    Ok(()) => {
+                        core.arenas.checkin(ms);
+                        self.finish(core, Ok(data));
+                    }
+                    Err(panic) => self.finish(core, Err(panic)),
+                }
+            }
             _ => {
                 let mut ctx = core
                     .arenas
@@ -489,9 +559,6 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                     assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
                     match plan.backend {
                         Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
-                        Backend::RunMerge => {
-                            run_merge_sort(&mut data, &mut ctx.merge_buf, &T::radix_less)
-                        }
                         _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
                     }
                 }));
@@ -724,10 +791,13 @@ impl SortService {
 
     /// Pre-build scratch arenas for element type `T`: one sequential
     /// context per worker (the maximum ever checked out concurrently by
-    /// the batch path) plus one parallel scratch (the large-job path is
-    /// serial). After `warm`, a steady stream of `T` jobs performs zero
-    /// scratch allocations. The pre-built arenas are counted in
-    /// `scratch_allocations`.
+    /// the batch path) plus one parallel scratch and one large-job merge
+    /// scratch (the large-job path is serial). After `warm`, a steady
+    /// stream of `T` jobs performs zero scratch allocations — except
+    /// that the large-merge staging buffer still grows (counted) the
+    /// first time a large run-merge job of a new record size arrives,
+    /// since its high-water mark is workload-dependent. The pre-built
+    /// arenas are counted in `scratch_allocations`.
     pub fn warm<T: Element>(&self) {
         let core = &self.core;
         let t = core.pool.threads();
@@ -736,9 +806,10 @@ impl SortService {
                 .checkin(SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
         }
         core.arenas.checkin(ParScratch::<T>::new(&core.cfg, t));
+        core.arenas.checkin(LargeMergeScratch::<T>::new());
         core.counters
             .scratch_allocations
-            .fetch_add(t as u64 + 1, Ordering::Relaxed);
+            .fetch_add(t as u64 + 2, Ordering::Relaxed);
     }
 
     /// The service configuration.

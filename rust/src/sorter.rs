@@ -13,8 +13,7 @@ use crate::config::Config;
 use crate::metrics::ScratchSnapshot;
 use crate::parallel::ThreadPool;
 use crate::planner::{
-    plan_by, plan_keys, run_merge_sort, Backend, CalibrationOptions, CalibrationProfile,
-    PlannerMode, SortPlan,
+    plan_by, plan_keys, Backend, CalibrationOptions, CalibrationProfile, PlannerMode, SortPlan,
 };
 use crate::radix::RadixKey;
 use crate::sequential::SeqContext;
@@ -247,7 +246,22 @@ impl Sorter {
                     .arenas
                     .checkout(|| SeqContext::<T>::new(self.cfg.clone(), 0x5EED_0001));
                 assert!(ctx.compatible_with(&self.cfg), "recycled arena geometry mismatch");
-                run_merge_sort(v, &mut ctx.merge_buf, is_less);
+                let counters = self.arenas.counters();
+                match &self.pool {
+                    Some(pool) => crate::merge::merge_sort_runs_par(
+                        v,
+                        pool,
+                        &mut ctx.merge,
+                        is_less,
+                        Some(counters.as_ref()),
+                    ),
+                    None => crate::merge::merge_sort_runs(
+                        v,
+                        &mut ctx.merge,
+                        is_less,
+                        Some(counters.as_ref()),
+                    ),
+                }
                 self.arenas.checkin(ctx);
             }
             Backend::Ips4oSeq => {

@@ -1,6 +1,7 @@
 //! Differential test suite: every algorithm in `baselines/` plus
 //! sequential and parallel IPS⁴o — and, since the planner landed, the
-//! planner-routed, forced-radix, and forced-CDF drivers — checked
+//! planner-routed, forced-radix, forced-CDF, and forced-run-merge
+//! (branchless merge engine) drivers — checked
 //! against the standard library `slice::sort` on a shared corpus of all
 //! `datagen::Distribution`s × boundary-focused sizes
 //! {0, 1, 2, block−1, block, block+1, 30k} × all benchmark data types.
@@ -88,6 +89,7 @@ fn differential_for_keys<T>(
     seeded(test_name, 0x4E15, |seed| {
         let radix = Config::default().with_planner(PlannerMode::Force(Backend::Radix));
         let cdf = Config::default().with_planner(PlannerMode::Force(Backend::CdfSort));
+        let merge = Config::default().with_planner(PlannerMode::Force(Backend::RunMerge));
         let sorters = [
             ("planner-seq", Sorter::new(Config::default())),
             ("planner-par", Sorter::new(Config::default().with_threads(4))),
@@ -95,6 +97,8 @@ fn differential_for_keys<T>(
             ("radix-par", Sorter::new(radix.with_threads(4))),
             ("cdf-seq", Sorter::new(cdf.clone())),
             ("cdf-par", Sorter::new(cdf.with_threads(4))),
+            ("merge-seq", Sorter::new(merge.clone())),
+            ("merge-par", Sorter::new(merge.with_threads(4))),
         ];
         let is_less = T::radix_less;
         let block = Config::default().block_elems(std::mem::size_of::<T>());

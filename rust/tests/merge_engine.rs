@@ -1,0 +1,242 @@
+//! Merge-engine integration suite: the branchless multiway merge engine
+//! (`ips4o::merge`, the planner's run-merge backend) through the forced
+//! `Backend::RunMerge` drivers — sequential and parallel — over the
+//! nearly-sorted distributions it exists for, all five benchmark element
+//! types, the shared oracle checks (sorted, multiset fingerprint, std
+//! key-equivalence), a −0.0/+0.0 f64 case, degenerate run shapes, and an
+//! exact stability check (the engine is stable, so its output must match
+//! `slice::sort_by` byte for byte, not just key-equivalence).
+
+mod common;
+
+use common::oracle::{seeded, SortCheck};
+use ips4o::datagen::{self, Distribution};
+use ips4o::util::{is_sorted_by, Bytes100, Element, Pair, Quartet};
+use ips4o::{Backend, Config, PlannerMode, Sorter};
+
+fn merge_sorters() -> [(&'static str, Sorter); 2] {
+    let forced = Config::default().with_planner(PlannerMode::Force(Backend::RunMerge));
+    [
+        ("merge-seq", Sorter::new(forced.clone())),
+        ("merge-par", Sorter::new(forced.with_threads(4))),
+    ]
+}
+
+/// SortedRuns + AlmostSorted (and, for contrast, Sorted and
+/// ReverseSorted) × one element type through both forced-RunMerge
+/// drivers, against the shared oracle.
+fn merge_differential_for_type<T>(
+    test_name: &str,
+    gen: impl Fn(Distribution, usize, u64) -> Vec<T>,
+    key: impl Fn(&T) -> u64 + Copy,
+    is_less: fn(&T, &T) -> bool,
+) where
+    T: Element,
+{
+    seeded(test_name, 0x6E11, |seed| {
+        let sorters = merge_sorters();
+        let dists = [
+            Distribution::SortedRuns,
+            Distribution::AlmostSorted,
+            Distribution::Sorted,
+            Distribution::ReverseSorted,
+        ];
+        // 100_000 clears the parallel engine's size threshold for every
+        // element type, so merge-par exercises the co-ranked path too.
+        for d in dists {
+            for n in [0usize, 1, 2, 1_000, 100_000] {
+                let base = gen(d, n, seed ^ n as u64);
+                let check = SortCheck::capture(&base, is_less, key);
+                for (name, sorter) in &sorters {
+                    let mut v = base.clone();
+                    sorter.sort_by(&mut v, &is_less);
+                    let ctx = format!("{name} on {test_name}/{} n={n}", d.name());
+                    check.assert_output(&v, is_less, &ctx);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn merge_differential_u64() {
+    merge_differential_for_type("merge_differential_u64", datagen::gen_u64, |x| *x, |a, b| {
+        a < b
+    });
+}
+
+#[test]
+fn merge_differential_f64() {
+    merge_differential_for_type(
+        "merge_differential_f64",
+        datagen::gen_f64,
+        |x| x.to_bits(),
+        |a, b| a < b,
+    );
+}
+
+#[test]
+fn merge_differential_pair() {
+    merge_differential_for_type(
+        "merge_differential_pair",
+        datagen::gen_pair,
+        |p| p.key.to_bits() ^ p.value.to_bits().rotate_left(32),
+        Pair::less,
+    );
+}
+
+#[test]
+fn merge_differential_quartet() {
+    merge_differential_for_type(
+        "merge_differential_quartet",
+        datagen::gen_quartet,
+        |q| {
+            q.k0.to_bits()
+                ^ q.k1.to_bits().rotate_left(13)
+                ^ q.k2.to_bits().rotate_left(27)
+                ^ q.value.to_bits().rotate_left(41)
+        },
+        Quartet::less,
+    );
+}
+
+#[test]
+fn merge_differential_bytes100() {
+    merge_differential_for_type(
+        "merge_differential_bytes100",
+        datagen::gen_bytes100,
+        |b| {
+            let mut k = [0u8; 8];
+            k.copy_from_slice(&b.key[2..10]);
+            u64::from_be_bytes(k) ^ (b.payload[0] as u64).rotate_left(56)
+        },
+        Bytes100::less,
+    );
+}
+
+/// −0.0 vs +0.0 through the merge engine: under `<` the two are equal,
+/// so a *stable* engine must keep them in input order — checked both by
+/// the oracle's key-equivalence and by exact bit-pattern comparison
+/// against the (stable) std sort.
+#[test]
+fn merge_f64_negative_zero_stability() {
+    seeded("merge_f64_negative_zero_stability", 0x6E20, |seed| {
+        let mut rng = ips4o::util::Xoshiro256::new(seed);
+        let base: Vec<f64> = (0..40_000)
+            .map(|i| match i % 5 {
+                0 => -0.0,
+                1 => 0.0,
+                2 => -rng.next_f64(),
+                3 => rng.next_f64(),
+                _ => 0.0,
+            })
+            .collect();
+        let is_less = |a: &f64, b: &f64| a < b;
+        let check = SortCheck::capture(&base, is_less, |x: &f64| x.to_bits());
+        let mut want = base.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (name, sorter) in &merge_sorters() {
+            let mut v = base.clone();
+            sorter.sort_by(&mut v, &is_less);
+            check.assert_output(&v, is_less, name);
+            let same_bits = v.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                same_bits,
+                "{name}: −0.0/+0.0 order differs from the stable std sort"
+            );
+        }
+    });
+}
+
+/// Degenerate run shapes: a single run (already sorted), two runs of
+/// wildly unequal length, and all-equal keys.
+#[test]
+fn merge_degenerate_run_shapes() {
+    seeded("merge_degenerate_run_shapes", 0x6E30, |seed| {
+        let mut rng = ips4o::util::Xoshiro256::new(seed);
+        let single_run: Vec<u64> = (0..100_000).collect();
+        let mut unequal: Vec<u64> = (0..100_000).collect();
+        let mut tail: Vec<u64> = (0..50).map(|_| rng.next_below(1 << 40)).collect();
+        tail.sort_unstable();
+        unequal.extend(tail);
+        let all_equal: Vec<u64> = vec![42; 120_000];
+        let is_less = |a: &u64, b: &u64| a < b;
+        for (shape, base) in [
+            ("single-run", single_run),
+            ("two-unequal-runs", unequal),
+            ("all-equal", all_equal),
+        ] {
+            let check = SortCheck::capture(&base, is_less, |x| *x);
+            for (name, sorter) in &merge_sorters() {
+                let mut v = base.clone();
+                sorter.sort_by(&mut v, &is_less);
+                check.assert_output(&v, is_less, &format!("{name} on {shape}"));
+            }
+        }
+    });
+}
+
+/// Exact stability on a payload-carrying type: equal keys with distinct
+/// payloads must come out in input order, i.e. identical to the stable
+/// `slice::sort_by`. This is stronger than the oracle's key-equivalence
+/// and is the guarantee the distribution backends do NOT make.
+#[test]
+fn merge_engine_is_stable_on_pairs() {
+    seeded("merge_engine_is_stable_on_pairs", 0x6E40, |seed| {
+        let mut rng = ips4o::util::Xoshiro256::new(seed);
+        let mut base: Vec<Pair> = (0..60_000)
+            .map(|i| Pair {
+                key: rng.next_below(100) as f64,
+                value: i as f64,
+            })
+            .collect();
+        // Pre-structure into runs so the engine does real merging.
+        for chunk in base.chunks_mut(2_000) {
+            chunk.sort_by(|a, b| a.key.partial_cmp(&b.key).unwrap());
+        }
+        let mut want = base.clone();
+        want.sort_by(|a, b| a.key.partial_cmp(&b.key).unwrap());
+        for (name, sorter) in &merge_sorters() {
+            let mut v = base.clone();
+            sorter.sort_by(&mut v, &Pair::less);
+            let identical = v.iter().zip(&want).all(|(a, b)| {
+                a.key.to_bits() == b.key.to_bits() && a.value.to_bits() == b.value.to_bits()
+            });
+            assert!(identical, "{name}: not stable (payload order differs)");
+        }
+    });
+}
+
+/// The engine's counters: forced run-merge jobs must be routed and
+/// counted as `Backend::RunMerge`, execute at least one merge pass on a
+/// multi-run input, and split large pair merges across threads in the
+/// parallel driver.
+#[test]
+fn merge_engine_counters_and_routing() {
+    let forced = Config::default().with_planner(PlannerMode::Force(Backend::RunMerge));
+    let seq = Sorter::new(forced.clone());
+    let par = Sorter::new(forced.with_threads(4));
+
+    // Two long runs: forces merging, and in the parallel driver forces
+    // co-ranked splitting (600k pair ≫ the parallel size threshold).
+    let base: Vec<u64> = (0..300_000u64).chain(0..300_000).collect();
+
+    let mut v = base.clone();
+    seq.sort_by(&mut v, &|a, b| a < b);
+    assert!(is_sorted_by(&v, |a, b| a < b));
+    let m = seq.scratch_metrics();
+    assert_eq!(m.backend_count(Backend::RunMerge), 1, "{}", m.backends_summary());
+    assert!(m.merge_passes > 0, "sequential engine must count passes");
+    assert_eq!(m.merge_parallel_splits, 0, "no pool, no splits");
+
+    let mut v = base.clone();
+    par.sort_by(&mut v, &|a, b| a < b);
+    assert!(is_sorted_by(&v, |a, b| a < b));
+    let m = par.scratch_metrics();
+    assert_eq!(m.backend_count(Backend::RunMerge), 1, "{}", m.backends_summary());
+    assert!(m.merge_passes > 0, "parallel engine must count passes");
+    assert!(
+        m.merge_parallel_splits > 0,
+        "a 600k two-run merge at t=4 must split across threads"
+    );
+}

@@ -213,6 +213,34 @@ fn property_radix_random_configs() {
 }
 
 #[test]
+fn property_merge_engine_random_configs() {
+    // Forced run-merge (the branchless merge engine, sequential and
+    // parallel by drawn thread count) over random configurations and
+    // input shapes — run detection and the merge passes must keep every
+    // draw correct, not just the nearly-sorted shapes it is routed for.
+    seeded("property_merge_engine_random_configs", 0x6E56, |seed| {
+        let mut rng = Xoshiro256::new(seed);
+        for trial in 0..40 {
+            let cfg = random_config(&mut rng);
+            let cfg = cfg.with_planner(PlannerMode::Force(Backend::RunMerge));
+            let sorter = Sorter::new(cfg.clone());
+            let mut v = random_input(&mut rng);
+            // Scale some inputs past the parallel engine's threshold so
+            // the co-ranked path engages when threads > 1.
+            if trial % 4 == 0 {
+                v.extend(v.clone());
+                v.extend(v.clone());
+            }
+            let v0 = v.clone();
+            sorter.sort_keys(&mut v);
+            let ctx = format!("trial {trial} (n={}, cfg={cfg:?})", v0.len());
+            assert_sorted(&v, lt, &ctx);
+            assert_same_multiset(&v0, &v, |x| *x, &ctx);
+        }
+    });
+}
+
+#[test]
 fn property_cdf_random_configs() {
     // Forced learned-CDF over random configurations and input shapes —
     // the skew/fallback machinery must keep every draw correct.

@@ -381,14 +381,16 @@ fn calibrated_service_routes_measured_and_stays_oracle_clean() {
 fn zero_scratch_allocations_after_warmup() {
     // The acceptance criterion: a repeated-sort loop through the service
     // performs zero scratch allocations after warm-up, proven by the
-    // metrics reuse counters.
+    // metrics reuse counters. Run-merge-routed jobs are covered too —
+    // the merge engine's run table and staging buffer live in pooled
+    // arenas and their growth is counted (the pre-engine implementation
+    // grew a raw Vec the counters never saw, so run-merge jobs were
+    // silently exempt from this assertion).
     let svc = SortService::new(Config::default().with_threads(2));
     svc.warm::<u64>();
     svc.warm::<Pair>();
-    let warm = svc.metrics();
-    assert!(warm.scratch_allocations > 0, "warm pre-builds arenas");
 
-    for round in 0..10u64 {
+    let run_round = |round: u64| {
         let tickets: Vec<_> = (0..8)
             .map(|i| {
                 svc.submit(datagen::gen_u64(
@@ -400,13 +402,31 @@ fn zero_scratch_allocations_after_warmup() {
             .collect();
         // A parallel-path job mixed in: ParScratch<u64> came from warm().
         let big = svc.submit(datagen::gen_u64(Distribution::Uniform, 150_000, round));
+        // A large nearly-sorted job: planned as run-merge, executed by
+        // the parallel merge engine out of the dedicated large-merge
+        // arena on the dispatcher.
+        let runs = svc.submit(datagen::gen_u64(Distribution::SortedRuns, 200_000, round));
         let pair_job = datagen::gen_pair(Distribution::TwoDup, 4_000, round);
         let pairs = svc.submit_by(pair_job, Pair::less);
         for t in tickets {
             assert_sorted(&t.wait(), lt, "small job");
         }
         assert_sorted(&big.wait(), lt, "big job");
+        assert_sorted(&runs.wait(), lt, "run-merge job");
         assert_sorted(&pairs.wait(), Pair::less, "pair job");
+    };
+
+    // One sizing round: grows the large-merge staging buffer to the
+    // workload's high-water mark (the one growth `warm` cannot
+    // pre-build, since it is size-dependent). The small-job merge
+    // scratch needs no sizing — SeqContext pre-builds it for the
+    // batching threshold.
+    run_round(0);
+    let warm = svc.metrics();
+    assert!(warm.scratch_allocations > 0, "warm pre-builds arenas");
+
+    for round in 1..11u64 {
+        run_round(round);
     }
 
     let d = svc.metrics().delta(&warm);
@@ -415,7 +435,18 @@ fn zero_scratch_allocations_after_warmup() {
         "warm service must never allocate scratch (reuses={})",
         d.scratch_reuses
     );
-    assert_eq!(d.jobs_completed, 100);
-    assert!(d.scratch_reuses >= 100, "every job reuses an arena");
-    assert_eq!(d.elements_sorted, 10 * (8 * 4_000 + 150_000 + 4_000));
+    assert_eq!(d.jobs_completed, 10 * 11);
+    assert!(d.scratch_reuses >= 10 * 11, "every job reuses an arena");
+    assert_eq!(
+        d.elements_sorted,
+        10 * (8 * 4_000 + 150_000 + 200_000 + 4_000)
+    );
+    // The run-merge coverage is real: every round's large SortedRuns job
+    // must have been routed to the merge engine and actually merged.
+    assert!(
+        d.backend_count(Backend::RunMerge) >= 10,
+        "run-merge jobs must be routed through the engine: {}",
+        d.backends_summary()
+    );
+    assert!(d.merge_passes > 0, "covered jobs actually merged runs");
 }

@@ -19,8 +19,8 @@ cargo test -q
 # pinned and a single test thread — exercising the IPS4O_TEST_SEED
 # replay path (tests/common/oracle.rs) on every gate, including --fast.
 echo "== seeded replay (IPS4O_TEST_SEED=271828, --test-threads=1) =="
-for suite in differential merge_engine planner_calibration property_tests scheduler_stress \
-             service_stress sort_integration; do
+for suite in differential extsort merge_engine planner_calibration property_tests \
+             scheduler_stress service_stress sort_integration; do
     IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
 done
 

@@ -1,0 +1,126 @@
+//! External-sort I/O bench: phase-split cost of the out-of-core
+//! pipeline (`ips4o::extsort`). Run generation (double-buffered input
+//! read + planner-routed chunk sorts + run writes) and the k-way merge
+//! (buffered run reads + branchless merge + output write) are timed
+//! from the phase nanos each sort reports, in both ns/elem and
+//! bytes/sec — the bytes unit is what the phases actually contend on,
+//! since a cascaded merge re-reads every record it spills.
+//!
+//! Emits `BENCH_extsort_io.json` when `IPS4O_BENCH_JSON=<dir>` is set;
+//! `IPS4O_BENCH_FULL` raises the record count.
+
+use std::time::Duration;
+
+use ips4o::bench_harness::{
+    bytes_per_sec_str, print_machine_info, reps_for, JsonReport, Measurement, Table,
+};
+use ips4o::datagen::{self, Distribution};
+use ips4o::{Config, ExtSortConfig, Sorter};
+
+fn main() {
+    print_machine_info();
+    let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n: usize = if full { 1 << 22 } else { 1 << 19 };
+    let reps = reps_for(n).min(5);
+    // 16 runs through fan-in 4 forces a two-level cascade, so the merge
+    // phase includes intermediate-run I/O, not just the final pass.
+    let chunk_elems = n / 16;
+    let fan_in = 4;
+
+    let dir = std::env::temp_dir().join(format!("ips4o-extsort-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("in.bin");
+    let output = dir.join("out.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xB17E).unwrap();
+
+    let sorter = Sorter::new(Config::default().with_threads(threads).with_extsort(
+        ExtSortConfig::default()
+            .with_chunk_bytes(chunk_elems * 8)
+            .with_fan_in(fan_in)
+            .with_buffer_bytes(64 * 1024)
+            .with_spill_dir(&dir),
+    ));
+    println!(
+        "# extsort io — n={n} u64 records, chunk={chunk_elems} elems, fan_in={fan_in}, \
+         t={threads}, reps={reps}\n"
+    );
+
+    // Warmup (not measured): builds the arena, so the timed reps see
+    // the steady-state allocation-free path.
+    sorter.sort_file::<u64>(&input, &output).unwrap();
+
+    let (mut gen_total, mut gen_min) = (0u64, u64::MAX);
+    let (mut merge_total, mut merge_min) = (0u64, u64::MAX);
+    let mut last = None;
+    for _ in 0..reps {
+        let r = sorter.sort_file::<u64>(&input, &output).unwrap();
+        gen_total += r.run_gen_nanos;
+        gen_min = gen_min.min(r.run_gen_nanos);
+        merge_total += r.merge_nanos;
+        merge_min = merge_min.min(r.merge_nanos);
+        last = Some(r);
+    }
+    let last = last.unwrap();
+    let meas = |total: u64, min: u64| Measurement {
+        mean: Duration::from_nanos(total / reps as u64),
+        min: Duration::from_nanos(min),
+        reps,
+        n,
+    };
+    let m_gen = meas(gen_total, gen_min);
+    let m_merge = meas(merge_total, merge_min);
+    let m_total = meas(gen_total + merge_total, gen_min + merge_min);
+
+    // Phase I/O volume: run generation reads the input once and writes
+    // every record to a run; the merge tier moved everything else.
+    let gen_bytes = 2 * (n as u64) * 8;
+    let total_bytes = last.bytes_read + last.bytes_written;
+    let merge_bytes = total_bytes - gen_bytes;
+
+    let mut table = Table::new(&["phase", "mean ms", "ns/elem", "throughput"]);
+    let mut row = |name: &str, m: &Measurement, bytes: u64| {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", m.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", m.mean.as_nanos() as f64 / n as f64),
+            bytes_per_sec_str(m.bytes_throughput(bytes)),
+        ]);
+    };
+    row("run-gen", &m_gen, gen_bytes);
+    row("merge", &m_merge, merge_bytes);
+    row("total", &m_total, total_bytes);
+    table.print();
+    println!(
+        "\nruns_written={} merge_passes={} read={}B written={}B",
+        last.runs_written, last.merge_passes, last.bytes_read, last.bytes_written
+    );
+
+    let mut report = JsonReport::new("extsort_io", threads);
+    report.add_with_bytes("extsort-run-gen", "Uniform/u64", &m_gen, gen_bytes);
+    report.add_with_bytes("extsort-merge", "Uniform/u64", &m_merge, merge_bytes);
+    report.add_with_bytes("extsort-total", "Uniform/u64", &m_total, total_bytes);
+    report.emit_and_report();
+
+    let raw = std::fs::read(&output).unwrap();
+    let v: Vec<u64> = raw
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let ok = last.elements == n as u64
+        && v.len() == n
+        && ips4o::util::is_sorted_by(&v, |a, b| a < b)
+        && last.merge_passes > 1;
+    std::fs::remove_dir_all(&dir).ok();
+    if ok {
+        println!(
+            "PASS: out-of-core output verified sorted ({} runs, {} merge passes)",
+            last.runs_written, last.merge_passes
+        );
+    } else {
+        println!("FAIL: extsort output verification failed");
+        std::process::exit(1);
+    }
+}

@@ -72,6 +72,27 @@ impl Measurement {
     pub fn throughput(&self) -> f64 {
         self.n as f64 / self.mean.as_secs_f64()
     }
+
+    /// Bytes per second, given the bytes one repetition moved — the
+    /// I/O-bound unit for external-memory benches, where ns/elem alone
+    /// hides the record width and the merge-pass re-reads.
+    pub fn bytes_throughput(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Human-readable bytes/sec (`"1.73 GiB/s"`) for table columns.
+pub fn bytes_per_sec_str(bytes_per_s: f64) -> String {
+    const KIB: f64 = 1024.0;
+    if bytes_per_s >= KIB * KIB * KIB {
+        format!("{:.2} GiB/s", bytes_per_s / (KIB * KIB * KIB))
+    } else if bytes_per_s >= KIB * KIB {
+        format!("{:.1} MiB/s", bytes_per_s / (KIB * KIB))
+    } else if bytes_per_s >= KIB {
+        format!("{:.1} KiB/s", bytes_per_s / KIB)
+    } else {
+        format!("{:.0} B/s", bytes_per_s)
+    }
 }
 
 /// Benchmark `run`, which receives a fresh copy of `make_input()` each
@@ -190,6 +211,7 @@ struct JsonEntry {
     min_ns: u128,
     ns_per_elem: f64,
     throughput: f64,
+    bytes_per_s: Option<f64>,
 }
 
 /// Accumulator for a bench's machine-readable results. Build one per
@@ -226,6 +248,16 @@ impl JsonReport {
 
     /// Record one measurement for `algo` on workload `detail`.
     pub fn add(&mut self, algo: &str, detail: &str, m: &Measurement) {
+        self.push_entry(algo, detail, m, None);
+    }
+
+    /// Like [`add`](JsonReport::add), plus the bytes one repetition
+    /// moved — the entry gains a `bytes_per_s` field.
+    pub fn add_with_bytes(&mut self, algo: &str, detail: &str, m: &Measurement, bytes: u64) {
+        self.push_entry(algo, detail, m, Some(m.bytes_throughput(bytes)));
+    }
+
+    fn push_entry(&mut self, algo: &str, detail: &str, m: &Measurement, bytes_per_s: Option<f64>) {
         let n = m.n.max(1);
         self.entries.push(JsonEntry {
             algo: algo.to_string(),
@@ -236,6 +268,7 @@ impl JsonReport {
             min_ns: m.min.as_nanos(),
             ns_per_elem: m.mean.as_nanos() as f64 / n as f64,
             throughput: m.throughput(),
+            bytes_per_s,
         });
     }
 
@@ -247,10 +280,14 @@ impl JsonReport {
         s.push_str(&format!("  \"threads\": {},\n", self.threads));
         s.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
+            let bytes = e
+                .bytes_per_s
+                .map(|b| format!(", \"bytes_per_s\": {b:.1}"))
+                .unwrap_or_default();
             s.push_str(&format!(
                 "    {{\"algo\": \"{}\", \"detail\": \"{}\", \"n\": {}, \"reps\": {}, \
                  \"mean_ns\": {}, \"min_ns\": {}, \"ns_per_elem\": {:.3}, \
-                 \"throughput_elem_per_s\": {:.1}}}{}\n",
+                 \"throughput_elem_per_s\": {:.1}{}}}{}\n",
                 json_escape(&e.algo),
                 json_escape(&e.detail),
                 e.n,
@@ -259,6 +296,7 @@ impl JsonReport {
                 e.min_ns,
                 e.ns_per_elem,
                 e.throughput,
+                bytes,
                 if i + 1 < self.entries.len() { "," } else { "" },
             ));
         }
@@ -374,6 +412,30 @@ mod tests {
         // Two entries: exactly one comma-terminated, one bare.
         assert_eq!(s.matches("},\n").count(), 1);
         assert!(s.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn bytes_throughput_column_and_json_field() {
+        let m = Measurement {
+            mean: Duration::from_secs(2),
+            min: Duration::from_secs(1),
+            reps: 2,
+            n: 1000,
+        };
+        // 2 GiB over 2 s = 1 GiB/s.
+        let bps = m.bytes_throughput(2 * 1024 * 1024 * 1024);
+        assert_eq!(bps, 1024.0 * 1024.0 * 1024.0);
+        assert_eq!(bytes_per_sec_str(bps), "1.00 GiB/s");
+        assert_eq!(bytes_per_sec_str(1536.0 * 1024.0), "1.5 MiB/s");
+        assert_eq!(bytes_per_sec_str(512.0), "512 B/s");
+
+        let mut r = JsonReport::new("unit_test_bytes", 1);
+        r.add_with_bytes("run-gen", "Uniform/u64", &m, 8_000);
+        r.add("merge", "Uniform/u64", &m);
+        let s = r.to_json();
+        assert!(s.contains("\"bytes_per_s\": 4000.0"));
+        // The plain entry must not gain the field.
+        assert_eq!(s.matches("bytes_per_s").count(), 1);
     }
 
     #[test]

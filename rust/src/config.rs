@@ -69,6 +69,73 @@ pub struct Config {
     /// routes purely on the built-in static thresholds. Shared behind an
     /// [`Arc`] so cloning a configured `Config` stays cheap.
     pub calibration: Option<Arc<CalibrationProfile>>,
+    /// Knobs for the out-of-core tier ([`crate::extsort`]): chunk size
+    /// for run generation, merge fan-in, per-stream buffer bytes, and
+    /// the spill directory.
+    pub extsort: ExtSortConfig,
+}
+
+/// Tuning knobs for the out-of-core sorting tier ([`crate::extsort`]).
+///
+/// Run generation reads the input in `chunk_bytes` slices, sorts each
+/// with the planner-routed in-memory backends, and spills sorted runs;
+/// the merge phase then streams up to `fan_in` runs at a time through
+/// `buffer_bytes`-sized read buffers, cascading extra passes while more
+/// runs remain. Spill files live under `spill_dir` (the OS temp
+/// directory when `None`) in a per-job subdirectory that is removed on
+/// completion — success, error, or panic alike.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExtSortConfig {
+    /// Bytes of input sorted per run-generation chunk (also the spill
+    /// run size). Clamped to at least one element at use sites.
+    pub chunk_bytes: usize,
+    /// Maximum number of runs merged per external pass (≥ 2).
+    pub fan_in: usize,
+    /// Bytes of buffering per open stream: each run cursor's refill
+    /// block and the writers' staging block.
+    pub buffer_bytes: usize,
+    /// Directory for spill runs; `None` uses [`std::env::temp_dir`].
+    pub spill_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for ExtSortConfig {
+    fn default() -> Self {
+        ExtSortConfig {
+            // 32 MiB runs; one fan-in-16 pass then covers ~512 MiB per
+            // merge level, with 1 MiB of buffering per open stream.
+            chunk_bytes: 32 << 20,
+            fan_in: 16,
+            buffer_bytes: 1 << 20,
+            spill_dir: None, // OS temp dir
+        }
+    }
+}
+
+impl ExtSortConfig {
+    /// Builder-style chunk-size override in bytes (min 1; use sites
+    /// additionally clamp to at least one element).
+    pub fn with_chunk_bytes(mut self, bytes: usize) -> Self {
+        self.chunk_bytes = bytes.max(1);
+        self
+    }
+
+    /// Builder-style merge fan-in override (clamped to ≥ 2).
+    pub fn with_fan_in(mut self, k: usize) -> Self {
+        self.fan_in = k.max(2);
+        self
+    }
+
+    /// Builder-style per-stream buffer override in bytes (min 1).
+    pub fn with_buffer_bytes(mut self, bytes: usize) -> Self {
+        self.buffer_bytes = bytes.max(1);
+        self
+    }
+
+    /// Builder-style spill-directory override.
+    pub fn with_spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
 }
 
 impl Default for Config {
@@ -88,6 +155,7 @@ impl Default for Config {
             planner: PlannerMode::Auto,
             scheduler: SchedulerMode::Dynamic,
             calibration: None,
+            extsort: ExtSortConfig::default(),
         }
     }
 }
@@ -159,6 +227,12 @@ impl Config {
     /// [`Config::with_calibration`] for an already-shared profile.
     pub fn with_calibration_shared(mut self, profile: Arc<CalibrationProfile>) -> Self {
         self.calibration = Some(profile);
+        self
+    }
+
+    /// Builder-style out-of-core knob override (see [`ExtSortConfig`]).
+    pub fn with_extsort(mut self, ext: ExtSortConfig) -> Self {
+        self.extsort = ext;
         self
     }
 
@@ -328,6 +402,29 @@ mod tests {
             c.calibration.as_ref().unwrap(),
             c2.calibration.as_ref().unwrap()
         ));
+    }
+
+    #[test]
+    fn extsort_knob_defaults_and_builders() {
+        let e = Config::default().extsort;
+        assert_eq!(e.chunk_bytes, 32 << 20);
+        assert_eq!(e.fan_in, 16);
+        assert_eq!(e.buffer_bytes, 1 << 20);
+        assert!(e.spill_dir.is_none(), "OS temp dir by default");
+        let e = ExtSortConfig::default()
+            .with_chunk_bytes(0)
+            .with_fan_in(1)
+            .with_buffer_bytes(0)
+            .with_spill_dir("/tmp/spill");
+        assert_eq!(e.chunk_bytes, 1, "chunk clamps to at least one byte");
+        assert_eq!(e.fan_in, 2, "fan-in clamps to a real merge");
+        assert_eq!(e.buffer_bytes, 1);
+        assert_eq!(
+            e.spill_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/spill"))
+        );
+        let c = Config::default().with_extsort(e.clone());
+        assert_eq!(c.extsort, e);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!   `SortedRuns` (16 concatenated ascending runs) — targets for the
 //!   planner's skew and run detection ([`crate::planner`])
 
-use crate::util::{Bytes100, Pair, Quartet, Xoshiro256};
+use crate::util::{Bytes100, Pair, Quartet, SplitMix64, Xoshiro256};
 
 /// The paper's input distributions plus the planner additions.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
@@ -66,6 +66,98 @@ impl Distribution {
             .iter()
             .copied()
             .find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    /// The key at stream position `i` of an `n_total`-element workload —
+    /// a pure function of `(self, n_total, seed, i)`, so any slice of
+    /// the stream can be produced independently ([`fill_chunk`]
+    /// (Distribution::fill_chunk)) and a multi-GiB input never has to be
+    /// materialized.
+    ///
+    /// For the index-pure distributions (`Sorted`, `ReverseSorted`,
+    /// `Ones`, `RootDup`, `TwoDup`, `EightDup`) this is bit-identical
+    /// to [`keys_u64`]. The sequentially-seeded ones (`Uniform`,
+    /// `Exponential`, `Zipf`) keep the same distribution through a
+    /// counter-based SplitMix64 but are *not* bit-identical to the
+    /// in-memory stream; `AlmostSorted` and `SortedRuns` use streaming
+    /// variants with the same shape (sparse perturbations of a sorted
+    /// ramp; 16 internally sorted runs).
+    pub fn key_at(self, n_total: usize, seed: u64, i: u64) -> u64 {
+        // Counter-based PRF: one fresh SplitMix64 step per index. The
+        // golden-ratio stride decorrelates neighboring indices.
+        let prf = |salt: u64| {
+            SplitMix64::new(
+                seed.wrapping_add(salt).wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            )
+            .next_u64()
+        };
+        let to_f64 = |x: u64| (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let nn = (n_total as u64).max(1);
+        match self {
+            Distribution::Uniform => prf(0),
+            Distribution::Exponential => {
+                let scale = (n_total.max(2) as f64).ln();
+                let u = to_f64(prf(0)).max(1e-300);
+                ((-u.ln()) * (nn as f64) / scale) as u64
+            }
+            Distribution::AlmostSorted => {
+                // Sorted ramp with ~√n hash-selected positions replaced
+                // by random keys (same disturbance budget as the √n
+                // transpositions of the in-memory variant).
+                let root = (n_total as f64).sqrt() as u64;
+                let root = root.max(1);
+                if prf(1) % root == 0 {
+                    prf(2) % nn
+                } else {
+                    i
+                }
+            }
+            Distribution::RootDup => {
+                let r = (n_total as f64).sqrt() as u64;
+                i % r.max(1)
+            }
+            Distribution::TwoDup => (i.wrapping_mul(i).wrapping_add(nn / 2)) % nn,
+            Distribution::EightDup => {
+                let i2 = i.wrapping_mul(i);
+                let i4 = i2.wrapping_mul(i2);
+                let i8 = i4.wrapping_mul(i4);
+                (i8.wrapping_add(nn / 2)) % nn
+            }
+            Distribution::Sorted => i,
+            Distribution::ReverseSorted => nn - 1 - i.min(nn - 1),
+            Distribution::Ones => 1,
+            Distribution::Zipf => {
+                let ln_n = (nn.max(2) as f64).ln();
+                (ln_n * to_f64(prf(0))).exp() as u64
+            }
+            Distribution::SortedRuns => {
+                // 16 concatenated ascending runs with the same
+                // boundaries as the in-memory variant; within run `r`,
+                // position `j` gets `j·stride` plus sub-stride jitter,
+                // which is ascending by construction.
+                let runs = 16u64.min(nn);
+                // Run r covers [⌊r·n/runs⌋, ⌊(r+1)·n/runs⌋); inverting
+                // gives the run holding index i.
+                let r = ((i + 1) * runs - 1) / nn;
+                let start = (r * nn) / runs;
+                let len = (((r + 1) * nn) / runs - start).max(1);
+                let j = i - start;
+                let stride = (u64::MAX / len).max(1);
+                j.saturating_mul(stride)
+                    .saturating_add(prf(3) % stride)
+            }
+        }
+    }
+
+    /// Fill `buf` with the keys at stream positions `offset ..
+    /// offset + buf.len()` of an `n_total`-element workload: the
+    /// chunked face of [`key_at`](Distribution::key_at). Chunk
+    /// boundaries never change the stream — generating `[0, n)` in one
+    /// call or in arbitrary splits yields identical keys.
+    pub fn fill_chunk(self, n_total: usize, seed: u64, offset: u64, buf: &mut [u64]) {
+        for (j, slot) in buf.iter_mut().enumerate() {
+            *slot = self.key_at(n_total, seed, offset + j as u64);
+        }
     }
 }
 
@@ -193,6 +285,37 @@ pub fn gen_bytes100(d: Distribution, n: usize, seed: u64) -> Vec<Bytes100> {
         .into_iter()
         .map(Bytes100::from_u64)
         .collect()
+}
+
+/// Stream `n` encoded records of the chunked key stream
+/// ([`Distribution::fill_chunk`]) to `path`, never holding more than one
+/// small chunk in memory — the input generator for external-sort tests,
+/// benches, and the `gen-file` CLI. Record `i` is
+/// `T::from_key_index(key_at(i), i)`. Returns the bytes written.
+pub fn gen_file<T: crate::extsort::ExtRecord>(
+    path: &std::path::Path,
+    d: Distribution,
+    n: usize,
+    seed: u64,
+) -> std::io::Result<u64> {
+    use std::io::Write;
+    let mut dst = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let chunk = (1usize << 14).min(n.max(1));
+    let mut keys = vec![0u64; chunk];
+    let mut raw = vec![0u8; chunk * T::WIDTH];
+    let mut offset = 0usize;
+    while offset < n {
+        let take = chunk.min(n - offset);
+        d.fill_chunk(n, seed, offset as u64, &mut keys[..take]);
+        for (j, &k) in keys[..take].iter().enumerate() {
+            let rec = T::from_key_index(k, (offset + j) as u64);
+            rec.encode(&mut raw[j * T::WIDTH..(j + 1) * T::WIDTH]);
+        }
+        dst.write_all(&raw[..take * T::WIDTH])?;
+        offset += take;
+    }
+    dst.flush()?;
+    Ok((n * T::WIDTH) as u64)
 }
 
 #[cfg(test)]
@@ -332,5 +455,94 @@ mod tests {
         }
         assert_eq!(Distribution::from_name("uniform"), Some(Distribution::Uniform));
         assert_eq!(Distribution::from_name("nope"), None);
+    }
+
+    #[test]
+    fn fill_chunk_is_invariant_to_chunking() {
+        let n = 1_000;
+        for d in Distribution::ALL {
+            let mut whole = vec![0u64; n];
+            d.fill_chunk(n, 99, 0, &mut whole);
+
+            let mut pieced = vec![0u64; n];
+            let mut offset = 0usize;
+            for take in [1, 7, 255, 256, n] {
+                let take = take.min(n - offset);
+                d.fill_chunk(n, 99, offset as u64, &mut pieced[offset..offset + take]);
+                offset += take;
+                if offset == n {
+                    break;
+                }
+            }
+            assert_eq!(offset, n);
+            assert_eq!(whole, pieced, "{}", d.name());
+
+            let mut again = vec![0u64; n];
+            d.fill_chunk(n, 99, 0, &mut again);
+            assert_eq!(whole, again, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn fill_chunk_matches_keys_u64_for_index_pure_distributions() {
+        let n = 777;
+        for d in [
+            Distribution::Sorted,
+            Distribution::ReverseSorted,
+            Distribution::Ones,
+            Distribution::RootDup,
+            Distribution::TwoDup,
+            Distribution::EightDup,
+        ] {
+            let mut streamed = vec![0u64; n];
+            d.fill_chunk(n, 5, 0, &mut streamed);
+            assert_eq!(streamed, keys_u64(d, n, 5), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn streaming_almost_sorted_is_mostly_sorted() {
+        let n = 10_000;
+        let mut v = vec![0u64; n];
+        Distribution::AlmostSorted.fill_chunk(n, 3, 0, &mut v);
+        let inversions = v.windows(2).filter(|w| w[0] > w[1]).count();
+        assert!(inversions > 0, "should not be fully sorted");
+        assert!(inversions < 400, "too disturbed: {inversions}");
+    }
+
+    #[test]
+    fn streaming_sorted_runs_are_sorted_within_each_run() {
+        let n = 4_096;
+        let mut v = vec![0u64; n];
+        Distribution::SortedRuns.fill_chunk(n, 11, 0, &mut v);
+        for r in 0..16 {
+            let (lo, hi) = (r * n / 16, (r + 1) * n / 16);
+            assert!(
+                v[lo..hi].windows(2).all(|w| w[0] <= w[1]),
+                "run {r} not ascending"
+            );
+        }
+        let breaks = v.windows(2).filter(|w| w[0] > w[1]).count();
+        assert!(breaks >= 8, "expected distinct runs, got {breaks} breaks");
+    }
+
+    #[test]
+    fn gen_file_streams_from_key_index_records() {
+        use crate::extsort::ExtRecord;
+        let dir = std::env::temp_dir().join(format!("ips4o-datagen-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pairs.bin");
+        let n = 300;
+        let bytes = gen_file::<Pair>(&path, Distribution::TwoDup, n, 17).unwrap();
+        assert_eq!(bytes, (n * Pair::WIDTH) as u64);
+
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(raw.len(), n * Pair::WIDTH);
+        for i in 0..n {
+            let rec = Pair::decode(&raw[i * Pair::WIDTH..(i + 1) * Pair::WIDTH]);
+            let key = Distribution::TwoDup.key_at(n, 17, i as u64);
+            assert_eq!(rec, Pair::from_key_index(key, i as u64));
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,254 @@
+//! Fixed-width byte codec for file-backed records.
+//!
+//! The external tier stores elements as flat little-endian records of a
+//! fixed per-type width, so a file's record count is `len / WIDTH` and
+//! any record is addressable by offset arithmetic — no framing, no
+//! varints, no index blocks. Every [`RadixKey`] benchmark type
+//! implements [`ExtRecord`]; the trait also carries the
+//! key-stream-to-record mapping ([`ExtRecord::from_key_index`]) that
+//! [`crate::datagen::gen_file`] uses to synthesize file workloads from
+//! the same `u64` key distributions the in-memory generators draw from.
+
+use crate::radix::RadixKey;
+use crate::util::{Bytes100, Pair, Quartet};
+
+/// A sortable element with a fixed-width byte encoding, as stored in
+/// spill runs and external input/output files.
+///
+/// Implementations must be *order-faithful*: decoding is the exact
+/// inverse of encoding, so sorting decoded records and re-encoding them
+/// loses nothing. The codec is little-endian for the numeric types and
+/// raw bytes for [`Bytes100`].
+pub trait ExtRecord: RadixKey {
+    /// Encoded size in bytes; every record occupies exactly this many.
+    const WIDTH: usize;
+
+    /// Serialize into `out`, which is exactly [`Self::WIDTH`] bytes.
+    fn encode(&self, out: &mut [u8]);
+
+    /// Deserialize from `raw`, which is exactly [`Self::WIDTH`] bytes.
+    fn decode(raw: &[u8]) -> Self;
+
+    /// Build a record from a generator key and its stream index — how
+    /// file workloads are synthesized from the `u64` key streams of
+    /// [`crate::datagen`] (mirroring the in-memory typed generators:
+    /// payload fields carry the index).
+    fn from_key_index(key: u64, index: u64) -> Self;
+}
+
+#[inline(always)]
+fn load8(raw: &[u8], at: usize) -> [u8; 8] {
+    raw[at..at + 8].try_into().expect("8-byte field")
+}
+
+impl ExtRecord for u64 {
+    const WIDTH: usize = 8;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        u64::from_le_bytes(load8(raw, 0))
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        key
+    }
+}
+
+impl ExtRecord for i64 {
+    const WIDTH: usize = 8;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        i64::from_le_bytes(load8(raw, 0))
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        // Order-preserving: the sign-flip maps the unsigned key order
+        // onto the signed order, covering negative records too.
+        (key ^ (1u64 << 63)) as i64
+    }
+}
+
+impl ExtRecord for f64 {
+    const WIDTH: usize = 8;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_bits().to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        f64::from_bits(u64::from_le_bytes(load8(raw, 0)))
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        key as f64
+    }
+}
+
+impl ExtRecord for Pair {
+    const WIDTH: usize = 16;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.key.to_bits().to_le_bytes());
+        out[8..16].copy_from_slice(&self.value.to_bits().to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        Pair::new(
+            f64::from_bits(u64::from_le_bytes(load8(raw, 0))),
+            f64::from_bits(u64::from_le_bytes(load8(raw, 8))),
+        )
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, index: u64) -> Self {
+        Pair::new(key as f64, index as f64)
+    }
+}
+
+impl ExtRecord for Quartet {
+    const WIDTH: usize = 32;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.k0.to_bits().to_le_bytes());
+        out[8..16].copy_from_slice(&self.k1.to_bits().to_le_bytes());
+        out[16..24].copy_from_slice(&self.k2.to_bits().to_le_bytes());
+        out[24..32].copy_from_slice(&self.value.to_bits().to_le_bytes());
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        Quartet::new(
+            f64::from_bits(u64::from_le_bytes(load8(raw, 0))),
+            f64::from_bits(u64::from_le_bytes(load8(raw, 8))),
+            f64::from_bits(u64::from_le_bytes(load8(raw, 16))),
+            f64::from_bits(u64::from_le_bytes(load8(raw, 24))),
+        )
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, index: u64) -> Self {
+        // Same three-way key split as `datagen::gen_quartet`.
+        Quartet::new(
+            (key >> 42) as f64,
+            ((key >> 21) & 0x1F_FFFF) as f64,
+            (key & 0x1F_FFFF) as f64,
+            index as f64,
+        )
+    }
+}
+
+impl ExtRecord for Bytes100 {
+    const WIDTH: usize = 100;
+
+    #[inline(always)]
+    fn encode(&self, out: &mut [u8]) {
+        out[..10].copy_from_slice(&self.key);
+        out[10..100].copy_from_slice(&self.payload);
+    }
+
+    #[inline(always)]
+    fn decode(raw: &[u8]) -> Self {
+        let mut r = Bytes100::default();
+        r.key.copy_from_slice(&raw[..10]);
+        r.payload.copy_from_slice(&raw[10..100]);
+        r
+    }
+
+    #[inline(always)]
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        Bytes100::from_u64(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn round_trip<T: ExtRecord + PartialEq + std::fmt::Debug>(recs: &[T]) {
+        let mut raw = vec![0u8; T::WIDTH];
+        for r in recs {
+            r.encode(&mut raw);
+            assert_eq!(&T::decode(&raw), r);
+        }
+    }
+
+    #[test]
+    fn widths_match_struct_sizes() {
+        assert_eq!(<u64 as ExtRecord>::WIDTH, 8);
+        assert_eq!(<i64 as ExtRecord>::WIDTH, 8);
+        assert_eq!(<f64 as ExtRecord>::WIDTH, 8);
+        assert_eq!(<Pair as ExtRecord>::WIDTH, std::mem::size_of::<Pair>());
+        assert_eq!(<Quartet as ExtRecord>::WIDTH, std::mem::size_of::<Quartet>());
+        assert_eq!(<Bytes100 as ExtRecord>::WIDTH, std::mem::size_of::<Bytes100>());
+    }
+
+    #[test]
+    fn numeric_round_trips() {
+        let mut rng = Xoshiro256::new(0xC0DEC);
+        let us: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+        round_trip(&us);
+        let is: Vec<i64> = us.iter().map(|&u| u as i64).collect();
+        round_trip(&is);
+        let fs: Vec<f64> = us.iter().map(|&u| (u >> 12) as f64 * 0.5 - 1e9).collect();
+        round_trip(&fs);
+        round_trip(&[0u64, u64::MAX]);
+        round_trip(&[i64::MIN, -1, 0, i64::MAX]);
+        round_trip(&[-0.0f64, 0.0, f64::MIN, f64::MAX]);
+    }
+
+    #[test]
+    fn composite_round_trips() {
+        let mut rng = Xoshiro256::new(7);
+        for i in 0..64u64 {
+            let k = rng.next_u64();
+            round_trip(&[Pair::from_key_index(k, i)]);
+            round_trip(&[Quartet::from_key_index(k, i)]);
+            let b = Bytes100::from_key_index(k, i);
+            let mut raw = vec![0u8; 100];
+            b.encode(&mut raw);
+            let d = Bytes100::decode(&raw);
+            assert_eq!(d.key, b.key);
+            assert_eq!(d.payload, b.payload);
+        }
+    }
+
+    #[test]
+    fn from_key_index_preserves_key_order() {
+        // The record order under `radix_less` must refine the key order,
+        // so externally sorted files agree with the key stream's order.
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..200 {
+            let (a, b) = (rng.next_u64(), rng.next_u64());
+            if a == b {
+                continue;
+            }
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(<i64 as RadixKey>::radix_less(
+                &i64::from_key_index(lo, 0),
+                &i64::from_key_index(hi, 1)
+            ));
+            let (bl, bh) = (Bytes100::from_key_index(lo, 0), Bytes100::from_key_index(hi, 1));
+            assert!(Bytes100::less(&bl, &bh));
+        }
+    }
+}

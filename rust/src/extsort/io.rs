@@ -1,0 +1,439 @@
+//! Buffered record I/O for the external tier.
+//!
+//! Everything here is plain `std::fs`/`std::io`: chunked record
+//! readers, a batching record writer, per-run merge cursors, the
+//! blocking buffer shelf that backs the double-buffered reader thread,
+//! and the RAII spill-directory guard that makes "no spill files left
+//! behind" hold on success, error, and panic alike.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::codec::ExtRecord;
+use super::ExtSortError;
+use crate::radix::RadixKey;
+
+/// Fill `raw` from `src` as far as the stream allows (retrying short
+/// reads), returning the number of bytes obtained. Only a genuine end
+/// of stream stops short of `raw.len()`.
+fn read_full(src: &mut impl Read, raw: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0;
+    while got < raw.len() {
+        match src.read(&mut raw[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Read up to `raw.len() / T::WIDTH` records from `src` into `out`
+/// (replacing its contents), using `raw` as the decode staging area.
+/// Returns the number of records read; `Ok(0)` means end of stream. A
+/// trailing partial record is a [`ExtSortError::Truncated`] error.
+pub(crate) fn read_records<T: ExtRecord>(
+    src: &mut impl Read,
+    raw: &mut [u8],
+    out: &mut Vec<T>,
+) -> Result<usize, ExtSortError> {
+    out.clear();
+    let usable = raw.len() - raw.len() % T::WIDTH;
+    let got = read_full(src, &mut raw[..usable])?;
+    if got % T::WIDTH != 0 {
+        return Err(ExtSortError::Truncated {
+            width: T::WIDTH,
+            trailing: got % T::WIDTH,
+        });
+    }
+    let count = got / T::WIDTH;
+    debug_assert!(out.capacity() >= count, "decode buffer under-sized");
+    for i in 0..count {
+        out.push(T::decode(&raw[i * T::WIDTH..(i + 1) * T::WIDTH]));
+    }
+    Ok(count)
+}
+
+/// Batching record writer: encodes records through a borrowed staging
+/// buffer and hands the encoded bytes to the sink in staging-sized
+/// `write_all` calls. [`finish`](RecordWriter::finish) flushes and
+/// reports the exact byte count written.
+pub(crate) struct RecordWriter<'a, W: Write, T: ExtRecord> {
+    dst: W,
+    raw: &'a mut Vec<u8>,
+    batch_recs: usize,
+    bytes: u64,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<'a, W: Write, T: ExtRecord> RecordWriter<'a, W, T> {
+    /// Wrap `dst`, staging encodes in `raw` (its capacity sets the
+    /// batch size; at least one record per batch).
+    pub(crate) fn new(dst: W, raw: &'a mut Vec<u8>) -> Self {
+        let batch_recs = (raw.capacity() / T::WIDTH).max(1);
+        RecordWriter {
+            dst,
+            raw,
+            batch_recs,
+            bytes: 0,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Encode and write every record in `recs`.
+    pub(crate) fn write_all(&mut self, recs: &[T]) -> std::io::Result<()> {
+        for batch in recs.chunks(self.batch_recs) {
+            self.raw.resize(batch.len() * T::WIDTH, 0);
+            for (i, r) in batch.iter().enumerate() {
+                r.encode(&mut self.raw[i * T::WIDTH..(i + 1) * T::WIDTH]);
+            }
+            self.dst.write_all(self.raw)?;
+            self.bytes += self.raw.len() as u64;
+        }
+        Ok(())
+    }
+
+    /// Flush the sink and return it along with the bytes written.
+    pub(crate) fn finish(mut self) -> std::io::Result<(W, u64)> {
+        self.raw.clear();
+        self.dst.flush()?;
+        Ok((self.dst, self.bytes))
+    }
+}
+
+/// One sorted run spilled to disk: its path and exact record count.
+#[derive(Debug)]
+pub(crate) struct SpillRun {
+    pub(crate) path: PathBuf,
+    pub(crate) records: u64,
+}
+
+/// Streaming read cursor over one spill run during a k-way merge.
+///
+/// Owns a decoded block buffer (recycled from [`super::ExtScratch`])
+/// and refills it from the file on demand; the merge driver consumes
+/// sorted prefixes via [`take_through`](RunCursor::take_through).
+pub(crate) struct RunCursor<T> {
+    src: File,
+    /// Records still unread in the file (beyond the current buffer).
+    remaining: u64,
+    buf: Vec<T>,
+    pos: usize,
+    raw: Vec<u8>,
+}
+
+impl<T: ExtRecord> RunCursor<T> {
+    /// Open a cursor over `run`, adopting recycled block buffers.
+    pub(crate) fn open(run: &SpillRun, buf: Vec<T>, raw: Vec<u8>) -> Result<Self, ExtSortError> {
+        let src = File::open(&run.path)?;
+        let mut c = RunCursor {
+            src,
+            remaining: run.records,
+            buf,
+            pos: 0,
+            raw,
+        };
+        c.buf.clear();
+        Ok(c)
+    }
+
+    /// Records currently decoded and unconsumed.
+    pub(crate) fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether any records remain in the file beyond the buffer.
+    pub(crate) fn has_more_file(&self) -> bool {
+        self.remaining > 0
+    }
+
+    /// Whether the run is fully consumed (buffer and file).
+    pub(crate) fn exhausted(&self) -> bool {
+        self.buffered() == 0 && self.remaining == 0
+    }
+
+    /// Largest decoded record — an upper bound on nothing, but a lower
+    /// bound on every record still in the file (the run is sorted), so
+    /// the merge cutoff is the minimum of these across live cursors.
+    pub(crate) fn last_buffered(&self) -> Option<&T> {
+        if self.buffered() == 0 {
+            None
+        } else {
+            self.buf.last()
+        }
+    }
+
+    /// Refill the buffer from the file if it is empty and the file has
+    /// more records. A shorter-than-promised file (external tampering
+    /// or filesystem trouble) surfaces as [`ExtSortError::Truncated`]
+    /// or an I/O error, never as silent data loss.
+    pub(crate) fn refill(&mut self) -> Result<(), ExtSortError> {
+        if self.buffered() > 0 || self.remaining == 0 {
+            return Ok(());
+        }
+        let cap = (self.raw.len() / T::WIDTH).max(1);
+        let want = (self.remaining as usize).min(cap);
+        let count = read_records(&mut self.src, &mut self.raw[..want * T::WIDTH], &mut self.buf)?;
+        if count != want {
+            return Err(ExtSortError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "spill run shorter than its recorded length",
+            )));
+        }
+        self.pos = 0;
+        self.remaining -= want as u64;
+        Ok(())
+    }
+
+    /// Move every buffered record `<= cutoff` (under `radix_less`) into
+    /// `stage`. The buffer is sorted, so this is a prefix found by
+    /// binary search.
+    pub(crate) fn take_through(&mut self, cutoff: &T, stage: &mut Vec<T>) {
+        let take = self.buf[self.pos..].partition_point(|x| !T::radix_less(cutoff, x));
+        stage.extend_from_slice(&self.buf[self.pos..self.pos + take]);
+        self.pos += take;
+    }
+
+    /// Move every buffered record into `stage` (final drain, used once
+    /// no cursor has file data left).
+    pub(crate) fn take_all(&mut self, stage: &mut Vec<T>) {
+        stage.extend_from_slice(&self.buf[self.pos..]);
+        self.pos = self.buf.len();
+    }
+
+    /// Release the recycled buffers back to the scratch arena.
+    pub(crate) fn into_buffers(self) -> (Vec<T>, Vec<u8>) {
+        (self.buf, self.raw)
+    }
+}
+
+/// RAII guard for a per-job spill directory.
+///
+/// Creates a uniquely named subdirectory under the configured spill
+/// base and removes the whole tree on drop — which runs on normal
+/// completion, on early error returns, and during comparator-panic
+/// unwinds, giving the "no spill files survive the job" invariant a
+/// single enforcement point.
+pub(crate) struct SpillGuard {
+    dir: PathBuf,
+}
+
+impl SpillGuard {
+    /// Create a fresh spill directory under `base`.
+    pub(crate) fn new(base: &Path) -> std::io::Result<Self> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = base.join(format!("ips4o-ext-{}-{}", std::process::id(), seq));
+        fs::create_dir_all(&dir)?;
+        Ok(SpillGuard { dir })
+    }
+
+    /// The spill directory this guard owns.
+    pub(crate) fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path for the `id`-th spill run inside the directory.
+    pub(crate) fn run_path(&self, id: u64) -> PathBuf {
+        self.dir().join(format!("run-{id:06}.bin"))
+    }
+
+    /// Create the `id`-th spill run file, buffered for streaming writes.
+    pub(crate) fn create_run(&self, id: u64) -> std::io::Result<(PathBuf, BufWriter<File>)> {
+        let path = self.run_path(id);
+        let file = File::create(&path)?;
+        Ok((path, BufWriter::new(file)))
+    }
+}
+
+impl Drop for SpillGuard {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Blocking free-list of chunk buffers shared between the reader thread
+/// and the sorting thread.
+///
+/// This is deliberately *not* a channel: buffers parked here when
+/// either side exits are recovered by [`drain`](BufShelf::drain), so
+/// the arena's allocation accounting stays exact — a buffer stranded in
+/// a dropped channel would read as a phantom allocation on the next
+/// warm job. [`close`](BufShelf::close) wakes blocked getters so the
+/// reader thread never outlives the job.
+pub(crate) struct BufShelf<T> {
+    state: Mutex<ShelfState<T>>,
+    cond: Condvar,
+}
+
+struct ShelfState<T> {
+    bufs: Vec<Vec<T>>,
+    closed: bool,
+}
+
+impl<T> BufShelf<T> {
+    /// Build a shelf pre-stocked with `bufs`.
+    pub(crate) fn new(bufs: Vec<Vec<T>>) -> Self {
+        BufShelf {
+            state: Mutex::new(ShelfState {
+                bufs,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Return a buffer to the shelf, waking one waiting getter.
+    pub(crate) fn put(&self, buf: Vec<T>) {
+        let mut st = self.state.lock().unwrap();
+        st.bufs.push(buf);
+        drop(st);
+        self.cond.notify_one();
+    }
+
+    /// Block until a buffer is available; `None` once the shelf closes.
+    pub(crate) fn get(&self) -> Option<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(buf) = st.bufs.pop() {
+                return Some(buf);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Close the shelf: blocked and future getters receive `None`.
+    pub(crate) fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.cond.notify_all();
+    }
+
+    /// Recover every parked buffer (used after the reader joins).
+    pub(crate) fn drain(&self) -> Vec<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        std::mem::take(&mut st.bufs)
+    }
+}
+
+/// Closes a [`BufShelf`] on drop, releasing a reader thread blocked in
+/// [`BufShelf::get`] even when the sorting side unwinds from a panic.
+pub(crate) struct ShelfCloser<'a, T>(pub(crate) &'a BufShelf<T>);
+
+impl<T> Drop for ShelfCloser<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn encode_all(recs: &[u64]) -> Vec<u8> {
+        let mut raw = vec![0u8; recs.len() * 8];
+        for (i, r) in recs.iter().enumerate() {
+            r.encode(&mut raw[i * 8..(i + 1) * 8]);
+        }
+        raw
+    }
+
+    #[test]
+    fn read_records_round_trip_and_eof() {
+        let recs: Vec<u64> = (0..37).map(|i| i * 1_000_003).collect();
+        let raw_in = encode_all(&recs);
+        let mut src = Cursor::new(raw_in);
+        let mut staging = vec![0u8; 10 * 8];
+        let mut out: Vec<u64> = Vec::with_capacity(10);
+        let mut seen = Vec::new();
+        loop {
+            let n = read_records(&mut src, &mut staging, &mut out).unwrap();
+            if n == 0 {
+                break;
+            }
+            seen.extend_from_slice(&out);
+        }
+        assert_eq!(seen, recs);
+    }
+
+    #[test]
+    fn read_records_rejects_trailing_partial_record() {
+        let mut raw_in = encode_all(&[1u64, 2, 3]);
+        raw_in.extend_from_slice(&[0xAB; 5]);
+        let mut src = Cursor::new(raw_in);
+        let mut staging = vec![0u8; 16 * 8];
+        let mut out: Vec<u64> = Vec::with_capacity(16);
+        // First full-buffer read may succeed; the tail must error.
+        let err = loop {
+            match read_records(&mut src, &mut staging, &mut out) {
+                Ok(0) => panic!("truncation not detected"),
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        match err {
+            ExtSortError::Truncated { width, trailing } => {
+                assert_eq!(width, 8);
+                assert_eq!(trailing, 5);
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn record_writer_batches_and_counts_bytes() {
+        let recs: Vec<u64> = (0..100).map(|i| i ^ 0x5555).collect();
+        let mut staging = Vec::with_capacity(7 * 8);
+        let mut sink = Vec::new();
+        let mut w = RecordWriter::<_, u64>::new(&mut sink, &mut staging);
+        w.write_all(&recs).unwrap();
+        let (_, bytes) = w.finish().unwrap();
+        assert_eq!(bytes, 800);
+        assert_eq!(sink, encode_all(&recs));
+    }
+
+    #[test]
+    fn spill_guard_removes_directory_on_drop() {
+        let base = std::env::temp_dir();
+        let dir;
+        {
+            let guard = SpillGuard::new(&base).unwrap();
+            dir = guard.dir().to_path_buf();
+            let (_, mut w) = guard.create_run(0).unwrap();
+            w.write_all(&[1, 2, 3]).unwrap();
+            w.flush().unwrap();
+            assert!(dir.is_dir());
+        }
+        assert!(!dir.exists(), "spill dir must vanish with its guard");
+    }
+
+    #[test]
+    fn buf_shelf_put_get_close_drain() {
+        let shelf: BufShelf<u64> = BufShelf::new(vec![Vec::with_capacity(4)]);
+        let a = shelf.get().unwrap();
+        assert_eq!(a.capacity(), 4);
+        shelf.put(a);
+        shelf.close();
+        assert!(shelf.get().is_none());
+        assert_eq!(shelf.drain().len(), 1);
+    }
+
+    #[test]
+    fn buf_shelf_releases_blocked_getter_on_close() {
+        let shelf: std::sync::Arc<BufShelf<u64>> = std::sync::Arc::new(BufShelf::new(Vec::new()));
+        let other = std::sync::Arc::clone(&shelf);
+        let waiter = std::thread::spawn(move || other.get().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        shelf.close();
+        assert!(waiter.join().unwrap());
+    }
+}

@@ -1,0 +1,159 @@
+//! Phase 2: cascading k-way merge of spill runs.
+//!
+//! The driver opens up to `fan_in` [`RunCursor`]s, repeatedly stages a
+//! *window* of records that is guaranteed complete — every record
+//! `<= cutoff`, where the cutoff is the smallest last-buffered record
+//! among cursors that still have file data — and hands the window to
+//! the in-memory branchless engine ([`crate::merge`]), whose run
+//! detection rediscovers the per-cursor sorted blocks and merges them
+//! through the staged ≤4-way kernels. Windowing keeps the working set
+//! at `fan_in × block_elems` records no matter how large the runs are,
+//! and the cutoff rule guarantees progress: at least one cursor drains
+//! its whole buffer every round. When more than `fan_in` runs exist,
+//! groups are merged into intermediate spill runs until one pass can
+//! finish to the output sink.
+
+use std::io::Write;
+use std::sync::atomic::Ordering;
+
+use super::codec::ExtRecord;
+use super::io::{RecordWriter, RunCursor, SpillGuard, SpillRun};
+use super::{ExtScratch, ExtSortError, ExtSortReport};
+use crate::merge::{merge_sort_runs, merge_sort_runs_par};
+use crate::metrics::ScratchCounters;
+use crate::parallel::ThreadPool;
+use crate::radix::RadixKey;
+
+/// Merge `runs` down to a single sorted stream written to `output`,
+/// cascading through intermediate spill runs while more than `fan_in`
+/// remain. Source run files are deleted as soon as their group merge
+/// completes, bounding peak spill usage.
+pub(crate) fn merge_runs<T, W>(
+    mut runs: Vec<SpillRun>,
+    output: &mut W,
+    spill: &SpillGuard,
+    scratch: &mut ExtScratch<T>,
+    pool: Option<&ThreadPool>,
+    counters: &ScratchCounters,
+    report: &mut ExtSortReport,
+) -> Result<(), ExtSortError>
+where
+    T: ExtRecord,
+    W: Write,
+{
+    let fan_in = scratch.fan_in;
+    let mut next_id = runs.len() as u64;
+    while runs.len() > fan_in {
+        let group: Vec<SpillRun> = runs.drain(..fan_in).collect();
+        let (path, mut dst) = spill.create_run(next_id)?;
+        next_id += 1;
+        let records = merge_group(group, &mut dst, scratch, pool, counters, report)?;
+        counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
+        counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
+        report.runs_written += 1;
+        report.merge_passes += 1;
+        runs.push(SpillRun { path, records });
+    }
+    if !runs.is_empty() {
+        merge_group(runs, &mut *output, scratch, pool, counters, report)?;
+        counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
+        report.merge_passes += 1;
+    }
+    output.flush()?;
+    Ok(())
+}
+
+/// Merge one group of runs (`group.len() <= fan_in`) into `dst`,
+/// deleting the source files on success. Returns the records written.
+fn merge_group<T, W>(
+    group: Vec<SpillRun>,
+    dst: W,
+    scratch: &mut ExtScratch<T>,
+    pool: Option<&ThreadPool>,
+    counters: &ScratchCounters,
+    report: &mut ExtSortReport,
+) -> Result<u64, ExtSortError>
+where
+    T: ExtRecord,
+    W: Write,
+{
+    debug_assert!(group.len() <= scratch.fan_in);
+    let in_records: u64 = group.iter().map(|r| r.records).sum();
+    let mut cursors: Vec<RunCursor<T>> = Vec::with_capacity(group.len());
+    for (slot, run) in group.iter().enumerate() {
+        let buf = std::mem::take(&mut scratch.cursor_bufs[slot]);
+        let raw = std::mem::take(&mut scratch.cursor_raw[slot]);
+        cursors.push(RunCursor::open(run, buf, raw)?);
+    }
+
+    let mut writer = RecordWriter::<_, T>::new(dst, &mut scratch.write_raw);
+    let mut written = 0u64;
+    loop {
+        for c in cursors.iter_mut() {
+            c.refill()?;
+        }
+        if cursors.iter().all(|c| c.exhausted()) {
+            break;
+        }
+        // Smallest last-buffered record among cursors with file data
+        // left: nothing still on disk can sort below it, so every
+        // buffered record <= cutoff is globally placeable this round.
+        let mut cutoff: Option<T> = None;
+        for c in cursors.iter().filter(|c| c.has_more_file()) {
+            let last = *c.last_buffered().expect("refilled cursor with file data");
+            if cutoff.map_or(true, |cur| T::radix_less(&last, &cur)) {
+                cutoff = Some(last);
+            }
+        }
+        scratch.stage.clear();
+        match cutoff {
+            Some(cut) => {
+                for c in cursors.iter_mut() {
+                    c.take_through(&cut, &mut scratch.stage);
+                }
+            }
+            None => {
+                for c in cursors.iter_mut() {
+                    c.take_all(&mut scratch.stage);
+                }
+            }
+        }
+        debug_assert!(!scratch.stage.is_empty(), "merge window made no progress");
+        match pool {
+            Some(p) => merge_sort_runs_par(
+                &mut scratch.stage,
+                p,
+                &mut scratch.merge,
+                &T::radix_less,
+                Some(counters),
+            ),
+            None => merge_sort_runs(
+                &mut scratch.stage,
+                &mut scratch.merge,
+                &T::radix_less,
+                Some(counters),
+            ),
+        }
+        writer.write_all(&scratch.stage)?;
+        written += scratch.stage.len() as u64;
+    }
+    let (_, bytes) = writer.finish()?;
+    debug_assert_eq!(written, in_records, "merge lost or invented records");
+
+    for (slot, cursor) in cursors.into_iter().enumerate() {
+        let (buf, raw) = cursor.into_buffers();
+        scratch.cursor_bufs[slot] = buf;
+        scratch.cursor_raw[slot] = raw;
+    }
+    for run in &group {
+        let _ = std::fs::remove_file(&run.path);
+    }
+
+    counters
+        .ext_bytes_read
+        .fetch_add(in_records * T::WIDTH as u64, Ordering::Relaxed);
+    counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    report.bytes_read += in_records * T::WIDTH as u64;
+    report.bytes_written += bytes;
+    Ok(written)
+}

@@ -1,0 +1,620 @@
+//! Out-of-core sorting tier: file-backed run generation + k-way
+//! external merge.
+//!
+//! The external tier sorts datasets that do not fit in memory in two
+//! phases, both built on the in-memory machinery:
+//!
+//! 1. **Run generation** — the input stream is read in fixed-size
+//!    chunks through a double-buffered reader thread (decode of chunk
+//!    `i+1` overlaps sort+spill of chunk `i`), each chunk is sorted
+//!    with the caller-supplied planner-routed in-memory path, and the
+//!    sorted chunk is spilled as one run file.
+//! 2. **K-way merge** — up to `fan_in` runs are streamed through
+//!    per-run block buffers and merged window-by-window on the
+//!    branchless engine ([`crate::merge`]); when more runs exist,
+//!    cascading passes write intermediate spill runs until one final
+//!    pass can stream to the output ([`merge_runs`](self)).
+//!
+//! All scratch (chunk buffers, decode/encode staging, merge stage,
+//! per-cursor blocks) lives in one [`ExtScratch`] arena recycled
+//! through [`ArenaPool`], so repeated warm jobs add zero scratch
+//! allocations. Spill files live in a per-job directory owned by an
+//! RAII guard and are removed on success, error, and panic alike.
+//! Records cross the file boundary through the fixed-width
+//! [`ExtRecord`] codec; ordering is the element's `radix_less`, and
+//! like the in-memory radix path the external tier is not stable.
+
+mod codec;
+mod io;
+mod merge;
+
+pub use codec::ExtRecord;
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::arena::ArenaPool;
+use crate::config::Config;
+use crate::merge::MergeScratch;
+use crate::metrics::ScratchCounters;
+use crate::parallel::ThreadPool;
+
+use io::{BufShelf, RecordWriter, ShelfCloser, SpillGuard, SpillRun};
+
+/// Failure modes of an external sort job. Comparator panics are *not*
+/// represented here — they unwind (and are contained by the service's
+/// `catch_unwind`, like in-memory jobs); this type covers the failures
+/// a file-backed job can hit that slice jobs cannot.
+#[derive(Debug)]
+pub enum ExtSortError {
+    /// An underlying I/O operation failed (open, read, write, create).
+    Io(std::io::Error),
+    /// A stream ended mid-record: its length is not a multiple of the
+    /// element's codec width.
+    Truncated {
+        /// Codec width of the element type being decoded.
+        width: usize,
+        /// Dangling byte count (`stream_len % width`, nonzero).
+        trailing: usize,
+    },
+}
+
+impl std::fmt::Display for ExtSortError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExtSortError::Io(e) => write!(f, "external sort I/O error: {e}"),
+            ExtSortError::Truncated { width, trailing } => write!(
+                f,
+                "truncated record stream: {trailing} trailing bytes \
+                 (record width {width})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ExtSortError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExtSortError::Io(e) => Some(e),
+            ExtSortError::Truncated { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ExtSortError {
+    fn from(e: std::io::Error) -> Self {
+        ExtSortError::Io(e)
+    }
+}
+
+/// Per-job tally of what the external tier did, returned by
+/// [`crate::Sorter::sort_file`] and the service's file-job tickets.
+/// The same quantities accumulate globally in [`ScratchCounters`]
+/// (`ext_*` fields).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExtSortReport {
+    /// Records sorted end to end.
+    pub elements: u64,
+    /// Spill runs written (initial runs + cascade intermediates).
+    pub runs_written: u64,
+    /// K-way merge passes executed (cascade + final).
+    pub merge_passes: u64,
+    /// Bytes read (input chunks + every spill-run pass).
+    pub bytes_read: u64,
+    /// Bytes written (spill runs + final output).
+    pub bytes_written: u64,
+    /// Wall-clock nanoseconds spent in run generation.
+    pub run_gen_nanos: u64,
+    /// Wall-clock nanoseconds spent in the merge phase.
+    pub merge_nanos: u64,
+}
+
+/// All recyclable memory for one external sort job: chunk buffers and
+/// decode staging for run generation, encode staging for every writer,
+/// and the stage + engine scratch + per-cursor blocks for the merge.
+/// Checked out of the [`ArenaPool`] per job and checked back in on
+/// success, so warm repeated jobs allocate nothing.
+pub(crate) struct ExtScratch<T> {
+    /// Records per input chunk (`chunk_bytes / WIDTH`, min 1).
+    pub(crate) chunk_elems: usize,
+    /// Records per stream block (`buffer_bytes / WIDTH`, min 1).
+    pub(crate) block_elems: usize,
+    /// Maximum runs merged per pass (min 2).
+    pub(crate) fan_in: usize,
+    /// Two decoded chunk buffers cycling between reader and sorter.
+    pub(crate) chunk_bufs: Vec<Vec<T>>,
+    /// Raw staging for decoding one full chunk.
+    pub(crate) chunk_raw: Vec<u8>,
+    /// Raw staging for encoding one block of writes.
+    pub(crate) write_raw: Vec<u8>,
+    /// Merge window assembly area (`fan_in * block_elems` capacity).
+    pub(crate) stage: Vec<T>,
+    /// In-memory engine scratch sized for a full merge window.
+    pub(crate) merge: MergeScratch<T>,
+    /// Per-cursor decoded block buffers.
+    pub(crate) cursor_bufs: Vec<Vec<T>>,
+    /// Per-cursor raw read staging.
+    pub(crate) cursor_raw: Vec<Vec<u8>>,
+}
+
+impl<T: ExtRecord> ExtScratch<T> {
+    fn geometry(cfg: &Config) -> (usize, usize, usize) {
+        let chunk_elems = (cfg.extsort.chunk_bytes / T::WIDTH).max(1);
+        let block_elems = (cfg.extsort.buffer_bytes / T::WIDTH).max(1);
+        let fan_in = cfg.extsort.fan_in.max(2);
+        (chunk_elems, block_elems, fan_in)
+    }
+
+    /// Build scratch sized for `cfg`'s external-sort geometry.
+    pub(crate) fn new(cfg: &Config) -> Self {
+        let (chunk_elems, block_elems, fan_in) = Self::geometry(cfg);
+        ExtScratch {
+            chunk_elems,
+            block_elems,
+            fan_in,
+            chunk_bufs: (0..2).map(|_| Vec::with_capacity(chunk_elems)).collect(),
+            chunk_raw: vec![0u8; chunk_elems * T::WIDTH],
+            write_raw: Vec::with_capacity(block_elems * T::WIDTH),
+            stage: Vec::with_capacity(fan_in * block_elems),
+            merge: MergeScratch::with_capacity_for(fan_in * block_elems),
+            cursor_bufs: (0..fan_in).map(|_| Vec::with_capacity(block_elems)).collect(),
+            cursor_raw: (0..fan_in).map(|_| vec![0u8; block_elems * T::WIDTH]).collect(),
+        }
+    }
+
+    /// Whether a recycled instance still matches `cfg`'s geometry and
+    /// holds its full complement of buffers.
+    pub(crate) fn compatible_with(&self, cfg: &Config) -> bool {
+        let (chunk_elems, block_elems, fan_in) = Self::geometry(cfg);
+        self.chunk_elems == chunk_elems
+            && self.block_elems == block_elems
+            && self.fan_in == fan_in
+            && self.chunk_bufs.len() == 2
+            && self.cursor_bufs.len() == fan_in
+            && self.cursor_raw.len() == fan_in
+    }
+}
+
+enum ChunkMsg<T> {
+    /// A decoded, unsorted chunk ready to sort and spill.
+    Chunk(Vec<T>),
+    /// Clean end of the input stream.
+    Eof,
+    /// The reader hit an I/O or truncation failure.
+    Fail(ExtSortError),
+}
+
+/// Sort the record stream `input` into `output`.
+///
+/// `sort_chunk` supplies the in-memory sort for each chunk — the
+/// [`crate::Sorter`] passes its planner-routed `sort_keys` so chunks
+/// get the same backend selection as in-memory jobs. Scratch is
+/// checked out of `arenas` and returned on success; on error it is
+/// dropped (cold rebuild on the next job) so no partially-recycled
+/// state survives.
+pub(crate) fn sort_stream<T, R, W, F>(
+    mut input: R,
+    mut output: W,
+    cfg: &Config,
+    pool: Option<&ThreadPool>,
+    arenas: &ArenaPool,
+    sort_chunk: F,
+) -> Result<ExtSortReport, ExtSortError>
+where
+    T: ExtRecord,
+    R: Read + Send,
+    W: Write,
+    F: Fn(&mut [T]),
+{
+    let counters = std::sync::Arc::clone(arenas.counters());
+    let mut scratch = arenas.checkout(|| ExtScratch::<T>::new(cfg));
+    assert!(
+        scratch.compatible_with(cfg),
+        "recycled arena geometry mismatch"
+    );
+    let spill_base = cfg
+        .extsort
+        .spill_dir
+        .clone()
+        .unwrap_or_else(std::env::temp_dir);
+    let mut report = ExtSortReport::default();
+
+    let result = (|| -> Result<(), ExtSortError> {
+        // The guard lives exactly as long as the job body: dropped (and
+        // the directory removed) on success, error, and panic unwind.
+        let spill = SpillGuard::new(&spill_base)?;
+        let t0 = Instant::now();
+        let runs = generate_runs(
+            &mut input,
+            &spill,
+            &mut scratch,
+            &sort_chunk,
+            &counters,
+            &mut report,
+        )?;
+        report.run_gen_nanos = t0.elapsed().as_nanos() as u64;
+
+        let t1 = Instant::now();
+        merge::merge_runs(
+            runs,
+            &mut output,
+            &spill,
+            &mut scratch,
+            pool,
+            &counters,
+            &mut report,
+        )?;
+        report.merge_nanos = t1.elapsed().as_nanos() as u64;
+        Ok(())
+    })();
+
+    match result {
+        Ok(()) => {
+            arenas.checkin(scratch);
+            Ok(report)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Open `input` and `output` as files and sort between them. The
+/// output file is created (truncated if present).
+pub(crate) fn sort_file<T, F>(
+    input: &Path,
+    output: &Path,
+    cfg: &Config,
+    pool: Option<&ThreadPool>,
+    arenas: &ArenaPool,
+    sort_chunk: F,
+) -> Result<ExtSortReport, ExtSortError>
+where
+    T: ExtRecord,
+    F: Fn(&mut [T]),
+{
+    let src = std::fs::File::open(input)?;
+    let dst = std::fs::File::create(output)?;
+    sort_stream::<T, _, _, _>(src, dst, cfg, pool, arenas, sort_chunk)
+}
+
+/// Phase 1: chunk the input, sort each chunk, spill sorted runs.
+///
+/// One scoped reader thread decodes chunk `i+1` while the caller's
+/// thread sorts and spills chunk `i`. Buffers circulate through a
+/// [`BufShelf`] free-list rather than a return channel so that every
+/// buffer is recovered deterministically after the reader joins — the
+/// arena's allocation accounting stays exact on every exit path.
+fn generate_runs<T, R, F>(
+    input: &mut R,
+    spill: &SpillGuard,
+    scratch: &mut ExtScratch<T>,
+    sort_chunk: &F,
+    counters: &ScratchCounters,
+    report: &mut ExtSortReport,
+) -> Result<Vec<SpillRun>, ExtSortError>
+where
+    T: ExtRecord,
+    R: Read + Send,
+    F: Fn(&mut [T]),
+{
+    let mut runs: Vec<SpillRun> = Vec::new();
+    let shelf = BufShelf::new(std::mem::take(&mut scratch.chunk_bufs));
+    let chunk_raw = &mut scratch.chunk_raw;
+    let write_raw = &mut scratch.write_raw;
+    let (full_tx, full_rx) = mpsc::sync_channel::<ChunkMsg<T>>(1);
+
+    let result = std::thread::scope(|s| {
+        let reader = s.spawn({
+            let shelf = &shelf;
+            move || loop {
+                let mut buf = match shelf.get() {
+                    Some(b) => b,
+                    // Shelf closed: the sorting side is done (or
+                    // unwinding); exit without blocking.
+                    None => return,
+                };
+                match io::read_records(input, chunk_raw, &mut buf) {
+                    Ok(0) => {
+                        shelf.put(buf);
+                        let _ = full_tx.send(ChunkMsg::Eof);
+                        return;
+                    }
+                    Ok(_) => {
+                        if let Err(lost) = full_tx.send(ChunkMsg::Chunk(buf)) {
+                            // Receiver gone mid-send: recover the
+                            // buffer so the shelf count stays exact.
+                            if let ChunkMsg::Chunk(b) = lost.0 {
+                                shelf.put(b);
+                            }
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        shelf.put(buf);
+                        let _ = full_tx.send(ChunkMsg::Fail(e));
+                        return;
+                    }
+                }
+            }
+        });
+
+        // Wakes a reader blocked in `get` even if `sort_chunk` panics
+        // below — otherwise the scope's implicit join would deadlock.
+        let closer = ShelfCloser(&shelf);
+        let worked: Result<(), ExtSortError> = loop {
+            match full_rx.recv() {
+                Ok(ChunkMsg::Chunk(mut buf)) => {
+                    let spilled = spill_chunk(
+                        &mut buf,
+                        spill,
+                        runs.len() as u64,
+                        write_raw,
+                        sort_chunk,
+                        counters,
+                        report,
+                    );
+                    shelf.put(buf);
+                    match spilled {
+                        Ok(run) => runs.push(run),
+                        Err(e) => break Err(e),
+                    }
+                }
+                Ok(ChunkMsg::Eof) => break Ok(()),
+                Ok(ChunkMsg::Fail(e)) => break Err(e),
+                // Sender dropped without an Eof: the reader panicked;
+                // the join below re-raises it.
+                Err(_) => break Ok(()),
+            }
+        };
+        drop(closer);
+        if let Err(panic) = reader.join() {
+            std::panic::resume_unwind(panic);
+        }
+        worked
+    });
+
+    // Recover a chunk parked in the channel on early-error paths, then
+    // restock the scratch so its geometry survives for the next job.
+    for msg in full_rx.try_iter() {
+        if let ChunkMsg::Chunk(b) = msg {
+            shelf.put(b);
+        }
+    }
+    scratch.chunk_bufs = shelf.drain();
+    result.map(|()| runs)
+}
+
+/// Sort one decoded chunk and spill it as run `id`.
+fn spill_chunk<T, F>(
+    buf: &mut Vec<T>,
+    spill: &SpillGuard,
+    id: u64,
+    write_raw: &mut Vec<u8>,
+    sort_chunk: &F,
+    counters: &ScratchCounters,
+    report: &mut ExtSortReport,
+) -> Result<SpillRun, ExtSortError>
+where
+    T: ExtRecord,
+    F: Fn(&mut [T]),
+{
+    let records = buf.len() as u64;
+    let bytes_in = records * T::WIDTH as u64;
+    counters.ext_bytes_read.fetch_add(bytes_in, Ordering::Relaxed);
+    report.bytes_read += bytes_in;
+    report.elements += records;
+
+    sort_chunk(&mut buf[..]);
+
+    let (path, dst) = spill.create_run(id)?;
+    let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
+    writer.write_all(buf)?;
+    let (_, bytes) = writer.finish()?;
+    counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
+    counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    report.runs_written += 1;
+    report.bytes_written += bytes;
+    Ok(SpillRun { path, records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExtSortConfig;
+    use crate::radix::RadixKey;
+    use crate::util::{Pair, SplitMix64};
+    use std::io::Cursor;
+
+    fn ext_cfg(chunk_bytes: usize, fan_in: usize, buffer_bytes: usize) -> Config {
+        Config::default().with_extsort(
+            ExtSortConfig::default()
+                .with_chunk_bytes(chunk_bytes)
+                .with_fan_in(fan_in)
+                .with_buffer_bytes(buffer_bytes),
+        )
+    }
+
+    fn encode_u64s(keys: &[u64]) -> Vec<u8> {
+        let mut raw = vec![0u8; keys.len() * 8];
+        for (i, k) in keys.iter().enumerate() {
+            k.encode(&mut raw[i * 8..(i + 1) * 8]);
+        }
+        raw
+    }
+
+    fn decode_u64s(raw: &[u8]) -> Vec<u64> {
+        assert_eq!(raw.len() % 8, 0);
+        raw.chunks_exact(8).map(u64::decode).collect()
+    }
+
+    fn run_job(cfg: &Config, keys: &[u64]) -> (Vec<u64>, ExtSortReport) {
+        let arenas = ArenaPool::new();
+        let mut out = Vec::new();
+        let report = sort_stream::<u64, _, _, _>(
+            Cursor::new(encode_u64s(keys)),
+            &mut out,
+            cfg,
+            None,
+            &arenas,
+            |v| v.sort_unstable(),
+        )
+        .expect("sort_stream");
+        (decode_u64s(&out), report)
+    }
+
+    fn scrambled(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_u64() % 10_000).collect()
+    }
+
+    #[test]
+    fn round_trip_small_and_boundary_sizes() {
+        // chunk_elems = 16 for u64.
+        let cfg = ext_cfg(16 * 8, 2, 4 * 8);
+        for n in [0usize, 1, 15, 16, 17, 64, 257] {
+            let keys = scrambled(n, 0xE27 + n as u64);
+            let mut want = keys.clone();
+            want.sort_unstable();
+            let (got, report) = run_job(&cfg, &keys);
+            assert_eq!(got, want, "n={n}");
+            assert_eq!(report.elements, n as u64);
+            let expect_runs = ((n + 15) / 16) as u64;
+            assert!(report.runs_written >= expect_runs, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cascade_merges_when_runs_exceed_fan_in() {
+        // 8 runs of 8 elements, fan-in 2: several cascade levels.
+        let cfg = ext_cfg(8 * 8, 2, 4 * 8);
+        let keys = scrambled(64, 0xCA5);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        let (got, report) = run_job(&cfg, &keys);
+        assert_eq!(got, want);
+        assert_eq!(report.elements, 64);
+        // Initial runs plus at least one cascade intermediate.
+        assert!(report.runs_written > 8, "runs={}", report.runs_written);
+        assert!(report.merge_passes > 1, "passes={}", report.merge_passes);
+        // Every byte of every pass is accounted.
+        assert!(report.bytes_read > 64 * 8);
+        assert!(report.bytes_written > 64 * 8);
+    }
+
+    #[test]
+    fn empty_input_writes_empty_output_without_passes() {
+        let cfg = ext_cfg(16 * 8, 4, 4 * 8);
+        let (got, report) = run_job(&cfg, &[]);
+        assert!(got.is_empty());
+        assert_eq!(report.elements, 0);
+        assert_eq!(report.runs_written, 0);
+        assert_eq!(report.merge_passes, 0);
+        assert_eq!(report.bytes_read, 0);
+        assert_eq!(report.bytes_written, 0);
+    }
+
+    #[test]
+    fn warm_jobs_reuse_scratch_without_new_allocations() {
+        let cfg = ext_cfg(32 * 8, 3, 8 * 8);
+        let arenas = ArenaPool::new();
+        let keys = scrambled(500, 0x9A9);
+        let job = |arenas: &ArenaPool| -> ExtSortReport {
+            let mut out = Vec::new();
+            sort_stream::<u64, _, _, _>(
+                Cursor::new(encode_u64s(&keys)),
+                &mut out,
+                &cfg,
+                None,
+                arenas,
+                |v| v.sort_unstable(),
+            )
+            .expect("sort_stream")
+        };
+        let cold = job(&arenas);
+        let before = arenas.counters().snapshot();
+        for _ in 0..3 {
+            let warm = job(&arenas);
+            assert_eq!(warm.runs_written, cold.runs_written);
+            assert_eq!(warm.merge_passes, cold.merge_passes);
+        }
+        let delta = arenas.counters().snapshot().delta(&before);
+        assert_eq!(delta.scratch_allocations, 0, "warm jobs must not allocate");
+        assert_eq!(delta.scratch_reuses, 3);
+        // Global counters advance in lockstep with the per-job reports.
+        assert_eq!(delta.ext_runs_written, 3 * cold.runs_written);
+        assert_eq!(delta.ext_merge_passes, 3 * cold.merge_passes);
+        assert_eq!(delta.ext_bytes_read, 3 * cold.bytes_read);
+        assert_eq!(delta.ext_bytes_written, 3 * cold.bytes_written);
+    }
+
+    #[test]
+    fn truncated_input_surfaces_as_error_not_panic() {
+        let cfg = ext_cfg(16 * 8, 2, 4 * 8);
+        let arenas = ArenaPool::new();
+        let mut raw = encode_u64s(&scrambled(20, 1));
+        raw.truncate(raw.len() - 3);
+        let mut out = Vec::new();
+        let err = sort_stream::<u64, _, _, _>(
+            Cursor::new(raw),
+            &mut out,
+            &cfg,
+            None,
+            &arenas,
+            |v| v.sort_unstable(),
+        )
+        .expect_err("truncated input must fail");
+        match err {
+            ExtSortError::Truncated { width: 8, trailing: 5 } => {}
+            other => panic!("unexpected error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pair_records_keep_payloads_with_keys() {
+        let cfg = ext_cfg(8 * 16, 2, 4 * 16);
+        let arenas = ArenaPool::new();
+        let n = 100u64;
+        let mut raw = vec![0u8; n as usize * 16];
+        let mut rng = SplitMix64::new(42);
+        for i in 0..n {
+            let rec = Pair::from_key_index(rng.next_u64() % 1000, i);
+            rec.encode(&mut raw[i as usize * 16..(i as usize + 1) * 16]);
+        }
+        let mut out = Vec::new();
+        sort_stream::<Pair, _, _, _>(
+            Cursor::new(raw.clone()),
+            &mut out,
+            &cfg,
+            None,
+            &arenas,
+            |v| v.sort_unstable_by(|a, b| a.key.partial_cmp(&b.key).unwrap()),
+        )
+        .expect("sort_stream");
+        let mut input: Vec<Pair> = raw.chunks_exact(16).map(Pair::decode).collect();
+        let got: Vec<Pair> = out.chunks_exact(16).map(Pair::decode).collect();
+        assert_eq!(got.len(), input.len());
+        for w in got.windows(2) {
+            assert!(!RadixKey::radix_less(&w[1], &w[0]), "output out of order");
+        }
+        // Payload multiset preserved: same (key, value) pairs survive.
+        let mut got_sorted = got.clone();
+        got_sorted.sort_by(|a, b| {
+            a.key
+                .partial_cmp(&b.key)
+                .unwrap()
+                .then(a.value.partial_cmp(&b.value).unwrap())
+        });
+        input.sort_by(|a, b| {
+            a.key
+                .partial_cmp(&b.key)
+                .unwrap()
+                .then(a.value.partial_cmp(&b.value).unwrap())
+        });
+        for (g, i) in got_sorted.iter().zip(input.iter()) {
+            assert_eq!(g.key.to_bits(), i.key.to_bits());
+            assert_eq!(g.value.to_bits(), i.value.to_bits());
+        }
+    }
+}

@@ -118,6 +118,7 @@ pub mod classifier;
 pub mod cleanup;
 pub mod config;
 pub mod datagen;
+pub mod extsort;
 pub mod local_classification;
 pub mod merge;
 pub mod metrics;
@@ -138,13 +139,14 @@ pub mod util;
 pub mod bench_harness;
 pub mod runtime;
 
-pub use config::Config;
+pub use config::{Config, ExtSortConfig};
+pub use extsort::{ExtRecord, ExtSortError, ExtSortReport};
 pub use planner::{
     Backend, CalibrationOptions, CalibrationProfile, PlannerMode, ProfileError, SortPlan,
 };
 pub use radix::RadixKey;
 pub use scheduler::SchedulerMode;
-pub use service::{JobTicket, SortService};
+pub use service::{FileJobTicket, JobTicket, SortService};
 pub use sorter::Sorter;
 
 /// Sort `v` in place, sequentially (IS⁴o), using the element's natural order.

@@ -1,6 +1,6 @@
-//! `ips4o` CLI launcher — sorting driver, workload generator, planner
-//! calibration, self-test, and experiment runner. Hand-rolled argument
-//! parsing (clap is unavailable offline).
+//! `ips4o` CLI launcher — sorting driver, out-of-core file sorter,
+//! workload generator, planner calibration, self-test, and experiment
+//! runner. Hand-rolled argument parsing (clap is unavailable offline).
 
 use std::path::Path;
 use std::time::Instant;
@@ -8,12 +8,14 @@ use std::time::Instant;
 use ips4o::baselines::Algo;
 use ips4o::datagen::{self, Distribution};
 use ips4o::planner::{run_calibration_with, CalibrationOptions, CalibrationProfile};
-use ips4o::{Backend, Config, PlannerMode, SchedulerMode, Sorter};
+use ips4o::{Backend, Config, ExtSortConfig, PlannerMode, SchedulerMode, Sorter};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("sort") => cmd_sort(&args[1..]),
+        Some("sort-file") => cmd_sort_file(&args[1..]),
+        Some("gen-file") => cmd_gen_file(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("selftest") => cmd_selftest(&args[1..]),
@@ -41,6 +43,8 @@ USAGE:
 
 COMMANDS:
     sort       generate a workload, sort it, verify, report throughput
+    sort-file  out-of-core sort: record file -> record file, bounded RAM
+    gen-file   stream a deterministic record file for sort-file
     serve      run the batched SortService under a synthetic request mix
     calibrate  micro-trial every backend and write a calibration profile
     selftest   run all algorithms over all distributions and verify
@@ -71,7 +75,24 @@ FLAGS (sort):
     --calibration <path>  route auto-planned jobs via a measured profile
                           (also read from $IPS4O_CALIBRATION)
 
+FLAGS (sort-file):
+    ips4o sort-file <in> <out> [FLAGS]
+    --type <name>         u64 | i64 | f64 | pair | quartet | bytes100
+                          (fixed-width record codec)      [default: u64]
+    --chunk-bytes <n>     run-generation chunk (suffix k/m/g ok)
+                                                          [default: 32m]
+    --fan-in <int>        runs merged per k-way pass      [default: 16]
+    --buffer-bytes <n>    per-run merge buffer            [default: 1m]
+    --spill-dir <path>    spill-file directory            [default: temp dir]
+    --threads <int>       worker threads                  [default: all cores]
+
+FLAGS (gen-file):
+    ips4o gen-file <out> [FLAGS]
+    --dist / --n / --seed / --type   as in sort / sort-file
+
 FLAGS (serve):
+    --file-jobs <int>    out-of-core file jobs mixed into the load
+                                                          [default: 0]
     --clients <int>      concurrent client threads        [default: 4]
     --jobs <int>         jobs submitted per client        [default: 200]
     --n <int>            elements per small job           [default: 10k]
@@ -136,6 +157,21 @@ fn build_config(args: &[String]) -> Config {
     if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_small_sort_bytes(b);
     }
+    // Out-of-core knobs (sort-file, serve --file-jobs).
+    let mut ext = ExtSortConfig::default();
+    if let Some(b) = parse_flag(args, "--chunk-bytes").map(parse_n) {
+        ext = ext.with_chunk_bytes(b);
+    }
+    if let Some(f) = parse_flag(args, "--fan-in").and_then(|s| s.parse().ok()) {
+        ext = ext.with_fan_in(f);
+    }
+    if let Some(b) = parse_flag(args, "--buffer-bytes").map(parse_n) {
+        ext = ext.with_buffer_bytes(b);
+    }
+    if let Some(d) = parse_flag(args, "--spill-dir") {
+        ext = ext.with_spill_dir(d);
+    }
+    cfg = cfg.with_extsort(ext);
     if let Some(mode) = parse_flag(args, "--scheduler") {
         match SchedulerMode::from_name(mode) {
             Some(m) => cfg = cfg.with_scheduler(m),
@@ -330,6 +366,111 @@ fn cmd_sort(args: &[String]) -> i32 {
     }
 }
 
+/// Out-of-core sort: stream a record file through the external-memory
+/// pipeline ([`ips4o::extsort`]) — double-buffered planner-routed run
+/// generation plus cascaded k-way merging — holding only
+/// `--chunk-bytes` of input in memory at a time.
+fn cmd_sort_file(args: &[String]) -> i32 {
+    let (input, output) = match (args.first(), args.get(1)) {
+        (Some(i), Some(o)) if !i.starts_with("--") && !o.starts_with("--") => (i, o),
+        _ => {
+            eprintln!("usage: ips4o sort-file <in> <out> [FLAGS]   (see `ips4o help`)");
+            return 2;
+        }
+    };
+    let ty = parse_flag(args, "--type").unwrap_or("u64");
+    let cfg = build_config(args);
+    println!(
+        "# sort-file: {input} -> {output} type={ty} chunk={}B fan_in={} buffer={}B threads={}",
+        cfg.extsort.chunk_bytes, cfg.extsort.fan_in, cfg.extsort.buffer_bytes, cfg.threads
+    );
+
+    let sorter = Sorter::new(cfg);
+    let (inp, outp) = (Path::new(input), Path::new(output));
+    let t0 = Instant::now();
+    let res = match ty {
+        "u64" => sorter.sort_file::<u64>(inp, outp),
+        "i64" => sorter.sort_file::<i64>(inp, outp),
+        "f64" => sorter.sort_file::<f64>(inp, outp),
+        "pair" => sorter.sort_file::<ips4o::util::Pair>(inp, outp),
+        "quartet" => sorter.sort_file::<ips4o::util::Quartet>(inp, outp),
+        "bytes100" => sorter.sort_file::<ips4o::util::Bytes100>(inp, outp),
+        other => {
+            eprintln!("unknown --type {other:?}");
+            return 2;
+        }
+    };
+    match res {
+        Ok(r) => {
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "extsort: elements={} runs_written={} merge_passes={} read={}B written={}B",
+                r.elements, r.runs_written, r.merge_passes, r.bytes_read, r.bytes_written
+            );
+            println!(
+                "phases: run-gen {:.3}s | merge {:.3}s",
+                r.run_gen_nanos as f64 / 1e9,
+                r.merge_nanos as f64 / 1e9
+            );
+            println!(
+                "time: {:.3}s | throughput: {:.2} M elem/s",
+                secs,
+                r.elements as f64 / secs / 1e6
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("sort-file: {e}");
+            1
+        }
+    }
+}
+
+/// Stream a deterministic record file (chunk-invariant key stream +
+/// fixed-width codec) to disk — the input generator for `sort-file`.
+fn cmd_gen_file(args: &[String]) -> i32 {
+    let out = match args.first() {
+        Some(o) if !o.starts_with("--") => o,
+        _ => {
+            eprintln!("usage: ips4o gen-file <out> [--dist D] [--n N] [--seed S] [--type T]");
+            return 2;
+        }
+    };
+    let dist = Distribution::from_name(parse_flag(args, "--dist").unwrap_or("Uniform"))
+        .unwrap_or(Distribution::Uniform);
+    let n = parse_n(parse_flag(args, "--n").unwrap_or("1m"));
+    let seed = parse_flag(args, "--seed")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42u64);
+    let ty = parse_flag(args, "--type").unwrap_or("u64");
+    let path = Path::new(out);
+    let res = match ty {
+        "u64" => datagen::gen_file::<u64>(path, dist, n, seed),
+        "i64" => datagen::gen_file::<i64>(path, dist, n, seed),
+        "f64" => datagen::gen_file::<f64>(path, dist, n, seed),
+        "pair" => datagen::gen_file::<ips4o::util::Pair>(path, dist, n, seed),
+        "quartet" => datagen::gen_file::<ips4o::util::Quartet>(path, dist, n, seed),
+        "bytes100" => datagen::gen_file::<ips4o::util::Bytes100>(path, dist, n, seed),
+        other => {
+            eprintln!("unknown --type {other:?}");
+            return 2;
+        }
+    };
+    match res {
+        Ok(bytes) => {
+            println!(
+                "gen-file: {n} {} x {ty} records ({bytes} bytes) -> {out}",
+                dist.name()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("gen-file: {e}");
+            1
+        }
+    }
+}
+
 /// Drive the batched [`ips4o::SortService`] with a synthetic request
 /// mix: N client threads concurrently submitting jobs of rotating
 /// element types (u64 / f64 / Pair / Bytes100), rotating distributions,
@@ -354,13 +495,30 @@ fn cmd_serve(args: &[String]) -> i32 {
     let seed = parse_flag(args, "--seed")
         .and_then(|s| s.parse().ok())
         .unwrap_or(42u64);
+    let file_jobs: usize = parse_flag(args, "--file-jobs")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
     let cfg = build_config(args);
 
     println!(
         "# serve: clients={clients} jobs/client={jobs} n={n} large_every={large_every} \
-         threads={} shards={} small_bytes={}",
+         file_jobs={file_jobs} threads={} shards={} small_bytes={}",
         cfg.threads, cfg.service_shards, cfg.small_sort_bytes
     );
+
+    // Inputs for the out-of-core mix are staged before the clock starts;
+    // generating them is not service work.
+    let file_dir = std::env::temp_dir().join(format!("ips4o-serve-files-{}", std::process::id()));
+    let mut file_inputs = Vec::new();
+    if file_jobs > 0 {
+        std::fs::create_dir_all(&file_dir).unwrap();
+        for j in 0..file_jobs {
+            let p = file_dir.join(format!("in-{j}.bin"));
+            let s = seed ^ ((j as u64) << 16);
+            datagen::gen_file::<u64>(&p, Distribution::Uniform, n * 8, s).unwrap();
+            file_inputs.push(p);
+        }
+    }
 
     let svc = ips4o::SortService::new(cfg);
     svc.warm::<u64>();
@@ -373,6 +531,33 @@ fn cmd_serve(args: &[String]) -> i32 {
     let total_elems = AtomicU64::new(0);
     let t0 = Instant::now();
     std::thread::scope(|scope| {
+        if file_jobs > 0 {
+            let svc = &svc;
+            let failures = &failures;
+            let total_elems = &total_elems;
+            let file_inputs = &file_inputs;
+            let file_dir = &file_dir;
+            scope.spawn(move || {
+                let tickets: Vec<_> = file_inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(j, p)| {
+                        svc.submit_file::<u64>(p.clone(), file_dir.join(format!("out-{j}.bin")))
+                    })
+                    .collect();
+                for t in tickets {
+                    match t.wait() {
+                        Ok(r) => {
+                            total_elems.fetch_add(r.elements, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            eprintln!("file job failed: {e}");
+                            failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
         for c in 0..clients {
             let svc = &svc;
             let failures = &failures;
@@ -458,6 +643,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         "merge: passes={} parallel_splits={}",
         d.merge_passes, d.merge_parallel_splits
     );
+    println!(
+        "extsort: runs_written={} merge_passes={} read={}B written={}B",
+        d.ext_runs_written, d.ext_merge_passes, d.ext_bytes_read, d.ext_bytes_written
+    );
+    if file_jobs > 0 {
+        std::fs::remove_dir_all(&file_dir).ok();
+    }
     let fails = failures.load(Ordering::Relaxed);
     if fails == 0 {
         println!("serve: all results verified sorted");

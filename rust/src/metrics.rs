@@ -123,6 +123,17 @@ pub struct ScratchCounters {
     /// Co-ranked segment splits performed by parallel pair merges in
     /// the run-merge engine.
     pub merge_parallel_splits: AtomicU64,
+    /// Sorted runs spilled to disk by the external tier
+    /// ([`crate::extsort`]) — initial run-generation runs plus any
+    /// intermediate runs written by cascading merge passes.
+    pub ext_runs_written: AtomicU64,
+    /// K-way merge passes executed by the external tier (one per
+    /// run-set merged to a spill file or to the final output).
+    pub ext_merge_passes: AtomicU64,
+    /// Bytes read by the external tier (input chunks + spill runs).
+    pub ext_bytes_read: AtomicU64,
+    /// Bytes written by the external tier (spill runs + final output).
+    pub ext_bytes_written: AtomicU64,
     /// Routing decisions driven by measured [`CalibrationProfile`] data
     /// (the plan's `calibrated` flag was set).
     ///
@@ -152,6 +163,10 @@ impl Default for ScratchCounters {
             radix_fused_scans: AtomicU64::new(0),
             merge_passes: AtomicU64::new(0),
             merge_parallel_splits: AtomicU64::new(0),
+            ext_runs_written: AtomicU64::new(0),
+            ext_merge_passes: AtomicU64::new(0),
+            ext_bytes_read: AtomicU64::new(0),
+            ext_bytes_written: AtomicU64::new(0),
             planner_calibrated: AtomicU64::new(0),
             planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -177,6 +192,10 @@ impl ScratchCounters {
         self.radix_fused_scans.store(0, Ordering::Relaxed);
         self.merge_passes.store(0, Ordering::Relaxed);
         self.merge_parallel_splits.store(0, Ordering::Relaxed);
+        self.ext_runs_written.store(0, Ordering::Relaxed);
+        self.ext_merge_passes.store(0, Ordering::Relaxed);
+        self.ext_bytes_read.store(0, Ordering::Relaxed);
+        self.ext_bytes_written.store(0, Ordering::Relaxed);
         self.planner_calibrated.store(0, Ordering::Relaxed);
         self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
@@ -220,6 +239,10 @@ impl ScratchCounters {
             radix_fused_scans: self.radix_fused_scans.load(Ordering::Relaxed),
             merge_passes: self.merge_passes.load(Ordering::Relaxed),
             merge_parallel_splits: self.merge_parallel_splits.load(Ordering::Relaxed),
+            ext_runs_written: self.ext_runs_written.load(Ordering::Relaxed),
+            ext_merge_passes: self.ext_merge_passes.load(Ordering::Relaxed),
+            ext_bytes_read: self.ext_bytes_read.load(Ordering::Relaxed),
+            ext_bytes_written: self.ext_bytes_written.load(Ordering::Relaxed),
             planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
             planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
@@ -250,6 +273,15 @@ pub struct ScratchSnapshot {
     pub merge_passes: u64,
     /// Co-ranked segment splits performed by parallel pair merges.
     pub merge_parallel_splits: u64,
+    /// Sorted runs spilled to disk by the external tier (initial +
+    /// cascade-intermediate).
+    pub ext_runs_written: u64,
+    /// K-way merge passes executed by the external tier.
+    pub ext_merge_passes: u64,
+    /// Bytes read by the external tier (input chunks + spill runs).
+    pub ext_bytes_read: u64,
+    /// Bytes written by the external tier (spill runs + final output).
+    pub ext_bytes_written: u64,
     /// Routing decisions driven by measured calibration data.
     pub planner_calibrated: u64,
     /// Routing decisions from the static thresholds (including forced
@@ -279,6 +311,10 @@ impl ScratchSnapshot {
             radix_fused_scans: self.radix_fused_scans - earlier.radix_fused_scans,
             merge_passes: self.merge_passes - earlier.merge_passes,
             merge_parallel_splits: self.merge_parallel_splits - earlier.merge_parallel_splits,
+            ext_runs_written: self.ext_runs_written - earlier.ext_runs_written,
+            ext_merge_passes: self.ext_merge_passes - earlier.ext_merge_passes,
+            ext_bytes_read: self.ext_bytes_read - earlier.ext_bytes_read,
+            ext_bytes_written: self.ext_bytes_written - earlier.ext_bytes_written,
             planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
             planner_static: self.planner_static - earlier.planner_static,
             backend_selected,
@@ -398,6 +434,27 @@ mod tests {
         c.reset();
         assert_eq!(c.snapshot().distinct_backends(), 0);
         assert_eq!(c.snapshot().backends_summary(), "none");
+    }
+
+    #[test]
+    fn ext_counters_snapshot_delta_and_reset() {
+        let c = ScratchCounters::new();
+        c.ext_runs_written.fetch_add(4, Ordering::Relaxed);
+        c.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
+        c.ext_bytes_read.fetch_add(4096, Ordering::Relaxed);
+        c.ext_bytes_written.fetch_add(8192, Ordering::Relaxed);
+        let a = c.snapshot();
+        assert_eq!(a.ext_runs_written, 4);
+        assert_eq!(a.ext_merge_passes, 1);
+        c.ext_merge_passes.fetch_add(2, Ordering::Relaxed);
+        c.ext_bytes_written.fetch_add(100, Ordering::Relaxed);
+        let d = c.snapshot().delta(&a);
+        assert_eq!(d.ext_runs_written, 0);
+        assert_eq!(d.ext_merge_passes, 2);
+        assert_eq!(d.ext_bytes_read, 0);
+        assert_eq!(d.ext_bytes_written, 100);
+        c.reset();
+        assert_eq!(c.snapshot(), ScratchSnapshot::default());
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //! Jobs are type-erased at the queue boundary, so one service instance
 //! concurrently serves `u64`, `f64`, [`Pair`](crate::util::Pair),
 //! [`Quartet`](crate::util::Quartet) and
-//! [`Bytes100`](crate::util::Bytes100) payloads.
+//! [`Bytes100`](crate::util::Bytes100) payloads — and, via
+//! [`SortService::submit_file`], file-backed datasets that never fit in
+//! the queue at all: the external tier ([`crate::extsort`]) streams
+//! them through chunked run generation and k-way merging, with every
+//! chunk routed by the same planner as in-memory keyed jobs.
 //!
 //! ```
 //! use ips4o::{Config, SortService};
@@ -39,12 +43,15 @@
 //! ```
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arena::ArenaPool;
 use crate::base_case::insertion_sort;
 use crate::config::Config;
+use crate::extsort::{ExtRecord, ExtSortError, ExtSortReport};
 use crate::merge::{merge_sort_runs, merge_sort_runs_par, MergeScratch};
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
@@ -474,102 +481,214 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
     fn run_large(&mut self, core: &ServiceCore) {
         let mut data = std::mem::take(&mut self.data);
         // RadixKey is unsealed: contain a panicking downstream
-        // radix_key/radix_less during the plan probes, like TypedJob
-        // contains the user comparator.
-        let plan = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            resolve_keys_plan(core, &data, true)
-        })) {
-            Ok(plan) => plan,
-            Err(panic) => {
-                self.finish(core, Err(panic));
-                return;
+        // radix_key/radix_less (plan probes included), like TypedJob
+        // contains the user comparator. Arenas are recycled only on
+        // success — an unwinding backend drops its possibly
+        // half-mutated scratch instead of checking it in.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_keys_large(core, &mut data);
+        }));
+        match outcome {
+            Ok(()) => self.finish(core, Ok(data)),
+            Err(panic) => self.finish(core, Err(panic)),
+        }
+    }
+}
+
+/// Execute a radix-keyed payload on the dispatcher's large-job path:
+/// resolve the full-menu plan and run the chosen backend with recycled
+/// arenas. Shared by [`KeyedJob::run_large`] and the external tier's
+/// per-chunk sorts ([`FileJob`]), so file-backed chunks get the same
+/// routing as in-memory keyed jobs. Panics propagate to the caller's
+/// containment; arenas are checked back in only on success.
+fn execute_keys_large<T: RadixKey>(core: &ServiceCore, data: &mut [T]) {
+    let plan = resolve_keys_plan(core, data, true);
+    core.counters.record_backend(plan.backend);
+    core.counters.record_plan_source(plan.calibrated);
+    match plan.backend {
+        Backend::Ips4oPar | Backend::Radix | Backend::CdfSort => {
+            let mut scratch = core
+                .arenas
+                .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
+            assert!(
+                scratch.compatible_with(&core.cfg),
+                "recycled arena geometry mismatch"
+            );
+            match plan.backend {
+                Backend::Radix => sort_radix_par_with(
+                    data,
+                    &core.cfg,
+                    &core.pool,
+                    &mut scratch,
+                    Some(core.counters.as_ref()),
+                ),
+                Backend::CdfSort => sort_cdf_par_with(
+                    data,
+                    &core.cfg,
+                    &core.pool,
+                    &mut scratch,
+                    Some(core.counters.as_ref()),
+                ),
+                _ => sort_parallel_with(
+                    data,
+                    &core.cfg,
+                    &core.pool,
+                    &mut scratch,
+                    &T::radix_less,
+                    Some(core.counters.as_ref()),
+                ),
             }
-        };
-        core.counters.record_backend(plan.backend);
-        core.counters.record_plan_source(plan.calibrated);
-        match plan.backend {
-            Backend::Ips4oPar | Backend::Radix | Backend::CdfSort => {
-                let mut scratch = core
-                    .arenas
-                    .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    assert!(
-                        scratch.compatible_with(&core.cfg),
-                        "recycled arena geometry mismatch"
-                    );
-                    match plan.backend {
-                        Backend::Radix => sort_radix_par_with(
-                            &mut data,
-                            &core.cfg,
-                            &core.pool,
-                            &mut scratch,
-                            Some(core.counters.as_ref()),
-                        ),
-                        Backend::CdfSort => sort_cdf_par_with(
-                            &mut data,
-                            &core.cfg,
-                            &core.pool,
-                            &mut scratch,
-                            Some(core.counters.as_ref()),
-                        ),
-                        _ => sort_parallel_with(
-                            &mut data,
-                            &core.cfg,
-                            &core.pool,
-                            &mut scratch,
-                            &T::radix_less,
-                            Some(core.counters.as_ref()),
-                        ),
-                    }
-                }));
-                match outcome {
-                    Ok(()) => {
-                        core.arenas.checkin(scratch);
-                        self.finish(core, Ok(data));
-                    }
-                    Err(panic) => self.finish(core, Err(panic)),
+            core.arenas.checkin(scratch);
+        }
+        Backend::RunMerge => {
+            // Large run-merge jobs use the dedicated serialized arena —
+            // see [`LargeMergeScratch`].
+            let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
+            merge_sort_runs_par(
+                data,
+                &core.pool,
+                &mut ms.scratch,
+                &T::radix_less,
+                Some(core.counters.as_ref()),
+            );
+            core.arenas.checkin(ms);
+        }
+        _ => {
+            let mut ctx = core
+                .arenas
+                .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+            assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
+            match plan.backend {
+                Backend::BaseCase => insertion_sort(data, &T::radix_less),
+                _ => sort_seq(data, &mut ctx, &T::radix_less),
+            }
+            core.arenas.checkin(ctx);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File-backed jobs (the external tier as a service citizen)
+// ---------------------------------------------------------------------------
+
+/// Resolution of a file-backed job: the external-tier report, an
+/// [`ExtSortError`] (I/O failure, truncated input), or the panic
+/// payload of a job whose key functions panicked.
+type FileJobResult = std::thread::Result<Result<ExtSortReport, ExtSortError>>;
+
+/// Completion slot for a file-backed job.
+struct FileDoneSlot {
+    slot: Mutex<Option<FileJobResult>>,
+    cv: Condvar,
+}
+
+impl FileDoneSlot {
+    fn new() -> Self {
+        FileDoneSlot {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: FileJobResult) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to a file-backed sort job submitted with
+/// [`SortService::submit_file`].
+pub struct FileJobTicket {
+    done: Arc<FileDoneSlot>,
+}
+
+impl FileJobTicket {
+    /// Block until the job completes. I/O and truncation failures come
+    /// back as [`ExtSortError`] — the job failed, the service did not.
+    /// A panic inside the job (a panicking downstream `radix_key`, a
+    /// foreign-geometry arena) is re-raised *here*, on the owning
+    /// client; spill files are cleaned up in every case.
+    pub fn wait(self) -> Result<ExtSortReport, ExtSortError> {
+        let mut g = self.done.slot.lock().unwrap();
+        loop {
+            if let Some(d) = g.take() {
+                match d {
+                    Ok(res) => return res,
+                    Err(panic) => std::panic::resume_unwind(panic),
                 }
             }
-            Backend::RunMerge => {
-                // Large run-merge jobs use the dedicated serialized
-                // arena — see [`LargeMergeScratch`].
-                let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    merge_sort_runs_par(
-                        &mut data,
-                        &core.pool,
-                        &mut ms.scratch,
-                        &T::radix_less,
-                        Some(core.counters.as_ref()),
-                    );
-                }));
-                match outcome {
-                    Ok(()) => {
-                        core.arenas.checkin(ms);
-                        self.finish(core, Ok(data));
-                    }
-                    Err(panic) => self.finish(core, Err(panic)),
-                }
-            }
-            _ => {
-                let mut ctx = core
-                    .arenas
-                    .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
-                    match plan.backend {
-                        Backend::BaseCase => insertion_sort(&mut data, &T::radix_less),
-                        _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
-                    }
-                }));
-                match outcome {
-                    Ok(()) => {
-                        core.arenas.checkin(ctx);
-                        self.finish(core, Ok(data));
-                    }
-                    Err(panic) => self.finish(core, Err(panic)),
-                }
-            }
+            g = self.done.cv.wait(g).unwrap();
+        }
+    }
+
+    /// True once the result is available (`wait` will not block).
+    pub fn is_ready(&self) -> bool {
+        self.done.slot.lock().unwrap().is_some()
+    }
+}
+
+/// A queued file-backed job: sort `input` into `output` through the
+/// external tier ([`crate::extsort`]), chunks routed by the planner via
+/// [`execute_keys_large`].
+struct FileJob<T: ExtRecord> {
+    input: PathBuf,
+    output: PathBuf,
+    done: Arc<FileDoneSlot>,
+    finished: bool,
+    _records: PhantomData<fn() -> T>,
+}
+
+/// Same last-resort guard as [`TypedJob`]: a dropped-before-completion
+/// job fails its own ticket instead of stranding the client.
+impl<T: ExtRecord> Drop for FileJob<T> {
+    fn drop(&mut self) {
+        if !self.finished {
+            let payload: Box<dyn std::any::Any + Send> =
+                Box::new("sort service dropped the job before completion");
+            self.done.complete(Err(payload));
+        }
+    }
+}
+
+impl<T: ExtRecord> FileJob<T> {
+    fn finish(&mut self, core: &ServiceCore, result: FileJobResult) {
+        if let Ok(Ok(report)) = &result {
+            core.counters
+                .elements_sorted
+                .fetch_add(report.elements, Ordering::Relaxed);
+        }
+        core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.finished = true;
+        self.done.complete(result);
+    }
+}
+
+impl<T: ExtRecord> QueuedJob for FileJob<T> {
+    /// File jobs always take the dispatcher's large path: they own the
+    /// pool for their chunk sorts and merge passes, and their payload
+    /// lives on disk, not in the queue.
+    fn size_bytes(&self) -> usize {
+        usize::MAX
+    }
+
+    fn run_small(&mut self, _core: &ServiceCore) {
+        unreachable!("file jobs always take the large path");
+    }
+
+    fn run_large(&mut self, core: &ServiceCore) {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::extsort::sort_file::<T, _>(
+                &self.input,
+                &self.output,
+                &core.cfg,
+                Some(&core.pool),
+                &core.arenas,
+                |v| execute_keys_large(core, v),
+            )
+        }));
+        match outcome {
+            Ok(res) => self.finish(core, Ok(res)),
+            Err(panic) => self.finish(core, Err(panic)),
         }
     }
 }
@@ -758,6 +877,31 @@ impl SortService {
         });
         self.enqueue(job);
         JobTicket { done }
+    }
+
+    /// Submit a file-backed job: sort the [`ExtRecord`]-encoded records
+    /// of `input` into `output` through the external tier
+    /// ([`crate::extsort`]) — datasets larger than memory are fine. The
+    /// job runs on the dispatcher's large path with the service's pool
+    /// and recycled [`ExtScratch`](crate::extsort) arenas, so warm
+    /// repeated file jobs allocate no scratch. I/O and truncated-input
+    /// failures resolve the ticket with `Err` (the service keeps
+    /// serving); spill files never outlive the job.
+    pub fn submit_file<T: ExtRecord>(
+        &self,
+        input: impl Into<PathBuf>,
+        output: impl Into<PathBuf>,
+    ) -> FileJobTicket {
+        let done = Arc::new(FileDoneSlot::new());
+        let job: ErasedJob = Box::new(FileJob::<T> {
+            input: input.into(),
+            output: output.into(),
+            done: Arc::clone(&done),
+            finished: false,
+            _records: PhantomData,
+        });
+        self.enqueue(job);
+        FileJobTicket { done }
     }
 
     fn enqueue(&self, job: ErasedJob) {
@@ -1025,5 +1169,121 @@ mod tests {
         );
         let out = svc.sort_vec(gen_u64(Distribution::ReverseSorted, 30_000, 4));
         assert!(is_sorted_by(&out, |a, b| a < b));
+    }
+
+    fn write_u64_file(path: &std::path::Path, keys: &[u64]) {
+        let mut raw = vec![0u8; keys.len() * 8];
+        for (i, k) in keys.iter().enumerate() {
+            raw[i * 8..(i + 1) * 8].copy_from_slice(&k.to_le_bytes());
+        }
+        std::fs::write(path, raw).unwrap();
+    }
+
+    fn read_u64_file(path: &std::path::Path) -> Vec<u64> {
+        let raw = std::fs::read(path).unwrap();
+        assert_eq!(raw.len() % 8, 0);
+        raw.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn file_job_cfg(dir: &std::path::Path) -> Config {
+        Config::default().with_threads(2).with_extsort(
+            crate::config::ExtSortConfig::default()
+                .with_chunk_bytes(128 * 8)
+                .with_fan_in(3)
+                .with_buffer_bytes(16 * 8)
+                .with_spill_dir(dir),
+        )
+    }
+
+    #[test]
+    fn file_jobs_round_trip_through_the_service() {
+        let dir = std::env::temp_dir().join(format!("ips4o-svc-file-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = SortService::new(file_job_cfg(&dir));
+        let keys = gen_u64(Distribution::Uniform, 3_000, 11);
+        let input = dir.join("in.bin");
+        let output = dir.join("out.bin");
+        write_u64_file(&input, &keys);
+
+        let report = svc.submit_file::<u64>(&input, &output).wait().unwrap();
+        assert_eq!(report.elements, 3_000);
+        assert!(report.runs_written >= 3_000 / 128);
+        let got = read_u64_file(&output);
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(got, want);
+
+        // Counters advanced and the spill dir holds only our two files.
+        let m = svc.metrics();
+        assert_eq!(m.ext_runs_written, report.runs_written);
+        assert_eq!(m.ext_merge_passes, report.merge_passes);
+        assert_eq!(m.jobs_completed, 1);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(leftovers.len(), 2, "spill residue: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_repeated_file_jobs_do_not_allocate() {
+        let dir = std::env::temp_dir().join(format!("ips4o-svc-warm-file-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = SortService::new(file_job_cfg(&dir));
+        let keys = gen_u64(Distribution::TwoDup, 2_000, 5);
+        let input = dir.join("in.bin");
+        write_u64_file(&input, &keys);
+
+        // First job builds the ExtScratch plus the chunk/merge arenas.
+        svc.submit_file::<u64>(&input, dir.join("out-0.bin")).wait().unwrap();
+        let warm = svc.metrics();
+        for i in 1..=4u32 {
+            svc.submit_file::<u64>(&input, dir.join(format!("out-{i}.bin")))
+                .wait()
+                .unwrap();
+        }
+        let d = svc.metrics().delta(&warm);
+        assert_eq!(d.scratch_allocations, 0, "warm file jobs must not allocate");
+        assert!(d.scratch_reuses >= 4);
+        assert_eq!(d.jobs_completed, 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn file_job_failures_resolve_tickets_without_killing_the_service() {
+        let dir = std::env::temp_dir().join(format!("ips4o-svc-badfile-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = SortService::new(file_job_cfg(&dir));
+
+        // Missing input: I/O error, not a panic.
+        let missing = svc
+            .submit_file::<u64>(dir.join("nope.bin"), dir.join("out.bin"))
+            .wait();
+        assert!(matches!(missing, Err(ExtSortError::Io(_))));
+
+        // Truncated input: decode error surfaced as a job failure.
+        let input = dir.join("trunc.bin");
+        let mut raw = vec![0u8; 100 * 8 + 3];
+        raw.iter_mut().enumerate().for_each(|(i, b)| *b = i as u8);
+        std::fs::write(&input, raw).unwrap();
+        let trunc = svc.submit_file::<u64>(&input, dir.join("out.bin")).wait();
+        assert!(matches!(
+            trunc,
+            Err(ExtSortError::Truncated { width: 8, trailing: 3 })
+        ));
+
+        // The service keeps serving, and no spill dirs were left behind.
+        let ok = svc.sort_vec(gen_u64(Distribution::Uniform, 5_000, 6));
+        assert!(is_sorted_by(&ok, |a, b| a < b));
+        assert_eq!(svc.metrics().jobs_completed, 3);
+        let residue = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| e.as_ref().unwrap().path().is_dir())
+            .count();
+        assert_eq!(residue, 0, "failed jobs must clean their spill dirs");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

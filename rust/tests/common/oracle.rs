@@ -132,6 +132,105 @@ pub fn assert_sorted<T>(v: &[T], is_less: impl Fn(&T, &T) -> bool, ctx: &str) {
     assert!(v.windows(2).all(|w| !is_less(&w[1], &w[0])), "{ctx}: not sorted");
 }
 
+// ---------------------------------------------------------------------------
+// The streaming oracle (external-memory outputs)
+// ---------------------------------------------------------------------------
+
+/// Incremental cousin of [`SortCheck`] for outputs too large to hold in
+/// memory: feed elements in stream order (any chunking), and it checks
+/// sorted order across every boundary while folding the same
+/// order-independent fingerprint as `ips4o::util::multiset_fingerprint`
+/// — so a streamed output can be checked against an in-memory (or
+/// separately streamed) input capture.
+pub struct StreamCheck<T, K: Fn(&T) -> u64, L: Fn(&T, &T) -> bool> {
+    key: K,
+    is_less: L,
+    prev: Option<T>,
+    elements: u64,
+    sum: u64,
+    xor: u64,
+}
+
+impl<T: Copy, K: Fn(&T) -> u64, L: Fn(&T, &T) -> bool> StreamCheck<T, K, L> {
+    pub fn new(key: K, is_less: L) -> Self {
+        StreamCheck {
+            key,
+            is_less,
+            prev: None,
+            elements: 0,
+            sum: 0,
+            xor: 0,
+        }
+    }
+
+    /// Fold in the next stream element, asserting it does not sort
+    /// below its predecessor.
+    pub fn push(&mut self, e: T, ctx: &str) {
+        if let Some(p) = &self.prev {
+            assert!(
+                !(self.is_less)(&e, p),
+                "{ctx}: stream not sorted at element {}",
+                self.elements
+            );
+        }
+        // Exactly multiset_fingerprint's per-element fold.
+        let x = ips4o::util::SplitMix64::new((self.key)(&e)).next_u64();
+        self.sum = self.sum.wrapping_add(x);
+        self.xor ^= x.rotate_left(17);
+        self.elements += 1;
+        self.prev = Some(e);
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.elements
+    }
+
+    /// The stream's multiset fingerprint so far — comparable to
+    /// `multiset_fingerprint` over the same elements in any order.
+    pub fn fingerprint(&self) -> u64 {
+        self.sum ^ self.xor
+    }
+}
+
+/// Run a whole record stream through a [`StreamCheck`]: decode
+/// fixed-width records from `src` a bounded buffer at a time, assert
+/// sorted order, and return `(elements, fingerprint)`. The memory high
+/// water mark is one 64 KiB buffer regardless of stream length.
+pub fn verify_record_stream<T: ips4o::ExtRecord + Copy>(
+    src: &mut impl std::io::Read,
+    key: impl Fn(&T) -> u64,
+    is_less: impl Fn(&T, &T) -> bool,
+    ctx: &str,
+) -> (u64, u64) {
+    let recs_per_buf = (64 * 1024 / T::WIDTH).max(1);
+    let mut raw = vec![0u8; recs_per_buf * T::WIDTH];
+    let mut check = StreamCheck::new(key, is_less);
+    loop {
+        // Fill as much of the buffer as the reader will give us, so a
+        // partial record is detectable as a hard error.
+        let mut filled = 0;
+        while filled < raw.len() {
+            match src.read(&mut raw[filled..]) {
+                Ok(0) => break,
+                Ok(k) => filled += k,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => panic!("{ctx}: stream read failed: {e}"),
+            }
+        }
+        if filled == 0 {
+            break;
+        }
+        assert_eq!(filled % T::WIDTH, 0, "{ctx}: trailing partial record");
+        for chunk in raw[..filled].chunks_exact(T::WIDTH) {
+            check.push(T::decode(chunk), ctx);
+        }
+        if filled < raw.len() {
+            break;
+        }
+    }
+    (check.elements(), check.fingerprint())
+}
+
 /// Assert `after` holds exactly the same multiset as `before` under the
 /// key projection — the lighter oracle for tests that do not need a std
 /// reference sequence.

@@ -1,0 +1,340 @@
+//! Integration suite for the external-memory tier (`ips4o::extsort`):
+//! file round-trips against the in-memory oracle, chunk-boundary sizes,
+//! cascaded multi-pass merges verified by the streaming oracle, spill
+//! lifecycle on success and on comparator panic, corrupt-input job
+//! failures, and warm-service allocation behavior.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicI64, Ordering};
+
+use common::oracle::{seeded, verify_record_stream, SortCheck};
+use ips4o::datagen::{self, Distribution};
+use ips4o::util::multiset_fingerprint;
+use ips4o::{
+    Config, ExtRecord, ExtSortConfig, ExtSortError, RadixKey, SortService, Sorter,
+};
+
+/// A fresh scratch directory for one test; removed on drop.
+struct TestDir(PathBuf);
+
+impl TestDir {
+    fn new(name: &str) -> TestDir {
+        let dir = std::env::temp_dir().join(format!("ips4o-extsort-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        TestDir(dir)
+    }
+    fn path(&self, file: &str) -> PathBuf {
+        self.0.join(file)
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+fn ext_cfg(chunk_elems: usize, fan_in: usize, buf_elems: usize, spill: &Path) -> Config {
+    Config::default().with_threads(2).with_extsort(
+        ExtSortConfig::default()
+            .with_chunk_bytes(chunk_elems * 8)
+            .with_fan_in(fan_in)
+            .with_buffer_bytes(buf_elems * 8)
+            .with_spill_dir(spill),
+    )
+}
+
+/// Entries left in the spill directory (SpillGuard subdirs or strays).
+fn spill_entries(dir: &Path) -> usize {
+    std::fs::read_dir(dir).map(|d| d.count()).unwrap_or(0)
+}
+
+#[test]
+fn file_round_trip_matches_in_memory_reference() {
+    seeded("file_round_trip_matches_in_memory_reference", 0xE1, |seed| {
+        let dir = TestDir::new("roundtrip");
+        let n = 3_000;
+        let mut keys = vec![0u64; n];
+        Distribution::TwoDup.fill_chunk(n, seed, 0, &mut keys);
+        let check = SortCheck::capture(&keys, |a, b| a < b, |x| *x);
+
+        let input = dir.path("in.bin");
+        datagen::gen_file::<u64>(&input, Distribution::TwoDup, n, seed).unwrap();
+        let output = dir.path("out.bin");
+        let sorter = Sorter::new(ext_cfg(256, 3, 32, &dir.0));
+        let report = sorter.sort_file::<u64>(&input, &output).unwrap();
+        assert_eq!(report.elements, n as u64);
+        assert!(report.runs_written >= 11, "expected many runs");
+
+        let raw = std::fs::read(&output).unwrap();
+        let sorted: Vec<u64> = raw.chunks_exact(8).map(u64::decode).collect();
+        check.assert_output(&sorted, |a, b| a < b, "extsort round trip");
+    });
+}
+
+#[test]
+fn chunk_boundary_sizes_round_trip() {
+    seeded("chunk_boundary_sizes_round_trip", 0xE2, |seed| {
+        let dir = TestDir::new("boundaries");
+        let chunk = 64usize;
+        // Fan-in 8 keeps every size here single-pass, so runs_written
+        // is exactly the initial run count (no cascade intermediates).
+        let sorter = Sorter::new(ext_cfg(chunk, 8, 16, &dir.0));
+        for n in [0, 1, chunk - 1, chunk, chunk + 1, 4 * chunk] {
+            let mut keys = vec![0u64; n];
+            Distribution::Uniform.fill_chunk(n, seed, 0, &mut keys);
+
+            let input = dir.path("in.bin");
+            datagen::gen_file::<u64>(&input, Distribution::Uniform, n, seed).unwrap();
+            let output = dir.path("out.bin");
+            let report = sorter.sort_file::<u64>(&input, &output).unwrap();
+
+            assert_eq!(report.elements, n as u64, "n={n}");
+            let expect_runs = ((n + chunk - 1) / chunk) as u64;
+            assert_eq!(report.runs_written, expect_runs, "n={n}");
+
+            let mut src = std::fs::File::open(&output).unwrap();
+            let (elems, fp) =
+                verify_record_stream::<u64>(&mut src, |x| *x, |a, b| a < b, &format!("n={n}"));
+            assert_eq!(elems, n as u64, "n={n}");
+            assert_eq!(fp, multiset_fingerprint(&keys, |x| *x), "n={n}");
+            assert_eq!(spill_entries(&dir.0), 2, "n={n}: only in.bin/out.bin remain");
+        }
+    });
+}
+
+#[test]
+fn multi_pass_merge_streams_verified_at_4x_chunk_size() {
+    seeded("multi_pass_merge_streams_verified_at_4x_chunk_size", 0xE3, |seed| {
+        let dir = TestDir::new("multipass");
+        let chunk = 1_024usize;
+        let n = 10 * chunk; // 10 runs through fan-in 3 => cascaded passes
+        let input = dir.path("in.bin");
+        datagen::gen_file::<u64>(&input, Distribution::Zipf, n, seed).unwrap();
+
+        // Stream the input's fingerprint the same bounded-buffer way the
+        // sorter reads it — the whole check holds O(buffer) memory.
+        let mut in_fp_src = std::fs::File::open(&input).unwrap();
+        let mut raw = vec![0u8; 8 * 512];
+        let (mut sum, mut xor) = (0u64, 0u64);
+        loop {
+            use std::io::Read;
+            let mut filled = 0;
+            while filled < raw.len() {
+                match in_fp_src.read(&mut raw[filled..]).unwrap() {
+                    0 => break,
+                    k => filled += k,
+                }
+            }
+            if filled == 0 {
+                break;
+            }
+            for chunk in raw[..filled].chunks_exact(8) {
+                let x = ips4o::util::SplitMix64::new(u64::decode(chunk)).next_u64();
+                sum = sum.wrapping_add(x);
+                xor ^= x.rotate_left(17);
+            }
+            if filled < raw.len() {
+                break;
+            }
+        }
+        let input_fp = sum ^ xor;
+
+        let output = dir.path("out.bin");
+        let sorter = Sorter::new(ext_cfg(chunk, 3, 64, &dir.0));
+        let report = sorter.sort_file::<u64>(&input, &output).unwrap();
+
+        assert_eq!(report.elements, n as u64);
+        // 10 initial runs, fan-in 3: cascade rounds 10→8→6→4→2 write
+        // four intermediate runs, then the final pass hits the output.
+        assert_eq!(report.runs_written, 14);
+        assert_eq!(report.merge_passes, 5);
+        assert!(report.bytes_read >= (n * 8) as u64);
+        assert!(report.bytes_written >= (n * 8) as u64);
+
+        // The scratch counters mirror the report exactly.
+        let m = sorter.scratch_metrics();
+        assert_eq!(m.ext_runs_written, report.runs_written);
+        assert_eq!(m.ext_merge_passes, report.merge_passes);
+        assert_eq!(m.ext_bytes_read, report.bytes_read);
+        assert_eq!(m.ext_bytes_written, report.bytes_written);
+
+        let mut src = std::fs::File::open(&output).unwrap();
+        let (elems, fp) = verify_record_stream::<u64>(&mut src, |x| *x, |a, b| a < b, "multipass");
+        assert_eq!(elems, n as u64);
+        assert_eq!(fp, input_fp, "output multiset differs from input");
+        assert_eq!(spill_entries(&dir.0), 2, "spill files must not outlive the sort");
+    });
+}
+
+#[test]
+fn pair_payloads_survive_the_file_path() {
+    seeded("pair_payloads_survive_the_file_path", 0xE4, |seed| {
+        use ips4o::util::Pair;
+        let dir = TestDir::new("pairs");
+        let n = 2_000;
+        let input = dir.path("in.bin");
+        datagen::gen_file::<Pair>(&input, Distribution::RootDup, n, seed).unwrap();
+        let output = dir.path("out.bin");
+        let sorter = Sorter::new(ext_cfg(128, 4, 32, &dir.0));
+        sorter.sort_file::<Pair>(&input, &output).unwrap();
+
+        // Fingerprint folds key AND payload bits, so a torn or
+        // payload-swapped record would change it.
+        let pack = |p: &Pair| p.key.to_bits() ^ p.value.to_bits().rotate_left(32);
+        let mut keys = vec![0u64; n];
+        Distribution::RootDup.fill_chunk(n, seed, 0, &mut keys);
+        let before: Vec<Pair> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Pair::from_key_index(k, i as u64))
+            .collect();
+        let mut src = std::fs::File::open(&output).unwrap();
+        let (elems, fp) = verify_record_stream::<Pair>(&mut src, pack, Pair::less, "pairs");
+        assert_eq!(elems, n as u64);
+        assert_eq!(fp, multiset_fingerprint(&before, pack));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+/// Comparisons remaining before the next `PanicKey` comparison panics;
+/// `i64::MAX` disarms the fuse.
+static PANIC_FUSE: AtomicI64 = AtomicI64::new(i64::MAX);
+
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+struct PanicKey(u64);
+
+impl RadixKey for PanicKey {
+    const COMPLETE: bool = true;
+    fn radix_key(&self) -> u64 {
+        if PANIC_FUSE.fetch_sub(1, Ordering::Relaxed) <= 0 {
+            panic!("injected comparator panic");
+        }
+        self.0
+    }
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        if PANIC_FUSE.fetch_sub(1, Ordering::Relaxed) <= 0 {
+            panic!("injected comparator panic");
+        }
+        a.0 < b.0
+    }
+}
+
+impl ExtRecord for PanicKey {
+    const WIDTH: usize = 8;
+    fn encode(&self, out: &mut [u8]) {
+        out.copy_from_slice(&self.0.to_le_bytes());
+    }
+    fn decode(raw: &[u8]) -> Self {
+        PanicKey(u64::from_le_bytes(raw.try_into().unwrap()))
+    }
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        PanicKey(key)
+    }
+}
+
+#[test]
+fn comparator_panic_removes_spill_files_and_fails_only_that_job() {
+    let dir = TestDir::new("panic");
+    let n = 2_000;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<PanicKey>(&input, Distribution::Uniform, n, 9).unwrap();
+
+    // Direct sorter path: the panic unwinds out, but the spill guard
+    // still removes its directory.
+    let sorter = Sorter::new(ext_cfg(128, 3, 32, &dir.0));
+    PANIC_FUSE.store(500, Ordering::SeqCst);
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        sorter.sort_file::<PanicKey>(&input, &dir.path("out.bin"))
+    }));
+    PANIC_FUSE.store(i64::MAX, Ordering::SeqCst);
+    assert!(attempt.is_err(), "fuse should have fired");
+    assert_eq!(
+        spill_entries(&dir.0),
+        2,
+        "only in.bin and the (partial) out.bin may remain"
+    );
+
+    // Service path: the panic is contained in the job, surfaces through
+    // the ticket, and the service keeps serving.
+    let svc = SortService::new(ext_cfg(128, 3, 32, &dir.0));
+    PANIC_FUSE.store(500, Ordering::SeqCst);
+    let ticket = svc.submit_file::<PanicKey>(&input, dir.path("out2.bin"));
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ticket.wait()));
+    PANIC_FUSE.store(i64::MAX, Ordering::SeqCst);
+    assert!(outcome.is_err(), "ticket must re-raise the job's panic");
+
+    let sorted = svc.submit((0..1_000u64).rev().collect::<Vec<_>>()).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "service must survive");
+    assert_eq!(
+        spill_entries(&dir.0),
+        2,
+        "spill directories must not leak across a contained panic"
+    );
+}
+
+#[test]
+fn corrupt_inputs_fail_the_job_not_the_service() {
+    let dir = TestDir::new("corrupt");
+    let svc = SortService::new(ext_cfg(64, 2, 16, &dir.0));
+
+    // Missing input file.
+    let t = svc.submit_file::<u64>(dir.path("nope.bin"), dir.path("out.bin"));
+    match t.wait() {
+        Err(ExtSortError::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::NotFound),
+        other => panic!("expected Io(NotFound), got {other:?}"),
+    }
+
+    // Truncated input: 20 bytes is 2 records + 4 stray bytes.
+    let bad = dir.path("trunc.bin");
+    std::fs::write(&bad, [0xABu8; 20]).unwrap();
+    let t = svc.submit_file::<u64>(&bad, dir.path("out.bin"));
+    match t.wait() {
+        Err(ExtSortError::Truncated { width, trailing }) => {
+            assert_eq!((width, trailing), (8, 4));
+        }
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+
+    // The service is still healthy.
+    let sorted = svc.submit((0..500u64).rev().collect::<Vec<_>>()).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(svc.metrics().jobs_completed, 3);
+}
+
+#[test]
+fn warm_service_file_jobs_add_no_steady_state_allocations() {
+    seeded("warm_service_file_jobs_add_no_steady_state_allocations", 0xE5, |seed| {
+        let dir = TestDir::new("warm");
+        let n = 1_500;
+        let input = dir.path("in.bin");
+        datagen::gen_file::<u64>(&input, Distribution::Uniform, n, seed).unwrap();
+        let svc = SortService::new(ext_cfg(128, 3, 32, &dir.0));
+
+        // Cold job builds the arena; every later identical job reuses it.
+        let cold = svc
+            .submit_file::<u64>(&input, dir.path("out.bin"))
+            .wait()
+            .unwrap();
+        let warm = svc.metrics();
+        for j in 0..3 {
+            let report = svc
+                .submit_file::<u64>(&input, dir.path(&format!("out-{j}.bin")))
+                .wait()
+                .unwrap();
+            assert_eq!(report.elements, n as u64);
+        }
+        let d = svc.metrics().delta(&warm);
+        assert_eq!(d.scratch_allocations, 0, "warm file jobs must not allocate");
+        assert!(d.scratch_reuses >= 3);
+        assert_eq!(d.ext_runs_written, 3 * cold.runs_written);
+        assert_eq!(d.ext_merge_passes, 3 * cold.merge_passes);
+        assert_eq!(d.ext_bytes_read, 3 * cold.bytes_read);
+        assert_eq!(d.ext_bytes_written, 3 * cold.bytes_written);
+    });
+}

@@ -369,19 +369,25 @@ where
             }
         };
         drop(closer);
+        // A spill-write failure exits the loop above with a chunk still
+        // parked in the capacity-1 channel, and the reader — re-armed by
+        // the `shelf.put` before the break — may be blocked in `send`,
+        // which closing the shelf does not wake. Drain the channel until
+        // the reader drops its sender (it hits the closed shelf right
+        // after any unblocked send), recovering parked chunks as we go,
+        // so the join below can never deadlock.
+        for msg in full_rx.iter() {
+            if let ChunkMsg::Chunk(b) = msg {
+                shelf.put(b);
+            }
+        }
         if let Err(panic) = reader.join() {
             std::panic::resume_unwind(panic);
         }
         worked
     });
 
-    // Recover a chunk parked in the channel on early-error paths, then
-    // restock the scratch so its geometry survives for the next job.
-    for msg in full_rx.try_iter() {
-        if let ChunkMsg::Chunk(b) = msg {
-            shelf.put(b);
-        }
-    }
+    // Restock the scratch so its geometry survives for the next job.
     scratch.chunk_bufs = shelf.drain();
     result.map(|()| runs)
 }
@@ -569,6 +575,63 @@ mod tests {
             ExtSortError::Truncated { width: 8, trailing: 5 } => {}
             other => panic!("unexpected error: {other:?}"),
         }
+    }
+
+    #[test]
+    fn spill_write_failure_surfaces_as_error_not_deadlock() {
+        // Regression: a failed spill write used to re-arm the reader
+        // (the chunk buffer went back on the shelf before the error
+        // break), letting it read one more chunk and block forever in
+        // `send` on the full capacity-1 channel — closing the shelf
+        // only wakes `get`, so the reader join deadlocked and the I/O
+        // error never surfaced. Sabotage the spill directory from the
+        // sort hook so the first `create_run` fails while the reader is
+        // ahead, and run the job on a watchdog thread so a regression
+        // fails fast instead of hanging the suite.
+        let base = std::env::temp_dir().join(format!("ips4o-spillfail-{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let cfg = Config::default().with_extsort(
+            ExtSortConfig::default()
+                .with_chunk_bytes(8 * 8)
+                .with_fan_in(2)
+                .with_buffer_bytes(4 * 8)
+                .with_spill_dir(base.clone()),
+        );
+        // Six chunks' worth of input keeps the reader ahead of the
+        // failing spill.
+        let raw = encode_u64s(&scrambled(48, 0x5F11));
+        let sabotage_base = base.clone();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let arenas = ArenaPool::new();
+            let mut out = Vec::new();
+            let res = sort_stream::<u64, _, _, _>(
+                Cursor::new(raw),
+                &mut out,
+                &cfg,
+                None,
+                &arenas,
+                move |v| {
+                    v.sort_unstable();
+                    // Remove the job's spill subdirectory so the spill
+                    // write that follows this sort fails.
+                    if let Ok(entries) = std::fs::read_dir(&sabotage_base) {
+                        for e in entries.flatten() {
+                            let _ = std::fs::remove_dir_all(e.path());
+                        }
+                    }
+                },
+            );
+            let _ = done_tx.send(res.map(|_| ()));
+        });
+        let res = done_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("spill-write failure deadlocked the job instead of returning");
+        match res {
+            Err(ExtSortError::Io(_)) => {}
+            other => panic!("expected Io error from failed spill write, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -24,6 +24,13 @@ for suite in differential extsort merge_engine planner_calibration property_test
     IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
 done
 
+# The extsort suite a second time with the I/O-overlap pipeline disabled:
+# the serial fallback behind IPS4O_EXT_OVERLAP=off must stay oracle-clean
+# and deadlock-free on every gate, including --fast.
+echo "== extsort replay, overlap off (IPS4O_EXT_OVERLAP=off, seed pinned) =="
+IPS4O_TEST_SEED=271828 IPS4O_EXT_OVERLAP=off \
+    cargo test -q --test extsort -- --test-threads=1
+
 # Scheduler skew stress a second time with the seed pinned AND an
 # oversubscribed pool (more workers than this machine has cores): spin
 # barriers, steal sweeps, and termination detection all run with members

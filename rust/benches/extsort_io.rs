@@ -6,6 +6,11 @@
 //! bytes/sec — the bytes unit is what the phases actually contend on,
 //! since a cascaded merge re-reads every record it spills.
 //!
+//! The multi-pass scenario is run twice — once with the I/O/compute
+//! overlap pipeline on, once with the serial fallback
+//! (`IPS4O_EXT_OVERLAP=off` path) — and the PASS line asserts the
+//! pipelined mode is no slower than serial within a 3% noise margin.
+//!
 //! Emits `BENCH_extsort_io.json` when `IPS4O_BENCH_JSON=<dir>` is set;
 //! `IPS4O_BENCH_FULL` raises the record count.
 
@@ -15,11 +20,59 @@ use ips4o::bench_harness::{
     bytes_per_sec_str, print_machine_info, reps_for, JsonReport, Measurement, Table,
 };
 use ips4o::datagen::{self, Distribution};
+use ips4o::extsort::ExtSortReport;
 use ips4o::{Config, ExtSortConfig, Sorter};
+
+struct ModeRun {
+    gen: Measurement,
+    merge: Measurement,
+    total: Measurement,
+    last: ExtSortReport,
+}
+
+fn run_mode(
+    sorter: &Sorter,
+    input: &std::path::Path,
+    output: &std::path::Path,
+    reps: usize,
+    n: usize,
+) -> ModeRun {
+    // Warmup (not measured): builds the arena, so the timed reps see
+    // the steady-state allocation-free path.
+    sorter.sort_file::<u64>(input, output).unwrap();
+
+    let (mut gen_total, mut gen_min) = (0u64, u64::MAX);
+    let (mut merge_total, mut merge_min) = (0u64, u64::MAX);
+    let mut last = None;
+    for _ in 0..reps {
+        let r = sorter.sort_file::<u64>(input, output).unwrap();
+        gen_total += r.run_gen_nanos;
+        gen_min = gen_min.min(r.run_gen_nanos);
+        merge_total += r.merge_nanos;
+        merge_min = merge_min.min(r.merge_nanos);
+        last = Some(r);
+    }
+    let last = last.unwrap();
+    let meas = |total: u64, min: u64| Measurement {
+        mean: Duration::from_nanos(total / reps as u64),
+        min: Duration::from_nanos(min),
+        reps,
+        n,
+    };
+    ModeRun {
+        gen: meas(gen_total, gen_min),
+        merge: meas(merge_total, merge_min),
+        total: meas(gen_total + merge_total, gen_min + merge_min),
+        last,
+    }
+}
 
 fn main() {
     print_machine_info();
     let full = std::env::var("IPS4O_BENCH_FULL").is_ok();
+    // IPS4O_EXT_OVERLAP overrides both sorters' configs, which would
+    // turn the A/B below into A/A; note it and skip the comparison.
+    let env_pinned = std::env::var(ips4o::EXT_OVERLAP_ENV).is_ok();
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
@@ -36,43 +89,22 @@ fn main() {
     let output = dir.join("out.bin");
     datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xB17E).unwrap();
 
-    let sorter = Sorter::new(Config::default().with_threads(threads).with_extsort(
-        ExtSortConfig::default()
-            .with_chunk_bytes(chunk_elems * 8)
-            .with_fan_in(fan_in)
-            .with_buffer_bytes(64 * 1024)
-            .with_spill_dir(&dir),
-    ));
+    let ext = ExtSortConfig::default()
+        .with_chunk_bytes(chunk_elems * 8)
+        .with_fan_in(fan_in)
+        .with_buffer_bytes(64 * 1024)
+        .with_spill_dir(&dir);
+    let cfg = Config::default().with_threads(threads);
+    let on = Sorter::new(cfg.clone().with_extsort(ext.clone().with_overlap(true)));
+    let off = Sorter::new(cfg.with_extsort(ext.with_overlap(false)));
     println!(
         "# extsort io — n={n} u64 records, chunk={chunk_elems} elems, fan_in={fan_in}, \
          t={threads}, reps={reps}\n"
     );
 
-    // Warmup (not measured): builds the arena, so the timed reps see
-    // the steady-state allocation-free path.
-    sorter.sort_file::<u64>(&input, &output).unwrap();
-
-    let (mut gen_total, mut gen_min) = (0u64, u64::MAX);
-    let (mut merge_total, mut merge_min) = (0u64, u64::MAX);
-    let mut last = None;
-    for _ in 0..reps {
-        let r = sorter.sort_file::<u64>(&input, &output).unwrap();
-        gen_total += r.run_gen_nanos;
-        gen_min = gen_min.min(r.run_gen_nanos);
-        merge_total += r.merge_nanos;
-        merge_min = merge_min.min(r.merge_nanos);
-        last = Some(r);
-    }
-    let last = last.unwrap();
-    let meas = |total: u64, min: u64| Measurement {
-        mean: Duration::from_nanos(total / reps as u64),
-        min: Duration::from_nanos(min),
-        reps,
-        n,
-    };
-    let m_gen = meas(gen_total, gen_min);
-    let m_merge = meas(merge_total, merge_min);
-    let m_total = meas(gen_total + merge_total, gen_min + merge_min);
+    let m_on = run_mode(&on, &input, &output, reps, n);
+    let m_off = run_mode(&off, &input, &output, reps, n);
+    let last = &m_on.last;
 
     // Phase I/O volume: run generation reads the input once and writes
     // every record to a run; the merge tier moved everything else.
@@ -80,28 +112,49 @@ fn main() {
     let total_bytes = last.bytes_read + last.bytes_written;
     let merge_bytes = total_bytes - gen_bytes;
 
-    let mut table = Table::new(&["phase", "mean ms", "ns/elem", "throughput"]);
-    let mut row = |name: &str, m: &Measurement, bytes: u64| {
+    let mut table = Table::new(&["phase", "overlap", "mean ms", "ns/elem", "throughput"]);
+    let mut row = |name: &str, mode: &str, m: &Measurement, bytes: u64| {
         table.row(vec![
             name.to_string(),
+            mode.to_string(),
             format!("{:.2}", m.mean.as_secs_f64() * 1e3),
             format!("{:.2}", m.mean.as_nanos() as f64 / n as f64),
             bytes_per_sec_str(m.bytes_throughput(bytes)),
         ]);
     };
-    row("run-gen", &m_gen, gen_bytes);
-    row("merge", &m_merge, merge_bytes);
-    row("total", &m_total, total_bytes);
+    row("run-gen", "on", &m_on.gen, gen_bytes);
+    row("run-gen", "off", &m_off.gen, gen_bytes);
+    row("merge", "on", &m_on.merge, merge_bytes);
+    row("merge", "off", &m_off.merge, merge_bytes);
+    row("total", "on", &m_on.total, total_bytes);
+    row("total", "off", &m_off.total, total_bytes);
     table.print();
     println!(
         "\nruns_written={} merge_passes={} read={}B written={}B",
         last.runs_written, last.merge_passes, last.bytes_read, last.bytes_written
     );
+    println!(
+        "pipeline (overlap=on): prefetch_hits={} prefetch_stalls={} write_stalls={}",
+        last.prefetch_hits, last.prefetch_stalls, last.write_stalls
+    );
 
     let mut report = JsonReport::new("extsort_io", threads);
-    report.add_with_bytes("extsort-run-gen", "Uniform/u64", &m_gen, gen_bytes);
-    report.add_with_bytes("extsort-merge", "Uniform/u64", &m_merge, merge_bytes);
-    report.add_with_bytes("extsort-total", "Uniform/u64", &m_total, total_bytes);
+    for (mode, m) in [("on", &m_on), ("off", &m_off)] {
+        let detail = format!("Uniform/u64/overlap={mode}");
+        report.add_with_bytes("extsort-run-gen", &detail, &m.gen, gen_bytes);
+        report.add_with_bytes("extsort-merge", &detail, &m.merge, merge_bytes);
+        report.add_with_bytes_and_counters(
+            "extsort-total",
+            &detail,
+            &m.total,
+            total_bytes,
+            &[
+                ("ext_prefetch_hits", m.last.prefetch_hits),
+                ("ext_prefetch_stalls", m.last.prefetch_stalls),
+                ("ext_write_stalls", m.last.write_stalls),
+            ],
+        );
+    }
     report.emit_and_report();
 
     let raw = std::fs::read(&output).unwrap();
@@ -114,13 +167,37 @@ fn main() {
         && ips4o::util::is_sorted_by(&v, |a, b| a < b)
         && last.merge_passes > 1;
     std::fs::remove_dir_all(&dir).ok();
-    if ok {
-        println!(
-            "PASS: out-of-core output verified sorted ({} runs, {} merge passes)",
-            last.runs_written, last.merge_passes
-        );
-    } else {
+    if !ok {
         println!("FAIL: extsort output verification failed");
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: out-of-core output verified sorted ({} runs, {} merge passes)",
+        last.runs_written, last.merge_passes
+    );
+
+    // Overlap regression gate: on the multi-pass scenario the pipelined
+    // path must move bytes at least as fast as the serial fallback,
+    // within a 3% noise margin.
+    if env_pinned {
+        println!(
+            "SKIP: {} is set, both modes resolved identically; no overlap A/B",
+            ips4o::EXT_OVERLAP_ENV
+        );
+        return;
+    }
+    let bps_on = m_on.total.bytes_throughput(total_bytes);
+    let bps_off = m_off.total.bytes_throughput(total_bytes);
+    println!(
+        "overlap A/B (multi-pass): on={} off={} ratio={:.3}",
+        bytes_per_sec_str(bps_on),
+        bytes_per_sec_str(bps_off),
+        bps_on / bps_off
+    );
+    if bps_on >= 0.97 * bps_off {
+        println!("PASS: overlap-on >= 0.97x overlap-off bytes/sec on the multi-pass scenario");
+    } else {
+        println!("FAIL: overlap pipeline slower than serial fallback beyond noise margin");
         std::process::exit(1);
     }
 }

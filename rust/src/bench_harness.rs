@@ -212,6 +212,9 @@ struct JsonEntry {
     ns_per_elem: f64,
     throughput: f64,
     bytes_per_s: Option<f64>,
+    /// Extra named integer counters (e.g. the external tier's
+    /// prefetch-hit/stall tallies), appended verbatim to the entry.
+    counters: Vec<(String, u64)>,
 }
 
 /// Accumulator for a bench's machine-readable results. Build one per
@@ -248,16 +251,38 @@ impl JsonReport {
 
     /// Record one measurement for `algo` on workload `detail`.
     pub fn add(&mut self, algo: &str, detail: &str, m: &Measurement) {
-        self.push_entry(algo, detail, m, None);
+        self.push_entry(algo, detail, m, None, &[]);
     }
 
     /// Like [`add`](JsonReport::add), plus the bytes one repetition
     /// moved — the entry gains a `bytes_per_s` field.
     pub fn add_with_bytes(&mut self, algo: &str, detail: &str, m: &Measurement, bytes: u64) {
-        self.push_entry(algo, detail, m, Some(m.bytes_throughput(bytes)));
+        self.push_entry(algo, detail, m, Some(m.bytes_throughput(bytes)), &[]);
     }
 
-    fn push_entry(&mut self, algo: &str, detail: &str, m: &Measurement, bytes_per_s: Option<f64>) {
+    /// Like [`add_with_bytes`](JsonReport::add_with_bytes), plus named
+    /// integer counters appended to the entry (e.g. the external tier's
+    /// `ext_prefetch_hits`/`ext_prefetch_stalls`/`ext_write_stalls`).
+    /// Counter names become JSON keys, so keep them plain identifiers.
+    pub fn add_with_bytes_and_counters(
+        &mut self,
+        algo: &str,
+        detail: &str,
+        m: &Measurement,
+        bytes: u64,
+        counters: &[(&str, u64)],
+    ) {
+        self.push_entry(algo, detail, m, Some(m.bytes_throughput(bytes)), counters);
+    }
+
+    fn push_entry(
+        &mut self,
+        algo: &str,
+        detail: &str,
+        m: &Measurement,
+        bytes_per_s: Option<f64>,
+        counters: &[(&str, u64)],
+    ) {
         let n = m.n.max(1);
         self.entries.push(JsonEntry {
             algo: algo.to_string(),
@@ -269,6 +294,7 @@ impl JsonReport {
             ns_per_elem: m.mean.as_nanos() as f64 / n as f64,
             throughput: m.throughput(),
             bytes_per_s,
+            counters: counters.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         });
     }
 
@@ -280,10 +306,13 @@ impl JsonReport {
         s.push_str(&format!("  \"threads\": {},\n", self.threads));
         s.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
-            let bytes = e
+            let mut bytes = e
                 .bytes_per_s
                 .map(|b| format!(", \"bytes_per_s\": {b:.1}"))
                 .unwrap_or_default();
+            for (k, v) in &e.counters {
+                bytes.push_str(&format!(", \"{}\": {v}", json_escape(k)));
+            }
             s.push_str(&format!(
                 "    {{\"algo\": \"{}\", \"detail\": \"{}\", \"n\": {}, \"reps\": {}, \
                  \"mean_ns\": {}, \"min_ns\": {}, \"ns_per_elem\": {:.3}, \
@@ -436,6 +465,31 @@ mod tests {
         assert!(s.contains("\"bytes_per_s\": 4000.0"));
         // The plain entry must not gain the field.
         assert_eq!(s.matches("bytes_per_s").count(), 1);
+    }
+
+    #[test]
+    fn json_counters_field_appended_per_entry() {
+        let m = Measurement {
+            mean: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+            reps: 1,
+            n: 100,
+        };
+        let mut r = JsonReport::new("unit_test_counters", 1);
+        r.add_with_bytes_and_counters(
+            "extsort",
+            "overlap=on",
+            &m,
+            800,
+            &[("ext_prefetch_hits", 7), ("ext_write_stalls", 0)],
+        );
+        r.add_with_bytes("extsort", "overlap=off", &m, 800);
+        let s = r.to_json();
+        assert!(s.contains("\"ext_prefetch_hits\": 7"));
+        assert!(s.contains("\"ext_write_stalls\": 0"));
+        // Counters attach only to the entry that asked for them.
+        assert_eq!(s.matches("ext_prefetch_hits").count(), 1);
+        assert_eq!(s.matches("bytes_per_s").count(), 2);
     }
 
     #[test]

@@ -84,6 +84,20 @@ pub struct Config {
 /// runs remain. Spill files live under `spill_dir` (the OS temp
 /// directory when `None`) in a per-job subdirectory that is removed on
 /// completion — success, error, or panic alike.
+///
+/// # Clamping rules
+///
+/// Every knob is clamped rather than rejected, both by the builders and
+/// again at use sites, so no combination of values can panic the tier:
+///
+/// * `chunk_bytes` — at least 1 byte; the run-generation chunk holds at
+///   least **one record** regardless of record width.
+/// * `fan_in` — at least 2 (a 1-way "merge" would never converge).
+/// * `buffer_bytes` — at least 1 byte; every run cursor's raw staging
+///   is additionally widened to at least **one record width**, so a
+///   `buffer_bytes` smaller than the record (e.g. 16 with `Bytes100`)
+///   degrades to record-at-a-time streaming instead of slicing out of
+///   bounds.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExtSortConfig {
     /// Bytes of input sorted per run-generation chunk (also the spill
@@ -92,11 +106,28 @@ pub struct ExtSortConfig {
     /// Maximum number of runs merged per external pass (≥ 2).
     pub fan_in: usize,
     /// Bytes of buffering per open stream: each run cursor's refill
-    /// block and the writers' staging block.
+    /// block and the writers' staging block. Clamped to at least one
+    /// record width per cursor at use sites.
     pub buffer_bytes: usize,
     /// Directory for spill runs; `None` uses [`std::env::temp_dir`].
     pub spill_dir: Option<std::path::PathBuf>,
+    /// Overlap I/O with compute (default `true`): run generation spills
+    /// chunk *i* on a writer thread while chunk *i+1* sorts, and the
+    /// merge phase prefetches run blocks and encodes output on
+    /// dedicated threads while the pool merges. `false` restores the
+    /// serial per-phase path (one coordinating thread, only the input
+    /// decode double-buffered) for A/B comparison. The
+    /// `IPS4O_EXT_OVERLAP` environment variable, when set, overrides
+    /// this field process-wide — `off`/`0`/`false`/`no` disable, any
+    /// other value enables (see
+    /// [`effective_overlap`](ExtSortConfig::effective_overlap)).
+    pub overlap: bool,
 }
+
+/// Environment variable overriding [`ExtSortConfig::overlap`]:
+/// `off`/`0`/`false`/`no` force the serial path, anything else forces
+/// the pipelined path; unset defers to the config field.
+pub const EXT_OVERLAP_ENV: &str = "IPS4O_EXT_OVERLAP";
 
 impl Default for ExtSortConfig {
     fn default() -> Self {
@@ -107,6 +138,7 @@ impl Default for ExtSortConfig {
             fan_in: 16,
             buffer_bytes: 1 << 20,
             spill_dir: None, // OS temp dir
+            overlap: true,
         }
     }
 }
@@ -135,6 +167,24 @@ impl ExtSortConfig {
     pub fn with_spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.spill_dir = Some(dir.into());
         self
+    }
+
+    /// Builder-style I/O-overlap toggle (see
+    /// [`overlap`](ExtSortConfig::overlap)).
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// The overlap setting a job actually runs with: the
+    /// [`EXT_OVERLAP_ENV`] environment variable when set (kill switch
+    /// for A/B comparison without rebuilding configs), otherwise the
+    /// [`overlap`](ExtSortConfig::overlap) field.
+    pub fn effective_overlap(&self) -> bool {
+        match std::env::var(EXT_OVERLAP_ENV) {
+            Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false" | "no"),
+            Err(_) => self.overlap,
+        }
     }
 }
 
@@ -411,14 +461,24 @@ mod tests {
         assert_eq!(e.fan_in, 16);
         assert_eq!(e.buffer_bytes, 1 << 20);
         assert!(e.spill_dir.is_none(), "OS temp dir by default");
+        assert!(e.overlap, "I/O overlap is on by default");
         let e = ExtSortConfig::default()
             .with_chunk_bytes(0)
             .with_fan_in(1)
             .with_buffer_bytes(0)
-            .with_spill_dir("/tmp/spill");
+            .with_spill_dir("/tmp/spill")
+            .with_overlap(false);
         assert_eq!(e.chunk_bytes, 1, "chunk clamps to at least one byte");
         assert_eq!(e.fan_in, 2, "fan-in clamps to a real merge");
         assert_eq!(e.buffer_bytes, 1);
+        assert!(!e.overlap);
+        // Without the env override, effective == configured. (The env
+        // override path itself is exercised by ci.sh's
+        // IPS4O_EXT_OVERLAP=off replay of the extsort suite.)
+        if std::env::var(EXT_OVERLAP_ENV).is_err() {
+            assert!(!e.effective_overlap());
+            assert!(ExtSortConfig::default().effective_overlap());
+        }
         assert_eq!(
             e.spill_dir.as_deref(),
             Some(std::path::Path::new("/tmp/spill"))

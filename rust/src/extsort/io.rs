@@ -112,6 +112,35 @@ pub(crate) struct SpillRun {
     pub(crate) records: u64,
 }
 
+/// Read the next block of a spill run: up to `raw.len() / T::WIDTH`
+/// records (never more than `*remaining`) decoded into `out`, with
+/// `*remaining` decremented by what arrived. Shared by the serial
+/// [`RunCursor::refill`] and the pipelined merge's prefetch thread so
+/// both paths have identical short-file semantics: a run shorter than
+/// its recorded length surfaces as an error, never as silent loss.
+pub(crate) fn read_run_block<T: ExtRecord>(
+    src: &mut File,
+    remaining: &mut u64,
+    raw: &mut [u8],
+    out: &mut Vec<T>,
+) -> Result<(), ExtSortError> {
+    debug_assert!(
+        raw.len() >= T::WIDTH,
+        "cursor staging narrower than one record (clamp missing)"
+    );
+    let cap = (raw.len() / T::WIDTH).max(1);
+    let want = (*remaining as usize).min(cap);
+    let count = read_records(src, &mut raw[..want * T::WIDTH], out)?;
+    if count != want {
+        return Err(ExtSortError::Io(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "spill run shorter than its recorded length",
+        )));
+    }
+    *remaining -= want as u64;
+    Ok(())
+}
+
 /// Streaming read cursor over one spill run during a k-way merge.
 ///
 /// Owns a decoded block buffer (recycled from [`super::ExtScratch`])
@@ -127,18 +156,25 @@ pub(crate) struct RunCursor<T> {
 }
 
 impl<T: ExtRecord> RunCursor<T> {
-    /// Open a cursor over `run`, adopting recycled block buffers.
-    pub(crate) fn open(run: &SpillRun, buf: Vec<T>, raw: Vec<u8>) -> Result<Self, ExtSortError> {
-        let src = File::open(&run.path)?;
-        let mut c = RunCursor {
+    /// Build a cursor over an already-opened run file, adopting
+    /// recycled block buffers. Infallible by design: the caller opens
+    /// every file of a merge group *before* any buffer leaves the
+    /// scratch arena, so an open failure cannot strand buffers inside
+    /// half-built cursors. The raw staging is widened to at least one
+    /// record so a `buffer_bytes` below the record width degrades to
+    /// record-at-a-time streaming instead of an out-of-bounds slice.
+    pub(crate) fn from_parts(src: File, records: u64, mut buf: Vec<T>, mut raw: Vec<u8>) -> Self {
+        if raw.len() < T::WIDTH {
+            raw.resize(T::WIDTH, 0);
+        }
+        buf.clear();
+        RunCursor {
             src,
-            remaining: run.records,
+            remaining: records,
             buf,
             pos: 0,
             raw,
-        };
-        c.buf.clear();
-        Ok(c)
+        }
     }
 
     /// Records currently decoded and unconsumed.
@@ -175,17 +211,8 @@ impl<T: ExtRecord> RunCursor<T> {
         if self.buffered() > 0 || self.remaining == 0 {
             return Ok(());
         }
-        let cap = (self.raw.len() / T::WIDTH).max(1);
-        let want = (self.remaining as usize).min(cap);
-        let count = read_records(&mut self.src, &mut self.raw[..want * T::WIDTH], &mut self.buf)?;
-        if count != want {
-            return Err(ExtSortError::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "spill run shorter than its recorded length",
-            )));
-        }
+        read_run_block(&mut self.src, &mut self.remaining, &mut self.raw, &mut self.buf)?;
         self.pos = 0;
-        self.remaining -= want as u64;
         Ok(())
     }
 
@@ -399,6 +426,29 @@ mod tests {
         let (_, bytes) = w.finish().unwrap();
         assert_eq!(bytes, 800);
         assert_eq!(sink, encode_all(&recs));
+    }
+
+    #[test]
+    fn run_cursor_with_tiny_raw_staging_streams_record_at_a_time() {
+        // Regression: a raw staging buffer narrower than one record
+        // used to slice out of bounds in `refill`. `from_parts` clamps
+        // the staging to one record width, so the cursor degrades to
+        // record-at-a-time streaming instead of panicking.
+        let path = std::env::temp_dir().join(format!("ips4o-tinyraw-{}.bin", std::process::id()));
+        let recs: Vec<u64> = (0..5).collect();
+        std::fs::write(&path, encode_all(&recs)).unwrap();
+        let src = File::open(&path).unwrap();
+        let mut c = RunCursor::<u64>::from_parts(src, 5, Vec::with_capacity(1), vec![0u8; 3]);
+        let mut out = Vec::new();
+        while !c.exhausted() {
+            c.refill().unwrap();
+            c.take_all(&mut out);
+        }
+        assert_eq!(out, recs);
+        let (buf, raw) = c.into_buffers();
+        assert!(buf.capacity() >= 1);
+        assert_eq!(raw.len(), 8, "staging clamped to one record width");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Phase 2: cascading k-way merge of spill runs.
 //!
-//! The driver opens up to `fan_in` [`RunCursor`]s, repeatedly stages a
+//! The driver opens up to `fan_in` run cursors, repeatedly stages a
 //! *window* of records that is guaranteed complete — every record
 //! `<= cutoff`, where the cutoff is the smallest last-buffered record
 //! among cursors that still have file data — and hands the window to
@@ -11,18 +11,62 @@
 //! and the cutoff rule guarantees progress: at least one cursor drains
 //! its whole buffer every round. When more than `fan_in` runs exist,
 //! groups are merged into intermediate spill runs until one pass can
-//! finish to the output sink.
+//! finish to the output sink; the cascade merges the *minimal* leading
+//! group that brings the remainder down to `fan_in`, so a marginal
+//! overflow (`fan_in + 1` runs) rewrites only two runs, not nearly all
+//! of the data.
+//!
+//! # Pipelined mode
+//!
+//! With overlap enabled (the default, see
+//! [`crate::config::ExtSortConfig::overlap`]) each group merge runs as
+//! a three-stage pipeline so read, merge, and write proceed
+//! concurrently:
+//!
+//! ```text
+//!   prefetcher ──(per-slot filled, cap 1)──▶ consumer ──(staged, cap 2)──▶ writer
+//!       ▲                                      │  ▲                          │
+//!       └────── (slot, empty) return ──────────┘  └──── empty stage return ──┘
+//! ```
+//!
+//! The prefetcher owns the run files and reads each cursor's *next*
+//! block while the consumer merges the current one; the writer encodes
+//! and flushes the previous staged window while the pool merges the
+//! next. The hand-offs are demand-driven token rings: every buffer the
+//! prefetcher fills was first returned by the consumer, so at most one
+//! filled block per slot is ever in flight and no `send` can block —
+//! which is what makes the drain-before-join teardown below
+//! deadlock-free on every error and panic path. The cutoff rule stays
+//! sound because a prefetched-but-unconsumed block only holds records
+//! `>=` the current block's last (runs are sorted), so counting it as
+//! "file data left" (`unseen > 0`) is exactly as conservative as the
+//! serial path's `remaining > 0`.
 
+use std::fs::File;
 use std::io::Write;
 use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Mutex};
 
 use super::codec::ExtRecord;
-use super::io::{RecordWriter, RunCursor, SpillGuard, SpillRun};
+use super::io::{read_run_block, RecordWriter, RunCursor, SpillGuard, SpillRun};
 use super::{ExtScratch, ExtSortError, ExtSortReport};
 use crate::merge::{merge_sort_runs, merge_sort_runs_par};
 use crate::metrics::ScratchCounters;
 use crate::parallel::ThreadPool;
 use crate::radix::RadixKey;
+
+/// Per-group pipeline observability, folded into
+/// [`crate::metrics::ScratchCounters`] and [`ExtSortReport`] by
+/// [`merge_group`]. All zero on the serial path.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct PipeStats {
+    /// Block requests satisfied without waiting (prefetch won the race).
+    pub hits: u64,
+    /// Block requests that blocked on the prefetcher (read-bound).
+    pub stalls: u64,
+    /// Stage hand-offs that blocked on the writer (write-bound).
+    pub write_stalls: u64,
+}
 
 /// Merge `runs` down to a single sorted stream written to `output`,
 /// cascading through intermediate spill runs while more than `fan_in`
@@ -36,18 +80,27 @@ pub(crate) fn merge_runs<T, W>(
     pool: Option<&ThreadPool>,
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
+    overlap: bool,
 ) -> Result<(), ExtSortError>
 where
     T: ExtRecord,
-    W: Write,
+    W: Write + Send,
 {
     let fan_in = scratch.fan_in;
     let mut next_id = runs.len() as u64;
     while runs.len() > fan_in {
-        let group: Vec<SpillRun> = runs.drain(..fan_in).collect();
+        // Minimal leading group that brings the remainder to <= fan_in:
+        // each intermediate pass replaces k runs with 1, shrinking the
+        // count by k-1, so pick k so the excess lands on a multiple of
+        // fan_in - 1. k is always in [2, fan_in], and a marginal
+        // overflow (fan_in + 1 runs) rewrites just two runs instead of
+        // cascading nearly all of the data.
+        let excess = runs.len() - fan_in;
+        let k = (excess - 1) % (fan_in - 1) + 2;
+        let group: Vec<SpillRun> = runs.drain(..k).collect();
         let (path, mut dst) = spill.create_run(next_id)?;
         next_id += 1;
-        let records = merge_group(group, &mut dst, scratch, pool, counters, report)?;
+        let records = merge_group(group, &mut dst, scratch, pool, counters, report, overlap)?;
         counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
         counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
         report.runs_written += 1;
@@ -55,7 +108,7 @@ where
         runs.push(SpillRun { path, records });
     }
     if !runs.is_empty() {
-        merge_group(runs, &mut *output, scratch, pool, counters, report)?;
+        merge_group(runs, &mut *output, scratch, pool, counters, report, overlap)?;
         counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
         report.merge_passes += 1;
     }
@@ -65,6 +118,13 @@ where
 
 /// Merge one group of runs (`group.len() <= fan_in`) into `dst`,
 /// deleting the source files on success. Returns the records written.
+///
+/// Every run file is opened *before* any buffer leaves the scratch
+/// arena, so an open failure leaks nothing; the serial and pipelined
+/// bodies both restore every taken buffer on success and on error
+/// (regression: error paths used to drop the cursors without the
+/// restore loop, silently re-allocating on the next warm job).
+#[allow(clippy::too_many_arguments)]
 fn merge_group<T, W>(
     group: Vec<SpillRun>,
     dst: W,
@@ -72,79 +132,27 @@ fn merge_group<T, W>(
     pool: Option<&ThreadPool>,
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
+    overlap: bool,
 ) -> Result<u64, ExtSortError>
 where
     T: ExtRecord,
-    W: Write,
+    W: Write + Send,
 {
     debug_assert!(group.len() <= scratch.fan_in);
     let in_records: u64 = group.iter().map(|r| r.records).sum();
-    let mut cursors: Vec<RunCursor<T>> = Vec::with_capacity(group.len());
-    for (slot, run) in group.iter().enumerate() {
-        let buf = std::mem::take(&mut scratch.cursor_bufs[slot]);
-        let raw = std::mem::take(&mut scratch.cursor_raw[slot]);
-        cursors.push(RunCursor::open(run, buf, raw)?);
+    let mut files = Vec::with_capacity(group.len());
+    for run in &group {
+        files.push(File::open(&run.path)?);
     }
 
-    let mut writer = RecordWriter::<_, T>::new(dst, &mut scratch.write_raw);
-    let mut written = 0u64;
-    loop {
-        for c in cursors.iter_mut() {
-            c.refill()?;
-        }
-        if cursors.iter().all(|c| c.exhausted()) {
-            break;
-        }
-        // Smallest last-buffered record among cursors with file data
-        // left: nothing still on disk can sort below it, so every
-        // buffered record <= cutoff is globally placeable this round.
-        let mut cutoff: Option<T> = None;
-        for c in cursors.iter().filter(|c| c.has_more_file()) {
-            let last = *c.last_buffered().expect("refilled cursor with file data");
-            if cutoff.map_or(true, |cur| T::radix_less(&last, &cur)) {
-                cutoff = Some(last);
-            }
-        }
-        scratch.stage.clear();
-        match cutoff {
-            Some(cut) => {
-                for c in cursors.iter_mut() {
-                    c.take_through(&cut, &mut scratch.stage);
-                }
-            }
-            None => {
-                for c in cursors.iter_mut() {
-                    c.take_all(&mut scratch.stage);
-                }
-            }
-        }
-        debug_assert!(!scratch.stage.is_empty(), "merge window made no progress");
-        match pool {
-            Some(p) => merge_sort_runs_par(
-                &mut scratch.stage,
-                p,
-                &mut scratch.merge,
-                &T::radix_less,
-                Some(counters),
-            ),
-            None => merge_sort_runs(
-                &mut scratch.stage,
-                &mut scratch.merge,
-                &T::radix_less,
-                Some(counters),
-            ),
-        }
-        writer.write_all(&scratch.stage)?;
-        written += scratch.stage.len() as u64;
-    }
-    let (_, bytes) = writer.finish()?;
+    let (written, bytes, stats) = if overlap {
+        merge_group_pipelined(files, &group, dst, scratch, pool, counters)?
+    } else {
+        let (written, bytes) = merge_group_serial(files, &group, dst, scratch, pool, counters)?;
+        (written, bytes, PipeStats::default())
+    };
     debug_assert_eq!(written, in_records, "merge lost or invented records");
 
-    for (slot, cursor) in cursors.into_iter().enumerate() {
-        let (buf, raw) = cursor.into_buffers();
-        scratch.cursor_bufs[slot] = buf;
-        scratch.cursor_raw[slot] = raw;
-    }
     for run in &group {
         let _ = std::fs::remove_file(&run.path);
     }
@@ -153,7 +161,578 @@ where
         .ext_bytes_read
         .fetch_add(in_records * T::WIDTH as u64, Ordering::Relaxed);
     counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    counters
+        .ext_prefetch_hits
+        .fetch_add(stats.hits, Ordering::Relaxed);
+    counters
+        .ext_prefetch_stalls
+        .fetch_add(stats.stalls, Ordering::Relaxed);
+    counters
+        .ext_write_stalls
+        .fetch_add(stats.write_stalls, Ordering::Relaxed);
     report.bytes_read += in_records * T::WIDTH as u64;
     report.bytes_written += bytes;
+    report.prefetch_hits += stats.hits;
+    report.prefetch_stalls += stats.stalls;
+    report.write_stalls += stats.write_stalls;
     Ok(written)
+}
+
+/// The pre-overlap single-thread body: refill → merge → write in
+/// lockstep on the calling thread. Kept verbatim behind the
+/// `IPS4O_EXT_OVERLAP=off` kill switch as the A/B baseline.
+fn merge_group_serial<T, W>(
+    files: Vec<File>,
+    group: &[SpillRun],
+    dst: W,
+    scratch: &mut ExtScratch<T>,
+    pool: Option<&ThreadPool>,
+    counters: &ScratchCounters,
+) -> Result<(u64, u64), ExtSortError>
+where
+    T: ExtRecord,
+    W: Write,
+{
+    let mut cursors: Vec<RunCursor<T>> = files
+        .into_iter()
+        .zip(group)
+        .enumerate()
+        .map(|(slot, (file, run))| {
+            RunCursor::from_parts(
+                file,
+                run.records,
+                std::mem::take(&mut scratch.cursor_bufs[slot]),
+                std::mem::take(&mut scratch.cursor_raw[slot]),
+            )
+        })
+        .collect();
+    let mut stage = std::mem::take(&mut scratch.stage_bufs[0]);
+    let write_raw = &mut scratch.write_raw;
+    let merge_scratch = &mut scratch.merge;
+
+    let result = (|| -> Result<(u64, u64), ExtSortError> {
+        let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
+        let mut written = 0u64;
+        loop {
+            for c in cursors.iter_mut() {
+                c.refill()?;
+            }
+            if cursors.iter().all(|c| c.exhausted()) {
+                break;
+            }
+            // Smallest last-buffered record among cursors with file
+            // data left: nothing still on disk can sort below it, so
+            // every buffered record <= cutoff is globally placeable.
+            let mut cutoff: Option<T> = None;
+            for c in cursors.iter().filter(|c| c.has_more_file()) {
+                let last = *c.last_buffered().expect("refilled cursor with file data");
+                if cutoff.map_or(true, |cur| T::radix_less(&last, &cur)) {
+                    cutoff = Some(last);
+                }
+            }
+            stage.clear();
+            match cutoff {
+                Some(cut) => {
+                    for c in cursors.iter_mut() {
+                        c.take_through(&cut, &mut stage);
+                    }
+                }
+                None => {
+                    for c in cursors.iter_mut() {
+                        c.take_all(&mut stage);
+                    }
+                }
+            }
+            debug_assert!(!stage.is_empty(), "merge window made no progress");
+            match pool {
+                Some(p) => {
+                    merge_sort_runs_par(&mut stage, p, merge_scratch, &T::radix_less, Some(counters))
+                }
+                None => merge_sort_runs(&mut stage, merge_scratch, &T::radix_less, Some(counters)),
+            }
+            writer.write_all(&stage)?;
+            written += stage.len() as u64;
+        }
+        let (_, bytes) = writer.finish()?;
+        Ok((written, bytes))
+    })();
+
+    // Unconditional restore: runs on success *and* on every refill or
+    // writer error, keeping the arena's accounting exact.
+    stage.clear();
+    scratch.stage_bufs[0] = stage;
+    for (slot, cursor) in cursors.into_iter().enumerate() {
+        let (mut buf, raw) = cursor.into_buffers();
+        buf.clear();
+        scratch.cursor_bufs[slot] = buf;
+        scratch.cursor_raw[slot] = raw;
+    }
+    result
+}
+
+/// Consumer-side view of one run in the pipelined merge: same
+/// cutoff/window interface as [`RunCursor`], but `refill` swaps in a
+/// block the prefetch thread already read instead of touching the file.
+/// `unseen` counts records not yet received (buffered in the channel or
+/// still on disk) — the pipelined analogue of `RunCursor::remaining`.
+struct PipeCursor<T> {
+    cur: Vec<T>,
+    pos: usize,
+    unseen: u64,
+    rx: mpsc::Receiver<Vec<T>>,
+    parked: Vec<Vec<T>>,
+}
+
+/// The consumer's half of the pipeline tore down early (prefetcher or
+/// writer exited); the real error is in the shared fault slot.
+struct PipeBroken;
+
+impl<T: ExtRecord> PipeCursor<T> {
+    fn buffered(&self) -> usize {
+        self.cur.len() - self.pos
+    }
+
+    fn has_more(&self) -> bool {
+        self.unseen > 0
+    }
+
+    fn exhausted(&self) -> bool {
+        self.buffered() == 0 && self.unseen == 0
+    }
+
+    fn last_buffered(&self) -> Option<&T> {
+        if self.buffered() == 0 {
+            None
+        } else {
+            self.cur.last()
+        }
+    }
+
+    fn take_through(&mut self, cutoff: &T, stage: &mut Vec<T>) {
+        let take = self.cur[self.pos..].partition_point(|x| !T::radix_less(cutoff, x));
+        stage.extend_from_slice(&self.cur[self.pos..self.pos + take]);
+        self.pos += take;
+    }
+
+    fn take_all(&mut self, stage: &mut Vec<T>) {
+        stage.extend_from_slice(&self.cur[self.pos..]);
+        self.pos = self.cur.len();
+    }
+
+    /// Swap in the next prefetched block if the current one is drained.
+    /// The emptied block goes back to the prefetcher as the read token
+    /// for this slot's block after next — or parks here once the slot
+    /// has nothing left to read.
+    fn refill(
+        &mut self,
+        slot: usize,
+        ret_tx: &mpsc::Sender<(usize, Vec<T>)>,
+        stats: &mut PipeStats,
+    ) -> Result<(), PipeBroken> {
+        if self.buffered() > 0 || self.unseen == 0 {
+            return Ok(());
+        }
+        let block = match self.rx.try_recv() {
+            Ok(b) => {
+                stats.hits += 1;
+                b
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                stats.stalls += 1;
+                match self.rx.recv() {
+                    Ok(b) => b,
+                    Err(_) => return Err(PipeBroken),
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => return Err(PipeBroken),
+        };
+        debug_assert!(!block.is_empty(), "prefetcher sent an empty block");
+        self.unseen -= block.len() as u64;
+        let mut old = std::mem::replace(&mut self.cur, block);
+        self.pos = 0;
+        old.clear();
+        if self.unseen > 0 {
+            if let Err(e) = ret_tx.send((slot, old)) {
+                self.parked.push(e.0 .1);
+            }
+        } else {
+            self.parked.push(old);
+        }
+        Ok(())
+    }
+}
+
+/// Read one block for `slot` and hand it to the consumer. Returns
+/// `false` when the prefetcher should exit: read error (recorded in
+/// `fault`) or the consumer already tore down. Buffers never escape —
+/// on any failure they land in `held`.
+#[allow(clippy::too_many_arguments)]
+fn prefetch_fill<T: ExtRecord>(
+    file: &mut File,
+    remaining: &mut u64,
+    raw: &mut [u8],
+    tx: &mpsc::SyncSender<Vec<T>>,
+    mut buf: Vec<T>,
+    fault: &Mutex<Option<ExtSortError>>,
+    held: &mut Vec<Vec<T>>,
+) -> bool {
+    if *remaining == 0 {
+        held.push(buf);
+        return true;
+    }
+    buf.clear();
+    match read_run_block(file, remaining, raw, &mut buf) {
+        Ok(()) => match tx.send(buf) {
+            Ok(()) => true,
+            Err(e) => {
+                held.push(e.0);
+                false
+            }
+        },
+        Err(e) => {
+            *fault.lock().unwrap() = Some(e);
+            held.push(buf);
+            false
+        }
+    }
+}
+
+/// Everything the pipeline must hand back for the scratch restore,
+/// alongside the two ends' results.
+struct PipeOutcome<T> {
+    consumer: Result<u64, ExtSortError>,
+    writer: Result<u64, ExtSortError>,
+    stats: PipeStats,
+    cursor_bufs: Vec<Vec<T>>,
+    raws: Vec<Vec<u8>>,
+    stages: Vec<Vec<T>>,
+}
+
+/// The three-stage pipelined group merge (see the module docs for the
+/// topology). The consumer runs on the calling thread so the merge
+/// itself can use the caller's [`ThreadPool`].
+fn merge_group_pipelined<T, W>(
+    files: Vec<File>,
+    group: &[SpillRun],
+    dst: W,
+    scratch: &mut ExtScratch<T>,
+    pool: Option<&ThreadPool>,
+    counters: &ScratchCounters,
+) -> Result<(u64, u64, PipeStats), ExtSortError>
+where
+    T: ExtRecord,
+    W: Write + Send,
+{
+    let n = group.len();
+    let fan_in = scratch.fan_in;
+
+    // Take every buffer the pipeline needs out of the arena up front:
+    // slot s double-buffers through cursor_bufs[s] (prefetcher's side)
+    // and cursor_bufs[fan_in + s] (consumer's current block); the two
+    // stage buffers ping-pong between consumer and writer.
+    let mut raws: Vec<Vec<u8>> = (0..n)
+        .map(|s| std::mem::take(&mut scratch.cursor_raw[s]))
+        .collect();
+    for raw in raws.iter_mut() {
+        if raw.len() < T::WIDTH {
+            raw.resize(T::WIDTH, 0);
+        }
+    }
+    let seed_bufs: Vec<Vec<T>> = (0..n)
+        .map(|s| std::mem::take(&mut scratch.cursor_bufs[s]))
+        .collect();
+    let cons_bufs: Vec<Vec<T>> = (0..n)
+        .map(|s| std::mem::take(&mut scratch.cursor_bufs[fan_in + s]))
+        .collect();
+    let mut stage_spares: Vec<Vec<T>> = std::mem::take(&mut scratch.stage_bufs);
+    let write_raw = &mut scratch.write_raw;
+    let merge_scratch = &mut scratch.merge;
+
+    let mut filled_txs = Vec::with_capacity(n);
+    let mut filled_rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::sync_channel::<Vec<T>>(1);
+        filled_txs.push(tx);
+        filled_rxs.push(rx);
+    }
+    let (ret_tx, ret_rx) = mpsc::channel::<(usize, Vec<T>)>();
+    // Two stage buffers total, so capacity 2 means stage sends never
+    // block either — the "write stall" is the blocking wait for an
+    // *empty* stage to come back, counted in the consumer loop.
+    let (stage_tx, stage_rx) = mpsc::sync_channel::<Vec<T>>(2);
+    let (stage_ret_tx, stage_ret_rx) = mpsc::channel::<Vec<T>>();
+
+    let fault: Mutex<Option<ExtSortError>> = Mutex::new(None);
+    let remaining: Vec<u64> = group.iter().map(|r| r.records).collect();
+
+    let outcome: PipeOutcome<T> = std::thread::scope(|s| {
+        let prefetcher = s.spawn({
+            let fault = &fault;
+            let mut files = files;
+            let mut remaining = remaining;
+            let mut raws = raws;
+            let mut seed = seed_bufs;
+            let filled_txs = filled_txs;
+            let ret_rx = ret_rx;
+            move || {
+                let mut held: Vec<Vec<T>> = Vec::with_capacity(n);
+                let mut alive = true;
+                // Seed one block per slot; from here on every read
+                // overlaps the consumer's merging of the prior block.
+                while let Some(buf) = seed.pop() {
+                    let slot = seed.len();
+                    if !prefetch_fill(
+                        &mut files[slot],
+                        &mut remaining[slot],
+                        &mut raws[slot],
+                        &filled_txs[slot],
+                        buf,
+                        fault,
+                        &mut held,
+                    ) {
+                        alive = false;
+                        held.append(&mut seed);
+                        break;
+                    }
+                }
+                if alive {
+                    // Demand loop: each returned empty buffer is the
+                    // token to read that slot's next block. Ends when
+                    // the consumer drops ret_tx (teardown) or a read
+                    // fails; dropping filled_txs on exit is what lets
+                    // the consumer's drains terminate.
+                    while let Ok((slot, buf)) = ret_rx.recv() {
+                        if !prefetch_fill(
+                            &mut files[slot],
+                            &mut remaining[slot],
+                            &mut raws[slot],
+                            &filled_txs[slot],
+                            buf,
+                            fault,
+                            &mut held,
+                        ) {
+                            break;
+                        }
+                    }
+                }
+                (raws, held)
+            }
+        });
+
+        let writer = s.spawn({
+            let fault = &fault;
+            let stage_rx = stage_rx;
+            let stage_ret_tx = stage_ret_tx;
+            move || {
+                let mut held: Vec<Vec<T>> = Vec::new();
+                let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
+                while let Ok(stage) = stage_rx.recv() {
+                    match writer.write_all(&stage) {
+                        Ok(()) => {
+                            let mut stage = stage;
+                            stage.clear();
+                            if let Err(e) = stage_ret_tx.send(stage) {
+                                held.push(e.0);
+                            }
+                        }
+                        Err(e) => {
+                            *fault.lock().unwrap() = Some(ExtSortError::Io(e));
+                            held.push(stage);
+                            // Drain-before-return: drop our return
+                            // sender first so the consumer can't block
+                            // on it, then park every in-flight stage so
+                            // the arena restore stays exact.
+                            drop(stage_ret_tx);
+                            for stg in stage_rx.iter() {
+                                held.push(stg);
+                            }
+                            return (Err(placeholder_fault()), held);
+                        }
+                    }
+                }
+                // Clean close: consumer dropped stage_tx after the last
+                // window; flush and report the byte count.
+                drop(stage_ret_tx);
+                match writer.finish() {
+                    Ok((_, bytes)) => (Ok(bytes), held),
+                    Err(e) => {
+                        *fault.lock().unwrap() = Some(ExtSortError::Io(e));
+                        (Err(placeholder_fault()), held)
+                    }
+                }
+            }
+        });
+
+        // Consumer: the merge loop proper, on the calling thread.
+        let mut stats = PipeStats::default();
+        let mut cursors: Vec<PipeCursor<T>> = cons_bufs
+            .into_iter()
+            .zip(filled_rxs)
+            .zip(group)
+            .map(|((mut cur, rx), run)| {
+                cur.clear();
+                PipeCursor {
+                    cur,
+                    pos: 0,
+                    unseen: run.records,
+                    rx,
+                    parked: Vec::new(),
+                }
+            })
+            .collect();
+
+        let consumer: Result<u64, ExtSortError> = (|| {
+            let mut written = 0u64;
+            loop {
+                for (slot, c) in cursors.iter_mut().enumerate() {
+                    if c.refill(slot, &ret_tx, &mut stats).is_err() {
+                        return Err(placeholder_fault());
+                    }
+                }
+                if cursors.iter().all(|c| c.exhausted()) {
+                    break;
+                }
+                let mut cutoff: Option<T> = None;
+                for c in cursors.iter().filter(|c| c.has_more()) {
+                    let last = *c.last_buffered().expect("refilled cursor with unseen data");
+                    if cutoff.map_or(true, |cur| T::radix_less(&last, &cur)) {
+                        cutoff = Some(last);
+                    }
+                }
+                let mut stage = match stage_spares.pop() {
+                    Some(s) => s,
+                    None => match stage_ret_rx.try_recv() {
+                        Ok(s) => s,
+                        Err(mpsc::TryRecvError::Empty) => {
+                            stats.write_stalls += 1;
+                            match stage_ret_rx.recv() {
+                                Ok(s) => s,
+                                Err(_) => return Err(placeholder_fault()),
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            return Err(placeholder_fault());
+                        }
+                    },
+                };
+                stage.clear();
+                match cutoff {
+                    Some(cut) => {
+                        for c in cursors.iter_mut() {
+                            c.take_through(&cut, &mut stage);
+                        }
+                    }
+                    None => {
+                        for c in cursors.iter_mut() {
+                            c.take_all(&mut stage);
+                        }
+                    }
+                }
+                debug_assert!(!stage.is_empty(), "merge window made no progress");
+                match pool {
+                    Some(p) => merge_sort_runs_par(
+                        &mut stage,
+                        p,
+                        merge_scratch,
+                        &T::radix_less,
+                        Some(counters),
+                    ),
+                    None => {
+                        merge_sort_runs(&mut stage, merge_scratch, &T::radix_less, Some(counters))
+                    }
+                }
+                written += stage.len() as u64;
+                if let Err(e) = stage_tx.send(stage) {
+                    stage_spares.push(e.0);
+                    return Err(placeholder_fault());
+                }
+            }
+            Ok(written)
+        })();
+
+        // --- Teardown: drain before join, on every path. Closing our
+        // senders guarantees neither helper can block again (the
+        // prefetcher's ret_rx.recv and the writer's stage_rx.recv both
+        // disconnect), so the blocking drains below terminate and the
+        // joins cannot hang.
+        drop(ret_tx);
+        drop(stage_tx);
+        let mut cursor_bufs: Vec<Vec<T>> = Vec::with_capacity(2 * n);
+        for c in cursors {
+            for b in c.rx.iter() {
+                cursor_bufs.push(b);
+            }
+            cursor_bufs.push(c.cur);
+            cursor_bufs.extend(c.parked);
+        }
+        let mut stages = stage_spares;
+        for s in stage_ret_rx.iter() {
+            stages.push(s);
+        }
+
+        let (raws, pref_held) = match prefetcher.join() {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        cursor_bufs.extend(pref_held);
+        let (writer_res, writer_held) = match writer.join() {
+            Ok(v) => v,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        stages.extend(writer_held);
+
+        PipeOutcome {
+            consumer,
+            writer: writer_res,
+            stats,
+            cursor_bufs,
+            raws,
+            stages,
+        }
+    });
+
+    // Restore every buffer to its arena slot, cleared. Cursor buffers
+    // are interchangeable within their class (uniform capacity), so
+    // slot order does not matter.
+    debug_assert_eq!(outcome.cursor_bufs.len(), 2 * n, "cursor buffer leaked");
+    debug_assert_eq!(outcome.raws.len(), n, "cursor staging leaked");
+    debug_assert_eq!(outcome.stages.len(), 2, "stage buffer leaked");
+    let mut it = outcome.cursor_bufs.into_iter();
+    for s in 0..n {
+        for half in [s, fan_in + s] {
+            let mut buf = it.next().unwrap_or_default();
+            buf.clear();
+            scratch.cursor_bufs[half] = buf;
+        }
+    }
+    for (s, raw) in outcome.raws.into_iter().enumerate() {
+        scratch.cursor_raw[s] = raw;
+    }
+    scratch.stage_bufs = outcome.stages;
+    for stage in scratch.stage_bufs.iter_mut() {
+        stage.clear();
+    }
+
+    let resolve = |r: Result<u64, ExtSortError>| match r {
+        Ok(v) => Ok(v),
+        Err(_) => Err(fault
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(placeholder_fault)),
+    };
+    let written = resolve(outcome.consumer)?;
+    let bytes = resolve(outcome.writer)?;
+    Ok((written, bytes, outcome.stats))
+}
+
+/// Stand-in error for "a pipeline thread failed"; the real cause lives
+/// in the shared fault slot and replaces this before it ever surfaces
+/// (a thread that dies *without* recording a fault panicked, and the
+/// join re-raises that panic first).
+fn placeholder_fault() -> ExtSortError {
+    ExtSortError::Io(std::io::Error::new(
+        std::io::ErrorKind::Other,
+        "external merge pipeline thread failed",
+    ))
 }

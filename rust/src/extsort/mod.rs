@@ -6,14 +6,23 @@
 //!
 //! 1. **Run generation** — the input stream is read in fixed-size
 //!    chunks through a double-buffered reader thread (decode of chunk
-//!    `i+1` overlaps sort+spill of chunk `i`), each chunk is sorted
-//!    with the caller-supplied planner-routed in-memory path, and the
-//!    sorted chunk is spilled as one run file.
+//!    `i+1` overlaps the sort of chunk `i`), each chunk is sorted with
+//!    the caller-supplied planner-routed in-memory path, and the sorted
+//!    chunk is handed to a spill-writer thread so the write of chunk
+//!    `i` also overlaps the sort of chunk `i+1`.
 //! 2. **K-way merge** — up to `fan_in` runs are streamed through
 //!    per-run block buffers and merged window-by-window on the
 //!    branchless engine ([`crate::merge`]); when more runs exist,
 //!    cascading passes write intermediate spill runs until one final
-//!    pass can stream to the output ([`merge_runs`](self)).
+//!    pass can stream to the output. Each group merge runs as a
+//!    read/merge/write pipeline (prefetch thread, consumer, writer
+//!    thread — see [`merge`](self) module docs).
+//!
+//! Both overlaps ship behind the `IPS4O_EXT_OVERLAP` kill switch
+//! ([`crate::config::ExtSortConfig::overlap`]): `off` restores the
+//! serial phases for A/B comparison, and the
+//! `ext_prefetch_hits`/`ext_prefetch_stalls`/`ext_write_stalls`
+//! counters make the overlap observable either way.
 //!
 //! All scratch (chunk buffers, decode/encode staging, merge stage,
 //! per-cursor blocks) lives in one [`ExtScratch`] arena recycled
@@ -33,7 +42,7 @@ pub use codec::ExtRecord;
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use crate::arena::ArenaPool;
@@ -110,6 +119,15 @@ pub struct ExtSortReport {
     pub run_gen_nanos: u64,
     /// Wall-clock nanoseconds spent in the merge phase.
     pub merge_nanos: u64,
+    /// Pipeline hand-offs satisfied without waiting (the prefetched
+    /// chunk or block was already there). Zero with overlap off.
+    pub prefetch_hits: u64,
+    /// Pipeline hand-offs that blocked waiting on a read — the job was
+    /// read-bound at those points. Zero with overlap off.
+    pub prefetch_stalls: u64,
+    /// Hand-offs that blocked waiting on the spill/output writer — the
+    /// job was write-bound at those points. Zero with overlap off.
+    pub write_stalls: u64,
 }
 
 /// All recyclable memory for one external sort job: chunk buffers and
@@ -124,17 +142,22 @@ pub(crate) struct ExtScratch<T> {
     pub(crate) block_elems: usize,
     /// Maximum runs merged per pass (min 2).
     pub(crate) fan_in: usize,
-    /// Two decoded chunk buffers cycling between reader and sorter.
+    /// Three decoded chunk buffers cycling between the reader, the
+    /// sorter, and (with overlap on) the spill writer.
     pub(crate) chunk_bufs: Vec<Vec<T>>,
     /// Raw staging for decoding one full chunk.
     pub(crate) chunk_raw: Vec<u8>,
     /// Raw staging for encoding one block of writes.
     pub(crate) write_raw: Vec<u8>,
-    /// Merge window assembly area (`fan_in * block_elems` capacity).
-    pub(crate) stage: Vec<T>,
+    /// Two merge window assembly areas (`fan_in * block_elems` capacity
+    /// each) ping-ponging between the merge consumer and the writer
+    /// thread; the serial path uses only the first.
+    pub(crate) stage_bufs: Vec<Vec<T>>,
     /// In-memory engine scratch sized for a full merge window.
     pub(crate) merge: MergeScratch<T>,
-    /// Per-cursor decoded block buffers.
+    /// Per-cursor decoded block buffers, two per slot: the pipelined
+    /// merge double-buffers each cursor (slot `s` pairs with slot
+    /// `fan_in + s`); the serial path uses only the first `fan_in`.
     pub(crate) cursor_bufs: Vec<Vec<T>>,
     /// Per-cursor raw read staging.
     pub(crate) cursor_raw: Vec<Vec<u8>>,
@@ -155,12 +178,16 @@ impl<T: ExtRecord> ExtScratch<T> {
             chunk_elems,
             block_elems,
             fan_in,
-            chunk_bufs: (0..2).map(|_| Vec::with_capacity(chunk_elems)).collect(),
+            chunk_bufs: (0..3).map(|_| Vec::with_capacity(chunk_elems)).collect(),
             chunk_raw: vec![0u8; chunk_elems * T::WIDTH],
             write_raw: Vec::with_capacity(block_elems * T::WIDTH),
-            stage: Vec::with_capacity(fan_in * block_elems),
+            stage_bufs: (0..2)
+                .map(|_| Vec::with_capacity(fan_in * block_elems))
+                .collect(),
             merge: MergeScratch::with_capacity_for(fan_in * block_elems),
-            cursor_bufs: (0..fan_in).map(|_| Vec::with_capacity(block_elems)).collect(),
+            cursor_bufs: (0..2 * fan_in)
+                .map(|_| Vec::with_capacity(block_elems))
+                .collect(),
             cursor_raw: (0..fan_in).map(|_| vec![0u8; block_elems * T::WIDTH]).collect(),
         }
     }
@@ -172,9 +199,27 @@ impl<T: ExtRecord> ExtScratch<T> {
         self.chunk_elems == chunk_elems
             && self.block_elems == block_elems
             && self.fan_in == fan_in
-            && self.chunk_bufs.len() == 2
-            && self.cursor_bufs.len() == fan_in
-            && self.cursor_raw.len() == fan_in
+            && self.intact()
+    }
+
+    /// Whether every buffer the phases borrow has been restored at full
+    /// capacity. A `std::mem::take` that was never undone leaves a
+    /// capacity-0 `Vec` (or a short list) behind, so this is the gate
+    /// that lets even *failed* jobs hand their scratch back to the
+    /// arena without voiding the zero-steady-state-allocation
+    /// guarantee.
+    pub(crate) fn intact(&self) -> bool {
+        self.chunk_bufs.len() == 3
+            && self.chunk_bufs.iter().all(|b| b.capacity() >= self.chunk_elems)
+            && self.stage_bufs.len() == 2
+            && self
+                .stage_bufs
+                .iter()
+                .all(|b| b.capacity() >= self.fan_in * self.block_elems)
+            && self.cursor_bufs.len() == 2 * self.fan_in
+            && self.cursor_bufs.iter().all(|b| b.capacity() >= self.block_elems)
+            && self.cursor_raw.len() == self.fan_in
+            && self.cursor_raw.iter().all(|r| r.len() >= T::WIDTH)
     }
 }
 
@@ -192,9 +237,11 @@ enum ChunkMsg<T> {
 /// `sort_chunk` supplies the in-memory sort for each chunk — the
 /// [`crate::Sorter`] passes its planner-routed `sort_keys` so chunks
 /// get the same backend selection as in-memory jobs. Scratch is
-/// checked out of `arenas` and returned on success; on error it is
-/// dropped (cold rebuild on the next job) so no partially-recycled
-/// state survives.
+/// checked out of `arenas` and returned whenever it is [`intact`]
+/// (`ExtScratch::intact`) — on success *and* on error — so a failed
+/// job does not void the zero-steady-state-allocation guarantee for
+/// the jobs after it; only a scratch that actually lost buffers is
+/// dropped for a cold rebuild.
 pub(crate) fn sort_stream<T, R, W, F>(
     mut input: R,
     mut output: W,
@@ -206,9 +253,10 @@ pub(crate) fn sort_stream<T, R, W, F>(
 where
     T: ExtRecord,
     R: Read + Send,
-    W: Write,
+    W: Write + Send,
     F: Fn(&mut [T]),
 {
+    let overlap = cfg.extsort.effective_overlap();
     let counters = std::sync::Arc::clone(arenas.counters());
     let mut scratch = arenas.checkout(|| ExtScratch::<T>::new(cfg));
     assert!(
@@ -234,6 +282,7 @@ where
             &sort_chunk,
             &counters,
             &mut report,
+            overlap,
         )?;
         report.run_gen_nanos = t0.elapsed().as_nanos() as u64;
 
@@ -246,6 +295,7 @@ where
             pool,
             &counters,
             &mut report,
+            overlap,
         )?;
         report.merge_nanos = t1.elapsed().as_nanos() as u64;
         Ok(())
@@ -256,7 +306,16 @@ where
             arenas.checkin(scratch);
             Ok(report)
         }
-        Err(e) => Err(e),
+        Err(e) => {
+            // Every phase restores its borrowed buffers on error, so
+            // the scratch is normally whole here and goes back to the
+            // arena; `intact` is the safety net that drops it instead
+            // if a restore path ever regresses.
+            if scratch.intact() {
+                arenas.checkin(scratch);
+            }
+            Err(e)
+        }
     }
 }
 
@@ -279,13 +338,31 @@ where
     sort_stream::<T, _, _, _>(src, dst, cfg, pool, arenas, sort_chunk)
 }
 
+/// The real cause of a pipeline-thread failure, recorded in the shared
+/// fault slot before the thread exits. The fallback is unreachable in
+/// practice: a thread that dies *without* recording a fault panicked,
+/// and the drain-before-join teardown re-raises that panic instead of
+/// returning an error.
+fn take_fault(fault: &Mutex<Option<ExtSortError>>) -> ExtSortError {
+    fault.lock().unwrap().take().unwrap_or_else(|| {
+        ExtSortError::Io(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "external sort pipeline thread failed",
+        ))
+    })
+}
+
 /// Phase 1: chunk the input, sort each chunk, spill sorted runs.
 ///
 /// One scoped reader thread decodes chunk `i+1` while the caller's
-/// thread sorts and spills chunk `i`. Buffers circulate through a
+/// thread sorts chunk `i`; with overlap on, a scoped spill-writer
+/// thread encodes and writes chunk `i-1` at the same time, so decode,
+/// sort, and spill-write all proceed concurrently (`overlap == false`
+/// restores the PR-7 decode-only overlap). Buffers circulate through a
 /// [`BufShelf`] free-list rather than a return channel so that every
-/// buffer is recovered deterministically after the reader joins — the
+/// buffer is recovered deterministically after the threads join — the
 /// arena's allocation accounting stays exact on every exit path.
+#[allow(clippy::too_many_arguments)]
 fn generate_runs<T, R, F>(
     input: &mut R,
     spill: &SpillGuard,
@@ -293,19 +370,25 @@ fn generate_runs<T, R, F>(
     sort_chunk: &F,
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
+    overlap: bool,
 ) -> Result<Vec<SpillRun>, ExtSortError>
 where
     T: ExtRecord,
     R: Read + Send,
     F: Fn(&mut [T]),
 {
-    let mut runs: Vec<SpillRun> = Vec::new();
-    let shelf = BufShelf::new(std::mem::take(&mut scratch.chunk_bufs));
+    let mut bufs = std::mem::take(&mut scratch.chunk_bufs);
+    // The serial path cycles two buffers (reader <-> sorter) exactly as
+    // before this tier was pipelined; the third only circulates when
+    // the spill writer runs as its own stage.
+    let spare = if overlap { None } else { bufs.pop() };
+    let shelf = BufShelf::new(bufs);
     let chunk_raw = &mut scratch.chunk_raw;
     let write_raw = &mut scratch.write_raw;
     let (full_tx, full_rx) = mpsc::sync_channel::<ChunkMsg<T>>(1);
+    let fault: Mutex<Option<ExtSortError>> = Mutex::new(None);
 
-    let result = std::thread::scope(|s| {
+    let result: Result<Vec<SpillRun>, ExtSortError> = std::thread::scope(|s| {
         let reader = s.spawn({
             let shelf = &shelf;
             move || loop {
@@ -343,53 +426,229 @@ where
         // Wakes a reader blocked in `get` even if `sort_chunk` panics
         // below — otherwise the scope's implicit join would deadlock.
         let closer = ShelfCloser(&shelf);
-        let worked: Result<(), ExtSortError> = loop {
-            match full_rx.recv() {
-                Ok(ChunkMsg::Chunk(mut buf)) => {
-                    let spilled = spill_chunk(
-                        &mut buf,
-                        spill,
-                        runs.len() as u64,
-                        write_raw,
-                        sort_chunk,
-                        counters,
-                        report,
-                    );
-                    shelf.put(buf);
-                    match spilled {
-                        Ok(run) => runs.push(run),
-                        Err(e) => break Err(e),
+
+        if overlap {
+            run_gen_pipelined(
+                s, reader, closer, &shelf, &full_rx, spill, write_raw, sort_chunk, counters,
+                report, &fault,
+            )
+        } else {
+            let mut runs: Vec<SpillRun> = Vec::new();
+            let worked: Result<(), ExtSortError> = loop {
+                match full_rx.recv() {
+                    Ok(ChunkMsg::Chunk(mut buf)) => {
+                        let spilled = spill_chunk(
+                            &mut buf,
+                            spill,
+                            runs.len() as u64,
+                            write_raw,
+                            sort_chunk,
+                            counters,
+                            report,
+                        );
+                        shelf.put(buf);
+                        match spilled {
+                            Ok(run) => runs.push(run),
+                            Err(e) => break Err(e),
+                        }
                     }
+                    Ok(ChunkMsg::Eof) => break Ok(()),
+                    Ok(ChunkMsg::Fail(e)) => break Err(e),
+                    // Sender dropped without an Eof: the reader
+                    // panicked; the join below re-raises it.
+                    Err(_) => break Ok(()),
                 }
-                Ok(ChunkMsg::Eof) => break Ok(()),
-                Ok(ChunkMsg::Fail(e)) => break Err(e),
-                // Sender dropped without an Eof: the reader panicked;
-                // the join below re-raises it.
-                Err(_) => break Ok(()),
+            };
+            drop(closer);
+            // A spill-write failure exits the loop above with a chunk
+            // still parked in the capacity-1 channel, and the reader —
+            // re-armed by the `shelf.put` before the break — may be
+            // blocked in `send`, which closing the shelf does not wake.
+            // Drain the channel until the reader drops its sender (it
+            // hits the closed shelf right after any unblocked send),
+            // recovering parked chunks as we go, so the join below can
+            // never deadlock.
+            for msg in full_rx.iter() {
+                if let ChunkMsg::Chunk(b) = msg {
+                    shelf.put(b);
+                }
             }
-        };
-        drop(closer);
-        // A spill-write failure exits the loop above with a chunk still
-        // parked in the capacity-1 channel, and the reader — re-armed by
-        // the `shelf.put` before the break — may be blocked in `send`,
-        // which closing the shelf does not wake. Drain the channel until
-        // the reader drops its sender (it hits the closed shelf right
-        // after any unblocked send), recovering parked chunks as we go,
-        // so the join below can never deadlock.
-        for msg in full_rx.iter() {
-            if let ChunkMsg::Chunk(b) = msg {
-                shelf.put(b);
+            if let Err(panic) = reader.join() {
+                std::panic::resume_unwind(panic);
             }
+            worked.map(|()| runs)
         }
-        if let Err(panic) = reader.join() {
-            std::panic::resume_unwind(panic);
-        }
-        worked
     });
 
     // Restock the scratch so its geometry survives for the next job.
     scratch.chunk_bufs = shelf.drain();
-    result.map(|()| runs)
+    if let Some(b) = spare {
+        scratch.chunk_bufs.push(b);
+    }
+    result
+}
+
+/// The pipelined run-generation body: the caller's thread receives
+/// decoded chunks and sorts them; a scoped spill-writer thread encodes
+/// and writes each sorted chunk while the next one sorts. Teardown is
+/// drain-before-join on every path: close the shelf and drop our spill
+/// sender first (so neither helper can block again), drain the chunk
+/// channel recovering parked buffers, then join — reader panics
+/// re-raise, and the spill writer's results merge into the report.
+#[allow(clippy::too_many_arguments)]
+fn run_gen_pipelined<'scope, 'env, T, F>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    reader: std::thread::ScopedJoinHandle<'scope, ()>,
+    closer: ShelfCloser<'_, T>,
+    shelf: &'scope BufShelf<T>,
+    full_rx: &mpsc::Receiver<ChunkMsg<T>>,
+    spill: &'scope SpillGuard,
+    write_raw: &'scope mut Vec<u8>,
+    sort_chunk: &F,
+    counters: &'scope ScratchCounters,
+    report: &mut ExtSortReport,
+    fault: &'scope Mutex<Option<ExtSortError>>,
+) -> Result<Vec<SpillRun>, ExtSortError>
+where
+    T: ExtRecord,
+    F: Fn(&mut [T]),
+{
+    let (spill_tx, spill_rx) = mpsc::sync_channel::<Vec<T>>(1);
+    let spiller = s.spawn(move || -> (Vec<SpillRun>, u64) {
+        let mut runs: Vec<SpillRun> = Vec::new();
+        let mut bytes_total = 0u64;
+        while let Ok(buf) = spill_rx.recv() {
+            let id = runs.len() as u64;
+            let records = buf.len() as u64;
+            let attempt = spill
+                .create_run(id)
+                .map_err(ExtSortError::from)
+                .and_then(|(path, dst)| {
+                    let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
+                    writer.write_all(&buf)?;
+                    let (_, bytes) = writer.finish()?;
+                    Ok((path, bytes))
+                });
+            // Re-arm the reader before error handling: the buffer goes
+            // back on the shelf no matter how the write went.
+            shelf.put(buf);
+            match attempt {
+                Ok((path, bytes)) => {
+                    counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
+                    counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
+                    bytes_total += bytes;
+                    runs.push(SpillRun { path, records });
+                }
+                Err(e) => {
+                    // Record the fault *before* draining so the sorter
+                    // sees it and stops feeding us, then park every
+                    // in-flight chunk — the drain ends when the sorter
+                    // drops its sender at teardown.
+                    *fault.lock().unwrap() = Some(e);
+                    for b in spill_rx.iter() {
+                        shelf.put(b);
+                    }
+                    break;
+                }
+            }
+        }
+        (runs, bytes_total)
+    });
+
+    let mut hits = 0u64;
+    let mut stalls = 0u64;
+    let mut write_stalls = 0u64;
+    let mut elements = 0u64;
+    let mut bytes_in = 0u64;
+    let worked: Result<(), ExtSortError> = loop {
+        let msg = match full_rx.try_recv() {
+            Ok(m) => {
+                hits += 1;
+                m
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                stalls += 1;
+                match full_rx.recv() {
+                    Ok(m) => m,
+                    // Sender dropped without an Eof: the reader
+                    // panicked; the join below re-raises it.
+                    Err(_) => break Ok(()),
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => break Ok(()),
+        };
+        match msg {
+            ChunkMsg::Chunk(mut buf) => {
+                let records = buf.len() as u64;
+                let chunk_bytes = records * T::WIDTH as u64;
+                counters.ext_bytes_read.fetch_add(chunk_bytes, Ordering::Relaxed);
+                elements += records;
+                bytes_in += chunk_bytes;
+                sort_chunk(&mut buf[..]);
+                // Hand the sorted chunk to the spill writer; its write
+                // overlaps the sort of the next chunk.
+                match spill_tx.try_send(buf) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(b)) => {
+                        write_stalls += 1;
+                        if let Err(e) = spill_tx.send(b) {
+                            shelf.put(e.0);
+                            break Err(take_fault(fault));
+                        }
+                    }
+                    Err(mpsc::TrySendError::Disconnected(b)) => {
+                        shelf.put(b);
+                        break Err(take_fault(fault));
+                    }
+                }
+                // A failed spill write is only visible through the
+                // fault slot (the writer keeps draining so our sends
+                // never block); check it so we stop sorting promptly
+                // instead of churning through the rest of the input.
+                if fault.lock().unwrap().is_some() {
+                    break Err(take_fault(fault));
+                }
+            }
+            ChunkMsg::Eof => break Ok(()),
+            ChunkMsg::Fail(e) => break Err(e),
+        }
+    };
+
+    drop(closer);
+    drop(spill_tx);
+    for msg in full_rx.iter() {
+        if let ChunkMsg::Chunk(b) = msg {
+            shelf.put(b);
+        }
+    }
+    if let Err(panic) = reader.join() {
+        std::panic::resume_unwind(panic);
+    }
+    let (runs, spill_bytes) = match spiller.join() {
+        Ok(v) => v,
+        Err(panic) => std::panic::resume_unwind(panic),
+    };
+    // A spill failure can land after the loop already broke Ok (e.g.
+    // on the final chunk, with Eof already queued); surface it now.
+    let worked = match worked {
+        Ok(()) => match fault.lock().unwrap().take() {
+            None => Ok(()),
+            Some(e) => Err(e),
+        },
+        err => err,
+    };
+
+    report.elements += elements;
+    report.bytes_read += bytes_in;
+    report.runs_written += runs.len() as u64;
+    report.bytes_written += spill_bytes;
+    report.prefetch_hits += hits;
+    report.prefetch_stalls += stalls;
+    report.write_stalls += write_stalls;
+    counters.ext_prefetch_hits.fetch_add(hits, Ordering::Relaxed);
+    counters.ext_prefetch_stalls.fetch_add(stalls, Ordering::Relaxed);
+    counters.ext_write_stalls.fetch_add(write_stalls, Ordering::Relaxed);
+    worked.map(|()| runs)
 }
 
 /// Sort one decoded chunk and spill it as run `id`.

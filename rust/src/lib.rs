@@ -139,7 +139,7 @@ pub mod util;
 pub mod bench_harness;
 pub mod runtime;
 
-pub use config::{Config, ExtSortConfig};
+pub use config::{Config, ExtSortConfig, EXT_OVERLAP_ENV};
 pub use extsort::{ExtRecord, ExtSortError, ExtSortReport};
 pub use planner::{
     Backend, CalibrationOptions, CalibrationProfile, PlannerMode, ProfileError, SortPlan,

@@ -85,6 +85,8 @@ FLAGS (sort-file):
     --buffer-bytes <n>    per-run merge buffer            [default: 1m]
     --spill-dir <path>    spill-file directory            [default: temp dir]
     --threads <int>       worker threads                  [default: all cores]
+    --overlap <on|off>    overlap spill/merge I/O with compute; the
+                          IPS4O_EXT_OVERLAP env var overrides [default: on]
 
 FLAGS (gen-file):
     ips4o gen-file <out> [FLAGS]
@@ -122,7 +124,10 @@ fn parse_flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
-fn parse_n(s: &str) -> usize {
+/// Parse a size with an optional `k`/`m`/`g` binary suffix; `None` on
+/// anything that is not a number (callers decide whether that is a
+/// default-worthy or fatal condition).
+fn parse_size(s: &str) -> Option<usize> {
     let s = s.to_ascii_lowercase();
     let (digits, mult) = match s.chars().last() {
         Some('k') => (&s[..s.len() - 1], 1usize << 10),
@@ -130,10 +135,14 @@ fn parse_n(s: &str) -> usize {
         Some('g') => (&s[..s.len() - 1], 1usize << 30),
         _ => (s.as_str(), 1),
     };
-    digits.parse::<usize>().unwrap_or(1 << 20) * mult
+    digits.parse::<usize>().ok()?.checked_mul(mult)
 }
 
-fn build_config(args: &[String]) -> Config {
+fn parse_n(s: &str) -> usize {
+    parse_size(s).unwrap_or(1 << 20)
+}
+
+fn build_config(args: &[String]) -> Result<Config, String> {
     let threads = parse_flag(args, "--threads")
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| {
@@ -157,19 +166,42 @@ fn build_config(args: &[String]) -> Config {
     if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_small_sort_bytes(b);
     }
-    // Out-of-core knobs (sort-file, serve --file-jobs).
+    // Out-of-core knobs (sort-file, serve --file-jobs). Bad values are
+    // rejected with a message rather than silently replaced by defaults:
+    // a typo'd `--buffer-bytes` used to fall back to 1 MiB without a
+    // word, masking the very geometry the user was trying to test.
     let mut ext = ExtSortConfig::default();
-    if let Some(b) = parse_flag(args, "--chunk-bytes").map(parse_n) {
+    if let Some(s) = parse_flag(args, "--chunk-bytes") {
+        let b = parse_size(s)
+            .ok_or_else(|| format!("--chunk-bytes {s:?}: expected a byte count (k/m/g ok)"))?;
         ext = ext.with_chunk_bytes(b);
     }
-    if let Some(f) = parse_flag(args, "--fan-in").and_then(|s| s.parse().ok()) {
+    if let Some(s) = parse_flag(args, "--fan-in") {
+        let f: usize = s
+            .parse()
+            .map_err(|_| format!("--fan-in {s:?}: expected an integer"))?;
+        if f < 2 {
+            return Err(format!("--fan-in {f}: need at least 2 runs per merge pass"));
+        }
         ext = ext.with_fan_in(f);
     }
-    if let Some(b) = parse_flag(args, "--buffer-bytes").map(parse_n) {
+    if let Some(s) = parse_flag(args, "--buffer-bytes") {
+        let b = parse_size(s)
+            .ok_or_else(|| format!("--buffer-bytes {s:?}: expected a byte count (k/m/g ok)"))?;
+        if b == 0 {
+            return Err("--buffer-bytes 0: merge buffers must be non-empty".to_string());
+        }
         ext = ext.with_buffer_bytes(b);
     }
     if let Some(d) = parse_flag(args, "--spill-dir") {
         ext = ext.with_spill_dir(d);
+    }
+    if let Some(s) = parse_flag(args, "--overlap") {
+        match s {
+            "on" | "true" | "1" => ext = ext.with_overlap(true),
+            "off" | "false" | "0" => ext = ext.with_overlap(false),
+            other => return Err(format!("--overlap {other:?}: expected on|off")),
+        }
     }
     cfg = cfg.with_extsort(ext);
     if let Some(mode) = parse_flag(args, "--scheduler") {
@@ -212,7 +244,20 @@ fn build_config(args: &[String]) -> Config {
             }
         }
     }
-    cfg
+    Ok(cfg)
+}
+
+/// `build_config` for commands that exit with usage code 2 on a bad flag.
+macro_rules! config_or_usage {
+    ($args:expr) => {
+        match build_config($args) {
+            Ok(cfg) => cfg,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
 }
 
 /// What `sort --algo` can name: a registry algorithm, the forced radix
@@ -314,7 +359,7 @@ fn cmd_sort(args: &[String]) -> i32 {
         .and_then(|s| s.parse().ok())
         .unwrap_or(42u64);
     let ty = parse_flag(args, "--type").unwrap_or("f64");
-    let cfg = build_config(args);
+    let cfg = config_or_usage!(args);
 
     println!(
         "# sort: algo={} dist={} n={} type={} threads={}",
@@ -379,10 +424,16 @@ fn cmd_sort_file(args: &[String]) -> i32 {
         }
     };
     let ty = parse_flag(args, "--type").unwrap_or("u64");
-    let cfg = build_config(args);
+    let cfg = config_or_usage!(args);
+    let overlap = cfg.extsort.effective_overlap();
     println!(
-        "# sort-file: {input} -> {output} type={ty} chunk={}B fan_in={} buffer={}B threads={}",
-        cfg.extsort.chunk_bytes, cfg.extsort.fan_in, cfg.extsort.buffer_bytes, cfg.threads
+        "# sort-file: {input} -> {output} type={ty} chunk={}B fan_in={} buffer={}B threads={} \
+         overlap={}",
+        cfg.extsort.chunk_bytes,
+        cfg.extsort.fan_in,
+        cfg.extsort.buffer_bytes,
+        cfg.threads,
+        if overlap { "on" } else { "off" }
     );
 
     let sorter = Sorter::new(cfg);
@@ -411,6 +462,10 @@ fn cmd_sort_file(args: &[String]) -> i32 {
                 "phases: run-gen {:.3}s | merge {:.3}s",
                 r.run_gen_nanos as f64 / 1e9,
                 r.merge_nanos as f64 / 1e9
+            );
+            println!(
+                "pipeline: prefetch_hits={} prefetch_stalls={} write_stalls={}",
+                r.prefetch_hits, r.prefetch_stalls, r.write_stalls
             );
             println!(
                 "time: {:.3}s | throughput: {:.2} M elem/s",
@@ -498,7 +553,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let file_jobs: usize = parse_flag(args, "--file-jobs")
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
-    let cfg = build_config(args);
+    let cfg = config_or_usage!(args);
 
     println!(
         "# serve: clients={clients} jobs/client={jobs} n={n} large_every={large_every} \
@@ -647,6 +702,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         "extsort: runs_written={} merge_passes={} read={}B written={}B",
         d.ext_runs_written, d.ext_merge_passes, d.ext_bytes_read, d.ext_bytes_written
     );
+    println!(
+        "extsort pipeline: prefetch_hits={} prefetch_stalls={} write_stalls={}",
+        d.ext_prefetch_hits, d.ext_prefetch_stalls, d.ext_write_stalls
+    );
     if file_jobs > 0 {
         std::fs::remove_dir_all(&file_dir).ok();
     }
@@ -725,7 +784,7 @@ fn cmd_calibrate(args: &[String]) -> i32 {
 
 fn cmd_selftest(args: &[String]) -> i32 {
     let n = parse_n(parse_flag(args, "--n").unwrap_or("200k"));
-    let cfg = build_config(args);
+    let cfg = config_or_usage!(args);
     let mut failures = 0;
     let mut algos: Vec<CliAlgo> = [
         Algo::Is4o,

@@ -134,6 +134,17 @@ pub struct ScratchCounters {
     pub ext_bytes_read: AtomicU64,
     /// Bytes written by the external tier (spill runs + final output).
     pub ext_bytes_written: AtomicU64,
+    /// External-tier block requests satisfied without waiting: the
+    /// prefetch side (reader/prefetcher thread) had the next block
+    /// ready when the merge loop asked for it.
+    pub ext_prefetch_hits: AtomicU64,
+    /// External-tier block requests that blocked waiting for the
+    /// prefetch side — compute outran the disk reads.
+    pub ext_prefetch_stalls: AtomicU64,
+    /// Times the external tier's compute side blocked handing a staged
+    /// window (or sorted chunk) to the writer thread — the disk writes
+    /// outran compute.
+    pub ext_write_stalls: AtomicU64,
     /// Routing decisions driven by measured [`CalibrationProfile`] data
     /// (the plan's `calibrated` flag was set).
     ///
@@ -167,6 +178,9 @@ impl Default for ScratchCounters {
             ext_merge_passes: AtomicU64::new(0),
             ext_bytes_read: AtomicU64::new(0),
             ext_bytes_written: AtomicU64::new(0),
+            ext_prefetch_hits: AtomicU64::new(0),
+            ext_prefetch_stalls: AtomicU64::new(0),
+            ext_write_stalls: AtomicU64::new(0),
             planner_calibrated: AtomicU64::new(0),
             planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -196,6 +210,9 @@ impl ScratchCounters {
         self.ext_merge_passes.store(0, Ordering::Relaxed);
         self.ext_bytes_read.store(0, Ordering::Relaxed);
         self.ext_bytes_written.store(0, Ordering::Relaxed);
+        self.ext_prefetch_hits.store(0, Ordering::Relaxed);
+        self.ext_prefetch_stalls.store(0, Ordering::Relaxed);
+        self.ext_write_stalls.store(0, Ordering::Relaxed);
         self.planner_calibrated.store(0, Ordering::Relaxed);
         self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
@@ -243,6 +260,9 @@ impl ScratchCounters {
             ext_merge_passes: self.ext_merge_passes.load(Ordering::Relaxed),
             ext_bytes_read: self.ext_bytes_read.load(Ordering::Relaxed),
             ext_bytes_written: self.ext_bytes_written.load(Ordering::Relaxed),
+            ext_prefetch_hits: self.ext_prefetch_hits.load(Ordering::Relaxed),
+            ext_prefetch_stalls: self.ext_prefetch_stalls.load(Ordering::Relaxed),
+            ext_write_stalls: self.ext_write_stalls.load(Ordering::Relaxed),
             planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
             planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
@@ -282,6 +302,13 @@ pub struct ScratchSnapshot {
     pub ext_bytes_read: u64,
     /// Bytes written by the external tier (spill runs + final output).
     pub ext_bytes_written: u64,
+    /// External-tier block requests served without waiting (prefetch
+    /// was ahead of compute).
+    pub ext_prefetch_hits: u64,
+    /// External-tier block requests that blocked on the prefetch side.
+    pub ext_prefetch_stalls: u64,
+    /// Times the external tier's compute side blocked on the writer.
+    pub ext_write_stalls: u64,
     /// Routing decisions driven by measured calibration data.
     pub planner_calibrated: u64,
     /// Routing decisions from the static thresholds (including forced
@@ -315,6 +342,9 @@ impl ScratchSnapshot {
             ext_merge_passes: self.ext_merge_passes - earlier.ext_merge_passes,
             ext_bytes_read: self.ext_bytes_read - earlier.ext_bytes_read,
             ext_bytes_written: self.ext_bytes_written - earlier.ext_bytes_written,
+            ext_prefetch_hits: self.ext_prefetch_hits - earlier.ext_prefetch_hits,
+            ext_prefetch_stalls: self.ext_prefetch_stalls - earlier.ext_prefetch_stalls,
+            ext_write_stalls: self.ext_write_stalls - earlier.ext_write_stalls,
             planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
             planner_static: self.planner_static - earlier.planner_static,
             backend_selected,
@@ -443,16 +473,26 @@ mod tests {
         c.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
         c.ext_bytes_read.fetch_add(4096, Ordering::Relaxed);
         c.ext_bytes_written.fetch_add(8192, Ordering::Relaxed);
+        c.ext_prefetch_hits.fetch_add(7, Ordering::Relaxed);
+        c.ext_prefetch_stalls.fetch_add(2, Ordering::Relaxed);
+        c.ext_write_stalls.fetch_add(1, Ordering::Relaxed);
         let a = c.snapshot();
         assert_eq!(a.ext_runs_written, 4);
         assert_eq!(a.ext_merge_passes, 1);
+        assert_eq!(a.ext_prefetch_hits, 7);
+        assert_eq!(a.ext_prefetch_stalls, 2);
+        assert_eq!(a.ext_write_stalls, 1);
         c.ext_merge_passes.fetch_add(2, Ordering::Relaxed);
         c.ext_bytes_written.fetch_add(100, Ordering::Relaxed);
+        c.ext_prefetch_stalls.fetch_add(3, Ordering::Relaxed);
         let d = c.snapshot().delta(&a);
         assert_eq!(d.ext_runs_written, 0);
         assert_eq!(d.ext_merge_passes, 2);
         assert_eq!(d.ext_bytes_read, 0);
         assert_eq!(d.ext_bytes_written, 100);
+        assert_eq!(d.ext_prefetch_hits, 0);
+        assert_eq!(d.ext_prefetch_stalls, 3);
+        assert_eq!(d.ext_write_stalls, 0);
         c.reset();
         assert_eq!(c.snapshot(), ScratchSnapshot::default());
     }

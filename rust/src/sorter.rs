@@ -334,7 +334,7 @@ impl Sorter {
     where
         T: ExtRecord,
         R: Read + Send,
-        W: Write,
+        W: Write + Send,
     {
         crate::extsort::sort_stream::<T, _, _, _>(
             input,

@@ -2,12 +2,18 @@
 //! file round-trips against the in-memory oracle, chunk-boundary sizes,
 //! cascaded multi-pass merges verified by the streaming oracle, spill
 //! lifecycle on success and on comparator panic, corrupt-input job
-//! failures, and warm-service allocation behavior.
+//! failures, injected I/O failures on the merge's read and write sides
+//! (watchdog-timed so a pipeline deadlock fails fast), overlap-on vs
+//! overlap-off differential runs, and warm-service allocation behavior
+//! — including across a failed job.
 
 mod common;
 
+use std::io::{self, Cursor, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
 
 use common::oracle::{seeded, verify_record_stream, SortCheck};
 use ips4o::datagen::{self, Distribution};
@@ -305,6 +311,315 @@ fn corrupt_inputs_fail_the_job_not_the_service() {
     let sorted = svc.submit((0..500u64).rev().collect::<Vec<_>>()).wait();
     assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
     assert_eq!(svc.metrics().jobs_completed, 3);
+}
+
+/// Decodes remaining before `TruncKey::decode` truncates the first
+/// spill run of the directory in [`TRUNC_TARGET`]; `i64::MAX` disarms.
+static TRUNC_FUSE: AtomicI64 = AtomicI64::new(i64::MAX);
+static TRUNC_TARGET: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// A `u64` whose decode hook can sabotage a spill file mid-job: when
+/// the fuse crosses zero it shortens `run-000000.bin` by one record, so
+/// the recorded run length no longer matches the file and the merge's
+/// next refill of that run hits an unexpected EOF.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+struct TruncKey(u64);
+
+impl RadixKey for TruncKey {
+    const COMPLETE: bool = true;
+    fn radix_key(&self) -> u64 {
+        self.0
+    }
+    fn radix_less(a: &Self, b: &Self) -> bool {
+        a.0 < b.0
+    }
+}
+
+impl ExtRecord for TruncKey {
+    const WIDTH: usize = 8;
+    fn encode(&self, out: &mut [u8]) {
+        out.copy_from_slice(&self.0.to_le_bytes());
+    }
+    fn decode(raw: &[u8]) -> Self {
+        if TRUNC_FUSE.fetch_sub(1, Ordering::Relaxed) == 0 {
+            let target = TRUNC_TARGET.lock().unwrap().clone();
+            if let Some(base) = target {
+                truncate_first_run(&base);
+            }
+        }
+        TruncKey(u64::from_le_bytes(raw.try_into().unwrap()))
+    }
+    fn from_key_index(key: u64, _index: u64) -> Self {
+        TruncKey(key)
+    }
+}
+
+/// Shorten `run-000000.bin` (in any spill subdirectory under `base`)
+/// by one 8-byte record.
+fn truncate_first_run(base: &Path) {
+    if let Ok(entries) = std::fs::read_dir(base) {
+        for e in entries.flatten() {
+            let run = e.path().join("run-000000.bin");
+            if let Ok(meta) = std::fs::metadata(&run) {
+                if meta.len() >= 8 {
+                    if let Ok(f) = std::fs::OpenOptions::new().write(true).open(&run) {
+                        let _ = f.set_len(meta.len() - 8);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn injected_read_failure_mid_merge_fails_the_job_not_the_sorter() {
+    let dir = TestDir::new("readfail");
+    let chunk = 64usize;
+    let n = 8 * chunk;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<TruncKey>(&input, Distribution::Uniform, n, 17).unwrap();
+    let sorter = Sorter::new(ext_cfg(chunk, 3, 16, &dir.0));
+
+    // Cold job (fuse disarmed) builds the arena.
+    sorter
+        .sort_file::<TruncKey>(&input, &dir.path("out-cold.bin"))
+        .unwrap();
+    let warm = sorter.scratch_metrics();
+
+    // Arm the fuse to fire while the reader decodes the last input
+    // chunk — run 0 is fully spilled and closed by then in both overlap
+    // modes, and the merge phase has not yet opened it.
+    *TRUNC_TARGET.lock().unwrap() = Some(dir.0.clone());
+    TRUNC_FUSE.store((7 * chunk + 16) as i64, Ordering::SeqCst);
+    let in2 = input.clone();
+    let out = dir.path("out-fail.bin");
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let res = sorter.sort_file::<TruncKey>(&in2, &out);
+        let _ = done_tx.send((res, sorter));
+    });
+    // Watchdog: a regression that wedges a pipeline thread shows up as
+    // a fast timeout here, not a hung suite.
+    let (res, sorter) = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("injected read failure deadlocked the merge instead of erroring");
+    TRUNC_FUSE.store(i64::MAX, Ordering::SeqCst);
+    *TRUNC_TARGET.lock().unwrap() = None;
+    match res {
+        Err(ExtSortError::Io(_)) => {}
+        other => panic!("expected Io error from the shortened run, got {other:?}"),
+    }
+
+    // The failed job must hand every recycled buffer back: the next
+    // jobs run warm, allocation-free, and oracle-clean.
+    for j in 0..2 {
+        let report = sorter
+            .sort_file::<TruncKey>(&input, &dir.path(&format!("out-{j}.bin")))
+            .unwrap();
+        assert_eq!(report.elements, n as u64);
+    }
+    let d = sorter.scratch_metrics().delta(&warm);
+    assert_eq!(d.scratch_allocations, 0, "failed job leaked arena buffers");
+    let mut src = std::fs::File::open(dir.path("out-1.bin")).unwrap();
+    let (elems, _) =
+        verify_record_stream::<TruncKey>(&mut src, |x| x.0, |a, b| a.0 < b.0, "post-failure job");
+    assert_eq!(elems, n as u64);
+}
+
+/// An output sink that fails on the first write: the merge's writer
+/// side must surface the error, restore the arena, and not deadlock.
+struct FailingWriter;
+
+impl Write for FailingWriter {
+    fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+        Err(io::Error::new(io::ErrorKind::Other, "injected output-write failure"))
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn injected_output_write_failure_fails_the_job_not_the_sorter() {
+    let dir = TestDir::new("writefail");
+    let chunk = 64usize;
+    let n = 10 * chunk; // 10 runs through fan-in 3: cascaded merge
+    let mut keys = vec![0u64; n];
+    Distribution::Uniform.fill_chunk(n, 0xF00D, 0, &mut keys);
+    let mut raw = vec![0u8; n * 8];
+    for (i, k) in keys.iter().enumerate() {
+        k.encode(&mut raw[i * 8..(i + 1) * 8]);
+    }
+    let sorter = Sorter::new(ext_cfg(chunk, 3, 16, &dir.0));
+
+    // Cold successful job (output to a Vec) builds the arena.
+    let mut ok_out = Vec::new();
+    sorter
+        .sort_reader::<u64, _, _>(Cursor::new(raw.clone()), &mut ok_out)
+        .unwrap();
+    let warm = sorter.scratch_metrics();
+
+    let raw2 = raw.clone();
+    let (done_tx, done_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let res = sorter.sort_reader::<u64, _, _>(Cursor::new(raw2), FailingWriter);
+        let _ = done_tx.send((res, sorter));
+    });
+    let (res, sorter) = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("injected output-write failure deadlocked the merge instead of erroring");
+    match res {
+        Err(ExtSortError::Io(_)) => {}
+        other => panic!("expected Io error from failed output write, got {other:?}"),
+    }
+    assert_eq!(
+        spill_entries(&dir.0),
+        0,
+        "spill files must not outlive the failed job"
+    );
+
+    // Failed-then-warm: buffers restored, zero new allocations, output
+    // identical to the pre-failure job's.
+    let mut out2 = Vec::new();
+    let report = sorter
+        .sort_reader::<u64, _, _>(Cursor::new(raw), &mut out2)
+        .unwrap();
+    assert_eq!(report.elements, n as u64);
+    assert_eq!(out2, ok_out, "post-failure job must produce identical output");
+    let d = sorter.scratch_metrics().delta(&warm);
+    assert_eq!(d.scratch_allocations, 0, "failed job leaked arena buffers");
+}
+
+#[test]
+fn overlap_modes_agree_on_volume_and_output_over_a_cascade() {
+    seeded("overlap_modes_agree_on_volume_and_output_over_a_cascade", 0xE6, |seed| {
+        let dir = TestDir::new("overlapdiff");
+        let chunk = 512usize;
+        let n = 10 * chunk; // >= 4x chunk size, cascaded through fan-in 3
+        let input = dir.path("in.bin");
+        datagen::gen_file::<u64>(&input, Distribution::TwoDup, n, seed).unwrap();
+
+        let mk = |on: bool| {
+            Sorter::new(Config::default().with_threads(2).with_extsort(
+                ExtSortConfig::default()
+                    .with_chunk_bytes(chunk * 8)
+                    .with_fan_in(3)
+                    .with_buffer_bytes(64 * 8)
+                    .with_spill_dir(&dir.0)
+                    .with_overlap(on),
+            ))
+        };
+        let out_on = dir.path("out-on.bin");
+        let out_off = dir.path("out-off.bin");
+        let r_on = mk(true).sort_file::<u64>(&input, &out_on).unwrap();
+        let r_off = mk(false).sort_file::<u64>(&input, &out_off).unwrap();
+
+        // Volume fields are deterministic and mode-independent; the
+        // stall tallies are timing-dependent, so compare fields rather
+        // than whole reports.
+        assert_eq!(r_on.elements, r_off.elements);
+        assert_eq!(r_on.runs_written, r_off.runs_written);
+        assert_eq!(r_on.merge_passes, r_off.merge_passes);
+        assert_eq!(r_on.bytes_read, r_off.bytes_read);
+        assert_eq!(r_on.bytes_written, r_off.bytes_written);
+
+        // Both outputs pass the streaming oracle and agree exactly.
+        let mut s1 = std::fs::File::open(&out_on).unwrap();
+        let (e1, fp1) = verify_record_stream::<u64>(&mut s1, |x| *x, |a, b| a < b, "overlap on");
+        let mut s2 = std::fs::File::open(&out_off).unwrap();
+        let (e2, fp2) = verify_record_stream::<u64>(&mut s2, |x| *x, |a, b| a < b, "overlap off");
+        assert_eq!((e1, fp1), (e2, fp2));
+        assert_eq!(e1, n as u64);
+
+        // Without an environment override (ci.sh replays this suite
+        // with IPS4O_EXT_OVERLAP=off, where both modes are serial), the
+        // serial path must report no pipeline activity and the
+        // pipelined path must count its block hand-offs.
+        if std::env::var(ips4o::EXT_OVERLAP_ENV).is_err() {
+            assert_eq!(
+                (r_off.prefetch_hits, r_off.prefetch_stalls, r_off.write_stalls),
+                (0, 0, 0),
+                "serial mode must not touch the pipeline counters"
+            );
+            assert!(
+                r_on.prefetch_hits + r_on.prefetch_stalls > 0,
+                "pipelined mode must count block refills"
+            );
+        }
+    });
+}
+
+#[test]
+fn buffer_smaller_than_record_width_streams_instead_of_panicking() {
+    seeded("buffer_smaller_than_record_width_streams_instead_of_panicking", 0xE7, |seed| {
+        use ips4o::util::Bytes100;
+        let dir = TestDir::new("tinybuf");
+        let n = 300usize;
+        let input = dir.path("in.bin");
+        datagen::gen_file::<Bytes100>(&input, Distribution::Uniform, n, seed).unwrap();
+        let output = dir.path("out.bin");
+        // 16 bytes of per-stream buffering is less than one 100-byte
+        // record; every cursor must clamp to one record width (the old
+        // refill sliced past the staging buffer and panicked).
+        let sorter = Sorter::new(Config::default().with_threads(2).with_extsort(
+            ExtSortConfig::default()
+                .with_chunk_bytes(100 * 64)
+                .with_fan_in(3)
+                .with_buffer_bytes(16)
+                .with_spill_dir(&dir.0),
+        ));
+        let report = sorter.sort_file::<Bytes100>(&input, &output).unwrap();
+        assert_eq!(report.elements, n as u64);
+        assert!(report.runs_written >= 5);
+
+        // Fold every byte of the record, so a torn payload changes the
+        // fingerprint even when keys collide.
+        let pack = |b: &Bytes100| {
+            let mut raw = [0u8; 100];
+            b.encode(&mut raw);
+            raw.chunks(4).fold(0u64, |acc, c| {
+                let mut w = [0u8; 4];
+                w[..c.len()].copy_from_slice(c);
+                acc.rotate_left(7) ^ u64::from(u32::from_le_bytes(w))
+            })
+        };
+        let raw_in = std::fs::read(&input).unwrap();
+        let before: Vec<Bytes100> = raw_in.chunks_exact(100).map(Bytes100::decode).collect();
+        let mut src = std::fs::File::open(&output).unwrap();
+        let (elems, fp) =
+            verify_record_stream::<Bytes100>(&mut src, pack, Bytes100::less, "tiny buffer");
+        assert_eq!(elems, n as u64);
+        assert_eq!(fp, multiset_fingerprint(&before, pack));
+    });
+}
+
+#[test]
+fn cascade_at_fan_in_plus_one_rewrites_only_a_minimal_group() {
+    seeded("cascade_at_fan_in_plus_one_rewrites_only_a_minimal_group", 0xE8, |seed| {
+        let dir = TestDir::new("minimalcascade");
+        let chunk = 64usize;
+        let fan_in = 4usize;
+        let n = (fan_in + 1) * chunk; // one run too many for a single pass
+        let input = dir.path("in.bin");
+        datagen::gen_file::<u64>(&input, Distribution::Uniform, n, seed).unwrap();
+        let output = dir.path("out.bin");
+        let sorter = Sorter::new(ext_cfg(chunk, fan_in, 16, &dir.0));
+        let report = sorter.sort_file::<u64>(&input, &output).unwrap();
+
+        assert_eq!(report.elements, n as u64);
+        // Minimal leading group: merge just 2 of the 5 runs, then one
+        // final 4-way pass — not a nearly-full intermediate pass.
+        assert_eq!(report.runs_written, 6);
+        assert_eq!(report.merge_passes, 2);
+        // Written bytes = the initial runs (n) + the 2-run intermediate
+        // (2 chunks) + the final output (n). The old first-fan_in-runs
+        // cascade would re-write 4 chunks here instead of 2.
+        assert_eq!(report.bytes_written, ((2 * n + 2 * chunk) * 8) as u64);
+
+        let mut src = std::fs::File::open(&output).unwrap();
+        let (elems, _) = verify_record_stream::<u64>(&mut src, |x| *x, |a, b| a < b, "fan_in+1");
+        assert_eq!(elems, n as u64);
+    });
 }
 
 #[test]

@@ -19,16 +19,29 @@ cargo test -q
 # pinned and a single test thread — exercising the IPS4O_TEST_SEED
 # replay path (tests/common/oracle.rs) on every gate, including --fast.
 echo "== seeded replay (IPS4O_TEST_SEED=271828, --test-threads=1) =="
-for suite in differential extsort merge_engine planner_calibration property_tests \
-             scheduler_stress service_stress sort_integration; do
+for suite in differential extsort fault_injection merge_engine planner_calibration \
+             property_tests scheduler_stress service_stress sort_integration; do
     IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
 done
 
-# The extsort suite a second time with the I/O-overlap pipeline disabled:
-# the serial fallback behind IPS4O_EXT_OVERLAP=off must stay oracle-clean
-# and deadlock-free on every gate, including --fast.
+# The extsort and fault-injection suites a second time with the
+# I/O-overlap pipeline disabled: the serial fallback behind
+# IPS4O_EXT_OVERLAP=off must stay oracle-clean and deadlock-free — and
+# hit the same failpoints at the same counts — on every gate, including
+# --fast.
 echo "== extsort replay, overlap off (IPS4O_EXT_OVERLAP=off, seed pinned) =="
 IPS4O_TEST_SEED=271828 IPS4O_EXT_OVERLAP=off \
+    cargo test -q --test extsort -- --test-threads=1
+IPS4O_TEST_SEED=271828 IPS4O_EXT_OVERLAP=off \
+    cargo test -q --test fault_injection -- --test-threads=1
+
+# Fault smoke: the extsort suite once more with a benign seeded fault
+# plan pinned in the environment, exercising the IPS4O_FAULTS arming
+# path (FaultSession::from_env in Sorter/SortService construction) and
+# probabilistic delay injection through real jobs — outcomes must be
+# unchanged. Runs in --fast too.
+echo "== fault smoke (IPS4O_FAULTS='ext.read=delay:1ms@p0.05;seed=42', seed pinned) =="
+IPS4O_TEST_SEED=271828 IPS4O_FAULTS="ext.read=delay:1ms@p0.05;seed=42" \
     cargo test -q --test extsort -- --test-threads=1
 
 # Scheduler skew stress a second time with the seed pinned AND an

@@ -152,6 +152,13 @@ fn main() {
                 ("ext_prefetch_hits", m.last.prefetch_hits),
                 ("ext_prefetch_stalls", m.last.prefetch_stalls),
                 ("ext_write_stalls", m.last.write_stalls),
+                // Resilience counters: all zero on a healthy run, so a
+                // nonzero value in a bench archive flags an environment
+                // that was quietly retrying or degrading during the
+                // measurement.
+                ("ext_io_retries", m.last.io_retries),
+                ("ext_io_gave_up", m.last.io_gave_up),
+                ("ext_fallback_inmem", m.last.fallback_inmem),
             ],
         );
     }

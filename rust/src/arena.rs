@@ -28,6 +28,7 @@ use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
+use crate::fault::FaultSession;
 use crate::metrics::ScratchCounters;
 
 /// A pool of reusable, type-erased scratch arenas.
@@ -40,6 +41,11 @@ use crate::metrics::ScratchCounters;
 pub struct ArenaPool {
     slots: Mutex<HashMap<TypeId, Vec<Box<dyn Any + Send>>>>,
     counters: Arc<ScratchCounters>,
+    /// Armed fault session, if any — gives the `arena.alloc` failpoint
+    /// a hook on the fresh-allocation path. Owners ([`Sorter`],
+    /// [`SortService`](crate::service::SortService)) arm this from
+    /// their config.
+    faults: Mutex<Option<Arc<FaultSession>>>,
 }
 
 impl ArenaPool {
@@ -54,7 +60,13 @@ impl ArenaPool {
         ArenaPool {
             slots: Mutex::new(HashMap::new()),
             counters,
+            faults: Mutex::new(None),
         }
+    }
+
+    /// Arm (or disarm, with `None`) the `arena.alloc` failpoint.
+    pub fn arm_faults(&self, session: Option<Arc<FaultSession>>) {
+        *self.faults.lock().unwrap() = session;
     }
 
     /// The counters this pool reports into.
@@ -79,6 +91,13 @@ impl ArenaPool {
                 *boxed.downcast::<A>().expect("arena slot type mismatch")
             }
             None => {
+                // `arena.alloc` failpoint: fires only on the fresh-build
+                // path, modeling allocator pressure; warm (recycling)
+                // checkouts are unaffected.
+                let faults = self.faults.lock().unwrap().clone();
+                if let Some(f) = faults {
+                    f.panic_fault("arena.alloc", Some(&self.counters));
+                }
                 self.counters
                     .scratch_allocations
                     .fetch_add(1, Ordering::Relaxed);
@@ -172,6 +191,28 @@ mod tests {
         // At most one arena per concurrent thread was ever built.
         assert!(s.scratch_allocations <= 4, "{}", s.scratch_allocations);
         assert!(pool.idle_arenas() <= 4);
+    }
+
+    #[test]
+    fn arena_alloc_failpoint_fires_on_fresh_builds_only() {
+        use crate::fault::{FaultPlan, FaultSession};
+        let pool = ArenaPool::new();
+        pool.checkin::<Vec<u64>>(vec![7]);
+        pool.arm_faults(Some(Arc::new(FaultSession::new(
+            FaultPlan::parse("arena.alloc=err@1").unwrap(),
+        ))));
+        // Recycled checkout: no fresh build, the failpoint is not hit.
+        let v: Vec<u64> = pool.checkout(|| unreachable!("must reuse"));
+        pool.checkin(v);
+        // A fresh build evaluates (and fires) the failpoint.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _: Vec<f64> = pool.checkout(Vec::new);
+        }));
+        assert!(r.is_err(), "armed fresh build must panic");
+        assert_eq!(pool.counters().snapshot().faults_injected, 1);
+        // Trigger spent; the pool is not poisoned.
+        let _: Vec<f64> = pool.checkout(Vec::new);
+        assert_eq!(pool.idle_arenas(), 1);
     }
 
     #[test]

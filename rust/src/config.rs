@@ -1,7 +1,9 @@
 //! Tuning parameters of IPS⁴o (paper §4.7) and their defaults.
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::fault::{FaultPlan, FaultSession, JobControl};
 use crate::planner::backend::PlannerMode;
 use crate::planner::calibration::CalibrationProfile;
 use crate::scheduler::SchedulerMode;
@@ -73,6 +75,25 @@ pub struct Config {
     /// for run generation, merge fan-in, per-stream buffer bytes, and
     /// the spill directory.
     pub extsort: ExtSortConfig,
+    /// Armed fault-injection session ([`crate::fault`]), `None` in
+    /// production. Shared behind an [`Arc`] so every `Config` clone
+    /// draws from the same hit counters — a `@3` trigger fires on the
+    /// third hit across the whole job sequence, which is what makes
+    /// "inject once, then run a clean warm job" tests deterministic.
+    /// `Sorter::new` / `SortService::new` arm this from `IPS4O_FAULTS`
+    /// when it is unset.
+    pub faults: Option<Arc<FaultSession>>,
+    /// Optional wall-clock budget per service job. When set,
+    /// [`SortService`](crate::service::SortService) runs a watchdog
+    /// thread that cancels jobs still running past their deadline
+    /// through the scheduler's abort flag (counted in
+    /// `jobs_deadline_exceeded`).
+    pub job_deadline: Option<Duration>,
+    /// Cooperative cancellation handle polled by the scheduler's work
+    /// loops and the external tier. Installed per job by the service
+    /// (each job gets its own [`JobControl`] via a cheap `Config`
+    /// clone); `None` disables the checks.
+    pub cancel: Option<Arc<JobControl>>,
 }
 
 /// Tuning knobs for the out-of-core sorting tier ([`crate::extsort`]).
@@ -122,6 +143,64 @@ pub struct ExtSortConfig {
     /// other value enables (see
     /// [`effective_overlap`](ExtSortConfig::effective_overlap)).
     pub overlap: bool,
+    /// Retry policy for transient external-tier I/O failures (spill-run
+    /// creation, run/input opens, whole-chunk spills). The default
+    /// policy retries nothing, preserving fail-fast semantics; retried
+    /// attempts and exhausted budgets are counted in `ext_io_retries` /
+    /// `ext_io_gave_up`.
+    pub retry: RetryPolicy,
+    /// Graceful-degradation budget: when a file job fails with an I/O
+    /// error (e.g. the spill device is full) and the *input file* is at
+    /// most this many bytes, the job is re-run through the in-memory
+    /// path (read whole file → sort → write) instead of failing.
+    /// `0` (the default) disables the fallback. Fallbacks are counted
+    /// in `ext_fallback_inmem`.
+    pub fallback_inmem_bytes: usize,
+}
+
+/// Bounded exponential backoff for transient external-tier I/O errors.
+///
+/// Attempt `i` (0-based) sleeps `min(base_delay_ms · 2^i, max_delay_ms)`
+/// before retrying; after `max_retries` failed retries the original
+/// error surfaces. `max_retries = 0` (the default) disables retrying.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first failure (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before the first retry, in milliseconds.
+    pub base_delay_ms: u64,
+    /// Cap on the per-retry backoff, in milliseconds.
+    pub max_delay_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 0,
+            base_delay_ms: 1,
+            max_delay_ms: 50,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy retrying up to `n` times with the default backoff.
+    pub fn retries(n: u32) -> Self {
+        RetryPolicy {
+            max_retries: n,
+            ..Default::default()
+        }
+    }
+
+    /// Backoff before retry attempt `attempt` (0-based), exponential in
+    /// the attempt number and capped at `max_delay_ms`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base_delay_ms
+            .checked_shl(attempt.min(20))
+            .unwrap_or(u64::MAX);
+        Duration::from_millis(exp.min(self.max_delay_ms))
+    }
 }
 
 /// Environment variable overriding [`ExtSortConfig::overlap`]:
@@ -139,6 +218,8 @@ impl Default for ExtSortConfig {
             buffer_bytes: 1 << 20,
             spill_dir: None, // OS temp dir
             overlap: true,
+            retry: RetryPolicy::default(),
+            fallback_inmem_bytes: 0,
         }
     }
 }
@@ -176,6 +257,20 @@ impl ExtSortConfig {
         self
     }
 
+    /// Builder-style retry-policy override for transient I/O failures.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = policy;
+        self
+    }
+
+    /// Builder-style in-memory fallback budget in input bytes
+    /// (`0` disables; see
+    /// [`fallback_inmem_bytes`](ExtSortConfig::fallback_inmem_bytes)).
+    pub fn with_fallback_inmem_bytes(mut self, bytes: usize) -> Self {
+        self.fallback_inmem_bytes = bytes;
+        self
+    }
+
     /// The overlap setting a job actually runs with: the
     /// [`EXT_OVERLAP_ENV`] environment variable when set (kill switch
     /// for A/B comparison without rebuilding configs), otherwise the
@@ -206,6 +301,9 @@ impl Default for Config {
             scheduler: SchedulerMode::Dynamic,
             calibration: None,
             extsort: ExtSortConfig::default(),
+            faults: None,
+            job_deadline: None,
+            cancel: None,
         }
     }
 }
@@ -283,6 +381,37 @@ impl Config {
     /// Builder-style out-of-core knob override (see [`ExtSortConfig`]).
     pub fn with_extsort(mut self, ext: ExtSortConfig) -> Self {
         self.extsort = ext;
+        self
+    }
+
+    /// Arm a fault-injection plan ([`crate::fault`]): every failpoint
+    /// in `plan` fires per its trigger across all jobs run under this
+    /// config (and its clones). Tests and chaos drills only.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(Arc::new(FaultSession::new(plan)));
+        self
+    }
+
+    /// [`Config::with_faults`] for an already-armed session (lets a test
+    /// keep a handle for inspecting injection counts).
+    pub fn with_fault_session(mut self, session: Arc<FaultSession>) -> Self {
+        self.faults = Some(session);
+        self
+    }
+
+    /// Builder-style per-job deadline: service jobs still running after
+    /// `d` are cancelled by the watchdog thread.
+    pub fn with_job_deadline(mut self, d: Duration) -> Self {
+        self.job_deadline = Some(d);
+        self
+    }
+
+    /// Install a cooperative cancellation handle for the jobs run under
+    /// this config. The service does this per job automatically; direct
+    /// [`Sorter`](crate::Sorter) users can install one to cancel a
+    /// long-running sort from another thread.
+    pub fn with_cancel(mut self, control: Arc<JobControl>) -> Self {
+        self.cancel = Some(control);
         self
     }
 
@@ -462,12 +591,19 @@ mod tests {
         assert_eq!(e.buffer_bytes, 1 << 20);
         assert!(e.spill_dir.is_none(), "OS temp dir by default");
         assert!(e.overlap, "I/O overlap is on by default");
+        assert_eq!(e.retry, RetryPolicy::default(), "no retries by default");
+        assert_eq!(e.retry.max_retries, 0, "fail fast by default");
+        assert_eq!(e.fallback_inmem_bytes, 0, "no fallback by default");
         let e = ExtSortConfig::default()
             .with_chunk_bytes(0)
             .with_fan_in(1)
             .with_buffer_bytes(0)
             .with_spill_dir("/tmp/spill")
-            .with_overlap(false);
+            .with_overlap(false)
+            .with_retry(RetryPolicy::retries(3))
+            .with_fallback_inmem_bytes(1 << 20);
+        assert_eq!(e.retry.max_retries, 3);
+        assert_eq!(e.fallback_inmem_bytes, 1 << 20);
         assert_eq!(e.chunk_bytes, 1, "chunk clamps to at least one byte");
         assert_eq!(e.fan_in, 2, "fan-in clamps to a real merge");
         assert_eq!(e.buffer_bytes, 1);
@@ -485,6 +621,43 @@ mod tests {
         );
         let c = Config::default().with_extsort(e.clone());
         assert_eq!(c.extsort, e);
+    }
+
+    #[test]
+    fn retry_backoff_is_bounded_exponential() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            base_delay_ms: 2,
+            max_delay_ms: 10,
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(2));
+        assert_eq!(p.backoff(1), Duration::from_millis(4));
+        assert_eq!(p.backoff(2), Duration::from_millis(8));
+        assert_eq!(p.backoff(3), Duration::from_millis(10), "capped");
+        assert_eq!(p.backoff(63), Duration::from_millis(10), "no overflow");
+        assert_eq!(RetryPolicy::retries(3).max_retries, 3);
+    }
+
+    #[test]
+    fn fault_and_deadline_knobs_default_off() {
+        let c = Config::default();
+        assert!(c.faults.is_none(), "no faults in production");
+        assert!(c.job_deadline.is_none(), "no deadline by default");
+        assert!(c.cancel.is_none(), "no cancel handle by default");
+        let c = c
+            .with_faults(FaultPlan::parse("ext.spill=err@1").unwrap())
+            .with_job_deadline(Duration::from_millis(250));
+        // Clones share the armed session, so hit counters span jobs.
+        let c2 = c.clone();
+        assert!(Arc::ptr_eq(
+            c.faults.as_ref().unwrap(),
+            c2.faults.as_ref().unwrap()
+        ));
+        assert_eq!(c.job_deadline, Some(Duration::from_millis(250)));
+        let ctl = Arc::new(JobControl::new());
+        let c = c.with_cancel(Arc::clone(&ctl));
+        ctl.cancel();
+        assert!(c.cancel.as_ref().unwrap().is_cancelled());
     }
 
     #[test]

@@ -14,6 +14,8 @@ use std::sync::{Condvar, Mutex};
 
 use super::codec::ExtRecord;
 use super::ExtSortError;
+use crate::fault::FaultSession;
+use crate::metrics::ScratchCounters;
 use crate::radix::RadixKey;
 
 /// Fill `raw` from `src` as far as the stream allows (retrying short
@@ -118,16 +120,25 @@ pub(crate) struct SpillRun {
 /// [`RunCursor::refill`] and the pipelined merge's prefetch thread so
 /// both paths have identical short-file semantics: a run shorter than
 /// its recorded length surfaces as an error, never as silent loss.
+///
+/// `read_fault` is the `ext.read` failpoint, evaluated here — the one
+/// chokepoint every merge-phase block read goes through — so an armed
+/// session exercises both the serial and the pipelined error paths
+/// with the same spec; `None` (the production default) is a no-op.
 pub(crate) fn read_run_block<T: ExtRecord>(
     src: &mut File,
     remaining: &mut u64,
     raw: &mut [u8],
     out: &mut Vec<T>,
+    read_fault: Option<(&FaultSession, &ScratchCounters)>,
 ) -> Result<(), ExtSortError> {
     debug_assert!(
         raw.len() >= T::WIDTH,
         "cursor staging narrower than one record (clamp missing)"
     );
+    if let Some((session, counters)) = read_fault {
+        session.io_fault("ext.read", Some(counters))?;
+    }
     let cap = (raw.len() / T::WIDTH).max(1);
     let want = (*remaining as usize).min(cap);
     let count = read_records(src, &mut raw[..want * T::WIDTH], out)?;
@@ -206,12 +217,23 @@ impl<T: ExtRecord> RunCursor<T> {
     /// Refill the buffer from the file if it is empty and the file has
     /// more records. A shorter-than-promised file (external tampering
     /// or filesystem trouble) surfaces as [`ExtSortError::Truncated`]
-    /// or an I/O error, never as silent data loss.
-    pub(crate) fn refill(&mut self) -> Result<(), ExtSortError> {
+    /// or an I/O error, never as silent data loss. `read_fault` is the
+    /// `ext.read` failpoint pair (see [`read_run_block`]); `None`
+    /// disables it.
+    pub(crate) fn refill(
+        &mut self,
+        read_fault: Option<(&FaultSession, &ScratchCounters)>,
+    ) -> Result<(), ExtSortError> {
         if self.buffered() > 0 || self.remaining == 0 {
             return Ok(());
         }
-        read_run_block(&mut self.src, &mut self.remaining, &mut self.raw, &mut self.buf)?;
+        read_run_block(
+            &mut self.src,
+            &mut self.remaining,
+            &mut self.raw,
+            &mut self.buf,
+            read_fault,
+        )?;
         self.pos = 0;
         Ok(())
     }
@@ -441,7 +463,7 @@ mod tests {
         let mut c = RunCursor::<u64>::from_parts(src, 5, Vec::with_capacity(1), vec![0u8; 3]);
         let mut out = Vec::new();
         while !c.exhausted() {
-            c.refill().unwrap();
+            c.refill(None).unwrap();
             c.take_all(&mut out);
         }
         assert_eq!(out, recs);

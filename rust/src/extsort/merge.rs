@@ -49,7 +49,8 @@ use std::sync::{mpsc, Mutex};
 
 use super::codec::ExtRecord;
 use super::io::{read_run_block, RecordWriter, RunCursor, SpillGuard, SpillRun};
-use super::{ExtScratch, ExtSortError, ExtSortReport};
+use super::{ExtScratch, ExtSortError, ExtSortReport, FaultCtl};
+use crate::fault::FaultSession;
 use crate::merge::{merge_sort_runs, merge_sort_runs_par};
 use crate::metrics::ScratchCounters;
 use crate::parallel::ThreadPool;
@@ -72,6 +73,7 @@ pub(crate) struct PipeStats {
 /// cascading through intermediate spill runs while more than `fan_in`
 /// remain. Source run files are deleted as soon as their group merge
 /// completes, bounding peak spill usage.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn merge_runs<T, W>(
     mut runs: Vec<SpillRun>,
     output: &mut W,
@@ -81,6 +83,7 @@ pub(crate) fn merge_runs<T, W>(
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
     overlap: bool,
+    ctl: &FaultCtl<'_>,
 ) -> Result<(), ExtSortError>
 where
     T: ExtRecord,
@@ -89,6 +92,7 @@ where
     let fan_in = scratch.fan_in;
     let mut next_id = runs.len() as u64;
     while runs.len() > fan_in {
+        ctl.check_cancel()?;
         // Minimal leading group that brings the remainder to <= fan_in:
         // each intermediate pass replaces k runs with 1, shrinking the
         // count by k-1, so pick k so the excess lands on a multiple of
@@ -98,9 +102,15 @@ where
         let excess = runs.len() - fan_in;
         let k = (excess - 1) % (fan_in - 1) + 2;
         let group: Vec<SpillRun> = runs.drain(..k).collect();
-        let (path, mut dst) = spill.create_run(next_id)?;
+        // `ext.spill` failpoint + retry: cascade intermediates are
+        // spill runs too, so their creation shares the spill policy.
+        let (path, mut dst) = ctl.with_retries(|| {
+            ctl.fault("ext.spill")?;
+            Ok(spill.create_run(next_id)?)
+        })?;
         next_id += 1;
-        let records = merge_group(group, &mut dst, scratch, pool, counters, report, overlap)?;
+        let records =
+            merge_group(group, &mut dst, scratch, pool, counters, report, overlap, ctl)?;
         counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
         counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
         report.runs_written += 1;
@@ -108,10 +118,12 @@ where
         runs.push(SpillRun { path, records });
     }
     if !runs.is_empty() {
-        merge_group(runs, &mut *output, scratch, pool, counters, report, overlap)?;
+        ctl.check_cancel()?;
+        merge_group(runs, &mut *output, scratch, pool, counters, report, overlap, ctl)?;
         counters.ext_merge_passes.fetch_add(1, Ordering::Relaxed);
         report.merge_passes += 1;
     }
+    ctl.fault("ext.merge_write")?;
     output.flush()?;
     Ok(())
 }
@@ -133,6 +145,7 @@ fn merge_group<T, W>(
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
     overlap: bool,
+    ctl: &FaultCtl<'_>,
 ) -> Result<u64, ExtSortError>
 where
     T: ExtRecord,
@@ -142,13 +155,19 @@ where
     let in_records: u64 = group.iter().map(|r| r.records).sum();
     let mut files = Vec::with_capacity(group.len());
     for run in &group {
-        files.push(File::open(&run.path)?);
+        // `ext.read` failpoint + retry: a run that fails to open can be
+        // retried without losing anything — nothing was consumed yet.
+        files.push(ctl.with_retries(|| {
+            ctl.fault("ext.read")?;
+            Ok(File::open(&run.path)?)
+        })?);
     }
 
     let (written, bytes, stats) = if overlap {
-        merge_group_pipelined(files, &group, dst, scratch, pool, counters)?
+        merge_group_pipelined(files, &group, dst, scratch, pool, counters, ctl)?
     } else {
-        let (written, bytes) = merge_group_serial(files, &group, dst, scratch, pool, counters)?;
+        let (written, bytes) =
+            merge_group_serial(files, &group, dst, scratch, pool, counters, ctl)?;
         (written, bytes, PipeStats::default())
     };
     debug_assert_eq!(written, in_records, "merge lost or invented records");
@@ -181,6 +200,7 @@ where
 /// The pre-overlap single-thread body: refill → merge → write in
 /// lockstep on the calling thread. Kept verbatim behind the
 /// `IPS4O_EXT_OVERLAP=off` kill switch as the A/B baseline.
+#[allow(clippy::too_many_arguments)]
 fn merge_group_serial<T, W>(
     files: Vec<File>,
     group: &[SpillRun],
@@ -188,6 +208,7 @@ fn merge_group_serial<T, W>(
     scratch: &mut ExtScratch<T>,
     pool: Option<&ThreadPool>,
     counters: &ScratchCounters,
+    ctl: &FaultCtl<'_>,
 ) -> Result<(u64, u64), ExtSortError>
 where
     T: ExtRecord,
@@ -214,8 +235,9 @@ where
         let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
         let mut written = 0u64;
         loop {
+            ctl.check_cancel()?;
             for c in cursors.iter_mut() {
-                c.refill()?;
+                c.refill(ctl.read_fault())?;
             }
             if cursors.iter().all(|c| c.exhausted()) {
                 break;
@@ -250,6 +272,7 @@ where
                 }
                 None => merge_sort_runs(&mut stage, merge_scratch, &T::radix_less, Some(counters)),
             }
+            ctl.fault("ext.merge_write")?;
             writer.write_all(&stage)?;
             written += stage.len() as u64;
         }
@@ -375,13 +398,14 @@ fn prefetch_fill<T: ExtRecord>(
     mut buf: Vec<T>,
     fault: &Mutex<Option<ExtSortError>>,
     held: &mut Vec<Vec<T>>,
+    read_fault: Option<(&FaultSession, &ScratchCounters)>,
 ) -> bool {
     if *remaining == 0 {
         held.push(buf);
         return true;
     }
     buf.clear();
-    match read_run_block(file, remaining, raw, &mut buf) {
+    match read_run_block(file, remaining, raw, &mut buf, read_fault) {
         Ok(()) => match tx.send(buf) {
             Ok(()) => true,
             Err(e) => {
@@ -411,6 +435,7 @@ struct PipeOutcome<T> {
 /// The three-stage pipelined group merge (see the module docs for the
 /// topology). The consumer runs on the calling thread so the merge
 /// itself can use the caller's [`ThreadPool`].
+#[allow(clippy::too_many_arguments)]
 fn merge_group_pipelined<T, W>(
     files: Vec<File>,
     group: &[SpillRun],
@@ -418,6 +443,7 @@ fn merge_group_pipelined<T, W>(
     scratch: &mut ExtScratch<T>,
     pool: Option<&ThreadPool>,
     counters: &ScratchCounters,
+    ctl: &FaultCtl<'_>,
 ) -> Result<(u64, u64, PipeStats), ExtSortError>
 where
     T: ExtRecord,
@@ -489,6 +515,7 @@ where
                         buf,
                         fault,
                         &mut held,
+                        ctl.read_fault(),
                     ) {
                         alive = false;
                         held.append(&mut seed);
@@ -510,6 +537,7 @@ where
                             buf,
                             fault,
                             &mut held,
+                            ctl.read_fault(),
                         ) {
                             break;
                         }
@@ -527,7 +555,9 @@ where
                 let mut held: Vec<Vec<T>> = Vec::new();
                 let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
                 while let Ok(stage) = stage_rx.recv() {
-                    match writer.write_all(&stage) {
+                    // `ext.merge_write` failpoint: shares the real write
+                    // error's drain-before-return teardown path.
+                    match ctl.fault("ext.merge_write").and_then(|()| writer.write_all(&stage)) {
                         Ok(()) => {
                             let mut stage = stage;
                             stage.clear();
@@ -584,6 +614,13 @@ where
         let consumer: Result<u64, ExtSortError> = (|| {
             let mut written = 0u64;
             loop {
+                if let Err(e) = ctl.check_cancel() {
+                    // Record the cancellation in the fault slot so
+                    // `resolve` below surfaces it; the teardown after
+                    // this return unblocks and joins both helpers.
+                    *fault.lock().unwrap() = Some(e);
+                    return Err(placeholder_fault());
+                }
                 for (slot, c) in cursors.iter_mut().enumerate() {
                     if c.refill(slot, &ret_tx, &mut stats).is_err() {
                         return Err(placeholder_fault());

@@ -46,7 +46,8 @@ use std::sync::{mpsc, Mutex};
 use std::time::Instant;
 
 use crate::arena::ArenaPool;
-use crate::config::Config;
+use crate::config::{Config, RetryPolicy};
+use crate::fault::{FaultSession, JobControl};
 use crate::merge::MergeScratch;
 use crate::metrics::ScratchCounters;
 use crate::parallel::ThreadPool;
@@ -69,6 +70,9 @@ pub enum ExtSortError {
         /// Dangling byte count (`stream_len % width`, nonzero).
         trailing: usize,
     },
+    /// The job was cancelled cooperatively — explicitly through
+    /// `JobTicket::cancel` or by the service's deadline watchdog.
+    Cancelled,
 }
 
 impl std::fmt::Display for ExtSortError {
@@ -80,6 +84,7 @@ impl std::fmt::Display for ExtSortError {
                 "truncated record stream: {trailing} trailing bytes \
                  (record width {width})"
             ),
+            ExtSortError::Cancelled => write!(f, "external sort job cancelled"),
         }
     }
 }
@@ -88,7 +93,7 @@ impl std::error::Error for ExtSortError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             ExtSortError::Io(e) => Some(e),
-            ExtSortError::Truncated { .. } => None,
+            ExtSortError::Truncated { .. } | ExtSortError::Cancelled => None,
         }
     }
 }
@@ -128,6 +133,16 @@ pub struct ExtSortReport {
     /// Hand-offs that blocked waiting on the spill/output writer — the
     /// job was write-bound at those points. Zero with overlap off.
     pub write_stalls: u64,
+    /// Transient I/O failures retried under the configured
+    /// [`RetryPolicy`] (one count per retried attempt).
+    pub io_retries: u64,
+    /// I/O operations that exhausted their retry budget and surfaced
+    /// the error. Zero on successful jobs by construction.
+    pub io_gave_up: u64,
+    /// `1` when this job degraded to the in-memory fallback path after
+    /// a spill-tier failure (see
+    /// [`ExtSortConfig::fallback_inmem_bytes`](crate::config::ExtSortConfig::fallback_inmem_bytes)).
+    pub fallback_inmem: u64,
 }
 
 /// All recyclable memory for one external sort job: chunk buffers and
@@ -258,6 +273,11 @@ where
 {
     let overlap = cfg.extsort.effective_overlap();
     let counters = std::sync::Arc::clone(arenas.counters());
+    if let Some(f) = cfg.faults.as_deref() {
+        f.begin_job();
+    }
+    let ctl = FaultCtl::new(cfg, &counters);
+    ctl.check_cancel()?;
     let mut scratch = arenas.checkout(|| ExtScratch::<T>::new(cfg));
     assert!(
         scratch.compatible_with(cfg),
@@ -283,6 +303,7 @@ where
             &counters,
             &mut report,
             overlap,
+            &ctl,
         )?;
         report.run_gen_nanos = t0.elapsed().as_nanos() as u64;
 
@@ -296,10 +317,14 @@ where
             &counters,
             &mut report,
             overlap,
+            &ctl,
         )?;
         report.merge_nanos = t1.elapsed().as_nanos() as u64;
         Ok(())
     })();
+
+    report.io_retries = ctl.retries.load(Ordering::Relaxed);
+    report.io_gave_up = ctl.gave_up.load(Ordering::Relaxed);
 
     match result {
         Ok(()) => {
@@ -321,6 +346,16 @@ where
 
 /// Open `input` and `output` as files and sort between them. The
 /// output file is created (truncated if present).
+///
+/// **Graceful degradation:** when
+/// [`fallback_inmem_bytes`](crate::config::ExtSortConfig::fallback_inmem_bytes)
+/// is nonzero and the spill-backed job fails with an I/O error (e.g.
+/// the spill directory is on a dead or full disk) while the *input*
+/// is small enough to fit the configured budget, the job is re-run on
+/// a one-shot in-memory path that never touches the spill tier. The
+/// degradation is observable: the report and the global counters carry
+/// `fallback_inmem`, and the output is created fresh (the failed
+/// attempt's partial output is truncated).
 pub(crate) fn sort_file<T, F>(
     input: &Path,
     output: &Path,
@@ -333,9 +368,65 @@ where
     T: ExtRecord,
     F: Fn(&mut [T]),
 {
-    let src = std::fs::File::open(input)?;
-    let dst = std::fs::File::create(output)?;
-    sort_stream::<T, _, _, _>(src, dst, cfg, pool, arenas, sort_chunk)
+    let attempt = (|| -> Result<ExtSortReport, ExtSortError> {
+        let src = std::fs::File::open(input)?;
+        let dst = std::fs::File::create(output)?;
+        sort_stream::<T, _, _, _>(src, dst, cfg, pool, arenas, &sort_chunk)
+    })();
+    match attempt {
+        Err(ExtSortError::Io(e)) if cfg.extsort.fallback_inmem_bytes > 0 => {
+            let fits = std::fs::metadata(input)
+                .map(|m| m.len() <= cfg.extsort.fallback_inmem_bytes as u64)
+                .unwrap_or(false);
+            if fits {
+                fallback_inmem::<T, _>(input, output, arenas, &sort_chunk)
+            } else {
+                Err(ExtSortError::Io(e))
+            }
+        }
+        other => other,
+    }
+}
+
+/// The degraded one-shot path behind [`sort_file`]'s fallback: read
+/// the whole input, decode, sort with the caller's in-memory hook,
+/// encode into the same raw buffer, write the output. No spill files,
+/// no arena scratch — this path trades the zero-allocation guarantee
+/// for completing the job at all, which is why it is opt-in and
+/// budget-gated.
+fn fallback_inmem<T, F>(
+    input: &Path,
+    output: &Path,
+    arenas: &ArenaPool,
+    sort_chunk: &F,
+) -> Result<ExtSortReport, ExtSortError>
+where
+    T: ExtRecord,
+    F: Fn(&mut [T]),
+{
+    let mut raw = std::fs::read(input)?;
+    let trailing = raw.len() % T::WIDTH;
+    if trailing != 0 {
+        return Err(ExtSortError::Truncated { width: T::WIDTH, trailing });
+    }
+    let mut recs: Vec<T> = raw.chunks_exact(T::WIDTH).map(T::decode).collect();
+    sort_chunk(&mut recs[..]);
+    for (i, r) in recs.iter().enumerate() {
+        r.encode(&mut raw[i * T::WIDTH..(i + 1) * T::WIDTH]);
+    }
+    std::fs::write(output, &raw)?;
+    let bytes = raw.len() as u64;
+    let counters = arenas.counters();
+    counters.ext_fallback_inmem.fetch_add(1, Ordering::Relaxed);
+    counters.ext_bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
+    Ok(ExtSortReport {
+        elements: recs.len() as u64,
+        bytes_read: bytes,
+        bytes_written: bytes,
+        fallback_inmem: 1,
+        ..Default::default()
+    })
 }
 
 /// The real cause of a pipeline-thread failure, recorded in the shared
@@ -350,6 +441,101 @@ fn take_fault(fault: &Mutex<Option<ExtSortError>>) -> ExtSortError {
             "external sort pipeline thread failed",
         ))
     })
+}
+
+/// Per-job fault/cancellation/retry carrier, threaded by shared
+/// reference through both phases (including their scoped pipeline
+/// threads — everything inside is a shared borrow or an atomic).
+///
+/// It bundles the three robustness concerns so the hot paths take one
+/// extra parameter instead of three:
+///
+/// * **failpoints** — [`FaultCtl::fault`] evaluates a named failpoint
+///   against the job's armed [`FaultSession`] (no-op when disarmed);
+/// * **cooperative cancellation** — [`FaultCtl::check_cancel`] turns a
+///   tripped [`JobControl`] into [`ExtSortError::Cancelled`] at the
+///   phase loops, so a deadline or an explicit cancel stops a job
+///   between chunks/windows rather than mid-write;
+/// * **bounded retries** — [`FaultCtl::with_retries`] re-runs a
+///   transient-I/O-prone operation under the configured
+///   [`RetryPolicy`], counting retries and give-ups for the report.
+pub(crate) struct FaultCtl<'a> {
+    faults: Option<&'a FaultSession>,
+    cancel: Option<&'a JobControl>,
+    retry: RetryPolicy,
+    counters: &'a ScratchCounters,
+    retries: std::sync::atomic::AtomicU64,
+    gave_up: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> FaultCtl<'a> {
+    pub(crate) fn new(cfg: &'a Config, counters: &'a ScratchCounters) -> Self {
+        FaultCtl {
+            faults: cfg.faults.as_deref(),
+            cancel: cfg.cancel.as_deref(),
+            retry: cfg.extsort.retry,
+            counters,
+            retries: std::sync::atomic::AtomicU64::new(0),
+            gave_up: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Fail with [`ExtSortError::Cancelled`] if the job's control has
+    /// been tripped (deadline watchdog or explicit cancel).
+    fn check_cancel(&self) -> Result<(), ExtSortError> {
+        match self.cancel {
+            Some(ctl) if ctl.is_cancelled() => Err(ExtSortError::Cancelled),
+            _ => Ok(()),
+        }
+    }
+
+    /// Evaluate the named failpoint (no-op unless a session is armed
+    /// and the point's trigger fires).
+    fn fault(&self, point: &str) -> std::io::Result<()> {
+        match self.faults {
+            Some(f) => f.io_fault(point, Some(self.counters)),
+            None => Ok(()),
+        }
+    }
+
+    /// The `(session, counters)` pair [`io::read_run_block`] needs to
+    /// evaluate the `ext.read` failpoint at the shared block-read
+    /// chokepoint; `None` when no session is armed.
+    fn read_fault(&self) -> Option<(&'a FaultSession, &'a ScratchCounters)> {
+        self.faults.map(|f| (f, self.counters))
+    }
+
+    /// Run `op`, retrying transient I/O failures under the job's
+    /// [`RetryPolicy`] with bounded exponential backoff. Only
+    /// [`ExtSortError::Io`] is considered transient; truncation and
+    /// cancellation surface immediately. With the default policy
+    /// (`max_retries = 0`) this is exactly one attempt and no
+    /// accounting — byte-identical to the pre-retry behavior.
+    fn with_retries<V>(
+        &self,
+        mut op: impl FnMut() -> Result<V, ExtSortError>,
+    ) -> Result<V, ExtSortError> {
+        let mut attempt = 0u32;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(ExtSortError::Io(e)) if attempt < self.retry.max_retries => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    self.counters.ext_io_retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(self.retry.backoff(attempt));
+                    attempt += 1;
+                    drop(e);
+                }
+                Err(e) => {
+                    if matches!(e, ExtSortError::Io(_)) && self.retry.max_retries > 0 {
+                        self.gave_up.fetch_add(1, Ordering::Relaxed);
+                        self.counters.ext_io_gave_up.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
 }
 
 /// Phase 1: chunk the input, sort each chunk, spill sorted runs.
@@ -371,6 +557,7 @@ fn generate_runs<T, R, F>(
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
     overlap: bool,
+    ctl: &FaultCtl<'_>,
 ) -> Result<Vec<SpillRun>, ExtSortError>
 where
     T: ExtRecord,
@@ -398,6 +585,13 @@ where
                     // unwinding); exit without blocking.
                     None => return,
                 };
+                // `ext.read` failpoint: models an input-read failure;
+                // surfaces through the same Fail message as a real one.
+                if let Err(e) = ctl.fault("ext.read") {
+                    shelf.put(buf);
+                    let _ = full_tx.send(ChunkMsg::Fail(e.into()));
+                    return;
+                }
                 match io::read_records(input, chunk_raw, &mut buf) {
                     Ok(0) => {
                         shelf.put(buf);
@@ -430,13 +624,17 @@ where
         if overlap {
             run_gen_pipelined(
                 s, reader, closer, &shelf, &full_rx, spill, write_raw, sort_chunk, counters,
-                report, &fault,
+                report, &fault, ctl,
             )
         } else {
             let mut runs: Vec<SpillRun> = Vec::new();
             let worked: Result<(), ExtSortError> = loop {
                 match full_rx.recv() {
                     Ok(ChunkMsg::Chunk(mut buf)) => {
+                        if let Err(e) = ctl.check_cancel() {
+                            shelf.put(buf);
+                            break Err(e);
+                        }
                         let spilled = spill_chunk(
                             &mut buf,
                             spill,
@@ -445,6 +643,7 @@ where
                             sort_chunk,
                             counters,
                             report,
+                            ctl,
                         );
                         shelf.put(buf);
                         match spilled {
@@ -508,6 +707,7 @@ fn run_gen_pipelined<'scope, 'env, T, F>(
     counters: &'scope ScratchCounters,
     report: &mut ExtSortReport,
     fault: &'scope Mutex<Option<ExtSortError>>,
+    ctl: &'scope FaultCtl<'scope>,
 ) -> Result<Vec<SpillRun>, ExtSortError>
 where
     T: ExtRecord,
@@ -520,15 +720,17 @@ where
         while let Ok(buf) = spill_rx.recv() {
             let id = runs.len() as u64;
             let records = buf.len() as u64;
-            let attempt = spill
-                .create_run(id)
-                .map_err(ExtSortError::from)
-                .and_then(|(path, dst)| {
-                    let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
-                    writer.write_all(&buf)?;
-                    let (_, bytes) = writer.finish()?;
-                    Ok((path, bytes))
-                });
+            // `ext.spill` failpoint + retry: each attempt recreates the
+            // run file from scratch (create truncates), so a transient
+            // failure retried under the policy leaves a whole run.
+            let attempt = ctl.with_retries(|| {
+                ctl.fault("ext.spill")?;
+                let (path, dst) = spill.create_run(id)?;
+                let mut writer = RecordWriter::<_, T>::new(dst, &mut *write_raw);
+                writer.write_all(&buf)?;
+                let (_, bytes) = writer.finish()?;
+                Ok((path, bytes))
+            });
             // Re-arm the reader before error handling: the buffer goes
             // back on the shelf no matter how the write went.
             shelf.put(buf);
@@ -579,6 +781,10 @@ where
         };
         match msg {
             ChunkMsg::Chunk(mut buf) => {
+                if let Err(e) = ctl.check_cancel() {
+                    shelf.put(buf);
+                    break Err(e);
+                }
                 let records = buf.len() as u64;
                 let chunk_bytes = records * T::WIDTH as u64;
                 counters.ext_bytes_read.fetch_add(chunk_bytes, Ordering::Relaxed);
@@ -652,6 +858,7 @@ where
 }
 
 /// Sort one decoded chunk and spill it as run `id`.
+#[allow(clippy::too_many_arguments)]
 fn spill_chunk<T, F>(
     buf: &mut Vec<T>,
     spill: &SpillGuard,
@@ -660,6 +867,7 @@ fn spill_chunk<T, F>(
     sort_chunk: &F,
     counters: &ScratchCounters,
     report: &mut ExtSortReport,
+    ctl: &FaultCtl<'_>,
 ) -> Result<SpillRun, ExtSortError>
 where
     T: ExtRecord,
@@ -673,10 +881,16 @@ where
 
     sort_chunk(&mut buf[..]);
 
-    let (path, dst) = spill.create_run(id)?;
-    let mut writer = RecordWriter::<_, T>::new(dst, write_raw);
-    writer.write_all(buf)?;
-    let (_, bytes) = writer.finish()?;
+    // `ext.spill` failpoint + retry: see the pipelined spiller — each
+    // attempt recreates the run file whole.
+    let (path, bytes) = ctl.with_retries(|| {
+        ctl.fault("ext.spill")?;
+        let (path, dst) = spill.create_run(id)?;
+        let mut writer = RecordWriter::<_, T>::new(dst, &mut *write_raw);
+        writer.write_all(&buf[..])?;
+        let (_, bytes) = writer.finish()?;
+        Ok((path, bytes))
+    })?;
     counters.ext_runs_written.fetch_add(1, Ordering::Relaxed);
     counters.ext_bytes_written.fetch_add(bytes, Ordering::Relaxed);
     report.runs_written += 1;

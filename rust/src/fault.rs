@@ -1,0 +1,505 @@
+//! Deterministic, seeded fault injection for the service and external tier.
+//!
+//! The runtime exposes a small registry of **named failpoints** — places
+//! where production code asks "should this operation fail right now?"
+//! before touching the real resource:
+//!
+//! | failpoint        | site                                             |
+//! |------------------|--------------------------------------------------|
+//! | `ext.read`       | external-sort input / spill-run reads            |
+//! | `ext.spill`      | spill-run creation (run generation + cascade)    |
+//! | `ext.merge_write`| merged-output writes and the final flush         |
+//! | `arena.alloc`    | scratch-arena construction in [`ArenaPool`]      |
+//! | `sched.spawn`    | worker entry in the recursion scheduler          |
+//!
+//! [`ArenaPool`]: crate::arena::ArenaPool
+//!
+//! A [`FaultPlan`] arms a set of failpoints with an action (`err`,
+//! `enospc`, `delay:<N>ms`) and a trigger (`@<n>` = the n-th hit,
+//! `@p<f>` = probability per hit). Plans parse from the compact string
+//! grammar used by the `IPS4O_FAULTS` environment variable:
+//!
+//! ```text
+//! IPS4O_FAULTS="ext.spill=err@3;ext.read=delay:50ms@p0.01;seed=42"
+//! ```
+//!
+//! Probabilistic triggers draw from a pure [`SplitMix64`] stream keyed
+//! on `(plan seed, spec index, job index, hit index)`, so a given plan
+//! replays **exactly** — same plan, same job sequence, same failures —
+//! with no shared-RNG ordering races between threads.
+//!
+//! The armed plan lives in a [`FaultSession`] shared via `Arc` by every
+//! clone of the owning [`Config`](crate::config::Config); hit counters
+//! therefore persist across jobs, which is what makes "fire once, then
+//! run a clean warm job" tests deterministic.
+//!
+//! This module also hosts [`JobControl`], the per-job cancellation /
+//! deadline handle used by the service watchdog, because both the
+//! config layer and the scheduler need it without depending on the
+//! service layer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::metrics::ScratchCounters;
+use crate::util::SplitMix64;
+
+/// Environment variable consulted by [`FaultSession::from_env`].
+pub const FAULTS_ENV: &str = "IPS4O_FAULTS";
+
+/// What an armed failpoint does when its trigger fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Fail with a generic injected `io::Error` (kind `Other`).
+    Err,
+    /// Fail with `ENOSPC` ("no space left on device"), the disk-full
+    /// shape the graceful-degradation path reacts to.
+    Enospc,
+    /// Sleep for the given duration, then continue successfully.
+    /// Models a slow disk / stalled read rather than a hard failure.
+    Delay(Duration),
+}
+
+/// When an armed failpoint fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultTrigger {
+    /// Fire on exactly the n-th hit (1-based) of this failpoint.
+    Nth(u64),
+    /// Fire on each hit independently with probability `p`, drawn from
+    /// the plan's deterministic per-(spec, job, hit) stream.
+    Prob(f64),
+}
+
+/// One armed failpoint: which point, what happens, and when.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub point: String,
+    pub action: FaultAction,
+    pub trigger: FaultTrigger,
+}
+
+/// A parsed set of armed failpoints plus the seed for probabilistic
+/// triggers. Build one with [`FaultPlan::parse`] or construct specs
+/// directly; arm it via `Config::with_faults`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the `IPS4O_FAULTS` grammar:
+    /// `point=action[@trigger]` entries separated by `;`, plus an
+    /// optional `seed=<u64>` entry anywhere in the list.
+    ///
+    /// Actions: `err`, `enospc`, `delay:<N>ms`. Triggers: `@<n>`
+    /// (n-th hit, 1-based; the default is `@1`) or `@p<f>`
+    /// (per-hit probability in `[0, 1]`).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for entry in s.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (point, rhs) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry `{entry}` is missing `=`"))?;
+            let (point, rhs) = (point.trim(), rhs.trim());
+            if point == "seed" {
+                plan.seed = rhs
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad fault seed `{rhs}`"))?;
+                continue;
+            }
+            if point.is_empty() {
+                return Err(format!("fault entry `{entry}` has an empty failpoint name"));
+            }
+            let (action, trigger) = match rhs.split_once('@') {
+                Some((a, t)) => (a.trim(), Some(t.trim())),
+                None => (rhs, None),
+            };
+            let action = if action == "err" {
+                FaultAction::Err
+            } else if action == "enospc" {
+                FaultAction::Enospc
+            } else if let Some(ms) = action
+                .strip_prefix("delay:")
+                .and_then(|d| d.strip_suffix("ms"))
+            {
+                let ms: u64 = ms
+                    .parse()
+                    .map_err(|_| format!("bad delay `{action}` for `{point}`"))?;
+                FaultAction::Delay(Duration::from_millis(ms))
+            } else {
+                return Err(format!(
+                    "unknown fault action `{action}` for `{point}` \
+                     (expected err, enospc, or delay:<N>ms)"
+                ));
+            };
+            let trigger = match trigger {
+                None => FaultTrigger::Nth(1),
+                Some(t) => {
+                    if let Some(p) = t.strip_prefix('p') {
+                        let p: f64 = p
+                            .parse()
+                            .map_err(|_| format!("bad probability `{t}` for `{point}`"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!(
+                                "probability `{t}` for `{point}` is outside [0, 1]"
+                            ));
+                        }
+                        FaultTrigger::Prob(p)
+                    } else {
+                        let n: u64 = t
+                            .parse()
+                            .map_err(|_| format!("bad trigger `{t}` for `{point}`"))?;
+                        if n == 0 {
+                            return Err(format!("trigger `@0` for `{point}`: hits are 1-based"));
+                        }
+                        FaultTrigger::Nth(n)
+                    }
+                }
+            };
+            plan.specs.push(FaultSpec {
+                point: point.to_string(),
+                action,
+                trigger,
+            });
+        }
+        Ok(plan)
+    }
+}
+
+/// A [`FaultPlan`] armed and counting. One session is shared (via
+/// `Arc`) by every `Config` clone derived from the config it was armed
+/// on, so per-spec hit counters span the whole job sequence.
+#[derive(Debug)]
+pub struct FaultSession {
+    plan: FaultPlan,
+    /// Per-spec hit counter (how many times the point was evaluated).
+    hits: Vec<AtomicU64>,
+    /// Job index, bumped by [`begin_job`](Self::begin_job); keys the
+    /// probabilistic stream so replays don't depend on wall time.
+    job: AtomicU64,
+    /// Total faults actually injected (fired, not just evaluated).
+    injected: AtomicU64,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan) -> FaultSession {
+        let hits = plan.specs.iter().map(|_| AtomicU64::new(0)).collect();
+        FaultSession {
+            plan,
+            hits,
+            job: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Build a session from `IPS4O_FAULTS`, if set. A malformed value
+    /// warns on stderr and arms nothing rather than failing startup.
+    pub fn from_env() -> Option<Arc<FaultSession>> {
+        let raw = std::env::var(FAULTS_ENV).ok()?;
+        if raw.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&raw) {
+            Ok(plan) if plan.specs.is_empty() => None,
+            Ok(plan) => Some(Arc::new(FaultSession::new(plan))),
+            Err(e) => {
+                eprintln!("warning: ignoring malformed {FAULTS_ENV}: {e}");
+                None
+            }
+        }
+    }
+
+    /// The plan this session was armed with.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Start a new job's fault stream. Returns the job index.
+    pub fn begin_job(&self) -> u64 {
+        self.job.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Total faults injected so far (fired triggers, not evaluations).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate `point`: count the hit and return the action to take if
+    /// an armed trigger fires. The common (disarmed) case is one vector
+    /// scan over the specs with no locking.
+    pub fn check(&self, point: &str) -> Option<FaultAction> {
+        let job = self.job.load(Ordering::Relaxed);
+        for (i, spec) in self.plan.specs.iter().enumerate() {
+            if spec.point != point {
+                continue;
+            }
+            let hit = self.hits[i].fetch_add(1, Ordering::Relaxed) + 1;
+            let fired = match spec.trigger {
+                FaultTrigger::Nth(n) => hit == n,
+                FaultTrigger::Prob(p) => {
+                    // Pure draw keyed on (seed, spec, job, hit): no
+                    // shared RNG state, so thread interleaving cannot
+                    // change which hits fire.
+                    let key = self
+                        .plan
+                        .seed
+                        .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15))
+                        .wrapping_add(job.wrapping_mul(0xC2B2AE3D27D4EB4F))
+                        .wrapping_add(hit.wrapping_mul(0x165667B19E3779F9));
+                    let draw = SplitMix64::new(key).next_u64();
+                    ((draw >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < p
+                }
+            };
+            if fired {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                return Some(spec.action.clone());
+            }
+        }
+        None
+    }
+
+    /// Evaluate `point` at an I/O site: delays sleep and succeed,
+    /// failures come back as `io::Error` for the caller's `?`.
+    pub fn io_fault(
+        &self,
+        point: &str,
+        counters: Option<&ScratchCounters>,
+    ) -> std::io::Result<()> {
+        match self.check(point) {
+            None => Ok(()),
+            Some(action) => {
+                if let Some(c) = counters {
+                    c.faults_injected.fetch_add(1, Ordering::Relaxed);
+                }
+                match action {
+                    FaultAction::Delay(d) => {
+                        std::thread::sleep(d);
+                        Ok(())
+                    }
+                    FaultAction::Err => Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("injected fault at {point}"),
+                    )),
+                    // ENOSPC by OS code: the stable way to fabricate
+                    // "no space left on device".
+                    FaultAction::Enospc => Err(std::io::Error::from_raw_os_error(28)),
+                }
+            }
+        }
+    }
+
+    /// Evaluate `point` at an infallible (panic-contained) site, e.g.
+    /// arena construction or scheduler worker entry. Failures panic
+    /// with a recognizable payload; delays sleep and continue.
+    pub fn panic_fault(&self, point: &str, counters: Option<&ScratchCounters>) {
+        match self.check(point) {
+            None => {}
+            Some(FaultAction::Delay(d)) => {
+                if let Some(c) = counters {
+                    c.faults_injected.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(d);
+            }
+            Some(_) => {
+                if let Some(c) = counters {
+                    c.faults_injected.fetch_add(1, Ordering::Relaxed);
+                }
+                panic!("injected fault at {point}");
+            }
+        }
+    }
+}
+
+/// Per-job cancellation and deadline handle.
+///
+/// Created by the service for every submitted job; exposed to the user
+/// through `JobTicket::cancel`, armed with a deadline by the watchdog,
+/// and polled cooperatively by the scheduler's work loops and the
+/// external tier's chunk/merge loops.
+#[derive(Debug, Default)]
+pub struct JobControl {
+    cancelled: AtomicBool,
+    deadline_hit: AtomicBool,
+    done: AtomicBool,
+    deadline: Mutex<Option<Instant>>,
+}
+
+impl JobControl {
+    pub fn new() -> JobControl {
+        JobControl::default()
+    }
+
+    /// Request cancellation. Idempotent; the job observes it at its
+    /// next cooperative check.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// True when the cancellation came from the deadline watchdog
+    /// rather than an explicit [`cancel`](Self::cancel).
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline_hit.load(Ordering::Acquire)
+    }
+
+    /// Arm the watchdog deadline for this job.
+    pub fn set_deadline(&self, at: Instant) {
+        *self.deadline.lock().unwrap() = Some(at);
+    }
+
+    /// Mark the job finished so the watchdog stops considering it.
+    pub fn mark_done(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// Watchdog step: if the job is still running past its deadline,
+    /// cancel it. Returns `true` only on the transition (so the caller
+    /// counts each expiry exactly once).
+    pub fn expire_if_overdue(&self, now: Instant) -> bool {
+        if self.is_done() || self.is_cancelled() {
+            return false;
+        }
+        let overdue = match *self.deadline.lock().unwrap() {
+            Some(at) => now >= at,
+            None => false,
+        };
+        if !overdue {
+            return false;
+        }
+        self.deadline_hit.store(true, Ordering::Release);
+        // deadline_hit before cancelled: a racing observer that sees
+        // the cancellation must be able to classify it.
+        if self
+            .cancelled
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan =
+            FaultPlan::parse("ext.spill=err@3; ext.read=delay:50ms@p0.01; seed=42; x=enospc")
+                .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.specs.len(), 3);
+        assert_eq!(
+            plan.specs[0],
+            FaultSpec {
+                point: "ext.spill".into(),
+                action: FaultAction::Err,
+                trigger: FaultTrigger::Nth(3),
+            }
+        );
+        assert_eq!(
+            plan.specs[1],
+            FaultSpec {
+                point: "ext.read".into(),
+                action: FaultAction::Delay(Duration::from_millis(50)),
+                trigger: FaultTrigger::Prob(0.01),
+            }
+        );
+        // No trigger defaults to the first hit.
+        assert_eq!(plan.specs[2].trigger, FaultTrigger::Nth(1));
+        assert_eq!(plan.specs[2].action, FaultAction::Enospc);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "ext.spill",              // missing `=`
+            "ext.spill=explode",      // unknown action
+            "ext.spill=err@zero",     // non-numeric trigger
+            "ext.spill=err@0",        // hits are 1-based
+            "ext.spill=err@p1.5",     // probability out of range
+            "ext.spill=delay:5s",     // delay must be in ms
+            "seed=abc",               // non-numeric seed
+            "=err",                   // empty failpoint name
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let sess = FaultSession::new(FaultPlan::parse("p=err@3").unwrap());
+        let fired: Vec<bool> = (0..6).map(|_| sess.check("p").is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(sess.injected(), 1);
+        // Unknown points never fire and don't advance the counter.
+        assert!(sess.check("other").is_none());
+    }
+
+    #[test]
+    fn prob_trigger_replays_identically() {
+        let draw = |seed: u64| -> Vec<bool> {
+            let sess =
+                FaultSession::new(FaultPlan::parse(&format!("p=err@p0.5;seed={seed}")).unwrap());
+            sess.begin_job();
+            (0..64).map(|_| sess.check("p").is_some()).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same seed must replay the same firings");
+        assert_ne!(a, draw(8), "different seeds should differ");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!((10..=54).contains(&fired), "p=0.5 over 64 hits fired {fired}");
+    }
+
+    #[test]
+    fn io_fault_maps_actions() {
+        let sess = FaultSession::new(
+            FaultPlan::parse("a=err@1;b=enospc@1;c=delay:1ms@1").unwrap(),
+        );
+        let e = sess.io_fault("a", None).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::Other);
+        let e = sess.io_fault("b", None).unwrap_err();
+        assert_eq!(e.raw_os_error(), Some(28));
+        // Delay succeeds after sleeping.
+        assert!(sess.io_fault("c", None).is_ok());
+        // All triggers spent: everything passes now.
+        assert!(sess.io_fault("a", None).is_ok());
+        assert!(sess.io_fault("b", None).is_ok());
+    }
+
+    #[test]
+    fn job_control_deadline_transitions_once() {
+        let ctl = JobControl::new();
+        let now = Instant::now();
+        assert!(!ctl.expire_if_overdue(now), "no deadline armed");
+        ctl.set_deadline(now);
+        assert!(ctl.expire_if_overdue(now), "first expiry transitions");
+        assert!(!ctl.expire_if_overdue(now), "second expiry is a no-op");
+        assert!(ctl.is_cancelled());
+        assert!(ctl.deadline_exceeded());
+        let ctl = JobControl::new();
+        ctl.set_deadline(now + Duration::from_secs(3600));
+        assert!(!ctl.expire_if_overdue(now), "future deadline not overdue");
+        ctl.mark_done();
+        assert!(!ctl.expire_if_overdue(now + Duration::from_secs(7200)));
+        let ctl = JobControl::new();
+        ctl.cancel();
+        assert!(ctl.is_cancelled());
+        assert!(!ctl.deadline_exceeded(), "manual cancel is not a deadline");
+    }
+}

@@ -119,6 +119,7 @@ pub mod cleanup;
 pub mod config;
 pub mod datagen;
 pub mod extsort;
+pub mod fault;
 pub mod local_classification;
 pub mod merge;
 pub mod metrics;
@@ -139,8 +140,9 @@ pub mod util;
 pub mod bench_harness;
 pub mod runtime;
 
-pub use config::{Config, ExtSortConfig, EXT_OVERLAP_ENV};
+pub use config::{Config, ExtSortConfig, RetryPolicy, EXT_OVERLAP_ENV};
 pub use extsort::{ExtRecord, ExtSortError, ExtSortReport};
+pub use fault::{FaultAction, FaultPlan, FaultSession, FaultTrigger, JobControl, FAULTS_ENV};
 pub use planner::{
     Backend, CalibrationOptions, CalibrationProfile, PlannerMode, ProfileError, SortPlan,
 };

@@ -339,6 +339,19 @@ fn run_algo<T: ips4o::RadixKey>(
     t0.elapsed().as_secs_f64()
 }
 
+/// Print `err` and its full `source()` chain, one `caused by:` line per
+/// link, so the root cause (say, the OS's "No space left on device"
+/// under an external-sort I/O failure) reaches the user instead of only
+/// the outermost wrapper.
+fn print_error_chain(context: &str, err: &dyn std::error::Error) {
+    eprintln!("{context}: {err}");
+    let mut src = err.source();
+    while let Some(cause) = src {
+        eprintln!("  caused by: {cause}");
+        src = cause.source();
+    }
+}
+
 /// One-line routing report: which backends handled the job(s) and how
 /// many decisions were measured (calibrated) vs static.
 fn print_planner_report(m: &ips4o::metrics::ScratchSnapshot) {
@@ -467,6 +480,12 @@ fn cmd_sort_file(args: &[String]) -> i32 {
                 "pipeline: prefetch_hits={} prefetch_stalls={} write_stalls={}",
                 r.prefetch_hits, r.prefetch_stalls, r.write_stalls
             );
+            if r.io_retries > 0 || r.io_gave_up > 0 || r.fallback_inmem > 0 {
+                println!(
+                    "resilience: io_retries={} io_gave_up={} fallback_inmem={}",
+                    r.io_retries, r.io_gave_up, r.fallback_inmem
+                );
+            }
             println!(
                 "time: {:.3}s | throughput: {:.2} M elem/s",
                 secs,
@@ -475,7 +494,7 @@ fn cmd_sort_file(args: &[String]) -> i32 {
             0
         }
         Err(e) => {
-            eprintln!("sort-file: {e}");
+            print_error_chain("sort-file", &e);
             1
         }
     }
@@ -606,7 +625,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                             total_elems.fetch_add(r.elements, Ordering::Relaxed);
                         }
                         Err(e) => {
-                            eprintln!("file job failed: {e}");
+                            print_error_chain("file job failed", &e);
                             failures.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -705,6 +724,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     println!(
         "extsort pipeline: prefetch_hits={} prefetch_stalls={} write_stalls={}",
         d.ext_prefetch_hits, d.ext_prefetch_stalls, d.ext_write_stalls
+    );
+    println!(
+        "resilience: faults_injected={} io_retries={} io_gave_up={} fallback_inmem={} \
+         jobs_failed={} jobs_cancelled={} deadline_exceeded={}",
+        d.faults_injected,
+        d.ext_io_retries,
+        d.ext_io_gave_up,
+        d.ext_fallback_inmem,
+        d.jobs_failed,
+        d.jobs_cancelled,
+        d.jobs_deadline_exceeded
     );
     if file_jobs > 0 {
         std::fs::remove_dir_all(&file_dir).ok();

@@ -145,6 +145,32 @@ pub struct ScratchCounters {
     /// window (or sorted chunk) to the writer thread — the disk writes
     /// outran compute.
     pub ext_write_stalls: AtomicU64,
+    /// Faults actually injected by an armed [`FaultSession`]
+    /// ([`crate::fault`]) — fired triggers, not failpoint evaluations.
+    ///
+    /// [`FaultSession`]: crate::fault::FaultSession
+    pub faults_injected: AtomicU64,
+    /// External-tier I/O operations that failed transiently and were
+    /// retried under the configured
+    /// [`RetryPolicy`](crate::config::RetryPolicy) (one count per
+    /// retried attempt, successful or not).
+    pub ext_io_retries: AtomicU64,
+    /// External-tier I/O operations that exhausted their retry budget
+    /// and surfaced the error to the job.
+    pub ext_io_gave_up: AtomicU64,
+    /// File jobs that degraded to the in-memory path after a spill-tier
+    /// I/O failure on an input within `fallback_inmem_bytes`.
+    pub ext_fallback_inmem: AtomicU64,
+    /// Service jobs that resolved unsuccessfully (typed error, panic,
+    /// or cancellation). Disjoint from successes; `jobs_completed`
+    /// counts both.
+    pub jobs_failed: AtomicU64,
+    /// Service jobs cancelled (explicitly via `JobTicket::cancel` or by
+    /// the deadline watchdog). A subset of `jobs_failed`.
+    pub jobs_cancelled: AtomicU64,
+    /// Service jobs cancelled specifically by the deadline watchdog. A
+    /// subset of `jobs_cancelled`.
+    pub jobs_deadline_exceeded: AtomicU64,
     /// Routing decisions driven by measured [`CalibrationProfile`] data
     /// (the plan's `calibrated` flag was set).
     ///
@@ -181,6 +207,13 @@ impl Default for ScratchCounters {
             ext_prefetch_hits: AtomicU64::new(0),
             ext_prefetch_stalls: AtomicU64::new(0),
             ext_write_stalls: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            ext_io_retries: AtomicU64::new(0),
+            ext_io_gave_up: AtomicU64::new(0),
+            ext_fallback_inmem: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            jobs_cancelled: AtomicU64::new(0),
+            jobs_deadline_exceeded: AtomicU64::new(0),
             planner_calibrated: AtomicU64::new(0),
             planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -213,6 +246,13 @@ impl ScratchCounters {
         self.ext_prefetch_hits.store(0, Ordering::Relaxed);
         self.ext_prefetch_stalls.store(0, Ordering::Relaxed);
         self.ext_write_stalls.store(0, Ordering::Relaxed);
+        self.faults_injected.store(0, Ordering::Relaxed);
+        self.ext_io_retries.store(0, Ordering::Relaxed);
+        self.ext_io_gave_up.store(0, Ordering::Relaxed);
+        self.ext_fallback_inmem.store(0, Ordering::Relaxed);
+        self.jobs_failed.store(0, Ordering::Relaxed);
+        self.jobs_cancelled.store(0, Ordering::Relaxed);
+        self.jobs_deadline_exceeded.store(0, Ordering::Relaxed);
         self.planner_calibrated.store(0, Ordering::Relaxed);
         self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
@@ -263,6 +303,13 @@ impl ScratchCounters {
             ext_prefetch_hits: self.ext_prefetch_hits.load(Ordering::Relaxed),
             ext_prefetch_stalls: self.ext_prefetch_stalls.load(Ordering::Relaxed),
             ext_write_stalls: self.ext_write_stalls.load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            ext_io_retries: self.ext_io_retries.load(Ordering::Relaxed),
+            ext_io_gave_up: self.ext_io_gave_up.load(Ordering::Relaxed),
+            ext_fallback_inmem: self.ext_fallback_inmem.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
+            jobs_deadline_exceeded: self.jobs_deadline_exceeded.load(Ordering::Relaxed),
             planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
             planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
@@ -309,6 +356,21 @@ pub struct ScratchSnapshot {
     pub ext_prefetch_stalls: u64,
     /// Times the external tier's compute side blocked on the writer.
     pub ext_write_stalls: u64,
+    /// Faults injected by an armed fault session (fired triggers).
+    pub faults_injected: u64,
+    /// Transient external-tier I/O failures retried under the policy.
+    pub ext_io_retries: u64,
+    /// External-tier I/O operations that exhausted their retry budget.
+    pub ext_io_gave_up: u64,
+    /// File jobs degraded to the in-memory path after spill failure.
+    pub ext_fallback_inmem: u64,
+    /// Jobs resolved unsuccessfully (error, panic, or cancellation).
+    pub jobs_failed: u64,
+    /// Jobs cancelled (explicit or watchdog); subset of `jobs_failed`.
+    pub jobs_cancelled: u64,
+    /// Jobs cancelled by the deadline watchdog; subset of
+    /// `jobs_cancelled`.
+    pub jobs_deadline_exceeded: u64,
     /// Routing decisions driven by measured calibration data.
     pub planner_calibrated: u64,
     /// Routing decisions from the static thresholds (including forced
@@ -345,6 +407,13 @@ impl ScratchSnapshot {
             ext_prefetch_hits: self.ext_prefetch_hits - earlier.ext_prefetch_hits,
             ext_prefetch_stalls: self.ext_prefetch_stalls - earlier.ext_prefetch_stalls,
             ext_write_stalls: self.ext_write_stalls - earlier.ext_write_stalls,
+            faults_injected: self.faults_injected - earlier.faults_injected,
+            ext_io_retries: self.ext_io_retries - earlier.ext_io_retries,
+            ext_io_gave_up: self.ext_io_gave_up - earlier.ext_io_gave_up,
+            ext_fallback_inmem: self.ext_fallback_inmem - earlier.ext_fallback_inmem,
+            jobs_failed: self.jobs_failed - earlier.jobs_failed,
+            jobs_cancelled: self.jobs_cancelled - earlier.jobs_cancelled,
+            jobs_deadline_exceeded: self.jobs_deadline_exceeded - earlier.jobs_deadline_exceeded,
             planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
             planner_static: self.planner_static - earlier.planner_static,
             backend_selected,

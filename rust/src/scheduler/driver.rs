@@ -254,6 +254,29 @@ impl<'a, T: Element, B: SchedBackend<T>> Env<'a, T, B> {
     fn aux_slots(&self) -> usize {
         2 * self.cfg.max_buckets
     }
+
+    /// Cooperative cancellation check: when the job's `JobControl` has
+    /// flipped, abort the queue (releasing barrier waiters and
+    /// stealers, exactly like a peer panic) and unwind. The panic is
+    /// contained by the worker-closure `catch_unwind`s below and
+    /// surfaces to the job's caller through the pool.
+    fn check_cancelled(&self) {
+        if let Some(ctl) = self.cfg.cancel.as_deref() {
+            if ctl.is_cancelled() {
+                self.queue.abort();
+                panic!("job cancelled");
+            }
+        }
+    }
+
+    /// `sched.spawn` failpoint: evaluated at worker-closure entry, i.e.
+    /// inside the `catch_unwind` containment, so an injected failure
+    /// exercises the abort/unwind path without killing the pool.
+    fn spawn_fault(&self) {
+        if let Some(f) = self.cfg.faults.as_deref() {
+            f.panic_fault("sched.spawn", self.counters);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -557,6 +580,7 @@ where
     let root_ref = &root_node;
     pool.run(move |tid| {
         let r = catch_unwind(AssertUnwindSafe(|| {
+            env.spawn_fault();
             let mut cur: Option<Arc<GroupNode<T, B>>> = Some(Arc::clone(root_ref));
             while let Some(node) = cur {
                 cur = run_group_step(env, tid, &node);
@@ -588,6 +612,7 @@ where
     let sh = &node.sh;
     let rel = tid - sh.lo;
     let abort = env.queue.aborted_flag();
+    env.check_cancelled();
 
     if rel == 0 {
         // SAFETY: the task range is owned by this group; members wait at
@@ -760,6 +785,7 @@ where
         if q.is_aborted() {
             panic!("scheduler aborted: a peer thread panicked");
         }
+        env.check_cancelled();
         std::thread::yield_now();
     }
     if idle {
@@ -788,6 +814,7 @@ where
         if env.queue.is_aborted() {
             panic!("scheduler aborted: a peer thread panicked");
         }
+        env.check_cancelled();
         let n = t.len();
         // SAFETY: each task's range is disjoint from every other live
         // task's range and exclusively owned by its processor.
@@ -884,7 +911,10 @@ where
                 {
                     let shr = &sh;
                     pool.run(move |tid| {
-                        let r = catch_unwind(AssertUnwindSafe(|| distribute_spmd(env, shr, tid)));
+                        let r = catch_unwind(AssertUnwindSafe(|| {
+                            env.spawn_fault();
+                            distribute_spmd(env, shr, tid)
+                        }));
                         if let Err(p) = r {
                             env.queue.abort();
                             resume_unwind(p);
@@ -915,6 +945,7 @@ where
         let bins = &bins;
         pool.run(move |tid| {
             let r = catch_unwind(AssertUnwindSafe(|| {
+                env.spawn_fault();
                 // SAFETY: slot `tid` is exclusively this worker's.
                 let my = unsafe { bins.get_mut(tid) };
                 for task in my.drain(..) {

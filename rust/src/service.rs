@@ -46,12 +46,14 @@ use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
 
 use crate::arena::ArenaPool;
 use crate::base_case::insertion_sort;
 use crate::config::Config;
 use crate::extsort::{ExtRecord, ExtSortError, ExtSortReport};
+use crate::fault::{FaultSession, JobControl};
 use crate::merge::{merge_sort_runs, merge_sort_runs_par, MergeScratch};
 use crate::metrics::{ScratchCounters, ScratchSnapshot};
 use crate::parallel::{PerThread, ThreadPool};
@@ -97,9 +99,20 @@ impl<T> DoneSlot<T> {
 /// [`JobTicket::wait`].
 pub struct JobTicket<T> {
     done: Arc<DoneSlot<T>>,
+    ctl: Arc<JobControl>,
 }
 
 impl<T> JobTicket<T> {
+    /// Request cooperative cancellation of this job. Idempotent, and a
+    /// no-op once the job finished. A cancelled job fails: `wait`
+    /// re-raises the cancellation panic, and the service counts it in
+    /// `jobs_failed`/`jobs_cancelled`. Cancellation is observed at the
+    /// scheduler's work-loop checks, so a job already deep in a
+    /// sequential base case finishes that stretch first.
+    pub fn cancel(&self) {
+        self.ctl.cancel();
+    }
+
     /// Block until the job completes and return the sorted data.
     ///
     /// If the job's comparator panicked, the panic is re-raised *here*,
@@ -148,7 +161,31 @@ struct TypedJob<T, F> {
     data: Vec<T>,
     is_less: F,
     done: Arc<DoneSlot<T>>,
+    ctl: Arc<JobControl>,
     finished: bool,
+}
+
+/// Panic payload used when a job is cancelled before it ever starts
+/// running. Matches the scheduler's cooperative-cancel panic message so
+/// callers see one story regardless of where cancellation landed.
+fn cancelled_payload() -> Box<dyn std::any::Any + Send> {
+    Box::new("job cancelled")
+}
+
+/// Shared failure bookkeeping for every job flavour: all failures count
+/// in `jobs_failed`; the cancelled subset also counts in
+/// `jobs_cancelled`, and the deadline-driven subset of *those* in
+/// `jobs_deadline_exceeded` (so the three counters nest).
+fn record_job_failure(core: &ServiceCore, ctl: &JobControl) {
+    core.counters.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    if ctl.is_cancelled() {
+        core.counters.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+        if ctl.deadline_exceeded() {
+            core.counters
+                .jobs_deadline_exceeded
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Last-resort guard: a job dropped before completing (dispatcher died,
@@ -170,12 +207,16 @@ where
     F: Fn(&T, &T) -> bool + Send + Sync + 'static,
 {
     fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
-        if let Ok(data) = &result {
-            core.counters
-                .elements_sorted
-                .fetch_add(data.len() as u64, Ordering::Relaxed);
+        match &result {
+            Ok(data) => {
+                core.counters
+                    .elements_sorted
+                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => record_job_failure(core, &self.ctl),
         }
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.ctl.mark_done();
         self.finished = true;
         self.done.complete(result);
     }
@@ -259,22 +300,28 @@ where
     }
 
     fn run_small(&mut self, core: &ServiceCore) {
+        if let Some(f) = core.cfg.faults.as_deref() {
+            f.begin_job();
+        }
+        if self.ctl.is_cancelled() {
+            self.finish(core, Err(cancelled_payload()));
+            return;
+        }
         let mut data = std::mem::take(&mut self.data);
-        // Checkout is per job, not per bin: bins mix element types, so a
-        // per-bin arena would need its own type-keyed cache. The two
-        // uncontended mutex ops (~tens of ns) are noise next to even a
-        // 1k-element sort; revisit with a per-worker arena cache if jobs
-        // ever shrink to that scale.
-        let mut ctx = core
-            .arenas
-            .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
-        // A panicking user comparator (or a foreign-geometry arena from a
-        // misused checkin) fails only this job: the panic is captured
-        // into the ticket (re-raised at `wait`), the possibly half-sorted
-        // arena is dropped instead of recycled, and the dispatcher/pool
-        // live on. The plan probes call the comparator too, so they sit
-        // inside the containment.
+        // A panicking user comparator, a foreign-geometry arena from a
+        // misused checkin, or an injected `arena.alloc` fault fails only
+        // this job: the panic is captured into the ticket (re-raised at
+        // `wait`), the possibly half-sorted arena is dropped instead of
+        // recycled, and the dispatcher/pool live on. The plan probes
+        // call the comparator too, so they sit inside the containment —
+        // as does the checkout itself (per job, not per bin: bins mix
+        // element types, so a per-bin arena would need its own
+        // type-keyed cache; the two uncontended mutex ops are noise
+        // next to even a 1k-element sort).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut ctx = core
+                .arenas
+                .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
             assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
             let plan = resolve_cmp_plan(core, &data, &self.is_less, false);
             core.counters.record_backend(plan.backend);
@@ -289,9 +336,10 @@ where
                 ),
                 _ => sort_seq(&mut data, &mut ctx, &self.is_less),
             }
+            ctx
         }));
         match outcome {
-            Ok(()) => {
+            Ok(ctx) => {
                 core.arenas.checkin(ctx);
                 self.finish(core, Ok(data));
             }
@@ -300,6 +348,13 @@ where
     }
 
     fn run_large(&mut self, core: &ServiceCore) {
+        if let Some(f) = core.cfg.faults.as_deref() {
+            f.begin_job();
+        }
+        if self.ctl.is_cancelled() {
+            self.finish(core, Err(cancelled_payload()));
+            return;
+        }
         let mut data = std::mem::take(&mut self.data);
         // Plan first (the probes may run the user comparator — contain).
         let plan = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -314,25 +369,31 @@ where
         core.counters.record_backend(plan.backend);
         core.counters.record_plan_source(plan.calibrated);
         if plan.backend == Backend::Ips4oPar {
-            let mut scratch = core
-                .arenas
-                .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
-            // See `run_small` on panic containment. `ThreadPool::run`
-            // already funnels worker panics back to this (dispatcher)
-            // thread.
+            // Run under a config clone carrying this job's cancel flag so
+            // the scheduler's cooperative checks can abort the sort
+            // mid-flight (same geometry — the arena stays compatible).
+            let run_cfg = core.cfg.clone().with_cancel(Arc::clone(&self.ctl));
+            // See `run_small` on panic containment — the checkout sits
+            // inside it so an allocation fault fails only this job.
+            // `ThreadPool::run` already funnels worker panics back to
+            // this (dispatcher) thread.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut scratch = core
+                    .arenas
+                    .checkout(|| ParScratch::<T>::new(&core.cfg, core.pool.threads()));
                 assert!(scratch.compatible_with(&core.cfg), "recycled arena geometry mismatch");
                 sort_parallel_with(
                     &mut data,
-                    &core.cfg,
+                    &run_cfg,
                     &core.pool,
                     &mut scratch,
                     &self.is_less,
                     Some(core.counters.as_ref()),
                 );
+                scratch
             }));
             match outcome {
-                Ok(()) => {
+                Ok(scratch) => {
                     core.arenas.checkin(scratch);
                     self.finish(core, Ok(data));
                 }
@@ -341,8 +402,8 @@ where
         } else if plan.backend == Backend::RunMerge {
             // Large run-merge jobs use the dedicated serialized arena —
             // see [`LargeMergeScratch`].
-            let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut ms = core.arenas.checkout(LargeMergeScratch::<T>::new);
                 merge_sort_runs_par(
                     &mut data,
                     &core.pool,
@@ -350,27 +411,29 @@ where
                     &self.is_less,
                     Some(core.counters.as_ref()),
                 );
+                ms
             }));
             match outcome {
-                Ok(()) => {
+                Ok(ms) => {
                     core.arenas.checkin(ms);
                     self.finish(core, Ok(data));
                 }
                 Err(panic) => self.finish(core, Err(panic)),
             }
         } else {
-            let mut ctx = core
-                .arenas
-                .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut ctx = core
+                    .arenas
+                    .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
                 assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
                 match plan.backend {
                     Backend::BaseCase => insertion_sort(&mut data, &self.is_less),
                     _ => sort_seq(&mut data, &mut ctx, &self.is_less),
                 }
+                ctx
             }));
             match outcome {
-                Ok(()) => {
+                Ok(ctx) => {
                     core.arenas.checkin(ctx);
                     self.finish(core, Ok(data));
                 }
@@ -407,6 +470,7 @@ impl<T: Element> LargeMergeScratch<T> {
 struct KeyedJob<T: RadixKey> {
     data: Vec<T>,
     done: Arc<DoneSlot<T>>,
+    ctl: Arc<JobControl>,
     finished: bool,
 }
 
@@ -424,12 +488,16 @@ impl<T: RadixKey> Drop for KeyedJob<T> {
 
 impl<T: RadixKey> KeyedJob<T> {
     fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
-        if let Ok(data) = &result {
-            core.counters
-                .elements_sorted
-                .fetch_add(data.len() as u64, Ordering::Relaxed);
+        match &result {
+            Ok(data) => {
+                core.counters
+                    .elements_sorted
+                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => record_job_failure(core, &self.ctl),
         }
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.ctl.mark_done();
         self.finished = true;
         self.done.complete(result);
     }
@@ -441,13 +509,21 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
     }
 
     fn run_small(&mut self, core: &ServiceCore) {
+        if let Some(f) = core.cfg.faults.as_deref() {
+            f.begin_job();
+        }
+        if self.ctl.is_cancelled() {
+            self.finish(core, Err(cancelled_payload()));
+            return;
+        }
         let mut data = std::mem::take(&mut self.data);
-        let mut ctx = core
-            .arenas
-            .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
-        // Containment here only guards against a foreign-geometry arena:
+        // Containment here guards against a foreign-geometry arena and
+        // injected `arena.alloc` faults (the checkout sits inside it):
         // keyed jobs run no user closures.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut ctx = core
+                .arenas
+                .checkout(|| SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
             assert!(ctx.compatible_with(&core.cfg), "recycled arena geometry mismatch");
             let plan = resolve_keys_plan(core, &data, false);
             core.counters.record_backend(plan.backend);
@@ -468,9 +544,10 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
                 }
                 _ => sort_seq(&mut data, &mut ctx, &T::radix_less),
             }
+            ctx
         }));
         match outcome {
-            Ok(()) => {
+            Ok(ctx) => {
                 core.arenas.checkin(ctx);
                 self.finish(core, Ok(data));
             }
@@ -479,14 +556,22 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
     }
 
     fn run_large(&mut self, core: &ServiceCore) {
+        if let Some(f) = core.cfg.faults.as_deref() {
+            f.begin_job();
+        }
+        if self.ctl.is_cancelled() {
+            self.finish(core, Err(cancelled_payload()));
+            return;
+        }
         let mut data = std::mem::take(&mut self.data);
+        let run_cfg = core.cfg.clone().with_cancel(Arc::clone(&self.ctl));
         // RadixKey is unsealed: contain a panicking downstream
         // radix_key/radix_less (plan probes included), like TypedJob
         // contains the user comparator. Arenas are recycled only on
         // success — an unwinding backend drops its possibly
         // half-mutated scratch instead of checking it in.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            execute_keys_large(core, &mut data);
+            execute_keys_large(core, &run_cfg, &mut data);
         }));
         match outcome {
             Ok(()) => self.finish(core, Ok(data)),
@@ -499,9 +584,14 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
 /// resolve the full-menu plan and run the chosen backend with recycled
 /// arenas. Shared by [`KeyedJob::run_large`] and the external tier's
 /// per-chunk sorts ([`FileJob`]), so file-backed chunks get the same
-/// routing as in-memory keyed jobs. Panics propagate to the caller's
-/// containment; arenas are checked back in only on success.
-fn execute_keys_large<T: RadixKey>(core: &ServiceCore, data: &mut [T]) {
+/// routing as in-memory keyed jobs. `run_cfg` is the owning job's view
+/// of the config (usually `core.cfg` plus that job's cancel flag) and
+/// is what the parallel backends run under, so the scheduler's
+/// cooperative cancel checks see the right job; arena checkout and
+/// geometry checks stay keyed to `core.cfg` (the clone never changes
+/// geometry). Panics propagate to the caller's containment; arenas are
+/// checked back in only on success.
+fn execute_keys_large<T: RadixKey>(core: &ServiceCore, run_cfg: &Config, data: &mut [T]) {
     let plan = resolve_keys_plan(core, data, true);
     core.counters.record_backend(plan.backend);
     core.counters.record_plan_source(plan.calibrated);
@@ -517,21 +607,21 @@ fn execute_keys_large<T: RadixKey>(core: &ServiceCore, data: &mut [T]) {
             match plan.backend {
                 Backend::Radix => sort_radix_par_with(
                     data,
-                    &core.cfg,
+                    run_cfg,
                     &core.pool,
                     &mut scratch,
                     Some(core.counters.as_ref()),
                 ),
                 Backend::CdfSort => sort_cdf_par_with(
                     data,
-                    &core.cfg,
+                    run_cfg,
                     &core.pool,
                     &mut scratch,
                     Some(core.counters.as_ref()),
                 ),
                 _ => sort_parallel_with(
                     data,
-                    &core.cfg,
+                    run_cfg,
                     &core.pool,
                     &mut scratch,
                     &T::radix_less,
@@ -600,9 +690,20 @@ impl FileDoneSlot {
 /// [`SortService::submit_file`].
 pub struct FileJobTicket {
     done: Arc<FileDoneSlot>,
+    ctl: Arc<JobControl>,
 }
 
 impl FileJobTicket {
+    /// Request cooperative cancellation of this job. Idempotent, and a
+    /// no-op once the job finished. A cancelled file job resolves with
+    /// `Err(ExtSortError::Cancelled)` (observed at the external tier's
+    /// per-chunk and per-block checks) and counts in
+    /// `jobs_failed`/`jobs_cancelled`; its spill files are cleaned up
+    /// as usual.
+    pub fn cancel(&self) {
+        self.ctl.cancel();
+    }
+
     /// Block until the job completes. I/O and truncation failures come
     /// back as [`ExtSortError`] — the job failed, the service did not.
     /// A panic inside the job (a panicking downstream `radix_key`, a
@@ -634,6 +735,7 @@ struct FileJob<T: ExtRecord> {
     input: PathBuf,
     output: PathBuf,
     done: Arc<FileDoneSlot>,
+    ctl: Arc<JobControl>,
     finished: bool,
     _records: PhantomData<fn() -> T>,
 }
@@ -652,12 +754,18 @@ impl<T: ExtRecord> Drop for FileJob<T> {
 
 impl<T: ExtRecord> FileJob<T> {
     fn finish(&mut self, core: &ServiceCore, result: FileJobResult) {
-        if let Ok(Ok(report)) = &result {
-            core.counters
-                .elements_sorted
-                .fetch_add(report.elements, Ordering::Relaxed);
+        match &result {
+            Ok(Ok(report)) => {
+                core.counters
+                    .elements_sorted
+                    .fetch_add(report.elements, Ordering::Relaxed);
+            }
+            // A typed external-tier error and a contained panic are both
+            // failures of *this job* (the service lives on either way).
+            Ok(Err(_)) | Err(_) => record_job_failure(core, &self.ctl),
         }
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.ctl.mark_done();
         self.finished = true;
         self.done.complete(result);
     }
@@ -676,14 +784,20 @@ impl<T: ExtRecord> QueuedJob for FileJob<T> {
     }
 
     fn run_large(&mut self, core: &ServiceCore) {
+        // No begin_job here: the external tier advances the fault
+        // session's job stream itself at the top of each sort.
+        // Thread this job's cancel flag through the config so both the
+        // external tier's checks and the per-chunk scheduler sorts
+        // observe it.
+        let run_cfg = core.cfg.clone().with_cancel(Arc::clone(&self.ctl));
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             crate::extsort::sort_file::<T, _>(
                 &self.input,
                 &self.output,
-                &core.cfg,
+                &run_cfg,
                 Some(&core.pool),
                 &core.arenas,
-                |v| execute_keys_large(core, v),
+                |v| execute_keys_large(core, &run_cfg, v),
             )
         }));
         match outcome {
@@ -707,6 +821,10 @@ struct ServiceCore {
     rr: AtomicUsize,
     /// Jobs enqueued but not yet drained by the dispatcher.
     pending: AtomicUsize,
+    /// Deadline-watchdog registry: one weak handle per in-flight job,
+    /// populated only when `cfg.job_deadline` is set. Weak, so a job
+    /// dropped without finishing never pins its control block.
+    watch: Mutex<Vec<Weak<JobControl>>>,
     shutdown: AtomicBool,
     wake_mx: Mutex<()>,
     wake_cv: Condvar,
@@ -786,6 +904,29 @@ fn dispatcher_loop(core: Arc<ServiceCore>) {
     }
 }
 
+/// Deadline watchdog: scans the registered job controls every
+/// millisecond and trips the cancel flag on any whose deadline has
+/// passed (the job then fails cooperatively at its next check). Runs
+/// only when the service was configured with [`Config::with_job_deadline`].
+/// Finished and dropped jobs are pruned on each pass, so the registry
+/// stays bounded by the number of in-flight jobs.
+fn watchdog_loop(core: Arc<ServiceCore>) {
+    while !core.shutdown.load(Ordering::Acquire) {
+        let now = Instant::now();
+        {
+            let mut watch = core.watch.lock().unwrap();
+            watch.retain(|w| match w.upgrade() {
+                Some(ctl) => {
+                    ctl.expire_if_overdue(now);
+                    !ctl.is_done()
+                }
+                None => false,
+            });
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Public façade
 // ---------------------------------------------------------------------------
@@ -797,23 +938,36 @@ fn dispatcher_loop(core: Arc<ServiceCore>) {
 pub struct SortService {
     core: Arc<ServiceCore>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
+    watchdog: Option<std::thread::JoinHandle<()>>,
 }
 
 impl SortService {
     /// Start a service with `cfg.threads` sort workers,
     /// `cfg.service_shards` submission shards, and the
     /// `cfg.small_sort_bytes` batching threshold.
-    pub fn new(cfg: Config) -> Self {
+    ///
+    /// If no fault plan was installed with [`Config::with_faults`], the
+    /// [`IPS4O_FAULTS`](crate::fault::FAULTS_ENV) environment variable
+    /// is consulted (malformed values are ignored with a warning). With
+    /// [`Config::with_job_deadline`] set, a watchdog thread enforces the
+    /// deadline on every submitted job.
+    pub fn new(mut cfg: Config) -> Self {
+        if cfg.faults.is_none() {
+            cfg.faults = FaultSession::from_env();
+        }
         let threads = cfg.threads.max(1);
         let shards = cfg.service_shards.max(1);
         let counters = Arc::new(ScratchCounters::new());
+        let arenas = ArenaPool::with_counters(Arc::clone(&counters));
+        arenas.arm_faults(cfg.faults.clone());
         let core = Arc::new(ServiceCore {
             pool: ThreadPool::new(threads),
-            arenas: ArenaPool::with_counters(Arc::clone(&counters)),
+            arenas,
             counters,
             shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
             rr: AtomicUsize::new(0),
             pending: AtomicUsize::new(0),
+            watch: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             wake_mx: Mutex::new(()),
             wake_cv: Condvar::new(),
@@ -824,10 +978,35 @@ impl SortService {
             .name("ips4o-svc-dispatch".into())
             .spawn(move || dispatcher_loop(dcore))
             .expect("spawn service dispatcher");
+        let watchdog = if core.cfg.job_deadline.is_some() {
+            let wcore = Arc::clone(&core);
+            Some(
+                std::thread::Builder::new()
+                    .name("ips4o-svc-watchdog".into())
+                    .spawn(move || watchdog_loop(wcore))
+                    .expect("spawn service watchdog"),
+            )
+        } else {
+            None
+        };
         SortService {
             core,
             dispatcher: Some(dispatcher),
+            watchdog,
         }
+    }
+
+    /// Create the per-job control handle and, when the service enforces
+    /// a deadline, arm and register it with the watchdog. Deadlines are
+    /// measured from submission, so queue wait counts against the
+    /// budget.
+    fn new_job_ctl(&self) -> Arc<JobControl> {
+        let ctl = Arc::new(JobControl::new());
+        if let Some(d) = self.core.cfg.job_deadline {
+            ctl.set_deadline(Instant::now() + d);
+            self.core.watch.lock().unwrap().push(Arc::downgrade(&ctl));
+        }
+        ctl
     }
 
     /// Start a service "constructed warm with a profile": run an
@@ -856,27 +1035,31 @@ impl SortService {
         F: Fn(&T, &T) -> bool + Send + Sync + 'static,
     {
         let done = Arc::new(DoneSlot::new());
+        let ctl = self.new_job_ctl();
         let job: ErasedJob = Box::new(TypedJob {
             data,
             is_less,
             done: Arc::clone(&done),
+            ctl: Arc::clone(&ctl),
             finished: false,
         });
         self.enqueue(job);
-        JobTicket { done }
+        JobTicket { done, ctl }
     }
 
     /// Submit a radix-keyed job: the planner picks among the full
     /// backend menu, including in-place radix (IPS²Ra).
     pub fn submit_keys<T: RadixKey>(&self, data: Vec<T>) -> JobTicket<T> {
         let done = Arc::new(DoneSlot::new());
+        let ctl = self.new_job_ctl();
         let job: ErasedJob = Box::new(KeyedJob {
             data,
             done: Arc::clone(&done),
+            ctl: Arc::clone(&ctl),
             finished: false,
         });
         self.enqueue(job);
-        JobTicket { done }
+        JobTicket { done, ctl }
     }
 
     /// Submit a file-backed job: sort the [`ExtRecord`]-encoded records
@@ -893,15 +1076,17 @@ impl SortService {
         output: impl Into<PathBuf>,
     ) -> FileJobTicket {
         let done = Arc::new(FileDoneSlot::new());
+        let ctl = self.new_job_ctl();
         let job: ErasedJob = Box::new(FileJob::<T> {
             input: input.into(),
             output: output.into(),
             done: Arc::clone(&done),
+            ctl: Arc::clone(&ctl),
             finished: false,
             _records: PhantomData,
         });
         self.enqueue(job);
-        FileJobTicket { done }
+        FileJobTicket { done, ctl }
     }
 
     fn enqueue(&self, job: ErasedJob) {
@@ -990,6 +1175,9 @@ impl Drop for SortService {
             self.core.wake_cv.notify_all();
         }
         if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watchdog.take() {
             let _ = h.join();
         }
     }

@@ -13,6 +13,7 @@ use std::sync::atomic::Ordering;
 use crate::arena::ArenaPool;
 use crate::config::Config;
 use crate::extsort::{ExtRecord, ExtSortError, ExtSortReport};
+use crate::fault::FaultSession;
 use crate::metrics::ScratchSnapshot;
 use crate::parallel::ThreadPool;
 use crate::planner::{
@@ -44,17 +45,22 @@ pub struct Sorter {
 
 impl Sorter {
     /// Build a sorter; spawns `cfg.threads − 1` workers when `threads > 1`.
-    pub fn new(cfg: Config) -> Self {
+    ///
+    /// If no fault plan was installed with [`Config::with_faults`], the
+    /// [`IPS4O_FAULTS`](crate::fault::FAULTS_ENV) environment variable
+    /// is consulted (malformed values are ignored with a warning).
+    pub fn new(mut cfg: Config) -> Self {
+        if cfg.faults.is_none() {
+            cfg.faults = FaultSession::from_env();
+        }
         let pool = if cfg.threads > 1 {
             Some(ThreadPool::new(cfg.threads))
         } else {
             None
         };
-        Sorter {
-            cfg,
-            pool,
-            arenas: ArenaPool::new(),
-        }
+        let arenas = ArenaPool::new();
+        arenas.arm_faults(cfg.faults.clone());
+        Sorter { cfg, pool, arenas }
     }
 
     /// The active configuration.

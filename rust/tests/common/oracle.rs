@@ -72,6 +72,30 @@ pub fn seeded(test_name: &str, default_seed: u64, body: impl FnOnce(u64)) {
 }
 
 // ---------------------------------------------------------------------------
+// Deadlock watchdog
+// ---------------------------------------------------------------------------
+
+/// Run `body` on its own thread with a 30-second watchdog: a regression
+/// that wedges a pipeline or scheduler thread shows up as a fast,
+/// well-labelled timeout (`expect_msg`) instead of a hung suite.
+/// Returns whatever `body` returned; a panicking `body` re-raises its
+/// own panic here, so ordinary assertion failures keep their message.
+pub fn with_watchdog<R: Send + 'static>(
+    expect_msg: &str,
+    body: impl FnOnce() -> R + Send + 'static,
+) -> R {
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = done_tx.send(catch_unwind(AssertUnwindSafe(body)));
+    });
+    match done_rx.recv_timeout(std::time::Duration::from_secs(30)) {
+        Ok(Ok(r)) => r,
+        Ok(Err(panic)) => resume_unwind(panic),
+        Err(_) => panic!("watchdog fired (30s): {expect_msg}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The sort oracle
 // ---------------------------------------------------------------------------
 

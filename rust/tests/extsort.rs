@@ -12,8 +12,7 @@ mod common;
 use std::io::{self, Cursor, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::{mpsc, Mutex};
-use std::time::Duration;
+use std::sync::Mutex;
 
 use common::oracle::{seeded, verify_record_stream, SortCheck};
 use ips4o::datagen::{self, Distribution};
@@ -393,16 +392,13 @@ fn injected_read_failure_mid_merge_fails_the_job_not_the_sorter() {
     TRUNC_FUSE.store((7 * chunk + 16) as i64, Ordering::SeqCst);
     let in2 = input.clone();
     let out = dir.path("out-fail.bin");
-    let (done_tx, done_rx) = mpsc::channel();
-    std::thread::spawn(move || {
-        let res = sorter.sort_file::<TruncKey>(&in2, &out);
-        let _ = done_tx.send((res, sorter));
-    });
-    // Watchdog: a regression that wedges a pipeline thread shows up as
-    // a fast timeout here, not a hung suite.
-    let (res, sorter) = done_rx
-        .recv_timeout(Duration::from_secs(30))
-        .expect("injected read failure deadlocked the merge instead of erroring");
+    let (res, sorter) = common::oracle::with_watchdog(
+        "injected read failure deadlocked the merge instead of erroring",
+        move || {
+            let res = sorter.sort_file::<TruncKey>(&in2, &out);
+            (res, sorter)
+        },
+    );
     TRUNC_FUSE.store(i64::MAX, Ordering::SeqCst);
     *TRUNC_TARGET.lock().unwrap() = None;
     match res {
@@ -460,14 +456,13 @@ fn injected_output_write_failure_fails_the_job_not_the_sorter() {
     let warm = sorter.scratch_metrics();
 
     let raw2 = raw.clone();
-    let (done_tx, done_rx) = mpsc::channel();
-    std::thread::spawn(move || {
-        let res = sorter.sort_reader::<u64, _, _>(Cursor::new(raw2), FailingWriter);
-        let _ = done_tx.send((res, sorter));
-    });
-    let (res, sorter) = done_rx
-        .recv_timeout(Duration::from_secs(30))
-        .expect("injected output-write failure deadlocked the merge instead of erroring");
+    let (res, sorter) = common::oracle::with_watchdog(
+        "injected output-write failure deadlocked the merge instead of erroring",
+        move || {
+            let res = sorter.sort_reader::<u64, _, _>(Cursor::new(raw2), FailingWriter);
+            (res, sorter)
+        },
+    );
     match res {
         Err(ExtSortError::Io(_)) => {}
         other => panic!("expected Io error from failed output write, got {other:?}"),

@@ -1,0 +1,508 @@
+//! Fault-injection suite for the resilience layer (`ips4o::fault`):
+//! every named failpoint is swept through its real call site —
+//! `ext.read` / `ext.spill` / `ext.merge_write` in the external tier
+//! (including ENOSPC at each of the three write sites: run spill,
+//! cascade intermediate, final output), `arena.alloc` and `sched.spawn`
+//! through the sort service — asserting the typed error or retry that
+//! surfaces, the counter deltas, and a clean zero-allocation follow-up
+//! job on the same warm scratch. Deadline and manual cancellation are
+//! demonstrated end to end through `SortService`, probabilistic
+//! triggers are shown to replay deterministically from their seed, and
+//! a spill failure on a small input degrades to the in-memory path.
+//!
+//! Timing-sensitive bodies run under the shared 30-second watchdog so a
+//! teardown regression fails fast instead of hanging the suite.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::oracle::{verify_record_stream, with_watchdog};
+use ips4o::datagen::{self, Distribution};
+use ips4o::{
+    Backend, Config, ExtSortConfig, ExtSortError, FaultPlan, FaultSession, PlannerMode,
+    RetryPolicy, SortService, Sorter,
+};
+
+/// A fresh scratch directory for one test; removed on drop.
+struct TestDir(PathBuf);
+
+impl TestDir {
+    fn new(name: &str) -> TestDir {
+        let dir = std::env::temp_dir().join(format!("ips4o-faults-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        TestDir(dir)
+    }
+    fn path(&self, file: &str) -> PathBuf {
+        self.0.join(file)
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+fn ext_cfg(chunk_elems: usize, fan_in: usize, buf_elems: usize, spill: &Path) -> Config {
+    Config::default().with_threads(2).with_extsort(
+        ExtSortConfig::default()
+            .with_chunk_bytes(chunk_elems * 8)
+            .with_fan_in(fan_in)
+            .with_buffer_bytes(buf_elems * 8)
+            .with_spill_dir(spill),
+    )
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).unwrap()
+}
+
+/// Entries left in the spill directory (SpillGuard subdirs or strays).
+fn spill_entries(dir: &Path) -> usize {
+    std::fs::read_dir(dir).map(|d| d.count()).unwrap_or(0)
+}
+
+/// Assert `path` holds exactly `n` sorted u64 records.
+fn assert_sorted_file(path: &Path, n: usize, ctx: &str) {
+    let mut src = std::fs::File::open(path).unwrap();
+    let (elems, _) = verify_record_stream::<u64>(&mut src, |x| *x, |a, b| a < b, ctx);
+    assert_eq!(elems, n as u64, "{ctx}: element count");
+}
+
+/// After a failed job on `sorter`, prove recovery: two clean jobs over
+/// the same input succeed, and the second performs zero scratch
+/// allocations — the failed job's arena was recycled warm, not leaked
+/// or rebuilt.
+fn assert_clean_recovery(sorter: &Sorter, input: &Path, dir: &TestDir, n: usize) {
+    let out1 = dir.path("recover-1.bin");
+    sorter.sort_file::<u64>(input, &out1).unwrap();
+    assert_sorted_file(&out1, n, "first clean job after fault");
+    let warm = sorter.scratch_metrics();
+    let out2 = dir.path("recover-2.bin");
+    sorter.sort_file::<u64>(input, &out2).unwrap();
+    assert_sorted_file(&out2, n, "second clean job after fault");
+    let d = sorter.scratch_metrics().delta(&warm);
+    assert_eq!(
+        d.scratch_allocations, 0,
+        "warm clean job after a contained fault must not allocate"
+    );
+}
+
+/// Best-effort string form of a captured panic payload.
+fn payload_str(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string payload>".into())
+}
+
+// ---------------------------------------------------------------------------
+// ext.read / ext.spill / ext.merge_write: typed errors at every site
+// ---------------------------------------------------------------------------
+
+#[test]
+fn injected_read_failure_fails_job_and_leaves_no_residue() {
+    let dir = TestDir::new("read-err");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA01).unwrap();
+    let cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.read=err@1"));
+
+    let (res, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("injected read failure wedged run generation", move || {
+            let sorter = Sorter::new(cfg);
+            let res = sorter.sort_file::<u64>(&input, &out);
+            (res, sorter)
+        })
+    };
+    match res {
+        Err(ExtSortError::Io(e)) => assert!(
+            e.to_string().contains("injected fault at ext.read"),
+            "unexpected error: {e}"
+        ),
+        other => panic!("expected Io(injected), got {other:?}"),
+    }
+    assert_eq!(
+        spill_entries(&dir.0),
+        2,
+        "only in.bin and the (empty) out.bin may remain after the fault"
+    );
+
+    assert_clean_recovery(&sorter, &input, &dir, n);
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.ext_io_retries, 0, "no retry policy armed");
+}
+
+#[test]
+fn enospc_at_run_spill_surfaces_raw_error() {
+    let dir = TestDir::new("spill-enospc");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Zipf, n, 0xFA02).unwrap();
+    let cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.spill=enospc@1"));
+
+    let (res, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("ENOSPC at run spill wedged the pipeline", move || {
+            let sorter = Sorter::new(cfg);
+            let res = sorter.sort_file::<u64>(&input, &out);
+            (res, sorter)
+        })
+    };
+    match res {
+        Err(ExtSortError::Io(e)) => assert_eq!(e.raw_os_error(), Some(28), "want ENOSPC: {e}"),
+        other => panic!("expected Io(ENOSPC), got {other:?}"),
+    }
+    assert_clean_recovery(&sorter, &input, &dir, n);
+}
+
+#[test]
+fn enospc_at_cascade_intermediate_write() {
+    let dir = TestDir::new("cascade-enospc");
+    // 10 initial runs through fan-in 3 force a cascade; hits 1..=10 of
+    // `ext.spill` are the initial run spills, hit 11 is the first
+    // cascade intermediate's create.
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA03).unwrap();
+    let cfg = ext_cfg(64, 3, 16, &dir.0).with_faults(plan("ext.spill=enospc@11"));
+
+    let (res, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("ENOSPC at cascade intermediate wedged the merge", move || {
+            let sorter = Sorter::new(cfg);
+            let res = sorter.sort_file::<u64>(&input, &out);
+            (res, sorter)
+        })
+    };
+    match res {
+        Err(ExtSortError::Io(e)) => assert_eq!(e.raw_os_error(), Some(28), "want ENOSPC: {e}"),
+        other => panic!("expected Io(ENOSPC), got {other:?}"),
+    }
+    assert_clean_recovery(&sorter, &input, &dir, n);
+}
+
+#[test]
+fn enospc_at_final_output_write() {
+    let dir = TestDir::new("final-enospc");
+    // 4 runs through fan-in 8: a single merge pass straight to the
+    // final output, so the first `ext.merge_write` hit is an
+    // output-file write, not an intermediate.
+    let n = 256;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::TwoDup, n, 0xFA04).unwrap();
+    let cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.merge_write=enospc@1"));
+
+    let (res, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("ENOSPC at final output wedged the merge", move || {
+            let sorter = Sorter::new(cfg);
+            let res = sorter.sort_file::<u64>(&input, &out);
+            (res, sorter)
+        })
+    };
+    match res {
+        Err(ExtSortError::Io(e)) => assert_eq!(e.raw_os_error(), Some(28), "want ENOSPC: {e}"),
+        other => panic!("expected Io(ENOSPC), got {other:?}"),
+    }
+    assert_clean_recovery(&sorter, &input, &dir, n);
+}
+
+// ---------------------------------------------------------------------------
+// Retries: transient faults healed, persistent faults surfaced
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_spill_error_is_retried_to_success() {
+    let dir = TestDir::new("retry-ok");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA05).unwrap();
+    let mut cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.spill=err@1"));
+    cfg.extsort = cfg.extsort.with_retry(RetryPolicy::retries(2));
+
+    let (report, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("retried spill wedged the pipeline", move || {
+            let sorter = Sorter::new(cfg);
+            let report = sorter.sort_file::<u64>(&input, &out).unwrap();
+            (report, sorter)
+        })
+    };
+    assert_eq!(report.io_retries, 1, "one transient failure, one retry");
+    assert_eq!(report.io_gave_up, 0);
+    assert_sorted_file(&dir.path("out.bin"), n, "output after healed retry");
+
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.ext_io_retries, 1);
+    assert_eq!(m.ext_io_gave_up, 0);
+    assert_eq!(m.faults_injected, 1);
+}
+
+#[test]
+fn exhausted_retries_give_up_with_the_final_error() {
+    let dir = TestDir::new("retry-exhausted");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA06).unwrap();
+    // Two identical specs: the session scans specs in order with an
+    // early return per evaluation, so the pair makes the first *two*
+    // evaluations of `ext.spill` fail — attempt plus its only retry.
+    let mut cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.spill=err@1;ext.spill=err@1"));
+    cfg.extsort = cfg.extsort.with_retry(RetryPolicy::retries(1));
+
+    let (res, sorter) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("exhausted retries wedged the pipeline", move || {
+            let sorter = Sorter::new(cfg);
+            let res = sorter.sort_file::<u64>(&input, &out);
+            (res, sorter)
+        })
+    };
+    match res {
+        Err(ExtSortError::Io(e)) => assert!(
+            e.to_string().contains("injected fault at ext.spill"),
+            "unexpected error: {e}"
+        ),
+        other => panic!("expected Io(injected), got {other:?}"),
+    }
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.ext_io_retries, 1, "the single allowed retry ran");
+    assert_eq!(m.ext_io_gave_up, 1, "and then the policy gave up");
+    assert_clean_recovery(&sorter, &input, &dir, n);
+}
+
+// ---------------------------------------------------------------------------
+// arena.alloc / sched.spawn: service-side containment
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arena_alloc_fault_is_contained_to_one_service_job() {
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(2)
+            .with_faults(plan("arena.alloc=err@1")),
+    );
+
+    // The first job's cold checkout is the first fresh arena build:
+    // the failpoint fires there, the job fails, the service survives.
+    let t = svc.submit_keys((0..1_000u64).rev().collect::<Vec<_>>());
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.wait()));
+    let payload = outcome.expect_err("ticket must re-raise the injected panic");
+    let msg = payload_str(payload.as_ref());
+    assert!(
+        msg.contains("injected fault at arena.alloc"),
+        "unexpected panic payload: {msg}"
+    );
+
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_cancelled, 0);
+    assert_eq!(m.faults_injected, 1);
+
+    // Next job rebuilds the arena (hit 2 does not fire) and succeeds.
+    let sorted = svc.submit_keys((0..1_000u64).rev().collect::<Vec<_>>()).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(svc.metrics().jobs_completed, 2);
+}
+
+#[test]
+fn sched_spawn_fault_fails_parallel_job_and_service_survives() {
+    // 400k uniform keys through a forced parallel backend: the same
+    // shape the scheduler stress suite proves spawns subtasks, so the
+    // `sched.spawn` failpoint is guaranteed to be evaluated.
+    let n = 400_000usize;
+    let (svc, first_failed) = with_watchdog("spawn fault wedged the scheduler", move || {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(4)
+                .with_planner(PlannerMode::Force(Backend::Ips4oPar))
+                .with_faults(plan("sched.spawn=err@1")),
+        );
+        let t = svc.submit_keys(datagen::gen_u64(Distribution::Uniform, n, 1));
+        let failed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.wait())).is_err();
+        (svc, failed)
+    });
+    assert!(first_failed, "the spawn fault must fail the parallel job");
+    assert_eq!(svc.metrics().jobs_failed, 1);
+
+    let sorted = svc.submit_keys(datagen::gen_u64(Distribution::Uniform, n, 2)).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "service must keep serving");
+    assert_eq!(svc.metrics().jobs_completed, 2);
+    assert_eq!(svc.metrics().jobs_failed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines and manual cancellation through the service
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_cancels_an_overrunning_file_job() {
+    let dir = TestDir::new("deadline");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA07).unwrap();
+    // Every input read stalls 25ms (10 chunks ≥ 250ms total), so the
+    // 120ms deadline trips mid-run-generation with wide margins on
+    // both sides.
+    let cfg = ext_cfg(64, 8, 16, &dir.0)
+        .with_faults(plan("ext.read=delay:25ms@p1.0"))
+        .with_job_deadline(Duration::from_millis(120));
+
+    let (res, svc) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("deadline cancellation wedged the teardown", move || {
+            let svc = SortService::new(cfg);
+            let res = svc.submit_file::<u64>(&input, &out).wait();
+            (res, svc)
+        })
+    };
+    assert!(
+        matches!(res, Err(ExtSortError::Cancelled)),
+        "expected Cancelled, got {res:?}"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_cancelled, 1);
+    assert_eq!(m.jobs_deadline_exceeded, 1);
+
+    // In-memory jobs touch no `ext.read` failpoint and finish far
+    // inside the deadline: the service keeps serving.
+    let sorted = svc.submit_keys((0..1_000u64).rev().collect::<Vec<_>>()).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(svc.metrics().jobs_completed, 2);
+}
+
+#[test]
+fn manual_cancel_resolves_the_file_ticket() {
+    let dir = TestDir::new("cancel");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA08).unwrap();
+    // The first read stalls 250ms, giving cancel() a wide window; with
+    // no deadline configured, only the explicit cancel can fire.
+    let cfg = ext_cfg(64, 8, 16, &dir.0).with_faults(plan("ext.read=delay:250ms@1"));
+
+    let (res, svc) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("manual cancellation wedged the teardown", move || {
+            let svc = SortService::new(cfg);
+            let t = svc.submit_file::<u64>(&input, &out);
+            t.cancel();
+            (t.wait(), svc)
+        })
+    };
+    assert!(
+        matches!(res, Err(ExtSortError::Cancelled)),
+        "expected Cancelled, got {res:?}"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_cancelled, 1);
+    assert_eq!(m.jobs_deadline_exceeded, 0, "no deadline was configured");
+
+    let sorted = svc.submit_keys((0..500u64).rev().collect::<Vec<_>>()).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+}
+
+// ---------------------------------------------------------------------------
+// Determinism and the disabled path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probabilistic_injection_replays_deterministically() {
+    let dir = TestDir::new("replay");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA09).unwrap();
+    let spec = plan("ext.read=err@p0.4;seed=9");
+
+    // Single-threaded config: every failpoint evaluation happens in a
+    // fixed order, so (outcome, injections) is a pure function of the
+    // plan's seed.
+    let run = |out: &Path| {
+        let session = Arc::new(FaultSession::new(spec.clone()));
+        let sorter = Sorter::new(
+            ext_cfg(64, 8, 16, &dir.0)
+                .with_threads(1)
+                .with_fault_session(Arc::clone(&session)),
+        );
+        let ok = sorter.sort_file::<u64>(&input, out).is_ok();
+        (ok, session.injected())
+    };
+    let first = run(&dir.path("out-a.bin"));
+    let second = run(&dir.path("out-b.bin"));
+    assert_eq!(first, second, "same seed must replay the same injections");
+}
+
+#[test]
+fn disabled_faults_leave_resilience_counters_untouched() {
+    let dir = TestDir::new("disabled");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA0A).unwrap();
+    // An empty plan pins the no-faults behavior even if IPS4O_FAULTS is
+    // set in the environment (as ci.sh's smoke pass does).
+    let sorter = Sorter::new(ext_cfg(64, 8, 16, &dir.0).with_faults(FaultPlan::default()));
+    let report = sorter.sort_file::<u64>(&input, &dir.path("out.bin")).unwrap();
+    assert_eq!(report.elements, n as u64);
+    assert_eq!(report.io_retries, 0);
+    assert_eq!(report.io_gave_up, 0);
+    assert_eq!(report.fallback_inmem, 0);
+    let m = sorter.scratch_metrics();
+    assert_eq!(m.faults_injected, 0);
+    assert_eq!(m.ext_io_retries, 0);
+    assert_eq!(m.ext_io_gave_up, 0);
+    assert_eq!(m.ext_fallback_inmem, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Graceful degradation: spill failure falls back to the in-memory path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn spill_failure_falls_back_to_in_memory_sort() {
+    let dir = TestDir::new("fallback");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Zipf, n, 0xFA0B).unwrap();
+    // A regular file where the spill directory should be: every spill
+    // attempt fails with a real (not injected) I/O error, and the
+    // input is small enough for the in-memory budget.
+    let blocker = dir.path("spill-blocker");
+    std::fs::write(&blocker, b"not a directory").unwrap();
+    let mut cfg = ext_cfg(64, 8, 16, &blocker).with_faults(FaultPlan::default());
+    cfg.extsort = cfg.extsort.with_fallback_inmem_bytes(1 << 20);
+
+    let (report, svc) = {
+        let input = input.clone();
+        let out = dir.path("out.bin");
+        with_watchdog("in-memory fallback wedged", move || {
+            let svc = SortService::new(cfg);
+            let report = svc.submit_file::<u64>(&input, &out).wait().unwrap();
+            (report, svc)
+        })
+    };
+    assert_eq!(report.fallback_inmem, 1, "the job must report its degraded path");
+    assert_eq!(report.elements, n as u64);
+    assert_eq!(report.runs_written, 0, "no spill run can exist");
+    assert_sorted_file(&dir.path("out.bin"), n, "fallback output");
+
+    let m = svc.metrics();
+    assert_eq!(m.ext_fallback_inmem, 1);
+    assert_eq!(m.jobs_failed, 0, "a degraded job is a successful job");
+    assert_eq!(m.jobs_completed, 1);
+}

@@ -211,16 +211,20 @@ fn static_and_dynamic_modes_agree_under_skew() {
 #[test]
 fn degenerate_sizes_do_not_hang_the_scheduler() {
     seeded("degenerate_sizes_do_not_hang_the_scheduler", 0x5CED_0006, |seed| {
-        let mut rng = Xoshiro256::new(seed);
-        for backend in PAR_BACKENDS {
-            let sorter = forced(backend, 4, SchedulerMode::Dynamic);
-            for n in [0usize, 1, 2, 17, 4096, 8192, 16_384] {
-                let input: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 20)).collect();
-                let check = SortCheck::capture(&input, lt, |x| *x);
-                let mut v = input;
-                sorter.sort_keys(&mut v);
-                check.assert_output(&v, lt, &format!("{} n={n}", backend.name()));
+        // The watchdog turns a wedged termination check into a fast,
+        // labelled failure instead of a hung suite.
+        common::oracle::with_watchdog("degenerate-size sort wedged the scheduler", move || {
+            let mut rng = Xoshiro256::new(seed);
+            for backend in PAR_BACKENDS {
+                let sorter = forced(backend, 4, SchedulerMode::Dynamic);
+                for n in [0usize, 1, 2, 17, 4096, 8192, 16_384] {
+                    let input: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 20)).collect();
+                    let check = SortCheck::capture(&input, lt, |x| *x);
+                    let mut v = input;
+                    sorter.sort_keys(&mut v);
+                    check.assert_output(&v, lt, &format!("{} n={n}", backend.name()));
+                }
             }
-        }
+        });
     });
 }

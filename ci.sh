@@ -20,7 +20,8 @@ cargo test -q
 # replay path (tests/common/oracle.rs) on every gate, including --fast.
 echo "== seeded replay (IPS4O_TEST_SEED=271828, --test-threads=1) =="
 for suite in differential extsort fault_injection merge_engine planner_calibration \
-             property_tests scheduler_stress service_stress sort_integration; do
+             property_tests scheduler_stress service_latency service_stress \
+             sort_integration; do
     IPS4O_TEST_SEED=271828 cargo test -q --test "$suite" -- --test-threads=1
 done
 
@@ -51,6 +52,17 @@ IPS4O_TEST_SEED=271828 IPS4O_FAULTS="ext.read=delay:1ms@p0.05;seed=42" \
 echo "== scheduler stress, oversubscribed (IPS4O_STRESS_THREADS=16, seed pinned) =="
 IPS4O_TEST_SEED=271828 IPS4O_STRESS_THREADS=16 \
     cargo test -q --test scheduler_stress -- --test-threads=1
+
+# The service suites a second time sharded across four dispatchers with
+# an oversubscribed pool: Config::default() honours
+# IPS4O_SERVICE_DISPATCHERS, so every service test that doesn't pin its
+# dispatcher count reruns with sharded queues, per-shard budgets, and
+# work stealing under thread contention. Runs in --fast too.
+echo "== service sharding (IPS4O_SERVICE_DISPATCHERS=4, IPS4O_STRESS_THREADS=16, seed pinned) =="
+for suite in service_stress service_latency fault_injection; do
+    IPS4O_TEST_SEED=271828 IPS4O_STRESS_THREADS=16 IPS4O_SERVICE_DISPATCHERS=4 \
+        cargo test -q --test "$suite" -- --test-threads=1
+done
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== cargo build --release --examples =="

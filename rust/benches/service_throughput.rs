@@ -9,10 +9,12 @@
 //! partition step — but a bin of ~hundreds of such jobs amortizes one
 //! pool dispatch over all of them, with zero steady-state allocation.
 
-use ips4o::bench_harness::{bench, print_machine_info, JsonReport, Table};
+use std::time::{Duration, Instant};
+
+use ips4o::bench_harness::{bench, percentile, print_machine_info, JsonReport, Measurement, Table};
 use ips4o::datagen::{gen_u64, Distribution};
 use ips4o::util::is_sorted_by;
-use ips4o::{Config, SortService, Sorter};
+use ips4o::{Config, JobClass, SortService, Sorter};
 
 fn main() {
     print_machine_info();
@@ -116,6 +118,235 @@ fn main() {
             "FAIL: service slower than per-job loop ({:.1} ms vs {:.1} ms)",
             m_svc.mean.as_secs_f64() * 1e3,
             m_loop.mean.as_secs_f64() * 1e3
+        );
+    }
+
+    saturation(threads, full);
+}
+
+/// The multi-dispatcher saturation scenario: a deep closed-loop backlog
+/// of tiny jobs (submit everything, then wait for everything), a skewed
+/// client mix where medium-large jobs dominate, and a QoS probe pitting
+/// a small-job client against a concurrent huge-job client. Gates:
+///
+/// * uniform mix: 4 dispatchers within 3% of 1 (sharding must not tax
+///   the homogeneous case);
+/// * skewed mix: 4 dispatchers strictly faster (job-level parallelism
+///   across shards beats serializing larges on one dispatcher);
+/// * QoS: small-job p99 alongside huge jobs ≤ 5× its isolated p99.
+fn saturation(threads: usize, full: bool) {
+    let n_jobs: usize = if full { 1_000_000 } else { 100_000 };
+    let small_n = 64usize;
+    println!("\n# saturation — {n_jobs} queued small jobs x {small_n} u64, t={threads}");
+
+    let single_cfg = Config::default()
+        .with_threads(threads)
+        .with_service_dispatchers(1)
+        .with_service_shards(8);
+    let multi_cfg = single_cfg.clone().with_service_dispatchers(4);
+
+    let make_smalls = |count: usize| -> Vec<Vec<u64>> {
+        (0..count)
+            .map(|i| gen_u64(Distribution::Uniform, small_n, i as u64))
+            .collect()
+    };
+
+    // Uniform mix, closed loop. The input is staged before the clock so
+    // only submission + service time is measured.
+    let run_uniform = |cfg: &Config| -> Duration {
+        let svc = SortService::new(cfg.clone());
+        svc.warm::<u64>();
+        let jobs = make_smalls(n_jobs);
+        let t0 = Instant::now();
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        for t in tickets {
+            let v = t.wait();
+            debug_assert!(is_sorted_by(&v, |a, b| a < b));
+        }
+        t0.elapsed()
+    };
+    let uni_single = run_uniform(&single_cfg);
+    let uni_multi = run_uniform(&multi_cfg);
+
+    // Skewed mix: medium-large jobs dominate the work. One dispatcher
+    // serializes them; four run them shard-parallel.
+    let n_large: usize = if full { 64 } else { 32 };
+    let large_n = 400_000usize; // 3.2 MB — well over the batch threshold
+    let skew_smalls = n_jobs / 10;
+    let run_skewed = |cfg: &Config| -> Duration {
+        let svc = SortService::new(cfg.clone());
+        svc.warm::<u64>();
+        let smalls = make_smalls(skew_smalls);
+        let larges: Vec<Vec<u64>> =
+            (0..n_large).map(|i| gen_u64(Distribution::Uniform, large_n, 0xBEEF + i as u64)).collect();
+        let every = (skew_smalls / n_large).max(1);
+        let t0 = Instant::now();
+        let mut tickets = Vec::with_capacity(skew_smalls + n_large);
+        let mut larges = larges.into_iter();
+        for (i, j) in smalls.into_iter().enumerate() {
+            if i % every == 0 {
+                if let Some(l) = larges.next() {
+                    tickets.push(svc.submit(l));
+                }
+            }
+            tickets.push(svc.submit(j));
+        }
+        for l in larges {
+            tickets.push(svc.submit(l));
+        }
+        for t in tickets {
+            let v = t.wait();
+            debug_assert!(is_sorted_by(&v, |a, b| a < b));
+        }
+        t0.elapsed()
+    };
+    let skew_single = run_skewed(&single_cfg);
+    let skew_multi = run_skewed(&multi_cfg);
+
+    // QoS probe: the small-job client's per-ticket p50/p99, isolated and
+    // then with a second client flooding huge jobs into the same service.
+    let qos_jobs = (n_jobs / 10).max(1_000);
+    let svc = SortService::new(multi_cfg.clone());
+    svc.warm::<u64>();
+    let small_latencies = |svc: &SortService| -> Vec<Duration> {
+        let jobs = make_smalls(qos_jobs);
+        let tickets: Vec<_> = jobs.into_iter().map(|j| svc.submit(j)).collect();
+        let mut lats: Vec<Duration> = tickets
+            .into_iter()
+            .map(|t| t.wait_with_latency().1.total)
+            .collect();
+        lats.sort_unstable();
+        lats
+    };
+    let iso = small_latencies(&svc);
+    let (iso_p50, iso_p99) = (percentile(&iso, 0.50), percentile(&iso, 0.99));
+    let mixed = std::thread::scope(|scope| {
+        let svc_ref = &svc;
+        let huge = scope.spawn(move || {
+            let tickets: Vec<_> = (0..8)
+                .map(|i| {
+                    svc_ref.submit(gen_u64(Distribution::Uniform, 2_000_000, 0xFACE + i as u64))
+                })
+                .collect();
+            for t in tickets {
+                let v = t.wait();
+                debug_assert!(is_sorted_by(&v, |a, b| a < b));
+            }
+        });
+        let lats = small_latencies(&svc);
+        huge.join().unwrap();
+        lats
+    });
+    let (mix_p50, mix_p99) = (percentile(&mixed, 0.50), percentile(&mixed, 0.99));
+    let steals = svc.metrics().dispatcher_steals;
+    let snap = svc.latency_snapshot();
+    let small_hist = snap.class(JobClass::Small);
+    let large_hist = snap.class(JobClass::Large);
+
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let mut t = Table::new(&["scenario", "1 disp ms", "4 disp ms", "speedup"]);
+    t.row(vec![
+        "uniform backlog".into(),
+        format!("{:.1}", ms(uni_single)),
+        format!("{:.1}", ms(uni_multi)),
+        format!("{:.2}x", uni_single.as_secs_f64() / uni_multi.as_secs_f64()),
+    ]);
+    t.row(vec![
+        "skewed mix".into(),
+        format!("{:.1}", ms(skew_single)),
+        format!("{:.1}", ms(skew_multi)),
+        format!("{:.2}x", skew_single.as_secs_f64() / skew_multi.as_secs_f64()),
+    ]);
+    t.print();
+    println!(
+        "qos small-job latency: isolated p50={:.2}ms p99={:.2}ms | with huge jobs p50={:.2}ms \
+         p99={:.2}ms | dispatcher_steals={steals}",
+        ms(iso_p50),
+        ms(iso_p99),
+        ms(mix_p50),
+        ms(mix_p99)
+    );
+    println!(
+        "service histogram [small]: count={} p50={}ns p99={}ns p999={}ns",
+        small_hist.count,
+        small_hist.p50().as_nanos(),
+        small_hist.p99().as_nanos(),
+        small_hist.p999().as_nanos()
+    );
+
+    let mut report = JsonReport::new("service_saturation", threads);
+    let mk = |d: Duration, n: usize| Measurement {
+        mean: d,
+        min: d,
+        reps: 1,
+        n,
+    };
+    let total_small = n_jobs * small_n;
+    report.add_with_bytes_and_counters(
+        "service-1-dispatcher",
+        "uniform-backlog/u64",
+        &mk(uni_single, total_small),
+        (total_small * 8) as u64,
+        &[],
+    );
+    report.add_with_bytes_and_counters(
+        "service-4-dispatchers",
+        "uniform-backlog/u64",
+        &mk(uni_multi, total_small),
+        (total_small * 8) as u64,
+        &[("dispatcher_steals", steals)],
+    );
+    let total_skew = skew_smalls * small_n + n_large * large_n;
+    report.add("service-1-dispatcher", "skewed-mix/u64", &mk(skew_single, total_skew));
+    report.add("service-4-dispatchers", "skewed-mix/u64", &mk(skew_multi, total_skew));
+    report.add_with_bytes_and_counters(
+        "service-4-dispatchers",
+        "qos-small-vs-huge/u64",
+        &mk(mix_p99, qos_jobs * small_n),
+        (qos_jobs * small_n * 8) as u64,
+        &[
+            ("iso_small_p50_ns", iso_p50.as_nanos() as u64),
+            ("iso_small_p99_ns", iso_p99.as_nanos() as u64),
+            ("mix_small_p50_ns", mix_p50.as_nanos() as u64),
+            ("mix_small_p99_ns", mix_p99.as_nanos() as u64),
+            ("hist_small_p50_ns", small_hist.p50().as_nanos() as u64),
+            ("hist_small_p99_ns", small_hist.p99().as_nanos() as u64),
+            ("hist_small_p999_ns", small_hist.p999().as_nanos() as u64),
+            ("hist_small_count", small_hist.count),
+            ("hist_large_p99_ns", large_hist.p99().as_nanos() as u64),
+            ("hist_large_count", large_hist.count),
+        ],
+    );
+    report.emit_and_report();
+
+    // Gates. Timer noise gets a small absolute cushion; the ratios are
+    // what the ISSUE pins.
+    let cushion = Duration::from_millis(50);
+    if uni_multi <= uni_single + uni_single / 33 + cushion {
+        println!("PASS: 4 dispatchers within 3% of 1 on the uniform backlog");
+    } else {
+        println!(
+            "FAIL: sharding taxed the uniform backlog ({:.1} ms vs {:.1} ms)",
+            ms(uni_multi),
+            ms(uni_single)
+        );
+    }
+    if skew_multi < skew_single + cushion {
+        println!("PASS: 4 dispatchers beat 1 on the skewed mix");
+    } else {
+        println!(
+            "FAIL: sharding lost the skewed mix ({:.1} ms vs {:.1} ms)",
+            ms(skew_multi),
+            ms(skew_single)
+        );
+    }
+    if mix_p99 <= iso_p99 * 5 + cushion {
+        println!("PASS: small-job p99 with huge jobs <= 5x isolated");
+    } else {
+        println!(
+            "FAIL: huge jobs starved small jobs (p99 {:.2} ms vs isolated {:.2} ms)",
+            ms(mix_p99),
+            ms(iso_p99)
         );
     }
 }

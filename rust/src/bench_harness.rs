@@ -81,6 +81,18 @@ impl Measurement {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample list: the
+/// smallest element whose rank is ≥ `⌈q·len⌉`. Used by the service
+/// saturation bench for per-ticket p50/p99 gates (exact, unlike the
+/// service's bucketed histograms). Zero for an empty slice.
+pub fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
 /// Human-readable bytes/sec (`"1.73 GiB/s"`) for table columns.
 pub fn bytes_per_sec_str(bytes_per_s: f64) -> String {
     const KIB: f64 = 1024.0;
@@ -411,6 +423,19 @@ mod tests {
         assert_eq!(reps_for(1 << 25), 2);
         assert_eq!(reps_for(1 << 21), 5);
         assert!(reps_for(1000) >= 5);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 0.99), Duration::ZERO);
+        let one = [Duration::from_millis(7)];
+        assert_eq!(percentile(&one, 0.0), one[0]);
+        assert_eq!(percentile(&one, 1.0), one[0]);
+        let ms: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 0.50), Duration::from_millis(50));
+        assert_eq!(percentile(&ms, 0.99), Duration::from_millis(99));
+        assert_eq!(percentile(&ms, 1.0), Duration::from_millis(100));
+        assert_eq!(percentile(&ms, 0.001), Duration::from_millis(1));
     }
 
     #[test]

@@ -48,6 +48,29 @@ pub struct Config {
     ///
     /// [`SortService`]: crate::service::SortService
     pub service_shards: usize,
+    /// Number of dispatcher shards in the [`SortService`]. Each
+    /// dispatcher owns a contiguous slice of the submission shards plus
+    /// a proportional worker-thread group (allotted with the scheduler's
+    /// group-split rule), drains and executes its own slice — large jobs
+    /// included — and steals backlog from hot siblings when idle. `1`
+    /// (the default) is the classic single-dispatcher service. The
+    /// [`SERVICE_DISPATCHERS_ENV`] environment variable, when set,
+    /// overrides the *default*; [`Config::with_service_dispatchers`]
+    /// always wins.
+    ///
+    /// [`SortService`]: crate::service::SortService
+    pub service_dispatchers: usize,
+    /// Admission policy when a dispatcher's queue budget
+    /// (`queue_budget_bytes` / `queue_budget_jobs`) is exhausted. See
+    /// [`SubmitPolicy`].
+    pub submit_policy: SubmitPolicy,
+    /// Per-dispatcher budget on the payload bytes of admitted-but-not-
+    /// completed jobs. `0` (the default) is unbounded. File jobs charge
+    /// no bytes (their payload lives on disk), only a job slot.
+    pub queue_budget_bytes: usize,
+    /// Per-dispatcher budget on admitted-but-not-completed jobs.
+    /// `0` (the default) is unbounded.
+    pub queue_budget_jobs: usize,
     /// Jobs whose payload is below this many **bytes** are batched by the
     /// service: many small sorts are packed into a single parallel pass
     /// (one thread-pool dispatch for the whole batch) instead of each
@@ -208,6 +231,65 @@ impl RetryPolicy {
 /// the pipelined path; unset defers to the config field.
 pub const EXT_OVERLAP_ENV: &str = "IPS4O_EXT_OVERLAP";
 
+/// Environment variable supplying the *default* for
+/// [`Config::service_dispatchers`] (a positive integer). An explicit
+/// [`Config::with_service_dispatchers`] call always wins; malformed or
+/// zero values are ignored. This is how `ci.sh` re-runs the whole
+/// service test tier under a multi-dispatcher topology without touching
+/// each test's config.
+pub const SERVICE_DISPATCHERS_ENV: &str = "IPS4O_SERVICE_DISPATCHERS";
+
+/// What `SortService::submit*` does when the target dispatcher's queue
+/// budget ([`Config::queue_budget_bytes`] / [`Config::queue_budget_jobs`])
+/// is exhausted. With no budget configured, every policy admits
+/// immediately.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum SubmitPolicy {
+    /// Park the submitter on a condvar until completed jobs release
+    /// enough budget (the default). Submission never fails, at the cost
+    /// of blocking the client.
+    #[default]
+    Block,
+    /// Fail fast: `try_submit*` returns
+    /// [`ServiceError::Saturated`](crate::service::ServiceError) and the
+    /// job is never admitted (the infallible `submit*` wrappers panic).
+    Reject,
+    /// Make room: evict the lowest-priority *queued* job (largest
+    /// payload, not yet started) from the target dispatcher, failing its
+    /// ticket with a "shed" panic payload, until the new job fits.
+    /// Counted in `jobs_shed`; if nothing is evictable the job is
+    /// admitted over budget rather than lost.
+    Shed,
+}
+
+impl SubmitPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SubmitPolicy::Block => "block",
+            SubmitPolicy::Reject => "reject",
+            SubmitPolicy::Shed => "shed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SubmitPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" | "park" => Some(SubmitPolicy::Block),
+            "reject" | "fail" => Some(SubmitPolicy::Reject),
+            "shed" | "drop" => Some(SubmitPolicy::Shed),
+            _ => None,
+        }
+    }
+}
+
+/// The [`SERVICE_DISPATCHERS_ENV`] default: a positive integer when the
+/// variable is set and parseable, else `None`.
+fn service_dispatchers_from_env() -> Option<usize> {
+    std::env::var(SERVICE_DISPATCHERS_ENV)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&d| d >= 1)
+}
+
 impl Default for ExtSortConfig {
     fn default() -> Self {
         ExtSortConfig {
@@ -296,6 +378,10 @@ impl Default for Config {
             single_level_threshold: 0, // derived: k * base_case_size
             eager_base_case: true,
             service_shards: 4,
+            service_dispatchers: service_dispatchers_from_env().unwrap_or(1),
+            submit_policy: SubmitPolicy::Block,
+            queue_budget_bytes: 0,
+            queue_budget_jobs: 0,
             small_sort_bytes: 256 << 10, // 256 KiB ≈ where cooperative partitioning starts to win
             planner: PlannerMode::Auto,
             scheduler: SchedulerMode::Dynamic,
@@ -342,6 +428,33 @@ impl Config {
     /// Builder-style submission-shard count for the sort service (min 1).
     pub fn with_service_shards(mut self, shards: usize) -> Self {
         self.service_shards = shards.max(1);
+        self
+    }
+
+    /// Builder-style dispatcher-shard count for the sort service
+    /// (min 1). Overrides the [`SERVICE_DISPATCHERS_ENV`] default.
+    pub fn with_service_dispatchers(mut self, dispatchers: usize) -> Self {
+        self.service_dispatchers = dispatchers.max(1);
+        self
+    }
+
+    /// Builder-style submission admission policy (see [`SubmitPolicy`]).
+    pub fn with_submit_policy(mut self, policy: SubmitPolicy) -> Self {
+        self.submit_policy = policy;
+        self
+    }
+
+    /// Builder-style per-dispatcher byte budget for admitted jobs
+    /// (`0` = unbounded).
+    pub fn with_queue_budget_bytes(mut self, bytes: usize) -> Self {
+        self.queue_budget_bytes = bytes;
+        self
+    }
+
+    /// Builder-style per-dispatcher job-count budget for admitted jobs
+    /// (`0` = unbounded).
+    pub fn with_queue_budget_jobs(mut self, jobs: usize) -> Self {
+        self.queue_budget_jobs = jobs;
         self
     }
 
@@ -558,6 +671,43 @@ mod tests {
         let c = c.with_service_shards(0).with_small_sort_bytes(0);
         assert_eq!(c.service_shards, 1, "shards clamp to at least one");
         assert_eq!(c.small_sort_bytes, 0, "zero disables batching");
+    }
+
+    #[test]
+    fn dispatcher_and_backpressure_knobs() {
+        let c = Config::default();
+        // The env var only supplies the *default*; tests under the CI
+        // multi-dispatcher pass see it, plain runs see 1.
+        if std::env::var(SERVICE_DISPATCHERS_ENV).is_err() {
+            assert_eq!(c.service_dispatchers, 1, "single dispatcher by default");
+        } else {
+            assert!(c.service_dispatchers >= 1);
+        }
+        assert_eq!(c.submit_policy, SubmitPolicy::Block);
+        assert_eq!(c.queue_budget_bytes, 0, "unbounded by default");
+        assert_eq!(c.queue_budget_jobs, 0, "unbounded by default");
+        let c = c
+            .with_service_dispatchers(0)
+            .with_submit_policy(SubmitPolicy::Shed)
+            .with_queue_budget_bytes(1 << 20)
+            .with_queue_budget_jobs(64);
+        assert_eq!(c.service_dispatchers, 1, "dispatchers clamp to at least one");
+        assert_eq!(c.submit_policy, SubmitPolicy::Shed);
+        assert_eq!(c.queue_budget_bytes, 1 << 20);
+        assert_eq!(c.queue_budget_jobs, 64);
+        let c = c.with_service_dispatchers(4);
+        assert_eq!(c.service_dispatchers, 4, "builder beats the env default");
+    }
+
+    #[test]
+    fn submit_policy_names_roundtrip() {
+        for p in [SubmitPolicy::Block, SubmitPolicy::Reject, SubmitPolicy::Shed] {
+            assert_eq!(SubmitPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(SubmitPolicy::from_name("DROP"), Some(SubmitPolicy::Shed));
+        assert_eq!(SubmitPolicy::from_name("park"), Some(SubmitPolicy::Block));
+        assert_eq!(SubmitPolicy::from_name("nope"), None);
+        assert_eq!(SubmitPolicy::default(), SubmitPolicy::Block);
     }
 
     #[test]

@@ -140,15 +140,18 @@ pub mod util;
 pub mod bench_harness;
 pub mod runtime;
 
-pub use config::{Config, ExtSortConfig, RetryPolicy, EXT_OVERLAP_ENV};
+pub use config::{
+    Config, ExtSortConfig, RetryPolicy, SubmitPolicy, EXT_OVERLAP_ENV, SERVICE_DISPATCHERS_ENV,
+};
 pub use extsort::{ExtRecord, ExtSortError, ExtSortReport};
 pub use fault::{FaultAction, FaultPlan, FaultSession, FaultTrigger, JobControl, FAULTS_ENV};
+pub use metrics::{JobClass, LatencySnapshot, ServiceLatencySnapshot};
 pub use planner::{
     Backend, CalibrationOptions, CalibrationProfile, PlannerMode, ProfileError, SortPlan,
 };
 pub use radix::RadixKey;
 pub use scheduler::SchedulerMode;
-pub use service::{FileJobTicket, JobTicket, SortService};
+pub use service::{FileJobTicket, JobTicket, ServiceError, SortService, TicketLatency};
 pub use sorter::Sorter;
 
 /// Sort `v` in place, sequentially (IS⁴o), using the element's natural order.

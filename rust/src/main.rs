@@ -8,7 +8,7 @@ use std::time::Instant;
 use ips4o::baselines::Algo;
 use ips4o::datagen::{self, Distribution};
 use ips4o::planner::{run_calibration_with, CalibrationOptions, CalibrationProfile};
-use ips4o::{Backend, Config, ExtSortConfig, PlannerMode, SchedulerMode, Sorter};
+use ips4o::{Backend, Config, ExtSortConfig, PlannerMode, SchedulerMode, Sorter, SubmitPolicy};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -102,6 +102,14 @@ FLAGS (serve):
                                                           [default: 50]
     --threads <int>      service sort workers             [default: all cores]
     --shards <int>       submission-queue shards          [default: 4]
+    --dispatchers <int>  dispatcher shards, each with its own thread
+                         group ($IPS4O_SERVICE_DISPATCHERS) [default: 1]
+    --submit-policy <p>  block | reject | shed at the queue budget
+                                                          [default: block]
+    --queue-budget <n>   per-dispatcher payload-byte budget, 0 = unbounded
+                         (suffix k/m/g ok)                [default: 0]
+    --queue-budget-jobs <int>  per-dispatcher job budget, 0 = unbounded
+                                                          [default: 0]
     --small-bytes <int>  batching threshold in bytes      [default: 262144]
     --planner <mode>     auto | off | <backend>           [default: auto]
     --scheduler <mode>   dynamic | static-lpt             [default: dynamic]
@@ -162,6 +170,26 @@ fn build_config(args: &[String]) -> Result<Config, String> {
     }
     if let Some(s) = parse_flag(args, "--shards").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_service_shards(s);
+    }
+    if let Some(d) = parse_flag(args, "--dispatchers").and_then(|s| s.parse().ok()) {
+        cfg = cfg.with_service_dispatchers(d);
+    }
+    if let Some(p) = parse_flag(args, "--submit-policy") {
+        match SubmitPolicy::from_name(p) {
+            Some(policy) => cfg = cfg.with_submit_policy(policy),
+            None => return Err(format!("--submit-policy {p:?}: expected block|reject|shed")),
+        }
+    }
+    if let Some(s) = parse_flag(args, "--queue-budget") {
+        let b = parse_size(s)
+            .ok_or_else(|| format!("--queue-budget {s:?}: expected a byte count (k/m/g ok)"))?;
+        cfg = cfg.with_queue_budget_bytes(b);
+    }
+    if let Some(s) = parse_flag(args, "--queue-budget-jobs") {
+        let j: usize = s
+            .parse()
+            .map_err(|_| format!("--queue-budget-jobs {s:?}: expected an integer"))?;
+        cfg = cfg.with_queue_budget_jobs(j);
     }
     if let Some(b) = parse_flag(args, "--small-bytes").and_then(|s| s.parse().ok()) {
         cfg = cfg.with_small_sort_bytes(b);
@@ -576,8 +604,15 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     println!(
         "# serve: clients={clients} jobs/client={jobs} n={n} large_every={large_every} \
-         file_jobs={file_jobs} threads={} shards={} small_bytes={}",
-        cfg.threads, cfg.service_shards, cfg.small_sort_bytes
+         file_jobs={file_jobs} threads={} shards={} dispatchers={} policy={} \
+         budget={}B/{}j small_bytes={}",
+        cfg.threads,
+        cfg.service_shards,
+        cfg.service_dispatchers,
+        cfg.submit_policy.name(),
+        cfg.queue_budget_bytes,
+        cfg.queue_budget_jobs,
+        cfg.small_sort_bytes
     );
 
     // Inputs for the out-of-core mix are staged before the clock starts;
@@ -600,6 +635,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     svc.warm::<Pair>();
     svc.warm::<Bytes100>();
     let warm = svc.metrics();
+    let warm_lat = svc.latency_snapshot();
 
     let failures = AtomicU64::new(0);
     let total_elems = AtomicU64::new(0);
@@ -736,10 +772,42 @@ fn cmd_serve(args: &[String]) -> i32 {
         d.jobs_cancelled,
         d.jobs_deadline_exceeded
     );
+    println!(
+        "service: dispatcher_steals={} jobs_shed={} tickets_leaked={}",
+        d.dispatcher_steals, d.jobs_shed, d.tickets_leaked
+    );
+    let lat = svc.latency_snapshot().delta(&warm_lat);
+    let us = |d: std::time::Duration| d.as_secs_f64() * 1e6;
+    for class in [
+        ips4o::JobClass::Small,
+        ips4o::JobClass::Large,
+        ips4o::JobClass::File,
+    ] {
+        let h = lat.class(class);
+        if h.count == 0 {
+            continue;
+        }
+        println!(
+            "latency[{}]: count={} p50={:.1}us p99={:.1}us p999={:.1}us max={:.1}us mean={:.1}us",
+            class.name(),
+            h.count,
+            us(h.p50()),
+            us(h.p99()),
+            us(h.p999()),
+            h.max_ns as f64 / 1e3,
+            us(h.mean()),
+        );
+    }
     if file_jobs > 0 {
         std::fs::remove_dir_all(&file_dir).ok();
     }
     let fails = failures.load(Ordering::Relaxed);
+    if d.tickets_leaked > 0 {
+        // A silently dropped ticket means a client somewhere hung or got
+        // a synthetic failure it never asked for — always fatal.
+        println!("serve: {} tickets SILENTLY DROPPED", d.tickets_leaked);
+        return 1;
+    }
     if fails == 0 {
         println!("serve: all results verified sorted");
         0

@@ -171,6 +171,23 @@ pub struct ScratchCounters {
     /// Service jobs cancelled specifically by the deadline watchdog. A
     /// subset of `jobs_cancelled`.
     pub jobs_deadline_exceeded: AtomicU64,
+    /// Queued service jobs evicted by the `Shed` admission policy to
+    /// make room under an exhausted queue budget. A subset of
+    /// `jobs_failed`.
+    pub jobs_shed: AtomicU64,
+    /// Queued service jobs taken from a sibling dispatcher shard's
+    /// backlog by an idle dispatcher (one count per stolen job).
+    pub dispatcher_steals: AtomicU64,
+    /// Service jobs whose ticket was resolved by the last-resort drop
+    /// guard — the job was destroyed without ever running or being
+    /// shed. Nonzero means the service silently dropped work; the
+    /// `serve` CLI treats it as a hard failure.
+    pub tickets_leaked: AtomicU64,
+    /// Per-class enqueue→done latency histograms for service jobs.
+    /// Deliberately *not* part of [`ScratchSnapshot`] (which stays a
+    /// plain `Copy` scalar set); read via
+    /// [`ScratchCounters::latency_snapshot`].
+    pub latency: ServiceLatency,
     /// Routing decisions driven by measured [`CalibrationProfile`] data
     /// (the plan's `calibrated` flag was set).
     ///
@@ -214,6 +231,10 @@ impl Default for ScratchCounters {
             jobs_failed: AtomicU64::new(0),
             jobs_cancelled: AtomicU64::new(0),
             jobs_deadline_exceeded: AtomicU64::new(0),
+            jobs_shed: AtomicU64::new(0),
+            dispatcher_steals: AtomicU64::new(0),
+            tickets_leaked: AtomicU64::new(0),
+            latency: ServiceLatency::default(),
             planner_calibrated: AtomicU64::new(0),
             planner_static: AtomicU64::new(0),
             backend_selected: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -253,11 +274,20 @@ impl ScratchCounters {
         self.jobs_failed.store(0, Ordering::Relaxed);
         self.jobs_cancelled.store(0, Ordering::Relaxed);
         self.jobs_deadline_exceeded.store(0, Ordering::Relaxed);
+        self.jobs_shed.store(0, Ordering::Relaxed);
+        self.dispatcher_steals.store(0, Ordering::Relaxed);
+        self.tickets_leaked.store(0, Ordering::Relaxed);
+        self.latency.reset();
         self.planner_calibrated.store(0, Ordering::Relaxed);
         self.planner_static.store(0, Ordering::Relaxed);
         for c in &self.backend_selected {
             c.store(0, Ordering::Relaxed);
         }
+    }
+
+    /// Plain-value snapshot of the per-class latency histograms.
+    pub fn latency_snapshot(&self) -> ServiceLatencySnapshot {
+        self.latency.snapshot()
     }
 
     /// Record one planner routing decision.
@@ -310,6 +340,9 @@ impl ScratchCounters {
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             jobs_cancelled: self.jobs_cancelled.load(Ordering::Relaxed),
             jobs_deadline_exceeded: self.jobs_deadline_exceeded.load(Ordering::Relaxed),
+            jobs_shed: self.jobs_shed.load(Ordering::Relaxed),
+            dispatcher_steals: self.dispatcher_steals.load(Ordering::Relaxed),
+            tickets_leaked: self.tickets_leaked.load(Ordering::Relaxed),
             planner_calibrated: self.planner_calibrated.load(Ordering::Relaxed),
             planner_static: self.planner_static.load(Ordering::Relaxed),
             backend_selected,
@@ -371,6 +404,14 @@ pub struct ScratchSnapshot {
     /// Jobs cancelled by the deadline watchdog; subset of
     /// `jobs_cancelled`.
     pub jobs_deadline_exceeded: u64,
+    /// Queued jobs evicted by the `Shed` admission policy; subset of
+    /// `jobs_failed`.
+    pub jobs_shed: u64,
+    /// Queued jobs stolen from a sibling dispatcher shard's backlog.
+    pub dispatcher_steals: u64,
+    /// Tickets resolved by the last-resort drop guard (silently dropped
+    /// work — must be zero in a healthy service).
+    pub tickets_leaked: u64,
     /// Routing decisions driven by measured calibration data.
     pub planner_calibrated: u64,
     /// Routing decisions from the static thresholds (including forced
@@ -414,6 +455,9 @@ impl ScratchSnapshot {
             jobs_failed: self.jobs_failed - earlier.jobs_failed,
             jobs_cancelled: self.jobs_cancelled - earlier.jobs_cancelled,
             jobs_deadline_exceeded: self.jobs_deadline_exceeded - earlier.jobs_deadline_exceeded,
+            jobs_shed: self.jobs_shed - earlier.jobs_shed,
+            dispatcher_steals: self.dispatcher_steals - earlier.dispatcher_steals,
+            tickets_leaked: self.tickets_leaked - earlier.tickets_leaked,
             planner_calibrated: self.planner_calibrated - earlier.planner_calibrated,
             planner_static: self.planner_static - earlier.planner_static,
             backend_selected,
@@ -447,6 +491,248 @@ impl ScratchSnapshot {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Service latency accounting
+// ---------------------------------------------------------------------------
+
+/// Number of buckets in a [`LatencyHistogram`]: 16 exact one-nanosecond
+/// buckets for sub-16 ns values, then 4 sub-buckets per power-of-two
+/// octave (≤ 25% relative error) up to the full `u64` nanosecond range.
+pub const LATENCY_BUCKETS: usize = 256;
+
+/// Bucket index for a latency of `ns` nanoseconds (log-scale, 4
+/// sub-buckets per octave).
+fn latency_bucket(ns: u64) -> usize {
+    if ns < 16 {
+        return ns as usize;
+    }
+    let top = 63 - ns.leading_zeros() as u64; // ≥ 4
+    let sub = (ns >> (top - 2)) & 0b11;
+    (16 + (top - 4) * 4 + sub) as usize
+}
+
+/// Lower edge (in nanoseconds) of latency bucket `idx` — what
+/// [`LatencySnapshot::quantile`] reports for values landing in it.
+fn latency_bucket_low(idx: usize) -> u64 {
+    if idx < 16 {
+        return idx as u64;
+    }
+    let octave = 4 + (idx - 16) as u64 / 4;
+    let sub = (idx - 16) as u64 % 4;
+    (4 + sub) << (octave - 2)
+}
+
+/// A fixed-size log-scale latency histogram: lock-free to record into
+/// (one atomic add per sample), cheap to snapshot, and accurate to
+/// ≤ 25% per bucket — enough for p50/p99/p999 service reporting without
+/// storing per-ticket samples.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Fold one sample into the histogram.
+    pub fn record(&self, latency: std::time::Duration) {
+        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[latency_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let mut buckets = [0u64; LATENCY_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        LatencySnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain-value snapshot of one [`LatencyHistogram`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    buckets: [u64; LATENCY_BUCKETS],
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of all sample latencies, in nanoseconds.
+    pub sum_ns: u64,
+    /// Largest sample, in nanoseconds.
+    pub max_ns: u64,
+}
+
+impl Default for LatencySnapshot {
+    fn default() -> Self {
+        LatencySnapshot {
+            buckets: [0; LATENCY_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencySnapshot {
+    /// The latency at quantile `q` (0.0 ..= 1.0): the lower edge of the
+    /// bucket holding the `⌈q·count⌉`-th sample, capped by `max_ns`.
+    /// Zero when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> std::time::Duration {
+        if self.count == 0 {
+            return std::time::Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return std::time::Duration::from_nanos(latency_bucket_low(idx).min(self.max_ns));
+            }
+        }
+        std::time::Duration::from_nanos(self.max_ns)
+    }
+
+    pub fn p50(&self) -> std::time::Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> std::time::Duration {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> std::time::Duration {
+        self.quantile(0.999)
+    }
+
+    /// Mean sample latency (zero when empty).
+    pub fn mean(&self) -> std::time::Duration {
+        if self.count == 0 {
+            std::time::Duration::ZERO
+        } else {
+            std::time::Duration::from_nanos(self.sum_ns / self.count)
+        }
+    }
+
+    /// Difference of two snapshots of the same histogram.
+    pub fn delta(&self, earlier: &LatencySnapshot) -> LatencySnapshot {
+        let mut buckets = [0u64; LATENCY_BUCKETS];
+        for i in 0..LATENCY_BUCKETS {
+            buckets[i] = self.buckets[i] - earlier.buckets[i];
+        }
+        LatencySnapshot {
+            buckets,
+            count: self.count - earlier.count,
+            sum_ns: self.sum_ns - earlier.sum_ns,
+            // Not subtractive; keep the later high-water mark.
+            max_ns: self.max_ns,
+        }
+    }
+}
+
+/// The class a service job is accounted under: batch-path small jobs,
+/// cooperative-path large jobs, and file-backed external-tier jobs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum JobClass {
+    Small,
+    Large,
+    File,
+}
+
+impl JobClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobClass::Small => "small",
+            JobClass::Large => "large",
+            JobClass::File => "file",
+        }
+    }
+}
+
+/// Per-class enqueue→done latency histograms for the sort service.
+#[derive(Default)]
+pub struct ServiceLatency {
+    pub small: LatencyHistogram,
+    pub large: LatencyHistogram,
+    pub file: LatencyHistogram,
+}
+
+impl ServiceLatency {
+    pub fn class(&self, c: JobClass) -> &LatencyHistogram {
+        match c {
+            JobClass::Small => &self.small,
+            JobClass::Large => &self.large,
+            JobClass::File => &self.file,
+        }
+    }
+
+    pub fn reset(&self) {
+        self.small.reset();
+        self.large.reset();
+        self.file.reset();
+    }
+
+    pub fn snapshot(&self) -> ServiceLatencySnapshot {
+        ServiceLatencySnapshot {
+            small: self.small.snapshot(),
+            large: self.large.snapshot(),
+            file: self.file.snapshot(),
+        }
+    }
+}
+
+/// A plain-value snapshot of [`ServiceLatency`].
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServiceLatencySnapshot {
+    pub small: LatencySnapshot,
+    pub large: LatencySnapshot,
+    pub file: LatencySnapshot,
+}
+
+impl ServiceLatencySnapshot {
+    pub fn class(&self, c: JobClass) -> &LatencySnapshot {
+        match c {
+            JobClass::Small => &self.small,
+            JobClass::Large => &self.large,
+            JobClass::File => &self.file,
+        }
+    }
+
+    pub fn delta(&self, earlier: &ServiceLatencySnapshot) -> ServiceLatencySnapshot {
+        ServiceLatencySnapshot {
+            small: self.small.delta(&earlier.small),
+            large: self.large.delta(&earlier.large),
+            file: self.file.delta(&earlier.file),
+        }
+    }
+}
+
 /// Wrap `is_less` so every invocation counts as a *total* comparison.
 /// Use for branchless consumers (classification trees).
 pub fn counting<'a, T, F>(is_less: &'a F) -> impl Fn(&T, &T) -> bool + 'a
@@ -476,6 +762,85 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn latency_buckets_are_monotone_and_roundtrip() {
+        // Exact low-range buckets, then the bucket lower edge must
+        // reproduce its own index and never exceed the sample.
+        for idx in 0..LATENCY_BUCKETS {
+            let low = latency_bucket_low(idx);
+            assert_eq!(latency_bucket(low), idx, "idx {idx} low {low}");
+        }
+        let mut last = 0usize;
+        for ns in [
+            0u64,
+            1,
+            15,
+            16,
+            17,
+            100,
+            1_000,
+            65_535,
+            65_536,
+            1_000_000,
+            1_000_000_000,
+            u64::MAX / 2,
+            u64::MAX,
+        ] {
+            let b = latency_bucket(ns);
+            assert!(b < LATENCY_BUCKETS);
+            assert!(latency_bucket_low(b) <= ns, "low edge above sample at {ns}");
+            assert!(b >= last, "bucket order regressed at {ns}");
+            last = b;
+        }
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_histogram_records_and_quantiles() {
+        use std::time::Duration;
+        let h = LatencyHistogram::default();
+        assert_eq!(h.snapshot().quantile(0.99), Duration::ZERO);
+        // 99 fast samples and one slow outlier: p50 stays near the fast
+        // cluster, p99+ sees the outlier's bucket.
+        for _ in 0..99 {
+            h.record(Duration::from_micros(10));
+        }
+        h.record(Duration::from_millis(50));
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_ns, 50_000_000);
+        assert!(s.p50() <= Duration::from_micros(10));
+        assert!(s.p50() >= Duration::from_micros(8), "p50 {:?}", s.p50());
+        assert!(s.p999() >= Duration::from_millis(37), "p999 {:?}", s.p999());
+        assert!(s.mean() >= Duration::from_micros(500));
+        // The quantile never exceeds the recorded maximum.
+        assert!(s.quantile(1.0) <= Duration::from_nanos(s.max_ns));
+        h.reset();
+        assert_eq!(h.snapshot(), LatencySnapshot::default());
+    }
+
+    #[test]
+    fn service_latency_routes_by_class_and_deltas() {
+        use std::time::Duration;
+        let lat = ServiceLatency::default();
+        lat.class(JobClass::Small).record(Duration::from_micros(5));
+        lat.class(JobClass::Large).record(Duration::from_millis(2));
+        lat.class(JobClass::Large).record(Duration::from_millis(3));
+        lat.class(JobClass::File).record(Duration::from_millis(80));
+        let s = lat.snapshot();
+        assert_eq!(s.small.count, 1);
+        assert_eq!(s.large.count, 2);
+        assert_eq!(s.file.count, 1);
+        assert_eq!(s.class(JobClass::Large).count, 2);
+        lat.small.record(Duration::from_micros(7));
+        let d = lat.snapshot().delta(&s);
+        assert_eq!(d.small.count, 1);
+        assert_eq!(d.large.count, 0);
+        assert_eq!(JobClass::File.name(), "file");
+        lat.reset();
+        assert_eq!(lat.snapshot(), ServiceLatencySnapshot::default());
+    }
 
     #[test]
     fn counting_wrappers_count() {

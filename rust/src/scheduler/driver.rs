@@ -724,22 +724,10 @@ where
         env.bump(|c| &c.group_splits);
     }
     // Proportional thread allotment: everyone gets one thread, the rest
-    // go to whichever task has the most elements per allotted thread.
-    let mut alloc = vec![1usize; m];
-    let mut rest = g - m;
-    while rest > 0 {
-        let mut bi = 0usize;
-        let mut best = 0.0f64;
-        for (i, task) in big.iter().enumerate() {
-            let ratio = task.len() as f64 / alloc[i] as f64;
-            if ratio > best {
-                best = ratio;
-                bi = i;
-            }
-        }
-        alloc[bi] += 1;
-        rest -= 1;
-    }
+    // go to whichever task has the most elements per allotted thread
+    // (shared with the service's dispatcher sharding).
+    let weights: Vec<usize> = big.iter().map(|t| t.len()).collect();
+    let alloc = crate::scheduler::proportional_shares(&weights, g);
     let mut lo = sh.lo;
     for (i, task) in big.into_iter().enumerate() {
         let hi = lo + alloc[i];

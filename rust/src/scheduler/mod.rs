@@ -67,6 +67,35 @@ pub(crate) mod queue;
 
 pub(crate) use driver::{sort_scheduled, SchedBackend, StepPlan, WholeAction};
 
+/// Proportional thread allotment over weighted tasks — the group-split
+/// rule from the driver's partition step (paper Appendix A), shared with
+/// the sort service's dispatcher sharding: every task gets one thread,
+/// and each remaining thread goes to whichever task currently has the
+/// most weight per allotted thread. `total < weights.len()` (an
+/// oversubscribed split) degrades to one thread each.
+pub(crate) fn proportional_shares(weights: &[usize], total: usize) -> Vec<usize> {
+    let m = weights.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    let mut alloc = vec![1usize; m];
+    let mut rest = total.saturating_sub(m);
+    while rest > 0 {
+        let mut bi = 0usize;
+        let mut best = 0.0f64;
+        for (i, &w) in weights.iter().enumerate() {
+            let ratio = w as f64 / alloc[i] as f64;
+            if ratio > best {
+                best = ratio;
+                bi = i;
+            }
+        }
+        alloc[bi] += 1;
+        rest -= 1;
+    }
+    alloc
+}
+
 /// How the parallel drivers schedule recursion — the A/B knob
 /// (`Config::scheduler`, CLI `--scheduler`).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -101,6 +130,21 @@ impl SchedulerMode {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn proportional_shares_allot_by_weight() {
+        assert_eq!(proportional_shares(&[], 8), Vec::<usize>::new());
+        // Everyone gets at least one, the rest follow the weights.
+        assert_eq!(proportional_shares(&[100], 4), vec![4]);
+        assert_eq!(proportional_shares(&[300, 100], 4), vec![3, 1]);
+        assert_eq!(proportional_shares(&[1, 1, 1, 1], 8), vec![2, 2, 2, 2]);
+        // Oversubscribed: one thread each, never zero.
+        assert_eq!(proportional_shares(&[5, 5, 5], 2), vec![1, 1, 1]);
+        // Conservation whenever total covers the task count.
+        let s = proportional_shares(&[7, 2, 9, 1], 16);
+        assert_eq!(s.iter().sum::<usize>(), 16);
+        assert!(s.iter().all(|&t| t >= 1));
+    }
 
     #[test]
     fn mode_names_roundtrip() {

@@ -17,11 +17,30 @@
 //! * **Sharded submission.** Clients enqueue jobs round-robin over
 //!   `cfg.service_shards` locked queues, so concurrent submitters do not
 //!   serialize on a single lock.
-//! * **Small-job batching.** A dispatcher thread drains all shards at
+//! * **Small-job batching.** A dispatcher thread drains its shards at
 //!   once; jobs under `cfg.small_sort_bytes` are packed into per-worker
 //!   bins (LPT by payload size) and sorted **sequentially, in parallel**
 //!   — one pool dispatch for the whole batch. Jobs at or above the
 //!   threshold get the full cooperative IPS⁴o treatment, one at a time.
+//! * **Dispatcher sharding.** With `cfg.service_dispatchers > 1` the
+//!   service runs several dispatcher shards, each owning a contiguous
+//!   slice of the submission queues plus a proportional worker-thread
+//!   group (the scheduler's group-split rule,
+//!   [`proportional_shares`](crate::scheduler)), so large jobs no longer
+//!   serialize the whole service — each executes inside its shard's
+//!   group while sibling shards keep draining. An idle dispatcher
+//!   steals the oldest half of a hot sibling's backlog
+//!   (`dispatcher_steals` in the metrics).
+//! * **Backpressure.** `cfg.queue_budget_bytes` / `cfg.queue_budget_jobs`
+//!   bound each dispatcher shard's admitted-but-unfinished work; at the
+//!   bound, [`SubmitPolicy`] decides whether submitters park (`Block`),
+//!   get a typed [`ServiceError::Saturated`] back (`Reject`, via the
+//!   `try_submit*` methods), or the newest, largest queued job is shed
+//!   (`Shed`, counted in `jobs_shed`).
+//! * **Latency accounting.** Every ticket carries enqueue→start→done
+//!   timestamps ([`JobTicket::latency`]); completions fold into
+//!   per-class log-scale histograms
+//!   ([`ScratchCounters::latency_snapshot`]) with p50/p99/p999.
 //!
 //! Jobs are type-erased at the queue boundary, so one service instance
 //! concurrently serves `u64`, `f64`, [`Pair`](crate::util::Pair),
@@ -45,17 +64,19 @@
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::arena::ArenaPool;
 use crate::base_case::insertion_sort;
-use crate::config::Config;
+use crate::config::{Config, SubmitPolicy};
 use crate::extsort::{ExtRecord, ExtSortError, ExtSortReport};
 use crate::fault::{FaultSession, JobControl};
 use crate::merge::{merge_sort_runs, merge_sort_runs_par, MergeScratch};
-use crate::metrics::{ScratchCounters, ScratchSnapshot};
+use crate::metrics::{
+    JobClass, ScratchCounters, ScratchSnapshot, ServiceLatency, ServiceLatencySnapshot,
+};
 use crate::parallel::{PerThread, ThreadPool};
 use crate::planner::{
     plan_by, plan_keys, sort_cdf_par_with, sort_cdf_seq, Backend, CalibrationOptions, PlannerMode,
@@ -95,11 +116,161 @@ impl<T> DoneSlot<T> {
     }
 }
 
+/// A typed submission failure, returned by the `try_submit*` methods.
+#[derive(Debug)]
+pub enum ServiceError {
+    /// The target dispatcher shard's queue budget
+    /// (`Config::queue_budget_bytes` / `Config::queue_budget_jobs`) is
+    /// exhausted and the service runs [`SubmitPolicy::Reject`]. The
+    /// fields report the shard's admitted-but-unfinished level at the
+    /// time of rejection.
+    Saturated {
+        /// Index of the dispatcher shard that rejected the job.
+        dispatcher: usize,
+        /// Payload bytes admitted to that shard but not yet finished.
+        queued_bytes: usize,
+        /// Jobs admitted to that shard but not yet finished.
+        queued_jobs: usize,
+    },
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Saturated {
+                dispatcher,
+                queued_bytes,
+                queued_jobs,
+            } => write!(
+                f,
+                "sort service saturated: dispatcher shard {dispatcher} holds \
+                 {queued_jobs} jobs / {queued_bytes} bytes at its queue budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Per-ticket latency timestamps, shared between a job and its ticket.
+/// `queue_ns`/`total_ns` are written once (0 = not yet recorded; real
+/// values are clamped to ≥ 1 ns) and published to the client by the
+/// completion slot's mutex.
+struct TicketTimes {
+    class: JobClass,
+    enqueued: Instant,
+    queue_ns: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+impl TicketTimes {
+    fn new(class: JobClass) -> Self {
+        TicketTimes {
+            class,
+            enqueued: Instant::now(),
+            queue_ns: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record the enqueue→start wait. Called at the top of a job's run
+    /// method; first caller wins (a shed/cancelled job never starts, so
+    /// its queue wait stays 0).
+    fn mark_started(&self) {
+        if self.queue_ns.load(Ordering::Relaxed) == 0 {
+            let ns = self.enqueued.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            self.queue_ns.store(ns.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Record the enqueue→done latency and fold it into the service's
+    /// per-class histogram. Idempotent.
+    fn mark_done(&self, latency: &ServiceLatency) {
+        if self.total_ns.load(Ordering::Relaxed) != 0 {
+            return;
+        }
+        let elapsed = self.enqueued.elapsed();
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.total_ns.store(ns.max(1), Ordering::Relaxed);
+        latency.class(self.class).record(elapsed);
+    }
+}
+
+/// Enqueue→start→done timing of one completed job, read from its ticket
+/// with [`JobTicket::latency`] / [`JobTicket::wait_with_latency`].
+#[derive(Copy, Clone, Debug)]
+pub struct TicketLatency {
+    /// Time from admission to the job starting to execute. Zero for a
+    /// job that was resolved without ever starting (shed, cancelled in
+    /// queue, or dropped).
+    pub queue: Duration,
+    /// Time from admission to the ticket resolving.
+    pub total: Duration,
+}
+
+/// One dispatcher shard's submission budget: payload bytes and job
+/// count admitted but not yet finished. A zero bound means unlimited on
+/// that axis. An empty shard always admits (so a single job larger than
+/// the byte budget still makes progress), and at shutdown blocked
+/// submitters are admitted over budget rather than parked forever.
+struct QueueBudget {
+    max_bytes: usize,
+    max_jobs: usize,
+    /// (admitted bytes, admitted jobs) — see [`BudgetToken`].
+    level: Mutex<(usize, usize)>,
+    cv: Condvar,
+}
+
+impl QueueBudget {
+    fn new(max_bytes: usize, max_jobs: usize) -> Self {
+        QueueBudget {
+            max_bytes,
+            max_jobs,
+            level: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn unbounded(&self) -> bool {
+        self.max_bytes == 0 && self.max_jobs == 0
+    }
+
+    fn fits(&self, level: (usize, usize), bytes: usize) -> bool {
+        let (b, j) = level;
+        if j == 0 {
+            return true; // an empty shard always admits — progress
+        }
+        (self.max_bytes == 0 || b + bytes <= self.max_bytes)
+            && (self.max_jobs == 0 || j < self.max_jobs)
+    }
+}
+
+/// RAII share of a [`QueueBudget`]: carried by the job from admission
+/// to completion, released (with a wakeup for parked submitters) when
+/// the job finishes, is shed, or is dropped — so a deadline-cancelled
+/// job frees its budget the moment it resolves.
+struct BudgetToken {
+    budget: Arc<QueueBudget>,
+    bytes: usize,
+}
+
+impl Drop for BudgetToken {
+    fn drop(&mut self) {
+        {
+            let mut level = self.budget.level.lock().unwrap();
+            level.0 = level.0.saturating_sub(self.bytes);
+            level.1 = level.1.saturating_sub(1);
+        }
+        self.budget.cv.notify_all();
+    }
+}
+
 /// Handle to a submitted sort job. Obtain the sorted payload with
 /// [`JobTicket::wait`].
 pub struct JobTicket<T> {
     done: Arc<DoneSlot<T>>,
     ctl: Arc<JobControl>,
+    times: Arc<TicketTimes>,
 }
 
 impl<T> JobTicket<T> {
@@ -135,6 +306,31 @@ impl<T> JobTicket<T> {
     pub fn is_ready(&self) -> bool {
         self.done.slot.lock().unwrap().is_some()
     }
+
+    /// This job's latency, once it resolved (`None` while in flight).
+    /// `queue` is the admission→start wait, `total` admission→done.
+    pub fn latency(&self) -> Option<TicketLatency> {
+        let total = self.times.total_ns.load(Ordering::Acquire);
+        if total == 0 {
+            return None;
+        }
+        Some(TicketLatency {
+            queue: Duration::from_nanos(self.times.queue_ns.load(Ordering::Acquire)),
+            total: Duration::from_nanos(total),
+        })
+    }
+
+    /// [`JobTicket::wait`], plus the resolved ticket's latency — for
+    /// clients (and the saturation bench) that track per-job QoS.
+    pub fn wait_with_latency(self) -> (Vec<T>, TicketLatency) {
+        let times = Arc::clone(&self.times);
+        let data = self.wait();
+        let lat = TicketLatency {
+            queue: Duration::from_nanos(times.queue_ns.load(Ordering::Acquire)),
+            total: Duration::from_nanos(times.total_ns.load(Ordering::Acquire)),
+        };
+        (data, lat)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -143,18 +339,36 @@ impl<T> JobTicket<T> {
 
 type ErasedJob = Box<dyn QueuedJob + Send>;
 
-/// The erasure boundary: the queue and dispatcher see only this.
+/// One dispatcher shard's execution resources: its slice of the worker
+/// threads as a private pool, its own arena pool (arenas are sized to
+/// the shard's thread count, so shards never trade scratch of different
+/// geometry), and the shard-thread view of the config
+/// (`cfg.threads` = this shard's share — the planner then routes
+/// exactly for what the shard can execute). `counters` is the one
+/// service-wide counter set, shared by every shard.
+struct ShardExec {
+    cfg: Config,
+    pool: ThreadPool,
+    arenas: ArenaPool,
+    counters: Arc<ScratchCounters>,
+}
+
+/// The erasure boundary: the queues and dispatchers see only this.
 trait QueuedJob: Send {
     /// Payload size in bytes — drives the batch/parallel split and LPT
     /// binning.
     fn size_bytes(&self) -> usize;
     /// Sort sequentially on one worker thread, reusing a checked-out
     /// [`SeqContext`] arena. Called from inside a pool SPMD region.
-    fn run_small(&mut self, core: &ServiceCore);
+    fn run_small(&mut self, core: &ShardExec);
     /// Sort with the full cooperative parallel IPS⁴o, reusing a
     /// checked-out [`ParScratch`] arena. Called from the dispatcher
     /// thread, outside any SPMD region.
-    fn run_large(&mut self, core: &ServiceCore);
+    fn run_large(&mut self, core: &ShardExec);
+    /// Fail this job without running it: resolve the ticket with the
+    /// shed panic payload and count it. Called by [`SubmitPolicy::Shed`]
+    /// from a submitter thread.
+    fn shed(&mut self, core: &ShardExec);
 }
 
 struct TypedJob<T, F> {
@@ -162,6 +376,13 @@ struct TypedJob<T, F> {
     is_less: F,
     done: Arc<DoneSlot<T>>,
     ctl: Arc<JobControl>,
+    times: Arc<TicketTimes>,
+    /// This job's share of its shard's queue budget, released on
+    /// completion (or drop). `None` when the service is unbounded.
+    budget: Option<BudgetToken>,
+    /// For the leaked-ticket guard — the job may outlive its shard's
+    /// borrow when dropped during teardown.
+    counters: Arc<ScratchCounters>,
     finished: bool,
 }
 
@@ -172,11 +393,16 @@ fn cancelled_payload() -> Box<dyn std::any::Any + Send> {
     Box::new("job cancelled")
 }
 
+/// Panic payload of a job shed by [`SubmitPolicy::Shed`].
+fn shed_payload() -> Box<dyn std::any::Any + Send> {
+    Box::new("job shed under load")
+}
+
 /// Shared failure bookkeeping for every job flavour: all failures count
 /// in `jobs_failed`; the cancelled subset also counts in
 /// `jobs_cancelled`, and the deadline-driven subset of *those* in
 /// `jobs_deadline_exceeded` (so the three counters nest).
-fn record_job_failure(core: &ServiceCore, ctl: &JobControl) {
+fn record_job_failure(core: &ShardExec, ctl: &JobControl) {
     core.counters.jobs_failed.fetch_add(1, Ordering::Relaxed);
     if ctl.is_cancelled() {
         core.counters.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
@@ -190,10 +416,12 @@ fn record_job_failure(core: &ServiceCore, ctl: &JobControl) {
 
 /// Last-resort guard: a job dropped before completing (dispatcher died,
 /// batch unwound) fails its own ticket instead of stranding the waiting
-/// client forever.
+/// client forever — and counts in `tickets_leaked`, which `serve`
+/// treats as fatal.
 impl<T, F> Drop for TypedJob<T, F> {
     fn drop(&mut self) {
         if !self.finished {
+            self.counters.tickets_leaked.fetch_add(1, Ordering::Relaxed);
             let payload: Box<dyn std::any::Any + Send> =
                 Box::new("sort service dropped the job before completion");
             self.done.complete(Err(payload));
@@ -206,7 +434,7 @@ where
     T: Element,
     F: Fn(&T, &T) -> bool + Send + Sync + 'static,
 {
-    fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
+    fn finish(&mut self, core: &ShardExec, result: JobResult<T>) {
         match &result {
             Ok(data) => {
                 core.counters
@@ -218,6 +446,10 @@ where
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.ctl.mark_done();
         self.finished = true;
+        self.times.mark_done(&core.counters.latency);
+        // Release the backpressure budget before waking the client, so
+        // a parked submitter and the waiter make progress together.
+        self.budget = None;
         self.done.complete(result);
     }
 }
@@ -227,7 +459,7 @@ where
 /// and true on the dispatcher's large-job path. Forced radix/CDF
 /// degrades to IPS⁴o — a bare comparator has no radix key.
 fn resolve_cmp_plan<T, F>(
-    core: &ServiceCore,
+    core: &ShardExec,
     data: &[T],
     is_less: &F,
     parallel_ok: bool,
@@ -266,7 +498,7 @@ where
 }
 
 /// The full-menu routing decision for a radix-keyed service job.
-fn resolve_keys_plan<T: RadixKey>(core: &ServiceCore, data: &[T], parallel_ok: bool) -> SortPlan {
+fn resolve_keys_plan<T: RadixKey>(core: &ShardExec, data: &[T], parallel_ok: bool) -> SortPlan {
     let mut plan = match core.cfg.planner {
         // See resolve_cmp_plan: batch-path jobs plan with a
         // single-thread view so measured decisions stay executable
@@ -299,7 +531,13 @@ where
         self.data.len() * std::mem::size_of::<T>()
     }
 
-    fn run_small(&mut self, core: &ServiceCore) {
+    fn shed(&mut self, core: &ShardExec) {
+        core.counters.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.finish(core, Err(shed_payload()));
+    }
+
+    fn run_small(&mut self, core: &ShardExec) {
+        self.times.mark_started();
         if let Some(f) = core.cfg.faults.as_deref() {
             f.begin_job();
         }
@@ -347,7 +585,8 @@ where
         }
     }
 
-    fn run_large(&mut self, core: &ServiceCore) {
+    fn run_large(&mut self, core: &ShardExec) {
+        self.times.mark_started();
         if let Some(f) = core.cfg.faults.as_deref() {
             f.begin_job();
         }
@@ -471,6 +710,9 @@ struct KeyedJob<T: RadixKey> {
     data: Vec<T>,
     done: Arc<DoneSlot<T>>,
     ctl: Arc<JobControl>,
+    times: Arc<TicketTimes>,
+    budget: Option<BudgetToken>,
+    counters: Arc<ScratchCounters>,
     finished: bool,
 }
 
@@ -479,6 +721,7 @@ struct KeyedJob<T: RadixKey> {
 impl<T: RadixKey> Drop for KeyedJob<T> {
     fn drop(&mut self) {
         if !self.finished {
+            self.counters.tickets_leaked.fetch_add(1, Ordering::Relaxed);
             let payload: Box<dyn std::any::Any + Send> =
                 Box::new("sort service dropped the job before completion");
             self.done.complete(Err(payload));
@@ -487,7 +730,7 @@ impl<T: RadixKey> Drop for KeyedJob<T> {
 }
 
 impl<T: RadixKey> KeyedJob<T> {
-    fn finish(&mut self, core: &ServiceCore, result: JobResult<T>) {
+    fn finish(&mut self, core: &ShardExec, result: JobResult<T>) {
         match &result {
             Ok(data) => {
                 core.counters
@@ -499,6 +742,8 @@ impl<T: RadixKey> KeyedJob<T> {
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.ctl.mark_done();
         self.finished = true;
+        self.times.mark_done(&core.counters.latency);
+        self.budget = None;
         self.done.complete(result);
     }
 }
@@ -508,7 +753,13 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
         self.data.len() * std::mem::size_of::<T>()
     }
 
-    fn run_small(&mut self, core: &ServiceCore) {
+    fn shed(&mut self, core: &ShardExec) {
+        core.counters.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.finish(core, Err(shed_payload()));
+    }
+
+    fn run_small(&mut self, core: &ShardExec) {
+        self.times.mark_started();
         if let Some(f) = core.cfg.faults.as_deref() {
             f.begin_job();
         }
@@ -555,7 +806,8 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
         }
     }
 
-    fn run_large(&mut self, core: &ServiceCore) {
+    fn run_large(&mut self, core: &ShardExec) {
+        self.times.mark_started();
         if let Some(f) = core.cfg.faults.as_deref() {
             f.begin_job();
         }
@@ -591,7 +843,7 @@ impl<T: RadixKey> QueuedJob for KeyedJob<T> {
 /// geometry checks stay keyed to `core.cfg` (the clone never changes
 /// geometry). Panics propagate to the caller's containment; arenas are
 /// checked back in only on success.
-fn execute_keys_large<T: RadixKey>(core: &ServiceCore, run_cfg: &Config, data: &mut [T]) {
+fn execute_keys_large<T: RadixKey>(core: &ShardExec, run_cfg: &Config, data: &mut [T]) {
     let plan = resolve_keys_plan(core, data, true);
     core.counters.record_backend(plan.backend);
     core.counters.record_plan_source(plan.calibrated);
@@ -691,6 +943,7 @@ impl FileDoneSlot {
 pub struct FileJobTicket {
     done: Arc<FileDoneSlot>,
     ctl: Arc<JobControl>,
+    times: Arc<TicketTimes>,
 }
 
 impl FileJobTicket {
@@ -726,6 +979,19 @@ impl FileJobTicket {
     pub fn is_ready(&self) -> bool {
         self.done.slot.lock().unwrap().is_some()
     }
+
+    /// This job's latency, once it resolved (`None` while in flight).
+    /// See [`JobTicket::latency`].
+    pub fn latency(&self) -> Option<TicketLatency> {
+        let total = self.times.total_ns.load(Ordering::Acquire);
+        if total == 0 {
+            return None;
+        }
+        Some(TicketLatency {
+            queue: Duration::from_nanos(self.times.queue_ns.load(Ordering::Acquire)),
+            total: Duration::from_nanos(total),
+        })
+    }
 }
 
 /// A queued file-backed job: sort `input` into `output` through the
@@ -736,6 +1002,9 @@ struct FileJob<T: ExtRecord> {
     output: PathBuf,
     done: Arc<FileDoneSlot>,
     ctl: Arc<JobControl>,
+    times: Arc<TicketTimes>,
+    budget: Option<BudgetToken>,
+    counters: Arc<ScratchCounters>,
     finished: bool,
     _records: PhantomData<fn() -> T>,
 }
@@ -745,6 +1014,7 @@ struct FileJob<T: ExtRecord> {
 impl<T: ExtRecord> Drop for FileJob<T> {
     fn drop(&mut self) {
         if !self.finished {
+            self.counters.tickets_leaked.fetch_add(1, Ordering::Relaxed);
             let payload: Box<dyn std::any::Any + Send> =
                 Box::new("sort service dropped the job before completion");
             self.done.complete(Err(payload));
@@ -753,7 +1023,7 @@ impl<T: ExtRecord> Drop for FileJob<T> {
 }
 
 impl<T: ExtRecord> FileJob<T> {
-    fn finish(&mut self, core: &ServiceCore, result: FileJobResult) {
+    fn finish(&mut self, core: &ShardExec, result: FileJobResult) {
         match &result {
             Ok(Ok(report)) => {
                 core.counters
@@ -767,6 +1037,8 @@ impl<T: ExtRecord> FileJob<T> {
         core.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.ctl.mark_done();
         self.finished = true;
+        self.times.mark_done(&core.counters.latency);
+        self.budget = None;
         self.done.complete(result);
     }
 }
@@ -779,11 +1051,17 @@ impl<T: ExtRecord> QueuedJob for FileJob<T> {
         usize::MAX
     }
 
-    fn run_small(&mut self, _core: &ServiceCore) {
+    fn shed(&mut self, core: &ShardExec) {
+        core.counters.jobs_shed.fetch_add(1, Ordering::Relaxed);
+        self.finish(core, Err(shed_payload()));
+    }
+
+    fn run_small(&mut self, _core: &ShardExec) {
         unreachable!("file jobs always take the large path");
     }
 
-    fn run_large(&mut self, core: &ServiceCore) {
+    fn run_large(&mut self, core: &ShardExec) {
+        self.times.mark_started();
         // No begin_job here: the external tier advances the fault
         // session's job stream itself at the top of each sort.
         // Thread this job's cancel flag through the config so both the
@@ -811,31 +1089,34 @@ impl<T: ExtRecord> QueuedJob for FileJob<T> {
 // The service core (shared between clients, dispatcher, and Drop)
 // ---------------------------------------------------------------------------
 
-struct ServiceCore {
-    cfg: Config,
-    pool: ThreadPool,
-    arenas: ArenaPool,
-    counters: Arc<ScratchCounters>,
-    /// Sharded submission queues; clients pick one round-robin via `rr`.
-    shards: Vec<Mutex<VecDeque<ErasedJob>>>,
-    rr: AtomicUsize,
-    /// Jobs enqueued but not yet drained by the dispatcher.
+/// One dispatcher shard: a contiguous slice of the submission queues,
+/// the execution resources that drain them, and the shard's budget and
+/// wakeup plumbing. Owned by [`ServiceCore`]; driven by one dispatcher
+/// thread each.
+struct DispatchShard {
+    exec: ShardExec,
+    /// This shard's slice of the service's submission queues.
+    queues: Vec<Mutex<VecDeque<ErasedJob>>>,
+    /// Jobs enqueued on this shard but not yet drained (or stolen).
     pending: AtomicUsize,
-    /// Deadline-watchdog registry: one weak handle per in-flight job,
-    /// populated only when `cfg.job_deadline` is set. Weak, so a job
-    /// dropped without finishing never pins its control block.
-    watch: Mutex<Vec<Weak<JobControl>>>,
-    shutdown: AtomicBool,
+    /// Rotating drain start index — without it, queue 0 would be
+    /// systematically younger than queue N−1 at batch time under
+    /// sustained load (the fairness fix).
+    drain_from: AtomicUsize,
+    budget: Arc<QueueBudget>,
     wake_mx: Mutex<()>,
     wake_cv: Condvar,
 }
 
-impl ServiceCore {
-    /// Drain every shard into one batch.
+impl DispatchShard {
+    /// Drain this shard's queues into one batch, starting from a
+    /// rotating queue index so no queue is systematically drained last.
     fn drain(&self) -> Vec<ErasedJob> {
+        let nq = self.queues.len();
+        let start = self.drain_from.fetch_add(1, Ordering::Relaxed) % nq;
         let mut out = Vec::new();
-        for shard in &self.shards {
-            let mut q = shard.lock().unwrap();
+        for i in 0..nq {
+            let mut q = self.queues[(start + i) % nq].lock().unwrap();
             out.extend(q.drain(..));
         }
         if !out.is_empty() {
@@ -846,38 +1127,187 @@ impl ServiceCore {
 
     /// Execute one drained batch: small jobs in a single parallel pass
     /// (LPT bins, each worker sorting its bin sequentially), large jobs
-    /// cooperatively, one after another.
+    /// cooperatively in this shard's thread group, one after another.
     fn execute_batch(&self, batch: Vec<ErasedJob>) {
-        let threshold = self.cfg.small_sort_bytes;
+        let threshold = self.exec.cfg.small_sort_bytes;
         let (small, large): (Vec<ErasedJob>, Vec<ErasedJob>) = batch
             .into_iter()
             .partition(|j| j.size_bytes() < threshold);
 
         if !small.is_empty() {
-            let t = self.pool.threads();
+            let t = self.exec.pool.threads();
             // LPT: biggest payloads first, each to the least-loaded bin.
             let bins = PerThread::new(crate::parallel::lpt_bins(small, t, |j| j.size_bytes()));
             {
                 let bins = &bins;
-                self.pool.run(move |tid| {
+                let exec = &self.exec;
+                self.exec.pool.run(move |tid| {
                     // SAFETY: slot `tid` is exclusively this worker's.
                     let my = unsafe { bins.get_mut(tid) };
                     for job in my.iter_mut() {
-                        job.run_small(self);
+                        job.run_small(exec);
                     }
                 });
             }
         }
 
         for mut job in large {
-            job.run_large(self);
+            job.run_large(&self.exec);
+        }
+    }
+
+    /// Shed one queued job to make room under [`SubmitPolicy::Shed`]:
+    /// the newest job of the queue whose tail is largest (in a service
+    /// with no explicit priorities, the biggest, most recently queued
+    /// payload is the lowest-priority work). Returns false when nothing
+    /// is queued — the budget is then held by in-flight jobs only.
+    fn shed_one(&self) -> bool {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            let g = q.lock().unwrap();
+            if let Some(j) = g.back() {
+                let sz = j.size_bytes();
+                if best.map_or(true, |(_, bs)| sz >= bs) {
+                    best = Some((i, sz));
+                }
+            }
+        }
+        let victim = match best {
+            // Re-lock and pop: the tail may have changed, but whatever
+            // is newest there now is still a valid victim.
+            Some((qi, _)) => self.queues[qi].lock().unwrap().pop_back(),
+            None => None,
+        };
+        match victim {
+            Some(mut job) => {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                job.shed(&self.exec);
+                true
+            }
+            None => false,
         }
     }
 }
 
-fn dispatcher_loop(core: Arc<ServiceCore>) {
+struct ServiceCore {
+    cfg: Config,
+    counters: Arc<ScratchCounters>,
+    /// The dispatcher shards; submission queues live inside them.
+    dispatchers: Vec<DispatchShard>,
+    /// Global queue index → (dispatcher shard, local queue) — clients
+    /// pick a global index round-robin via `rr`.
+    queue_map: Vec<(usize, usize)>,
+    rr: AtomicUsize,
+    /// Deadline-watchdog registry: one weak handle per in-flight job,
+    /// populated only when `cfg.job_deadline` is set. Weak, so a job
+    /// dropped without finishing never pins its control block.
+    watch: Mutex<Vec<Weak<JobControl>>>,
+    shutdown: AtomicBool,
+}
+
+impl ServiceCore {
+    /// Admit one job of `bytes` payload to dispatcher shard `d`,
+    /// applying the configured [`SubmitPolicy`] when the shard's budget
+    /// is exhausted. Runs *before* the job is constructed, so a
+    /// rejected submission creates no ticket and leaks nothing.
+    fn admit(&self, d: usize, bytes: usize) -> Result<Option<BudgetToken>, ServiceError> {
+        let shard = &self.dispatchers[d];
+        let b = &shard.budget;
+        if b.unbounded() {
+            return Ok(None);
+        }
+        let mut level = b.level.lock().unwrap();
+        loop {
+            // At shutdown, admit over budget rather than park forever —
+            // the drain-on-drop path resolves every ticket either way.
+            if b.fits(*level, bytes) || self.shutdown.load(Ordering::Acquire) {
+                level.0 += bytes;
+                level.1 += 1;
+                return Ok(Some(BudgetToken {
+                    budget: Arc::clone(b),
+                    bytes,
+                }));
+            }
+            match self.cfg.submit_policy {
+                SubmitPolicy::Block => {
+                    // Timed wait: completions notify the condvar, the
+                    // timeout is a belt against a shutdown racing the
+                    // park (Drop notifies after setting the flag).
+                    let (g, _) = b
+                        .cv
+                        .wait_timeout(level, Duration::from_millis(10))
+                        .unwrap();
+                    level = g;
+                }
+                SubmitPolicy::Reject => {
+                    return Err(ServiceError::Saturated {
+                        dispatcher: d,
+                        queued_bytes: level.0,
+                        queued_jobs: level.1,
+                    });
+                }
+                SubmitPolicy::Shed => {
+                    // Shed outside the budget lock: the victim's own
+                    // token release re-takes it.
+                    drop(level);
+                    let shed_any = shard.shed_one();
+                    level = b.level.lock().unwrap();
+                    if !shed_any && !b.fits(*level, bytes) {
+                        // Nothing queued to shed — the budget is held
+                        // by in-flight work; admit over budget so the
+                        // submitter is never wedged behind itself.
+                        level.0 += bytes;
+                        level.1 += 1;
+                        return Ok(Some(BudgetToken {
+                            budget: Arc::clone(b),
+                            bytes,
+                        }));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Steal the oldest half of each queue of the first backlogged sibling
+/// shard (scan order `d+1, d+2, …` so two idle shards don't gang up on
+/// the same victim). FIFO-half stealing takes the *oldest* work — the
+/// jobs whose latency is already worst — and leaves the newer half for
+/// the owner, mirroring the recursion scheduler's steal discipline.
+fn steal_from_siblings(core: &ServiceCore, d: usize) -> Vec<ErasedJob> {
+    let nd = core.dispatchers.len();
+    for k in 1..nd {
+        let s = (d + k) % nd;
+        let sib = &core.dispatchers[s];
+        if sib.pending.load(Ordering::Acquire) == 0 {
+            continue;
+        }
+        let mut out = Vec::new();
+        for q in &sib.queues {
+            let mut g = q.lock().unwrap();
+            let n = g.len();
+            if n == 0 {
+                continue;
+            }
+            let take = (n + 1) / 2;
+            out.extend(g.drain(..take));
+        }
+        if !out.is_empty() {
+            sib.pending.fetch_sub(out.len(), Ordering::AcqRel);
+            core.counters
+                .dispatcher_steals
+                .fetch_add(out.len() as u64, Ordering::Relaxed);
+            return out;
+        }
+    }
+    Vec::new()
+}
+
+fn dispatcher_loop(core: Arc<ServiceCore>, d: usize) {
+    let me = &core.dispatchers[d];
+    let nd = core.dispatchers.len();
     loop {
-        let batch = core.drain();
+        let batch = me.drain();
         if !batch.is_empty() {
             core.counters
                 .batches_dispatched
@@ -886,20 +1316,42 @@ fn dispatcher_loop(core: Arc<ServiceCore>) {
             // must not kill the dispatcher. Jobs dropped by an unwinding
             // batch still resolve their tickets via TypedJob's Drop
             // guard, so no client is stranded.
-            let c = &core;
             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                c.execute_batch(batch);
+                me.execute_batch(batch);
             }));
             continue;
         }
         if core.shutdown.load(Ordering::Acquire) {
-            return; // queue drained and shutdown requested
+            return; // own queues drained and shutdown requested —
+                    // siblings drain their own backlogs
         }
-        let mut g = core.wake_mx.lock().unwrap();
-        while core.pending.load(Ordering::Acquire) == 0
-            && !core.shutdown.load(Ordering::Acquire)
-        {
-            g = core.wake_cv.wait(g).unwrap();
+        if nd > 1 {
+            // Idle with siblings: try to steal a hot shard's backlog.
+            let stolen = steal_from_siblings(&core, d);
+            if !stolen.is_empty() {
+                core.counters
+                    .batches_dispatched
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    me.execute_batch(stolen);
+                }));
+                continue;
+            }
+            // Submitters only wake the shard they enqueue on, so an
+            // idle stealer parks with a short timeout and re-scans.
+            let g = me.wake_mx.lock().unwrap();
+            if me.pending.load(Ordering::Acquire) == 0 && !core.shutdown.load(Ordering::Acquire)
+            {
+                let _ = me.wake_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            }
+        } else {
+            // Single dispatcher: the pre-sharding blocking park.
+            let mut g = me.wake_mx.lock().unwrap();
+            while me.pending.load(Ordering::Acquire) == 0
+                && !core.shutdown.load(Ordering::Acquire)
+            {
+                g = me.wake_cv.wait(g).unwrap();
+            }
         }
     }
 }
@@ -934,17 +1386,22 @@ fn watchdog_loop(core: Arc<ServiceCore>) {
 /// A long-running batched sort service. See the [module docs](self).
 ///
 /// Dropping the service drains all queued jobs, then stops the
-/// dispatcher and the thread pool.
+/// dispatchers and their thread pools.
 pub struct SortService {
     core: Arc<ServiceCore>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    dispatchers: Vec<std::thread::JoinHandle<()>>,
     watchdog: Option<std::thread::JoinHandle<()>>,
 }
 
 impl SortService {
-    /// Start a service with `cfg.threads` sort workers,
-    /// `cfg.service_shards` submission shards, and the
-    /// `cfg.small_sort_bytes` batching threshold.
+    /// Start a service with `cfg.threads` sort workers split over
+    /// `cfg.service_dispatchers` dispatcher shards,
+    /// `cfg.service_shards` submission queues (raised to at least one
+    /// per dispatcher), and the `cfg.small_sort_bytes` batching
+    /// threshold. Worker threads are allotted to shards proportionally
+    /// to their queue counts by the scheduler's group-split rule; with
+    /// fewer threads than dispatchers every shard still gets one
+    /// (deliberate oversubscription, as in the stress suites).
     ///
     /// If no fault plan was installed with [`Config::with_faults`], the
     /// [`IPS4O_FAULTS`](crate::fault::FAULTS_ENV) environment variable
@@ -956,28 +1413,64 @@ impl SortService {
             cfg.faults = FaultSession::from_env();
         }
         let threads = cfg.threads.max(1);
-        let shards = cfg.service_shards.max(1);
+        let nd = cfg.service_dispatchers.max(1);
+        let shards = cfg.service_shards.max(1).max(nd);
         let counters = Arc::new(ScratchCounters::new());
-        let arenas = ArenaPool::with_counters(Arc::clone(&counters));
-        arenas.arm_faults(cfg.faults.clone());
+
+        // Contiguous queue slices per dispatcher, then worker threads
+        // proportional to each shard's queue count — the same
+        // allotment rule the recursion scheduler uses for group splits.
+        let qbase = shards / nd;
+        let qrem = shards % nd;
+        let queue_counts: Vec<usize> = (0..nd).map(|d| qbase + usize::from(d < qrem)).collect();
+        let thread_shares = crate::scheduler::proportional_shares(&queue_counts, threads);
+
+        let mut queue_map = Vec::with_capacity(shards);
+        let mut dispatchers = Vec::with_capacity(nd);
+        for (d, &nq) in queue_counts.iter().enumerate() {
+            for lq in 0..nq {
+                queue_map.push((d, lq));
+            }
+            let arenas = ArenaPool::with_counters(Arc::clone(&counters));
+            arenas.arm_faults(cfg.faults.clone());
+            dispatchers.push(DispatchShard {
+                exec: ShardExec {
+                    cfg: cfg.clone().with_threads(thread_shares[d]),
+                    pool: ThreadPool::new(thread_shares[d]),
+                    arenas,
+                    counters: Arc::clone(&counters),
+                },
+                queues: (0..nq).map(|_| Mutex::new(VecDeque::new())).collect(),
+                pending: AtomicUsize::new(0),
+                drain_from: AtomicUsize::new(0),
+                budget: Arc::new(QueueBudget::new(
+                    cfg.queue_budget_bytes,
+                    cfg.queue_budget_jobs,
+                )),
+                wake_mx: Mutex::new(()),
+                wake_cv: Condvar::new(),
+            });
+        }
+
         let core = Arc::new(ServiceCore {
-            pool: ThreadPool::new(threads),
-            arenas,
             counters,
-            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dispatchers,
+            queue_map,
             rr: AtomicUsize::new(0),
-            pending: AtomicUsize::new(0),
             watch: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
-            wake_mx: Mutex::new(()),
-            wake_cv: Condvar::new(),
             cfg,
         });
-        let dcore = Arc::clone(&core);
-        let dispatcher = std::thread::Builder::new()
-            .name("ips4o-svc-dispatch".into())
-            .spawn(move || dispatcher_loop(dcore))
-            .expect("spawn service dispatcher");
+        let mut handles = Vec::with_capacity(nd);
+        for d in 0..nd {
+            let dcore = Arc::clone(&core);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ips4o-svc-dispatch-{d}"))
+                    .spawn(move || dispatcher_loop(dcore, d))
+                    .expect("spawn service dispatcher"),
+            );
+        }
         let watchdog = if core.cfg.job_deadline.is_some() {
             let wcore = Arc::clone(&core);
             Some(
@@ -991,7 +1484,7 @@ impl SortService {
         };
         SortService {
             core,
-            dispatcher: Some(dispatcher),
+            dispatchers: handles,
             watchdog,
         }
     }
@@ -1023,93 +1516,193 @@ impl SortService {
 
     /// Submit a job using the element's natural order (comparison
     /// backends; see [`SortService::submit_keys`] for radix routing).
+    ///
+    /// # Panics
+    /// Panics on [`ServiceError::Saturated`] — only possible under
+    /// [`SubmitPolicy::Reject`] with a queue budget set; use
+    /// [`SortService::try_submit`] there.
     pub fn submit<T: Element + Ord>(&self, data: Vec<T>) -> JobTicket<T> {
         self.submit_by(data, |a: &T, b: &T| a < b)
     }
 
+    /// Fallible [`SortService::submit`]: a saturated shard under
+    /// [`SubmitPolicy::Reject`] returns [`ServiceError::Saturated`]
+    /// instead of panicking.
+    pub fn try_submit<T: Element + Ord>(
+        &self,
+        data: Vec<T>,
+    ) -> Result<JobTicket<T>, ServiceError> {
+        self.try_submit_by(data, |a: &T, b: &T| a < b)
+    }
+
     /// Submit a job with an explicit strict-weak-order `is_less`. The
     /// planner routes it among the comparison backends.
+    ///
+    /// # Panics
+    /// See [`SortService::submit`].
     pub fn submit_by<T, F>(&self, data: Vec<T>, is_less: F) -> JobTicket<T>
     where
         T: Element,
         F: Fn(&T, &T) -> bool + Send + Sync + 'static,
     {
+        match self.try_submit_by(data, is_less) {
+            Ok(ticket) => ticket,
+            Err(e) => panic!("sort service submission failed: {e}"),
+        }
+    }
+
+    /// Fallible [`SortService::submit_by`].
+    pub fn try_submit_by<T, F>(
+        &self,
+        data: Vec<T>,
+        is_less: F,
+    ) -> Result<JobTicket<T>, ServiceError>
+    where
+        T: Element,
+        F: Fn(&T, &T) -> bool + Send + Sync + 'static,
+    {
+        let (d, lq) = self.route();
+        let bytes = data.len() * std::mem::size_of::<T>();
+        let budget = self.core.admit(d, bytes)?;
         let done = Arc::new(DoneSlot::new());
         let ctl = self.new_job_ctl();
+        let times = Arc::new(TicketTimes::new(self.class_of(bytes)));
         let job: ErasedJob = Box::new(TypedJob {
             data,
             is_less,
             done: Arc::clone(&done),
             ctl: Arc::clone(&ctl),
+            times: Arc::clone(&times),
+            budget,
+            counters: Arc::clone(&self.core.counters),
             finished: false,
         });
-        self.enqueue(job);
-        JobTicket { done, ctl }
+        self.enqueue(job, d, lq);
+        Ok(JobTicket { done, ctl, times })
     }
 
     /// Submit a radix-keyed job: the planner picks among the full
     /// backend menu, including in-place radix (IPS²Ra).
+    ///
+    /// # Panics
+    /// See [`SortService::submit`].
     pub fn submit_keys<T: RadixKey>(&self, data: Vec<T>) -> JobTicket<T> {
+        match self.try_submit_keys(data) {
+            Ok(ticket) => ticket,
+            Err(e) => panic!("sort service submission failed: {e}"),
+        }
+    }
+
+    /// Fallible [`SortService::submit_keys`].
+    pub fn try_submit_keys<T: RadixKey>(
+        &self,
+        data: Vec<T>,
+    ) -> Result<JobTicket<T>, ServiceError> {
+        let (d, lq) = self.route();
+        let bytes = data.len() * std::mem::size_of::<T>();
+        let budget = self.core.admit(d, bytes)?;
         let done = Arc::new(DoneSlot::new());
         let ctl = self.new_job_ctl();
+        let times = Arc::new(TicketTimes::new(self.class_of(bytes)));
         let job: ErasedJob = Box::new(KeyedJob {
             data,
             done: Arc::clone(&done),
             ctl: Arc::clone(&ctl),
+            times: Arc::clone(&times),
+            budget,
+            counters: Arc::clone(&self.core.counters),
             finished: false,
         });
-        self.enqueue(job);
-        JobTicket { done, ctl }
+        self.enqueue(job, d, lq);
+        Ok(JobTicket { done, ctl, times })
     }
 
     /// Submit a file-backed job: sort the [`ExtRecord`]-encoded records
     /// of `input` into `output` through the external tier
     /// ([`crate::extsort`]) — datasets larger than memory are fine. The
-    /// job runs on the dispatcher's large path with the service's pool
-    /// and recycled [`ExtScratch`](crate::extsort) arenas, so warm
+    /// job runs on its dispatcher shard's large path with that shard's
+    /// pool and recycled [`ExtScratch`](crate::extsort) arenas, so warm
     /// repeated file jobs allocate no scratch. I/O and truncated-input
     /// failures resolve the ticket with `Err` (the service keeps
     /// serving); spill files never outlive the job.
+    ///
+    /// # Panics
+    /// See [`SortService::submit`].
     pub fn submit_file<T: ExtRecord>(
         &self,
         input: impl Into<PathBuf>,
         output: impl Into<PathBuf>,
     ) -> FileJobTicket {
+        match self.try_submit_file::<T>(input, output) {
+            Ok(ticket) => ticket,
+            Err(e) => panic!("sort service submission failed: {e}"),
+        }
+    }
+
+    /// Fallible [`SortService::submit_file`]. A file job's payload
+    /// lives on disk, so it charges the byte budget nothing — only a
+    /// job-count slot.
+    pub fn try_submit_file<T: ExtRecord>(
+        &self,
+        input: impl Into<PathBuf>,
+        output: impl Into<PathBuf>,
+    ) -> Result<FileJobTicket, ServiceError> {
+        let (d, lq) = self.route();
+        let budget = self.core.admit(d, 0)?;
         let done = Arc::new(FileDoneSlot::new());
         let ctl = self.new_job_ctl();
+        let times = Arc::new(TicketTimes::new(JobClass::File));
         let job: ErasedJob = Box::new(FileJob::<T> {
             input: input.into(),
             output: output.into(),
             done: Arc::clone(&done),
             ctl: Arc::clone(&ctl),
+            times: Arc::clone(&times),
+            budget,
+            counters: Arc::clone(&self.core.counters),
             finished: false,
             _records: PhantomData,
         });
-        self.enqueue(job);
-        FileJobTicket { done, ctl }
+        self.enqueue(job, d, lq);
+        Ok(FileJobTicket { done, ctl, times })
     }
 
-    fn enqueue(&self, job: ErasedJob) {
-        let core = &self.core;
-        let idx = core.rr.fetch_add(1, Ordering::Relaxed) % core.shards.len();
-        // Increment `pending` under the shard lock, together with the
+    /// Round-robin over the global queue index space, mapped to
+    /// (dispatcher shard, local queue).
+    fn route(&self) -> (usize, usize) {
+        let idx = self.core.rr.fetch_add(1, Ordering::Relaxed) % self.core.queue_map.len();
+        self.core.queue_map[idx]
+    }
+
+    /// The latency-histogram class of an in-memory payload.
+    fn class_of(&self, bytes: usize) -> JobClass {
+        if bytes < self.core.cfg.small_sort_bytes {
+            JobClass::Small
+        } else {
+            JobClass::Large
+        }
+    }
+
+    fn enqueue(&self, job: ErasedJob, d: usize, lq: usize) {
+        let shard = &self.core.dispatchers[d];
+        // Increment `pending` under the queue lock, together with the
         // push: the dispatcher's drain pops under the same lock and
         // decrements afterwards, so `pending` can never observe a pop
         // before its matching push was counted (no underflow).
         let was_idle = {
-            let mut q = core.shards[idx].lock().unwrap();
+            let mut q = shard.queues[lq].lock().unwrap();
             q.push_back(job);
-            core.pending.fetch_add(1, Ordering::AcqRel) == 0
+            shard.pending.fetch_add(1, Ordering::AcqRel) == 0
         };
-        // Only the submitter that moved the queue from empty to non-empty
-        // needs to wake the dispatcher — while jobs are pending the
+        // Only the submitter that moved the shard from empty to non-empty
+        // needs to wake its dispatcher — while jobs are pending the
         // dispatcher never sleeps (it re-checks `pending` under `wake_mx`
-        // before waiting), so everyone else skips the lock and the shards
+        // before waiting), so everyone else skips the lock and the queues
         // actually shard. Locking wake_mx around the notify closes the
         // lost-wakeup race against the dispatcher's check-then-wait.
         if was_idle {
-            let _g = core.wake_mx.lock().unwrap();
-            core.wake_cv.notify_one();
+            let _g = shard.wake_mx.lock().unwrap();
+            shard.wake_cv.notify_one();
         }
     }
 
@@ -1128,17 +1721,19 @@ impl SortService {
     /// since its high-water mark is workload-dependent. The pre-built
     /// arenas are counted in `scratch_allocations`.
     pub fn warm<T: Element>(&self) {
-        let core = &self.core;
-        let t = core.pool.threads();
-        for _ in 0..t {
-            core.arenas
-                .checkin(SeqContext::<T>::new(core.cfg.clone(), 0x5EED_0002));
+        for shard in &self.core.dispatchers {
+            let exec = &shard.exec;
+            let t = exec.pool.threads();
+            for _ in 0..t {
+                exec.arenas
+                    .checkin(SeqContext::<T>::new(exec.cfg.clone(), 0x5EED_0002));
+            }
+            exec.arenas.checkin(ParScratch::<T>::new(&exec.cfg, t));
+            exec.arenas.checkin(LargeMergeScratch::<T>::new());
+            exec.counters
+                .scratch_allocations
+                .fetch_add(t as u64 + 2, Ordering::Relaxed);
         }
-        core.arenas.checkin(ParScratch::<T>::new(&core.cfg, t));
-        core.arenas.checkin(LargeMergeScratch::<T>::new());
-        core.counters
-            .scratch_allocations
-            .fetch_add(t as u64 + 2, Ordering::Relaxed);
     }
 
     /// The service configuration.
@@ -1146,19 +1741,35 @@ impl SortService {
         &self.core.cfg
     }
 
-    /// Number of sort worker threads.
+    /// Number of sort worker threads, summed over dispatcher shards.
     pub fn threads(&self) -> usize {
-        self.core.pool.threads()
+        self.core.dispatchers.iter().map(|d| d.exec.pool.threads()).sum()
     }
 
-    /// Jobs submitted but not yet picked up by the dispatcher.
+    /// Number of dispatcher shards.
+    pub fn dispatchers(&self) -> usize {
+        self.core.dispatchers.len()
+    }
+
+    /// Jobs submitted but not yet picked up by any dispatcher, summed
+    /// over shards.
     pub fn queued_jobs(&self) -> usize {
-        self.core.pending.load(Ordering::Acquire)
+        self.core
+            .dispatchers
+            .iter()
+            .map(|d| d.pending.load(Ordering::Acquire))
+            .sum()
     }
 
     /// Allocation/reuse/dispatch accounting snapshot.
     pub fn metrics(&self) -> ScratchSnapshot {
         self.core.counters.snapshot()
+    }
+
+    /// Per-class completion-latency histograms (queue → done), frozen at
+    /// the moment of the call.
+    pub fn latency_snapshot(&self) -> ServiceLatencySnapshot {
+        self.core.counters.latency_snapshot()
     }
 
     /// The live counter set (for polling from monitoring threads).
@@ -1170,11 +1781,17 @@ impl SortService {
 impl Drop for SortService {
     fn drop(&mut self) {
         self.core.shutdown.store(true, Ordering::Release);
-        {
-            let _g = self.core.wake_mx.lock().unwrap();
-            self.core.wake_cv.notify_all();
+        for shard in &self.core.dispatchers {
+            {
+                let _g = shard.wake_mx.lock().unwrap();
+                shard.wake_cv.notify_all();
+            }
+            // Submitters parked on a full budget must re-observe
+            // `shutdown` (admit force-admits then) instead of waiting
+            // out their timeout.
+            shard.budget.cv.notify_all();
         }
-        if let Some(h) = self.dispatcher.take() {
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.watchdog.take() {
@@ -1473,5 +2090,55 @@ mod tests {
             .count();
         assert_eq!(residue, 0, "failed jobs must clean their spill dirs");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tickets_report_latency_per_class() {
+        let svc = SortService::new(Config::default().with_threads(2));
+        let small = svc.submit(gen_u64(Distribution::Uniform, 1_000, 1));
+        let (out, lat) = small.wait_with_latency();
+        assert!(is_sorted_by(&out, |a, b| a < b));
+        assert!(lat.total >= lat.queue, "total covers the queue wait");
+        assert!(lat.total > Duration::ZERO && lat.queue > Duration::ZERO);
+
+        // A large job lands in the Large histogram.
+        let large = svc.submit(gen_u64(Distribution::Uniform, 1_000_000, 2));
+        assert!(is_sorted_by(&large.wait(), |a, b| a < b));
+        assert!(large.latency().is_some(), "resolved ticket reports latency");
+
+        let snap = svc.latency_snapshot();
+        assert_eq!(snap.class(JobClass::Small).count, 1);
+        assert_eq!(snap.class(JobClass::Large).count, 1);
+        assert_eq!(snap.class(JobClass::File).count, 0);
+        assert!(snap.class(JobClass::Small).p50() > Duration::ZERO);
+        // The in-flight probe: a fresh ticket has no latency yet.
+        let pendingless = svc.submit(vec![2u64, 1]);
+        let _ = pendingless.wait();
+    }
+
+    #[test]
+    fn multi_dispatcher_service_sorts_and_reports() {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(4)
+                .with_service_dispatchers(2)
+                .with_service_shards(4),
+        );
+        assert_eq!(svc.dispatchers(), 2);
+        assert_eq!(svc.threads(), 4, "thread shares must conserve the pool");
+        let tickets: Vec<_> = (0..64)
+            .map(|s| svc.submit(gen_u64(Distribution::Uniform, 3_000, s)))
+            .collect();
+        let mut fps = Vec::new();
+        for t in tickets {
+            let out = t.wait();
+            assert!(is_sorted_by(&out, |a, b| a < b));
+            fps.push(out.len());
+        }
+        assert!(fps.iter().all(|&n| n == 3_000));
+        let m = svc.metrics();
+        assert_eq!(m.jobs_completed, 64);
+        assert_eq!(m.tickets_leaked, 0);
+        assert_eq!(svc.latency_snapshot().class(JobClass::Small).count, 64);
     }
 }

@@ -23,7 +23,7 @@ use common::oracle::{verify_record_stream, with_watchdog};
 use ips4o::datagen::{self, Distribution};
 use ips4o::{
     Backend, Config, ExtSortConfig, ExtSortError, FaultPlan, FaultSession, PlannerMode,
-    RetryPolicy, SortService, Sorter,
+    RetryPolicy, SortService, Sorter, SubmitPolicy,
 };
 
 /// A fresh scratch directory for one test; removed on drop.
@@ -289,9 +289,14 @@ fn exhausted_retries_give_up_with_the_final_error() {
 
 #[test]
 fn arena_alloc_fault_is_contained_to_one_service_job() {
+    // Pinned to one dispatcher: the "first job hits the first fresh
+    // arena build" mapping below assumes a single shard owns the only
+    // arena pool. The sharded variant is
+    // `arena_alloc_fault_under_sharded_dispatch_is_contained`.
     let svc = SortService::new(
         Config::default()
             .with_threads(2)
+            .with_service_dispatchers(1)
             .with_faults(plan("arena.alloc=err@1")),
     );
 
@@ -324,9 +329,15 @@ fn sched_spawn_fault_fails_parallel_job_and_service_survives() {
     // `sched.spawn` failpoint is guaranteed to be evaluated.
     let n = 400_000usize;
     let (svc, first_failed) = with_watchdog("spawn fault wedged the scheduler", move || {
+        // Pinned to one dispatcher so the forced-parallel job owns the
+        // whole 4-thread pool — under sharding each shard's slice could
+        // be a single thread, which never evaluates `sched.spawn`. The
+        // sharded variant is
+        // `sched_spawn_fault_under_sharded_dispatch_hits_one_job`.
         let svc = SortService::new(
             Config::default()
                 .with_threads(4)
+                .with_service_dispatchers(1)
                 .with_planner(PlannerMode::Force(Backend::Ips4oPar))
                 .with_faults(plan("sched.spawn=err@1")),
         );
@@ -341,6 +352,90 @@ fn sched_spawn_fault_fails_parallel_job_and_service_survives() {
     assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "service must keep serving");
     assert_eq!(svc.metrics().jobs_completed, 2);
     assert_eq!(svc.metrics().jobs_failed, 1);
+}
+
+#[test]
+fn arena_alloc_fault_under_sharded_dispatch_is_contained() {
+    // Sharded variant: the fault session is shared across every shard's
+    // arena pool, so `arena.alloc=err@1` fires on exactly one fresh
+    // build service-wide. Which of the cold jobs that is depends on
+    // drain/steal interleaving — the contract is *containment*: exactly
+    // one job fails, every sibling shard keeps draining, and the
+    // service keeps serving afterwards.
+    let jobs = 8u64;
+    let svc = with_watchdog("sharded arena fault wedged the service", move || {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(4)
+                .with_service_dispatchers(2)
+                .with_service_shards(4)
+                .with_faults(plan("arena.alloc=err@1")),
+        );
+        let tickets: Vec<_> = (0..jobs)
+            .map(|i| svc.submit_keys(datagen::gen_u64(Distribution::Uniform, 1_000, i)))
+            .collect();
+        let mut failed = 0u64;
+        for t in tickets {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.wait())) {
+                Ok(v) => assert!(v.windows(2).all(|w| w[0] <= w[1])),
+                Err(payload) => {
+                    let msg = payload_str(payload.as_ref());
+                    assert!(
+                        msg.contains("injected fault at arena.alloc"),
+                        "unexpected panic payload: {msg}"
+                    );
+                    failed += 1;
+                }
+            }
+        }
+        assert_eq!(failed, 1, "the single armed hit fails exactly one job");
+        svc
+    });
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.jobs_completed, jobs);
+    assert_eq!(m.tickets_leaked, 0);
+
+    let sorted = svc.submit_keys(datagen::gen_u64(Distribution::Uniform, 1_000, 99)).wait();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "service must keep serving");
+}
+
+#[test]
+fn sched_spawn_fault_under_sharded_dispatch_hits_one_job() {
+    // Forced-parallel large jobs across two dispatcher shards (4 worker
+    // threads each): the shared session's first `sched.spawn` hit fails
+    // whichever job evaluates it first, and only that job. The sibling
+    // shard — and the failing shard itself, afterwards — drain their
+    // backlogs to completion.
+    let n = 400_000usize;
+    let jobs = 6u64;
+    let svc = with_watchdog("sharded spawn fault wedged the scheduler", move || {
+        let svc = SortService::new(
+            Config::default()
+                .with_threads(8)
+                .with_service_dispatchers(2)
+                .with_service_shards(2)
+                .with_planner(PlannerMode::Force(Backend::Ips4oPar))
+                .with_faults(plan("sched.spawn=err@1")),
+        );
+        let tickets: Vec<_> = (0..jobs)
+            .map(|i| svc.submit_keys(datagen::gen_u64(Distribution::Uniform, n, i)))
+            .collect();
+        let mut failed = 0u64;
+        for t in tickets {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.wait())) {
+                Ok(v) => assert!(v.windows(2).all(|w| w[0] <= w[1])),
+                Err(_) => failed += 1,
+            }
+        }
+        assert_eq!(failed, 1, "exactly one parallel job absorbs the fault");
+        svc
+    });
+    let m = svc.metrics();
+    assert_eq!(m.jobs_failed, 1);
+    assert_eq!(m.jobs_completed, jobs);
+    assert_eq!(m.tickets_leaked, 0);
 }
 
 // ---------------------------------------------------------------------------
@@ -416,6 +511,64 @@ fn manual_cancel_resolves_the_file_ticket() {
 
     let sorted = svc.submit_keys((0..500u64).rev().collect::<Vec<_>>()).wait();
     assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn deadline_cancellation_releases_queue_budget() {
+    // A deadline-cancelled job must release its backpressure budget:
+    // the token is dropped in `finish`, before the ticket resolves, so
+    // a submitter parked on the full budget unparks instead of waiting
+    // on work that will never complete.
+    let dir = TestDir::new("deadline-budget");
+    let n = 640;
+    let input = dir.path("in.bin");
+    datagen::gen_file::<u64>(&input, Distribution::Uniform, n, 0xFA0C).unwrap();
+    // Every read stalls 25ms (≥ 250ms total), tripping the 120ms
+    // deadline mid-run-generation; the budget admits exactly one job.
+    let cfg = ext_cfg(64, 8, 16, &dir.0)
+        .with_faults(plan("ext.read=delay:25ms@p1.0"))
+        .with_job_deadline(Duration::from_millis(120))
+        .with_service_dispatchers(1)
+        .with_submit_policy(SubmitPolicy::Block)
+        .with_queue_budget_jobs(1);
+
+    with_watchdog("deadline cancellation must release the queue budget", move || {
+        let svc = Arc::new(SortService::new(cfg));
+        let out = dir.path("out.bin");
+        let file_ticket = svc.submit_file::<u64>(&input, &out);
+
+        // Budget 1/1 while the file job overruns: this submitter parks.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let parked = std::thread::spawn({
+            let svc = Arc::clone(&svc);
+            move || {
+                let t = svc.submit_keys((0..1_000u64).rev().collect::<Vec<_>>());
+                tx.send(()).unwrap();
+                t.wait()
+            }
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(60)).is_err(),
+            "budget must hold the submitter while the file job runs"
+        );
+
+        let res = file_ticket.wait();
+        assert!(
+            matches!(res, Err(ExtSortError::Cancelled)),
+            "expected Cancelled, got {res:?}"
+        );
+        rx.recv_timeout(Duration::from_secs(10))
+            .expect("cancellation must unpark the blocked submitter");
+        let sorted = parked.join().unwrap();
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+
+        let m = svc.metrics();
+        assert_eq!(m.jobs_deadline_exceeded, 1);
+        assert_eq!(m.jobs_cancelled, 1);
+        assert_eq!(m.jobs_completed, 2, "cancelled + unparked both resolved");
+        assert_eq!(m.tickets_leaked, 0);
+        drop(dir);
+    });
 }
 
 // ---------------------------------------------------------------------------

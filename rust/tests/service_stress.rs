@@ -10,20 +10,47 @@ mod common;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use common::oracle::{assert_same_multiset, assert_sorted, seeded, SortCheck};
+use common::oracle::{assert_same_multiset, assert_sorted, seeded, with_watchdog, SortCheck};
 use ips4o::datagen::{self, Distribution};
 use ips4o::planner::{plan_keys, run_calibration_with, CalibrationOptions};
 use ips4o::util::{Bytes100, Pair, Xoshiro256};
-use ips4o::{Backend, Config, PlannerMode, SortService};
+use ips4o::{Backend, Config, PlannerMode, SortService, SERVICE_DISPATCHERS_ENV};
 
 fn lt(a: &u64, b: &u64) -> bool {
     a < b
 }
 
+/// Worker-thread count for stress runs. `IPS4O_STRESS_THREADS`
+/// overrides the default so CI can oversubscribe the host (e.g. 16
+/// threads on a 4-core runner) — the dispatcher-sharding suites must
+/// hold up under that contention, not just at a comfortable fit.
+fn stress_threads(default: usize) -> usize {
+    std::env::var("IPS4O_STRESS_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(default)
+}
+
+/// Dispatcher-shard count for the explicitly-multi tests: whatever the
+/// CI pass pinned via `IPS4O_SERVICE_DISPATCHERS`, floored at 2 so the
+/// multi-dispatcher paths (steal, per-shard budgets, shard-sliced
+/// queues) are exercised even in a plain `cargo test` run.
+fn stress_dispatchers() -> usize {
+    std::env::var(SERVICE_DISPATCHERS_ENV)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(2)
+}
+
 #[test]
 fn concurrent_clients_mixed_sizes_and_types() {
     seeded("concurrent_clients_mixed_sizes_and_types", 0xC11E27, |seed| {
-        let svc = SortService::new(Config::default().with_threads(4));
+        // `Config::default()` honours IPS4O_SERVICE_DISPATCHERS, so the
+        // pinned CI pass runs this same workload sharded across four
+        // dispatchers with 16 oversubscribed threads.
+        let svc = SortService::new(Config::default().with_threads(stress_threads(4)));
         let jobs_done = AtomicU64::new(0);
         let clients = 6usize;
         let jobs_per_client = 18usize;
@@ -96,8 +123,10 @@ fn concurrent_clients_mixed_sizes_and_types() {
 #[test]
 fn pipelined_submissions_batch_across_clients() {
     // Submit-all-then-wait-all from several threads: the dispatcher should
-    // coalesce many queued jobs into far fewer batches.
-    let svc = SortService::new(Config::default().with_threads(4));
+    // coalesce many queued jobs into far fewer batches. (Holds per
+    // dispatcher shard too — the batch counter is global, so the
+    // assertion survives the IPS4O_SERVICE_DISPATCHERS CI pass.)
+    let svc = SortService::new(Config::default().with_threads(stress_threads(4)));
     let clients = 4usize;
     let per_client = 50usize;
     std::thread::scope(|scope| {
@@ -213,7 +242,12 @@ fn cdf_routes_match_cost_model_and_fallback_counts() {
     // The learned-CDF backend must be chosen exactly where the cost
     // model says — skewed-lane fingerprints (Zipf, Exponential) — and
     // nowhere else in this mix.
-    let cfg = Config::default().with_threads(2);
+    //
+    // Pinned to one dispatcher: the expected routes are computed with
+    // `plan_keys` under *this* config's thread count, and a dispatcher
+    // shard plans with its own thread slice — the counts only line up
+    // when the service has exactly one shard owning all the threads.
+    let cfg = Config::default().with_threads(2).with_service_dispatchers(1);
     let svc = SortService::new(cfg.clone());
     let jobs = [
         (Distribution::Zipf, 120_000usize),
@@ -386,7 +420,16 @@ fn zero_scratch_allocations_after_warmup() {
     // arenas and their growth is counted (the pre-engine implementation
     // grew a raw Vec the counters never saw, so run-merge jobs were
     // silently exempt from this assertion).
-    let svc = SortService::new(Config::default().with_threads(2));
+    //
+    // Pinned to one dispatcher: the single sizing round below grows one
+    // shard's large-merge staging buffer, which only covers every shard
+    // when there is exactly one. The sharded variant of this guarantee
+    // is `multi_dispatcher_zero_scratch_after_shardwise_sizing`.
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(2)
+            .with_service_dispatchers(1),
+    );
     svc.warm::<u64>();
     svc.warm::<Pair>();
 
@@ -449,4 +492,140 @@ fn zero_scratch_allocations_after_warmup() {
         d.backends_summary()
     );
     assert!(d.merge_passes > 0, "covered jobs actually merged runs");
+}
+
+#[test]
+fn multi_dispatcher_zero_scratch_after_shardwise_warmup() {
+    // The zero-steady-state-allocation guarantee must survive dispatcher
+    // sharding, where every shard owns private arenas. Two facts make
+    // the assertions robust to work stealing (a stolen job executes on
+    // the *stealing* shard's arenas, so which shard runs which job is
+    // scheduling-dependent):
+    //
+    // * `warm()` pre-builds every arena type on every shard, so the
+    //   small-sort and parallel paths are strictly allocation-free from
+    //   the first job, on any shard.
+    // * The large-merge scratch has exactly two size-dependent growths
+    //   (run vec + staging buffer), each at most once per shard for a
+    //   fixed job size — so run-merge jobs allocate at most `2 × nd`
+    //   times over the service's whole life, wherever they execute.
+    let nd = stress_dispatchers();
+    let shards = nd.max(4);
+    let svc = SortService::new(
+        Config::default()
+            .with_threads(stress_threads(4))
+            .with_service_dispatchers(nd)
+            .with_service_shards(shards),
+    );
+    svc.warm::<u64>();
+    let warm = svc.metrics();
+    assert!(warm.scratch_allocations > 0, "warm pre-builds arenas");
+
+    // Warm-covered paths only: strictly zero allocations, every shard.
+    for round in 0..5u64 {
+        let smalls: Vec<_> = (0..2 * shards)
+            .map(|q| svc.submit(datagen::gen_u64(Distribution::TwoDup, 4_000, round ^ (q as u64) << 16)))
+            .collect();
+        let bigs: Vec<_> = (0..shards)
+            .map(|q| svc.submit(datagen::gen_u64(Distribution::Uniform, 150_000, round ^ (q as u64) << 8)))
+            .collect();
+        for t in smalls {
+            assert_sorted(&t.wait(), lt, "small job");
+        }
+        for t in bigs {
+            assert_sorted(&t.wait(), lt, "parallel job");
+        }
+    }
+    let d = svc.metrics().delta(&warm);
+    assert_eq!(
+        d.scratch_allocations, 0,
+        "warm-covered paths must be allocation-free on every shard \
+         (dispatchers={nd} shards={shards} reuses={})",
+        d.scratch_reuses
+    );
+    let covered_jobs = 5 * 3 * shards as u64;
+    assert_eq!(d.jobs_completed, covered_jobs);
+    assert!(d.scratch_reuses >= covered_jobs, "every job reuses an arena");
+
+    // Run-merge storm: fixed-size SortedRuns jobs. Total growth is
+    // bounded by two first-touches per shard, no matter how stealing
+    // scatters the jobs.
+    let before_storm = svc.metrics();
+    for round in 0..4u64 {
+        let runs: Vec<_> = (0..shards)
+            .map(|q| svc.submit(datagen::gen_u64(Distribution::SortedRuns, 200_000, round ^ q as u64)))
+            .collect();
+        for t in runs {
+            assert_sorted(&t.wait(), lt, "run-merge job");
+        }
+    }
+    let storm = svc.metrics().delta(&before_storm);
+    assert!(
+        storm.scratch_allocations <= 2 * nd as u64,
+        "large-merge sizing is at most two growths per shard: {} > 2×{nd}",
+        storm.scratch_allocations
+    );
+    assert!(
+        storm.backend_count(Backend::RunMerge) >= 4,
+        "storm jobs must route through the merge engine: {}",
+        storm.backends_summary()
+    );
+    assert_eq!(svc.metrics().tickets_leaked, 0);
+}
+
+#[test]
+fn dropping_a_saturated_multi_dispatcher_service_resolves_every_ticket() {
+    // Dropping the service while queues are deep must complete or fail
+    // every outstanding ticket — never strand a waiter. The shutdown
+    // contract is that each dispatcher drains its own backlog before
+    // exiting, and any job dropped by an unwinding path fails its ticket
+    // via the leak guard; a hang here is caught by the watchdog.
+    with_watchdog("drop of a busy service must resolve all tickets", || {
+        let total = 120u64;
+        let counters = {
+            let svc = SortService::new(
+                Config::default()
+                    .with_threads(stress_threads(4))
+                    .with_service_dispatchers(stress_dispatchers())
+                    .with_service_shards(4),
+            );
+            let counters = svc.counters();
+            let tickets: Vec<_> = (0..total)
+                .map(|i| {
+                    let n = if i % 10 == 9 { 300_000 } else { 5_000 };
+                    svc.submit(datagen::gen_u64(Distribution::Uniform, n, 0xD20B ^ i))
+                })
+                .collect();
+            drop(svc); // tickets outlive the service
+
+            let mut completed = 0u64;
+            let mut failed = 0u64;
+            for t in tickets {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.wait())) {
+                    Ok(v) => {
+                        assert_sorted(&v, lt, "post-drop ticket");
+                        completed += 1;
+                    }
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .copied()
+                            .unwrap_or("<non-str payload>");
+                        assert_eq!(
+                            msg, "sort service dropped the job before completion",
+                            "a post-drop failure must carry the leak-guard payload"
+                        );
+                        failed += 1;
+                    }
+                }
+            }
+            assert_eq!(completed + failed, total, "every ticket resolves");
+            // Shutdown drains: the orderly path completes everything.
+            assert_eq!(failed, 0, "drop must drain queued work, not abandon it");
+            counters
+        };
+        let snap = counters.snapshot();
+        assert_eq!(snap.jobs_completed, total);
+        assert_eq!(snap.tickets_leaked, 0, "an orderly drop leaks nothing");
+    });
 }
